@@ -1,0 +1,48 @@
+//! Quickstart: schedule an irregular loop with iCh in five lines.
+//!
+//! ```text
+//! cargo run --release --example quickstart
+//! ```
+
+use ich::{parallel_for, ForOpts, IchParams, Policy};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+fn main() {
+    // An irregular workload: iteration i costs ~i work units.
+    let n = 200_000;
+    let acc = AtomicU64::new(0);
+
+    // Schedule it with iCh (ε = 33%) over 4 worker threads.
+    let policy = Policy::Ich(IchParams::with_eps(0.33));
+    let opts = ForOpts::threads(4);
+    let metrics = parallel_for(n, &policy, &opts, &|range| {
+        let mut local = 0u64;
+        for i in range {
+            // irregular per-iteration work
+            let mut x = i as u64;
+            for _ in 0..(i % 97) {
+                x = x.wrapping_mul(6364136223846793005).wrapping_add(1);
+            }
+            local = local.wrapping_add(x);
+        }
+        acc.fetch_add(local, Ordering::Relaxed);
+    });
+
+    println!("iterations executed : {}", metrics.total_iters);
+    println!("chunks dispatched   : {}", metrics.total_chunks);
+    println!("mean chunk size     : {:.1}", metrics.mean_chunk());
+    println!("steals (ok/fail)    : {}/{}", metrics.steals_ok, metrics.steals_failed);
+    println!("imbalance (max/mean): {:.3}", metrics.imbalance());
+    println!("elapsed             : {:.3}s", metrics.elapsed_s);
+    println!("checksum            : {}", acc.load(Ordering::Relaxed));
+    assert_eq!(metrics.total_iters, n as u64);
+
+    // Swap policies without touching the loop body:
+    for sched in ["guided,1", "dynamic,2", "stealing,2", "binlpt,128"] {
+        let p = Policy::parse(sched).unwrap();
+        let m = parallel_for(n, &p, &opts, &|range| {
+            std::hint::black_box(range.len());
+        });
+        println!("{:>12}: {} chunks", p.name(), m.total_chunks);
+    }
+}

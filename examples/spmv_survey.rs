@@ -1,0 +1,97 @@
+//! SpMV scheduling survey: run y = A·x over the Table-1 synthetic
+//! suite under every paper scheduler, on the simulated 28-thread
+//! testbed AND for real on this machine — the paper's §6.1 SpMV
+//! experiment end to end, with the variance-vs-iCh insight check.
+//!
+//! ```text
+//! cargo run --release --example spmv_survey [-- --rows 4000]
+//! ```
+
+use ich::apps::spmv::Spmv;
+use ich::apps::App;
+use ich::harness::speedup::{best_time, THREADS};
+use ich::sched::{IchParams, Policy, PAPER_FAMILIES};
+use ich::sim::MachineSpec;
+use ich::sparse::{stats, suite};
+use ich::util::cli::Args;
+use ich::util::stats::geomean;
+use ich::util::table::{compact, f2, Table};
+
+fn main() {
+    let args = Args::from_env(&[]);
+    let rows = args.get_usize("rows", 4_000);
+    let spec = MachineSpec::default();
+    let p = *THREADS.last().unwrap();
+
+    let mut t = Table::new(["input", "σ²", "best", "ich speedup", "best speedup", "ich rank"]);
+    let mut ich_by_var: Vec<(bool, f64)> = Vec::new(); // (high_variance, gap)
+    let mut per_family: Vec<Vec<f64>> = vec![Vec::new(); PAPER_FAMILIES.len()];
+
+    for e in suite::table1() {
+        let a = e.generate(rows);
+        let s = stats::row_stats(&a);
+        let app = Spmv::new(e.name, a);
+        let loops = app.sim_loops();
+        let t_ref = best_time(&spec, &loops, "guided", 1, 7);
+        let sp: Vec<(String, f64)> = PAPER_FAMILIES
+            .iter()
+            .map(|fam| (fam.to_string(), t_ref / best_time(&spec, &loops, fam, p, 7)))
+            .collect();
+        for (fi, (_f, v)) in sp.iter().enumerate() {
+            per_family[fi].push(*v);
+        }
+        let (best_fam, best) =
+            sp.iter().max_by(|a, b| a.1.partial_cmp(&b.1).unwrap()).map(|(f, v)| (f.clone(), *v)).unwrap();
+        let ich = sp.iter().find(|(f, _)| f == "ich").unwrap().1;
+        let rank = 1 + sp.iter().filter(|(_, v)| *v > ich).count();
+        ich_by_var.push((stats::high_variance(&s), (best - ich) / best));
+        t.row([
+            e.name.to_string(),
+            compact(s.variance),
+            best_fam,
+            f2(ich),
+            f2(best),
+            rank.to_string(),
+        ]);
+    }
+    println!("# SpMV survey over the Table-1 suite ({} rows each, {} simulated threads)\n{}", rows, p, t.render());
+
+    let mut g = Table::new(["family", "geomean speedup@28"]);
+    for (fi, fam) in PAPER_FAMILIES.iter().enumerate() {
+        g.row([fam.to_string(), f2(geomean(&per_family[fi]))]);
+    }
+    println!("{}", g.render());
+
+    // §6.1 insight: iCh's gap to best should be smaller on
+    // high-variance inputs than on low-variance ones.
+    let hi: Vec<f64> = ich_by_var.iter().filter(|(h, _)| *h).map(|(_, g)| *g).collect();
+    let lo: Vec<f64> = ich_by_var.iter().filter(|(h, _)| !*h).map(|(_, g)| *g).collect();
+    println!(
+        "iCh mean gap-to-best: high-variance inputs {:.1}% vs low-variance {:.1}% (paper: iCh favors high variance)",
+        100.0 * ich::util::stats::mean(&hi),
+        100.0 * ich::util::stats::mean(&lo),
+    );
+
+    // Real execution sanity on one input: every scheduler must produce
+    // the same y (validated inside run_real).
+    let e = &suite::table1()[3]; // patents analog
+    let app = Spmv::new(e.name, e.generate(rows));
+    println!("\n# real runs on this machine ({} threads): {}", 4, app.name());
+    for pol in [
+        Policy::Guided { chunk: 1 },
+        Policy::Dynamic { chunk: 2 },
+        Policy::Stealing { chunk: 2 },
+        Policy::Ich(IchParams::default()),
+    ] {
+        let r = app.run_real(&pol, 4, 11);
+        println!(
+            "  {:>12}: {:.4}s valid={} chunks={} steals={}ok",
+            pol.name(),
+            r.elapsed_s,
+            r.valid,
+            r.metrics.total_chunks,
+            r.metrics.steals_ok
+        );
+        assert!(r.valid);
+    }
+}

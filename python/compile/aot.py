@@ -1,0 +1,61 @@
+"""AOT lowering: JAX/Pallas (L2+L1) -> HLO text artifacts for the Rust
+PJRT runtime.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which the `xla`
+crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text
+parser reassigns ids, so text round-trips cleanly. Lowering uses
+return_tuple=True; the Rust side unwraps with to_tuple().
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build(out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"format": "hlo-text", "models": {}}
+    for name, fn in model.MODELS.items():
+        args = model.example_args(name)
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["models"][name] = {
+            "file": f"{name}.hlo.txt",
+            "shapes": model.AOT_SHAPES[name],
+            "inputs": [
+                {"shape": list(a.shape), "dtype": str(a.dtype)} for a in args
+            ],
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+    mpath = os.path.join(out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {mpath}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    args = ap.parse_args()
+    build(args.out)
+
+
+if __name__ == "__main__":
+    main()

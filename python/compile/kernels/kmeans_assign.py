@@ -1,0 +1,55 @@
+"""L1 Pallas kernel: K-Means nearest-centroid assignment.
+
+TPU mapping: the (BP, D) point block × (K, D) centroid tile distance
+matrix is computed via the matmul expansion ||p−c||² = ||p||² − 2p·cᵀ
++ ||c||², so the dominant term is a (BP, D)×(D, K) matmul that lands
+on the MXU in f32. The centroid tile is tiny (K×D) and stays resident
+in VMEM across the whole grid.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_POINTS = 256
+
+
+def _kernel(points_ref, cent_ref, assign_ref, dist_ref):
+    p = points_ref[...]  # (BP, D)
+    c = cent_ref[...]  # (K, D)
+    p2 = jnp.sum(p * p, axis=1, keepdims=True)
+    c2 = jnp.sum(c * c, axis=1)[None, :]
+    d2 = p2 - 2.0 * (p @ c.T) + c2  # (BP, K) — MXU matmul
+    assign_ref[...] = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    dist_ref[...] = jnp.min(d2, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_points",))
+def kmeans_assign(points, centroids, *, block_points=DEFAULT_BLOCK_POINTS):
+    """Pallas assignment. points (P, D) with P % block_points == 0
+    (pad with copies of point 0), centroids (K, D). Returns
+    (assign (P,) i32, dist2 (P,) f32)."""
+    p, d = points.shape
+    k, d2 = centroids.shape
+    assert d == d2, f"dim mismatch {d} vs {d2}"
+    assert p % block_points == 0, f"P={p} must be a multiple of {block_points}"
+    grid = (p // block_points,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_points, d), lambda i: (i, 0)),
+            pl.BlockSpec((k, d), lambda i: (0, 0)),  # centroids resident
+        ],
+        out_specs=[
+            pl.BlockSpec((block_points,), lambda i: (i,)),
+            pl.BlockSpec((block_points,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((p,), jnp.int32),
+            jax.ShapeDtypeStruct((p,), jnp.float32),
+        ],
+        interpret=True,
+    )(points, centroids)

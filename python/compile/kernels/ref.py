@@ -1,0 +1,67 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the CORE correctness signal: every Pallas kernel in this
+package is asserted allclose against the function of the same name here
+(pytest + hypothesis sweeps in python/tests/).
+"""
+
+import jax.numpy as jnp
+
+
+def spmv_ell(values, cols, x):
+    """ELL-format SpMV: y[r] = sum_w values[r, w] * x[cols[r, w]].
+
+    Padding convention: padded slots carry value 0.0 (their column
+    index may be anything valid, typically 0).
+
+    Args:
+      values: (R, W) f32 -- per-row nonzero values, zero-padded.
+      cols:   (R, W) i32 -- per-row column indices.
+      x:      (N,)   f32 -- dense input vector.
+    Returns:
+      (R,) f32.
+    """
+    return jnp.sum(values * x[cols], axis=1)
+
+
+def kmeans_assign(points, centroids):
+    """Nearest-centroid assignment (+ distance), the K-Means inner loop.
+
+    Distances use the matmul expansion ||p - c||^2 = ||p||^2 - 2 p.c +
+    ||c||^2, which maps onto the MXU (the kernel uses the same algebra).
+
+    Args:
+      points:    (B, D) f32.
+      centroids: (K, D) f32.
+    Returns:
+      assign: (B,) i32 -- index of the nearest centroid.
+      dist2:  (B,) f32 -- squared distance to it.
+    """
+    p2 = jnp.sum(points * points, axis=1, keepdims=True)  # (B, 1)
+    c2 = jnp.sum(centroids * centroids, axis=1)[None, :]  # (1, K)
+    d2 = p2 - 2.0 * points @ centroids.T + c2  # (B, K)
+    assign = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    dist2 = jnp.min(d2, axis=1)
+    return assign, dist2
+
+
+def lavamd_force(home, neigh, cutoff2=1.0):
+    """Screened-Coulomb force accumulation for one LavaMD box.
+
+    Particles are rows (x, y, z, q); padded rows use q = 0 so they
+    contribute nothing. Interactions beyond `cutoff2` (squared cutoff)
+    or at zero distance are excluded -- matching the Rust reference
+    implementation in rust/src/apps/lavamd.rs.
+
+    Args:
+      home:  (B, 4) f32 -- the box's own particles.
+      neigh: (M, 4) f32 -- all particles of the 27-neighborhood.
+    Returns:
+      (B,) f32 -- per-home-particle force accumulation.
+    """
+    d = home[:, None, :3] - neigh[None, :, :3]  # (B, M, 3)
+    r2 = jnp.sum(d * d, axis=2)  # (B, M)
+    qq = home[:, 3][:, None] * neigh[None, :, 3]
+    contrib = qq * jnp.exp(-r2) / (r2 + 0.05)
+    mask = (r2 > 0.0) & (r2 < cutoff2)
+    return jnp.sum(jnp.where(mask, contrib, 0.0), axis=1)

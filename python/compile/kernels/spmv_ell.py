@@ -1,0 +1,75 @@
+"""L1 Pallas kernel: blocked ELL SpMV.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): rows are stored in ELL
+(fixed width W, zero-padded) so each grid step streams one dense
+(BR, W) tile of values/columns from HBM into VMEM — a regular access
+pattern the VPU vectorizes, instead of the CSR gather loop a CPU code
+would use. The dense x vector stays resident in VMEM across the grid
+(one copy, reused by every row block).
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; correctness is validated against ref.spmv_ell and real
+TPU perf is estimated from the block geometry (EXPERIMENTS.md §Perf).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default row-block size: 8 sublanes × 16 = 128 rows keeps the value
+# and column tiles at (128, W) — lane-aligned for f32.
+DEFAULT_BLOCK_ROWS = 128
+
+
+def _kernel(values_ref, cols_ref, x_ref, y_ref):
+    """One (BR, W) row block: y = Σ_w values * x[cols]."""
+    vals = values_ref[...]  # (BR, W) f32
+    cols = cols_ref[...]  # (BR, W) i32
+    x = x_ref[...]  # (N,) f32 — resident, shared by all blocks
+    y_ref[...] = jnp.sum(vals * x[cols], axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def spmv_ell(values, cols, x, *, block_rows=DEFAULT_BLOCK_ROWS):
+    """Pallas ELL SpMV. Shapes: values/cols (R, W) with R % block_rows
+    == 0 (pad rows with zero-value entries), x (N,). Returns (R,)."""
+    r, w = values.shape
+    assert cols.shape == (r, w), f"cols {cols.shape} vs values {values.shape}"
+    assert r % block_rows == 0, f"R={r} must be a multiple of {block_rows}"
+    n = x.shape[0]
+    grid = (r // block_rows,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, w), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, w), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),  # x: whole vector, every block
+        ],
+        out_specs=pl.BlockSpec((block_rows,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((r,), jnp.float32),
+        interpret=True,
+    )(values, cols, x)
+
+
+def csr_to_ell(rowptr, colidx, vals, width=None):
+    """Convert CSR arrays (python lists / numpy) to zero-padded ELL.
+
+    Returns (values, cols) with shape (R, W); rows longer than W are
+    truncated (callers pick W = max nnz for exactness).
+    """
+    import numpy as np
+
+    r = len(rowptr) - 1
+    w = width or max((rowptr[i + 1] - rowptr[i] for i in range(r)), default=1)
+    w = max(w, 1)
+    values = np.zeros((r, w), dtype=np.float32)
+    cols = np.zeros((r, w), dtype=np.int32)
+    for i in range(r):
+        lo, hi = rowptr[i], min(rowptr[i + 1], rowptr[i] + w)
+        k = hi - lo
+        values[i, :k] = vals[lo:hi]
+        cols[i, :k] = colidx[lo:hi]
+    return values, cols

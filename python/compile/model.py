@@ -1,0 +1,75 @@
+"""L2: the JAX compute graphs the Rust coordinator executes per chunk.
+
+Each function composes the L1 Pallas kernels (which lower inline into
+the same HLO). AOT shapes are fixed here (`AOT_SHAPES`) and recorded in
+artifacts/manifest.json so the Rust runtime knows what to feed each
+executable. Python runs only at `make artifacts` time.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import kmeans_assign as _km
+from .kernels import lavamd_force as _lv
+from .kernels import spmv_ell as _sp
+
+# ---------------------------------------------------------------------------
+# AOT shape contract (mirrored by rust/src/runtime/).
+# ---------------------------------------------------------------------------
+AOT_SHAPES = {
+    # ELL SpMV chunk: 512 rows x width 16, x of length 8192.
+    "spmv_ell": {"rows": 512, "width": 16, "n": 8192, "block_rows": 128},
+    # K-Means assignment chunk: 1024 points x 34 features, 16 centroids.
+    "kmeans_assign": {"points": 1024, "dim": 34, "k": 16, "block_points": 256},
+    # LavaMD box: 64 home particles vs 27-neighborhood of 1728.
+    "lavamd_force": {"home": 64, "neigh": 1728},
+}
+
+
+def spmv_ell(values, cols, x):
+    """y = A x for one ELL row chunk (L1 kernel pass-through)."""
+    shp = AOT_SHAPES["spmv_ell"]
+    return (_sp.spmv_ell(values, cols, x, block_rows=shp["block_rows"]),)
+
+
+def kmeans_assign(points, centroids):
+    """Nearest-centroid assignment for one point chunk."""
+    shp = AOT_SHAPES["kmeans_assign"]
+    assign, dist2 = _km.kmeans_assign(points, centroids, block_points=shp["block_points"])
+    return (assign, dist2)
+
+
+def lavamd_force(home, neigh):
+    """Per-box force accumulation."""
+    return (_lv.lavamd_force(home, neigh),)
+
+
+def example_args(name):
+    """ShapeDtypeStructs for AOT lowering of model `name`."""
+    import jax
+
+    s = AOT_SHAPES[name]
+    f32, i32 = jnp.float32, jnp.int32
+    if name == "spmv_ell":
+        return (
+            jax.ShapeDtypeStruct((s["rows"], s["width"]), f32),
+            jax.ShapeDtypeStruct((s["rows"], s["width"]), i32),
+            jax.ShapeDtypeStruct((s["n"],), f32),
+        )
+    if name == "kmeans_assign":
+        return (
+            jax.ShapeDtypeStruct((s["points"], s["dim"]), f32),
+            jax.ShapeDtypeStruct((s["k"], s["dim"]), f32),
+        )
+    if name == "lavamd_force":
+        return (
+            jax.ShapeDtypeStruct((s["home"], 4), f32),
+            jax.ShapeDtypeStruct((s["neigh"], 4), f32),
+        )
+    raise KeyError(name)
+
+
+MODELS = {
+    "spmv_ell": spmv_ell,
+    "kmeans_assign": kmeans_assign,
+    "lavamd_force": lavamd_force,
+}

@@ -1,0 +1,9 @@
+"""Shared pytest fixtures/helpers for the kernel test suite."""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0xD5EED)

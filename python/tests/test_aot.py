@@ -1,0 +1,47 @@
+"""AOT pipeline sanity: models lower to HLO text, manifest matches."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+
+@pytest.mark.parametrize("name", sorted(model.MODELS))
+def test_lowering_produces_hlo_text(name):
+    args = model.example_args(name)
+    lowered = jax.jit(model.MODELS[name]).lower(*args)
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule"), text[:50]
+    assert "ENTRY" in text
+
+
+@pytest.mark.parametrize("name", sorted(model.MODELS))
+def test_models_run_on_example_shapes(name):
+    rng = np.random.default_rng(1)
+    args = []
+    for spec in model.example_args(name):
+        if spec.dtype == jnp.int32:
+            args.append(jnp.array(rng.integers(0, 4, spec.shape).astype(np.int32)))
+        else:
+            args.append(jnp.array(rng.standard_normal(spec.shape).astype(np.float32)))
+    out = model.MODELS[name](*args)
+    assert isinstance(out, tuple) and len(out) >= 1
+    for o in out:
+        assert np.isfinite(np.asarray(o, dtype=np.float64)).all()
+
+
+def test_build_writes_manifest(tmp_path):
+    out = str(tmp_path / "artifacts")
+    aot.build(out)
+    with open(os.path.join(out, "manifest.json")) as f:
+        m = json.load(f)
+    assert m["format"] == "hlo-text"
+    assert set(m["models"]) == set(model.MODELS)
+    for name, entry in m["models"].items():
+        assert os.path.exists(os.path.join(out, entry["file"])), name
+        assert entry["shapes"] == model.AOT_SHAPES[name]

@@ -1,0 +1,59 @@
+"""Pallas K-Means assignment vs the oracle (ref.kmeans_assign)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.kmeans_assign import kmeans_assign
+
+
+def test_matches_ref_basic(rng):
+    p = rng.standard_normal((512, 34)).astype(np.float32)
+    c = rng.standard_normal((16, 34)).astype(np.float32)
+    a, d = kmeans_assign(jnp.array(p), jnp.array(c))
+    ra, rd = ref.kmeans_assign(jnp.array(p), jnp.array(c))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(ra))
+    np.testing.assert_allclose(d, rd, rtol=1e-3, atol=1e-3)
+
+
+def test_points_on_centroids_assign_self(rng):
+    c = (rng.standard_normal((8, 16)) * 10).astype(np.float32)
+    p = np.repeat(c, 32, axis=0)  # 256 points, exact copies
+    a, d = kmeans_assign(jnp.array(p), jnp.array(c), block_points=128)
+    want = np.repeat(np.arange(8), 32)
+    np.testing.assert_array_equal(np.asarray(a), want.astype(np.int32))
+    np.testing.assert_allclose(np.asarray(d), np.zeros(256), atol=1e-3)
+
+
+def test_single_centroid(rng):
+    p = rng.standard_normal((256, 4)).astype(np.float32)
+    c = np.zeros((1, 4), dtype=np.float32)
+    a, d = kmeans_assign(jnp.array(p), jnp.array(c))
+    assert (np.asarray(a) == 0).all()
+    np.testing.assert_allclose(np.asarray(d), (p * p).sum(1), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    blocks=st.integers(1, 4),
+    d=st.integers(1, 40),
+    k=st.integers(1, 20),
+    seed=st.integers(0, 2**31),
+)
+def test_matches_ref_hypothesis(blocks, d, k, seed):
+    block = 64
+    n = blocks * block
+    rng = np.random.default_rng(seed)
+    p = rng.standard_normal((n, d)).astype(np.float32)
+    c = rng.standard_normal((k, d)).astype(np.float32)
+    a, dist = kmeans_assign(jnp.array(p), jnp.array(c), block_points=block)
+    ra, rd = ref.kmeans_assign(jnp.array(p), jnp.array(c))
+    # Ties can flip argmin between float paths; verify via distances.
+    np.testing.assert_allclose(dist, rd, rtol=1e-2, atol=1e-2)
+    mismatch = (np.asarray(a) != np.asarray(ra))
+    if mismatch.any():
+        # every mismatch must be a near-tie
+        d_got = np.asarray(dist)[mismatch]
+        d_ref = np.asarray(rd)[mismatch]
+        np.testing.assert_allclose(d_got, d_ref, rtol=1e-2, atol=1e-2)

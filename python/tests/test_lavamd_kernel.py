@@ -1,0 +1,64 @@
+"""Pallas LavaMD force kernel vs the oracle (ref.lavamd_force)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.lavamd_force import lavamd_force
+
+
+def _particles(rng, n, spread=1.0):
+    p = rng.standard_normal((n, 4)).astype(np.float32)
+    p[:, :3] *= spread
+    return p
+
+
+def test_matches_ref_basic(rng):
+    h = _particles(rng, 64)
+    g = _particles(rng, 256)
+    got = lavamd_force(jnp.array(h), jnp.array(g))
+    want = ref.lavamd_force(jnp.array(h), jnp.array(g))
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-5)
+
+
+def test_padded_particles_are_inert(rng):
+    h = _particles(rng, 32)
+    g = _particles(rng, 64)
+    gp = np.vstack([g, np.zeros((16, 4), np.float32)])
+    # q=0 pad rows at the origin must contribute nothing
+    a = np.asarray(lavamd_force(jnp.array(h), jnp.array(g)))
+    b = np.asarray(lavamd_force(jnp.array(h), jnp.array(gp)))
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+def test_far_particles_cut_off(rng):
+    h = _particles(rng, 16, spread=0.1)
+    g = _particles(rng, 32, spread=0.1)
+    g[:, :3] += 100.0  # beyond the cutoff
+    got = np.asarray(lavamd_force(jnp.array(h), jnp.array(g)))
+    np.testing.assert_array_equal(got, np.zeros(16, np.float32))
+
+
+def test_self_interaction_excluded(rng):
+    # identical particle in home and neigh: r2 == 0 slot is skipped
+    p = _particles(rng, 8, spread=0.05)
+    got = np.asarray(lavamd_force(jnp.array(p), jnp.array(p)))
+    want = np.asarray(ref.lavamd_force(jnp.array(p), jnp.array(p)))
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 64),
+    m=st.integers(1, 128),
+    spread=st.floats(0.05, 3.0),
+    seed=st.integers(0, 2**31),
+)
+def test_matches_ref_hypothesis(b, m, spread, seed):
+    rng = np.random.default_rng(seed)
+    h = _particles(rng, b, spread)
+    g = _particles(rng, m, spread)
+    got = lavamd_force(jnp.array(h), jnp.array(g))
+    want = ref.lavamd_force(jnp.array(h), jnp.array(g))
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)

@@ -1,0 +1,81 @@
+"""Pallas ELL SpMV vs the pure-jnp oracle (ref.spmv_ell)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.spmv_ell import csr_to_ell, spmv_ell
+
+
+def _case(rng, r, w, n):
+    values = rng.standard_normal((r, w)).astype(np.float32)
+    # zero-pad a random suffix of each row (the ELL convention)
+    pad = rng.integers(0, w + 1, size=r)
+    for i in range(r):
+        values[i, w - pad[i]:] = 0.0
+    cols = rng.integers(0, n, size=(r, w)).astype(np.int32)
+    x = rng.standard_normal(n).astype(np.float32)
+    return values, cols, x
+
+
+def test_matches_ref_basic(rng):
+    values, cols, x = _case(rng, 256, 8, 100)
+    got = spmv_ell(jnp.array(values), jnp.array(cols), jnp.array(x))
+    want = ref.spmv_ell(jnp.array(values), jnp.array(cols), jnp.array(x))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_zero_matrix_gives_zero(rng):
+    values = np.zeros((128, 4), dtype=np.float32)
+    cols = np.zeros((128, 4), dtype=np.int32)
+    x = rng.standard_normal(50).astype(np.float32)
+    got = spmv_ell(jnp.array(values), jnp.array(cols), jnp.array(x))
+    np.testing.assert_array_equal(np.asarray(got), np.zeros(128, np.float32))
+
+
+def test_identity_rows(rng):
+    # values 1 at col i -> y = x[:R]
+    r, n = 128, 256
+    values = np.zeros((r, 2), dtype=np.float32)
+    values[:, 0] = 1.0
+    cols = np.zeros((r, 2), dtype=np.int32)
+    cols[:, 0] = np.arange(r)
+    x = rng.standard_normal(n).astype(np.float32)
+    got = np.asarray(spmv_ell(jnp.array(values), jnp.array(cols), jnp.array(x)))
+    np.testing.assert_allclose(got, x[:r], rtol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    rblocks=st.integers(1, 4),
+    w=st.integers(1, 24),
+    n=st.integers(1, 300),
+    seed=st.integers(0, 2**31),
+)
+def test_matches_ref_hypothesis(rblocks, w, n, seed):
+    """Shape sweep: any (R, W, N) with R a multiple of the block."""
+    block = 32
+    r = rblocks * block
+    rng = np.random.default_rng(seed)
+    values, cols, x = _case(rng, r, w, n)
+    got = spmv_ell(jnp.array(values), jnp.array(cols), jnp.array(x), block_rows=block)
+    want = ref.spmv_ell(jnp.array(values), jnp.array(cols), jnp.array(x))
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+
+def test_csr_to_ell_roundtrip():
+    rowptr = [0, 2, 2, 5]
+    colidx = [1, 3, 0, 2, 4]
+    vals = [1.0, 2.0, 3.0, 4.0, 5.0]
+    values, cols = csr_to_ell(rowptr, colidx, vals)
+    assert values.shape == (3, 3)
+    np.testing.assert_array_equal(values[0], [1.0, 2.0, 0.0])
+    np.testing.assert_array_equal(cols[0], [1, 3, 0])
+    np.testing.assert_array_equal(values[1], [0.0, 0.0, 0.0])
+    np.testing.assert_array_equal(values[2], [3.0, 4.0, 5.0])
+
+
+def test_csr_to_ell_respects_width():
+    values, cols = csr_to_ell([0, 3], [0, 1, 2], [1.0, 2.0, 3.0], width=2)
+    assert values.shape == (1, 2)  # truncated

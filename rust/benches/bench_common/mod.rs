@@ -1,0 +1,50 @@
+//! Tiny bench harness (criterion is unavailable offline): warmup +
+//! repeated timing with mean/sd/min reporting.
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub sd_s: f64,
+    pub min_s: f64,
+}
+
+/// Time `f` `iters` times after `warmup` runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / samples.len() as f64;
+    let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+    let r = BenchResult { name: name.to_string(), iters, mean_s: mean, sd_s: var.sqrt(), min_s: min };
+    println!(
+        "bench {:<44} mean {:>12} ± {:>10}  (min {:>12}, n={})",
+        r.name,
+        fmt_s(r.mean_s),
+        fmt_s(r.sd_s),
+        fmt_s(r.min_s),
+        r.iters
+    );
+    r
+}
+
+pub fn fmt_s(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}

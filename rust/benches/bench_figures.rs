@@ -1,0 +1,20 @@
+//! Regenerates every paper table and figure (the full evaluation) and
+//! reports how long each takes. This is the one-stop `cargo bench`
+//! target for the reproduction: the rendered outputs land in
+//! results/*.json, the ASCII analogs on stdout.
+
+mod bench_common;
+use bench_common::bench;
+
+fn main() {
+    println!("== paper tables & figures (simulated 2×14-core Haswell) ==");
+    // Order: cheap first. Each regenerator renders + saves JSON.
+    for name in ["table2", "fig3b", "fig1", "table1", "fig6a", "fig5b", "fig4", "fig5a", "fig7", "fig6b", "summary", "ablations"] {
+        let mut out = String::new();
+        bench(&format!("regenerate {name}"), 0, 1, || {
+            out = ich::harness::run_named(name).unwrap();
+        });
+        // Print the figure itself once (the artifact users care about).
+        println!("{out}");
+    }
+}

@@ -1,0 +1,69 @@
+//! L3 micro-benchmarks on the *real* threaded runtime: per-chunk
+//! dispatch overhead per policy (empty bodies — pure scheduler cost),
+//! THE-deque operation latency, and iCh's adaptation-pass cost.
+//! These are the §Perf numbers for the hot path.
+
+mod bench_common;
+use bench_common::{bench, fmt_s};
+
+use ich::sched::deque::RangeDeque;
+use ich::sched::{parallel_for, ForOpts, IchParams, Policy};
+
+fn main() {
+    println!("== L3 scheduler overhead (real runtime, empty bodies) ==");
+    let n = 1_000_000usize;
+    // Single-thread dispatch cost per iteration: isolates the
+    // scheduler's own overhead from parallelism effects.
+    for policy in [
+        Policy::Static,
+        Policy::Dynamic { chunk: 1 },
+        Policy::Dynamic { chunk: 64 },
+        Policy::Guided { chunk: 1 },
+        Policy::Taskloop { num_tasks: 0 },
+        Policy::Factoring { alpha: 2.0 },
+        Policy::Binlpt { max_chunks: 384 },
+        Policy::Stealing { chunk: 1 },
+        Policy::Stealing { chunk: 64 },
+        Policy::Ich(IchParams::default()),
+    ] {
+        let opts = ForOpts { threads: 1, pin: false, seed: 1, weights: None };
+        let r = bench(&format!("dispatch/iter {} (p=1, n=1e6)", policy.name()), 1, 3, || {
+            let w = vec![1.0f64; if policy.needs_weights() { n } else { 0 }];
+            let o = if policy.needs_weights() { opts.clone().with_weights(&w) } else { opts.clone() };
+            let m = parallel_for(n, &policy, &o, &|r| {
+                std::hint::black_box(r.len());
+            });
+            assert_eq!(m.total_iters, n as u64);
+        });
+        println!("    -> {} per iteration", fmt_s(r.min_s / n as f64));
+    }
+
+    println!("\n== THE-protocol deque primitives ==");
+    let q = RangeDeque::new(0..usize::MAX / 2);
+    let ops = 1_000_000;
+    let r = bench("deque owner take(1) x1e6", 1, 5, || {
+        for _ in 0..ops {
+            std::hint::black_box(q.take(1));
+        }
+    });
+    println!("    -> {} per take", fmt_s(r.min_s / ops as f64));
+
+    let r = bench("deque steal_half x1e5 (fresh queue each)", 1, 3, || {
+        let q = RangeDeque::new(0..1 << 40);
+        for _ in 0..100_000 {
+            std::hint::black_box(q.steal_half());
+        }
+    });
+    println!("    -> {} per steal", fmt_s(r.min_s / 1e5));
+
+    println!("\n== multi-thread correctness overhead (oversubscribed on this host) ==");
+    for p in [2usize, 4] {
+        let opts = ForOpts { threads: p, pin: false, seed: 1, weights: None };
+        bench(&format!("ich p={p} n=1e6 empty"), 1, 3, || {
+            let m = parallel_for(n, &Policy::Ich(IchParams::default()), &opts, &|r| {
+                std::hint::black_box(r.len());
+            });
+            assert_eq!(m.total_iters, n as u64);
+        });
+    }
+}

@@ -1,0 +1,28 @@
+//! Simulator throughput: chunk events per second — the DES must stay
+//! fast enough that full figure sweeps are minutes, not hours
+//! (DESIGN.md §Perf target: ≥ ~1e6 events/s).
+
+mod bench_common;
+use bench_common::bench;
+
+use ich::sched::{IchParams, Policy};
+use ich::sim::{simulate_app, LoopSpec, MachineSpec};
+
+fn main() {
+    println!("== DES engine throughput ==");
+    let spec = MachineSpec::default();
+    for (label, policy, n) in [
+        ("dynamic,1 (1 event/iter)", Policy::Dynamic { chunk: 1 }, 200_000usize),
+        ("ich (adaptive chunks)", Policy::Ich(IchParams::default()), 200_000),
+        ("stealing,1", Policy::Stealing { chunk: 1 }, 200_000),
+        ("guided,1 (few chunks)", Policy::Guided { chunk: 1 }, 200_000),
+    ] {
+        let loops = vec![LoopSpec::new(vec![10.0; n], 0.0)];
+        let mut chunks = 0u64;
+        let r = bench(&format!("sim {label} n={n} p=28"), 1, 5, || {
+            let res = simulate_app(&spec, 28, &loops, &policy, 42);
+            chunks = res.chunks + res.steals_ok + res.steals_fail;
+        });
+        println!("    -> {:.2}M events/s", chunks as f64 / r.min_s / 1e6);
+    }
+}

@@ -1,0 +1,156 @@
+//! Breadth-First Search (Rodinia-style, §5.1): level-synchronous BFS
+//! where each level's frontier expansion is the scheduled parallel
+//! loop. Two inputs: uniform-degree and scale-free (γ = 2.3) graphs.
+//!
+//! Per-iteration work is the vertex's degree — highly skewed on the
+//! scale-free input, which is where the paper shows iCh beating plain
+//! stealing by ~54%.
+
+use super::{App, RealRun};
+use crate::graph::{bfs_seq, gen, Csr};
+use crate::sched::{parallel_for, Policy, RunMetrics};
+use crate::sim::LoopSpec;
+use std::sync::atomic::{AtomicU32, Ordering::SeqCst};
+
+pub struct Bfs {
+    label: String,
+    graph: Csr,
+    source: usize,
+    /// Reference distances (sequential).
+    reference: Vec<u32>,
+}
+
+impl Bfs {
+    pub fn new(label: &str, graph: Csr, source: usize) -> Bfs {
+        let reference = bfs_seq(&graph, source);
+        Bfs { label: label.to_string(), graph, source, reference }
+    }
+
+    pub fn uniform(n: usize, max_degree: usize, seed: u64) -> Bfs {
+        Bfs::new("bfs(uniform)", gen::uniform(n, max_degree, seed), 0)
+    }
+
+    pub fn scale_free(n: usize, max_degree: usize, gamma: f64, seed: u64) -> Bfs {
+        Bfs::new("bfs(scale-free)", gen::scale_free(n, max_degree, gamma, seed), 0)
+    }
+
+    pub fn graph(&self) -> &Csr {
+        &self.graph
+    }
+
+    /// The frontier at each level of the traversal (the loop trace the
+    /// simulator replays): level L's frontier is every vertex at
+    /// distance L, bucketed from the reference distances.
+    fn frontiers(&self) -> Vec<Vec<usize>> {
+        let maxl = self.reference.iter().filter(|&&d| d != u32::MAX).max().copied().unwrap_or(0);
+        let mut frontiers: Vec<Vec<usize>> = vec![Vec::new(); maxl as usize + 1];
+        for (v, &d) in self.reference.iter().enumerate() {
+            if d != u32::MAX {
+                frontiers[d as usize].push(v);
+            }
+        }
+        frontiers.retain(|f| !f.is_empty());
+        frontiers
+    }
+}
+
+impl App for Bfs {
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+
+    fn sim_loops(&self) -> Vec<LoopSpec> {
+        // One parallel region per BFS level; iteration weight = visit
+        // cost + per-edge scan cost, in the simulator's common time
+        // unit (~5 ns): one frontier edge (load + CAS on the distance
+        // array) ≈ 8 units ≈ 40 ns. Graph traversal is memory-bound:
+        // mem intensity 0.35.
+        self.frontiers()
+            .iter()
+            .map(|f| {
+                let w: Vec<f64> = f.iter().map(|&v| 8.0 * (1.0 + self.graph.degree(v) as f64)).collect();
+                LoopSpec::new(w, 0.35)
+            })
+            .collect()
+    }
+
+    fn run_real(&self, policy: &Policy, threads: usize, seed: u64) -> RealRun {
+        let n = self.graph.num_vertices();
+        let dist: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(u32::MAX)).collect();
+        dist[self.source].store(0, SeqCst);
+        let mut frontier: Vec<usize> = vec![self.source];
+        let mut level = 0u32;
+        let mut agg = RunMetrics::default();
+        let start = std::time::Instant::now();
+        while !frontier.is_empty() {
+            level += 1;
+            let weights: Vec<f64> = frontier.iter().map(|&v| 1.0 + self.graph.degree(v) as f64).collect();
+            let opts = super::opts_with(threads, seed ^ level as u64, &weights);
+            let fr = &frontier;
+            // Parallel frontier expansion: claim unvisited neighbors
+            // with CAS (exactly-once next-frontier membership).
+            let m = parallel_for(frontier.len(), policy, &opts, &|r| {
+                for fi in r {
+                    let v = fr[fi];
+                    for &u in self.graph.neighbors(v) {
+                        let _ = dist[u as usize].compare_exchange(u32::MAX, level, SeqCst, SeqCst);
+                    }
+                }
+            });
+            absorb(&mut agg, &m);
+            // Build the next frontier (serial scan, as Rodinia does the
+            // flag sweep between kernels).
+            frontier = (0..n).filter(|&v| dist[v].load(SeqCst) == level).collect();
+        }
+        let elapsed = start.elapsed().as_secs_f64();
+        let got: Vec<u32> = dist.iter().map(|d| d.load(SeqCst)).collect();
+        let valid = got == self.reference;
+        let checksum = got.iter().filter(|&&d| d != u32::MAX).map(|&d| d as f64).sum();
+        RealRun { elapsed_s: elapsed, metrics: agg, checksum, valid }
+    }
+}
+
+use super::absorb_metrics as absorb;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::IchParams;
+
+    #[test]
+    fn parallel_bfs_matches_sequential() {
+        let app = Bfs::uniform(3_000, 8, 5);
+        for pol in [Policy::Dynamic { chunk: 2 }, Policy::Ich(IchParams::default()), Policy::Guided { chunk: 1 }] {
+            let r = app.run_real(&pol, 4, 9);
+            assert!(r.valid, "policy {} diverged", pol.name());
+        }
+    }
+
+    #[test]
+    fn scale_free_bfs_valid() {
+        let app = Bfs::scale_free(3_000, 500, 2.3, 6);
+        let r = app.run_real(&Policy::Stealing { chunk: 2 }, 4, 1);
+        assert!(r.valid);
+    }
+
+    #[test]
+    fn sim_loops_cover_reachable_vertices() {
+        let app = Bfs::uniform(2_000, 8, 7);
+        let loops = app.sim_loops();
+        let total: usize = loops.iter().map(|l| l.weights.len()).sum();
+        let reachable = app.reference.iter().filter(|&&d| d != u32::MAX).count();
+        assert_eq!(total, reachable, "every reachable vertex appears in exactly one frontier");
+        assert!(loops.len() > 1, "expect multiple BFS levels");
+    }
+
+    #[test]
+    fn scale_free_frontier_weights_are_skewed() {
+        let app = Bfs::scale_free(5_000, 1_000, 2.3, 8);
+        let loops = app.sim_loops();
+        // Find the largest frontier; its weights should be heavy-tailed.
+        let big = loops.iter().max_by_key(|l| l.weights.len()).unwrap();
+        let mean = crate::util::stats::mean(&big.weights);
+        let max = big.weights.iter().cloned().fold(0.0, f64::max);
+        assert!(max > 5.0 * mean, "expected skew: max {max} mean {mean}");
+    }
+}

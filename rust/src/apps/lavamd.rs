@@ -1,0 +1,195 @@
+//! LavaMD (Rodinia-style, §5.1): N-body force calculation over a
+//! `side³` grid of boxes (paper: 8×8×8 = 512). Particles interact
+//! only with particles in the same box and its 26 neighbors (cutoff ≈
+//! box size). The scheduled loop runs over boxes — few, coarse,
+//! mildly imbalanced iterations, the regime where the paper shows
+//! plain `stealing` failing while iCh recovers.
+
+use super::{App, RealRun};
+use crate::sched::{parallel_for, Policy};
+use crate::sim::LoopSpec;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug)]
+struct Particle {
+    x: f32,
+    y: f32,
+    z: f32,
+    q: f32,
+}
+
+pub struct LavaMd {
+    side: usize,
+    /// Particles grouped by box.
+    boxes: Vec<Vec<Particle>>,
+    /// Precomputed 27-neighborhoods (box ids, incl. self).
+    neighbors: Vec<Vec<usize>>,
+    /// Reference per-box force accumulations.
+    reference: Vec<f32>,
+}
+
+impl LavaMd {
+    /// `side³` boxes with ~`mean_particles` particles each (±50%,
+    /// giving the mild per-box imbalance of the original input decks).
+    pub fn new(side: usize, mean_particles: usize, seed: u64) -> LavaMd {
+        let nboxes = side * side * side;
+        let mut rng = Rng::new(seed);
+        let boxes: Vec<Vec<Particle>> = (0..nboxes)
+            .map(|b| {
+                let lo = (mean_particles / 2).max(1);
+                let hi = mean_particles + mean_particles / 2;
+                let count = rng.range(lo, hi);
+                let (bi, bj, bk) = (b / (side * side), (b / side) % side, b % side);
+                (0..count)
+                    .map(|_| Particle {
+                        x: bi as f32 + rng.next_f64() as f32,
+                        y: bj as f32 + rng.next_f64() as f32,
+                        z: bk as f32 + rng.next_f64() as f32,
+                        q: (rng.next_f64() as f32) - 0.5,
+                    })
+                    .collect()
+            })
+            .collect();
+        let neighbors: Vec<Vec<usize>> = (0..nboxes)
+            .map(|b| {
+                let (bi, bj, bk) = ((b / (side * side)) as isize, ((b / side) % side) as isize, (b % side) as isize);
+                let mut nb = Vec::new();
+                for di in -1..=1isize {
+                    for dj in -1..=1isize {
+                        for dk in -1..=1isize {
+                            let (i, j, k) = (bi + di, bj + dj, bk + dk);
+                            if (0..side as isize).contains(&i)
+                                && (0..side as isize).contains(&j)
+                                && (0..side as isize).contains(&k)
+                            {
+                                nb.push((i as usize * side + j as usize) * side + k as usize);
+                            }
+                        }
+                    }
+                }
+                nb
+            })
+            .collect();
+        let mut app = LavaMd { side, boxes, neighbors, reference: Vec::new() };
+        app.reference = (0..nboxes).map(|b| app.box_force(b)).collect();
+        app
+    }
+
+    pub fn num_boxes(&self) -> usize {
+        self.side * self.side * self.side
+    }
+
+    /// Force accumulation for one box (the per-iteration body): a
+    /// screened-Coulomb pairwise sum against all neighbor-box
+    /// particles within the cutoff.
+    fn box_force(&self, b: usize) -> f32 {
+        const CUTOFF2: f32 = 1.0;
+        let mut acc = 0.0f32;
+        for p in &self.boxes[b] {
+            for &nb in &self.neighbors[b] {
+                for q in &self.boxes[nb] {
+                    let (dx, dy, dz) = (p.x - q.x, p.y - q.y, p.z - q.z);
+                    let r2 = dx * dx + dy * dy + dz * dz;
+                    if r2 > 0.0 && r2 < CUTOFF2 {
+                        acc += p.q * q.q * (-r2).exp() / (r2 + 0.05);
+                    }
+                }
+            }
+        }
+        acc
+    }
+
+    /// Per-box workload estimate: Σ |box| × |neighbor|.
+    pub fn weights(&self) -> Vec<f64> {
+        (0..self.num_boxes())
+            .map(|b| {
+                self.neighbors[b]
+                    .iter()
+                    .map(|&nb| (self.boxes[b].len() * self.boxes[nb].len()) as f64)
+                    .sum()
+            })
+            .collect()
+    }
+}
+
+impl App for LavaMd {
+    fn name(&self) -> String {
+        format!("lavamd({0}x{0}x{0})", self.side)
+    }
+
+    fn sim_loops(&self) -> Vec<LoopSpec> {
+        // Force kernels are compute-heavy with modest memory traffic.
+        vec![LoopSpec::new(self.weights(), 0.1)]
+    }
+
+    fn run_real(&self, policy: &Policy, threads: usize, seed: u64) -> RealRun {
+        let n = self.num_boxes();
+        let weights = self.weights();
+        let opts = super::opts_with(threads, seed, &weights);
+        let forces: Vec<std::sync::atomic::AtomicU32> =
+            (0..n).map(|_| std::sync::atomic::AtomicU32::new(0)).collect();
+        let start = std::time::Instant::now();
+        let metrics = parallel_for(n, policy, &opts, &|r| {
+            for b in r {
+                let f = self.box_force(b);
+                forces[b].store(f.to_bits(), std::sync::atomic::Ordering::Relaxed);
+            }
+        });
+        let elapsed = start.elapsed().as_secs_f64();
+        let got: Vec<f32> = forces.iter().map(|f| f32::from_bits(f.load(std::sync::atomic::Ordering::Relaxed))).collect();
+        let valid = got
+            .iter()
+            .zip(&self.reference)
+            .all(|(a, b)| (a - b).abs() <= 1e-5 * b.abs().max(1.0));
+        RealRun {
+            elapsed_s: elapsed,
+            metrics,
+            checksum: got.iter().map(|&f| f as f64).sum(),
+            valid,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::IchParams;
+
+    #[test]
+    fn box_count_is_cubic() {
+        let app = LavaMd::new(4, 10, 1);
+        assert_eq!(app.num_boxes(), 64);
+    }
+
+    #[test]
+    fn interior_box_has_27_neighbors() {
+        let app = LavaMd::new(4, 5, 2);
+        // box (1,1,1)
+        let b = (1 * 4 + 1) * 4 + 1;
+        assert_eq!(app.neighbors[b].len(), 27);
+        // corner box (0,0,0)
+        assert_eq!(app.neighbors[0].len(), 8);
+    }
+
+    #[test]
+    fn parallel_matches_reference() {
+        let app = LavaMd::new(4, 12, 3);
+        for pol in [Policy::Static, Policy::Ich(IchParams::default()), Policy::Stealing { chunk: 1 }] {
+            let r = app.run_real(&pol, 4, 5);
+            assert!(r.valid, "{} diverged", pol.name());
+        }
+    }
+
+    #[test]
+    fn weights_mildly_imbalanced() {
+        let app = LavaMd::new(8, 30, 4);
+        let w = app.weights();
+        assert_eq!(w.len(), 512);
+        let mean = crate::util::stats::mean(&w);
+        let max = w.iter().cloned().fold(0.0, f64::max);
+        let min = w.iter().cloned().fold(f64::INFINITY, f64::min);
+        // Imbalanced but not power-law: max within ~10x of min.
+        assert!(max / min > 1.5, "should vary: {min}..{max}");
+        assert!(max / mean < 5.0, "should not be extreme: mean {mean} max {max}");
+    }
+}

@@ -1,0 +1,126 @@
+//! The paper's five evaluation applications (§5.1): synth, BFS,
+//! K-Means, LavaMD, SpMV.
+//!
+//! Each application exposes two faces:
+//! - `sim_loops()` — the workload trace (per-iteration weights +
+//!   memory intensity per parallel region) consumed by the simulated
+//!   testbed for the speedup figures;
+//! - `run_real()` — a genuine threaded execution through
+//!   `sched::parallel_for`, validated against a sequential reference
+//!   (correctness face; also what the PJRT-backed e2e example drives).
+
+pub mod bfs;
+pub mod kmeans;
+pub mod lavamd;
+pub mod spmv;
+pub mod synth;
+
+use crate::sched::{ForOpts, Policy, RunMetrics};
+use crate::sim::LoopSpec;
+
+/// Result of a real (threaded) application run.
+#[derive(Clone, Debug)]
+pub struct RealRun {
+    /// Wall time of the scheduled loops only.
+    pub elapsed_s: f64,
+    /// Aggregated scheduler metrics over all parallel regions.
+    pub metrics: RunMetrics,
+    /// Application checksum (compared against the sequential reference).
+    pub checksum: f64,
+    /// Did the parallel result match the sequential reference?
+    pub valid: bool,
+}
+
+/// A paper application.
+pub trait App: Sync {
+    /// Display name, e.g. "synth(exp-dec)".
+    fn name(&self) -> String;
+
+    /// Workload trace for the simulated testbed: one `LoopSpec` per
+    /// parallel region, in execution order.
+    fn sim_loops(&self) -> Vec<LoopSpec>;
+
+    /// Execute for real under `policy` with `threads` workers and
+    /// validate against the sequential reference.
+    fn run_real(&self, policy: &Policy, threads: usize, seed: u64) -> RealRun;
+}
+
+/// Build an app by CLI name. Sizes are chosen so real runs finish in
+/// seconds on one core; the sim figures use `sim_loops` traces.
+pub fn make_app(name: &str, seed: u64) -> Option<Box<dyn App>> {
+    Some(match name {
+        "synth-linear" => Box::new(synth::Synth::new(synth::Dist::Linear, synth::DEFAULT_N, seed)),
+        "synth-exp-inc" => Box::new(synth::Synth::new(synth::Dist::ExpIncreasing, synth::DEFAULT_N, seed)),
+        "synth-exp-dec" => Box::new(synth::Synth::new(synth::Dist::ExpDecreasing, synth::DEFAULT_N, seed)),
+        "bfs-uniform" => Box::new(bfs::Bfs::uniform(50_000, 16, seed)),
+        "bfs-scale-free" => Box::new(bfs::Bfs::scale_free(50_000, 2_000, 2.3, seed)),
+        "kmeans" => Box::new(kmeans::Kmeans::kdd_like(20_000, 34, 5, 4, seed)),
+        "lavamd" => Box::new(lavamd::LavaMd::new(8, 30, seed)),
+        "spmv" => {
+            let a = crate::sparse::suite::table1()[8].generate(8_000); // arabic analog
+            Box::new(spmv::Spmv::new("spmv(arabic-2005)", a))
+        }
+        _ => return None,
+    })
+}
+
+/// All CLI app names (the paper's evaluation set).
+pub const APP_NAMES: &[&str] = &[
+    "synth-linear",
+    "synth-exp-inc",
+    "synth-exp-dec",
+    "bfs-uniform",
+    "bfs-scale-free",
+    "kmeans",
+    "lavamd",
+    "spmv",
+];
+
+/// Helper shared by apps: run one weighted loop for real with a
+/// workload-aware-capable `ForOpts`.
+pub(crate) fn opts_with<'a>(threads: usize, seed: u64, weights: &'a [f64]) -> ForOpts<'a> {
+    ForOpts { threads, pin: true, seed, weights: Some(weights) }
+}
+
+/// Accumulate per-region metrics into an app-level aggregate.
+pub(crate) fn absorb_metrics(into: &mut RunMetrics, m: &RunMetrics) {
+    into.threads = m.threads;
+    into.elapsed_s += m.elapsed_s;
+    into.total_chunks += m.total_chunks;
+    into.total_iters += m.total_iters;
+    into.steals_ok += m.steals_ok;
+    into.steals_failed += m.steals_failed;
+    if into.iters_per_thread.len() < m.iters_per_thread.len() {
+        into.iters_per_thread.resize(m.iters_per_thread.len(), 0);
+    }
+    for (a, b) in into.iters_per_thread.iter_mut().zip(&m.iters_per_thread) {
+        *a += b;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_builds_every_app() {
+        for name in APP_NAMES {
+            let app = make_app(name, 1).unwrap_or_else(|| panic!("app {name}"));
+            let loops = app.sim_loops();
+            assert!(!loops.is_empty(), "{name} has no loops");
+            assert!(loops.iter().map(|l| l.weights.len()).sum::<usize>() > 0, "{name} empty");
+        }
+        assert!(make_app("nope", 1).is_none());
+    }
+
+    #[test]
+    fn every_app_validates_under_ich() {
+        // Full cross-product is exercised in the integration suite;
+        // here a quick smoke over the headline policy.
+        for name in APP_NAMES {
+            let app = make_app(name, 2).unwrap();
+            let r = app.run_real(&Policy::Ich(crate::sched::IchParams::default()), 2, 3);
+            assert!(r.valid, "{name} failed validation");
+        }
+    }
+}

@@ -1,0 +1,115 @@
+//! Sparse matrix–vector multiplication (§5.1): y = A·x with a
+//! one-dimensional row layout — the smallest task is one row's dot
+//! product, so per-iteration work is the row's nonzero count. Run over
+//! the Table-1 synthetic suite by the harness.
+
+use super::{App, RealRun};
+use crate::sched::{parallel_for, Policy};
+use crate::sim::LoopSpec;
+use crate::sparse::CsrMatrix;
+use std::sync::atomic::{AtomicU32, Ordering::Relaxed};
+
+pub struct Spmv {
+    label: String,
+    a: CsrMatrix,
+    x: Vec<f32>,
+    reference: Vec<f32>,
+    /// Outer repetitions (solvers call SpMV in a loop; >1 also gives
+    /// HSS its history).
+    pub repeats: usize,
+}
+
+impl Spmv {
+    pub fn new(label: &str, a: CsrMatrix) -> Spmv {
+        let x: Vec<f32> = (0..a.ncols).map(|i| ((i % 11) as f32 - 5.0) / 7.0).collect();
+        let mut reference = vec![0.0f32; a.nrows];
+        a.spmv_seq(&x, &mut reference);
+        Spmv { label: label.to_string(), a, x, reference, repeats: 3 }
+    }
+
+    pub fn matrix(&self) -> &CsrMatrix {
+        &self.a
+    }
+
+    /// Per-row workload in the simulator's common time unit (~5 ns):
+    /// one nonzero (indexed load + FMA) ≈ 2 units ≈ 10 ns, plus the
+    /// fixed row-visit cost.
+    pub fn weights(&self) -> Vec<f64> {
+        (0..self.a.nrows).map(|r| 2.0 * (1.0 + self.a.row_nnz(r) as f64)).collect()
+    }
+}
+
+impl App for Spmv {
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+
+    fn sim_loops(&self) -> Vec<LoopSpec> {
+        // SpMV is the canonical memory-bound kernel (§2.2).
+        let w = self.weights();
+        (0..self.repeats).map(|_| LoopSpec::new(w.clone(), 0.6)).collect()
+    }
+
+    fn run_real(&self, policy: &Policy, threads: usize, seed: u64) -> RealRun {
+        let n = self.a.nrows;
+        let weights = self.weights();
+        let y: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(0)).collect();
+        let mut agg = crate::sched::RunMetrics::default();
+        let start = std::time::Instant::now();
+        for rep in 0..self.repeats {
+            let opts = super::opts_with(threads, seed ^ rep as u64, &weights);
+            let m = parallel_for(n, policy, &opts, &|r| {
+                for row in r {
+                    let v = self.a.spmv_row(row, &self.x);
+                    y[row].store(v.to_bits(), Relaxed);
+                }
+            });
+            super::absorb_metrics(&mut agg, &m);
+        }
+        let elapsed = start.elapsed().as_secs_f64();
+        let got: Vec<f32> = y.iter().map(|v| f32::from_bits(v.load(Relaxed))).collect();
+        let valid = got
+            .iter()
+            .zip(&self.reference)
+            .all(|(a, b)| (a - b).abs() <= 1e-4 * b.abs().max(1.0));
+        RealRun {
+            elapsed_s: elapsed,
+            metrics: agg,
+            checksum: got.iter().map(|&v| v as f64).sum(),
+            valid,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::IchParams;
+    use crate::sparse::gen;
+
+    #[test]
+    fn parallel_spmv_matches_reference() {
+        let app = Spmv::new("t", gen::power_law(2_000, 2.0, 400, 5));
+        for pol in [Policy::Guided { chunk: 2 }, Policy::Ich(IchParams::default()), Policy::Dynamic { chunk: 1 }] {
+            let r = app.run_real(&pol, 4, 7);
+            assert!(r.valid, "{} diverged", pol.name());
+        }
+    }
+
+    #[test]
+    fn weights_follow_nnz() {
+        let a = gen::banded(100, 4, 1);
+        let app = Spmv::new("t", a);
+        let w = app.weights();
+        for r in 0..100 {
+            assert_eq!(w[r], 2.0 * (1.0 + app.a.row_nnz(r) as f64));
+        }
+    }
+
+    #[test]
+    fn sim_loops_repeat() {
+        let app = Spmv::new("t", gen::banded(50, 2, 2));
+        assert_eq!(app.sim_loops().len(), app.repeats);
+        assert!(app.sim_loops()[0].mem_intensity > 0.4);
+    }
+}

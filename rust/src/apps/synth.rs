@@ -1,0 +1,182 @@
+//! Synth — the BinLPT synthetic benchmark (§5.1): a loop whose
+//! per-iteration workload follows a user-chosen distribution. The
+//! paper runs the linear distribution (BinLPT's original) plus
+//! exponential increasing/decreasing (β = 1e6, sorted), modeling
+//! workloads that are heavily imbalanced at the start or end of the
+//! loop (the "cough in a room" particle example, Fig 3a).
+
+use super::{App, RealRun};
+use crate::sched::{parallel_for, Policy};
+use crate::sim::LoopSpec;
+use crate::util::rng::Rng;
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+
+/// Workload distribution (paper + the BinLPT originals as extensions).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dist {
+    Linear,
+    ExpIncreasing,
+    ExpDecreasing,
+    Uniform,
+    Quadratic,
+    Cubic,
+}
+
+impl Dist {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Dist::Linear => "linear",
+            Dist::ExpIncreasing => "exp-inc",
+            Dist::ExpDecreasing => "exp-dec",
+            Dist::Uniform => "uniform",
+            Dist::Quadratic => "quadratic",
+            Dist::Cubic => "cubic",
+        }
+    }
+}
+
+/// Paper scale is 1e6 samples; the shipped sim experiments default to
+/// 1e5 (same distributions, 10× fewer events — see EXPERIMENTS.md).
+pub const DEFAULT_N: usize = 100_000;
+
+/// The paper's exponential β (mean workload units per iteration).
+pub const BETA: f64 = 1_000_000.0;
+
+/// Generate the per-iteration workload vector for a distribution.
+pub fn workload(dist: Dist, n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    match dist {
+        Dist::Linear => (0..n).map(|i| 1.0 + i as f64).collect(),
+        Dist::Uniform => (0..n).map(|_| 1.0 + rng.next_f64() * 2.0).collect(),
+        Dist::Quadratic => (0..n).map(|i| 1.0 + (i as f64 / n as f64).powi(2) * n as f64).collect(),
+        Dist::Cubic => (0..n).map(|i| 1.0 + (i as f64 / n as f64).powi(3) * n as f64).collect(),
+        Dist::ExpIncreasing | Dist::ExpDecreasing => {
+            let mut w: Vec<f64> = (0..n).map(|_| 1.0 + rng.exponential(BETA)).collect();
+            w.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            if dist == Dist::ExpDecreasing {
+                w.reverse();
+            }
+            w
+        }
+    }
+}
+
+/// The synth application.
+pub struct Synth {
+    pub dist: Dist,
+    weights: Vec<f64>,
+    /// Real-run spin units per workload unit (keeps 1-core runs short;
+    /// the *relative* workload is what matters to the schedulers).
+    spin_scale: f64,
+}
+
+impl Synth {
+    pub fn new(dist: Dist, n: usize, seed: u64) -> Synth {
+        let weights = workload(dist, n, seed);
+        let total: f64 = weights.iter().sum();
+        // Budget ~2e8 spin units per full real pass regardless of dist.
+        let spin_scale = 2.0e8 / total;
+        Synth { dist, weights, spin_scale }
+    }
+
+    pub fn weights(&self) -> &[f64] {
+        &self.weights
+    }
+}
+
+/// A tiny calibrated spin: `units` rounds of integer mixing.
+#[inline]
+pub fn spin(units: u64) -> u64 {
+    let mut acc = 0x9E3779B97F4A7C15u64;
+    for i in 0..units {
+        acc = acc.rotate_left(7) ^ i.wrapping_mul(0xBF58476D1CE4E5B9);
+    }
+    acc
+}
+
+impl App for Synth {
+    fn name(&self) -> String {
+        format!("synth({})", self.dist.label())
+    }
+
+    fn sim_loops(&self) -> Vec<LoopSpec> {
+        // Compute-bound: no memory pressure term (§5.1's benchmark is
+        // a pure spin over the workload units).
+        vec![LoopSpec::new(self.weights.clone(), 0.0)]
+    }
+
+    fn run_real(&self, policy: &Policy, threads: usize, seed: u64) -> RealRun {
+        let n = self.weights.len();
+        let done = AtomicU64::new(0);
+        let weights = &self.weights;
+        let scale = self.spin_scale;
+        let opts = super::opts_with(threads, seed, weights);
+        let start = std::time::Instant::now();
+        let metrics = parallel_for(n, policy, &opts, &|r| {
+            let mut local = 0u64;
+            for i in r {
+                std::hint::black_box(spin((weights[i] * scale) as u64));
+                local += 1;
+            }
+            done.fetch_add(local, Relaxed);
+        });
+        let elapsed = start.elapsed().as_secs_f64();
+        let executed = done.load(Relaxed);
+        RealRun {
+            elapsed_s: elapsed,
+            metrics,
+            checksum: executed as f64,
+            valid: executed == n as u64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::IchParams;
+
+    #[test]
+    fn distributions_have_expected_shapes() {
+        let n = 10_000;
+        let inc = workload(Dist::ExpIncreasing, n, 1);
+        assert!(inc.windows(2).all(|w| w[0] <= w[1]), "exp-inc must be sorted ascending");
+        let dec = workload(Dist::ExpDecreasing, n, 1);
+        assert!(dec.windows(2).all(|w| w[0] >= w[1]), "exp-dec must be sorted descending");
+        let lin = workload(Dist::Linear, n, 1);
+        assert_eq!(lin[0], 1.0);
+        assert_eq!(lin[n - 1], n as f64);
+    }
+
+    #[test]
+    fn exp_matches_paper_range() {
+        // Paper: workload range is ~1e6 … 1 for β = 1e6.
+        let w = workload(Dist::ExpDecreasing, 100_000, 2);
+        assert!(w[0] > BETA, "heaviest iteration should exceed β, got {}", w[0]);
+        assert!(*w.last().unwrap() < 100.0, "lightest should be tiny");
+    }
+
+    #[test]
+    fn spin_scales_linearly_enough() {
+        assert_eq!(spin(0), spin(0));
+        // more units => different (and computed) value; sanity only
+        assert_ne!(spin(10), spin(11));
+    }
+
+    #[test]
+    fn real_run_counts_all_iterations() {
+        let app = Synth::new(Dist::ExpDecreasing, 2_000, 3);
+        let r = app.run_real(&Policy::Ich(IchParams::default()), 4, 7);
+        assert!(r.valid);
+        assert_eq!(r.metrics.total_iters, 2_000);
+    }
+
+    #[test]
+    fn sim_loops_single_compute_bound_region() {
+        let app = Synth::new(Dist::Linear, 100, 1);
+        let loops = app.sim_loops();
+        assert_eq!(loops.len(), 1);
+        assert_eq!(loops[0].mem_intensity, 0.0);
+        assert_eq!(loops[0].weights.len(), 100);
+    }
+}

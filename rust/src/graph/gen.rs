@@ -1,0 +1,104 @@
+//! Random graph generators matching the paper's BFS inputs (§5.1):
+//! - `uniform`: neighbor counts drawn from a uniform distribution
+//!   (the Rodinia BFS generator).
+//! - `scale_free`: neighbor counts from a power law with γ = 2.3
+//!   (the paper's modified generator; P(k) ~ k^-γ).
+
+use super::Csr;
+use crate::util::rng::Rng;
+
+/// Uniform-degree random graph: each vertex gets U[1, max_degree]
+/// out-neighbors chosen uniformly at random.
+pub fn uniform(n: usize, max_degree: usize, seed: u64) -> Csr {
+    let mut rng = Rng::new(seed);
+    let mut xadj = Vec::with_capacity(n + 1);
+    xadj.push(0usize);
+    let mut adj = Vec::new();
+    for _ in 0..n {
+        let deg = rng.range(1, max_degree.max(1)).min(n);
+        for _ in 0..deg {
+            adj.push(rng.below(n) as u32);
+        }
+        xadj.push(adj.len());
+    }
+    Csr { xadj, adj }
+}
+
+/// Scale-free random graph: out-degrees follow a truncated power law
+/// P(k) ~ k^-gamma on [1, max_degree]; targets are chosen
+/// preferentially toward low vertex ids (hub structure, as in web
+/// crawls — this also gives the "local structure" §2.2 describes).
+pub fn scale_free(n: usize, max_degree: usize, gamma: f64, seed: u64) -> Csr {
+    let mut rng = Rng::new(seed);
+    let mut xadj = Vec::with_capacity(n + 1);
+    xadj.push(0usize);
+    let mut adj = Vec::new();
+    for _ in 0..n {
+        let deg = (rng.power_law(1.0, max_degree.max(2) as f64, gamma) as usize).clamp(1, n);
+        for _ in 0..deg {
+            // Preferential attachment approximation: squared uniform
+            // biases edges toward low-id hub vertices.
+            let u = rng.next_f64();
+            adj.push(((u * u * n as f64) as usize).min(n - 1) as u32);
+        }
+        xadj.push(adj.len());
+    }
+    Csr { xadj, adj }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_shape_and_bounds() {
+        let g = uniform(1000, 16, 1);
+        assert_eq!(g.num_vertices(), 1000);
+        for v in 0..1000 {
+            assert!((1..=16).contains(&g.degree(v)));
+            assert!(g.neighbors(v).iter().all(|&u| (u as usize) < 1000));
+        }
+    }
+
+    #[test]
+    fn uniform_deterministic() {
+        let a = uniform(100, 8, 7);
+        let b = uniform(100, 8, 7);
+        assert_eq!(a.adj, b.adj);
+        let c = uniform(100, 8, 8);
+        assert_ne!(a.adj, c.adj);
+    }
+
+    #[test]
+    fn scale_free_has_heavy_tail() {
+        let g = scale_free(20_000, 2_000, 2.3, 3);
+        let degs: Vec<usize> = (0..g.num_vertices()).map(|v| g.degree(v)).collect();
+        let max = *degs.iter().max().unwrap();
+        let mean = degs.iter().sum::<usize>() as f64 / degs.len() as f64;
+        // Heavy tail: max degree far above the mean; most vertices tiny.
+        assert!(max as f64 > 20.0 * mean, "max {max} mean {mean}");
+        let small = degs.iter().filter(|&&d| d <= 3).count() as f64 / degs.len() as f64;
+        assert!(small > 0.5, "power law should be mostly small degrees, got {small}");
+    }
+
+    #[test]
+    fn scale_free_hubs_at_low_ids() {
+        let g = scale_free(10_000, 500, 2.3, 5);
+        // In-degree mass should concentrate on low ids.
+        let mut indeg = vec![0usize; g.num_vertices()];
+        for &u in &g.adj {
+            indeg[u as usize] += 1;
+        }
+        let low: usize = indeg[..1000].iter().sum();
+        let high: usize = indeg[9000..].iter().sum();
+        assert!(low > 5 * high.max(1), "low {low} vs high {high}");
+    }
+
+    #[test]
+    fn bfs_reaches_most_of_scale_free() {
+        let g = scale_free(5_000, 200, 2.3, 11);
+        let d = super::super::bfs_seq(&g, 0);
+        let reached = d.iter().filter(|&&x| x != u32::MAX).count();
+        assert!(reached > 2_500, "reached {reached}");
+    }
+}

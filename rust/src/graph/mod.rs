@@ -1,0 +1,132 @@
+//! Graph substrate: CSR adjacency, random generators (uniform-degree
+//! and scale-free), and a sequential BFS reference. Backs the paper's
+//! Breadth-First Search application (§5.1, Rodinia-style inputs).
+
+pub mod gen;
+
+/// Compressed-sparse-row directed graph.
+#[derive(Clone, Debug)]
+pub struct Csr {
+    /// Row pointers, length `n + 1`.
+    pub xadj: Vec<usize>,
+    /// Column indices (neighbor lists), length `m`.
+    pub adj: Vec<u32>,
+}
+
+impl Csr {
+    /// Build from an adjacency-list representation.
+    pub fn from_adj(lists: &[Vec<u32>]) -> Csr {
+        let mut xadj = Vec::with_capacity(lists.len() + 1);
+        xadj.push(0);
+        let mut adj = Vec::new();
+        for l in lists {
+            adj.extend_from_slice(l);
+            xadj.push(adj.len());
+        }
+        Csr { xadj, adj }
+    }
+
+    pub fn num_vertices(&self) -> usize {
+        self.xadj.len() - 1
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.adj.len()
+    }
+
+    /// Neighbors of `v`.
+    #[inline]
+    pub fn neighbors(&self, v: usize) -> &[u32] {
+        &self.adj[self.xadj[v]..self.xadj[v + 1]]
+    }
+
+    /// Out-degree of `v`.
+    #[inline]
+    pub fn degree(&self, v: usize) -> usize {
+        self.xadj[v + 1] - self.xadj[v]
+    }
+
+    /// Degree sequence as f64 (per-iteration workload estimates for
+    /// the BFS loops and Table-1-style stats).
+    pub fn degrees(&self) -> Vec<f64> {
+        (0..self.num_vertices()).map(|v| self.degree(v) as f64).collect()
+    }
+}
+
+/// Sequential BFS distances (u32::MAX = unreachable) — the reference
+/// the parallel implementations are validated against.
+pub fn bfs_seq(g: &Csr, source: usize) -> Vec<u32> {
+    let n = g.num_vertices();
+    let mut dist = vec![u32::MAX; n];
+    let mut frontier = vec![source];
+    dist[source] = 0;
+    let mut level = 0u32;
+    while !frontier.is_empty() {
+        level += 1;
+        let mut next = Vec::new();
+        for &v in &frontier {
+            for &u in g.neighbors(v) {
+                let u = u as usize;
+                if dist[u] == u32::MAX {
+                    dist[u] = level;
+                    next.push(u);
+                }
+            }
+        }
+        frontier = next;
+    }
+    dist
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn path_graph(n: usize) -> Csr {
+        let lists: Vec<Vec<u32>> = (0..n)
+            .map(|v| {
+                let mut l = Vec::new();
+                if v + 1 < n {
+                    l.push((v + 1) as u32);
+                }
+                if v > 0 {
+                    l.push((v - 1) as u32);
+                }
+                l
+            })
+            .collect();
+        Csr::from_adj(&lists)
+    }
+
+    #[test]
+    fn csr_shape() {
+        let g = path_graph(4);
+        assert_eq!(g.num_vertices(), 4);
+        assert_eq!(g.num_edges(), 6);
+        assert_eq!(g.neighbors(0), &[1]);
+        assert_eq!(g.neighbors(1), &[2, 0]);
+        assert_eq!(g.degree(1), 2);
+    }
+
+    #[test]
+    fn bfs_on_path() {
+        let g = path_graph(5);
+        let d = bfs_seq(&g, 0);
+        assert_eq!(d, vec![0, 1, 2, 3, 4]);
+        let d2 = bfs_seq(&g, 2);
+        assert_eq!(d2, vec![2, 1, 0, 1, 2]);
+    }
+
+    #[test]
+    fn bfs_unreachable() {
+        let g = Csr::from_adj(&[vec![1], vec![0], vec![]]); // vertex 2 isolated
+        let d = bfs_seq(&g, 0);
+        assert_eq!(d[2], u32::MAX);
+    }
+
+    #[test]
+    fn degrees_vector() {
+        let g = path_graph(3);
+        assert_eq!(g.degrees(), vec![1.0, 2.0, 1.0]);
+    }
+}

@@ -1,0 +1,335 @@
+//! Regenerators for every figure and table in the paper's evaluation.
+//! Each function renders an ASCII analog of the figure and persists
+//! the raw numbers under `results/*.json`.
+
+use super::speedup::{self, curves, SpeedupCurves};
+use crate::apps::{self, synth};
+use crate::sched::PAPER_FAMILIES;
+use crate::sim::MachineSpec;
+use crate::sparse::{rcm, stats, suite};
+use crate::util::chart::{log_dots, spy, BarChart};
+use crate::util::histogram::Histogram;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::table::{compact, f2, Table};
+
+/// Experiment seed: every figure is reproducible bit-for-bit.
+pub const SEED: u64 = 0x1C41C4;
+
+/// Where raw numbers are persisted.
+pub fn results_dir() -> String {
+    "results".to_string()
+}
+
+fn save_curves(name: &str, all: &[SpeedupCurves]) {
+    let mut top = Json::obj();
+    for c in all {
+        let mut o = Json::obj();
+        o.set("threads", Json::nums(&c.threads.iter().map(|&t| t as f64).collect::<Vec<_>>()));
+        for (fam, v) in &c.series {
+            o.set(fam, Json::nums(v));
+        }
+        top.set(&c.app, o);
+    }
+    let _ = top.save(&format!("{}/{name}.json", results_dir()));
+}
+
+fn render_curves(title: &str, c: &SpeedupCurves) -> String {
+    let mut chart = BarChart::new(&format!("{title} — {}", c.app), "speedup vs guided@1");
+    chart.groups(c.threads.iter().map(|t| format!("p={t}")));
+    for (fam, v) in &c.series {
+        chart.series(fam, v.clone());
+    }
+    chart.render()
+}
+
+// ---------------------------------------------------------------------------
+// Fig 1 — input irregularity (arabic-2005 analog)
+// ---------------------------------------------------------------------------
+
+/// Fig 1a/1b/1c: sparsity pattern natural vs RCM + row-nnz histogram.
+pub fn fig1() -> String {
+    let entry = suite::table1().into_iter().find(|e| e.name == "arabic-2005").unwrap();
+    let a = entry.generate(4_000);
+    let mut out = String::new();
+
+    // (a) natural ordering spy plot
+    let rows: Vec<Vec<usize>> =
+        (0..a.nrows).map(|r| a.row_cols(r).iter().map(|&c| c as usize).collect()).collect();
+    out.push_str(&spy("Fig 1a: arabic-2005 analog, natural ordering", a.nrows, a.ncols, &|r| &rows[r], 32));
+
+    // (b) RCM ordering
+    let b = a.permute(&rcm::rcm(&a));
+    let rows_b: Vec<Vec<usize>> =
+        (0..b.nrows).map(|r| b.row_cols(r).iter().map(|&c| c as usize).collect()).collect();
+    out.push_str(&spy("Fig 1b: arabic-2005 analog, RCM ordering", b.nrows, b.ncols, &|r| &rows_b[r], 32));
+
+    // (c) rows binned by nnz in increments of 50, log y (first 50 bins)
+    let h = Histogram::of(a.row_weights().into_iter(), 50.0);
+    out.push_str(&log_dots("Fig 1c: rows per nnz bin (width 50)", &h.labeled_bins(50), 48));
+
+    let s_nat = stats::row_stats(&a);
+    out.push_str(&format!(
+        "\nstats: rows={} nnz={} mean={:.1} ratio={} var={}\n",
+        s_nat.nrows,
+        s_nat.nnz,
+        s_nat.mean,
+        compact(s_nat.ratio),
+        compact(s_nat.variance)
+    ));
+    let mut j = Json::obj();
+    j.set("bins", Json::nums(&h.counts.iter().map(|&c| c as f64).collect::<Vec<_>>()));
+    j.set("mean", Json::num(s_nat.mean));
+    j.set("variance", Json::num(s_nat.variance));
+    let _ = j.save(&format!("{}/fig1.json", results_dir()));
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Fig 3b — the synth exponential distribution
+// ---------------------------------------------------------------------------
+
+pub fn fig3b() -> String {
+    let mut rng = Rng::new(SEED);
+    let n = 1_000_000;
+    let h = Histogram::of((0..n).map(|_| rng.exponential(synth::BETA) / 1e5), 1.0);
+    let bins: Vec<(String, f64)> = h
+        .labeled_bins(30)
+        .into_iter()
+        .map(|(l, c)| (format!("{}e5", l.split('-').next().unwrap()), c))
+        .collect();
+    let mut j = Json::obj();
+    j.set("counts", Json::nums(&h.counts.iter().map(|&c| c as f64).collect::<Vec<_>>()));
+    let _ = j.save(&format!("{}/fig3b.json", results_dir()));
+    log_dots("Fig 3b: exponential workload histogram (β=1e6, bins of 1e5)", &bins, 48)
+}
+
+// ---------------------------------------------------------------------------
+// Fig 4 — synth speedups
+// ---------------------------------------------------------------------------
+
+/// Synth size for the sim figures (paper: 1e6; reduced 10×, same
+/// distributions — EXPERIMENTS.md discusses the scale).
+pub const SYNTH_N: usize = 100_000;
+
+pub fn fig4() -> String {
+    let spec = MachineSpec::default();
+    let mut out = String::new();
+    let mut all = Vec::new();
+    for dist in [synth::Dist::Linear, synth::Dist::ExpIncreasing, synth::Dist::ExpDecreasing] {
+        let app = synth::Synth::new(dist, SYNTH_N, SEED);
+        let c = curves(&spec, &app, PAPER_FAMILIES, speedup::THREADS, SEED);
+        out.push_str(&render_curves("Fig 4", &c));
+        out.push('\n');
+        all.push(c);
+    }
+    save_curves("fig4", &all);
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Fig 5 — BFS and K-Means
+// ---------------------------------------------------------------------------
+
+pub fn fig5a() -> String {
+    let spec = MachineSpec::default();
+    let mut out = String::new();
+    let mut all = Vec::new();
+    for app in [
+        apps::bfs::Bfs::uniform(50_000, 16, SEED),
+        apps::bfs::Bfs::scale_free(50_000, 2_000, 2.3, SEED),
+    ] {
+        let c = curves(&spec, &app, PAPER_FAMILIES, speedup::THREADS, SEED);
+        out.push_str(&render_curves("Fig 5a", &c));
+        out.push('\n');
+        all.push(c);
+    }
+    save_curves("fig5a", &all);
+    out
+}
+
+pub fn fig5b() -> String {
+    let spec = MachineSpec::default();
+    let app = apps::kmeans::Kmeans::kdd_like(20_000, 34, 5, 4, SEED);
+    let c = curves(&spec, &app, PAPER_FAMILIES, speedup::THREADS, SEED);
+    let out = render_curves("Fig 5b", &c);
+    save_curves("fig5b", &[c]);
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Fig 6 — LavaMD and SpMV
+// ---------------------------------------------------------------------------
+
+pub fn fig6a() -> String {
+    let spec = MachineSpec::default();
+    let app = apps::lavamd::LavaMd::new(8, 30, SEED);
+    let c = curves(&spec, &app, PAPER_FAMILIES, speedup::THREADS, SEED);
+    let out = render_curves("Fig 6a", &c);
+    save_curves("fig6a", &[c]);
+    out
+}
+
+/// Fig 6b: geometric-mean speedup over the 15-input suite with
+/// min/max whiskers.
+pub fn fig6b() -> String {
+    fig6b_sized(8_000)
+}
+
+pub fn fig6b_sized(rows: usize) -> String {
+    let spec = MachineSpec::default();
+    let entries = suite::table1();
+    // speedups[input][family][thread]
+    let mut per_family: Vec<Vec<Vec<f64>>> = vec![Vec::new(); PAPER_FAMILIES.len()];
+    for e in &entries {
+        let a = e.generate(rows);
+        let app = apps::spmv::Spmv::new(e.name, a);
+        let c = curves(&spec, &app, PAPER_FAMILIES, speedup::THREADS, SEED);
+        for (fi, (_fam, v)) in c.series.iter().enumerate() {
+            per_family[fi].push(v.clone());
+        }
+    }
+    let mut out = String::from("# Fig 6b: SpMV geomean speedup over the 15-input suite\n");
+    let mut t = Table::new(["family", "p", "geomean", "min", "max"]);
+    let mut j = Json::obj();
+    for (fi, fam) in PAPER_FAMILIES.iter().enumerate() {
+        let mut fam_json = Json::obj();
+        for (ti, &p) in speedup::THREADS.iter().enumerate() {
+            let at_p: Vec<f64> = per_family[fi].iter().map(|curve| curve[ti]).collect();
+            let g = crate::util::stats::geomean(&at_p);
+            let (mn, mx) = (crate::util::stats::min(&at_p), crate::util::stats::max(&at_p));
+            if p == 28 || p == 1 {
+                t.row([fam.to_string(), p.to_string(), f2(g), f2(mn), f2(mx)]);
+            }
+            fam_json.set(&format!("p{p}"), Json::nums(&[g, mn, mx]));
+        }
+        j.set(fam, fam_json);
+    }
+    let _ = j.save(&format!("{}/fig6b.json", results_dir()));
+    out.push_str(&t.render());
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Tables
+// ---------------------------------------------------------------------------
+
+/// Table 1: paper-reported vs generated statistics for the suite.
+pub fn table1() -> String {
+    let mut t = Table::new([
+        "Input", "Area", "class", "paper x̄", "x̄", "paper ratio", "ratio", "paper σ²", "σ²",
+    ]);
+    let mut j = Json::obj();
+    for e in suite::table1() {
+        let a = e.generate(4_000);
+        let s = stats::row_stats(&a);
+        t.row([
+            format!("{}: {}", e.id, e.name),
+            e.area.to_string(),
+            format!("{:?}", e.class).split(' ').next().unwrap().trim_end_matches('{').to_string(),
+            f2(e.paper_mean),
+            f2(s.mean),
+            compact(e.paper_ratio),
+            compact(s.ratio),
+            compact(e.paper_var),
+            compact(s.variance),
+        ]);
+        let mut o = Json::obj();
+        o.set("mean", Json::num(s.mean));
+        o.set("ratio", Json::num(s.ratio));
+        o.set("variance", Json::num(s.variance));
+        j.set(e.name, o);
+    }
+    let _ = j.save(&format!("{}/table1.json", results_dir()));
+    format!("# Table 1: input suite (synthetic analogs @ 4k rows; paper values for reference)\n{}", t.render())
+}
+
+/// Table 2: the scheduling-method parameter grid.
+pub fn table2() -> String {
+    let mut t = Table::new(["Scheduling Method", "Parameters"]);
+    t.row(["guided", "chunk size = {1, 2, 3}"]);
+    t.row(["dynamic", "chunk size = {1, 2, 3}"]);
+    t.row(["taskloop", "num_task = num_threads"]);
+    t.row(["binlpt", "chunk size = {128, 384, 576}"]);
+    t.row(["stealing", "chunk size = {1, 2, 3, 64}"]);
+    t.row(["ich", "ε = 25%, 33%, 50%"]);
+    format!("# Table 2: scheduling methods under test\n{}", t.render())
+}
+
+/// §6.1 "Insight from all applications": iCh's rank and gap-to-best
+/// per application at 28 threads.
+pub fn summary() -> String {
+    let spec = MachineSpec::default();
+    let mut t = Table::new(["app", "ich speedup@28", "best family", "best@28", "ich rank", "gap"]);
+    let mut gaps = Vec::new();
+    let mut j = Json::obj();
+    for name in apps::APP_NAMES {
+        let app = apps::make_app(name, SEED).unwrap();
+        let c = curves(&spec, app.as_ref(), PAPER_FAMILIES, speedup::THREADS, SEED);
+        let (best_fam, best_v) = c
+            .series
+            .iter()
+            .map(|(f, v)| (f.clone(), *v.last().unwrap()))
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap();
+        let gap = c.gap_to_best("ich");
+        gaps.push(gap);
+        t.row([
+            c.app.clone(),
+            f2(c.at_max("ich")),
+            best_fam.clone(),
+            f2(best_v),
+            c.rank_at_max("ich").to_string(),
+            format!("{:.1}%", gap * 100.0),
+        ]);
+        let mut o = Json::obj();
+        o.set("ich", Json::num(c.at_max("ich")));
+        o.set("best", Json::num(best_v));
+        o.set("best_family", Json::str(&best_fam));
+        o.set("rank", Json::num(c.rank_at_max("ich") as f64));
+        j.set(name, o);
+    }
+    let avg_gap = crate::util::stats::mean(&gaps);
+    let _ = j.save(&format!("{}/summary.json", results_dir()));
+    format!(
+        "# §6.1 insight: iCh vs best per application (28 simulated threads)\n{}\naverage gap to best: {:.1}%  (paper: ~5.4%)\n",
+        t.render(),
+        avg_gap * 100.0
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig1_renders_and_saves() {
+        let s = fig1();
+        assert!(s.contains("Fig 1a"));
+        assert!(s.contains("Fig 1b"));
+        assert!(s.contains("Fig 1c"));
+        assert!(std::path::Path::new("results/fig1.json").exists());
+    }
+
+    #[test]
+    fn fig3b_histogram_decays() {
+        let s = fig3b();
+        assert!(s.contains("Fig 3b"));
+    }
+
+    #[test]
+    fn table2_lists_paper_grid() {
+        let s = table2();
+        for fam in ["guided", "dynamic", "taskloop", "binlpt", "stealing", "ich"] {
+            assert!(s.contains(fam), "missing {fam}");
+        }
+    }
+
+    #[test]
+    fn table1_has_all_inputs() {
+        let s = table1();
+        for name in ["FullChip", "arabic-2005", "kmer_V1r", "hugebubbles-10"] {
+            assert!(s.contains(name), "missing {name}");
+        }
+    }
+}

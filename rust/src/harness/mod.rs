@@ -1,0 +1,48 @@
+//! Experiment harness: regenerates every table and figure of the
+//! paper's evaluation (see DESIGN.md §5 for the experiment index) on
+//! the simulated testbed, plus the ablation sweeps.
+
+pub mod figures;
+pub mod sensitivity;
+pub mod speedup;
+
+/// Dispatch a figure/table by name; None if unknown.
+pub fn run_named(name: &str) -> Option<String> {
+    Some(match name {
+        "fig1" => figures::fig1(),
+        "fig3b" => figures::fig3b(),
+        "fig4" => figures::fig4(),
+        "fig5a" => figures::fig5a(),
+        "fig5b" => figures::fig5b(),
+        "fig6a" => figures::fig6a(),
+        "fig6b" => figures::fig6b(),
+        "fig7" => sensitivity::fig7(),
+        "table1" => figures::table1(),
+        "table2" => figures::table2(),
+        "summary" => figures::summary(),
+        "ablations" => sensitivity::ablations(),
+        _ => return None,
+    })
+}
+
+/// Everything `run_named` accepts.
+pub const NAMES: &[&str] = &[
+    "fig1", "fig3b", "fig4", "fig5a", "fig5b", "fig6a", "fig6b", "fig7", "table1", "table2",
+    "summary", "ablations",
+];
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unknown_name_is_none() {
+        assert!(super::run_named("nope").is_none());
+    }
+
+    #[test]
+    fn cheap_names_render() {
+        for n in ["table2", "fig3b"] {
+            let s = super::run_named(n).unwrap();
+            assert!(!s.is_empty(), "{n}");
+        }
+    }
+}

@@ -1,0 +1,104 @@
+//! Fig 7 — sensitivity of iCh to ε, and the worst-iCh vs best-stealing
+//! comparison (paper eqs 10 and 11):
+//!
+//!   ε_sensitivity(app, p) = max_ε T(app, iCh(ε), p) / min_ε T(app, iCh(ε), p)
+//!   worst_stealing(app, p) = max_ε T(app, iCh(ε), p) / min_chunk T(app, stealing(chunk), p)
+
+use super::figures::SEED;
+use super::speedup::{sim_time, THREADS};
+use crate::apps;
+use crate::sched::{IchParams, Policy};
+use crate::sim::MachineSpec;
+use crate::util::json::Json;
+use crate::util::table::{f2, Table};
+
+pub const EPS_GRID: [f64; 3] = [0.25, 0.33, 0.50];
+pub const STEAL_GRID: [usize; 4] = [1, 2, 3, 64];
+
+/// (ε_sensitivity, worst_stealing, best ε) for one app at p threads.
+pub fn sensitivity_at(spec: &MachineSpec, app: &dyn apps::App, p: usize, seed: u64) -> (f64, f64, f64) {
+    let loops = app.sim_loops();
+    let ich_times: Vec<(f64, f64)> = EPS_GRID
+        .iter()
+        .map(|&e| (e, sim_time(spec, &loops, &Policy::Ich(IchParams::with_eps(e)), p, seed)))
+        .collect();
+    let worst_ich = ich_times.iter().map(|&(_, t)| t).fold(0.0, f64::max);
+    let best_ich = ich_times.iter().map(|&(_, t)| t).fold(f64::INFINITY, f64::min);
+    let best_eps = ich_times.iter().min_by(|a, b| a.1.partial_cmp(&b.1).unwrap()).unwrap().0;
+    let best_steal = STEAL_GRID
+        .iter()
+        .map(|&c| sim_time(spec, &loops, &Policy::Stealing { chunk: c }, p, seed))
+        .fold(f64::INFINITY, f64::min);
+    (worst_ich / best_ich, worst_ich / best_steal, best_eps)
+}
+
+/// Fig 7 over every paper application at the paper thread counts.
+pub fn fig7() -> String {
+    let spec = MachineSpec::default();
+    let mut t = Table::new(["app", "p", "ε_sensitivity", "worst_stealing", "best ε"]);
+    let mut j = Json::obj();
+    for name in apps::APP_NAMES {
+        let app = apps::make_app(name, SEED).unwrap();
+        let mut app_json = Json::obj();
+        for &p in THREADS.iter().filter(|&&p| p >= 8) {
+            let (es, ws, be) = sensitivity_at(&spec, app.as_ref(), p, SEED);
+            t.row([app.name(), p.to_string(), f2(es), f2(ws), format!("{:.0}%", be * 100.0)]);
+            app_json.set(&format!("p{p}"), Json::nums(&[es, ws, be]));
+        }
+        j.set(name, app_json);
+    }
+    let _ = j.save(&format!("{}/fig7.json", super::figures::results_dir()));
+    format!(
+        "# Fig 7: ε sensitivity (worst-ε/best-ε time) and worst-iCh vs best-stealing\n\
+         #   ε_sensitivity > 1: larger = more sensitive; worst_stealing < 1: worst iCh still beats tuned stealing\n{}",
+        t.render()
+    )
+}
+
+/// Ablations of iCh's design choices (DESIGN.md §5): adaptation
+/// direction, steal-state merge rule, δ estimator, initial divisor.
+pub fn ablations() -> String {
+    let spec = MachineSpec::default();
+    let apps_list = ["synth-exp-dec", "bfs-scale-free", "spmv"];
+    let p = 28;
+    let mut t = Table::new(["app", "variant", "time ratio vs iCh default"]);
+    let mut j = Json::obj();
+    for name in apps_list {
+        let app = apps::make_app(name, SEED).unwrap();
+        let loops = app.sim_loops();
+        let base = sim_time(&spec, &loops, &Policy::Ich(IchParams::default()), p, SEED);
+        let mut app_json = Json::obj();
+        let variants: Vec<(&str, IchParams)> = vec![
+            ("inverted-adapt (Yan-style)", IchParams { inverted: true, ..Default::default() }),
+            ("merge=victim", IchParams { merge: crate::sched::StealMerge::Victim, ..Default::default() }),
+            ("merge=keep", IchParams { merge: crate::sched::StealMerge::Keep, ..Default::default() }),
+            ("informed-steal", IchParams { informed: true, ..Default::default() }),
+            ("d0=1", IchParams { d0: Some(1.0), ..Default::default() }),
+            ("d0=2p", IchParams { d0: Some(2.0 * p as f64), ..Default::default() }),
+        ];
+        for (label, prm) in variants {
+            let tt = sim_time(&spec, &loops, &Policy::Ich(prm), p, SEED);
+            t.row([app.name(), label.to_string(), f2(tt / base)]);
+            app_json.set(label, Json::num(tt / base));
+        }
+        j.set(name, app_json);
+    }
+    let _ = j.save(&format!("{}/ablations.json", super::figures::results_dir()));
+    format!("# Ablations (28 simulated threads; ratio > 1 means variant is slower than paper iCh)\n{}", t.render())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::synth::{Dist, Synth};
+
+    #[test]
+    fn sensitivity_ratio_at_least_one() {
+        let spec = MachineSpec::default();
+        let app = Synth::new(Dist::ExpDecreasing, 10_000, 1);
+        let (es, ws, be) = sensitivity_at(&spec, &app, 8, 3);
+        assert!(es >= 1.0, "ε_sensitivity {es}");
+        assert!(ws > 0.0, "worst_stealing {ws}");
+        assert!(EPS_GRID.contains(&be));
+    }
+}

@@ -1,0 +1,124 @@
+//! Speedup measurement on the simulated testbed, following the
+//! paper's §6.1 methodology exactly:
+//!
+//!   T(app, sched, p)      = best time across the Table-2 parameter
+//!                           grid of the scheduler family;
+//!   speedup(app, sched, p) = T(app, guided, 1) / T(app, sched, p).   (eq 9)
+
+use crate::apps::App;
+use crate::sched::{table2_grid, Policy};
+use crate::sim::{simulate_app, LoopSpec, MachineSpec};
+
+/// Paper thread counts (the x-axis of Figs 4–7).
+pub const THREADS: &[usize] = &[1, 2, 4, 8, 14, 28];
+
+/// T(app, policy, p): simulated makespan for one concrete policy.
+pub fn sim_time(spec: &MachineSpec, loops: &[LoopSpec], policy: &Policy, p: usize, seed: u64) -> f64 {
+    simulate_app(spec, p, loops, policy, seed).time
+}
+
+/// T(app, family, p): best over the family's Table-2 parameter grid.
+pub fn best_time(spec: &MachineSpec, loops: &[LoopSpec], family: &str, p: usize, seed: u64) -> f64 {
+    table2_grid(family)
+        .iter()
+        .map(|pol| sim_time(spec, loops, pol, p, seed))
+        .fold(f64::INFINITY, f64::min)
+}
+
+/// Full speedup curves for one app: one series per scheduler family.
+#[derive(Clone, Debug)]
+pub struct SpeedupCurves {
+    pub app: String,
+    pub threads: Vec<usize>,
+    /// (family, speedups parallel to `threads`)
+    pub series: Vec<(String, Vec<f64>)>,
+}
+
+impl SpeedupCurves {
+    /// Speedup of `family` at the largest thread count.
+    pub fn at_max(&self, family: &str) -> f64 {
+        self.series
+            .iter()
+            .find(|(f, _)| f == family)
+            .map(|(_, v)| *v.last().unwrap())
+            .unwrap_or(0.0)
+    }
+
+    /// Rank of `family` at the largest thread count (1 = best).
+    pub fn rank_at_max(&self, family: &str) -> usize {
+        let mine = self.at_max(family);
+        1 + self.series.iter().filter(|(_, v)| *v.last().unwrap() > mine).count()
+    }
+
+    /// Relative gap to the best family at the max thread count.
+    pub fn gap_to_best(&self, family: &str) -> f64 {
+        let best = self.series.iter().map(|(_, v)| *v.last().unwrap()).fold(0.0, f64::max);
+        let mine = self.at_max(family);
+        if best > 0.0 { (best - mine) / best } else { 0.0 }
+    }
+}
+
+/// Compute speedup curves for an app across the paper's families.
+pub fn curves(
+    spec: &MachineSpec,
+    app: &dyn App,
+    families: &[&str],
+    threads: &[usize],
+    seed: u64,
+) -> SpeedupCurves {
+    let loops = app.sim_loops();
+    let t_ref = best_time(spec, &loops, "guided", 1, seed); // eq 9 denominator base
+    let series = families
+        .iter()
+        .map(|fam| {
+            let v: Vec<f64> =
+                threads.iter().map(|&p| t_ref / best_time(spec, &loops, fam, p, seed)).collect();
+            (fam.to_string(), v)
+        })
+        .collect();
+    SpeedupCurves { app: app.name(), threads: threads.to_vec(), series }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::synth::{Dist, Synth};
+
+    #[test]
+    fn speedup_normalizes_to_guided_1() {
+        let spec = MachineSpec::default();
+        let app = Synth::new(Dist::Linear, 5_000, 1);
+        let c = curves(&spec, &app, &["guided"], &[1], 7);
+        let sp = c.series[0].1[0];
+        assert!((sp - 1.0).abs() < 1e-9, "guided speedup at p=1 must be 1.0, got {sp}");
+    }
+
+    #[test]
+    fn best_time_not_worse_than_any_grid_point() {
+        let spec = MachineSpec::default();
+        let app = Synth::new(Dist::Linear, 5_000, 1);
+        let loops = app.sim_loops();
+        let best = best_time(&spec, &loops, "dynamic", 4, 3);
+        for pol in table2_grid("dynamic") {
+            assert!(best <= sim_time(&spec, &loops, &pol, 4, 3) + 1e-9);
+        }
+    }
+
+    #[test]
+    fn ranks_and_gaps() {
+        let c = SpeedupCurves {
+            app: "x".into(),
+            threads: vec![1, 2],
+            series: vec![
+                ("a".into(), vec![1.0, 4.0]),
+                ("b".into(), vec![1.0, 2.0]),
+                ("c".into(), vec![1.0, 3.0]),
+            ],
+        };
+        assert_eq!(c.rank_at_max("a"), 1);
+        assert_eq!(c.rank_at_max("c"), 2);
+        assert_eq!(c.rank_at_max("b"), 3);
+        assert!((c.gap_to_best("b") - 0.5).abs() < 1e-12);
+        assert_eq!(c.gap_to_best("a"), 0.0);
+    }
+}

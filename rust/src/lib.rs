@@ -1,0 +1,34 @@
+//! # iCh — An Adaptive Self-Scheduling Loop Scheduler
+//!
+//! Reproduction of Booth & Lane, *"An Adaptive Self-Scheduling Loop
+//! Scheduler"* (2020): a loop-scheduling runtime whose headline policy,
+//! **iCh**, self-manages per-thread chunk size from a running estimate
+//! of iteration-throughput spread and recovers imbalance with
+//! THE-protocol work-stealing.
+//!
+//! The crate is organized as the three-layer Rust+JAX+Pallas stack
+//! described in `DESIGN.md`:
+//!
+//! - [`sched`] — the L3 coordinator: `parallel_for` with pluggable
+//!   self-scheduling policies (iCh + all the paper's baselines).
+//! - [`sim`] — a discrete-event simulated 28-thread NUMA machine that
+//!   reruns the same policy math in virtual time (this reproduces the
+//!   paper's speedup figures on hardware we don't have).
+//! - [`apps`] — the five evaluation applications (synth, BFS, K-Means,
+//!   LavaMD, SpMV) over the [`graph`]/[`sparse`] substrates.
+//! - [`runtime`] — the PJRT bridge that loads the AOT-compiled JAX/
+//!   Pallas kernels (`artifacts/*.hlo.txt`) and executes them from the
+//!   Rust hot path; Python never runs at request time.
+//! - [`harness`] — experiment drivers regenerating every table and
+//!   figure of the paper's evaluation.
+
+pub mod apps;
+pub mod graph;
+pub mod harness;
+pub mod runtime;
+pub mod sched;
+pub mod sim;
+pub mod sparse;
+pub mod util;
+
+pub use sched::{parallel_for, parallel_for_each, ForOpts, IchParams, Policy};

@@ -1,0 +1,128 @@
+//! `ich` — CLI launcher for the iCh loop-scheduling runtime and the
+//! paper-reproduction harness.
+//!
+//! Subcommands:
+//!   run      --app <name> --sched <policy> --threads <p> [--real]
+//!            run one application on the simulated testbed (default)
+//!            or for real on this machine's cores (--real)
+//!   figure   <fig1|fig3b|fig4|fig5a|fig5b|fig6a|fig6b|fig7>
+//!   table    <table1|table2>
+//!   summary  §6.1 "insight" table (iCh rank + gap per app)
+//!   ablation iCh design-choice ablations
+//!   sweep    --app <name>: every family × Table-2 params × threads
+//!   list     apps, policies, figures
+//!   version
+
+use ich::apps;
+use ich::harness;
+use ich::sched::{table2_grid, Policy, PAPER_FAMILIES};
+use ich::sim::{simulate_app, MachineSpec};
+use ich::util::cli::Args;
+use ich::util::table::{f2, Table};
+
+fn main() {
+    let args = Args::from_env(&["real", "verbose"]);
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "run" => cmd_run(&args),
+        "figure" | "table" => {
+            let name = args.positional.get(1).map(String::as_str).unwrap_or("");
+            match harness::run_named(name) {
+                Some(s) => println!("{s}"),
+                None => {
+                    eprintln!("unknown figure/table '{name}'; available: {:?}", harness::NAMES);
+                    std::process::exit(2);
+                }
+            }
+        }
+        "summary" => println!("{}", harness::run_named("summary").unwrap()),
+        "ablation" | "ablations" => println!("{}", harness::run_named("ablations").unwrap()),
+        "sweep" => cmd_sweep(&args),
+        "list" => cmd_list(),
+        "version" => println!("ich 0.1.0 (paper: Booth & Lane 2020, iCh)"),
+        _ => {
+            println!("usage: ich <run|figure|table|summary|ablation|sweep|list|version> [flags]");
+            println!("  e.g.: ich run --app bfs-scale-free --sched ich,0.33 --threads 28");
+            println!("        ich run --app spmv --sched guided,1 --threads 4 --real");
+            println!("        ich figure fig4");
+        }
+    }
+}
+
+fn cmd_run(args: &Args) {
+    let app_name = args.get_or("app", "synth-exp-dec");
+    let sched = args.get_or("sched", "ich,0.33");
+    let threads = args.get_usize("threads", 28);
+    let seed = args.get_u64("seed", harness::figures::SEED);
+    let Some(app) = apps::make_app(app_name, seed) else {
+        eprintln!("unknown app '{app_name}'; available: {:?}", apps::APP_NAMES);
+        std::process::exit(2);
+    };
+    let Some(policy) = Policy::parse(sched) else {
+        eprintln!("unknown policy '{sched}'");
+        std::process::exit(2);
+    };
+    if args.get_bool("real") {
+        let r = app.run_real(&policy, threads, seed);
+        println!(
+            "app={} sched={} threads={} REAL time={:.4}s valid={} chunks={} steals={}ok/{}fail imbalance={:.3}",
+            app.name(),
+            policy.name(),
+            threads,
+            r.elapsed_s,
+            r.valid,
+            r.metrics.total_chunks,
+            r.metrics.steals_ok,
+            r.metrics.steals_failed,
+            r.metrics.imbalance()
+        );
+        if !r.valid {
+            std::process::exit(1);
+        }
+    } else {
+        let spec = MachineSpec::default();
+        let loops = app.sim_loops();
+        let r = simulate_app(&spec, threads, &loops, &policy, seed);
+        let t1 = simulate_app(&spec, 1, &loops, &Policy::Guided { chunk: 1 }, seed).time;
+        println!(
+            "app={} sched={} threads={} SIM time={:.0} speedup={:.2} chunks={} steals={}ok/{}fail",
+            app.name(),
+            policy.name(),
+            threads,
+            r.time,
+            t1 / r.time,
+            r.chunks,
+            r.steals_ok,
+            r.steals_fail
+        );
+    }
+}
+
+fn cmd_sweep(args: &Args) {
+    let app_name = args.get_or("app", "synth-exp-dec");
+    let seed = args.get_u64("seed", harness::figures::SEED);
+    let threads = args.get_usize_list("threads", harness::speedup::THREADS);
+    let Some(app) = apps::make_app(app_name, seed) else {
+        eprintln!("unknown app '{app_name}'; available: {:?}", apps::APP_NAMES);
+        std::process::exit(2);
+    };
+    let spec = MachineSpec::default();
+    let loops = app.sim_loops();
+    let mut t = Table::new(["policy", "p", "time", "speedup"]);
+    let t_ref = harness::speedup::best_time(&spec, &loops, "guided", 1, seed);
+    for fam in PAPER_FAMILIES {
+        for pol in table2_grid(fam) {
+            for &p in &threads {
+                let tt = harness::speedup::sim_time(&spec, &loops, &pol, p, seed);
+                t.row([pol.name(), p.to_string(), format!("{tt:.0}"), f2(t_ref / tt)]);
+            }
+        }
+    }
+    println!("# sweep: {} (simulated)\n{}", app.name(), t.render());
+}
+
+fn cmd_list() {
+    println!("apps:     {:?}", apps::APP_NAMES);
+    println!("families: {PAPER_FAMILIES:?} (+ static, factoring, awf, hss)");
+    println!("figures:  {:?}", harness::NAMES);
+}

@@ -1,0 +1,242 @@
+//! Typed wrappers over the AOT artifacts: fixed-shape kernel
+//! executions with padding/unpadding, so L3 code can hand arbitrary
+//! chunk-sized work to the PJRT executables.
+//!
+//! Shape constants mirror `python/compile/model.py::AOT_SHAPES`
+//! (asserted against artifacts/manifest.json in the tests).
+
+use anyhow::Result;
+
+use super::{lit_f32_1d, lit_f32_2d, lit_i32_2d, XlaRuntime};
+use crate::sparse::CsrMatrix;
+
+/// AOT shape contract for `spmv_ell`.
+pub const SPMV_ROWS: usize = 512;
+pub const SPMV_WIDTH: usize = 16;
+pub const SPMV_N: usize = 8192;
+
+/// AOT shape contract for `kmeans_assign`.
+pub const KMEANS_POINTS: usize = 1024;
+pub const KMEANS_DIM: usize = 34;
+pub const KMEANS_K: usize = 16;
+
+/// AOT shape contract for `lavamd_force`.
+pub const LAVAMD_HOME: usize = 64;
+pub const LAVAMD_NEIGH: usize = 1728;
+
+/// High-level kernel facade (owns the runtime + executable cache).
+pub struct Kernels {
+    rt: XlaRuntime,
+}
+
+impl Kernels {
+    pub fn new(rt: XlaRuntime) -> Kernels {
+        Kernels { rt }
+    }
+
+    /// Open from the default artifact dir; None if artifacts missing.
+    pub fn open_default() -> Option<Kernels> {
+        let rt = XlaRuntime::new(XlaRuntime::default_dir()).ok()?;
+        if rt.artifacts_available() {
+            Some(Kernels::new(rt))
+        } else {
+            None
+        }
+    }
+
+    /// SpMV for a row range of a CSR matrix via the ELL artifact:
+    /// processes `rows` in SPMV_ROWS-sized tiles; rows wider than
+    /// SPMV_WIDTH are rejected (callers use suitably regular inputs —
+    /// the e2e example generates one).
+    pub fn spmv_rows(&mut self, a: &CsrMatrix, x: &[f32], rows: std::ops::Range<usize>) -> Result<Vec<f32>> {
+        anyhow::ensure!(x.len() <= SPMV_N, "x length {} exceeds AOT N {SPMV_N}", x.len());
+        let mut xp = vec![0.0f32; SPMV_N];
+        xp[..x.len()].copy_from_slice(x);
+        let xl = lit_f32_1d(&xp);
+
+        let mut out = Vec::with_capacity(rows.len());
+        let mut lo = rows.start;
+        while lo < rows.end {
+            let hi = (lo + SPMV_ROWS).min(rows.end);
+            // Pack the tile into ELL.
+            let mut values = vec![0.0f32; SPMV_ROWS * SPMV_WIDTH];
+            let mut cols = vec![0i32; SPMV_ROWS * SPMV_WIDTH];
+            for (ti, r) in (lo..hi).enumerate() {
+                let nnz = a.row_nnz(r);
+                anyhow::ensure!(nnz <= SPMV_WIDTH, "row {r} has {nnz} > ELL width {SPMV_WIDTH}");
+                for (k, (&c, &v)) in a.row_cols(r).iter().zip(a.row_vals(r)).enumerate() {
+                    values[ti * SPMV_WIDTH + k] = v;
+                    cols[ti * SPMV_WIDTH + k] = c as i32;
+                }
+            }
+            let exe = self.rt.load("spmv_ell")?;
+            let outs = exe.run(&[
+                lit_f32_2d(&values, SPMV_ROWS, SPMV_WIDTH)?,
+                lit_i32_2d(&cols, SPMV_ROWS, SPMV_WIDTH)?,
+                xl.clone(),
+            ])?;
+            let y: Vec<f32> = outs[0].to_vec()?;
+            out.extend_from_slice(&y[..hi - lo]);
+            lo = hi;
+        }
+        Ok(out)
+    }
+
+    /// K-Means assignment for a point range (points flattened n×d,
+    /// d ≤ KMEANS_DIM, k ≤ KMEANS_K). Returns centroid ids.
+    pub fn kmeans_assign(
+        &mut self,
+        points: &[f32],
+        d: usize,
+        centroids: &[f32],
+        k: usize,
+        range: std::ops::Range<usize>,
+    ) -> Result<Vec<u32>> {
+        anyhow::ensure!(d <= KMEANS_DIM, "dim {d} exceeds AOT {KMEANS_DIM}");
+        anyhow::ensure!(k <= KMEANS_K && k > 0, "k {k} exceeds AOT {KMEANS_K}");
+        // Pad centroids to (K, D); pad rows duplicate centroid 0 *far
+        // away* so they never win argmin.
+        let mut cp = vec![1.0e30f32; KMEANS_K * KMEANS_DIM];
+        for j in 0..k {
+            for f in 0..d {
+                cp[j * KMEANS_DIM + f] = centroids[j * d + f];
+            }
+            for f in d..KMEANS_DIM {
+                cp[j * KMEANS_DIM + f] = 0.0;
+            }
+        }
+        let cl = lit_f32_2d(&cp, KMEANS_K, KMEANS_DIM)?;
+
+        let mut out = Vec::with_capacity(range.len());
+        let mut lo = range.start;
+        while lo < range.end {
+            let hi = (lo + KMEANS_POINTS).min(range.end);
+            let mut pp = vec![0.0f32; KMEANS_POINTS * KMEANS_DIM];
+            for (ti, i) in (lo..hi).enumerate() {
+                for f in 0..d {
+                    pp[ti * KMEANS_DIM + f] = points[i * d + f];
+                }
+            }
+            let exe = self.rt.load("kmeans_assign")?;
+            let outs = exe.run(&[lit_f32_2d(&pp, KMEANS_POINTS, KMEANS_DIM)?, cl.clone()])?;
+            let assign: Vec<i32> = outs[0].to_vec()?;
+            out.extend(assign[..hi - lo].iter().map(|&a| a as u32));
+            lo = hi;
+        }
+        Ok(out)
+    }
+
+    /// LavaMD force for one box: `home` (≤ LAVAMD_HOME particles of
+    /// x,y,z,q) against `neigh` (≤ LAVAMD_NEIGH). Padded with q = 0.
+    pub fn lavamd_force(&mut self, home: &[[f32; 4]], neigh: &[[f32; 4]]) -> Result<Vec<f32>> {
+        anyhow::ensure!(home.len() <= LAVAMD_HOME, "home {} > {LAVAMD_HOME}", home.len());
+        anyhow::ensure!(neigh.len() <= LAVAMD_NEIGH, "neigh {} > {LAVAMD_NEIGH}", neigh.len());
+        let mut hp = vec![0.0f32; LAVAMD_HOME * 4];
+        for (i, p) in home.iter().enumerate() {
+            hp[i * 4..i * 4 + 4].copy_from_slice(p);
+        }
+        let mut gp = vec![0.0f32; LAVAMD_NEIGH * 4];
+        for (i, p) in neigh.iter().enumerate() {
+            gp[i * 4..i * 4 + 4].copy_from_slice(p);
+        }
+        let exe = self.rt.load("lavamd_force")?;
+        let outs = exe.run(&[
+            lit_f32_2d(&hp, LAVAMD_HOME, 4)?,
+            lit_f32_2d(&gp, LAVAMD_NEIGH, 4)?,
+        ])?;
+        let f: Vec<f32> = outs[0].to_vec()?;
+        Ok(f[..home.len()].to_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen;
+
+    fn kernels() -> Option<Kernels> {
+        let k = Kernels::open_default();
+        if k.is_none() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        }
+        k
+    }
+
+    #[test]
+    fn manifest_matches_shape_constants() {
+        let dir = XlaRuntime::default_dir();
+        let Ok(m) = std::fs::read_to_string(dir.join("manifest.json")) else {
+            eprintln!("skipping: no manifest");
+            return;
+        };
+        for needle in [
+            format!("\"rows\": {SPMV_ROWS}"),
+            format!("\"width\": {SPMV_WIDTH}"),
+            format!("\"n\": {SPMV_N}"),
+            format!("\"points\": {KMEANS_POINTS}"),
+            format!("\"dim\": {KMEANS_DIM}"),
+            format!("\"k\": {KMEANS_K}"),
+            format!("\"home\": {LAVAMD_HOME}"),
+            format!("\"neigh\": {LAVAMD_NEIGH}"),
+        ] {
+            assert!(m.contains(&needle), "manifest missing {needle}");
+        }
+    }
+
+    #[test]
+    fn spmv_kernel_matches_rust_reference() {
+        let Some(mut k) = kernels() else { return };
+        let a = gen::regular_random(1000, 8, 2, 42); // width ≤ 10 < 16
+        let x: Vec<f32> = (0..1000).map(|i| (i % 7) as f32 - 3.0).collect();
+        let y = k.spmv_rows(&a, &x, 0..1000).unwrap();
+        let mut want = vec![0.0f32; 1000];
+        a.spmv_seq(&x, &mut want);
+        for r in 0..1000 {
+            assert!(
+                (y[r] - want[r]).abs() <= 1e-4 * want[r].abs().max(1.0),
+                "row {r}: {} vs {}",
+                y[r],
+                want[r]
+            );
+        }
+    }
+
+    #[test]
+    fn spmv_rejects_wide_rows() {
+        let Some(mut k) = kernels() else { return };
+        let a = gen::spike(100, 2, 1, 50, 7); // spike row has ~50 nnz
+        let x = vec![1.0f32; 100];
+        assert!(k.spmv_rows(&a, &x, 0..100).is_err());
+    }
+
+    #[test]
+    fn kmeans_kernel_assigns_nearest() {
+        let Some(mut k) = kernels() else { return };
+        let d = 4usize;
+        // two well-separated centroids
+        let centroids = vec![0.0f32, 0.0, 0.0, 0.0, 10.0, 10.0, 10.0, 10.0];
+        let mut points = Vec::new();
+        for i in 0..100 {
+            let base = if i % 2 == 0 { 0.0 } else { 10.0 };
+            for f in 0..d {
+                points.push(base + (f as f32) * 0.01);
+            }
+        }
+        let a = k.kmeans_assign(&points, d, &centroids, 2, 0..100).unwrap();
+        for (i, &c) in a.iter().enumerate() {
+            assert_eq!(c, (i % 2) as u32, "point {i}");
+        }
+    }
+
+    #[test]
+    fn lavamd_kernel_matches_rust_reference() {
+        let Some(mut k) = kernels() else { return };
+        // Hand-computed tiny case: two particles, within cutoff.
+        let home = vec![[0.0f32, 0.0, 0.0, 1.0]];
+        let neigh = vec![[0.5f32, 0.0, 0.0, 2.0]];
+        let f = k.lavamd_force(&home, &neigh).unwrap();
+        let r2 = 0.25f32;
+        let want = 1.0 * 2.0 * (-r2).exp() / (r2 + 0.05);
+        assert!((f[0] - want).abs() < 1e-4, "{} vs {want}", f[0]);
+    }
+}

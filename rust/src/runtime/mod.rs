@@ -1,0 +1,148 @@
+//! PJRT runtime bridge: loads the AOT-compiled JAX/Pallas artifacts
+//! (`artifacts/*.hlo.txt`, produced once by `make artifacts`) and
+//! executes them from the Rust hot path. Python never runs at request
+//! time — the HLO text is the entire interface.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `compile` → `execute`, with
+//! `return_tuple=True` lowering unwrapped via `to_tuple()`.
+
+pub mod kernels;
+pub mod service;
+
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A compiled executable plus its artifact name.
+pub struct Executable {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with literal inputs; returns the flattened tuple outputs.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("execute {}", self.name))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetch result of {}", self.name))?;
+        // aot.py lowers with return_tuple=True: unpack the tuple.
+        out.to_tuple().with_context(|| format!("untuple result of {}", self.name))
+    }
+}
+
+/// The PJRT CPU runtime with a cache of loaded executables.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: HashMap<String, Executable>,
+}
+
+impl XlaRuntime {
+    /// Create a CPU-backed runtime rooted at an artifact directory.
+    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<XlaRuntime> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(XlaRuntime { client, dir: artifact_dir.as_ref().to_path_buf(), cache: HashMap::new() })
+    }
+
+    /// Locate the repo's artifact dir (walks up from cwd; tests run
+    /// from the crate root, binaries may run elsewhere).
+    pub fn default_dir() -> PathBuf {
+        for base in ["artifacts", "../artifacts", "../../artifacts"] {
+            let p = PathBuf::from(base);
+            if p.join("manifest.json").exists() {
+                return p;
+            }
+        }
+        PathBuf::from("artifacts")
+    }
+
+    /// Do the artifacts exist (i.e. has `make artifacts` been run)?
+    pub fn artifacts_available(&self) -> bool {
+        self.dir.join("manifest.json").exists()
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an artifact by model name (cached).
+    pub fn load(&mut self, name: &str) -> Result<&Executable> {
+        if !self.cache.contains_key(name) {
+            let path = self.dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path not utf-8")?,
+            )
+            .with_context(|| format!("parse HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp).with_context(|| format!("compile {name}"))?;
+            self.cache.insert(name.to_string(), Executable { name: name.to_string(), exe });
+        }
+        Ok(&self.cache[name])
+    }
+}
+
+/// Helpers to build literals in the shapes the kernels expect.
+pub fn lit_f32_2d(data: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+    anyhow::ensure!(data.len() == rows * cols, "shape mismatch");
+    Ok(xla::Literal::vec1(data).reshape(&[rows as i64, cols as i64])?)
+}
+
+pub fn lit_i32_2d(data: &[i32], rows: usize, cols: usize) -> Result<xla::Literal> {
+    anyhow::ensure!(data.len() == rows * cols, "shape mismatch");
+    Ok(xla::Literal::vec1(data).reshape(&[rows as i64, cols as i64])?)
+}
+
+pub fn lit_f32_1d(data: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime() -> Option<XlaRuntime> {
+        let rt = XlaRuntime::new(XlaRuntime::default_dir()).ok()?;
+        if rt.artifacts_available() {
+            Some(rt)
+        } else {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            None
+        }
+    }
+
+    #[test]
+    fn platform_is_cpu() {
+        let Some(rt) = runtime() else { return };
+        assert!(rt.platform().to_lowercase().contains("cpu"), "{}", rt.platform());
+    }
+
+    #[test]
+    fn loads_and_caches_all_models() {
+        let Some(mut rt) = runtime() else { return };
+        for name in ["spmv_ell", "kmeans_assign", "lavamd_force"] {
+            rt.load(name).unwrap_or_else(|e| panic!("{name}: {e:#}"));
+        }
+        assert_eq!(rt.cache.len(), 3);
+        // second load hits the cache
+        rt.load("spmv_ell").unwrap();
+        assert_eq!(rt.cache.len(), 3);
+    }
+
+    #[test]
+    fn missing_artifact_errors() {
+        let Some(mut rt) = runtime() else { return };
+        assert!(rt.load("does_not_exist").is_err());
+    }
+
+    #[test]
+    fn literal_builders_validate_shape() {
+        assert!(lit_f32_2d(&[1.0, 2.0], 2, 2).is_err());
+        assert!(lit_f32_2d(&[1.0; 6], 2, 3).is_ok());
+        assert!(lit_i32_2d(&[1; 4], 2, 2).is_ok());
+    }
+}

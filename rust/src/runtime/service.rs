@@ -1,0 +1,182 @@
+//! Kernel service: the PJRT client (which is `Rc`-based and not
+//! `Send`) lives on one dedicated executor thread; scheduler workers
+//! talk to it through a cloneable, `Send` handle. This is the same
+//! shape a production serving stack uses — a device-owning executor
+//! fed by a pool of request-handling threads.
+
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+
+use anyhow::{anyhow, Result};
+
+use super::kernels::Kernels;
+use crate::sparse::CsrMatrix;
+
+enum Req {
+    Spmv { values: Vec<f32>, cols: Vec<i32>, rows: usize, x: Vec<f32>, reply: SyncSender<Result<Vec<f32>>> },
+    Kmeans { points: Vec<f32>, d: usize, centroids: Vec<f32>, k: usize, reply: SyncSender<Result<Vec<u32>>> },
+    Lavamd { home: Vec<[f32; 4]>, neigh: Vec<[f32; 4]>, reply: SyncSender<Result<Vec<f32>>> },
+    Shutdown,
+}
+
+/// Cloneable, Send handle to the executor thread.
+#[derive(Clone)]
+pub struct KernelHandle {
+    tx: SyncSender<Req>,
+}
+
+/// The executor thread + its handle; dropping `KernelService` shuts
+/// the thread down.
+pub struct KernelService {
+    handle: KernelHandle,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl KernelService {
+    /// Spawn the executor; None if artifacts are missing.
+    pub fn spawn() -> Option<KernelService> {
+        // Probe availability on the caller thread first (cheap).
+        if !crate::runtime::XlaRuntime::new(crate::runtime::XlaRuntime::default_dir())
+            .map(|rt| rt.artifacts_available())
+            .unwrap_or(false)
+        {
+            return None;
+        }
+        let (tx, rx) = sync_channel::<Req>(64);
+        let join = std::thread::spawn(move || executor(rx));
+        Some(KernelService { handle: KernelHandle { tx }, join: Some(join) })
+    }
+
+    pub fn handle(&self) -> KernelHandle {
+        self.handle.clone()
+    }
+}
+
+impl Drop for KernelService {
+    fn drop(&mut self) {
+        let _ = self.handle.tx.send(Req::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn executor(rx: Receiver<Req>) {
+    let Some(mut kernels) = Kernels::open_default() else { return };
+    while let Ok(req) = rx.recv() {
+        match req {
+            Req::Spmv { values, cols, rows, x, reply } => {
+                let _ = reply.send(run_spmv(&mut kernels, &values, &cols, rows, &x));
+            }
+            Req::Kmeans { points, d, centroids, k, reply } => {
+                let r = kernels.kmeans_assign(&points, d, &centroids, k, 0..points.len() / d);
+                let _ = reply.send(r);
+            }
+            Req::Lavamd { home, neigh, reply } => {
+                let _ = reply.send(kernels.lavamd_force(&home, &neigh));
+            }
+            Req::Shutdown => return,
+        }
+    }
+}
+
+fn run_spmv(kernels: &mut Kernels, values: &[f32], cols: &[i32], rows: usize, x: &[f32]) -> Result<Vec<f32>> {
+    // Rebuild a CSR view from the packed rows (width = len/rows).
+    let width = values.len() / rows.max(1);
+    let mut t = Vec::new();
+    for r in 0..rows {
+        for w in 0..width {
+            let v = values[r * width + w];
+            if v != 0.0 {
+                t.push((r, cols[r * width + w] as usize, v));
+            }
+        }
+    }
+    let a = CsrMatrix::from_triplets(rows, x.len(), t);
+    kernels.spmv_rows(&a, x, 0..rows)
+}
+
+impl KernelHandle {
+    /// SpMV of a row range, shipped as packed ELL rows.
+    pub fn spmv_rows(&self, a: &CsrMatrix, x: &[f32], rows: std::ops::Range<usize>) -> Result<Vec<f32>> {
+        let nrows = rows.len();
+        let width = rows.clone().map(|r| a.row_nnz(r)).max().unwrap_or(1).max(1);
+        let mut values = vec![0.0f32; nrows * width];
+        let mut cols = vec![0i32; nrows * width];
+        for (ti, r) in rows.enumerate() {
+            for (k, (&c, &v)) in a.row_cols(r).iter().zip(a.row_vals(r)).enumerate() {
+                values[ti * width + k] = v;
+                cols[ti * width + k] = c as i32;
+            }
+        }
+        let (reply, rx) = sync_channel(1);
+        self.tx
+            .send(Req::Spmv { values, cols, rows: nrows, x: x.to_vec(), reply })
+            .map_err(|_| anyhow!("kernel service down"))?;
+        rx.recv().map_err(|_| anyhow!("kernel service died"))?
+    }
+
+    /// K-Means assignment for a slice of points (flattened n×d).
+    pub fn kmeans_assign(&self, points: &[f32], d: usize, centroids: &[f32], k: usize) -> Result<Vec<u32>> {
+        let (reply, rx) = sync_channel(1);
+        self.tx
+            .send(Req::Kmeans { points: points.to_vec(), d, centroids: centroids.to_vec(), k, reply })
+            .map_err(|_| anyhow!("kernel service down"))?;
+        rx.recv().map_err(|_| anyhow!("kernel service died"))?
+    }
+
+    /// LavaMD force for one box.
+    pub fn lavamd_force(&self, home: &[[f32; 4]], neigh: &[[f32; 4]]) -> Result<Vec<f32>> {
+        let (reply, rx) = sync_channel(1);
+        self.tx
+            .send(Req::Lavamd { home: home.to_vec(), neigh: neigh.to_vec(), reply })
+            .map_err(|_| anyhow!("kernel service down"))?;
+        rx.recv().map_err(|_| anyhow!("kernel service died"))?
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen;
+
+    #[test]
+    fn service_roundtrip_from_worker_threads() {
+        let Some(svc) = KernelService::spawn() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let a = gen::regular_random(512, 6, 2, 9);
+        let x: Vec<f32> = (0..512).map(|i| (i % 5) as f32).collect();
+        let mut want = vec![0.0f32; 512];
+        a.spmv_seq(&x, &mut want);
+
+        let h = svc.handle();
+        std::thread::scope(|s| {
+            for t in 0..2 {
+                let h = h.clone();
+                let (a, x, want) = (&a, &x, &want);
+                s.spawn(move || {
+                    let lo = t * 256;
+                    let y = h.spmv_rows(a, x, lo..lo + 256).unwrap();
+                    for (i, v) in y.iter().enumerate() {
+                        let w = want[lo + i];
+                        assert!((v - w).abs() <= 1e-4 * w.abs().max(1.0), "row {}", lo + i);
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn kmeans_via_service() {
+        let Some(svc) = KernelService::spawn() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let h = svc.handle();
+        let points = vec![0.0f32, 0.0, 9.0, 9.0, 0.1, 0.1]; // 3 points, d=2
+        let cents = vec![0.0f32, 0.0, 10.0, 10.0];
+        let a = h.kmeans_assign(&points, 2, &cents, 2).unwrap();
+        assert_eq!(a, vec![0, 1, 0]);
+    }
+}

@@ -1,0 +1,109 @@
+//! BinLPT (Penna et al. 2019): the workload-aware baseline.
+//!
+//! Offline phase: split the iteration space into ≤ `max_chunks`
+//! contiguous chunks of near-equal estimated workload and LPT-assign
+//! them to threads (`policy::binlpt_partition`). Online phase: each
+//! thread runs its assigned chunks; when it runs out it claims
+//! not-yet-started chunks from other threads' lists (the "simple chunk
+//! self-scheduling" second level the paper describes).
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicBool, Ordering::SeqCst};
+
+use super::metrics::MetricsSink;
+use super::policy;
+
+pub fn run_binlpt(
+    weights: &[f64],
+    p: usize,
+    pin: bool,
+    max_chunks: usize,
+    body: &(dyn Fn(Range<usize>) + Sync),
+    sink: &MetricsSink,
+) {
+    let n = weights.len();
+    if n == 0 {
+        return;
+    }
+    let (chunks, assign) = policy::binlpt_partition(weights, max_chunks, p);
+    let claimed: Vec<AtomicBool> = (0..chunks.len()).map(|_| AtomicBool::new(false)).collect();
+
+    super::pool::scoped_run(p, pin, |tid| {
+        // Phase 1: our own LPT-assigned chunks.
+        for &ci in &assign[tid] {
+            if claim(&claimed, ci) {
+                let (a, b) = chunks[ci];
+                body(a..b);
+                sink.add_chunk(tid, (b - a) as u64);
+            }
+        }
+        // Phase 2: rebalance — claim any chunk not yet started.
+        for ci in 0..chunks.len() {
+            if claim(&claimed, ci) {
+                let (a, b) = chunks[ci];
+                body(a..b);
+                sink.add_chunk(tid, (b - a) as u64);
+            }
+        }
+    });
+}
+
+#[inline]
+fn claim(claimed: &[AtomicBool], ci: usize) -> bool {
+    !claimed[ci].swap(true, SeqCst)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    fn check(n: usize, p: usize, k: usize, weights: &[f64]) {
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        let sink = MetricsSink::new(p);
+        run_binlpt(
+            weights,
+            p,
+            false,
+            k,
+            &|r| {
+                for i in r {
+                    hits[i].fetch_add(1, SeqCst);
+                }
+            },
+            &sink,
+        );
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(SeqCst), 1, "iter {i}");
+        }
+    }
+
+    #[test]
+    fn covers_uniform() {
+        check(100, 4, 16, &vec![1.0; 100]);
+    }
+
+    #[test]
+    fn covers_skewed() {
+        let mut w = vec![1.0; 200];
+        w[0] = 1000.0;
+        w[199] = 500.0;
+        check(200, 4, 32, &w);
+    }
+
+    #[test]
+    fn covers_more_chunks_than_iters() {
+        check(5, 3, 128, &vec![2.0; 5]);
+    }
+
+    #[test]
+    fn covers_one_thread() {
+        check(50, 1, 8, &vec![1.0; 50]);
+    }
+
+    #[test]
+    fn empty_noop() {
+        let sink = MetricsSink::new(2);
+        run_binlpt(&[], 2, false, 8, &|_r| panic!("no work"), &sink);
+    }
+}

@@ -1,0 +1,213 @@
+//! Central-queue self-schedulers: OpenMP-style `static`, `dynamic`,
+//! `guided`, `taskloop`, and Factoring (FSS). These are the paper's
+//! baselines that draw chunks from one shared queue (§2.1).
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering::SeqCst};
+
+use super::metrics::MetricsSink;
+use super::policy;
+
+/// `static`: thread t executes its contiguous block; no shared state.
+pub fn run_static(n: usize, p: usize, pin: bool, body: &(dyn Fn(Range<usize>) + Sync), sink: &MetricsSink) {
+    if n == 0 {
+        return;
+    }
+    let blocks = policy::static_blocks(n, p);
+    super::pool::scoped_run(p, pin, |tid| {
+        if let Some(&(a, b)) = blocks.get(tid) {
+            body(a..b);
+            sink.add_chunk(tid, (b - a) as u64);
+        }
+    });
+}
+
+/// `dynamic, chunk`: a shared counter; each grab takes `chunk`
+/// consecutive iterations (Chunk Self-Scheduling).
+pub fn run_dynamic(
+    n: usize,
+    p: usize,
+    pin: bool,
+    chunk: usize,
+    body: &(dyn Fn(Range<usize>) + Sync),
+    sink: &MetricsSink,
+) {
+    if n == 0 {
+        return;
+    }
+    let chunk = chunk.max(1);
+    let next = AtomicUsize::new(0);
+    super::pool::scoped_run(p, pin, |tid| loop {
+        let b = next.fetch_add(chunk, SeqCst);
+        if b >= n {
+            return;
+        }
+        let e = (b + chunk).min(n);
+        body(b..e);
+        sink.add_chunk(tid, (e - b) as u64);
+    });
+}
+
+/// `guided, min_chunk`: chunk = max(remaining/p, min_chunk), claimed
+/// with a CAS loop (Guided Self-Scheduling; the Load Imbalance
+/// Amortization Principle).
+pub fn run_guided(
+    n: usize,
+    p: usize,
+    pin: bool,
+    min_chunk: usize,
+    body: &(dyn Fn(Range<usize>) + Sync),
+    sink: &MetricsSink,
+) {
+    if n == 0 {
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    super::pool::scoped_run(p, pin, |tid| loop {
+        let mut b = next.load(SeqCst);
+        let e = loop {
+            if b >= n {
+                return;
+            }
+            let c = policy::guided_chunk(n - b, p, min_chunk);
+            match next.compare_exchange_weak(b, b + c, SeqCst, SeqCst) {
+                Ok(_) => break b + c,
+                Err(cur) => b = cur,
+            }
+        };
+        body(b..e);
+        sink.add_chunk(tid, (e - b) as u64);
+    });
+}
+
+/// Execute a precomputed chunk list from a shared index — the engine
+/// behind `taskloop` and Factoring.
+pub fn run_chunk_list(
+    chunks: &[(usize, usize)],
+    p: usize,
+    pin: bool,
+    body: &(dyn Fn(Range<usize>) + Sync),
+    sink: &MetricsSink,
+) {
+    let next = AtomicUsize::new(0);
+    super::pool::scoped_run(p, pin, |tid| loop {
+        let i = next.fetch_add(1, SeqCst);
+        let Some(&(a, b)) = chunks.get(i) else { return };
+        body(a..b);
+        sink.add_chunk(tid, (b - a) as u64);
+    });
+}
+
+/// `taskloop num_tasks(t)`: n iterations pre-split into t contiguous
+/// tasks, executed by whichever thread grabs them (the OpenMP 4.5
+/// construct the paper tests with num_tasks = num_threads).
+pub fn run_taskloop(
+    n: usize,
+    p: usize,
+    pin: bool,
+    num_tasks: usize,
+    body: &(dyn Fn(Range<usize>) + Sync),
+    sink: &MetricsSink,
+) {
+    if n == 0 {
+        return;
+    }
+    let tasks = policy::taskloop_chunks(n, if num_tasks == 0 { p } else { num_tasks });
+    run_chunk_list(&tasks, p, pin, body, sink);
+}
+
+/// Factoring Self-Scheduling (FSS): batched decaying chunk sizes.
+pub fn run_factoring(
+    n: usize,
+    p: usize,
+    pin: bool,
+    alpha: f64,
+    body: &(dyn Fn(Range<usize>) + Sync),
+    sink: &MetricsSink,
+) {
+    if n == 0 {
+        return;
+    }
+    let chunks = policy::factoring_chunks(n, p, alpha);
+    run_chunk_list(&chunks, p, pin, body, sink);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    fn check_exactly_once(n: usize, p: usize, run: impl FnOnce(&(dyn Fn(Range<usize>) + Sync), &MetricsSink)) {
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        let sink = MetricsSink::new(p);
+        run(
+            &|r: Range<usize>| {
+                for i in r {
+                    hits[i].fetch_add(1, SeqCst);
+                }
+            },
+            &sink,
+        );
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(SeqCst), 1, "iter {i}");
+        }
+        assert_eq!(sink.collect(std::time::Duration::ZERO).total_iters, n as u64);
+    }
+
+    #[test]
+    fn static_covers() {
+        for &(n, p) in &[(1usize, 1usize), (100, 4), (7, 16), (1000, 3)] {
+            check_exactly_once(n, p, |b, s| run_static(n, p, false, b, s));
+        }
+    }
+
+    #[test]
+    fn dynamic_covers() {
+        for &(n, p, c) in &[(100usize, 4usize, 1usize), (100, 4, 3), (1000, 7, 64), (5, 8, 2)] {
+            check_exactly_once(n, p, |b, s| run_dynamic(n, p, false, c, b, s));
+        }
+    }
+
+    #[test]
+    fn guided_covers_and_decays() {
+        check_exactly_once(1000, 4, |b, s| run_guided(1000, 4, false, 1, b, s));
+        // Single-threaded guided should issue remaining/1-sized chunk:
+        // i.e. everything at once.
+        let sink = MetricsSink::new(1);
+        run_guided(64, 1, false, 1, &|_r| {}, &sink);
+        let m = sink.collect(std::time::Duration::ZERO);
+        assert_eq!(m.total_chunks, 1);
+    }
+
+    #[test]
+    fn taskloop_covers() {
+        for &(n, p, t) in &[(100usize, 4usize, 0usize), (100, 4, 16), (10, 4, 100)] {
+            check_exactly_once(n, p, |b, s| run_taskloop(n, p, false, t, b, s));
+        }
+    }
+
+    #[test]
+    fn taskloop_default_num_tasks_is_p() {
+        let sink = MetricsSink::new(4);
+        run_taskloop(100, 4, false, 0, &|_r| {}, &sink);
+        assert_eq!(sink.collect(std::time::Duration::ZERO).total_chunks, 4);
+    }
+
+    #[test]
+    fn factoring_covers() {
+        for &(n, p) in &[(1000usize, 4usize), (17, 3), (1, 8)] {
+            check_exactly_once(n, p, |b, s| run_factoring(n, p, false, 2.0, b, s));
+        }
+    }
+
+    #[test]
+    fn zero_iterations_noop() {
+        let sink = MetricsSink::new(2);
+        let panic_body = |_r: Range<usize>| panic!("must not run");
+        run_static(0, 2, false, &panic_body, &sink);
+        run_dynamic(0, 2, false, 1, &panic_body, &sink);
+        run_guided(0, 2, false, 1, &panic_body, &sink);
+        run_taskloop(0, 2, false, 0, &panic_body, &sink);
+        run_factoring(0, 2, false, 2.0, &panic_body, &sink);
+    }
+}

@@ -1,0 +1,214 @@
+//! THE-protocol iteration-range deque (paper §3.3, Listing 1).
+//!
+//! Each worker owns a contiguous iteration range `[begin, end)`. The
+//! owner dispatches chunks from the `begin` side without taking a lock
+//! on the fast path; thieves cut `halfsize` iterations off the `end`
+//! side under the queue's mutex, rolling back if the owner raced past
+//! (Listing 1 lines 12–16). This mirrors Cilk's THE handshake: both
+//! sides publish with SeqCst stores and re-check the opposite index.
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering::SeqCst};
+use std::sync::Mutex;
+
+/// A work queue holding a single contiguous range of loop iterations.
+pub struct RangeDeque {
+    begin: AtomicUsize,
+    end: AtomicUsize,
+    lock: Mutex<()>,
+}
+
+impl RangeDeque {
+    pub fn new(range: Range<usize>) -> RangeDeque {
+        RangeDeque {
+            begin: AtomicUsize::new(range.start),
+            end: AtomicUsize::new(range.end),
+            lock: Mutex::new(()),
+        }
+    }
+
+    /// Remaining iterations (a racy estimate, used for chunk sizing and
+    /// steal-victim probing; exactness is not required).
+    #[inline]
+    pub fn remaining(&self) -> usize {
+        let e = self.end.load(SeqCst);
+        let b = self.begin.load(SeqCst);
+        e.saturating_sub(b)
+    }
+
+    /// Owner-side dispatch of up to `chunk` iterations. Lock-free on
+    /// the common path; falls back to the mutex only when a concurrent
+    /// thief cut `end` below our optimistic claim.
+    pub fn take(&self, chunk: usize) -> Option<Range<usize>> {
+        debug_assert!(chunk > 0);
+        let b = self.begin.load(SeqCst);
+        let nb = b.saturating_add(chunk);
+        // Optimistically claim [b, nb): only the owner writes `begin`,
+        // so a plain store is safe with respect to other owners.
+        self.begin.store(nb, SeqCst);
+        let e = self.end.load(SeqCst);
+        if nb <= e {
+            return Some(b..nb); // fast path: no conflict
+        }
+        // Conflict: a thief moved `end` (or the queue is empty).
+        // Resolve under the lock, exactly like the THE slow path.
+        let _g = self.lock.lock().unwrap();
+        let e = self.end.load(SeqCst);
+        if b >= e {
+            // Nothing left; undo the optimistic claim.
+            self.begin.store(b, SeqCst);
+            return None;
+        }
+        let take = chunk.min(e - b);
+        self.begin.store(b + take, SeqCst);
+        Some(b..b + take)
+    }
+
+    /// Thief-side steal of half the victim's remaining iterations
+    /// (Listing 1). Returns the stolen range, or None if the victim is
+    /// empty or the owner raced us (rollback).
+    pub fn steal_half(&self) -> Option<Range<usize>> {
+        let _g = self.lock.lock().unwrap();
+        let b = self.begin.load(SeqCst);
+        let e = self.end.load(SeqCst);
+        if e <= b {
+            return None; // line 2: nothing to steal
+        }
+        let half = (e - b).div_ceil(2); // line 4: half, at least 1
+        let ne = e - half;
+        self.end.store(ne, SeqCst); // line 11
+        // Re-check against the owner's (possibly concurrent) progress.
+        let b2 = self.begin.load(SeqCst);
+        if ne < b2 {
+            // lines 12–16: abort — roll the end pointer back.
+            self.end.store(e, SeqCst);
+            return None;
+        }
+        Some(ne..e)
+    }
+
+    /// Used by tests / metrics: true when all iterations dispatched.
+    pub fn is_empty(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    /// Re-home a stolen range into this (drained) queue so it becomes
+    /// visible for further stealing (Listing 1 lines 23–24). Taken
+    /// under the queue's own lock so concurrent thieves cannot observe
+    /// a torn begin/end pair; the owner is the caller, so no owner race
+    /// exists.
+    pub fn reset(&self, r: Range<usize>) {
+        let _g = self.lock.lock().unwrap();
+        debug_assert!(self.end.load(SeqCst) <= self.begin.load(SeqCst), "reset requires a drained queue");
+        // Order matters for lock-free readers of `remaining`: shrink
+        // first (end ≤ begin keeps it observably empty), then publish.
+        self.end.store(r.start, SeqCst);
+        self.begin.store(r.start, SeqCst);
+        self.end.store(r.end, SeqCst);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+    use std::sync::Arc;
+
+    #[test]
+    fn owner_drains_sequentially() {
+        let q = RangeDeque::new(0..10);
+        assert_eq!(q.take(4), Some(0..4));
+        assert_eq!(q.take(4), Some(4..8));
+        assert_eq!(q.take(4), Some(8..10)); // clamped
+        assert_eq!(q.take(4), None);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn steal_takes_half_rounding_up() {
+        let q = RangeDeque::new(0..10);
+        assert_eq!(q.steal_half(), Some(5..10)); // 10 left -> steal 5
+        assert_eq!(q.steal_half(), Some(2..5)); // 5 left -> steal ceil(5/2)=3
+        assert_eq!(q.steal_half(), Some(1..2)); // 2 left -> steal 1
+        assert_eq!(q.steal_half(), Some(0..1)); // 1 left -> steal 1
+        assert_eq!(q.steal_half(), None);
+    }
+
+    #[test]
+    fn interleaved_take_and_steal_disjoint() {
+        let q = RangeDeque::new(0..100);
+        let a = q.take(10).unwrap();
+        let s = q.steal_half().unwrap();
+        let b = q.take(10).unwrap();
+        assert_eq!(a, 0..10);
+        assert_eq!(s, 55..100);
+        assert_eq!(b, 10..20);
+    }
+
+    #[test]
+    fn concurrent_no_duplication_no_loss() {
+        // Hammer one queue with an owner and several thieves; every
+        // iteration must be claimed exactly once.
+        const N: usize = 100_000;
+        let q = Arc::new(RangeDeque::new(0..N));
+        let claimed: Arc<Vec<AtomicU64>> = Arc::new((0..N).map(|_| AtomicU64::new(0)).collect());
+
+        std::thread::scope(|s| {
+            // owner
+            {
+                let q = q.clone();
+                let claimed = claimed.clone();
+                s.spawn(move || {
+                    let mut c = 1usize;
+                    while let Some(r) = q.take(c) {
+                        for i in r {
+                            claimed[i].fetch_add(1, SeqCst);
+                        }
+                        c = (c % 7) + 1; // vary chunk size
+                    }
+                });
+            }
+            // thieves
+            for _ in 0..3 {
+                let q = q.clone();
+                let claimed = claimed.clone();
+                s.spawn(move || {
+                    let mut fails = 0;
+                    while fails < 1000 {
+                        match q.steal_half() {
+                            Some(r) => {
+                                fails = 0;
+                                for i in r {
+                                    claimed[i].fetch_add(1, SeqCst);
+                                }
+                            }
+                            None => {
+                                fails += 1;
+                                std::hint::spin_loop();
+                            }
+                        }
+                    }
+                });
+            }
+        });
+
+        for (i, c) in claimed.iter().enumerate() {
+            assert_eq!(c.load(SeqCst), 1, "iteration {i} claimed {} times", c.load(SeqCst));
+        }
+    }
+
+    #[test]
+    fn steal_after_drain_fails() {
+        let q = RangeDeque::new(0..4);
+        q.take(4).unwrap();
+        assert_eq!(q.steal_half(), None);
+    }
+
+    #[test]
+    fn empty_queue() {
+        let q = RangeDeque::new(5..5);
+        assert!(q.is_empty());
+        assert_eq!(q.take(1), None);
+        assert_eq!(q.steal_half(), None);
+    }
+}

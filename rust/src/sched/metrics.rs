@@ -1,0 +1,144 @@
+//! Scheduler run metrics: what the harness reports alongside times.
+//!
+//! Per-thread counters are kept in cache-line-padded slots so metric
+//! collection never introduces false sharing into the hot loop.
+
+use crossbeam_utils::CachePadded;
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+
+/// Per-thread counters, padded to a cache line.
+#[derive(Default)]
+pub struct ThreadCounters {
+    /// Chunks dispatched from the thread's own (or the central) queue.
+    pub chunks: AtomicU64,
+    /// Iterations executed by this thread.
+    pub iters: AtomicU64,
+    /// Successful steals performed by this thread.
+    pub steals_ok: AtomicU64,
+    /// Failed steal attempts (empty victim or THE rollback).
+    pub steals_failed: AtomicU64,
+}
+
+/// Shared metrics sink for one `parallel_for` invocation.
+pub struct MetricsSink {
+    pub per_thread: Vec<CachePadded<ThreadCounters>>,
+}
+
+impl MetricsSink {
+    pub fn new(p: usize) -> MetricsSink {
+        MetricsSink { per_thread: (0..p).map(|_| CachePadded::new(ThreadCounters::default())).collect() }
+    }
+
+    #[inline]
+    pub fn add_chunk(&self, tid: usize, iters: u64) {
+        let c = &self.per_thread[tid];
+        c.chunks.fetch_add(1, Relaxed);
+        c.iters.fetch_add(iters, Relaxed);
+    }
+
+    /// Bulk-accumulate a worker's locally-counted chunks/iterations
+    /// (hot paths count locally and flush once on exit).
+    #[inline]
+    pub fn add_bulk(&self, tid: usize, chunks: u64, iters: u64) {
+        let c = &self.per_thread[tid];
+        c.chunks.fetch_add(chunks, Relaxed);
+        c.iters.fetch_add(iters, Relaxed);
+    }
+
+    #[inline]
+    pub fn add_steal(&self, tid: usize, ok: bool) {
+        let c = &self.per_thread[tid];
+        if ok {
+            c.steals_ok.fetch_add(1, Relaxed);
+        } else {
+            c.steals_failed.fetch_add(1, Relaxed);
+        }
+    }
+
+    pub fn collect(&self, elapsed: std::time::Duration) -> RunMetrics {
+        let iters: Vec<u64> = self.per_thread.iter().map(|c| c.iters.load(Relaxed)).collect();
+        RunMetrics {
+            threads: self.per_thread.len(),
+            elapsed_s: elapsed.as_secs_f64(),
+            total_chunks: self.per_thread.iter().map(|c| c.chunks.load(Relaxed)).sum(),
+            total_iters: iters.iter().sum(),
+            steals_ok: self.per_thread.iter().map(|c| c.steals_ok.load(Relaxed)).sum(),
+            steals_failed: self.per_thread.iter().map(|c| c.steals_failed.load(Relaxed)).sum(),
+            iters_per_thread: iters,
+        }
+    }
+}
+
+/// Aggregated metrics for a completed parallel loop.
+#[derive(Clone, Debug, Default)]
+pub struct RunMetrics {
+    pub threads: usize,
+    pub elapsed_s: f64,
+    pub total_chunks: u64,
+    pub total_iters: u64,
+    pub steals_ok: u64,
+    pub steals_failed: u64,
+    pub iters_per_thread: Vec<u64>,
+}
+
+impl RunMetrics {
+    /// max/mean executed-iteration imbalance across threads (1.0 = perfect).
+    pub fn imbalance(&self) -> f64 {
+        if self.iters_per_thread.is_empty() || self.total_iters == 0 {
+            return 1.0;
+        }
+        let max = *self.iters_per_thread.iter().max().unwrap() as f64;
+        let mean = self.total_iters as f64 / self.threads as f64;
+        if mean == 0.0 { 1.0 } else { max / mean }
+    }
+
+    /// Mean iterations per dispatched chunk.
+    pub fn mean_chunk(&self) -> f64 {
+        if self.total_chunks == 0 { 0.0 } else { self.total_iters as f64 / self.total_chunks as f64 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn counters_aggregate() {
+        let m = MetricsSink::new(2);
+        m.add_chunk(0, 10);
+        m.add_chunk(1, 30);
+        m.add_steal(1, true);
+        m.add_steal(1, false);
+        let r = m.collect(Duration::from_millis(5));
+        assert_eq!(r.total_chunks, 2);
+        assert_eq!(r.total_iters, 40);
+        assert_eq!(r.steals_ok, 1);
+        assert_eq!(r.steals_failed, 1);
+        assert_eq!(r.iters_per_thread, vec![10, 30]);
+        assert!((r.elapsed_s - 0.005).abs() < 1e-9);
+    }
+
+    #[test]
+    fn imbalance_metric() {
+        let r = RunMetrics {
+            threads: 2,
+            total_iters: 40,
+            iters_per_thread: vec![10, 30],
+            ..Default::default()
+        };
+        assert!((r.imbalance() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mean_chunk_metric() {
+        let r = RunMetrics { total_iters: 100, total_chunks: 4, ..Default::default() };
+        assert_eq!(r.mean_chunk(), 25.0);
+        assert_eq!(RunMetrics::default().mean_chunk(), 0.0);
+    }
+
+    #[test]
+    fn empty_imbalance_is_one() {
+        assert_eq!(RunMetrics::default().imbalance(), 1.0);
+    }
+}

@@ -1,0 +1,302 @@
+//! L3 coordinator — the paper's contribution: a libgomp-like
+//! loop-scheduling runtime with pluggable self-scheduling policies.
+//!
+//! Entry point: [`parallel_for`] — schedule `n` loop iterations over
+//! `p` worker threads under a [`Policy`]. Bodies receive iteration
+//! *ranges* so per-chunk dispatch overhead is amortized exactly the way
+//! an OpenMP runtime amortizes it.
+//!
+//! Policies (paper Table 2 plus related-work extensions):
+//! `static`, `dynamic,c`, `guided,c`, `taskloop`, `factoring`,
+//! `binlpt,k` (workload-aware), `stealing,c` (fixed-chunk THE
+//! work-stealing), **`ich,ε` (the paper's method)**, `awf`, `hss`.
+
+pub mod binlpt;
+pub mod central;
+pub mod deque;
+pub mod metrics;
+pub mod policy;
+pub mod pool;
+pub mod related;
+pub mod ws;
+
+pub use metrics::{MetricsSink, RunMetrics};
+pub use ws::{IchParams, StealMerge};
+
+use std::ops::Range;
+
+/// A self-scheduling policy with its tuning parameters (paper Table 2).
+#[derive(Clone, Debug)]
+pub enum Policy {
+    /// Even block partition, no runtime scheduling.
+    Static,
+    /// OpenMP `schedule(dynamic, chunk)`.
+    Dynamic { chunk: usize },
+    /// OpenMP `schedule(guided, chunk)` (chunk = minimum).
+    Guided { chunk: usize },
+    /// OpenMP `taskloop num_tasks(t)`; `0` means `num_threads`.
+    Taskloop { num_tasks: usize },
+    /// Factoring Self-Scheduling with batch factor `alpha` (≈2).
+    Factoring { alpha: f64 },
+    /// BinLPT with at most `max_chunks` chunks (needs `weights`).
+    Binlpt { max_chunks: usize },
+    /// Fixed-chunk THE work-stealing (the paper's base algorithm).
+    Stealing { chunk: usize },
+    /// iCh — the paper's adaptive-chunk work-stealing (§3).
+    Ich(IchParams),
+    /// Adaptive Weighted Factoring (related work, §4).
+    Awf,
+    /// History-aware static partition (HSS-lite, related work, §4).
+    Hss,
+}
+
+impl Policy {
+    /// Canonical short name used by the CLI and result files.
+    pub fn name(&self) -> String {
+        match self {
+            Policy::Static => "static".into(),
+            Policy::Dynamic { chunk } => format!("dynamic,{chunk}"),
+            Policy::Guided { chunk } => format!("guided,{chunk}"),
+            Policy::Taskloop { num_tasks } => format!("taskloop,{num_tasks}"),
+            Policy::Factoring { alpha } => format!("factoring,{alpha}"),
+            Policy::Binlpt { max_chunks } => format!("binlpt,{max_chunks}"),
+            Policy::Stealing { chunk } => format!("stealing,{chunk}"),
+            Policy::Ich(p) => format!("ich,{}", p.eps),
+            Policy::Awf => "awf".into(),
+            Policy::Hss => "hss".into(),
+        }
+    }
+
+    /// Family name without parameters ("dynamic", "ich", ...).
+    pub fn family(&self) -> &'static str {
+        match self {
+            Policy::Static => "static",
+            Policy::Dynamic { .. } => "dynamic",
+            Policy::Guided { .. } => "guided",
+            Policy::Taskloop { .. } => "taskloop",
+            Policy::Factoring { .. } => "factoring",
+            Policy::Binlpt { .. } => "binlpt",
+            Policy::Stealing { .. } => "stealing",
+            Policy::Ich(_) => "ich",
+            Policy::Awf => "awf",
+            Policy::Hss => "hss",
+        }
+    }
+
+    /// Parse "family,param" strings, e.g. "ich,0.33" or "dynamic,2".
+    pub fn parse(s: &str) -> Option<Policy> {
+        let (fam, arg) = match s.split_once(',') {
+            Some((f, a)) => (f, Some(a)),
+            None => (s, None),
+        };
+        fn num<T: std::str::FromStr>(arg: Option<&str>, default: T) -> Option<T> {
+            match arg {
+                None => Some(default),
+                Some(a) => a.parse().ok(),
+            }
+        }
+        Some(match fam {
+            "static" => Policy::Static,
+            "dynamic" => Policy::Dynamic { chunk: num(arg, 1)? },
+            "guided" => Policy::Guided { chunk: num(arg, 1)? },
+            "taskloop" => Policy::Taskloop { num_tasks: num(arg, 0)? },
+            "factoring" => Policy::Factoring { alpha: num(arg, 2.0)? },
+            "binlpt" => Policy::Binlpt { max_chunks: num(arg, 384)? },
+            "stealing" => Policy::Stealing { chunk: num(arg, 1)? },
+            "ich" => Policy::Ich(IchParams::with_eps(num(arg, 0.33)?)),
+            "awf" => Policy::Awf,
+            "hss" => Policy::Hss,
+            _ => return None,
+        })
+    }
+
+    /// Does this policy require per-iteration workload estimates?
+    pub fn needs_weights(&self) -> bool {
+        matches!(self, Policy::Binlpt { .. } | Policy::Hss)
+    }
+}
+
+/// Options for a `parallel_for` run.
+#[derive(Clone, Debug)]
+pub struct ForOpts<'a> {
+    /// Worker thread count p.
+    pub threads: usize,
+    /// Pin threads to cores when the host has enough of them
+    /// (OMP_PROC_BIND=true analog).
+    pub pin: bool,
+    /// RNG seed for steal-victim selection (reproducibility).
+    pub seed: u64,
+    /// Per-iteration workload estimates — consumed only by
+    /// workload-aware policies (BinLPT, HSS).
+    pub weights: Option<&'a [f64]>,
+}
+
+impl Default for ForOpts<'_> {
+    fn default() -> Self {
+        ForOpts { threads: 1, pin: true, seed: 0x1C4, weights: None }
+    }
+}
+
+impl<'a> ForOpts<'a> {
+    pub fn threads(p: usize) -> Self {
+        ForOpts { threads: p, ..Default::default() }
+    }
+
+    pub fn with_weights(mut self, w: &'a [f64]) -> Self {
+        self.weights = Some(w);
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+}
+
+/// Schedule `n` iterations over the configured threads; `body`
+/// receives disjoint iteration ranges covering `0..n` exactly once.
+/// Returns timing + scheduling metrics.
+pub fn parallel_for(n: usize, policy: &Policy, opts: &ForOpts, body: &(dyn Fn(Range<usize>) + Sync)) -> RunMetrics {
+    let p = opts.threads.max(1);
+    let sink = MetricsSink::new(p);
+    let start = std::time::Instant::now();
+    match policy {
+        Policy::Static => central::run_static(n, p, opts.pin, body, &sink),
+        Policy::Dynamic { chunk } => central::run_dynamic(n, p, opts.pin, *chunk, body, &sink),
+        Policy::Guided { chunk } => central::run_guided(n, p, opts.pin, *chunk, body, &sink),
+        Policy::Taskloop { num_tasks } => central::run_taskloop(n, p, opts.pin, *num_tasks, body, &sink),
+        Policy::Factoring { alpha } => central::run_factoring(n, p, opts.pin, *alpha, body, &sink),
+        Policy::Binlpt { max_chunks } => {
+            let uniform;
+            let w = match opts.weights {
+                Some(w) => {
+                    assert_eq!(w.len(), n, "weights length must equal n");
+                    w
+                }
+                None => {
+                    // Workload-unaware fallback: uniform estimates.
+                    uniform = vec![1.0; n];
+                    &uniform
+                }
+            };
+            binlpt::run_binlpt(w, p, opts.pin, *max_chunks, body, &sink)
+        }
+        Policy::Stealing { chunk } => ws::run_stealing(n, p, opts.pin, *chunk, opts.seed, body, &sink),
+        Policy::Ich(prm) => ws::run_ich(n, p, opts.pin, *prm, opts.seed, body, &sink),
+        Policy::Awf => related::run_awf(n, p, opts.pin, body, &sink),
+        Policy::Hss => related::run_hss(n, p, opts.pin, opts.weights, body, &sink),
+    }
+    sink.collect(start.elapsed())
+}
+
+/// Convenience: per-iteration body.
+pub fn parallel_for_each(n: usize, policy: &Policy, opts: &ForOpts, f: &(dyn Fn(usize) + Sync)) -> RunMetrics {
+    parallel_for(n, policy, opts, &|r: Range<usize>| {
+        for i in r {
+            f(i)
+        }
+    })
+}
+
+/// The paper's Table 2 parameter grid for a policy family, used by the
+/// harness's best-over-params reporting (§6.1).
+pub fn table2_grid(family: &str) -> Vec<Policy> {
+    match family {
+        "static" => vec![Policy::Static],
+        "dynamic" => [1, 2, 3].iter().map(|&c| Policy::Dynamic { chunk: c }).collect(),
+        "guided" => [1, 2, 3].iter().map(|&c| Policy::Guided { chunk: c }).collect(),
+        "taskloop" => vec![Policy::Taskloop { num_tasks: 0 }],
+        "factoring" => vec![Policy::Factoring { alpha: 2.0 }],
+        "binlpt" => [128, 384, 576].iter().map(|&k| Policy::Binlpt { max_chunks: k }).collect(),
+        "stealing" => [1, 2, 3, 64].iter().map(|&c| Policy::Stealing { chunk: c }).collect(),
+        "ich" => [0.25, 0.33, 0.50].iter().map(|&e| Policy::Ich(IchParams::with_eps(e))).collect(),
+        "awf" => vec![Policy::Awf],
+        "hss" => vec![Policy::Hss],
+        _ => vec![],
+    }
+}
+
+/// The scheduler families the paper's figures compare.
+pub const PAPER_FAMILIES: &[&str] = &["guided", "dynamic", "taskloop", "binlpt", "stealing", "ich"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering::SeqCst};
+
+    fn all_policies() -> Vec<Policy> {
+        vec![
+            Policy::Static,
+            Policy::Dynamic { chunk: 2 },
+            Policy::Guided { chunk: 1 },
+            Policy::Taskloop { num_tasks: 0 },
+            Policy::Factoring { alpha: 2.0 },
+            Policy::Binlpt { max_chunks: 16 },
+            Policy::Stealing { chunk: 2 },
+            Policy::Ich(IchParams::default()),
+            Policy::Awf,
+            Policy::Hss,
+        ]
+    }
+
+    #[test]
+    fn every_policy_covers_exactly_once() {
+        let n = 500;
+        for policy in all_policies() {
+            let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+            let w: Vec<f64> = (0..n).map(|i| 1.0 + (i % 7) as f64).collect();
+            let opts = ForOpts { threads: 4, pin: false, seed: 1, weights: Some(&w) };
+            let m = parallel_for(n, &policy, &opts, &|r| {
+                for i in r {
+                    hits[i].fetch_add(1, SeqCst);
+                }
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(SeqCst), 1, "policy {} iter {i}", policy.name());
+            }
+            assert_eq!(m.total_iters, n as u64, "policy {}", policy.name());
+        }
+    }
+
+    #[test]
+    fn parse_round_trips() {
+        for s in ["static", "dynamic,2", "guided,3", "taskloop,0", "binlpt,384", "stealing,64", "ich,0.25", "awf", "hss"] {
+            let p = Policy::parse(s).unwrap();
+            assert_eq!(p.name(), s, "parse/name mismatch for {s}");
+        }
+        assert!(Policy::parse("nonsense").is_none());
+    }
+
+    #[test]
+    fn parse_defaults() {
+        assert_eq!(Policy::parse("dynamic").unwrap().name(), "dynamic,1");
+        assert_eq!(Policy::parse("ich").unwrap().name(), "ich,0.33");
+    }
+
+    #[test]
+    fn table2_grid_matches_paper() {
+        assert_eq!(table2_grid("dynamic").len(), 3);
+        assert_eq!(table2_grid("guided").len(), 3);
+        assert_eq!(table2_grid("binlpt").len(), 3);
+        assert_eq!(table2_grid("stealing").len(), 4);
+        assert_eq!(table2_grid("ich").len(), 3);
+        assert_eq!(table2_grid("taskloop").len(), 1);
+        assert!(table2_grid("unknown").is_empty());
+    }
+
+    #[test]
+    fn parallel_for_each_sums() {
+        let acc = AtomicU64::new(0);
+        parallel_for_each(100, &Policy::Ich(IchParams::default()), &ForOpts::threads(3), &|i| {
+            acc.fetch_add(i as u64, SeqCst);
+        });
+        assert_eq!(acc.load(SeqCst), 99 * 100 / 2);
+    }
+
+    #[test]
+    fn needs_weights_flags() {
+        assert!(Policy::Binlpt { max_chunks: 8 }.needs_weights());
+        assert!(Policy::Hss.needs_weights());
+        assert!(!Policy::Ich(IchParams::default()).needs_weights());
+    }
+}

@@ -1,0 +1,350 @@
+//! Shared scheduling-policy math.
+//!
+//! Both the real threaded runtime (`sched/`) and the discrete-event
+//! simulator (`sim/`) call these pure functions, so the two runtimes
+//! cannot drift apart on the paper's actual algorithm: iCh's
+//! classify/adapt rules (§3.2), the steal-time state averaging (§3.3),
+//! and the chunk-size formulas of the baseline self-schedulers.
+
+/// Thread classification relative to the running mean iteration
+/// throughput (paper eqs 1–3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Class {
+    Low,
+    Normal,
+    High,
+}
+
+/// iCh per-thread adaptive state: `k` = iterations completed by this
+/// thread, `d` = chunk divisor (`chunk = remaining/d`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct IchState {
+    pub k: f64,
+    pub d: f64,
+}
+
+/// Bounds keeping `d` sane: at least 1 (chunk ≤ remaining) and capped
+/// so chunk size cannot underflow to permanent 1-iteration dribbles
+/// faster than the queue can drain.
+pub const D_MIN: f64 = 1.0;
+pub const D_MAX: f64 = 1u64.wrapping_shl(30) as f64;
+
+impl IchState {
+    /// Initial state (§3.1): k = 0, d = p, so the first chunk is
+    /// |q_i|/p = n/p² — small enough for p−1 threads to steal later.
+    pub fn init(p: usize) -> IchState {
+        IchState { k: 0.0, d: (p as f64).max(D_MIN) }
+    }
+}
+
+/// Classify `k_i` against the interval μ ± δ (eqs 1–3).
+pub fn classify(k_i: f64, mu: f64, delta: f64) -> Class {
+    if k_i < mu - delta {
+        Class::Low
+    } else if k_i > mu + delta {
+        Class::High
+    } else {
+        Class::Normal
+    }
+}
+
+/// δ = ε·μ (eq 8) — iCh's cheap stand-in for a running standard
+/// deviation. ε is the method's single user parameter.
+pub fn delta(eps: f64, mu: f64) -> f64 {
+    eps * mu
+}
+
+/// Adapt the divisor after classification (§3.2):
+/// low → d/2 (chunk grows: the slow thread should be interrupted
+/// less), high → 2d (chunk shrinks: the fast thread's queue stays
+/// stealable), normal → unchanged. NOTE this is deliberately the
+/// *opposite* direction from load-balance-oriented adapters (Yan et
+/// al.) — see the paper's §3.2 discussion; the ablation bench flips it.
+pub fn adapt(d: f64, class: Class) -> f64 {
+    let nd = match class {
+        Class::Low => d / 2.0,
+        Class::High => d * 2.0,
+        Class::Normal => d,
+    };
+    nd.clamp(D_MIN, D_MAX)
+}
+
+/// Inverted adaptation (the Yan-style direction) for the ablation.
+pub fn adapt_inverted(d: f64, class: Class) -> f64 {
+    let nd = match class {
+        Class::Low => d * 2.0,
+        Class::High => d / 2.0,
+        Class::Normal => d,
+    };
+    nd.clamp(D_MIN, D_MAX)
+}
+
+/// chunk = max(1, remaining/d) (§3.1). `remaining` is the current
+/// local queue length |q_i|.
+pub fn ich_chunk(remaining: usize, d: f64) -> usize {
+    if remaining == 0 {
+        return 0;
+    }
+    ((remaining as f64 / d) as usize).max(1).min(remaining)
+}
+
+/// Steal-time merge (§3.3, Listing 1 lines 6–7): the thief averages
+/// its state with the victim's to hedge uncertain information.
+pub fn steal_merge(thief: IchState, victim: IchState) -> IchState {
+    IchState { k: (thief.k + victim.k) / 2.0, d: ((thief.d + victim.d) / 2.0).clamp(D_MIN, D_MAX) }
+}
+
+/// Listing 1 lines 20–22: if the stolen half is no bigger than the
+/// merged chunk size would be, clamp the divisor so the whole stolen
+/// range is one chunk.
+pub fn clamp_chunk_to_stolen(stolen: usize, remaining_after: usize, d: f64) -> f64 {
+    let chunk = ich_chunk(remaining_after.max(1), d);
+    if stolen <= chunk {
+        // chunk becomes exactly the stolen half
+        1.0_f64.max(remaining_after.max(1) as f64 / stolen.max(1) as f64)
+    } else {
+        d
+    }
+}
+
+/// Guided self-scheduling chunk (OpenMP `guided`, Polychronopoulos &
+/// Kuck): next chunk = max(remaining/p, min_chunk).
+pub fn guided_chunk(remaining: usize, p: usize, min_chunk: usize) -> usize {
+    if remaining == 0 {
+        return 0;
+    }
+    (remaining / p.max(1)).max(min_chunk.max(1)).min(remaining)
+}
+
+/// Factoring self-scheduling (Hummel et al.): iterations are issued in
+/// *batches* of p equal chunks, each batch sized `remaining/(alpha·p)`.
+/// Returns the full deterministic chunk list for n iterations.
+pub fn factoring_chunks(n: usize, p: usize, alpha: f64) -> Vec<(usize, usize)> {
+    let mut chunks = Vec::new();
+    let mut next = 0usize;
+    let mut remaining = n;
+    while remaining > 0 {
+        let c = ((remaining as f64 / (alpha * p.max(1) as f64)).ceil() as usize).max(1);
+        for _ in 0..p {
+            if remaining == 0 {
+                break;
+            }
+            let take = c.min(remaining);
+            chunks.push((next, next + take));
+            next += take;
+            remaining -= take;
+        }
+    }
+    chunks
+}
+
+/// Taskloop chunking (OpenMP `taskloop num_tasks(t)`): n iterations
+/// split into t contiguous tasks of near-equal length.
+pub fn taskloop_chunks(n: usize, num_tasks: usize) -> Vec<(usize, usize)> {
+    let t = num_tasks.max(1).min(n.max(1));
+    let mut chunks = Vec::with_capacity(t);
+    let base = n / t;
+    let extra = n % t;
+    let mut next = 0;
+    for i in 0..t {
+        let len = base + usize::from(i < extra);
+        if len == 0 {
+            continue;
+        }
+        chunks.push((next, next + len));
+        next += len;
+    }
+    chunks
+}
+
+/// BinLPT (Penna et al.): split the iteration space into at most
+/// `max_chunks` contiguous chunks of near-equal *workload* (using the
+/// per-iteration weight estimates), then assign chunks to threads with
+/// the Longest-Processing-Time greedy rule. Returns per-chunk ranges
+/// and the per-thread assignment.
+pub fn binlpt_partition(weights: &[f64], max_chunks: usize, p: usize) -> (Vec<(usize, usize)>, Vec<Vec<usize>>) {
+    let n = weights.len();
+    let k = max_chunks.max(1);
+    let total: f64 = weights.iter().sum();
+    let target = (total / k as f64).max(f64::MIN_POSITIVE);
+    // Greedy contiguous split: close each chunk when it reaches the
+    // mean chunk workload.
+    let mut chunks: Vec<(usize, usize)> = Vec::new();
+    let mut start = 0usize;
+    let mut acc = 0.0;
+    for i in 0..n {
+        acc += weights[i];
+        if acc >= target && chunks.len() + 1 < k {
+            chunks.push((start, i + 1));
+            start = i + 1;
+            acc = 0.0;
+        }
+    }
+    if start < n {
+        chunks.push((start, n));
+    }
+    // LPT assignment: heaviest chunk first onto the least-loaded thread.
+    let mut order: Vec<usize> = (0..chunks.len()).collect();
+    let load_of = |c: &(usize, usize)| weights[c.0..c.1].iter().sum::<f64>();
+    order.sort_by(|&a, &b| load_of(&chunks[b]).partial_cmp(&load_of(&chunks[a])).unwrap());
+    let mut assign: Vec<Vec<usize>> = vec![Vec::new(); p];
+    let mut tload = vec![0.0f64; p];
+    for ci in order {
+        let t = (0..p).min_by(|&a, &b| tload[a].partial_cmp(&tload[b]).unwrap()).unwrap();
+        assign[t].push(ci);
+        tload[t] += load_of(&chunks[ci]);
+    }
+    // Threads execute their chunks in iteration order (locality).
+    for a in &mut assign {
+        a.sort_unstable();
+    }
+    (chunks, assign)
+}
+
+/// Static block partition: thread i gets a contiguous slice.
+pub fn static_blocks(n: usize, p: usize) -> Vec<(usize, usize)> {
+    taskloop_chunks(n, p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_matches_paper() {
+        let s = IchState::init(4);
+        assert_eq!(s.k, 0.0);
+        assert_eq!(s.d, 4.0);
+        // initial chunk = |q_i|/d = (n/p)/p = n/p^2
+        assert_eq!(ich_chunk(100, s.d), 25);
+    }
+
+    #[test]
+    fn classify_bounds() {
+        assert_eq!(classify(1.0, 10.0, 2.0), Class::Low);
+        assert_eq!(classify(8.0, 10.0, 2.0), Class::Normal);
+        assert_eq!(classify(12.0, 10.0, 2.0), Class::Normal);
+        assert_eq!(classify(12.1, 10.0, 2.0), Class::High);
+    }
+
+    #[test]
+    fn adapt_directions() {
+        // low → chunk grows (d halves); high → chunk shrinks (d doubles)
+        assert_eq!(adapt(8.0, Class::Low), 4.0);
+        assert_eq!(adapt(8.0, Class::High), 16.0);
+        assert_eq!(adapt(8.0, Class::Normal), 8.0);
+        // inverted ablation flips it
+        assert_eq!(adapt_inverted(8.0, Class::Low), 16.0);
+        assert_eq!(adapt_inverted(8.0, Class::High), 4.0);
+    }
+
+    #[test]
+    fn adapt_clamped() {
+        assert_eq!(adapt(1.0, Class::Low), D_MIN);
+        assert!(adapt(D_MAX, Class::High) <= D_MAX);
+    }
+
+    #[test]
+    fn chunk_always_in_range() {
+        assert_eq!(ich_chunk(0, 4.0), 0);
+        assert_eq!(ich_chunk(3, 100.0), 1); // floor to >= 1
+        assert_eq!(ich_chunk(100, 1.0), 100);
+        assert_eq!(ich_chunk(100, 4.0), 25);
+    }
+
+    #[test]
+    fn steal_merge_averages() {
+        let m = steal_merge(IchState { k: 10.0, d: 2.0 }, IchState { k: 30.0, d: 6.0 });
+        assert_eq!(m.k, 20.0);
+        assert_eq!(m.d, 4.0);
+    }
+
+    #[test]
+    fn delta_scales_with_mu() {
+        assert_eq!(delta(0.25, 100.0), 25.0);
+        assert_eq!(delta(0.5, 0.0), 0.0);
+    }
+
+    #[test]
+    fn guided_formula() {
+        assert_eq!(guided_chunk(100, 4, 1), 25);
+        assert_eq!(guided_chunk(3, 4, 1), 1);
+        assert_eq!(guided_chunk(3, 4, 2), 2);
+        assert_eq!(guided_chunk(1, 4, 2), 1); // clamped to remaining
+        assert_eq!(guided_chunk(0, 4, 2), 0);
+    }
+
+    fn covers_exactly(chunks: &[(usize, usize)], n: usize) {
+        let mut seen = vec![false; n];
+        for &(a, b) in chunks {
+            assert!(a < b && b <= n, "bad chunk ({a},{b}) for n={n}");
+            for i in a..b {
+                assert!(!seen[i], "iteration {i} covered twice");
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "not all iterations covered");
+    }
+
+    #[test]
+    fn factoring_covers_and_decays() {
+        let chunks = factoring_chunks(1000, 4, 2.0);
+        covers_exactly(&chunks, 1000);
+        // First batch chunk = 1000/(2*4) = 125; sizes non-increasing.
+        assert_eq!(chunks[0].1 - chunks[0].0, 125);
+        let sizes: Vec<usize> = chunks.iter().map(|c| c.1 - c.0).collect();
+        assert!(sizes.windows(2).all(|w| w[0] >= w[1]));
+    }
+
+    #[test]
+    fn taskloop_even_split() {
+        let chunks = taskloop_chunks(10, 4);
+        covers_exactly(&chunks, 10);
+        assert_eq!(chunks.len(), 4);
+        let sizes: Vec<usize> = chunks.iter().map(|c| c.1 - c.0).collect();
+        assert_eq!(sizes, vec![3, 3, 2, 2]);
+    }
+
+    #[test]
+    fn taskloop_more_tasks_than_iters() {
+        let chunks = taskloop_chunks(3, 8);
+        covers_exactly(&chunks, 3);
+        assert_eq!(chunks.len(), 3);
+    }
+
+    #[test]
+    fn binlpt_covers_and_balances() {
+        // Heavily skewed weights: LPT should not put both heavy chunks
+        // on one thread.
+        let mut w = vec![1.0; 100];
+        for x in w.iter_mut().take(10) {
+            *x = 100.0;
+        }
+        let (chunks, assign) = binlpt_partition(&w, 8, 2);
+        covers_exactly(&chunks, 100);
+        assert!(chunks.len() <= 8);
+        let load = |tis: &Vec<usize>| -> f64 {
+            tis.iter().map(|&c| w[chunks[c].0..chunks[c].1].iter().sum::<f64>()).sum()
+        };
+        let (l0, l1) = (load(&assign[0]), load(&assign[1]));
+        let imbalance = l0.max(l1) / (l0.min(l1)).max(1.0);
+        assert!(imbalance < 2.0, "LPT imbalance too large: {l0} vs {l1}");
+    }
+
+    #[test]
+    fn binlpt_single_chunk_degenerate() {
+        let (chunks, assign) = binlpt_partition(&[1.0, 1.0], 1, 4);
+        covers_exactly(&chunks, 2);
+        assert_eq!(chunks.len(), 1);
+        assert_eq!(assign.iter().map(|a| a.len()).sum::<usize>(), 1);
+    }
+
+    #[test]
+    fn clamp_chunk_to_stolen_behaviour() {
+        // stolen half small relative to chunk -> d grows so chunk == stolen
+        let d = clamp_chunk_to_stolen(5, 5, 1.0);
+        assert_eq!(ich_chunk(5, d), 5);
+        // stolen large -> keep d
+        assert_eq!(clamp_chunk_to_stolen(50, 50, 4.0), 4.0);
+    }
+}

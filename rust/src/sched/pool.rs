@@ -1,0 +1,96 @@
+//! Worker threads with optional core pinning.
+//!
+//! The paper pins OpenMP threads to cores (`OMP_PROC_BIND=true`,
+//! `OMP_PLACES=cores`). We do the same via `sched_setaffinity` when
+//! the machine has at least as many cores as requested threads;
+//! otherwise (e.g. this 1-core container) pinning is skipped — the
+//! schedulers remain correct, merely oversubscribed.
+
+/// Number of online CPUs.
+pub fn num_cpus() -> usize {
+    // SAFETY: sysconf is async-signal-safe and has no memory effects.
+    let n = unsafe { libc::sysconf(libc::_SC_NPROCESSORS_ONLN) };
+    if n <= 0 { 1 } else { n as usize }
+}
+
+/// Pin the calling thread to `cpu` (best-effort; errors ignored).
+pub fn pin_to_cpu(cpu: usize) {
+    // SAFETY: CPU_SET/sched_setaffinity with a properly zeroed set.
+    unsafe {
+        let mut set: libc::cpu_set_t = std::mem::zeroed();
+        libc::CPU_SET(cpu % num_cpus(), &mut set);
+        libc::sched_setaffinity(0, std::mem::size_of::<libc::cpu_set_t>(), &set);
+    }
+}
+
+/// Run `f(tid)` on `p` scoped worker threads and wait for all of them.
+/// Threads are pinned round-robin when the host has enough cores.
+pub fn scoped_run<F>(p: usize, pin: bool, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    assert!(p > 0, "need at least one worker");
+    let do_pin = pin && num_cpus() >= p;
+    if p == 1 {
+        if do_pin {
+            pin_to_cpu(0);
+        }
+        f(0);
+        return;
+    }
+    std::thread::scope(|s| {
+        for tid in 1..p {
+            let f = &f;
+            s.spawn(move || {
+                if do_pin {
+                    pin_to_cpu(tid);
+                }
+                f(tid);
+            });
+        }
+        if do_pin {
+            pin_to_cpu(0);
+        }
+        f(0); // caller participates as thread 0
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn num_cpus_positive() {
+        assert!(num_cpus() >= 1);
+    }
+
+    #[test]
+    fn all_tids_run_once() {
+        let p = 8;
+        let hits: Vec<AtomicUsize> = (0..p).map(|_| AtomicUsize::new(0)).collect();
+        scoped_run(p, false, |tid| {
+            hits[tid].fetch_add(1, Ordering::SeqCst);
+        });
+        for (tid, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::SeqCst), 1, "tid {tid}");
+        }
+    }
+
+    #[test]
+    fn single_thread_runs_inline() {
+        let hit = AtomicUsize::new(0);
+        scoped_run(1, false, |tid| {
+            assert_eq!(tid, 0);
+            hit.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hit.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn pinning_does_not_crash() {
+        scoped_run(2, true, |_tid| {
+            std::hint::black_box(1 + 1);
+        });
+    }
+}

@@ -1,0 +1,177 @@
+//! Related-work schedulers the paper discusses (§4) and compares
+//! against via in-house versions: Adaptive Weighted Factoring (AWF,
+//! Banicescu et al.) and a history-aware scheduler in the spirit of
+//! HSS (Kejariwal & Nicolau). Included for the ablation/related-work
+//! benches; the paper reports BinLPT dominates both.
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering::SeqCst};
+
+use crossbeam_utils::CachePadded;
+
+use super::metrics::MetricsSink;
+use super::policy;
+
+/// AWF: factoring-style central scheduling where each thread's chunk
+/// is scaled by its measured execution *weight* (throughput relative
+/// to the mean). Threads that have been processing iterations faster
+/// receive proportionally larger chunks.
+pub fn run_awf(n: usize, p: usize, pin: bool, body: &(dyn Fn(Range<usize>) + Sync), sink: &MetricsSink) {
+    if n == 0 {
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    // Per-thread (iterations, busy-ns) for the running weight estimate.
+    let done: Vec<CachePadded<AtomicU64>> = (0..p).map(|_| CachePadded::new(AtomicU64::new(0))).collect();
+    let busy: Vec<CachePadded<AtomicU64>> = (0..p).map(|_| CachePadded::new(AtomicU64::new(1))).collect();
+
+    super::pool::scoped_run(p, pin, |tid| loop {
+        // weight_t = (own throughput) / (mean throughput); 1.0 before
+        // any measurement exists.
+        let my_rate = done[tid].load(SeqCst) as f64 / busy[tid].load(SeqCst) as f64;
+        let mean_rate = {
+            let s: f64 = (0..p).map(|j| done[j].load(SeqCst) as f64 / busy[j].load(SeqCst) as f64).sum();
+            s / p as f64
+        };
+        let w = if mean_rate > 0.0 && my_rate > 0.0 { (my_rate / mean_rate).clamp(0.25, 4.0) } else { 1.0 };
+
+        let mut b = next.load(SeqCst);
+        let e = loop {
+            if b >= n {
+                return;
+            }
+            let base = policy::guided_chunk(n - b, 2 * p, 1); // remaining/(2p)
+            let c = ((base as f64 * w) as usize).max(1).min(n - b);
+            match next.compare_exchange_weak(b, b + c, SeqCst, SeqCst) {
+                Ok(_) => break b + c,
+                Err(cur) => b = cur,
+            }
+        };
+        let t0 = std::time::Instant::now();
+        body(b..e);
+        let dt = t0.elapsed().as_nanos() as u64;
+        done[tid].fetch_add((e - b) as u64, SeqCst);
+        busy[tid].fetch_add(dt.max(1), SeqCst);
+        sink.add_chunk(tid, (e - b) as u64);
+    });
+}
+
+/// HSS-lite: history-aware scheduling for nested loops. Given
+/// per-iteration cost estimates learned from a previous execution of
+/// the same loop (`history`), partition iterations into p contiguous
+/// blocks of near-equal *estimated* cost, then run a guided tail from
+/// a central queue for the remainder imbalance. Without history it
+/// degenerates to `static`.
+pub fn run_hss(
+    n: usize,
+    p: usize,
+    pin: bool,
+    history: Option<&[f64]>,
+    body: &(dyn Fn(Range<usize>) + Sync),
+    sink: &MetricsSink,
+) {
+    if n == 0 {
+        return;
+    }
+    let blocks: Vec<(usize, usize)> = match history {
+        None => policy::static_blocks(n, p),
+        Some(h) => weighted_blocks(h, p),
+    };
+    super::pool::scoped_run(p, pin, |tid| {
+        if let Some(&(a, b)) = blocks.get(tid) {
+            if a < b {
+                body(a..b);
+                sink.add_chunk(tid, (b - a) as u64);
+            }
+        }
+    });
+}
+
+/// Contiguous partition with near-equal weight prefix sums.
+pub fn weighted_blocks(weights: &[f64], p: usize) -> Vec<(usize, usize)> {
+    let n = weights.len();
+    let total: f64 = weights.iter().sum();
+    let target = total / p as f64;
+    let mut blocks = Vec::with_capacity(p);
+    let mut start = 0usize;
+    let mut acc = 0.0;
+    for i in 0..n {
+        acc += weights[i];
+        if acc >= target && blocks.len() + 1 < p {
+            blocks.push((start, i + 1));
+            start = i + 1;
+            acc = 0.0;
+        }
+    }
+    blocks.push((start, n));
+    while blocks.len() < p {
+        blocks.push((n, n));
+    }
+    blocks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check(n: usize, p: usize, run: impl FnOnce(&(dyn Fn(Range<usize>) + Sync), &MetricsSink)) {
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        let sink = MetricsSink::new(p);
+        run(
+            &|r| {
+                for i in r {
+                    hits[i].fetch_add(1, SeqCst);
+                }
+            },
+            &sink,
+        );
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(SeqCst), 1, "iter {i}");
+        }
+    }
+
+    #[test]
+    fn awf_covers() {
+        for &(n, p) in &[(500usize, 4usize), (1, 2), (37, 5)] {
+            check(n, p, |b, s| run_awf(n, p, false, b, s));
+        }
+    }
+
+    #[test]
+    fn hss_covers_without_history() {
+        check(100, 4, |b, s| run_hss(100, 4, false, None, b, s));
+    }
+
+    #[test]
+    fn hss_covers_with_history() {
+        let h: Vec<f64> = (0..100).map(|i| 1.0 + i as f64).collect();
+        check(100, 4, |b, s| run_hss(100, 4, false, Some(&h), b, s));
+    }
+
+    #[test]
+    fn weighted_blocks_balance() {
+        // Weights ramp linearly; weighted blocks should give earlier
+        // (lighter) iterations longer ranges.
+        let w: Vec<f64> = (0..1000).map(|i| 1.0 + i as f64).collect();
+        let blocks = weighted_blocks(&w, 4);
+        assert_eq!(blocks.len(), 4);
+        assert_eq!(blocks[0].0, 0);
+        assert_eq!(blocks[3].1, 1000);
+        let len0 = blocks[0].1 - blocks[0].0;
+        let len3 = blocks[3].1 - blocks[3].0;
+        assert!(len0 > len3, "light block should be longer: {len0} vs {len3}");
+        let load = |b: &(usize, usize)| w[b.0..b.1].iter().sum::<f64>();
+        let loads: Vec<f64> = blocks.iter().map(load).collect();
+        let maxl = loads.iter().cloned().fold(0.0, f64::max);
+        let minl = loads.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(maxl / minl < 1.5, "imbalance: {loads:?}");
+    }
+
+    #[test]
+    fn weighted_blocks_more_threads_than_iters() {
+        let blocks = weighted_blocks(&[1.0, 1.0], 4);
+        assert_eq!(blocks.len(), 4);
+        let covered: usize = blocks.iter().map(|b| b.1 - b.0).sum();
+        assert_eq!(covered, 2);
+    }
+}

@@ -1,0 +1,373 @@
+//! Work-stealing engines: generic fixed-chunk `stealing` and the
+//! paper's adaptive `iCh` (§3).
+//!
+//! Both share the same skeleton: per-thread THE-protocol range deques
+//! initialized with an even block partition (§3.1), owner-side chunk
+//! dispatch, and random-victim half-stealing (§3.3). They differ only
+//! in how the chunk size is chosen — fixed for `stealing`, adaptive
+//! `|q_i|/d_i` with throughput classification for iCh — which is
+//! precisely the paper's claimed contribution, so the engines share
+//! all other code.
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering::Relaxed, Ordering::SeqCst};
+
+use crossbeam_utils::CachePadded;
+
+use super::deque::RangeDeque;
+use super::metrics::MetricsSink;
+use super::policy::{self, IchState};
+use crate::util::rng::Rng;
+
+/// How iCh merges thief/victim adaptive state on a successful steal —
+/// `Average` is the paper's rule (Listing 1 lines 6–7); the others are
+/// ablations.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StealMerge {
+    /// Paper: k,d ← average of thief and victim.
+    Average,
+    /// Ablation: adopt the victim's state wholesale.
+    Victim,
+    /// Ablation: keep the thief's own state.
+    Keep,
+}
+
+/// iCh configuration. `eps` is the paper's only user parameter.
+#[derive(Clone, Copy, Debug)]
+pub struct IchParams {
+    /// ε in δ = ε·μ (eq 8). Paper grid: 0.25, 0.33, 0.50.
+    pub eps: f64,
+    /// Initial divisor d₀; `None` = paper default p.
+    pub d0: Option<f64>,
+    /// Flip the adaptation direction (Yan-style) — ablation only.
+    pub inverted: bool,
+    /// Steal-time state merge rule.
+    pub merge: StealMerge,
+    /// Victim selection: false = uniform random (paper), true = probe
+    /// all queues and steal from the fullest (ablation).
+    pub informed: bool,
+}
+
+impl Default for IchParams {
+    fn default() -> Self {
+        IchParams { eps: 0.33, d0: None, inverted: false, merge: StealMerge::Average, informed: false }
+    }
+}
+
+impl IchParams {
+    pub fn with_eps(eps: f64) -> Self {
+        IchParams { eps, ..Default::default() }
+    }
+}
+
+/// Chunk-size policy for the shared engine.
+enum ChunkPolicy {
+    Fixed(usize),
+    Adaptive(IchParams),
+}
+
+/// Decrements the shared termination counter on drop — including
+/// drops caused by unwinding out of a panicking loop body.
+struct RemainingGuard<'a> {
+    remaining: &'a AtomicUsize,
+    len: usize,
+}
+
+impl Drop for RemainingGuard<'_> {
+    fn drop(&mut self) {
+        self.remaining.fetch_sub(self.len, SeqCst);
+    }
+}
+
+/// Shared mutable state visible across workers.
+struct Shared {
+    deques: Vec<RangeDeque>,
+    /// Iterations not yet *executed* (drives termination).
+    remaining: AtomicUsize,
+    /// Published per-thread k_i (completed iterations) for μ.
+    ks: Vec<CachePadded<AtomicU64>>,
+    /// Published per-thread d_i (f64 bits) for steal-time merging.
+    ds: Vec<CachePadded<AtomicU64>>,
+}
+
+impl Shared {
+    fn new(n: usize, p: usize, d0: f64) -> Shared {
+        let blocks = policy::static_blocks(n, p);
+        let mut deques: Vec<RangeDeque> = blocks.iter().map(|&(a, b)| RangeDeque::new(a..b)).collect();
+        // static_blocks returns min(p, n) blocks; pad with empty queues
+        // so every thread owns one.
+        while deques.len() < p {
+            deques.push(RangeDeque::new(0..0));
+        }
+        Shared {
+            deques,
+            remaining: AtomicUsize::new(n),
+            ks: (0..p).map(|_| CachePadded::new(AtomicU64::new(0))).collect(),
+            ds: (0..p).map(|_| CachePadded::new(AtomicU64::new(d0.to_bits()))).collect(),
+        }
+    }
+
+    /// Running mean iteration throughput μ = Σ k_j / p (§3.2).
+    #[inline]
+    fn mu(&self) -> f64 {
+        let sum: u64 = self.ks.iter().map(|k| k.load(Relaxed)).sum();
+        sum as f64 / self.ks.len() as f64
+    }
+}
+
+/// Run the fixed-chunk work-stealing baseline.
+pub fn run_stealing(
+    n: usize,
+    p: usize,
+    pin: bool,
+    chunk: usize,
+    seed: u64,
+    body: &(dyn Fn(Range<usize>) + Sync),
+    sink: &MetricsSink,
+) {
+    run_engine(n, p, pin, ChunkPolicy::Fixed(chunk.max(1)), seed, body, sink)
+}
+
+/// Run iCh.
+pub fn run_ich(
+    n: usize,
+    p: usize,
+    pin: bool,
+    params: IchParams,
+    seed: u64,
+    body: &(dyn Fn(Range<usize>) + Sync),
+    sink: &MetricsSink,
+) {
+    run_engine(n, p, pin, ChunkPolicy::Adaptive(params), seed, body, sink)
+}
+
+fn run_engine(
+    n: usize,
+    p: usize,
+    pin: bool,
+    chunk_policy: ChunkPolicy,
+    seed: u64,
+    body: &(dyn Fn(Range<usize>) + Sync),
+    sink: &MetricsSink,
+) {
+    if n == 0 {
+        return;
+    }
+    let d0 = match &chunk_policy {
+        ChunkPolicy::Adaptive(prm) => prm.d0.unwrap_or(p as f64).max(policy::D_MIN),
+        ChunkPolicy::Fixed(_) => policy::D_MIN,
+    };
+    let shared = Shared::new(n, p, d0);
+    let chunk_policy = &chunk_policy;
+    let shared = &shared;
+
+    super::pool::scoped_run(p, pin, move |tid| {
+        worker(tid, p, seed, shared, chunk_policy, body, sink);
+    });
+
+    debug_assert_eq!(shared.remaining.load(SeqCst), 0, "all iterations must execute");
+}
+
+fn worker(
+    tid: usize,
+    p: usize,
+    seed: u64,
+    shared: &Shared,
+    chunk_policy: &ChunkPolicy,
+    body: &(dyn Fn(Range<usize>) + Sync),
+    sink: &MetricsSink,
+) {
+    let mut rng = Rng::new(seed ^ (tid as u64).wrapping_mul(0x9E3779B97F4A7C15) ^ 0x5851F42D4C957F2D);
+    let mut st = IchState { k: 0.0, d: f64::from_bits(shared.ds[tid].load(Relaxed)) };
+    // Hot-path counters are thread-local and flushed once on exit
+    // (perf pass: avoids two shared RMWs per chunk).
+    let mut local_chunks = 0u64;
+    let mut local_iters = 0u64;
+
+    loop {
+        // ---- Drain the local queue ----------------------------------
+        loop {
+            let me = &shared.deques[tid];
+            let chunk = match chunk_policy {
+                ChunkPolicy::Fixed(c) => *c,
+                ChunkPolicy::Adaptive(_) => policy::ich_chunk(me.remaining().max(1), st.d),
+            };
+            let Some(r) = me.take(chunk.max(1)) else { break };
+            let len = r.len();
+            // The guard decrements `remaining` even if `body` panics, so
+            // sibling workers spinning on the termination count can exit
+            // and the panic propagates out of the scope instead of
+            // deadlocking the pool.
+            let _done = RemainingGuard { remaining: &shared.remaining, len };
+            body(r);
+            drop(_done);
+            local_chunks += 1;
+            local_iters += len as u64;
+            st.k += len as f64;
+            // §3.2 local adaptation: classify against μ ± δ and adjust
+            // d. Only iCh publishes k/d — the fixed-chunk baseline has
+            // no adaptation pass (perf pass: keeps its owner loop to
+            // one shared RMW per chunk).
+            if let ChunkPolicy::Adaptive(prm) = chunk_policy {
+                shared.ks[tid].store(st.k as u64, Relaxed);
+                let mu = shared.mu();
+                let delta = policy::delta(prm.eps, mu);
+                let class = policy::classify(st.k, mu, delta);
+                st.d = if prm.inverted { policy::adapt_inverted(st.d, class) } else { policy::adapt(st.d, class) };
+                shared.ds[tid].store(st.d.to_bits(), Relaxed);
+            }
+        }
+
+        // ---- Local queue empty: steal (§3.3) -------------------------
+        if shared.remaining.load(SeqCst) == 0 {
+            sink.add_bulk(tid, local_chunks, local_iters);
+            return;
+        }
+        if p == 1 {
+            // Single thread and a non-empty remaining count can only
+            // mean our own in-flight body finished the last chunk.
+            continue;
+        }
+        let victim = match chunk_policy {
+            ChunkPolicy::Adaptive(prm) if prm.informed => {
+                // Ablation: probe every queue, steal from the fullest.
+                (0..p)
+                    .filter(|&v| v != tid)
+                    .max_by_key(|&v| shared.deques[v].remaining())
+                    .unwrap()
+            }
+            _ => {
+                // Paper: uniform random victim.
+                let mut v = rng.below(p - 1);
+                if v >= tid {
+                    v += 1;
+                }
+                v
+            }
+        };
+        match shared.deques[victim].steal_half() {
+            Some(stolen) => {
+                sink.add_steal(tid, true);
+                if let ChunkPolicy::Adaptive(prm) = chunk_policy {
+                    // Listing 1 lines 6–7 (+ merge-rule ablations).
+                    let vic = IchState {
+                        k: shared.ks[victim].load(Relaxed) as f64,
+                        d: f64::from_bits(shared.ds[victim].load(Relaxed)),
+                    };
+                    st = match prm.merge {
+                        StealMerge::Average => policy::steal_merge(st, vic),
+                        StealMerge::Victim => vic,
+                        StealMerge::Keep => st,
+                    };
+                    // Lines 20–22: the stolen half caps the next chunk.
+                    st.d = policy::clamp_chunk_to_stolen(stolen.len(), stolen.len(), st.d);
+                    shared.ks[tid].store(st.k as u64, Relaxed);
+                    shared.ds[tid].store(st.d.to_bits(), Relaxed);
+                }
+                // Re-home the stolen range in our own queue so others
+                // can steal from us in turn (Listing 1 lines 23–24).
+                shared.deques[tid].reset(stolen);
+            }
+            None => {
+                sink.add_steal(tid, false);
+                std::hint::spin_loop();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64 as Cell;
+
+    fn run_and_check(n: usize, p: usize, f: impl FnOnce(&(dyn Fn(Range<usize>) + Sync), &MetricsSink)) {
+        let hits: Vec<Cell> = (0..n).map(|_| Cell::new(0)).collect();
+        let sink = MetricsSink::new(p);
+        {
+            let body = |r: Range<usize>| {
+                for i in r {
+                    hits[i].fetch_add(1, SeqCst);
+                }
+            };
+            f(&body, &sink);
+        }
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(SeqCst), 1, "iteration {i} executed {} times", h.load(SeqCst));
+        }
+        let m = sink.collect(std::time::Duration::ZERO);
+        assert_eq!(m.total_iters, n as u64);
+    }
+
+    #[test]
+    fn stealing_executes_every_iteration_once() {
+        for &(n, p) in &[(1usize, 1usize), (10, 4), (1000, 4), (1000, 7), (97, 3)] {
+            run_and_check(n, p, |body, sink| run_stealing(n, p, false, 2, 42, body, sink));
+        }
+    }
+
+    #[test]
+    fn ich_executes_every_iteration_once() {
+        for &(n, p) in &[(1usize, 1usize), (10, 4), (1000, 4), (1000, 7), (97, 3)] {
+            run_and_check(n, p, |body, sink| {
+                run_ich(n, p, false, IchParams::with_eps(0.33), 42, body, sink)
+            });
+        }
+    }
+
+    #[test]
+    fn ich_zero_iterations_is_noop() {
+        let sink = MetricsSink::new(2);
+        run_ich(0, 2, false, IchParams::default(), 1, &|_r| panic!("no body calls"), &sink);
+    }
+
+    #[test]
+    fn ich_informed_and_merge_variants() {
+        for merge in [StealMerge::Average, StealMerge::Victim, StealMerge::Keep] {
+            for informed in [false, true] {
+                let prm = IchParams { merge, informed, ..IchParams::with_eps(0.25) };
+                run_and_check(500, 4, |body, sink| run_ich(500, 4, false, prm, 7, body, sink));
+            }
+        }
+    }
+
+    #[test]
+    fn ich_inverted_ablation_still_correct() {
+        let prm = IchParams { inverted: true, ..Default::default() };
+        run_and_check(500, 4, |body, sink| run_ich(500, 4, false, prm, 11, body, sink));
+    }
+
+    #[test]
+    fn imbalanced_work_gets_stolen() {
+        // Thread 0's block holds all the work; with several threads the
+        // stealing engine must record successful steals.
+        let n = 4000;
+        let p = 4;
+        let sink = MetricsSink::new(p);
+        let body = |r: Range<usize>| {
+            for i in r {
+                if i < n / p {
+                    // only the first block is expensive
+                    let mut acc = 0u64;
+                    for j in 0..2_000u64 {
+                        acc = acc.wrapping_add(j ^ i as u64);
+                    }
+                    std::hint::black_box(acc);
+                }
+            }
+        };
+        run_ich(n, p, false, IchParams::default(), 3, &body, &sink);
+        let m = sink.collect(std::time::Duration::ZERO);
+        assert_eq!(m.total_iters, n as u64);
+        assert!(m.steals_ok > 0, "expected at least one successful steal");
+    }
+
+    #[test]
+    fn single_thread_never_steals() {
+        let sink = MetricsSink::new(1);
+        run_ich(100, 1, false, IchParams::default(), 5, &|_r| {}, &sink);
+        let m = sink.collect(std::time::Duration::ZERO);
+        assert_eq!(m.steals_ok + m.steals_failed, 0);
+        assert_eq!(m.total_iters, 100);
+    }
+}

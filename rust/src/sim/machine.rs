@@ -1,0 +1,146 @@
+//! Virtual machine model for the discrete-event simulator.
+//!
+//! The paper's testbed is Bridges-RM: two Intel Xeon E5-2695 v3
+//! (Haswell) sockets × 14 cores, threads pinned to cores. This
+//! container has one core, so speedup experiments run on this model
+//! instead (DESIGN.md §3 records the substitution). Virtual time is
+//! measured in *work units*: executing one unit of iteration weight on
+//! a nominal-speed core takes 1.0 units; every scheduling overhead is
+//! expressed in the same currency.
+
+use crate::util::rng::Rng;
+
+/// Topology + cost-model constants.
+#[derive(Clone, Debug)]
+pub struct MachineSpec {
+    /// NUMA sockets.
+    pub sockets: usize,
+    /// Cores per socket (paper: 14).
+    pub cores_per_socket: usize,
+    /// Std-dev of per-core speed jitter (DVFS, shared caches; §3.2 of
+    /// the paper motivates adaptivity with exactly this variation).
+    pub speed_jitter: f64,
+    /// Cost of one dispatch from a *central* queue (atomic RMW on a
+    /// contended line + bookkeeping).
+    pub c_dispatch_central: f64,
+    /// Portion of a central dispatch that serializes (queue "server"
+    /// occupancy — models cache-line ping-pong under contention).
+    pub c_central_serial: f64,
+    /// Owner-side dispatch from a local THE deque (uncontended).
+    pub c_dispatch_local: f64,
+    /// iCh adaptation pass: read p counters + classify (per p threads).
+    pub c_adapt_per_thread: f64,
+    /// Fixed part of the iCh adaptation pass.
+    pub c_adapt_base: f64,
+    /// Failed steal probe (load remote queue indices, miss).
+    pub c_steal_fail: f64,
+    /// Successful steal (victim lock + range cut + state copy).
+    pub c_steal_ok: f64,
+    /// Serialized portion of a steal on the victim's lock.
+    pub c_steal_serial: f64,
+    /// Multiplier on steal costs when thief and victim are on
+    /// different sockets (§6.2 notes the cross-NUMA steal penalty).
+    pub numa_steal_mult: f64,
+    /// Fork-join cost per parallel loop: fixed + per-thread part.
+    pub c_fork_base: f64,
+    pub c_fork_per_thread: f64,
+    /// OpenMP task creation overhead per task (`taskloop` only).
+    pub c_task_create: f64,
+    /// Execution penalty factor for touching remote-socket data
+    /// (applied to the memory-bound fraction of an iteration).
+    pub remote_mem_penalty: f64,
+    /// Threads per socket beyond which memory bandwidth saturates.
+    pub mem_saturation_threads: f64,
+}
+
+impl Default for MachineSpec {
+    fn default() -> Self {
+        MachineSpec {
+            sockets: 2,
+            cores_per_socket: 14,
+            speed_jitter: 0.04,
+            c_dispatch_central: 8.0,
+            c_central_serial: 3.0,
+            c_dispatch_local: 6.0,
+            c_adapt_per_thread: 0.15,
+            c_adapt_base: 1.0,
+            c_steal_fail: 12.0,
+            c_steal_ok: 40.0,
+            c_steal_serial: 10.0,
+            numa_steal_mult: 2.5,
+            c_fork_base: 60.0,
+            c_fork_per_thread: 6.0,
+            c_task_create: 30.0,
+            remote_mem_penalty: 0.7,
+            mem_saturation_threads: 8.0,
+        }
+    }
+}
+
+impl MachineSpec {
+    /// The paper's Haswell testbed (the default).
+    pub fn bridges_haswell() -> MachineSpec {
+        MachineSpec::default()
+    }
+
+    pub fn total_cores(&self) -> usize {
+        self.sockets * self.cores_per_socket
+    }
+
+    /// Socket of a pinned thread (threads fill socket 0 first, as with
+    /// OMP_PLACES=cores on the testbed).
+    pub fn socket_of(&self, tid: usize) -> usize {
+        (tid / self.cores_per_socket).min(self.sockets - 1)
+    }
+
+    /// Per-core speed factors for p threads (deterministic in `seed`).
+    pub fn core_speeds(&self, p: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed ^ 0xC0DE_5EED);
+        (0..p).map(|_| rng.normal(1.0, self.speed_jitter).clamp(0.7, 1.3)).collect()
+    }
+
+    /// Memory-bandwidth saturation multiplier for a socket running
+    /// `k` threads of an application with memory intensity `m` ∈ [0,1]:
+    /// execution slows once the socket's memory system is oversubscribed.
+    pub fn saturation_mult(&self, threads_on_socket: usize, mem_intensity: f64) -> f64 {
+        let k = threads_on_socket as f64;
+        let sat = self.mem_saturation_threads;
+        1.0 + mem_intensity * ((k - sat).max(0.0) / sat)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_matches_paper_testbed() {
+        let m = MachineSpec::default();
+        assert_eq!(m.total_cores(), 28);
+        assert_eq!(m.socket_of(0), 0);
+        assert_eq!(m.socket_of(13), 0);
+        assert_eq!(m.socket_of(14), 1);
+        assert_eq!(m.socket_of(27), 1);
+    }
+
+    #[test]
+    fn speeds_deterministic_and_bounded() {
+        let m = MachineSpec::default();
+        let a = m.core_speeds(28, 7);
+        let b = m.core_speeds(28, 7);
+        assert_eq!(a, b);
+        assert!(a.iter().all(|&s| (0.7..=1.3).contains(&s)));
+        let c = m.core_speeds(28, 8);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn saturation_kicks_in_past_threshold() {
+        let m = MachineSpec::default();
+        assert_eq!(m.saturation_mult(4, 1.0), 1.0);
+        assert_eq!(m.saturation_mult(8, 1.0), 1.0);
+        assert!(m.saturation_mult(14, 1.0) > 1.5);
+        // compute-bound apps don't saturate
+        assert_eq!(m.saturation_mult(14, 0.0), 1.0);
+    }
+}

@@ -1,0 +1,489 @@
+//! Virtual-time implementations of every scheduling policy, reusing
+//! the shared math in `sched::policy` so the simulator runs the *same*
+//! algorithm as the threaded runtime — only the execution substrate
+//! (virtual clock + cost model vs. real atomics) differs.
+
+use super::engine::{Acquire, SimCtx, SimSched};
+use crate::sched::policy::{self, IchState};
+use crate::sched::ws::{IchParams, StealMerge};
+use crate::sched::Policy;
+
+/// Build the sim-side policy object for one loop.
+pub fn make_sim_policy(policy: &Policy, weights: &[f64], p: usize) -> Box<dyn SimSched> {
+    let n = weights.len();
+    match policy {
+        Policy::Static => Box::new(ChunkListSim::local(policy::static_blocks(n, p), p)),
+        Policy::Dynamic { chunk } => Box::new(CentralSim::dynamic(n, *chunk)),
+        Policy::Guided { chunk } => Box::new(CentralSim::guided(n, *chunk)),
+        Policy::Taskloop { num_tasks } => {
+            let t = if *num_tasks == 0 { p } else { *num_tasks };
+            Box::new(ChunkListSim::central_with_task_overhead(policy::taskloop_chunks(n, t)))
+        }
+        Policy::Factoring { alpha } => Box::new(ChunkListSim::central(policy::factoring_chunks(n, p, *alpha))),
+        Policy::Binlpt { max_chunks } => Box::new(BinlptSim::new(weights, *max_chunks, p)),
+        Policy::Stealing { chunk } => Box::new(WsSim::fixed(n, p, *chunk)),
+        Policy::Ich(prm) => Box::new(WsSim::adaptive(n, p, *prm)),
+        Policy::Awf => Box::new(AwfSim::new(n, p)),
+        Policy::Hss => Box::new(ChunkListSim::local(crate::sched::related::weighted_blocks(weights, p), p)),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Central-queue policies (dynamic / guided)
+// ---------------------------------------------------------------------------
+
+enum CentralMode {
+    Dynamic { chunk: usize },
+    Guided { min_chunk: usize },
+}
+
+/// `dynamic` / `guided`: one shared counter; every grab serializes on
+/// the central queue server.
+struct CentralSim {
+    n: usize,
+    next: usize,
+    mode: CentralMode,
+}
+
+impl CentralSim {
+    fn dynamic(n: usize, chunk: usize) -> CentralSim {
+        CentralSim { n, next: 0, mode: CentralMode::Dynamic { chunk: chunk.max(1) } }
+    }
+
+    fn guided(n: usize, min_chunk: usize) -> CentralSim {
+        CentralSim { n, next: 0, mode: CentralMode::Guided { min_chunk } }
+    }
+}
+
+impl SimSched for CentralSim {
+    fn acquire(&mut self, _tid: usize, now: f64, ctx: &mut SimCtx) -> Acquire {
+        if self.next >= self.n {
+            return Acquire::Done;
+        }
+        let c = match self.mode {
+            CentralMode::Dynamic { chunk } => chunk,
+            CentralMode::Guided { min_chunk } => policy::guided_chunk(self.n - self.next, ctx.p, min_chunk),
+        }
+        .min(self.n - self.next);
+        let lo = self.next;
+        self.next += c;
+        let overhead = ctx.central_op(now, ctx.spec.c_dispatch_central, ctx.spec.c_central_serial);
+        Acquire::Chunk { lo, hi: lo + c, overhead }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Precomputed chunk lists (static / taskloop / factoring / HSS)
+// ---------------------------------------------------------------------------
+
+/// Executes a precomputed chunk list. Three flavors:
+/// - `local`: chunk i belongs to thread i (static/HSS); no shared queue.
+/// - `central`: chunks claimed from a central counter (factoring).
+/// - `central_with_task_overhead`: like central plus OpenMP task-creation
+///   cost per task (taskloop).
+struct ChunkListSim {
+    chunks: Vec<(usize, usize)>,
+    next: usize,
+    /// Thread-owned (static-like) instead of centrally claimed.
+    owned: bool,
+    /// Extra per-chunk creation overhead (taskloop).
+    task_overhead: bool,
+    /// For owned mode: has thread t run its chunk yet?
+    ran: Vec<bool>,
+}
+
+impl ChunkListSim {
+    fn local(chunks: Vec<(usize, usize)>, p: usize) -> ChunkListSim {
+        ChunkListSim { chunks, next: 0, owned: true, task_overhead: false, ran: vec![false; p] }
+    }
+
+    fn central(chunks: Vec<(usize, usize)>) -> ChunkListSim {
+        ChunkListSim { chunks, next: 0, owned: false, task_overhead: false, ran: Vec::new() }
+    }
+
+    fn central_with_task_overhead(chunks: Vec<(usize, usize)>) -> ChunkListSim {
+        ChunkListSim { chunks, next: 0, owned: false, task_overhead: true, ran: Vec::new() }
+    }
+}
+
+impl SimSched for ChunkListSim {
+    fn acquire(&mut self, tid: usize, now: f64, ctx: &mut SimCtx) -> Acquire {
+        if self.owned {
+            if self.ran[tid] {
+                return Acquire::Done;
+            }
+            self.ran[tid] = true;
+            match self.chunks.get(tid) {
+                Some(&(lo, hi)) if lo < hi => {
+                    Acquire::Chunk { lo, hi, overhead: ctx.spec.c_dispatch_local }
+                }
+                _ => Acquire::Done,
+            }
+        } else {
+            if self.next >= self.chunks.len() {
+                return Acquire::Done;
+            }
+            let (lo, hi) = self.chunks[self.next];
+            self.next += 1;
+            let mut overhead = ctx.central_op(now, ctx.spec.c_dispatch_central, ctx.spec.c_central_serial);
+            if self.task_overhead {
+                overhead += ctx.spec.c_task_create;
+            }
+            Acquire::Chunk { lo, hi, overhead }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// BinLPT
+// ---------------------------------------------------------------------------
+
+/// BinLPT: LPT-assigned chunk lists per thread, then a claim-anything
+/// rebalance phase through the central queue.
+struct BinlptSim {
+    chunks: Vec<(usize, usize)>,
+    assign: Vec<Vec<usize>>,
+    claimed: Vec<bool>,
+    /// Next index into the thread's own assignment list.
+    own_pos: Vec<usize>,
+    /// Next index into the global chunk list for phase 2.
+    scan: usize,
+}
+
+impl BinlptSim {
+    fn new(weights: &[f64], max_chunks: usize, p: usize) -> BinlptSim {
+        let (chunks, assign) = policy::binlpt_partition(weights, max_chunks, p);
+        let nchunks = chunks.len();
+        BinlptSim { chunks, assign, claimed: vec![false; nchunks], own_pos: vec![0; p], scan: 0 }
+    }
+}
+
+impl SimSched for BinlptSim {
+    fn acquire(&mut self, tid: usize, now: f64, ctx: &mut SimCtx) -> Acquire {
+        // Phase 1: own list (local dispatch — the queue is thread-local).
+        while let Some(&ci) = self.assign[tid].get(self.own_pos[tid]) {
+            self.own_pos[tid] += 1;
+            if !self.claimed[ci] {
+                self.claimed[ci] = true;
+                let (lo, hi) = self.chunks[ci];
+                return Acquire::Chunk { lo, hi, overhead: ctx.spec.c_dispatch_local };
+            }
+        }
+        // Phase 2: claim any unstarted chunk (goes through the shared
+        // claim array — serialize like a central queue op).
+        while self.scan < self.chunks.len() {
+            let ci = self.scan;
+            if self.claimed[ci] {
+                self.scan += 1;
+                continue;
+            }
+            self.claimed[ci] = true;
+            let (lo, hi) = self.chunks[ci];
+            let overhead = ctx.central_op(now, ctx.spec.c_dispatch_central, ctx.spec.c_central_serial);
+            return Acquire::Chunk { lo, hi, overhead };
+        }
+        Acquire::Done
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AWF
+// ---------------------------------------------------------------------------
+
+/// Adaptive Weighted Factoring: central queue; chunk scaled by the
+/// thread's measured relative speed (which, in the simulator, converges
+/// to the core's true speed factor — modeled directly after the first
+/// completed chunk).
+struct AwfSim {
+    n: usize,
+    next: usize,
+    measured: Vec<Option<f64>>,
+}
+
+impl AwfSim {
+    fn new(n: usize, p: usize) -> AwfSim {
+        AwfSim { n, next: 0, measured: vec![None; p] }
+    }
+}
+
+impl SimSched for AwfSim {
+    fn acquire(&mut self, tid: usize, now: f64, ctx: &mut SimCtx) -> Acquire {
+        if self.next >= self.n {
+            return Acquire::Done;
+        }
+        let w = self.measured[tid].unwrap_or(1.0).clamp(0.25, 4.0);
+        let base = policy::guided_chunk(self.n - self.next, 2 * ctx.p, 1);
+        let c = (((base as f64) * w) as usize).max(1).min(self.n - self.next);
+        let lo = self.next;
+        self.next += c;
+        let overhead = ctx.central_op(now, ctx.spec.c_dispatch_central, ctx.spec.c_central_serial);
+        Acquire::Chunk { lo, hi: lo + c, overhead }
+    }
+
+    fn on_complete(&mut self, tid: usize, _lo: usize, _hi: usize, _now: f64, ctx: &mut SimCtx) {
+        // After one chunk the thread "knows" its throughput relative to
+        // the mean; the sim shortcuts the measurement with the true
+        // core speed (what AWF's estimator converges to).
+        let speeds = ctx.spec.core_speeds(ctx.p, 0);
+        let mean = speeds.iter().sum::<f64>() / ctx.p as f64;
+        self.measured[tid] = Some(speeds[tid] / mean);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Work stealing: fixed-chunk `stealing` and adaptive iCh
+// ---------------------------------------------------------------------------
+
+enum WsMode {
+    Fixed(usize),
+    Adaptive(IchParams),
+}
+
+/// Virtual-time mirror of `sched::ws`: per-thread ranges, owner-side
+/// dispatch, random-victim half-stealing, and (for iCh) the adaptive
+/// chunk logic from `sched::policy`.
+struct WsSim {
+    mode: WsMode,
+    /// Per-thread remaining range [begin, end).
+    deques: Vec<(usize, usize)>,
+    states: Vec<IchState>,
+    /// Consecutive failed steals per thread (backoff).
+    fails: Vec<u32>,
+}
+
+impl WsSim {
+    fn fixed(n: usize, p: usize, chunk: usize) -> WsSim {
+        WsSim::new(n, p, WsMode::Fixed(chunk.max(1)))
+    }
+
+    fn adaptive(n: usize, p: usize, prm: IchParams) -> WsSim {
+        WsSim::new(n, p, WsMode::Adaptive(prm))
+    }
+
+    fn new(n: usize, p: usize, mode: WsMode) -> WsSim {
+        let blocks = policy::static_blocks(n, p);
+        let mut deques: Vec<(usize, usize)> = blocks;
+        while deques.len() < p {
+            deques.push((0, 0));
+        }
+        let d0 = match &mode {
+            WsMode::Adaptive(prm) => prm.d0.unwrap_or(p as f64).max(policy::D_MIN),
+            WsMode::Fixed(_) => policy::D_MIN,
+        };
+        let _ = n;
+        WsSim { mode, deques, states: vec![IchState { k: 0.0, d: d0 }; p], fails: vec![0; p] }
+    }
+
+    fn remaining(&self, tid: usize) -> usize {
+        self.deques[tid].1 - self.deques[tid].0
+    }
+
+    fn chunk_for(&self, tid: usize) -> usize {
+        match &self.mode {
+            WsMode::Fixed(c) => *c,
+            WsMode::Adaptive(_) => policy::ich_chunk(self.remaining(tid).max(1), self.states[tid].d),
+        }
+    }
+}
+
+impl SimSched for WsSim {
+    fn acquire(&mut self, tid: usize, now: f64, ctx: &mut SimCtx) -> Acquire {
+        // Own queue first.
+        let rem = self.remaining(tid);
+        if rem > 0 {
+            let c = self.chunk_for(tid).max(1).min(rem);
+            let lo = self.deques[tid].0;
+            self.deques[tid].0 += c;
+            self.fails[tid] = 0;
+            // iCh pays the adaptation pass on each dispatch (reads p
+            // counters + classification).
+            let adapt_cost = match &self.mode {
+                WsMode::Adaptive(_) => ctx.spec.c_adapt_base + ctx.spec.c_adapt_per_thread * ctx.p as f64,
+                WsMode::Fixed(_) => 0.0,
+            };
+            return Acquire::Chunk { lo, hi: lo + c, overhead: ctx.spec.c_dispatch_local + adapt_cost };
+        }
+
+        // Terminate once everything has been *executed* (threads spin
+        // while the last chunks are in flight, as in the real runtime).
+        if ctx.executed >= ctx.n {
+            return Acquire::Done;
+        }
+        if ctx.p == 1 {
+            return Acquire::Busy { until: now + ctx.spec.c_steal_fail };
+        }
+
+        // Random-victim steal attempt (§3.3).
+        let mut v = ctx.rng.below(ctx.p - 1);
+        if v >= tid {
+            v += 1;
+        }
+        let vrem = self.remaining(v);
+        if vrem == 0 {
+            ctx.steals_fail += 1;
+            self.fails[tid] = (self.fails[tid] + 1).min(6);
+            // Exponential backoff keeps the event count bounded while
+            // matching real spin-with-pause behaviour.
+            let backoff = ctx.spec.c_steal_fail * f64::from(1u32 << self.fails[tid]);
+            return Acquire::Busy { until: now + backoff };
+        }
+        // Steal half through the victim's queue lock; cross-socket
+        // steals pay the NUMA multiplier.
+        let numa = if ctx.socket_of(tid) == ctx.socket_of(v) { 1.0 } else { ctx.spec.numa_steal_mult };
+        let cost = ctx.queue_op(v, now, ctx.spec.c_steal_ok * numa, ctx.spec.c_steal_serial * numa);
+        let half = vrem.div_ceil(2);
+        let ne = self.deques[v].1 - half;
+        let stolen = (ne, self.deques[v].1);
+        self.deques[v].1 = ne;
+        self.deques[tid] = stolen;
+        ctx.steals_ok += 1;
+        self.fails[tid] = 0;
+        if let WsMode::Adaptive(prm) = &self.mode {
+            let merged = match prm.merge {
+                StealMerge::Average => policy::steal_merge(self.states[tid], self.states[v]),
+                StealMerge::Victim => self.states[v],
+                StealMerge::Keep => self.states[tid],
+            };
+            self.states[tid] = merged;
+            self.states[tid].d = policy::clamp_chunk_to_stolen(half, half, self.states[tid].d);
+        }
+        // Per Listing 1 the thief immediately starts on the stolen
+        // range (lines 23–24 set begin/end and the thread proceeds to
+        // execute). Dispatching here — with the steal latency folded
+        // into the chunk's overhead — also prevents the degenerate
+        // mutual-re-steal livelock a pure "steal then re-acquire"
+        // model exhibits at p=2 on a 1-iteration remainder.
+        let c = self.chunk_for(tid).max(1).min(half);
+        let lo = self.deques[tid].0;
+        self.deques[tid].0 += c;
+        Acquire::Chunk { lo, hi: lo + c, overhead: cost + ctx.spec.c_dispatch_local }
+    }
+
+    fn on_complete(&mut self, tid: usize, lo: usize, hi: usize, _now: f64, ctx: &mut SimCtx) {
+        let st = &mut self.states[tid];
+        st.k += (hi - lo) as f64;
+        if let WsMode::Adaptive(prm) = &self.mode {
+            // §3.2: classify against μ ± δ over *all* threads' k.
+            let mu = self.states.iter().map(|s| s.k).sum::<f64>() / ctx.p as f64;
+            let delta = policy::delta(prm.eps, mu);
+            let st = &mut self.states[tid];
+            let class = policy::classify(st.k, mu, delta);
+            st.d = if prm.inverted { policy::adapt_inverted(st.d, class) } else { policy::adapt(st.d, class) };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::engine::{simulate_loop, LoopSpec};
+    use crate::sim::machine::MachineSpec;
+
+    fn run(policy: &Policy, weights: Vec<f64>, p: usize) -> crate::sim::engine::SimResult {
+        let spec = MachineSpec::default();
+        let ls = LoopSpec::new(weights, 0.0);
+        let mut pol = make_sim_policy(policy, &ls.weights, p);
+        simulate_loop(&spec, p, &ls, 42, pol.as_mut())
+    }
+
+    fn all_policies() -> Vec<Policy> {
+        vec![
+            Policy::Static,
+            Policy::Dynamic { chunk: 2 },
+            Policy::Guided { chunk: 1 },
+            Policy::Taskloop { num_tasks: 0 },
+            Policy::Factoring { alpha: 2.0 },
+            Policy::Binlpt { max_chunks: 16 },
+            Policy::Stealing { chunk: 2 },
+            Policy::Ich(IchParams::default()),
+            Policy::Awf,
+            Policy::Hss,
+        ]
+    }
+
+    #[test]
+    fn every_policy_simulates_all_iterations() {
+        let weights: Vec<f64> = (0..500).map(|i| 1.0 + (i % 13) as f64).collect();
+        for pol in all_policies() {
+            for &p in &[1usize, 4, 28] {
+                let r = run(&pol, weights.clone(), p);
+                assert_eq!(
+                    r.iters_per_thread.iter().sum::<u64>(),
+                    500,
+                    "policy {} p={p}",
+                    pol.name()
+                );
+                assert!(r.time > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_work_speeds_up_with_threads() {
+        // 2000 unit-100 iterations: any sane policy gets near-linear
+        // speedup from 1 → 8 threads on a compute-bound loop.
+        let weights = vec![100.0; 2000];
+        for pol in [Policy::Ich(IchParams::default()), Policy::Dynamic { chunk: 2 }, Policy::Guided { chunk: 1 }] {
+            let t1 = run(&pol, weights.clone(), 1).time;
+            let t8 = run(&pol, weights.clone(), 8).time;
+            let sp = t1 / t8;
+            assert!(sp > 5.0, "policy {} speedup(8) = {sp:.2}", pol.name());
+        }
+    }
+
+    #[test]
+    fn ich_steals_on_imbalance() {
+        // All the work in the first block: iCh must steal.
+        let mut weights = vec![1.0; 1000];
+        for w in weights.iter_mut().take(250) {
+            *w = 500.0;
+        }
+        let r = run(&Policy::Ich(IchParams::default()), weights, 4);
+        assert!(r.steals_ok > 0, "expected steals, got {:?}", r);
+    }
+
+    #[test]
+    fn stealing_beats_static_on_imbalance() {
+        let mut weights = vec![1.0; 2800];
+        for w in weights.iter_mut().take(100) {
+            *w = 1000.0;
+        }
+        let t_static = run(&Policy::Static, weights.clone(), 28).time;
+        let t_steal = run(&Policy::Stealing { chunk: 1 }, weights.clone(), 28).time;
+        assert!(
+            t_steal < t_static * 0.6,
+            "stealing {t_steal:.0} should beat static {t_static:.0} by a wide margin"
+        );
+    }
+
+    #[test]
+    fn dynamic_chunk1_pays_overhead_on_tiny_iterations() {
+        // Tiny iterations: dynamic,1 drowns in central dispatch
+        // overhead vs guided's big chunks (the paper's SpMV pathology).
+        let weights = vec![2.0; 50_000];
+        let t_dyn = run(&Policy::Dynamic { chunk: 1 }, weights.clone(), 28).time;
+        let t_gui = run(&Policy::Guided { chunk: 1 }, weights.clone(), 28).time;
+        assert!(t_gui * 2.0 < t_dyn, "guided {t_gui:.0} vs dynamic,1 {t_dyn:.0}");
+    }
+
+    #[test]
+    fn guided_collapses_on_decreasing_workload() {
+        // Exp-decreasing: guided gives the huge first chunks to the
+        // heaviest iterations — one thread drags the loop (Fig 4).
+        let mut rng = crate::util::rng::Rng::new(9);
+        let mut w: Vec<f64> = (0..20_000).map(|_| rng.exponential(1000.0)).collect();
+        w.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let t_gui = run(&Policy::Guided { chunk: 1 }, w.clone(), 28).time;
+        let t_dyn = run(&Policy::Dynamic { chunk: 3 }, w.clone(), 28).time;
+        assert!(t_dyn < t_gui, "dynamic {t_dyn:.0} should beat guided {t_gui:.0} on Exp-Dec");
+    }
+
+    #[test]
+    fn deterministic() {
+        let weights: Vec<f64> = (0..1000).map(|i| 1.0 + (i % 7) as f64).collect();
+        let a = run(&Policy::Ich(IchParams::default()), weights.clone(), 14);
+        let b = run(&Policy::Ich(IchParams::default()), weights, 14);
+        assert_eq!(a.time, b.time);
+        assert_eq!(a.steals_ok, b.steals_ok);
+    }
+}

@@ -1,0 +1,158 @@
+//! Synthetic sparse-matrix generators: the structural classes found in
+//! the paper's Table 1 inputs. `suite.rs` instantiates one per paper
+//! input with matched statistics.
+
+use super::CsrMatrix;
+use crate::util::rng::Rng;
+
+/// Banded matrix: each row has nonzeros in a band of `band` columns
+/// around the diagonal (hugebubbles/road_usa/mesh class: near-zero
+/// row-degree variance).
+pub fn banded(n: usize, band: usize, seed: u64) -> CsrMatrix {
+    let mut rng = Rng::new(seed);
+    let mut t = Vec::new();
+    for r in 0..n {
+        t.push((r, r, 1.0 + rng.next_f64() as f32));
+        for k in 1..=band / 2 {
+            if r >= k {
+                t.push((r, r - k, rng.next_f64() as f32 - 0.5));
+            }
+            if r + k < n {
+                t.push((r, r + k, rng.next_f64() as f32 - 0.5));
+            }
+        }
+    }
+    CsrMatrix::from_triplets(n, n, t)
+}
+
+/// Near-regular matrix: every row has `deg ± jitter` nonzeros at
+/// random columns (kmer_* class: tiny variance, ratio ≈ small).
+pub fn regular_random(n: usize, deg: usize, jitter: usize, seed: u64) -> CsrMatrix {
+    let mut rng = Rng::new(seed);
+    let mut t = Vec::new();
+    for r in 0..n {
+        let d = if jitter == 0 { deg } else { rng.range(deg.saturating_sub(jitter), deg + jitter) };
+        for _ in 0..d.max(1) {
+            t.push((r, rng.below(n), rng.next_f64() as f32));
+        }
+    }
+    CsrMatrix::from_triplets(n, n, t)
+}
+
+/// Power-law rows: row degrees from a truncated power law (web-crawl
+/// class: arabic-2005, uk-2005, wikipedia — huge ratio and variance).
+/// Hubs sit at low row ids; columns biased low (web-link locality).
+pub fn power_law(n: usize, gamma: f64, max_deg: usize, seed: u64) -> CsrMatrix {
+    let mut rng = Rng::new(seed);
+    let mut t = Vec::new();
+    for r in 0..n {
+        // Sort-free hub placement: low ids draw from the tail more often.
+        let d = rng.power_law(1.0, max_deg as f64, gamma) as usize;
+        let d = d.clamp(1, n);
+        for _ in 0..d {
+            let u = rng.next_f64();
+            t.push((r, ((u * u * n as f64) as usize).min(n - 1), rng.next_f64() as f32));
+        }
+    }
+    CsrMatrix::from_triplets(n, n, t)
+}
+
+/// Spike matrix: mostly small rows plus a few enormous ones
+/// (FullChip class: power-net rows touching millions of cells —
+/// ratio ~1e6 in Table 1).
+pub fn spike(n: usize, base_deg: usize, nspikes: usize, spike_deg: usize, seed: u64) -> CsrMatrix {
+    let mut rng = Rng::new(seed);
+    let mut t = Vec::new();
+    for r in 0..n {
+        for _ in 0..base_deg.max(1) {
+            t.push((r, rng.below(n), rng.next_f64() as f32));
+        }
+    }
+    for s in 0..nspikes {
+        let r = (s * n / nspikes.max(1)).min(n - 1);
+        for _ in 0..spike_deg.min(n) {
+            t.push((r, rng.below(n), rng.next_f64() as f32));
+        }
+    }
+    CsrMatrix::from_triplets(n, n, t)
+}
+
+/// 2-D 5-point mesh (AS365/delaunay class: planar meshes, degree ≈ 4-6).
+pub fn mesh2d(side: usize, seed: u64) -> CsrMatrix {
+    let n = side * side;
+    let mut rng = Rng::new(seed);
+    let mut t = Vec::new();
+    let id = |i: usize, j: usize| i * side + j;
+    for i in 0..side {
+        for j in 0..side {
+            let r = id(i, j);
+            t.push((r, r, 4.0));
+            if i > 0 {
+                t.push((r, id(i - 1, j), -(rng.next_f64() as f32)));
+            }
+            if i + 1 < side {
+                t.push((r, id(i + 1, j), -(rng.next_f64() as f32)));
+            }
+            if j > 0 {
+                t.push((r, id(i, j - 1), -(rng.next_f64() as f32)));
+            }
+            if j + 1 < side {
+                t.push((r, id(i, j + 1), -(rng.next_f64() as f32)));
+            }
+        }
+    }
+    CsrMatrix::from_triplets(n, n, t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::stats::row_stats;
+
+    #[test]
+    fn banded_has_no_variance() {
+        let a = banded(500, 6, 1);
+        let s = row_stats(&a);
+        assert!(s.variance < 1.5, "banded variance {}", s.variance);
+        assert!(s.ratio < 2.5, "banded ratio {}", s.ratio);
+    }
+
+    #[test]
+    fn regular_random_tight() {
+        let a = regular_random(1000, 8, 1, 2);
+        let s = row_stats(&a);
+        // duplicates can shave a couple of entries; stays tight
+        assert!((6.0..=9.5).contains(&s.mean), "mean {}", s.mean);
+        assert!(s.variance < 3.0);
+    }
+
+    #[test]
+    fn power_law_heavy() {
+        let a = power_law(5_000, 1.9, 2_000, 3);
+        let s = row_stats(&a);
+        assert!(s.ratio > 50.0, "ratio {}", s.ratio);
+        assert!(s.variance > 50.0, "variance {}", s.variance);
+    }
+
+    #[test]
+    fn spike_extreme_ratio() {
+        let a = spike(2_000, 3, 4, 1_500, 4);
+        let s = row_stats(&a);
+        assert!(s.ratio > 100.0, "ratio {}", s.ratio);
+    }
+
+    #[test]
+    fn mesh_degrees_four_to_five() {
+        let a = mesh2d(20, 5);
+        assert_eq!(a.nrows, 400);
+        let s = row_stats(&a);
+        assert!((3.0..=5.0).contains(&s.mean), "mean {}", s.mean);
+    }
+
+    #[test]
+    fn generators_deterministic() {
+        let a = power_law(500, 2.1, 100, 9);
+        let b = power_law(500, 2.1, 100, 9);
+        assert_eq!(a.colidx, b.colidx);
+    }
+}

@@ -1,0 +1,107 @@
+//! MatrixMarket coordinate I/O — lets users run the SpMV experiments
+//! on real SuiteSparse downloads when they have them (the shipped
+//! experiments use the synthetic suite; DESIGN.md §3).
+
+use super::CsrMatrix;
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, Write};
+
+/// Read a MatrixMarket `coordinate` file (general or symmetric,
+/// `real`/`integer`/`pattern` fields).
+pub fn read_matrix_market(path: &str) -> Result<CsrMatrix> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {path}"))?;
+    let mut lines = std::io::BufReader::new(f).lines();
+    let header = lines.next().context("empty file")??;
+    if !header.starts_with("%%MatrixMarket") {
+        bail!("not a MatrixMarket file: {header}");
+    }
+    let symmetric = header.contains("symmetric");
+    let pattern = header.contains("pattern");
+
+    let mut dims: Option<(usize, usize, usize)> = None;
+    let mut t: Vec<(usize, usize, f32)> = Vec::new();
+    for line in lines {
+        let line = line?;
+        let s = line.trim();
+        if s.is_empty() || s.starts_with('%') {
+            continue;
+        }
+        let mut it = s.split_whitespace();
+        if dims.is_none() {
+            let nr: usize = it.next().context("rows")?.parse()?;
+            let nc: usize = it.next().context("cols")?.parse()?;
+            let nnz: usize = it.next().context("nnz")?.parse()?;
+            dims = Some((nr, nc, nnz));
+            t.reserve(nnz);
+            continue;
+        }
+        let r: usize = it.next().context("row")?.parse::<usize>()? - 1;
+        let c: usize = it.next().context("col")?.parse::<usize>()? - 1;
+        let v: f32 = if pattern { 1.0 } else { it.next().map(|x| x.parse()).transpose()?.unwrap_or(1.0) };
+        t.push((r, c, v));
+        if symmetric && r != c {
+            t.push((c, r, v));
+        }
+    }
+    let (nr, nc, _) = dims.context("missing size line")?;
+    Ok(CsrMatrix::from_triplets(nr, nc, t))
+}
+
+/// Write a matrix in MatrixMarket general/real coordinate format.
+pub fn write_matrix_market(a: &CsrMatrix, path: &str) -> Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "%%MatrixMarket matrix coordinate real general")?;
+    writeln!(f, "{} {} {}", a.nrows, a.ncols, a.nnz())?;
+    for r in 0..a.nrows {
+        for (c, v) in a.row_cols(r).iter().zip(a.row_vals(r)) {
+            writeln!(f, "{} {} {}", r + 1, *c + 1, v)?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen;
+
+    #[test]
+    fn roundtrip() {
+        let a = gen::regular_random(50, 4, 1, 7);
+        let path = "/tmp/ich_io_test.mtx";
+        write_matrix_market(&a, path).unwrap();
+        let b = read_matrix_market(path).unwrap();
+        assert_eq!(a.nrows, b.nrows);
+        assert_eq!(a.rowptr, b.rowptr);
+        assert_eq!(a.colidx, b.colidx);
+    }
+
+    #[test]
+    fn symmetric_expansion() {
+        let path = "/tmp/ich_io_sym.mtx";
+        std::fs::write(
+            path,
+            "%%MatrixMarket matrix coordinate real symmetric\n3 3 2\n2 1 5.0\n3 3 1.0\n",
+        )
+        .unwrap();
+        let a = read_matrix_market(path).unwrap();
+        assert_eq!(a.nnz(), 3); // (1,0), (0,1), (2,2)
+        assert_eq!(a.spmv_row(0, &[0.0, 1.0, 0.0]), 5.0);
+        assert_eq!(a.spmv_row(1, &[1.0, 0.0, 0.0]), 5.0);
+    }
+
+    #[test]
+    fn pattern_defaults_to_one() {
+        let path = "/tmp/ich_io_pat.mtx";
+        std::fs::write(path, "%%MatrixMarket matrix coordinate pattern general\n2 2 2\n1 1\n2 2\n").unwrap();
+        let a = read_matrix_market(path).unwrap();
+        assert_eq!(a.row_vals(0), &[1.0]);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let path = "/tmp/ich_io_bad.mtx";
+        std::fs::write(path, "hello world\n").unwrap();
+        assert!(read_matrix_market(path).is_err());
+    }
+}

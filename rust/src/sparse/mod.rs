@@ -1,0 +1,203 @@
+//! Sparse-matrix substrate backing the SpMV application and the
+//! paper's Fig 1 / Table 1: CSR storage, synthetic stand-ins for the
+//! SuiteSparse input suite, reverse Cuthill–McKee ordering, per-input
+//! statistics, and MatrixMarket I/O.
+
+pub mod gen;
+pub mod io;
+pub mod rcm;
+pub mod stats;
+pub mod suite;
+
+/// Compressed-sparse-row matrix (f32 values — SpMV is the paper's
+/// memory-bound kernel, f32 keeps bandwidth comparable to the HPC
+/// codes it models).
+#[derive(Clone, Debug)]
+pub struct CsrMatrix {
+    pub nrows: usize,
+    pub ncols: usize,
+    /// Row pointers, length `nrows + 1`.
+    pub rowptr: Vec<usize>,
+    /// Column indices per row (sorted within a row).
+    pub colidx: Vec<u32>,
+    /// Nonzero values, parallel to `colidx`.
+    pub values: Vec<f32>,
+}
+
+impl CsrMatrix {
+    /// Build from (row, col, val) triplets; duplicates are summed.
+    pub fn from_triplets(nrows: usize, ncols: usize, mut t: Vec<(usize, usize, f32)>) -> CsrMatrix {
+        t.sort_unstable_by_key(|&(r, c, _)| (r, c));
+        let mut rowptr = vec![0usize; nrows + 1];
+        let mut colidx: Vec<u32> = Vec::with_capacity(t.len());
+        let mut values: Vec<f32> = Vec::with_capacity(t.len());
+        let mut prev: Option<(usize, usize)> = None;
+        for &(r, c, v) in &t {
+            assert!(r < nrows && c < ncols, "triplet ({r},{c}) out of bounds");
+            if prev == Some((r, c)) {
+                // duplicate entry: sum
+                *values.last_mut().unwrap() += v;
+                continue;
+            }
+            prev = Some((r, c));
+            colidx.push(c as u32);
+            values.push(v);
+            rowptr[r + 1] = colidx.len();
+        }
+        // rowptr[i+1] holds the end of row i only where row i had
+        // entries; propagate forward so empty rows share boundaries.
+        for i in 1..=nrows {
+            if rowptr[i] < rowptr[i - 1] {
+                rowptr[i] = rowptr[i - 1];
+            }
+        }
+        CsrMatrix { nrows, ncols, rowptr, colidx, values }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.colidx.len()
+    }
+
+    /// Nonzeros in row `r`.
+    #[inline]
+    pub fn row_nnz(&self, r: usize) -> usize {
+        self.rowptr[r + 1] - self.rowptr[r]
+    }
+
+    /// Column indices of row `r`.
+    #[inline]
+    pub fn row_cols(&self, r: usize) -> &[u32] {
+        &self.colidx[self.rowptr[r]..self.rowptr[r + 1]]
+    }
+
+    /// Values of row `r`.
+    #[inline]
+    pub fn row_vals(&self, r: usize) -> &[f32] {
+        &self.values[self.rowptr[r]..self.rowptr[r + 1]]
+    }
+
+    /// Per-row nnz as f64 — the workload-estimate vector (BinLPT input,
+    /// sim weights, Fig 1c histogram).
+    pub fn row_weights(&self) -> Vec<f64> {
+        (0..self.nrows).map(|r| self.row_nnz(r) as f64).collect()
+    }
+
+    /// Sequential SpMV reference: y = A·x.
+    pub fn spmv_seq(&self, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), self.ncols);
+        assert_eq!(y.len(), self.nrows);
+        for r in 0..self.nrows {
+            let mut acc = 0.0f32;
+            for (c, v) in self.row_cols(r).iter().zip(self.row_vals(r)) {
+                acc += v * x[*c as usize];
+            }
+            y[r] = acc;
+        }
+    }
+
+    /// One row's dot product (the parallel per-iteration body).
+    #[inline]
+    pub fn spmv_row(&self, r: usize, x: &[f32]) -> f32 {
+        let mut acc = 0.0f32;
+        for (c, v) in self.row_cols(r).iter().zip(self.row_vals(r)) {
+            acc += v * x[*c as usize];
+        }
+        acc
+    }
+
+    /// Apply a symmetric permutation: B[i, j] = A[perm[i], perm[j]]
+    /// (used by RCM; `perm[new_index] = old_index`).
+    pub fn permute(&self, perm: &[usize]) -> CsrMatrix {
+        assert_eq!(self.nrows, self.ncols, "symmetric permutation needs a square matrix");
+        assert_eq!(perm.len(), self.nrows);
+        let mut inv = vec![0usize; perm.len()];
+        for (new, &old) in perm.iter().enumerate() {
+            inv[old] = new;
+        }
+        let mut t = Vec::with_capacity(self.nnz());
+        for r in 0..self.nrows {
+            for (c, v) in self.row_cols(r).iter().zip(self.row_vals(r)) {
+                t.push((inv[r], inv[*c as usize], *v));
+            }
+        }
+        CsrMatrix::from_triplets(self.nrows, self.ncols, t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> CsrMatrix {
+        // [1 2 0]
+        // [0 0 3]
+        // [4 0 5]
+        CsrMatrix::from_triplets(
+            3,
+            3,
+            vec![(0, 0, 1.0), (0, 1, 2.0), (1, 2, 3.0), (2, 0, 4.0), (2, 2, 5.0)],
+        )
+    }
+
+    #[test]
+    fn from_triplets_builds_csr() {
+        let a = small();
+        assert_eq!(a.nnz(), 5);
+        assert_eq!(a.rowptr, vec![0, 2, 3, 5]);
+        assert_eq!(a.row_cols(0), &[0, 1]);
+        assert_eq!(a.row_cols(2), &[0, 2]);
+        assert_eq!(a.row_nnz(1), 1);
+    }
+
+    #[test]
+    fn empty_rows_ok() {
+        let a = CsrMatrix::from_triplets(4, 4, vec![(0, 0, 1.0), (3, 3, 2.0)]);
+        assert_eq!(a.rowptr, vec![0, 1, 1, 1, 2]);
+        assert_eq!(a.row_nnz(1), 0);
+        assert_eq!(a.row_nnz(2), 0);
+    }
+
+    #[test]
+    fn duplicates_summed() {
+        let a = CsrMatrix::from_triplets(2, 2, vec![(0, 0, 1.0), (0, 0, 2.5), (1, 1, 1.0)]);
+        assert_eq!(a.nnz(), 2);
+        assert_eq!(a.row_vals(0), &[3.5]);
+    }
+
+    #[test]
+    fn spmv_matches_dense() {
+        let a = small();
+        let x = [1.0, 2.0, 3.0];
+        let mut y = [0.0; 3];
+        a.spmv_seq(&x, &mut y);
+        assert_eq!(y, [5.0, 9.0, 19.0]);
+        for r in 0..3 {
+            assert_eq!(a.spmv_row(r, &x), y[r]);
+        }
+    }
+
+    #[test]
+    fn permute_identity_roundtrip() {
+        let a = small();
+        let b = a.permute(&[0, 1, 2]);
+        assert_eq!(a.rowptr, b.rowptr);
+        assert_eq!(a.colidx, b.colidx);
+    }
+
+    #[test]
+    fn permute_reverse() {
+        let a = small();
+        let b = a.permute(&[2, 1, 0]);
+        // B[0,0] = A[2,2] = 5
+        assert_eq!(b.spmv_row(0, &[1.0, 0.0, 0.0]), 5.0);
+        // B row 0 = old row 2 reversed-cols: entries at (2,0)->(0,2)=4
+        let x = [0.0, 0.0, 1.0];
+        assert_eq!(b.spmv_row(0, &x), 4.0);
+    }
+
+    #[test]
+    fn row_weights_are_nnz() {
+        let a = small();
+        assert_eq!(a.row_weights(), vec![2.0, 1.0, 2.0]);
+    }
+}

@@ -1,0 +1,73 @@
+//! Per-input statistics reported by the paper's Table 1: mean row
+//! degree x̄, max/min ratio, variance σ² of the number of outgoing
+//! edges per vertex.
+
+use super::CsrMatrix;
+use crate::util::stats;
+
+/// Table-1-style row statistics.
+#[derive(Clone, Copy, Debug)]
+pub struct RowStats {
+    pub nrows: usize,
+    pub nnz: usize,
+    /// x̄ — average number of outgoing edges per vertex.
+    pub mean: f64,
+    /// max degree / min degree (min clamped to 1 as in the paper,
+    /// where inputs with isolated rows still report finite ratios).
+    pub ratio: f64,
+    /// σ² — population variance of row degrees.
+    pub variance: f64,
+}
+
+/// Compute Table-1 statistics for a matrix.
+pub fn row_stats(a: &CsrMatrix) -> RowStats {
+    let degs: Vec<f64> = a.row_weights();
+    let mean = stats::mean(&degs);
+    let max = degs.iter().cloned().fold(0.0f64, f64::max);
+    let min = degs.iter().cloned().fold(f64::INFINITY, f64::min).max(1.0);
+    RowStats { nrows: a.nrows, nnz: a.nnz(), mean, ratio: max / min, variance: stats::variance(&degs) }
+}
+
+/// The paper's empirical threshold (§6.1): iCh shines when the
+/// row-degree variance is high (σ² ≥ 4.8) and loses its edge on
+/// low-variance inputs.
+pub fn high_variance(s: &RowStats) -> bool {
+    s.variance >= 4.8
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::CsrMatrix;
+
+    #[test]
+    fn stats_of_known_matrix() {
+        // rows with 2, 1, 2 nonzeros
+        let a = CsrMatrix::from_triplets(
+            3,
+            3,
+            vec![(0, 0, 1.0), (0, 1, 1.0), (1, 2, 1.0), (2, 0, 1.0), (2, 2, 1.0)],
+        );
+        let s = row_stats(&a);
+        assert_eq!(s.nrows, 3);
+        assert_eq!(s.nnz, 5);
+        assert!((s.mean - 5.0 / 3.0).abs() < 1e-12);
+        assert_eq!(s.ratio, 2.0);
+        assert!(s.variance > 0.0);
+    }
+
+    #[test]
+    fn empty_row_ratio_clamped() {
+        let a = CsrMatrix::from_triplets(2, 2, vec![(0, 0, 1.0), (0, 1, 1.0)]);
+        let s = row_stats(&a);
+        assert_eq!(s.ratio, 2.0); // min clamped to 1
+    }
+
+    #[test]
+    fn variance_threshold() {
+        let lo = RowStats { nrows: 1, nnz: 1, mean: 1.0, ratio: 1.0, variance: 1.0 };
+        let hi = RowStats { variance: 100.0, ..lo };
+        assert!(!high_variance(&lo));
+        assert!(high_variance(&hi));
+    }
+}

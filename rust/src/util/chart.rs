@@ -1,0 +1,148 @@
+//! ASCII charts: grouped bar charts (speedup figures 4–7) and simple
+//! scatter/spy plots (Fig 1). The harness prints these so every figure
+//! in the paper has a terminal-rendered analog, alongside the JSON the
+//! plots are derived from.
+
+/// A grouped bar chart: one group per x-label (e.g. thread count),
+/// one bar per series (e.g. scheduler).
+#[derive(Clone, Debug)]
+pub struct BarChart {
+    pub title: String,
+    pub ylabel: String,
+    pub groups: Vec<String>,
+    pub series: Vec<(String, Vec<f64>)>,
+    pub width: usize,
+}
+
+impl BarChart {
+    pub fn new(title: &str, ylabel: &str) -> BarChart {
+        BarChart {
+            title: title.to_string(),
+            ylabel: ylabel.to_string(),
+            groups: Vec::new(),
+            series: Vec::new(),
+            width: 50,
+        }
+    }
+
+    pub fn groups<S: Into<String>, I: IntoIterator<Item = S>>(&mut self, g: I) -> &mut Self {
+        self.groups = g.into_iter().map(Into::into).collect();
+        self
+    }
+
+    pub fn series(&mut self, name: &str, values: Vec<f64>) -> &mut Self {
+        assert_eq!(values.len(), self.groups.len(), "series arity must match groups");
+        self.series.push((name.to_string(), values));
+        self
+    }
+
+    /// Render horizontal bars grouped by x-label.
+    pub fn render(&self) -> String {
+        let maxv = self
+            .series
+            .iter()
+            .flat_map(|(_, v)| v.iter().copied())
+            .fold(0.0_f64, f64::max)
+            .max(1e-12);
+        let name_w = self.series.iter().map(|(n, _)| n.len()).max().unwrap_or(4).max(4);
+        let mut out = format!("# {} ({})\n", self.title, self.ylabel);
+        for (gi, g) in self.groups.iter().enumerate() {
+            out.push_str(&format!("{g}:\n"));
+            for (name, vals) in &self.series {
+                let v = vals[gi];
+                let n = ((v / maxv) * self.width as f64).round().max(0.0) as usize;
+                out.push_str(&format!(
+                    "  {:<w$} |{}{} {:.2}\n",
+                    name,
+                    "#".repeat(n),
+                    " ".repeat(self.width.saturating_sub(n)),
+                    v,
+                    w = name_w
+                ));
+            }
+        }
+        out
+    }
+}
+
+/// Render a log-scale dot-line (Fig 1c style: binned counts, log y).
+pub fn log_dots(title: &str, bins: &[(String, f64)], width: usize) -> String {
+    let maxv = bins.iter().map(|(_, v)| *v).fold(0.0_f64, f64::max).max(1.0);
+    let lmax = maxv.ln_1p();
+    let label_w = bins.iter().map(|(l, _)| l.len()).max().unwrap_or(4);
+    let mut out = format!("# {title} (log scale)\n");
+    for (label, v) in bins {
+        let n = ((v.ln_1p() / lmax) * width as f64).round() as usize;
+        out.push_str(&format!("  {:<w$} |{} {}\n", label, "*".repeat(n), *v as u64, w = label_w));
+    }
+    out
+}
+
+/// ASCII "spy plot" of a sparse matrix: downsample the nonzero pattern
+/// into a rows×cols character grid (Fig 1a/1b analog).
+pub fn spy<'a>(title: &str, nrows: usize, ncols: usize, nnz_at: &dyn Fn(usize) -> &'a [usize], grid: usize) -> String {
+    let g = grid.max(4);
+    let mut cells = vec![false; g * g];
+    for r in 0..nrows {
+        let gr = r * g / nrows.max(1);
+        for &c in nnz_at(r) {
+            let gc = c * g / ncols.max(1);
+            cells[gr * g + gc] = true;
+        }
+    }
+    let mut out = format!("# {title} ({nrows}x{ncols}, {g}x{g} grid)\n");
+    for gr in 0..g {
+        out.push_str("  ");
+        for gc in 0..g {
+            out.push(if cells[gr * g + gc] { '#' } else { '.' });
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn barchart_renders_all_series() {
+        let mut c = BarChart::new("t", "speedup");
+        c.groups(["p=1", "p=2"]);
+        c.series("ich", vec![1.0, 2.0]);
+        c.series("guided", vec![1.0, 1.5]);
+        let s = c.render();
+        assert!(s.contains("p=1:"));
+        assert!(s.contains("ich"));
+        assert!(s.contains("guided"));
+        assert!(s.contains("2.00"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn barchart_arity_checked() {
+        let mut c = BarChart::new("t", "y");
+        c.groups(["a"]);
+        c.series("s", vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn log_dots_renders() {
+        let s = log_dots("hist", &[("0-49".into(), 1e6), ("50-99".into(), 10.0)], 40);
+        assert!(s.contains("0-49"));
+        assert!(s.contains("1000000"));
+        // log scale: the 1e6 bar should not be 1e5x longer than the 10 bar
+        let l1 = s.lines().nth(1).unwrap().matches('*').count();
+        let l2 = s.lines().nth(2).unwrap().matches('*').count();
+        assert!(l1 > l2 && l1 < l2 * 20);
+    }
+
+    #[test]
+    fn spy_marks_diagonal() {
+        let rows: Vec<Vec<usize>> = (0..16).map(|r| vec![r]).collect();
+        let s = spy("diag", 16, 16, &|r| &rows[r], 8);
+        // Diagonal pattern: first grid row has '#' at col 0.
+        let line1 = s.lines().nth(1).unwrap();
+        assert!(line1.trim_start().starts_with('#'));
+    }
+}

@@ -1,0 +1,137 @@
+//! Minimal command-line argument parser.
+//!
+//! `clap` is not available in this offline build, so the launcher uses
+//! this small parser: positional arguments plus `--key value` /
+//! `--key=value` flags and boolean `--flag` switches.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: ordered positionals and a key→value flag map.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse an iterator of raw arguments (without argv[0]).
+    /// `bool_flags` lists switches that take no value.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I, bool_flags: &[&str]) -> Args {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if bool_flags.contains(&rest) {
+                    out.flags.insert(rest.to_string(), "true".to_string());
+                } else if let Some(v) = it.peek() {
+                    if v.starts_with("--") {
+                        // Next token is another flag: treat as a switch.
+                        out.flags.insert(rest.to_string(), "true".to_string());
+                    } else {
+                        let v = it.next().unwrap();
+                        out.flags.insert(rest.to_string(), v);
+                    }
+                } else {
+                    out.flags.insert(rest.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env(bool_flags: &[&str]) -> Args {
+        Args::parse(std::env::args().skip(1), bool_flags)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).map(|v| v.parse().expect("integer flag")).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).map(|v| v.parse().expect("integer flag")).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).map(|v| v.parse().expect("float flag")).unwrap_or(default)
+    }
+
+    pub fn get_bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Comma-separated list of usize, e.g. `--threads 1,2,4,8`.
+    pub fn get_usize_list(&self, key: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(key) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| s.trim().parse().expect("integer list flag"))
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string()), &["verbose"])
+    }
+
+    #[test]
+    fn positionals_and_flags() {
+        let a = parse(&["run", "--app", "spmv", "--threads=4", "extra"]);
+        assert_eq!(a.positional, vec!["run", "extra"]);
+        assert_eq!(a.get("app"), Some("spmv"));
+        assert_eq!(a.get_usize("threads", 1), 4);
+    }
+
+    #[test]
+    fn bool_flag_no_value() {
+        let a = parse(&["x", "--verbose", "--app", "bfs"]);
+        assert!(a.get_bool("verbose"));
+        assert_eq!(a.get("app"), Some("bfs"));
+    }
+
+    #[test]
+    fn flag_before_another_flag_is_switch() {
+        let a = parse(&["--dry", "--app", "bfs"]);
+        assert!(a.get_bool("dry"));
+        assert_eq!(a.get("app"), Some("bfs"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&[]);
+        assert_eq!(a.get_or("app", "synth"), "synth");
+        assert_eq!(a.get_f64("eps", 0.33), 0.33);
+        assert_eq!(a.get_usize_list("threads", &[1, 2]), vec![1, 2]);
+    }
+
+    #[test]
+    fn list_parse() {
+        let a = parse(&["--threads", "1,2,4,8,14,28"]);
+        assert_eq!(a.get_usize_list("threads", &[]), vec![1, 2, 4, 8, 14, 28]);
+    }
+
+    #[test]
+    fn trailing_flag_is_switch() {
+        let a = parse(&["run", "--fast"]);
+        assert!(a.get_bool("fast"));
+    }
+}

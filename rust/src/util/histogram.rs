@@ -1,0 +1,85 @@
+//! Fixed-width binned histograms — used for Fig 1c (rows binned by
+//! nonzero count in increments of 50) and Fig 3b (the exponential
+//! workload distribution).
+
+/// Histogram with fixed-width bins starting at 0.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    pub bin_width: f64,
+    pub counts: Vec<u64>,
+}
+
+impl Histogram {
+    pub fn new(bin_width: f64) -> Histogram {
+        assert!(bin_width > 0.0);
+        Histogram { bin_width, counts: Vec::new() }
+    }
+
+    /// Build from samples in one pass.
+    pub fn of(samples: impl IntoIterator<Item = f64>, bin_width: f64) -> Histogram {
+        let mut h = Histogram::new(bin_width);
+        for s in samples {
+            h.push(s);
+        }
+        h
+    }
+
+    pub fn push(&mut self, x: f64) {
+        let b = (x.max(0.0) / self.bin_width) as usize;
+        if b >= self.counts.len() {
+            self.counts.resize(b + 1, 0);
+        }
+        self.counts[b] += 1;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// First `n` bins as (label, count) pairs, e.g. "0-49".
+    pub fn labeled_bins(&self, n: usize) -> Vec<(String, f64)> {
+        (0..n.min(self.counts.len()))
+            .map(|i| {
+                let lo = (i as f64 * self.bin_width) as u64;
+                let hi = ((i + 1) as f64 * self.bin_width) as u64 - 1;
+                (format!("{lo}-{hi}"), self.counts[i] as f64)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bins_correctly() {
+        let h = Histogram::of([0.0, 49.0, 50.0, 99.0, 100.0].into_iter(), 50.0);
+        assert_eq!(h.counts, vec![2, 2, 1]);
+        assert_eq!(h.total(), 5);
+    }
+
+    #[test]
+    fn negative_clamped_to_zero_bin() {
+        let h = Histogram::of([-5.0].into_iter(), 50.0);
+        assert_eq!(h.counts, vec![1]);
+    }
+
+    #[test]
+    fn labels() {
+        let h = Histogram::of([10.0, 60.0].into_iter(), 50.0);
+        let l = h.labeled_bins(2);
+        assert_eq!(l[0].0, "0-49");
+        assert_eq!(l[1].0, "50-99");
+    }
+
+    #[test]
+    fn exponential_shape() {
+        // The paper's Fig 3b: exponential decays monotonically in
+        // expectation — check coarse monotonicity over big bins.
+        let mut r = crate::util::rng::Rng::new(3);
+        let h = Histogram::of((0..100_000).map(|_| r.exponential(100.0)), 100.0);
+        assert!(h.counts[0] > h.counts[1]);
+        assert!(h.counts[1] > h.counts[2]);
+    }
+}

@@ -1,0 +1,13 @@
+//! Shared substrate: RNG + distributions, statistics, CLI parsing,
+//! JSON/table/chart rendering, histograms, and a property-test helper.
+//! These stand in for `rand`, `serde_json`, `clap`, and `proptest`,
+//! none of which are available in the offline build environment.
+
+pub mod chart;
+pub mod cli;
+pub mod histogram;
+pub mod json;
+pub mod proptest_lite;
+pub mod rng;
+pub mod stats;
+pub mod table;

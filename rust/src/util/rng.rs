@@ -1,0 +1,213 @@
+//! Deterministic pseudo-random number generation and the sampling
+//! distributions the paper's workloads are built from.
+//!
+//! The `rand` crate is unavailable in this offline build, so we carry a
+//! small, well-known generator: splitmix64 for seeding and
+//! xoshiro256** for the stream (Blackman & Vigna). Every stochastic
+//! component in the repository takes an explicit seed through this
+//! type, which makes all experiments bit-for-bit reproducible.
+
+/// xoshiro256** PRNG seeded via splitmix64.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    /// Create a generator from a 64-bit seed. Two generators with the
+    /// same seed produce identical streams.
+    pub fn new(seed: u64) -> Self {
+        // splitmix64 expansion of the seed into the 256-bit state;
+        // guards against the all-zero state xoshiro cannot leave.
+        let mut x = seed.wrapping_add(0x9E3779B97F4A7C15);
+        let mut next = || {
+            x = x.wrapping_add(0x9E3779B97F4A7C15);
+            let mut z = x;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            z ^ (z >> 31)
+        };
+        Rng { s: [next(), next(), next(), next()] }
+    }
+
+    /// Next raw 64-bit value (xoshiro256**).
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        // 53 top bits -> [0,1) with full double precision.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n). `n` must be > 0.
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // Lemire-style multiply-shift; bias negligible for our n.
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Uniform integer in [lo, hi] inclusive.
+    #[inline]
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(hi >= lo);
+        lo + self.below(hi - lo + 1)
+    }
+
+    /// Exponential variate with mean `beta` (pdf (1/β)·e^(−x/β)).
+    /// This is the distribution the paper's synth Exp-* workloads draw
+    /// from with β = 1_000_000 (§5.1, Fig 3b).
+    #[inline]
+    pub fn exponential(&mut self, beta: f64) -> f64 {
+        // Inverse-CDF; guard the log argument away from 0.
+        let u = 1.0 - self.next_f64();
+        -beta * u.ln()
+    }
+
+    /// Standard normal via Box–Muller (polar form avoided for
+    /// simplicity; two uniforms per call, second discarded).
+    pub fn normal(&mut self, mean: f64, sd: f64) -> f64 {
+        let u1 = (1.0 - self.next_f64()).max(f64::MIN_POSITIVE);
+        let u2 = self.next_f64();
+        let z = (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
+        mean + sd * z
+    }
+
+    /// Discrete power-law sample on [xmin, xmax]: P(k) ∝ k^(−gamma).
+    /// Used for the scale-free BFS graphs (γ = 2.3 in the paper) and
+    /// the web-crawl-like matrix rows.
+    pub fn power_law(&mut self, xmin: f64, xmax: f64, gamma: f64) -> f64 {
+        // Inverse-CDF for the truncated continuous power law.
+        debug_assert!(gamma > 1.0 && xmax > xmin && xmin > 0.0);
+        let a = 1.0 - gamma;
+        let lo = xmin.powf(a);
+        let hi = xmax.powf(a);
+        let u = self.next_f64();
+        (lo + u * (hi - lo)).powf(1.0 / a)
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Derive an independent child generator (for per-thread streams).
+    pub fn fork(&mut self) -> Rng {
+        Rng::new(self.next_u64())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_bounds_and_coverage() {
+        let mut r = Rng::new(9);
+        let mut seen = [false; 10];
+        for _ in 0..10_000 {
+            let x = r.below(10);
+            assert!(x < 10);
+            seen[x] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "all buckets should be hit");
+    }
+
+    #[test]
+    fn exponential_mean_close() {
+        let mut r = Rng::new(11);
+        let beta = 1_000_000.0;
+        let n = 200_000;
+        let mean = (0..n).map(|_| r.exponential(beta)).sum::<f64>() / n as f64;
+        assert!((mean - beta).abs() / beta < 0.02, "mean {mean} vs beta {beta}");
+    }
+
+    #[test]
+    fn exponential_nonnegative() {
+        let mut r = Rng::new(13);
+        assert!((0..10_000).all(|_| r.exponential(3.0) >= 0.0));
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(17);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal(5.0, 2.0)).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!((mean - 5.0).abs() < 0.05);
+        assert!((var - 4.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn power_law_bounds_and_skew() {
+        let mut r = Rng::new(23);
+        let n = 100_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.power_law(1.0, 1000.0, 2.3)).collect();
+        assert!(xs.iter().all(|&x| (1.0..=1000.0).contains(&x)));
+        // Power-law mass concentrates at the low end.
+        let below10 = xs.iter().filter(|&&x| x < 10.0).count() as f64 / n as f64;
+        assert!(below10 > 0.8, "expected heavy low-end mass, got {below10}");
+        // ...but the tail must be populated too.
+        assert!(xs.iter().any(|&x| x > 100.0));
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(29);
+        let mut v: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>(), "shuffle should move things");
+    }
+
+    #[test]
+    fn fork_streams_independent() {
+        let mut r = Rng::new(31);
+        let mut c1 = r.fork();
+        let mut c2 = r.fork();
+        assert_ne!(c1.next_u64(), c2.next_u64());
+    }
+}

@@ -1,0 +1,180 @@
+//! Property-based tests (proptest is unavailable offline; these use
+//! `util::proptest_lite` — seeded random cases, small-biased sizes)
+//! over the coordinator's core invariants:
+//!
+//! 1. exactly-once execution for arbitrary (n, p, policy),
+//! 2. the simulator conserves work for arbitrary weight shapes,
+//! 3. iCh's adaptive state stays within its clamps,
+//! 4. partitioning helpers cover the index space exactly.
+
+use ich::sched::policy::{self, Class, IchState};
+use ich::sched::{ForOpts, IchParams, Policy};
+use ich::sim::{simulate_app, LoopSpec, MachineSpec};
+use ich::util::proptest_lite::{arbitrary_weights, check, small_size};
+use std::sync::atomic::{AtomicU64, Ordering::SeqCst};
+
+fn random_policy(rng: &mut ich::util::rng::Rng) -> Policy {
+    match rng.below(8) {
+        0 => Policy::Static,
+        1 => Policy::Dynamic { chunk: 1 + rng.below(64) },
+        2 => Policy::Guided { chunk: 1 + rng.below(4) },
+        3 => Policy::Taskloop { num_tasks: rng.below(40) },
+        4 => Policy::Factoring { alpha: 1.0 + rng.next_f64() * 3.0 },
+        5 => Policy::Binlpt { max_chunks: 1 + rng.below(100) },
+        6 => Policy::Stealing { chunk: 1 + rng.below(64) },
+        _ => Policy::Ich(IchParams::with_eps(0.1 + rng.next_f64() * 0.8)),
+    }
+}
+
+#[test]
+fn prop_exactly_once_execution() {
+    check("exactly-once", 0xA11CE, 60, |rng, _case| {
+        let n = small_size(rng, 0, 3_000);
+        let p = 1 + rng.below(8);
+        let policy = random_policy(rng);
+        let w = arbitrary_weights(rng, n);
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        let opts = ForOpts { threads: p, pin: false, seed: rng.next_u64(), weights: Some(&w) };
+        let m = ich::parallel_for(n, &policy, &opts, &|r| {
+            for i in r {
+                hits[i].fetch_add(1, SeqCst);
+            }
+        });
+        if m.total_iters != n as u64 {
+            return Err(format!("policy {}: metrics {} != n {}", policy.name(), m.total_iters, n));
+        }
+        for (i, h) in hits.iter().enumerate() {
+            let c = h.load(SeqCst);
+            if c != 1 {
+                return Err(format!("policy {} p={p} n={n}: iteration {i} ran {c} times", policy.name()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sim_conserves_work() {
+    let spec = MachineSpec::default();
+    check("sim-conserves-work", 0x51A1, 60, |rng, _case| {
+        let n = small_size(rng, 1, 3_000);
+        let p = 1 + rng.below(28);
+        let policy = random_policy(rng);
+        let w = arbitrary_weights(rng, n);
+        let loops = vec![LoopSpec::new(w.clone(), rng.next_f64())];
+        let r = simulate_app(&spec, p, &loops, &policy, rng.next_u64());
+        let total: u64 = r.iters_per_thread.iter().sum();
+        if total != n as u64 {
+            return Err(format!("policy {} p={p}: simulated {total} of {n} iterations", policy.name()));
+        }
+        // Makespan can never beat the perfect-parallel bound (with the
+        // fastest admissible core speed 1.3).
+        let bound = w.iter().sum::<f64>() / (p as f64 * 1.3);
+        if r.time < bound * 0.999 {
+            return Err(format!("policy {} p={p}: time {} beats physical bound {bound}", policy.name(), r.time));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_ich_state_clamped() {
+    check("ich-d-clamped", 0xD00D, 200, |rng, _case| {
+        let mut st = IchState::init(1 + rng.below(64));
+        for _ in 0..200 {
+            let mu = rng.next_f64() * 1e6;
+            let delta = policy::delta(rng.next_f64(), mu);
+            let class = policy::classify(rng.next_f64() * 2e6, mu, delta);
+            st.d = policy::adapt(st.d, class);
+            if !(policy::D_MIN..=policy::D_MAX).contains(&st.d) {
+                return Err(format!("d escaped clamp: {}", st.d));
+            }
+            let chunk = policy::ich_chunk(1 + rng.below(100_000), st.d);
+            if chunk == 0 {
+                return Err("chunk hit zero on non-empty queue".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_classification_is_total_and_ordered() {
+    check("classify-ordering", 0xC1A55, 300, |rng, _case| {
+        let mu = rng.next_f64() * 1e5;
+        let delta = rng.next_f64() * 1e4;
+        let k = rng.next_f64() * 2e5;
+        let c = policy::classify(k, mu, delta);
+        let want = if k < mu - delta {
+            Class::Low
+        } else if k > mu + delta {
+            Class::High
+        } else {
+            Class::Normal
+        };
+        if c != want {
+            return Err(format!("classify({k}, {mu}, {delta}) = {c:?}, want {want:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_partitions_cover_exactly() {
+    check("partitions-cover", 0xC07E, 120, |rng, _case| {
+        let n = small_size(rng, 0, 5_000);
+        let p = 1 + rng.below(40);
+        let cover = |chunks: &[(usize, usize)], label: &str| -> Result<(), String> {
+            let mut seen = vec![false; n];
+            for &(a, b) in chunks {
+                if a > b || b > n {
+                    return Err(format!("{label}: bad chunk ({a},{b})"));
+                }
+                for i in a..b {
+                    if seen[i] {
+                        return Err(format!("{label}: iteration {i} twice"));
+                    }
+                    seen[i] = true;
+                }
+            }
+            if seen.iter().any(|&s| !s) {
+                return Err(format!("{label}: missing iterations"));
+            }
+            Ok(())
+        };
+        cover(&policy::static_blocks(n, p), "static_blocks")?;
+        cover(&policy::taskloop_chunks(n, 1 + rng.below(100)), "taskloop_chunks")?;
+        cover(&policy::factoring_chunks(n, p, 1.0 + rng.next_f64() * 3.0), "factoring_chunks")?;
+        if n > 0 {
+            let w = arbitrary_weights(rng, n);
+            let (chunks, assign) = policy::binlpt_partition(&w, 1 + rng.below(200), p);
+            cover(&chunks, "binlpt")?;
+            let assigned: usize = assign.iter().map(|a| a.len()).sum();
+            if assigned != chunks.len() {
+                return Err(format!("binlpt: {assigned} assigned of {} chunks", chunks.len()));
+            }
+            cover(&ich::sched::related::weighted_blocks(&w, p), "weighted_blocks")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_steal_merge_is_midpoint() {
+    check("steal-merge", 0x5EA1, 200, |rng, _case| {
+        let a = IchState { k: rng.next_f64() * 1e6, d: 1.0 + rng.next_f64() * 1e3 };
+        let b = IchState { k: rng.next_f64() * 1e6, d: 1.0 + rng.next_f64() * 1e3 };
+        let m = policy::steal_merge(a, b);
+        let (klo, khi) = (a.k.min(b.k), a.k.max(b.k));
+        if m.k < klo || m.k > khi {
+            return Err(format!("merged k {} outside [{klo}, {khi}]", m.k));
+        }
+        if (m.k - (a.k + b.k) / 2.0).abs() > 1e-9 {
+            return Err("k not the average".into());
+        }
+        if (m.d - (a.d + b.d) / 2.0).abs() > 1e-9 {
+            return Err("d not the average".into());
+        }
+        Ok(())
+    });
+}

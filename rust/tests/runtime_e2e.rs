@@ -1,0 +1,104 @@
+//! Integration over the PJRT runtime: the kernel service driven from
+//! scheduler worker threads — the same composition the e2e example
+//! uses, asserted against pure-Rust references. Tests skip (with a
+//! note) when `make artifacts` has not been run.
+
+use ich::runtime::service::KernelService;
+use ich::sched::{parallel_for, ForOpts, IchParams, Policy};
+use ich::sparse::gen;
+use std::sync::atomic::{AtomicU32, Ordering::Relaxed};
+
+fn service() -> Option<KernelService> {
+    let s = KernelService::spawn();
+    if s.is_none() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+    }
+    s
+}
+
+#[test]
+fn scheduled_spmv_through_pjrt_matches_reference() {
+    let Some(svc) = service() else { return };
+    let h = svc.handle();
+    let a = gen::regular_random(2_048, 8, 2, 21);
+    let x: Vec<f32> = (0..a.ncols).map(|i| ((i % 9) as f32 - 4.0) / 3.0).collect();
+    let mut want = vec![0.0f32; a.nrows];
+    a.spmv_seq(&x, &mut want);
+
+    let y: Vec<AtomicU32> = (0..a.nrows).map(|_| AtomicU32::new(0)).collect();
+    let opts = ForOpts { threads: 3, pin: false, seed: 5, weights: None };
+    let m = parallel_for(a.nrows, &Policy::Ich(IchParams::default()), &opts, &|r| {
+        let got = h.spmv_rows(&a, &x, r.clone()).unwrap();
+        for (row, v) in r.zip(got) {
+            y[row].store(v.to_bits(), Relaxed);
+        }
+    });
+    assert_eq!(m.total_iters, a.nrows as u64);
+    for r in 0..a.nrows {
+        let got = f32::from_bits(y[r].load(Relaxed));
+        assert!(
+            (got - want[r]).abs() <= 1e-4 * want[r].abs().max(1.0),
+            "row {r}: {got} vs {}",
+            want[r]
+        );
+    }
+}
+
+#[test]
+fn scheduled_kmeans_through_pjrt_matches_reference() {
+    let Some(svc) = service() else { return };
+    let h = svc.handle();
+    let (n, d, k) = (3_000usize, 8usize, 4usize);
+    let mut rng = ich::util::rng::Rng::new(33);
+    let cents: Vec<f32> = (0..k * d).map(|_| (rng.next_f64() * 20.0) as f32).collect();
+    let points: Vec<f32> = (0..n * d).map(|_| (rng.next_f64() * 20.0) as f32).collect();
+    let want: Vec<u32> = (0..n)
+        .map(|i| {
+            let p = &points[i * d..(i + 1) * d];
+            (0..k)
+                .min_by(|&a, &b| {
+                    let da: f32 = p.iter().zip(&cents[a * d..(a + 1) * d]).map(|(x, c)| (x - c) * (x - c)).sum();
+                    let db: f32 = p.iter().zip(&cents[b * d..(b + 1) * d]).map(|(x, c)| (x - c) * (x - c)).sum();
+                    da.partial_cmp(&db).unwrap()
+                })
+                .unwrap() as u32
+        })
+        .collect();
+
+    let got: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(u32::MAX)).collect();
+    let opts = ForOpts { threads: 2, pin: false, seed: 9, weights: None };
+    parallel_for(n, &Policy::Stealing { chunk: 256 }, &opts, &|r| {
+        let a = h.kmeans_assign(&points[r.start * d..r.end * d], d, &cents, k).unwrap();
+        for (i, c) in r.zip(a) {
+            got[i].store(c, Relaxed);
+        }
+    });
+    let agree = (0..n).filter(|&i| got[i].load(Relaxed) == want[i]).count();
+    assert!(agree as f64 >= 0.999 * n as f64, "agreement {agree}/{n}");
+}
+
+#[test]
+fn lavamd_force_through_pjrt() {
+    let Some(svc) = service() else { return };
+    let h = svc.handle();
+    let home = vec![[0.0f32, 0.0, 0.0, 1.5], [0.3, 0.0, 0.0, -0.5]];
+    let neigh = vec![[0.4f32, 0.3, 0.0, 2.0], [5.0, 5.0, 5.0, 3.0]]; // second beyond cutoff
+    let f = h.lavamd_force(&home, &neigh).unwrap();
+    // manual reference
+    let refv: Vec<f32> = home
+        .iter()
+        .map(|p| {
+            neigh
+                .iter()
+                .map(|q| {
+                    let (dx, dy, dz) = (p[0] - q[0], p[1] - q[1], p[2] - q[2]);
+                    let r2 = dx * dx + dy * dy + dz * dz;
+                    if r2 > 0.0 && r2 < 1.0 { p[3] * q[3] * (-r2).exp() / (r2 + 0.05) } else { 0.0 }
+                })
+                .sum()
+        })
+        .collect();
+    for (a, b) in f.iter().zip(&refv) {
+        assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+    }
+}

@@ -1,5 +1,7 @@
 //! Tiny bench harness (criterion is unavailable offline): warmup +
-//! repeated timing with mean/sd/min reporting.
+//! repeated timing with mean/sd/min reporting, plus JSON persistence
+//! for benches that record result files (e.g. `BENCH_forkjoin.json`).
+#![allow(dead_code)] // shared by several bench binaries; each uses a subset
 
 use std::time::Instant;
 
@@ -35,6 +37,15 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> B
         r.iters
     );
     r
+}
+
+/// Persist a bench report, logging rather than failing on I/O errors
+/// (benches may run in read-only checkouts).
+pub fn save_json(path: &str, json: &ich::util::json::Json) {
+    match json.save(path) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
 }
 
 pub fn fmt_s(s: f64) -> String {

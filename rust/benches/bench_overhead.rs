@@ -1,15 +1,19 @@
 //! L3 micro-benchmarks on the *real* threaded runtime: per-chunk
 //! dispatch overhead per policy (empty bodies — pure scheduler cost),
-//! THE-deque operation latency, and iCh's adaptation-pass cost.
+//! THE-deque operation latency, iCh's adaptation-pass cost, and the
+//! fork-join overhead of the persistent worker pool vs per-call thread
+//! spawning (recorded to `BENCH_forkjoin.json`).
 //! These are the §Perf numbers for the hot path.
 
 mod bench_common;
-use bench_common::{bench, fmt_s};
+use bench_common::{bench, fmt_s, save_json};
 
 use ich::sched::deque::RangeDeque;
-use ich::sched::{parallel_for, ForOpts, IchParams, Policy};
+use ich::sched::runtime::Runtime;
+use ich::sched::{parallel_for, ExecMode, ForOpts, IchParams, Policy};
+use ich::util::json::Json;
 
-fn main() {
+fn dispatch_overhead() {
     println!("== L3 scheduler overhead (real runtime, empty bodies) ==");
     let n = 1_000_000usize;
     // Single-thread dispatch cost per iteration: isolates the
@@ -26,7 +30,7 @@ fn main() {
         Policy::Stealing { chunk: 64 },
         Policy::Ich(IchParams::default()),
     ] {
-        let opts = ForOpts { threads: 1, pin: false, seed: 1, weights: None };
+        let opts = ForOpts { threads: 1, pin: false, seed: 1, weights: None, ..Default::default() };
         let r = bench(&format!("dispatch/iter {} (p=1, n=1e6)", policy.name()), 1, 3, || {
             let w = vec![1.0f64; if policy.needs_weights() { n } else { 0 }];
             let o = if policy.needs_weights() { opts.clone().with_weights(&w) } else { opts.clone() };
@@ -37,7 +41,9 @@ fn main() {
         });
         println!("    -> {} per iteration", fmt_s(r.min_s / n as f64));
     }
+}
 
+fn deque_primitives() {
     println!("\n== THE-protocol deque primitives ==");
     let q = RangeDeque::new(0..usize::MAX / 2);
     let ops = 1_000_000;
@@ -55,10 +61,86 @@ fn main() {
         }
     });
     println!("    -> {} per steal", fmt_s(r.min_s / 1e5));
+}
 
+/// The tentpole measurement: repeated short `parallel_for` calls with
+/// empty bodies, persistent pool vs per-call spawn, across every
+/// policy family and n ∈ {1e3, 1e4, 1e5}. Emits `BENCH_forkjoin.json`.
+fn fork_join_overhead() {
+    println!("\n== fork-join overhead: persistent pool vs per-call spawn ==");
+    // Pick a p the pool can serve so the comparison is pool-vs-spawn,
+    // not fallback-vs-spawn (on tiny hosts that caps at 2).
+    let p = (Runtime::global().workers() + 1).clamp(2, 4);
+    // Identical thread placement in both arms, so the ratio isolates
+    // spawn amortization from pinning: the submitter sits on core 0
+    // (where scoped_run would pin it anyway) and the Spawn arm pins
+    // its workers round-robin exactly like the pool's spawn-time map.
+    ich::sched::pool::pin_to_cpu(0);
+    let pin = true;
+    let mut entries = Vec::new();
+    let mut pool_wins = 0usize;
+    let mut cases = 0usize;
+    for policy in Policy::representatives() {
+        for &n in &[1_000usize, 10_000, 100_000] {
+            let reps = (300_000 / n).max(3); // parallel_for calls per sample
+            let w = vec![1.0f64; if policy.needs_weights() { n } else { 0 }];
+            let mut per_call = [0.0f64; 2];
+            for (mi, mode) in [ExecMode::Pool, ExecMode::Spawn].into_iter().enumerate() {
+                let opts = ForOpts {
+                    threads: p,
+                    pin,
+                    seed: 7,
+                    weights: if policy.needs_weights() { Some(&w) } else { None },
+                    mode,
+                };
+                let r = bench(&format!("forkjoin {} n={n} p={p} {mode:?}", policy.name()), 1, 3, || {
+                    for _ in 0..reps {
+                        let m = parallel_for(n, &policy, &opts, &|rr| {
+                            std::hint::black_box(rr.len());
+                        });
+                        assert_eq!(m.total_iters, n as u64);
+                    }
+                });
+                per_call[mi] = r.min_s / reps as f64;
+            }
+            let ratio = per_call[1] / per_call[0];
+            cases += 1;
+            if ratio > 1.0 {
+                pool_wins += 1;
+            }
+            println!(
+                "    -> {} n={n}: pool {} vs spawn {} per call (spawn/pool = {ratio:.2}x)",
+                policy.name(),
+                fmt_s(per_call[0]),
+                fmt_s(per_call[1])
+            );
+            let mut e = Json::obj();
+            e.set("policy", Json::str(&policy.name()));
+            e.set("n", Json::num(n as f64));
+            e.set("threads", Json::num(p as f64));
+            e.set("reps", Json::num(reps as f64));
+            e.set("pool_s_per_call", Json::num(per_call[0]));
+            e.set("spawn_s_per_call", Json::num(per_call[1]));
+            e.set("spawn_over_pool", Json::num(ratio));
+            entries.push(e);
+        }
+    }
+    println!("    == pool faster in {pool_wins}/{cases} cases ==");
+    let mut out = Json::obj();
+    out.set("bench", Json::str("fork_join_overhead"));
+    out.set("threads", Json::num(p as f64));
+    out.set("pool_workers", Json::num(Runtime::global().workers() as f64));
+    out.set("cases", Json::num(cases as f64));
+    out.set("pool_wins", Json::num(pool_wins as f64));
+    out.set("entries", Json::Arr(entries));
+    save_json("BENCH_forkjoin.json", &out);
+}
+
+fn multithread_smoke() {
     println!("\n== multi-thread correctness overhead (oversubscribed on this host) ==");
+    let n = 1_000_000usize;
     for p in [2usize, 4] {
-        let opts = ForOpts { threads: p, pin: false, seed: 1, weights: None };
+        let opts = ForOpts { threads: p, pin: false, seed: 1, weights: None, ..Default::default() };
         bench(&format!("ich p={p} n=1e6 empty"), 1, 3, || {
             let m = parallel_for(n, &Policy::Ich(IchParams::default()), &opts, &|r| {
                 std::hint::black_box(r.len());
@@ -66,4 +148,11 @@ fn main() {
             assert_eq!(m.total_iters, n as u64);
         });
     }
+}
+
+fn main() {
+    dispatch_overhead();
+    deque_primitives();
+    fork_join_overhead();
+    multithread_smoke();
 }

@@ -77,9 +77,10 @@ pub const APP_NAMES: &[&str] = &[
 ];
 
 /// Helper shared by apps: run one weighted loop for real with a
-/// workload-aware-capable `ForOpts`.
+/// workload-aware-capable `ForOpts` (persistent-pool execution by
+/// default, like every other `parallel_for` caller).
 pub(crate) fn opts_with<'a>(threads: usize, seed: u64, weights: &'a [f64]) -> ForOpts<'a> {
-    ForOpts { threads, pin: true, seed, weights: Some(weights) }
+    ForOpts { threads, pin: true, seed, weights: Some(weights), ..Default::default() }
 }
 
 /// Accumulate per-region metrics into an app-level aggregate.
@@ -90,6 +91,7 @@ pub(crate) fn absorb_metrics(into: &mut RunMetrics, m: &RunMetrics) {
     into.total_iters += m.total_iters;
     into.steals_ok += m.steals_ok;
     into.steals_failed += m.steals_failed;
+    into.backoffs += m.backoffs;
     if into.iters_per_thread.len() < m.iters_per_thread.len() {
         into.iters_per_thread.resize(m.iters_per_thread.len(), 0);
     }

@@ -31,4 +31,4 @@ pub mod sim;
 pub mod sparse;
 pub mod util;
 
-pub use sched::{parallel_for, parallel_for_each, ForOpts, IchParams, Policy};
+pub use sched::{parallel_for, parallel_for_each, ExecMode, ForOpts, IchParams, Policy, Runtime};

@@ -5,7 +5,7 @@
 //! Shape constants mirror `python/compile/model.py::AOT_SHAPES`
 //! (asserted against artifacts/manifest.json in the tests).
 
-use anyhow::Result;
+use crate::util::error::{self as anyhow, Result};
 
 use super::{lit_f32_1d, lit_f32_2d, lit_i32_2d, XlaRuntime};
 use crate::sparse::CsrMatrix;

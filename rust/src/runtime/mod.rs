@@ -9,8 +9,9 @@
 
 pub mod kernels;
 pub mod service;
+pub mod xla;
 
-use anyhow::{Context, Result};
+use crate::util::error::{self as anyhow, Context, Result};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 

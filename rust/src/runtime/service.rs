@@ -6,7 +6,7 @@
 
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 
-use anyhow::{anyhow, Result};
+use crate::util::error::{anyhow, Result};
 
 use super::kernels::Kernels;
 use crate::sparse::CsrMatrix;

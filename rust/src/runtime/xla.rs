@@ -1,0 +1,104 @@
+//! Offline stand-in for the `xla` crate (PJRT bindings).
+//!
+//! The build environment has no crates.io access and no XLA shared
+//! libraries, so the bridge in [`super`] compiles against this
+//! API-compatible stub instead. Every entry point reports the backend
+//! as unavailable, which makes `XlaRuntime::new` fail cleanly — the
+//! kernel service and all PJRT-backed tests then skip exactly as they
+//! do when `make artifacts` has not been run. Swapping the real
+//! `xla` crate back in requires only removing this module and adding
+//! the dependency; no call site changes.
+
+use crate::util::error::{Error, Result};
+
+fn unavailable() -> Error {
+    Error::msg("PJRT/XLA backend not available in the offline build")
+}
+
+/// Host literal (stub: carries no data).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T: Copy>(_data: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(unavailable())
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(unavailable())
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(unavailable())
+    }
+}
+
+/// One per-device output buffer of an execution.
+pub struct ExecOutput;
+
+impl ExecOutput {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable())
+    }
+}
+
+/// PJRT client (stub: construction always fails).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable())
+    }
+
+    pub fn platform_name(&self) -> String {
+        "unavailable".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable())
+    }
+}
+
+/// Compiled executable handle.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _inputs: &[T]) -> Result<Vec<Vec<ExecOutput>>> {
+        Err(unavailable())
+    }
+}
+
+/// Parsed HLO module text.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable())
+    }
+}
+
+/// An XLA computation built from a proto.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        assert!(Literal::vec1(&[1.0f32]).reshape(&[1, 1]).is_err());
+        assert!(Literal.to_vec::<f32>().is_err());
+    }
+}

@@ -12,11 +12,12 @@ use std::sync::atomic::{AtomicBool, Ordering::SeqCst};
 
 use super::metrics::MetricsSink;
 use super::policy;
+use super::runtime::Executor;
 
 pub fn run_binlpt(
     weights: &[f64],
     p: usize,
-    pin: bool,
+    exec: &dyn Executor,
     max_chunks: usize,
     body: &(dyn Fn(Range<usize>) + Sync),
     sink: &MetricsSink,
@@ -28,7 +29,7 @@ pub fn run_binlpt(
     let (chunks, assign) = policy::binlpt_partition(weights, max_chunks, p);
     let claimed: Vec<AtomicBool> = (0..chunks.len()).map(|_| AtomicBool::new(false)).collect();
 
-    super::pool::scoped_run(p, pin, |tid| {
+    exec.run(p, &|tid| {
         // Phase 1: our own LPT-assigned chunks.
         for &ci in &assign[tid] {
             if claim(&claimed, ci) {
@@ -56,7 +57,10 @@ fn claim(claimed: &[AtomicBool], ci: usize) -> bool {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use super::super::runtime::SpawnExec;
     use std::sync::atomic::AtomicU64;
+
+    const SPAWN: SpawnExec = SpawnExec::new(false);
 
     fn check(n: usize, p: usize, k: usize, weights: &[f64]) {
         let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
@@ -64,7 +68,7 @@ mod tests {
         run_binlpt(
             weights,
             p,
-            false,
+            &SPAWN,
             k,
             &|r| {
                 for i in r {
@@ -104,6 +108,6 @@ mod tests {
     #[test]
     fn empty_noop() {
         let sink = MetricsSink::new(2);
-        run_binlpt(&[], 2, false, 8, &|_r| panic!("no work"), &sink);
+        run_binlpt(&[], 2, &SPAWN, 8, &|_r| panic!("no work"), &sink);
     }
 }

@@ -7,14 +7,15 @@ use std::sync::atomic::{AtomicUsize, Ordering::SeqCst};
 
 use super::metrics::MetricsSink;
 use super::policy;
+use super::runtime::Executor;
 
 /// `static`: thread t executes its contiguous block; no shared state.
-pub fn run_static(n: usize, p: usize, pin: bool, body: &(dyn Fn(Range<usize>) + Sync), sink: &MetricsSink) {
+pub fn run_static(n: usize, p: usize, exec: &dyn Executor, body: &(dyn Fn(Range<usize>) + Sync), sink: &MetricsSink) {
     if n == 0 {
         return;
     }
     let blocks = policy::static_blocks(n, p);
-    super::pool::scoped_run(p, pin, |tid| {
+    exec.run(p, &|tid| {
         if let Some(&(a, b)) = blocks.get(tid) {
             body(a..b);
             sink.add_chunk(tid, (b - a) as u64);
@@ -27,7 +28,7 @@ pub fn run_static(n: usize, p: usize, pin: bool, body: &(dyn Fn(Range<usize>) + 
 pub fn run_dynamic(
     n: usize,
     p: usize,
-    pin: bool,
+    exec: &dyn Executor,
     chunk: usize,
     body: &(dyn Fn(Range<usize>) + Sync),
     sink: &MetricsSink,
@@ -37,7 +38,7 @@ pub fn run_dynamic(
     }
     let chunk = chunk.max(1);
     let next = AtomicUsize::new(0);
-    super::pool::scoped_run(p, pin, |tid| loop {
+    exec.run(p, &|tid| loop {
         let b = next.fetch_add(chunk, SeqCst);
         if b >= n {
             return;
@@ -54,7 +55,7 @@ pub fn run_dynamic(
 pub fn run_guided(
     n: usize,
     p: usize,
-    pin: bool,
+    exec: &dyn Executor,
     min_chunk: usize,
     body: &(dyn Fn(Range<usize>) + Sync),
     sink: &MetricsSink,
@@ -63,7 +64,7 @@ pub fn run_guided(
         return;
     }
     let next = AtomicUsize::new(0);
-    super::pool::scoped_run(p, pin, |tid| loop {
+    exec.run(p, &|tid| loop {
         let mut b = next.load(SeqCst);
         let e = loop {
             if b >= n {
@@ -85,12 +86,12 @@ pub fn run_guided(
 pub fn run_chunk_list(
     chunks: &[(usize, usize)],
     p: usize,
-    pin: bool,
+    exec: &dyn Executor,
     body: &(dyn Fn(Range<usize>) + Sync),
     sink: &MetricsSink,
 ) {
     let next = AtomicUsize::new(0);
-    super::pool::scoped_run(p, pin, |tid| loop {
+    exec.run(p, &|tid| loop {
         let i = next.fetch_add(1, SeqCst);
         let Some(&(a, b)) = chunks.get(i) else { return };
         body(a..b);
@@ -104,7 +105,7 @@ pub fn run_chunk_list(
 pub fn run_taskloop(
     n: usize,
     p: usize,
-    pin: bool,
+    exec: &dyn Executor,
     num_tasks: usize,
     body: &(dyn Fn(Range<usize>) + Sync),
     sink: &MetricsSink,
@@ -113,14 +114,14 @@ pub fn run_taskloop(
         return;
     }
     let tasks = policy::taskloop_chunks(n, if num_tasks == 0 { p } else { num_tasks });
-    run_chunk_list(&tasks, p, pin, body, sink);
+    run_chunk_list(&tasks, p, exec, body, sink);
 }
 
 /// Factoring Self-Scheduling (FSS): batched decaying chunk sizes.
 pub fn run_factoring(
     n: usize,
     p: usize,
-    pin: bool,
+    exec: &dyn Executor,
     alpha: f64,
     body: &(dyn Fn(Range<usize>) + Sync),
     sink: &MetricsSink,
@@ -129,13 +130,16 @@ pub fn run_factoring(
         return;
     }
     let chunks = policy::factoring_chunks(n, p, alpha);
-    run_chunk_list(&chunks, p, pin, body, sink);
+    run_chunk_list(&chunks, p, exec, body, sink);
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use super::super::runtime::SpawnExec;
     use std::sync::atomic::AtomicU64;
+
+    const SPAWN: SpawnExec = SpawnExec::new(false);
 
     fn check_exactly_once(n: usize, p: usize, run: impl FnOnce(&(dyn Fn(Range<usize>) + Sync), &MetricsSink)) {
         let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
@@ -157,24 +161,24 @@ mod tests {
     #[test]
     fn static_covers() {
         for &(n, p) in &[(1usize, 1usize), (100, 4), (7, 16), (1000, 3)] {
-            check_exactly_once(n, p, |b, s| run_static(n, p, false, b, s));
+            check_exactly_once(n, p, |b, s| run_static(n, p, &SPAWN, b, s));
         }
     }
 
     #[test]
     fn dynamic_covers() {
         for &(n, p, c) in &[(100usize, 4usize, 1usize), (100, 4, 3), (1000, 7, 64), (5, 8, 2)] {
-            check_exactly_once(n, p, |b, s| run_dynamic(n, p, false, c, b, s));
+            check_exactly_once(n, p, |b, s| run_dynamic(n, p, &SPAWN, c, b, s));
         }
     }
 
     #[test]
     fn guided_covers_and_decays() {
-        check_exactly_once(1000, 4, |b, s| run_guided(1000, 4, false, 1, b, s));
+        check_exactly_once(1000, 4, |b, s| run_guided(1000, 4, &SPAWN, 1, b, s));
         // Single-threaded guided should issue remaining/1-sized chunk:
         // i.e. everything at once.
         let sink = MetricsSink::new(1);
-        run_guided(64, 1, false, 1, &|_r| {}, &sink);
+        run_guided(64, 1, &SPAWN, 1, &|_r| {}, &sink);
         let m = sink.collect(std::time::Duration::ZERO);
         assert_eq!(m.total_chunks, 1);
     }
@@ -182,21 +186,21 @@ mod tests {
     #[test]
     fn taskloop_covers() {
         for &(n, p, t) in &[(100usize, 4usize, 0usize), (100, 4, 16), (10, 4, 100)] {
-            check_exactly_once(n, p, |b, s| run_taskloop(n, p, false, t, b, s));
+            check_exactly_once(n, p, |b, s| run_taskloop(n, p, &SPAWN, t, b, s));
         }
     }
 
     #[test]
     fn taskloop_default_num_tasks_is_p() {
         let sink = MetricsSink::new(4);
-        run_taskloop(100, 4, false, 0, &|_r| {}, &sink);
+        run_taskloop(100, 4, &SPAWN, 0, &|_r| {}, &sink);
         assert_eq!(sink.collect(std::time::Duration::ZERO).total_chunks, 4);
     }
 
     #[test]
     fn factoring_covers() {
         for &(n, p) in &[(1000usize, 4usize), (17, 3), (1, 8)] {
-            check_exactly_once(n, p, |b, s| run_factoring(n, p, false, 2.0, b, s));
+            check_exactly_once(n, p, |b, s| run_factoring(n, p, &SPAWN, 2.0, b, s));
         }
     }
 
@@ -204,10 +208,10 @@ mod tests {
     fn zero_iterations_noop() {
         let sink = MetricsSink::new(2);
         let panic_body = |_r: Range<usize>| panic!("must not run");
-        run_static(0, 2, false, &panic_body, &sink);
-        run_dynamic(0, 2, false, 1, &panic_body, &sink);
-        run_guided(0, 2, false, 1, &panic_body, &sink);
-        run_taskloop(0, 2, false, 0, &panic_body, &sink);
-        run_factoring(0, 2, false, 2.0, &panic_body, &sink);
+        run_static(0, 2, &SPAWN, &panic_body, &sink);
+        run_dynamic(0, 2, &SPAWN, 1, &panic_body, &sink);
+        run_guided(0, 2, &SPAWN, 1, &panic_body, &sink);
+        run_taskloop(0, 2, &SPAWN, 0, &panic_body, &sink);
+        run_factoring(0, 2, &SPAWN, 2.0, &panic_body, &sink);
     }
 }

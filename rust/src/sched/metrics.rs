@@ -3,7 +3,7 @@
 //! Per-thread counters are kept in cache-line-padded slots so metric
 //! collection never introduces false sharing into the hot loop.
 
-use crossbeam_utils::CachePadded;
+use crate::util::sync::CachePadded;
 use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
 
 /// Per-thread counters, padded to a cache line.
@@ -17,6 +17,9 @@ pub struct ThreadCounters {
     pub steals_ok: AtomicU64,
     /// Failed steal attempts (empty victim or THE rollback).
     pub steals_failed: AtomicU64,
+    /// Steal-backoff escalations: failed-steal streaks that exhausted
+    /// the bounded spin phase and fell back to `thread::yield_now`.
+    pub backoffs: AtomicU64,
 }
 
 /// Shared metrics sink for one `parallel_for` invocation.
@@ -45,6 +48,13 @@ impl MetricsSink {
         c.iters.fetch_add(iters, Relaxed);
     }
 
+    /// Record one spin→yield backoff transition on a failed-steal
+    /// streak (cold path by construction).
+    #[inline]
+    pub fn add_backoff(&self, tid: usize) {
+        self.per_thread[tid].backoffs.fetch_add(1, Relaxed);
+    }
+
     #[inline]
     pub fn add_steal(&self, tid: usize, ok: bool) {
         let c = &self.per_thread[tid];
@@ -64,6 +74,7 @@ impl MetricsSink {
             total_iters: iters.iter().sum(),
             steals_ok: self.per_thread.iter().map(|c| c.steals_ok.load(Relaxed)).sum(),
             steals_failed: self.per_thread.iter().map(|c| c.steals_failed.load(Relaxed)).sum(),
+            backoffs: self.per_thread.iter().map(|c| c.backoffs.load(Relaxed)).sum(),
             iters_per_thread: iters,
         }
     }
@@ -78,6 +89,8 @@ pub struct RunMetrics {
     pub total_iters: u64,
     pub steals_ok: u64,
     pub steals_failed: u64,
+    /// Spin→yield backoff transitions across all threads.
+    pub backoffs: u64,
     pub iters_per_thread: Vec<u64>,
 }
 
@@ -110,11 +123,13 @@ mod tests {
         m.add_chunk(1, 30);
         m.add_steal(1, true);
         m.add_steal(1, false);
+        m.add_backoff(0);
         let r = m.collect(Duration::from_millis(5));
         assert_eq!(r.total_chunks, 2);
         assert_eq!(r.total_iters, 40);
         assert_eq!(r.steals_ok, 1);
         assert_eq!(r.steals_failed, 1);
+        assert_eq!(r.backoffs, 1);
         assert_eq!(r.iters_per_thread, vec![10, 30]);
         assert!((r.elapsed_s - 0.005).abs() < 1e-9);
     }

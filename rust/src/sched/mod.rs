@@ -10,6 +10,28 @@
 //! `static`, `dynamic,c`, `guided,c`, `taskloop`, `factoring`,
 //! `binlpt,k` (workload-aware), `stealing,c` (fixed-chunk THE
 //! work-stealing), **`ich,ε` (the paper's method)**, `awf`, `hss`.
+//!
+//! # Execution layer
+//!
+//! Engines do not spawn threads themselves: each one hands its worker
+//! function to an [`Executor`] (`exec.run(p, f)` runs `f(tid)` exactly
+//! once per `tid in 0..p` and joins). Two executors exist:
+//!
+//! - [`runtime::Runtime`] — the default: a **persistent, core-pinned
+//!   worker pool**, spawned once per process and reused across
+//!   `parallel_for` calls via an epoch-based fork-join barrier
+//!   (spin→yield→park). One epoch = publish the type-erased loop body
+//!   to `p − 1` parked workers, run tid 0 on the caller, then join on
+//!   a pending-counter. Nested or concurrent `parallel_for` calls,
+//!   and calls asking for more threads than the pool holds, fall back
+//!   to scoped spawning — no deadlock, only degraded amortization.
+//!   See `sched::runtime` for the full protocol and memory-ordering
+//!   argument.
+//! - [`SpawnExec`] — per-call scoped spawn + join (the seed behavior),
+//!   selectable with [`ExecMode::Spawn`] for measurement baselines.
+//!
+//! [`ForOpts::mode`] picks between them; the fork-join overhead gap is
+//! measured by `benches/bench_overhead.rs` (`BENCH_forkjoin.json`).
 
 pub mod binlpt;
 pub mod central;
@@ -18,9 +40,11 @@ pub mod metrics;
 pub mod policy;
 pub mod pool;
 pub mod related;
+pub mod runtime;
 pub mod ws;
 
 pub use metrics::{MetricsSink, RunMetrics};
+pub use runtime::{Executor, Runtime, SpawnExec};
 pub use ws::{IchParams, StealMerge};
 
 use std::ops::Range;
@@ -114,6 +138,37 @@ impl Policy {
     pub fn needs_weights(&self) -> bool {
         matches!(self, Policy::Binlpt { .. } | Policy::Hss)
     }
+
+    /// One representative configuration per family — the canonical
+    /// all-families list shared by the coverage tests, the pool stress
+    /// suite, and the fork-join benchmark, so the three cannot drift.
+    pub fn representatives() -> Vec<Policy> {
+        vec![
+            Policy::Static,
+            Policy::Dynamic { chunk: 64 },
+            Policy::Guided { chunk: 1 },
+            Policy::Taskloop { num_tasks: 0 },
+            Policy::Factoring { alpha: 2.0 },
+            Policy::Binlpt { max_chunks: 64 },
+            Policy::Stealing { chunk: 64 },
+            Policy::Ich(IchParams::default()),
+            Policy::Awf,
+            Policy::Hss,
+        ]
+    }
+}
+
+/// How `parallel_for` obtains its worker threads.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum ExecMode {
+    /// The shared persistent worker pool ([`Runtime::global`]).
+    /// Falls back to scoped spawning when the pool is busy (nested or
+    /// concurrent call) or smaller than `threads − 1`.
+    #[default]
+    Pool,
+    /// Spawn and join fresh OS threads for this call (the seed
+    /// runtime's strategy; also what the pool falls back to).
+    Spawn,
 }
 
 /// Options for a `parallel_for` run.
@@ -122,18 +177,22 @@ pub struct ForOpts<'a> {
     /// Worker thread count p.
     pub threads: usize,
     /// Pin threads to cores when the host has enough of them
-    /// (OMP_PROC_BIND=true analog).
+    /// (OMP_PROC_BIND=true analog). Pool workers pin once at spawn,
+    /// so this flag only governs [`ExecMode::Spawn`] runs (the pool's
+    /// internal fallbacks never re-pin the calling thread).
     pub pin: bool,
     /// RNG seed for steal-victim selection (reproducibility).
     pub seed: u64,
     /// Per-iteration workload estimates — consumed only by
     /// workload-aware policies (BinLPT, HSS).
     pub weights: Option<&'a [f64]>,
+    /// Worker-thread provider (persistent pool by default).
+    pub mode: ExecMode,
 }
 
 impl Default for ForOpts<'_> {
     fn default() -> Self {
-        ForOpts { threads: 1, pin: true, seed: 0x1C4, weights: None }
+        ForOpts { threads: 1, pin: true, seed: 0x1C4, weights: None, mode: ExecMode::Pool }
     }
 }
 
@@ -151,6 +210,11 @@ impl<'a> ForOpts<'a> {
         self.seed = seed;
         self
     }
+
+    pub fn with_mode(mut self, mode: ExecMode) -> Self {
+        self.mode = mode;
+        self
+    }
 }
 
 /// Schedule `n` iterations over the configured threads; `body`
@@ -159,13 +223,25 @@ impl<'a> ForOpts<'a> {
 pub fn parallel_for(n: usize, policy: &Policy, opts: &ForOpts, body: &(dyn Fn(Range<usize>) + Sync)) -> RunMetrics {
     let p = opts.threads.max(1);
     let sink = MetricsSink::new(p);
+    let spawn = SpawnExec::new(opts.pin);
+    let pool;
+    let exec: &dyn Executor = match opts.mode {
+        // p == 1 runs inline either way; don't spawn the global pool
+        // for callers that never fan out.
+        ExecMode::Spawn => &spawn,
+        ExecMode::Pool if p == 1 => &spawn,
+        ExecMode::Pool => {
+            pool = Runtime::global().executor();
+            &pool
+        }
+    };
     let start = std::time::Instant::now();
     match policy {
-        Policy::Static => central::run_static(n, p, opts.pin, body, &sink),
-        Policy::Dynamic { chunk } => central::run_dynamic(n, p, opts.pin, *chunk, body, &sink),
-        Policy::Guided { chunk } => central::run_guided(n, p, opts.pin, *chunk, body, &sink),
-        Policy::Taskloop { num_tasks } => central::run_taskloop(n, p, opts.pin, *num_tasks, body, &sink),
-        Policy::Factoring { alpha } => central::run_factoring(n, p, opts.pin, *alpha, body, &sink),
+        Policy::Static => central::run_static(n, p, exec, body, &sink),
+        Policy::Dynamic { chunk } => central::run_dynamic(n, p, exec, *chunk, body, &sink),
+        Policy::Guided { chunk } => central::run_guided(n, p, exec, *chunk, body, &sink),
+        Policy::Taskloop { num_tasks } => central::run_taskloop(n, p, exec, *num_tasks, body, &sink),
+        Policy::Factoring { alpha } => central::run_factoring(n, p, exec, *alpha, body, &sink),
         Policy::Binlpt { max_chunks } => {
             let uniform;
             let w = match opts.weights {
@@ -179,12 +255,12 @@ pub fn parallel_for(n: usize, policy: &Policy, opts: &ForOpts, body: &(dyn Fn(Ra
                     &uniform
                 }
             };
-            binlpt::run_binlpt(w, p, opts.pin, *max_chunks, body, &sink)
+            binlpt::run_binlpt(w, p, exec, *max_chunks, body, &sink)
         }
-        Policy::Stealing { chunk } => ws::run_stealing(n, p, opts.pin, *chunk, opts.seed, body, &sink),
-        Policy::Ich(prm) => ws::run_ich(n, p, opts.pin, *prm, opts.seed, body, &sink),
-        Policy::Awf => related::run_awf(n, p, opts.pin, body, &sink),
-        Policy::Hss => related::run_hss(n, p, opts.pin, opts.weights, body, &sink),
+        Policy::Stealing { chunk } => ws::run_stealing(n, p, exec, *chunk, opts.seed, body, &sink),
+        Policy::Ich(prm) => ws::run_ich(n, p, exec, *prm, opts.seed, body, &sink),
+        Policy::Awf => related::run_awf(n, p, exec, body, &sink),
+        Policy::Hss => related::run_hss(n, p, exec, opts.weights, body, &sink),
     }
     sink.collect(start.elapsed())
 }
@@ -224,37 +300,35 @@ mod tests {
     use super::*;
     use std::sync::atomic::{AtomicU64, Ordering::SeqCst};
 
-    fn all_policies() -> Vec<Policy> {
-        vec![
-            Policy::Static,
-            Policy::Dynamic { chunk: 2 },
-            Policy::Guided { chunk: 1 },
-            Policy::Taskloop { num_tasks: 0 },
-            Policy::Factoring { alpha: 2.0 },
-            Policy::Binlpt { max_chunks: 16 },
-            Policy::Stealing { chunk: 2 },
-            Policy::Ich(IchParams::default()),
-            Policy::Awf,
-            Policy::Hss,
-        ]
-    }
-
     #[test]
     fn every_policy_covers_exactly_once() {
         let n = 500;
-        for policy in all_policies() {
-            let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
-            let w: Vec<f64> = (0..n).map(|i| 1.0 + (i % 7) as f64).collect();
-            let opts = ForOpts { threads: 4, pin: false, seed: 1, weights: Some(&w) };
-            let m = parallel_for(n, &policy, &opts, &|r| {
-                for i in r {
-                    hits[i].fetch_add(1, SeqCst);
+        // Representatives (chunk 64: few, large dispatches) plus
+        // deliberately tiny chunks — hundreds of dispatches per run —
+        // so the exactly-once invariant is exercised under heavy
+        // steal/claim contention on both executors.
+        let mut policies = Policy::representatives();
+        policies.extend([
+            Policy::Dynamic { chunk: 2 },
+            Policy::Stealing { chunk: 2 },
+            Policy::Binlpt { max_chunks: 16 },
+            Policy::Guided { chunk: 2 },
+        ]);
+        for mode in [ExecMode::Pool, ExecMode::Spawn] {
+            for policy in &policies {
+                let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+                let w: Vec<f64> = (0..n).map(|i| 1.0 + (i % 7) as f64).collect();
+                let opts = ForOpts { threads: 4, pin: false, seed: 1, weights: Some(&w), mode };
+                let m = parallel_for(n, policy, &opts, &|r| {
+                    for i in r {
+                        hits[i].fetch_add(1, SeqCst);
+                    }
+                });
+                for (i, h) in hits.iter().enumerate() {
+                    assert_eq!(h.load(SeqCst), 1, "policy {} mode {mode:?} iter {i}", policy.name());
                 }
-            });
-            for (i, h) in hits.iter().enumerate() {
-                assert_eq!(h.load(SeqCst), 1, "policy {} iter {i}", policy.name());
+                assert_eq!(m.total_iters, n as u64, "policy {}", policy.name());
             }
-            assert_eq!(m.total_iters, n as u64, "policy {}", policy.name());
         }
     }
 
@@ -291,6 +365,16 @@ mod tests {
             acc.fetch_add(i as u64, SeqCst);
         });
         assert_eq!(acc.load(SeqCst), 99 * 100 / 2);
+    }
+
+    #[test]
+    fn representatives_cover_every_family_once() {
+        let fams: Vec<&str> = Policy::representatives().iter().map(|p| p.family()).collect();
+        let mut uniq = fams.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(fams.len(), 10);
+        assert_eq!(uniq.len(), 10, "duplicate family in representatives: {fams:?}");
     }
 
     #[test]

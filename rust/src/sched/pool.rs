@@ -1,30 +1,77 @@
-//! Worker threads with optional core pinning.
+//! Thread-placement primitives and the per-call scoped spawner.
 //!
 //! The paper pins OpenMP threads to cores (`OMP_PROC_BIND=true`,
-//! `OMP_PLACES=cores`). We do the same via `sched_setaffinity` when
-//! the machine has at least as many cores as requested threads;
-//! otherwise (e.g. this 1-core container) pinning is skipped — the
-//! schedulers remain correct, merely oversubscribed.
+//! `OMP_PLACES=cores`). We do the same via `sched_setaffinity` (raw
+//! FFI — the `libc` crate is unavailable offline) when the machine has
+//! at least as many cores as requested threads; otherwise (e.g. a
+//! 1-core container) pinning is skipped — the schedulers remain
+//! correct, merely oversubscribed.
+//!
+//! [`scoped_run`] spawns and joins fresh OS threads for every call.
+//! It is the oversubscription/nesting fallback of the persistent
+//! worker pool in [`super::runtime`], which is what `parallel_for`
+//! uses by default — see that module for the epoch fork-join protocol
+//! that amortizes this per-call spawn cost away.
 
-/// Number of online CPUs.
-pub fn num_cpus() -> usize {
-    // SAFETY: sysconf is async-signal-safe and has no memory effects.
-    let n = unsafe { libc::sysconf(libc::_SC_NPROCESSORS_ONLN) };
-    if n <= 0 { 1 } else { n as usize }
-}
+use std::sync::OnceLock;
 
-/// Pin the calling thread to `cpu` (best-effort; errors ignored).
-pub fn pin_to_cpu(cpu: usize) {
-    // SAFETY: CPU_SET/sched_setaffinity with a properly zeroed set.
-    unsafe {
-        let mut set: libc::cpu_set_t = std::mem::zeroed();
-        libc::CPU_SET(cpu % num_cpus(), &mut set);
-        libc::sched_setaffinity(0, std::mem::size_of::<libc::cpu_set_t>(), &set);
+#[cfg(target_os = "linux")]
+mod ffi {
+    /// glibc/musl value of `_SC_NPROCESSORS_ONLN` on Linux.
+    pub const SC_NPROCESSORS_ONLN: i32 = 84;
+
+    extern "C" {
+        pub fn sysconf(name: i32) -> i64;
+        /// `cpu_set_t` is a 1024-bit mask; we pass it as `[u64; 16]`.
+        pub fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const u64) -> i32;
     }
 }
 
-/// Run `f(tid)` on `p` scoped worker threads and wait for all of them.
-/// Threads are pinned round-robin when the host has enough cores.
+#[cfg(target_os = "linux")]
+fn detect_cpus() -> usize {
+    // SAFETY: sysconf is async-signal-safe and has no memory effects.
+    let n = unsafe { ffi::sysconf(ffi::SC_NPROCESSORS_ONLN) };
+    if n <= 0 { 1 } else { n as usize }
+}
+
+#[cfg(not(target_os = "linux"))]
+fn detect_cpus() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Number of online CPUs, detected once and cached (the seed runtime
+/// re-ran the `sysconf` syscall on every call — including from
+/// `pin_to_cpu` inside every worker spawn).
+pub fn num_cpus() -> usize {
+    static NCPUS: OnceLock<usize> = OnceLock::new();
+    *NCPUS.get_or_init(detect_cpus)
+}
+
+/// Pin the calling thread to `cpu` (mod the core count; best-effort,
+/// errors ignored; no-op off Linux).
+#[cfg(target_os = "linux")]
+pub fn pin_to_cpu(cpu: usize) {
+    let cpu = cpu % num_cpus();
+    let mut mask = [0u64; 16]; // 1024-bit cpu_set_t
+    let (word, bit) = (cpu / 64, cpu % 64);
+    if word >= mask.len() {
+        return;
+    }
+    mask[word] = 1u64 << bit;
+    // SAFETY: a properly sized, initialized affinity mask for self (pid 0).
+    unsafe {
+        ffi::sched_setaffinity(0, std::mem::size_of_val(&mask), mask.as_ptr());
+    }
+}
+
+/// Pin the calling thread to `cpu` (no-op off Linux).
+#[cfg(not(target_os = "linux"))]
+pub fn pin_to_cpu(_cpu: usize) {}
+
+/// Run `f(tid)` on `p` freshly spawned scoped threads and wait for all
+/// of them. Threads are pinned round-robin when the host has enough
+/// cores. This pays a spawn+join per call — prefer the persistent
+/// pool ([`super::runtime::Runtime`]) for repeated short loops.
 pub fn scoped_run<F>(p: usize, pin: bool, f: F)
 where
     F: Fn(usize) + Sync,
@@ -61,8 +108,9 @@ mod tests {
     use std::sync::atomic::{AtomicUsize, Ordering};
 
     #[test]
-    fn num_cpus_positive() {
+    fn num_cpus_positive_and_stable() {
         assert!(num_cpus() >= 1);
+        assert_eq!(num_cpus(), num_cpus()); // cached
     }
 
     #[test]

@@ -7,16 +7,16 @@
 use std::ops::Range;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering::SeqCst};
 
-use crossbeam_utils::CachePadded;
-
 use super::metrics::MetricsSink;
 use super::policy;
+use super::runtime::Executor;
+use crate::util::sync::CachePadded;
 
 /// AWF: factoring-style central scheduling where each thread's chunk
 /// is scaled by its measured execution *weight* (throughput relative
 /// to the mean). Threads that have been processing iterations faster
 /// receive proportionally larger chunks.
-pub fn run_awf(n: usize, p: usize, pin: bool, body: &(dyn Fn(Range<usize>) + Sync), sink: &MetricsSink) {
+pub fn run_awf(n: usize, p: usize, exec: &dyn Executor, body: &(dyn Fn(Range<usize>) + Sync), sink: &MetricsSink) {
     if n == 0 {
         return;
     }
@@ -25,7 +25,7 @@ pub fn run_awf(n: usize, p: usize, pin: bool, body: &(dyn Fn(Range<usize>) + Syn
     let done: Vec<CachePadded<AtomicU64>> = (0..p).map(|_| CachePadded::new(AtomicU64::new(0))).collect();
     let busy: Vec<CachePadded<AtomicU64>> = (0..p).map(|_| CachePadded::new(AtomicU64::new(1))).collect();
 
-    super::pool::scoped_run(p, pin, |tid| loop {
+    exec.run(p, &|tid| loop {
         // weight_t = (own throughput) / (mean throughput); 1.0 before
         // any measurement exists.
         let my_rate = done[tid].load(SeqCst) as f64 / busy[tid].load(SeqCst) as f64;
@@ -65,7 +65,7 @@ pub fn run_awf(n: usize, p: usize, pin: bool, body: &(dyn Fn(Range<usize>) + Syn
 pub fn run_hss(
     n: usize,
     p: usize,
-    pin: bool,
+    exec: &dyn Executor,
     history: Option<&[f64]>,
     body: &(dyn Fn(Range<usize>) + Sync),
     sink: &MetricsSink,
@@ -77,7 +77,7 @@ pub fn run_hss(
         None => policy::static_blocks(n, p),
         Some(h) => weighted_blocks(h, p),
     };
-    super::pool::scoped_run(p, pin, |tid| {
+    exec.run(p, &|tid| {
         if let Some(&(a, b)) = blocks.get(tid) {
             if a < b {
                 body(a..b);
@@ -113,6 +113,9 @@ pub fn weighted_blocks(weights: &[f64], p: usize) -> Vec<(usize, usize)> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use super::super::runtime::SpawnExec;
+
+    const SPAWN: SpawnExec = SpawnExec::new(false);
 
     fn check(n: usize, p: usize, run: impl FnOnce(&(dyn Fn(Range<usize>) + Sync), &MetricsSink)) {
         let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
@@ -133,19 +136,19 @@ mod tests {
     #[test]
     fn awf_covers() {
         for &(n, p) in &[(500usize, 4usize), (1, 2), (37, 5)] {
-            check(n, p, |b, s| run_awf(n, p, false, b, s));
+            check(n, p, |b, s| run_awf(n, p, &SPAWN, b, s));
         }
     }
 
     #[test]
     fn hss_covers_without_history() {
-        check(100, 4, |b, s| run_hss(100, 4, false, None, b, s));
+        check(100, 4, |b, s| run_hss(100, 4, &SPAWN, None, b, s));
     }
 
     #[test]
     fn hss_covers_with_history() {
         let h: Vec<f64> = (0..100).map(|i| 1.0 + i as f64).collect();
-        check(100, 4, |b, s| run_hss(100, 4, false, Some(&h), b, s));
+        check(100, 4, |b, s| run_hss(100, 4, &SPAWN, Some(&h), b, s));
     }
 
     #[test]

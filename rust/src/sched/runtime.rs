@@ -1,0 +1,492 @@
+//! Persistent, core-pinned worker-pool runtime — the [`Executor`]
+//! layer under `parallel_for`.
+//!
+//! # Why
+//!
+//! iCh wins by keeping per-chunk scheduling overhead near zero, but
+//! the seed runtime paid a full OS thread spawn + join for **every**
+//! `parallel_for` call. libgomp amortizes that away with a persistent
+//! team; so do we: workers are spawned once (lazily for the global
+//! pool), pinned round-robin to cores, and reused across invocations
+//! via an epoch-based fork-join barrier.
+//!
+//! # Epoch protocol
+//!
+//! Each worker owns a [`WorkerShared`] slot with an epoch counter
+//! `seq` and a one-deep job cell. One fork-join ("epoch") proceeds:
+//!
+//! 1. **Fork.** The submitting thread takes the pool's run lock
+//!    (`try_lock` — if it is already held, this is a nested or
+//!    concurrent `parallel_for` and we fall back to scoped spawning,
+//!    which cannot deadlock). It writes a type-erased pointer to the
+//!    loop body into the job cell of workers `0..p-1`, bumps each
+//!    worker's `seq` with `Release`, and unparks it.
+//! 2. **Run.** A worker wakes from its spin→yield→park idle loop when
+//!    an `Acquire` load of `seq` observes the bump, takes the job, and
+//!    runs it as thread id `i + 1` (the caller runs tid 0 inline).
+//!    Panics are caught so a poisoned body cannot kill a pool thread.
+//! 3. **Join.** Each worker decrements the epoch's `pending` counter
+//!    with `Release` (cloning the waiter handle *before* the decrement
+//!    — after it, the epoch struct on the submitter's stack must not
+//!    be touched) and the last one unparks the submitter, which has
+//!    been spin-then-parking on `pending == 0` with `Acquire`. Worker
+//!    panics are rethrown on the submitting thread after the join, so
+//!    `parallel_for`'s failure-injection semantics are unchanged.
+//!
+//! The `Acquire`/`Release` pairs on `seq` and `pending`, plus the run
+//! lock hand-off between epochs, are what make the unsynchronized job
+//! cell and the lifetime-erased body pointer sound: a worker reads the
+//! cell only after observing the bump that follows the write, and the
+//! submitter's frame (body + epoch state) outlives every worker access
+//! because it does not return until `pending` hits zero.
+
+use std::cell::UnsafeCell;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::Ordering::{Acquire, Release};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::thread::{self, Thread};
+
+use super::pool::{num_cpus, pin_to_cpu, scoped_run};
+
+/// How a scheduling engine obtains its `p` worker threads. Engines
+/// call `run` once per parallel region; the executor guarantees
+/// `f(tid)` runs exactly once for every `tid in 0..p` and that all
+/// calls have finished (or a panic has been rethrown) on return.
+pub trait Executor: Sync {
+    fn run(&self, p: usize, f: &(dyn Fn(usize) + Sync));
+}
+
+/// Per-call scoped spawning (the seed strategy, and the pool's
+/// fallback for nested / concurrent / oversized runs).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SpawnExec {
+    pub pin: bool,
+}
+
+impl SpawnExec {
+    pub const fn new(pin: bool) -> SpawnExec {
+        SpawnExec { pin }
+    }
+}
+
+impl Executor for SpawnExec {
+    fn run(&self, p: usize, f: &(dyn Fn(usize) + Sync)) {
+        scoped_run(p, self.pin, f);
+    }
+}
+
+/// Executor view over a [`Runtime`].
+#[derive(Clone, Copy)]
+pub struct PoolExec<'a> {
+    rt: &'a Runtime,
+}
+
+impl Executor for PoolExec<'_> {
+    fn run(&self, p: usize, f: &(dyn Fn(usize) + Sync)) {
+        self.rt.run(p, f);
+    }
+}
+
+/// Type-erased pointer to a `&(dyn Fn(usize) + Sync)` loop body.
+type TaskPtr = *const (dyn Fn(usize) + Sync);
+
+/// Erase the body's lifetime so it can sit in a worker's job cell.
+///
+/// SAFETY contract (upheld by [`Runtime::run`]): the pointee must stay
+/// alive until the epoch's `pending` counter reaches zero, and no
+/// worker dereferences the pointer after decrementing that counter.
+fn erase<'a>(f: &'a (dyn Fn(usize) + Sync + 'a)) -> TaskPtr {
+    // A fat reference and a fat raw pointer share layout; only the
+    // lifetime is being erased here.
+    unsafe { std::mem::transmute::<&'a (dyn Fn(usize) + Sync + 'a), TaskPtr>(f) }
+}
+
+/// Join-side state of one fork-join epoch, living on the submitter's
+/// stack for the duration of the run.
+struct Epoch {
+    /// Workers still running this epoch.
+    pending: AtomicUsize,
+    /// The submitting thread, to unpark at the join.
+    waiter: Thread,
+    /// First worker panic, rethrown by the submitter after the join.
+    panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+}
+
+/// One dispatched assignment: run `task(tid)`, then check in.
+struct Job {
+    tid: usize,
+    task: TaskPtr,
+    epoch: *const Epoch,
+}
+
+// SAFETY: the raw pointers are valid for the epoch's lifetime (see
+// module docs); the job moves to exactly one worker.
+unsafe impl Send for Job {}
+
+/// A worker's mailbox. `job` is written by the submitter only while
+/// the worker is provably idle (previous epoch joined + run lock
+/// held) and read by the worker only after `seq` observes the bump
+/// published after the write.
+struct WorkerShared {
+    seq: AtomicU64,
+    shutdown: AtomicBool,
+    job: UnsafeCell<Option<Job>>,
+}
+
+// SAFETY: access to `job` is ordered by `seq`/`pending` as described
+// in the module docs; the atomics are Sync by themselves.
+unsafe impl Sync for WorkerShared {}
+
+struct Worker {
+    shared: Arc<WorkerShared>,
+    /// Unpark handle of the worker thread.
+    thread: Thread,
+    join: Option<thread::JoinHandle<()>>,
+}
+
+/// Idle/join wait tuning: burn a short spin first (fork-join latency
+/// when the pool is hot), then be polite, then park.
+const WAIT_SPINS: u32 = 256;
+const WAIT_YIELDS: u32 = 64;
+
+#[inline]
+fn wait_step(step: u32) {
+    if step < WAIT_SPINS {
+        std::hint::spin_loop();
+    } else if step < WAIT_SPINS + WAIT_YIELDS {
+        thread::yield_now();
+    } else {
+        thread::park();
+    }
+}
+
+fn worker_loop(shared: Arc<WorkerShared>, cpu: Option<usize>) {
+    if let Some(c) = cpu {
+        pin_to_cpu(c);
+    }
+    let mut seen = 0u64;
+    loop {
+        // Wait for a new epoch (or shutdown).
+        let mut step = 0u32;
+        loop {
+            let s = shared.seq.load(Acquire);
+            if s != seen {
+                seen = s;
+                break;
+            }
+            if shared.shutdown.load(Acquire) {
+                return;
+            }
+            wait_step(step);
+            step = step.saturating_add(1);
+        }
+        // SAFETY: the submitter wrote the job before the Release bump
+        // of `seq` that we just Acquired.
+        let Some(job) = (unsafe { (*shared.job.get()).take() }) else { continue };
+        // SAFETY: `task` and `epoch` outlive this epoch (module docs).
+        let task = unsafe { &*job.task };
+        let result = catch_unwind(AssertUnwindSafe(|| task(job.tid)));
+        let epoch = unsafe { &*job.epoch };
+        if let Err(payload) = result {
+            // First panic wins (matching std::thread::scope); later
+            // ones in the same epoch are dropped.
+            let mut slot = epoch.panic.lock().unwrap();
+            if slot.is_none() {
+                *slot = Some(payload);
+            }
+        }
+        // Clone the waiter handle BEFORE the decrement: the submitter
+        // may free the epoch the instant `pending` hits zero.
+        let waiter = epoch.waiter.clone();
+        if epoch.pending.fetch_sub(1, Release) == 1 {
+            waiter.unpark();
+        }
+    }
+}
+
+/// A persistent pool of parked worker threads plus a run lock that
+/// serializes fork-joins on it. The process-wide instance behind
+/// `parallel_for` is [`Runtime::global`]; tests and embedders can
+/// build private pools of any size.
+pub struct Runtime {
+    workers: Vec<Worker>,
+    run_lock: Mutex<()>,
+}
+
+impl Runtime {
+    /// Spawn a pool of `workers` threads, pinned round-robin when the
+    /// host has a core for each of them (plus one for the caller).
+    pub fn new(workers: usize) -> Runtime {
+        Runtime::with_pinning(workers, true)
+    }
+
+    /// Like [`Runtime::new`] with explicit pinning control. Worker
+    /// `i` is pinned to core `(i + 1) % num_cpus`, leaving core 0 for
+    /// the submitting thread; pinning is skipped when the pool would
+    /// oversubscribe the machine.
+    pub fn with_pinning(workers: usize, pin: bool) -> Runtime {
+        let ncpus = num_cpus();
+        let do_pin = pin && ncpus > workers;
+        let mut ws = Vec::with_capacity(workers);
+        for i in 0..workers {
+            let shared = Arc::new(WorkerShared {
+                seq: AtomicU64::new(0),
+                shutdown: AtomicBool::new(false),
+                job: UnsafeCell::new(None),
+            });
+            let s2 = Arc::clone(&shared);
+            let cpu = if do_pin { Some((i + 1) % ncpus) } else { None };
+            let join = thread::Builder::new()
+                .name(format!("ich-worker-{i}"))
+                .spawn(move || worker_loop(s2, cpu))
+                .expect("spawn pool worker");
+            let thread = join.thread().clone();
+            ws.push(Worker { shared, thread, join: Some(join) });
+        }
+        Runtime { workers: ws, run_lock: Mutex::new(()) }
+    }
+
+    /// The process-wide pool: `num_cpus − 1` workers (the submitter is
+    /// the p-th thread), spawned lazily on first use.
+    pub fn global() -> &'static Runtime {
+        static GLOBAL: OnceLock<Runtime> = OnceLock::new();
+        GLOBAL.get_or_init(|| Runtime::new(num_cpus().saturating_sub(1).max(1)))
+    }
+
+    /// Pool size (excluding the submitting thread).
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// An [`Executor`] view of this pool.
+    pub fn executor(&self) -> PoolExec<'_> {
+        PoolExec { rt: self }
+    }
+
+    /// Run `f(tid)` for every `tid in 0..p` — on the pool when it is
+    /// free and big enough, otherwise on per-call scoped threads
+    /// (nested and concurrent fork-joins thus degrade gracefully
+    /// instead of deadlocking). Worker panics are rethrown here.
+    ///
+    /// Thread placement is a spawn-time concern for pools: fallback
+    /// runs never pin, because `scoped_run(_, true, _)` re-pins the
+    /// *calling* thread to core 0 permanently, and the caller here may
+    /// be a pool worker (nested run) or a thread that lost the race
+    /// for a pooled epoch — clobbering the spawn-time round-robin
+    /// assignment and stacking threads on the submitter's core.
+    pub fn run(&self, p: usize, f: &(dyn Fn(usize) + Sync)) {
+        assert!(p > 0, "need at least one worker");
+        if p == 1 {
+            f(0);
+            return;
+        }
+        if p - 1 > self.workers.len() {
+            // More threads than pool workers: per-call spawn.
+            scoped_run(p, false, f);
+            return;
+        }
+        // One fork-join at a time per pool. `try_lock` keeps nested
+        // parallel_for (the lock is held by our own outer call) and
+        // concurrent submitters off the pool — both fall back. A
+        // poisoned lock (a previous run rethrew a body panic while
+        // holding it) is recovered, not treated as busy: the lock
+        // guards no data and the pool workers survived the panic.
+        let _guard = match self.run_lock.try_lock() {
+            Ok(g) => g,
+            Err(std::sync::TryLockError::Poisoned(poisoned)) => poisoned.into_inner(),
+            Err(std::sync::TryLockError::WouldBlock) => {
+                scoped_run(p, false, f);
+                return;
+            }
+        };
+        let epoch = Epoch {
+            pending: AtomicUsize::new(p - 1),
+            waiter: thread::current(),
+            panic: Mutex::new(None),
+        };
+        let task = erase(f);
+        for (i, w) in self.workers[..p - 1].iter().enumerate() {
+            // SAFETY: worker `i` is idle — its previous epoch was
+            // joined before the run lock was released to us.
+            unsafe {
+                *w.shared.job.get() = Some(Job { tid: i + 1, task, epoch: &epoch });
+            }
+            w.shared.seq.fetch_add(1, Release);
+            w.thread.unpark();
+        }
+        // The caller participates as tid 0. A panic here must not
+        // unwind past `epoch` while workers still hold pointers into
+        // this frame, so catch it and rethrow after the join.
+        let mine = catch_unwind(AssertUnwindSafe(|| f(0)));
+        let mut step = 0u32;
+        while epoch.pending.load(Acquire) != 0 {
+            wait_step(step);
+            step = step.saturating_add(1);
+        }
+        if let Err(payload) = mine {
+            resume_unwind(payload);
+        }
+        if let Some(payload) = epoch.panic.lock().unwrap().take() {
+            resume_unwind(payload);
+        }
+    }
+}
+
+impl Drop for Runtime {
+    fn drop(&mut self) {
+        for w in &self.workers {
+            w.shared.shutdown.store(true, Release);
+            w.thread.unpark();
+        }
+        for w in &mut self.workers {
+            if let Some(join) = w.join.take() {
+                let _ = join.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering::SeqCst};
+
+    #[test]
+    fn pool_runs_every_tid_once() {
+        let rt = Runtime::with_pinning(3, false);
+        let p = 4;
+        let hits: Vec<AtomicUsize> = (0..p).map(|_| AtomicUsize::new(0)).collect();
+        rt.run(p, &|tid| {
+            hits[tid].fetch_add(1, SeqCst);
+        });
+        for (tid, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(SeqCst), 1, "tid {tid}");
+        }
+    }
+
+    #[test]
+    fn pool_is_reused_across_runs() {
+        let rt = Runtime::with_pinning(2, false);
+        let count = AtomicUsize::new(0);
+        for _ in 0..500 {
+            rt.run(3, &|_tid| {
+                count.fetch_add(1, SeqCst);
+            });
+        }
+        assert_eq!(count.load(SeqCst), 1500);
+    }
+
+    #[test]
+    fn single_thread_runs_inline() {
+        let rt = Runtime::with_pinning(1, false);
+        let count = AtomicUsize::new(0);
+        rt.run(1, &|tid| {
+            assert_eq!(tid, 0);
+            count.fetch_add(1, SeqCst);
+        });
+        assert_eq!(count.load(SeqCst), 1);
+    }
+
+    #[test]
+    fn oversized_run_falls_back_to_scoped() {
+        let rt = Runtime::with_pinning(1, false);
+        let p = 6; // needs 5 workers, pool has 1
+        let hits: Vec<AtomicUsize> = (0..p).map(|_| AtomicUsize::new(0)).collect();
+        rt.run(p, &|tid| {
+            hits[tid].fetch_add(1, SeqCst);
+        });
+        for h in &hits {
+            assert_eq!(h.load(SeqCst), 1);
+        }
+    }
+
+    #[test]
+    fn worker_panic_propagates_and_pool_survives() {
+        let rt = Runtime::with_pinning(2, false);
+        for _ in 0..3 {
+            let r = catch_unwind(AssertUnwindSafe(|| {
+                rt.run(3, &|tid| {
+                    if tid == 2 {
+                        panic!("injected worker failure");
+                    }
+                });
+            }));
+            assert!(r.is_err(), "worker panic must rethrow on the submitter");
+        }
+        // The pool must be *reused* afterwards — a panic rethrown while
+        // holding the run lock poisons it, and a poisoned lock must be
+        // recovered rather than silently falling back to scoped spawns.
+        let on_pool = AtomicUsize::new(0);
+        rt.run(3, &|tid| {
+            let named = std::thread::current().name().is_some_and(|n| n.starts_with("ich-worker"));
+            if tid > 0 && named {
+                on_pool.fetch_add(1, SeqCst);
+            }
+        });
+        assert_eq!(on_pool.load(SeqCst), 2, "pool must stay in use after body panics");
+    }
+
+    #[test]
+    fn caller_panic_still_joins_workers() {
+        let rt = Runtime::with_pinning(2, false);
+        let worker_ran = AtomicUsize::new(0);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            rt.run(3, &|tid| {
+                if tid == 0 {
+                    panic!("injected caller failure");
+                }
+                worker_ran.fetch_add(1, SeqCst);
+            });
+        }));
+        assert!(r.is_err());
+        assert_eq!(worker_ran.load(SeqCst), 2, "workers finish before the rethrow");
+    }
+
+    #[test]
+    fn nested_run_on_same_pool_falls_back() {
+        let rt = Runtime::with_pinning(2, false);
+        let count = AtomicUsize::new(0);
+        rt.run(2, &|_outer| {
+            // The run lock is held by the outer call: this must take
+            // the scoped path instead of deadlocking.
+            rt.run(2, &|_inner| {
+                count.fetch_add(1, SeqCst);
+            });
+        });
+        assert_eq!(count.load(SeqCst), 4);
+    }
+
+    #[test]
+    fn global_pool_exists_and_is_stable() {
+        let a = Runtime::global() as *const Runtime;
+        let b = Runtime::global() as *const Runtime;
+        assert_eq!(a, b);
+        assert!(Runtime::global().workers() >= 1);
+    }
+
+    #[test]
+    fn executor_trait_objects_work() {
+        let rt = Runtime::with_pinning(2, false);
+        let pool = rt.executor();
+        let spawn = SpawnExec::new(false);
+        for exec in [&pool as &dyn Executor, &spawn as &dyn Executor] {
+            let count = AtomicUsize::new(0);
+            exec.run(3, &|_tid| {
+                count.fetch_add(1, SeqCst);
+            });
+            assert_eq!(count.load(SeqCst), 3);
+        }
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let rt = Runtime::with_pinning(4, false);
+        let count = AtomicUsize::new(0);
+        rt.run(5, &|_tid| {
+            count.fetch_add(1, SeqCst);
+        });
+        drop(rt); // must not hang
+        assert_eq!(count.load(SeqCst), 5);
+    }
+}

@@ -12,12 +12,12 @@
 use std::ops::Range;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering::Relaxed, Ordering::SeqCst};
 
-use crossbeam_utils::CachePadded;
-
 use super::deque::RangeDeque;
 use super::metrics::MetricsSink;
 use super::policy::{self, IchState};
+use super::runtime::Executor;
 use crate::util::rng::Rng;
+use crate::util::sync::CachePadded;
 
 /// How iCh merges thief/victim adaptive state on a successful steal —
 /// `Average` is the paper's rule (Listing 1 lines 6–7); the others are
@@ -82,9 +82,17 @@ impl Drop for RemainingGuard<'_> {
 /// Shared mutable state visible across workers.
 struct Shared {
     deques: Vec<RangeDeque>,
-    /// Iterations not yet *executed* (drives termination).
-    remaining: AtomicUsize,
-    /// Published per-thread k_i (completed iterations) for μ.
+    /// Iterations not yet *executed*. Drives termination AND the O(1)
+    /// μ: the global completed count is `total − remaining`, batched
+    /// one `fetch_sub` per chunk by the owners — cache-padded so the
+    /// counter never false-shares with the deque array.
+    remaining: CachePadded<AtomicUsize>,
+    /// Total iteration count n.
+    total: usize,
+    /// 1/p, precomputed for the μ hot path.
+    inv_p: f64,
+    /// Published per-thread k_i (completed iterations) — read only on
+    /// the cold steal path for state merging, not for μ.
     ks: Vec<CachePadded<AtomicU64>>,
     /// Published per-thread d_i (f64 bits) for steal-time merging.
     ds: Vec<CachePadded<AtomicU64>>,
@@ -101,50 +109,68 @@ impl Shared {
         }
         Shared {
             deques,
-            remaining: AtomicUsize::new(n),
+            remaining: CachePadded::new(AtomicUsize::new(n)),
+            total: n,
+            inv_p: 1.0 / p as f64,
             ks: (0..p).map(|_| CachePadded::new(AtomicU64::new(0))).collect(),
             ds: (0..p).map(|_| CachePadded::new(AtomicU64::new(d0.to_bits()))).collect(),
         }
     }
 
-    /// Running mean iteration throughput μ = Σ k_j / p (§3.2).
+    /// Running mean completed iterations per thread, μ = (n −
+    /// remaining)/p (§3.2). O(1) — one relaxed load and one multiply,
+    /// where the seed runtime ran an O(p) scan over the published k̂_i
+    /// after **every** chunk. NOTE this is a deliberate semantic
+    /// refinement, not a bit-exact port: after a steal merge the
+    /// published k̂_i are averaged (Listing 1 lines 6–7), so their sum
+    /// drifts from the true completed count and the seed's Σk̂_i/p
+    /// drifted with it. The global counter is the *exact* mean
+    /// completed per thread, which is what eq 7's classification
+    /// interval μ ± δ is defined against; per-thread k_i (including
+    /// merge effects) still feed `classify` as before.
     #[inline]
     fn mu(&self) -> f64 {
-        let sum: u64 = self.ks.iter().map(|k| k.load(Relaxed)).sum();
-        sum as f64 / self.ks.len() as f64
+        let done = self.total - self.remaining.load(Relaxed).min(self.total);
+        done as f64 * self.inv_p
     }
 }
+
+/// Failed-steal backoff: up to this many consecutive failures the
+/// thief spins (2^fails pause hints, bounded); beyond it, it yields
+/// the core to whoever holds useful work. The spin→yield transition
+/// is recorded once per episode in the [`MetricsSink`].
+const STEAL_SPIN_FAILS: u32 = 6;
 
 /// Run the fixed-chunk work-stealing baseline.
 pub fn run_stealing(
     n: usize,
     p: usize,
-    pin: bool,
+    exec: &dyn Executor,
     chunk: usize,
     seed: u64,
     body: &(dyn Fn(Range<usize>) + Sync),
     sink: &MetricsSink,
 ) {
-    run_engine(n, p, pin, ChunkPolicy::Fixed(chunk.max(1)), seed, body, sink)
+    run_engine(n, p, exec, ChunkPolicy::Fixed(chunk.max(1)), seed, body, sink)
 }
 
 /// Run iCh.
 pub fn run_ich(
     n: usize,
     p: usize,
-    pin: bool,
+    exec: &dyn Executor,
     params: IchParams,
     seed: u64,
     body: &(dyn Fn(Range<usize>) + Sync),
     sink: &MetricsSink,
 ) {
-    run_engine(n, p, pin, ChunkPolicy::Adaptive(params), seed, body, sink)
+    run_engine(n, p, exec, ChunkPolicy::Adaptive(params), seed, body, sink)
 }
 
 fn run_engine(
     n: usize,
     p: usize,
-    pin: bool,
+    exec: &dyn Executor,
     chunk_policy: ChunkPolicy,
     seed: u64,
     body: &(dyn Fn(Range<usize>) + Sync),
@@ -161,7 +187,7 @@ fn run_engine(
     let chunk_policy = &chunk_policy;
     let shared = &shared;
 
-    super::pool::scoped_run(p, pin, move |tid| {
+    exec.run(p, &move |tid| {
         worker(tid, p, seed, shared, chunk_policy, body, sink);
     });
 
@@ -183,6 +209,8 @@ fn worker(
     // (perf pass: avoids two shared RMWs per chunk).
     let mut local_chunks = 0u64;
     let mut local_iters = 0u64;
+    // Consecutive failed steals, for the spin→yield backoff.
+    let mut steal_fails = 0u32;
 
     loop {
         // ---- Drain the local queue ----------------------------------
@@ -207,7 +235,9 @@ fn worker(
             // §3.2 local adaptation: classify against μ ± δ and adjust
             // d. Only iCh publishes k/d — the fixed-chunk baseline has
             // no adaptation pass (perf pass: keeps its owner loop to
-            // one shared RMW per chunk).
+            // one shared RMW per chunk). μ itself is O(1): the guard's
+            // `remaining` decrement above already fed the global
+            // completed count, so no per-thread scan happens here.
             if let ChunkPolicy::Adaptive(prm) = chunk_policy {
                 shared.ks[tid].store(st.k as u64, Relaxed);
                 let mu = shared.mu();
@@ -247,6 +277,7 @@ fn worker(
         };
         match shared.deques[victim].steal_half() {
             Some(stolen) => {
+                steal_fails = 0;
                 sink.add_steal(tid, true);
                 if let ChunkPolicy::Adaptive(prm) = chunk_policy {
                     // Listing 1 lines 6–7 (+ merge-rule ablations).
@@ -270,7 +301,21 @@ fn worker(
             }
             None => {
                 sink.add_steal(tid, false);
-                std::hint::spin_loop();
+                // Bounded exponential backoff (§3.3 refinement): the
+                // seed runtime issued a single pause hint and retried,
+                // hammering victims' locks when the loop drains. Spin
+                // 2^fails hints first, then escalate to yielding.
+                steal_fails = steal_fails.saturating_add(1);
+                if steal_fails <= STEAL_SPIN_FAILS {
+                    for _ in 0..(1u32 << steal_fails) {
+                        std::hint::spin_loop();
+                    }
+                } else {
+                    if steal_fails == STEAL_SPIN_FAILS + 1 {
+                        sink.add_backoff(tid);
+                    }
+                    std::thread::yield_now();
+                }
             }
         }
     }
@@ -279,7 +324,10 @@ fn worker(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use super::super::runtime::{Runtime, SpawnExec};
     use std::sync::atomic::AtomicU64 as Cell;
+
+    const SPAWN: SpawnExec = SpawnExec::new(false);
 
     fn run_and_check(n: usize, p: usize, f: impl FnOnce(&(dyn Fn(Range<usize>) + Sync), &MetricsSink)) {
         let hits: Vec<Cell> = (0..n).map(|_| Cell::new(0)).collect();
@@ -302,7 +350,7 @@ mod tests {
     #[test]
     fn stealing_executes_every_iteration_once() {
         for &(n, p) in &[(1usize, 1usize), (10, 4), (1000, 4), (1000, 7), (97, 3)] {
-            run_and_check(n, p, |body, sink| run_stealing(n, p, false, 2, 42, body, sink));
+            run_and_check(n, p, |body, sink| run_stealing(n, p, &SPAWN, 2, 42, body, sink));
         }
     }
 
@@ -310,7 +358,7 @@ mod tests {
     fn ich_executes_every_iteration_once() {
         for &(n, p) in &[(1usize, 1usize), (10, 4), (1000, 4), (1000, 7), (97, 3)] {
             run_and_check(n, p, |body, sink| {
-                run_ich(n, p, false, IchParams::with_eps(0.33), 42, body, sink)
+                run_ich(n, p, &SPAWN, IchParams::with_eps(0.33), 42, body, sink)
             });
         }
     }
@@ -318,7 +366,7 @@ mod tests {
     #[test]
     fn ich_zero_iterations_is_noop() {
         let sink = MetricsSink::new(2);
-        run_ich(0, 2, false, IchParams::default(), 1, &|_r| panic!("no body calls"), &sink);
+        run_ich(0, 2, &SPAWN, IchParams::default(), 1, &|_r| panic!("no body calls"), &sink);
     }
 
     #[test]
@@ -326,7 +374,7 @@ mod tests {
         for merge in [StealMerge::Average, StealMerge::Victim, StealMerge::Keep] {
             for informed in [false, true] {
                 let prm = IchParams { merge, informed, ..IchParams::with_eps(0.25) };
-                run_and_check(500, 4, |body, sink| run_ich(500, 4, false, prm, 7, body, sink));
+                run_and_check(500, 4, |body, sink| run_ich(500, 4, &SPAWN, prm, 7, body, sink));
             }
         }
     }
@@ -334,7 +382,7 @@ mod tests {
     #[test]
     fn ich_inverted_ablation_still_correct() {
         let prm = IchParams { inverted: true, ..Default::default() };
-        run_and_check(500, 4, |body, sink| run_ich(500, 4, false, prm, 11, body, sink));
+        run_and_check(500, 4, |body, sink| run_ich(500, 4, &SPAWN, prm, 11, body, sink));
     }
 
     #[test]
@@ -356,16 +404,56 @@ mod tests {
                 }
             }
         };
-        run_ich(n, p, false, IchParams::default(), 3, &body, &sink);
+        run_ich(n, p, &SPAWN, IchParams::default(), 3, &body, &sink);
         let m = sink.collect(std::time::Duration::ZERO);
         assert_eq!(m.total_iters, n as u64);
         assert!(m.steals_ok > 0, "expected at least one successful steal");
     }
 
     #[test]
+    fn ich_runs_on_persistent_pool() {
+        // Force the pool fork-join path regardless of host core count.
+        let rt = Runtime::with_pinning(3, false);
+        let exec = rt.executor();
+        for &(n, p) in &[(1000usize, 4usize), (97, 2)] {
+            run_and_check(n, p, |body, sink| {
+                run_ich(n, p, &exec, IchParams::default(), 42, body, sink)
+            });
+        }
+    }
+
+    #[test]
+    fn failed_steals_record_backoff_transitions() {
+        // One iteration sleeps while every queue is already drained:
+        // the three idle threads must fail steals continuously for the
+        // whole sleep, exhaust the bounded spin phase, and record a
+        // spin→yield transition in the sink.
+        let n = 4;
+        let p = 4;
+        let sink = MetricsSink::new(p);
+        let body = |r: Range<usize>| {
+            for i in r {
+                if i == 0 {
+                    std::thread::sleep(std::time::Duration::from_millis(100));
+                }
+            }
+        };
+        run_stealing(n, p, &SPAWN, 1, 9, &body, &sink);
+        let m = sink.collect(std::time::Duration::ZERO);
+        assert_eq!(m.total_iters, n as u64);
+        assert!(m.backoffs >= 1, "expected a spin→yield backoff while iteration 0 slept");
+        assert!(
+            m.backoffs <= m.steals_failed,
+            "transitions ({}) cannot exceed failed steals ({})",
+            m.backoffs,
+            m.steals_failed
+        );
+    }
+
+    #[test]
     fn single_thread_never_steals() {
         let sink = MetricsSink::new(1);
-        run_ich(100, 1, false, IchParams::default(), 5, &|_r| {}, &sink);
+        run_ich(100, 1, &SPAWN, IchParams::default(), 5, &|_r| {}, &sink);
         let m = sink.collect(std::time::Duration::ZERO);
         assert_eq!(m.steals_ok + m.steals_failed, 0);
         assert_eq!(m.total_iters, 100);

@@ -3,7 +3,7 @@
 //! experiments use the synthetic suite; DESIGN.md §3).
 
 use super::CsrMatrix;
-use anyhow::{bail, Context, Result};
+use crate::util::error::{bail, Context, Result};
 use std::io::{BufRead, Write};
 
 /// Read a MatrixMarket `coordinate` file (general or symmetric,

@@ -1,0 +1,155 @@
+//! Minimal `anyhow`-style dynamic error (the crate builds offline with
+//! zero external dependencies): a message-chained [`Error`], a
+//! [`Context`] extension trait for `Result`/`Option`, and the
+//! `anyhow!` / `bail!` / `ensure!` macros. The API mirrors the subset
+//! of `anyhow` the runtime bridge and sparse I/O actually use, so
+//! swapping the real crate back in is a one-line import change.
+
+use std::fmt;
+
+/// A message-chained error. Context layers are prepended
+/// outermost-first, exactly how `anyhow` renders `{:#}`.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error { msg: m.to_string() }
+    }
+
+    /// Prepend a context layer.
+    pub fn wrap(self, c: impl fmt::Display) -> Error {
+        Error { msg: format!("{c}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        // Flatten the source chain into the message.
+        let mut msg = e.to_string();
+        let mut src = e.source();
+        while let Some(s) = src {
+            msg = format!("{msg}: {s}");
+            src = s.source();
+        }
+        Error { msg }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `anyhow::Context` stand-in: attach context to errors / `None`s.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{c}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Build an [`Error`] from format args (like `anyhow::anyhow!`).
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => { $crate::util::error::Error::msg(format!($($arg)*)) };
+}
+
+/// Return early with an [`Error`] built from format args.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => { return Err($crate::util::error::Error::msg(format!($($arg)*))) };
+}
+
+/// Return early with an [`Error`] when the condition fails.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::util::error::Error::msg(format!($($arg)*)));
+        }
+    };
+}
+
+// Make the crate-root macros importable as `util::error::{...}`, so
+// call sites can `use crate::util::error as anyhow;` and keep their
+// `anyhow::ensure!(..)` spelling.
+pub use crate::{anyhow, bail, ensure};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<i32> {
+        let v: i32 = s.parse()?; // std error converts via From
+        ensure!(v >= 0, "negative: {v}");
+        Ok(v)
+    }
+
+    #[test]
+    fn from_std_error_and_ensure() {
+        assert_eq!(parse("42").unwrap(), 42);
+        assert!(parse("nope").is_err());
+        let e = parse("-3").unwrap_err();
+        assert_eq!(e.to_string(), "negative: -3");
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::fmt::Error> = Err(std::fmt::Error);
+        let e = r.context("outer").unwrap_err();
+        assert!(e.to_string().starts_with("outer: "));
+
+        let n: Option<i32> = None;
+        assert_eq!(n.context("missing").unwrap_err().to_string(), "missing");
+        let s: Option<i32> = Some(7);
+        assert_eq!(s.with_context(|| "unused").unwrap(), 7);
+    }
+
+    #[test]
+    fn bail_and_anyhow_macros() {
+        fn f(flag: bool) -> Result<()> {
+            if flag {
+                bail!("flagged {}", 1);
+            }
+            Err(anyhow!("fell through"))
+        }
+        assert_eq!(f(true).unwrap_err().to_string(), "flagged 1");
+        assert_eq!(f(false).unwrap_err().to_string(), "fell through");
+    }
+
+    #[test]
+    fn wrap_prepends() {
+        let e = Error::msg("inner").wrap("outer");
+        assert_eq!(format!("{e}"), "outer: inner");
+        assert_eq!(format!("{e:?}"), "outer: inner");
+    }
+}

@@ -1,13 +1,17 @@
 //! Shared substrate: RNG + distributions, statistics, CLI parsing,
-//! JSON/table/chart rendering, histograms, and a property-test helper.
-//! These stand in for `rand`, `serde_json`, `clap`, and `proptest`,
-//! none of which are available in the offline build environment.
+//! JSON/table/chart rendering, histograms, a property-test helper,
+//! an error type, and padded concurrency cells. These stand in for
+//! `rand`, `serde_json`, `clap`, `proptest`, `anyhow`, and
+//! `crossbeam-utils`, none of which are available in the offline
+//! build environment — the crate compiles with zero dependencies.
 
 pub mod chart;
 pub mod cli;
+pub mod error;
 pub mod histogram;
 pub mod json;
 pub mod proptest_lite;
 pub mod rng;
 pub mod stats;
+pub mod sync;
 pub mod table;

@@ -1,0 +1,63 @@
+//! Concurrency primitives the offline build cannot take from
+//! `crossbeam-utils`: a cache-line-padded cell used by every shared
+//! per-thread counter so the hot paths never false-share.
+
+/// Pads and aligns `T` to 128 bytes (two 64-byte lines — covers the
+/// adjacent-line prefetcher on x86 and the 128-byte lines on some ARM
+/// parts), so that two `CachePadded` values never share a cache line.
+#[derive(Debug, Default)]
+#[repr(align(128))]
+pub struct CachePadded<T> {
+    value: T,
+}
+
+impl<T> CachePadded<T> {
+    pub const fn new(value: T) -> CachePadded<T> {
+        CachePadded { value }
+    }
+
+    pub fn into_inner(self) -> T {
+        self.value
+    }
+}
+
+impl<T> std::ops::Deref for CachePadded<T> {
+    type Target = T;
+
+    fn deref(&self) -> &T {
+        &self.value
+    }
+}
+
+impl<T> std::ops::DerefMut for CachePadded<T> {
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.value
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+
+    #[test]
+    fn padded_slots_do_not_share_lines() {
+        let v: Vec<CachePadded<AtomicU64>> = (0..4).map(|_| CachePadded::new(AtomicU64::new(0))).collect();
+        for (i, c) in v.iter().enumerate() {
+            c.store(i as u64, Relaxed);
+        }
+        for (i, c) in v.iter().enumerate() {
+            assert_eq!(c.load(Relaxed), i as u64);
+        }
+        assert_eq!(std::mem::align_of::<CachePadded<AtomicU64>>(), 128);
+        assert!(std::mem::size_of::<CachePadded<AtomicU64>>() >= 128);
+    }
+
+    #[test]
+    fn deref_reaches_inner() {
+        let mut c = CachePadded::new(41u32);
+        *c += 1;
+        assert_eq!(*c, 42);
+        assert_eq!(c.into_inner(), 42);
+    }
+}

@@ -1,0 +1,163 @@
+//! Pool-reuse stress: the persistent worker-pool runtime must survive
+//! thousands of consecutive fork-joins over mixed policies with no
+//! thread leaks and exactly-once iteration coverage, and nested
+//! `parallel_for` must fall back to scoped spawn instead of
+//! deadlocking on the pool's run lock.
+
+use ich::sched::runtime::Runtime;
+use ich::sched::{parallel_for, ExecMode, ForOpts, IchParams, Policy};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering::SeqCst};
+
+/// Number of live pool workers (threads named `ich-worker-*`) in this
+/// process — immune to the unnamed scoped/test threads other tests in
+/// this binary spawn concurrently. Linux only; None elsewhere.
+#[cfg(target_os = "linux")]
+fn pool_thread_count() -> Option<usize> {
+    let mut n = 0;
+    for entry in std::fs::read_dir("/proc/self/task").ok()? {
+        let comm = entry.ok()?.path().join("comm");
+        if let Ok(name) = std::fs::read_to_string(comm) {
+            if name.starts_with("ich-worker") {
+                n += 1;
+            }
+        }
+    }
+    Some(n)
+}
+
+#[cfg(not(target_os = "linux"))]
+fn pool_thread_count() -> Option<usize> {
+    None
+}
+
+#[test]
+fn thousand_consecutive_runs_on_shared_pool() {
+    let policies = Policy::representatives();
+    // Warm the shared pool so its worker spawns don't count as "leaks".
+    Runtime::global();
+    parallel_for(64, &Policy::Ich(IchParams::default()), &ForOpts::threads(2), &|_r| {});
+    let before = pool_thread_count();
+
+    let n = 257usize;
+    let w: Vec<f64> = (0..n).map(|i| 1.0 + (i % 5) as f64).collect();
+    let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+    for round in 0..1_200usize {
+        let policy = &policies[round % policies.len()];
+        for h in &hits {
+            h.store(0, SeqCst);
+        }
+        let opts = ForOpts {
+            threads: 2 + round % 3, // mix pool-served and fallback widths
+            pin: false,
+            seed: round as u64,
+            weights: Some(&w),
+            ..Default::default()
+        };
+        let m = parallel_for(n, policy, &opts, &|r| {
+            for i in r {
+                hits[i].fetch_add(1, SeqCst);
+            }
+        });
+        assert_eq!(m.total_iters, n as u64, "round {round} policy {}", policy.name());
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(SeqCst), 1, "round {round} policy {} iter {i}", policy.name());
+        }
+    }
+
+    // Pool reuse means consecutive runs leave no pool threads behind
+    // (slack 3: the private-pool test may be running concurrently).
+    if let (Some(b), Some(a)) = (before, pool_thread_count()) {
+        assert!(a <= b + 3, "pool thread leak across 1200 runs: {b} -> {a}");
+    }
+}
+
+#[test]
+fn private_pool_thousand_fork_joins_and_joins_on_drop() {
+    Runtime::global(); // settle the one-time global spawn first
+    let before = pool_thread_count();
+    let rt = Runtime::with_pinning(3, false);
+    let count = AtomicUsize::new(0);
+    for _ in 0..1_000 {
+        rt.run(4, &|_tid| {
+            count.fetch_add(1, SeqCst);
+        });
+    }
+    assert_eq!(count.load(SeqCst), 4_000);
+    let with_pool = pool_thread_count();
+    drop(rt); // joins all three workers
+    let after = pool_thread_count();
+    if let (Some(b), Some(w), Some(a)) = (before, with_pool, after) {
+        assert!(w >= b + 3, "private pool workers missing: {b} -> {w}");
+        assert!(a <= w - 3, "pool threads leaked after drop: {w} -> {a}");
+    }
+}
+
+#[test]
+fn nested_parallel_for_falls_back_to_scoped_spawn() {
+    let outer = 8usize;
+    let inner = 100usize;
+    let cells: Vec<AtomicU64> = (0..outer * inner).map(|_| AtomicU64::new(0)).collect();
+    let opts = ForOpts { threads: 2, pin: false, ..Default::default() };
+    let m = parallel_for(outer, &Policy::Dynamic { chunk: 1 }, &opts, &|r| {
+        for o in r {
+            // The outer call holds the pool's run lock (when it got the
+            // pool), so this inner call must take the scoped-spawn path
+            // rather than deadlocking — from the caller thread and from
+            // pool workers alike.
+            let iopts = ForOpts { threads: 2, pin: false, ..Default::default() };
+            let im = parallel_for(inner, &Policy::Ich(IchParams::default()), &iopts, &|ir| {
+                for i in ir {
+                    cells[o * inner + i].fetch_add(1, SeqCst);
+                }
+            });
+            assert_eq!(im.total_iters, inner as u64);
+        }
+    });
+    assert_eq!(m.total_iters, outer as u64);
+    for (i, c) in cells.iter().enumerate() {
+        assert_eq!(c.load(SeqCst), 1, "cell {i}");
+    }
+}
+
+#[test]
+fn spawn_mode_bypasses_the_pool() {
+    let n = 500usize;
+    let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+    let opts = ForOpts { threads: 3, pin: false, mode: ExecMode::Spawn, ..Default::default() };
+    let m = parallel_for(n, &Policy::Stealing { chunk: 4 }, &opts, &|r| {
+        for i in r {
+            hits[i].fetch_add(1, SeqCst);
+        }
+    });
+    assert_eq!(m.total_iters, n as u64);
+    for h in &hits {
+        assert_eq!(h.load(SeqCst), 1);
+    }
+}
+
+#[test]
+fn concurrent_parallel_for_from_many_threads() {
+    // Several OS threads race `parallel_for` against the shared pool:
+    // at most one wins the pool per instant, the rest fall back — all
+    // must complete correctly.
+    let n = 400usize;
+    std::thread::scope(|s| {
+        for t in 0..4u64 {
+            s.spawn(move || {
+                for round in 0..50u64 {
+                    let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+                    let opts = ForOpts { threads: 2, pin: false, seed: t * 1000 + round, ..Default::default() };
+                    let m = parallel_for(n, &Policy::Ich(IchParams::default()), &opts, &|r| {
+                        for i in r {
+                            hits[i].fetch_add(1, SeqCst);
+                        }
+                    });
+                    assert_eq!(m.total_iters, n as u64);
+                    for h in &hits {
+                        assert_eq!(h.load(SeqCst), 1);
+                    }
+                }
+            });
+        }
+    });
+}

@@ -34,7 +34,7 @@ fn prop_exactly_once_execution() {
         let policy = random_policy(rng);
         let w = arbitrary_weights(rng, n);
         let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
-        let opts = ForOpts { threads: p, pin: false, seed: rng.next_u64(), weights: Some(&w) };
+        let opts = ForOpts { threads: p, pin: false, seed: rng.next_u64(), weights: Some(&w), ..Default::default() };
         let m = ich::parallel_for(n, &policy, &opts, &|r| {
             for i in r {
                 hits[i].fetch_add(1, SeqCst);

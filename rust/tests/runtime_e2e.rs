@@ -26,7 +26,7 @@ fn scheduled_spmv_through_pjrt_matches_reference() {
     a.spmv_seq(&x, &mut want);
 
     let y: Vec<AtomicU32> = (0..a.nrows).map(|_| AtomicU32::new(0)).collect();
-    let opts = ForOpts { threads: 3, pin: false, seed: 5, weights: None };
+    let opts = ForOpts { threads: 3, pin: false, seed: 5, weights: None, ..Default::default() };
     let m = parallel_for(a.nrows, &Policy::Ich(IchParams::default()), &opts, &|r| {
         let got = h.spmv_rows(&a, &x, r.clone()).unwrap();
         for (row, v) in r.zip(got) {
@@ -66,7 +66,7 @@ fn scheduled_kmeans_through_pjrt_matches_reference() {
         .collect();
 
     let got: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(u32::MAX)).collect();
-    let opts = ForOpts { threads: 2, pin: false, seed: 9, weights: None };
+    let opts = ForOpts { threads: 2, pin: false, seed: 9, weights: None, ..Default::default() };
     parallel_for(n, &Policy::Stealing { chunk: 256 }, &opts, &|r| {
         let a = h.kmeans_assign(&points[r.start * d..r.end * d], d, &cents, k).unwrap();
         for (i, c) in r.zip(a) {

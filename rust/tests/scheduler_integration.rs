@@ -72,7 +72,7 @@ fn sim_is_deterministic_across_policies() {
 fn oversubscription_is_correct() {
     // More threads than iterations, more threads than cores.
     let hits: Vec<AtomicU64> = (0..10).map(|_| AtomicU64::new(0)).collect();
-    let opts = ForOpts { threads: 16, pin: false, seed: 3, weights: None };
+    let opts = ForOpts { threads: 16, pin: false, seed: 3, weights: None, ..Default::default() };
     ich::parallel_for(10, &Policy::Ich(IchParams::default()), &opts, &|r| {
         for i in r {
             hits[i].fetch_add(1, SeqCst);
@@ -86,7 +86,7 @@ fn oversubscription_is_correct() {
 #[test]
 fn panicking_body_propagates_without_deadlock() {
     let result = std::panic::catch_unwind(|| {
-        let opts = ForOpts { threads: 3, pin: false, seed: 1, weights: None };
+        let opts = ForOpts { threads: 3, pin: false, seed: 1, weights: None, ..Default::default() };
         ich::parallel_for(1_000, &Policy::Ich(IchParams::default()), &opts, &|r| {
             if r.contains(&500) {
                 panic!("injected failure");
@@ -99,7 +99,7 @@ fn panicking_body_propagates_without_deadlock() {
 #[test]
 fn panicking_body_propagates_under_dynamic() {
     let result = std::panic::catch_unwind(|| {
-        let opts = ForOpts { threads: 3, pin: false, seed: 1, weights: None };
+        let opts = ForOpts { threads: 3, pin: false, seed: 1, weights: None, ..Default::default() };
         ich::parallel_for(1_000, &Policy::Dynamic { chunk: 8 }, &opts, &|r| {
             if r.contains(&400) {
                 panic!("injected failure");
@@ -131,7 +131,7 @@ fn weights_are_respected_by_binlpt() {
     let n = 2_000;
     let w: Vec<f64> = (0..n).map(|i| if i < 10 { 1_000.0 } else { 1.0 }).collect();
     let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
-    let opts = ForOpts { threads: 4, pin: false, seed: 2, weights: Some(&w) };
+    let opts = ForOpts { threads: 4, pin: false, seed: 2, weights: Some(&w), ..Default::default() };
     let m = ich::parallel_for(n, &Policy::Binlpt { max_chunks: 64 }, &opts, &|r| {
         for i in r {
             hits[i].fetch_add(1, SeqCst);

@@ -1,16 +1,22 @@
 //! L3 micro-benchmarks on the *real* threaded runtime: per-chunk
 //! dispatch overhead per policy (empty bodies — pure scheduler cost),
-//! THE-deque operation latency, iCh's adaptation-pass cost, and the
+//! THE-deque operation latency, iCh's adaptation-pass cost, the
 //! fork-join overhead of the persistent worker pool vs per-call thread
-//! spawning (recorded to `BENCH_forkjoin.json`).
+//! spawning (recorded to `BENCH_forkjoin.json`), and blocking vs
+//! asynchronous epoch submission under concurrent submitters
+//! (recorded to `BENCH_async.json`).
 //! These are the §Perf numbers for the hot path.
 
 mod bench_common;
 use bench_common::{bench, fmt_s, save_json};
 
+use std::ops::Range;
+use std::sync::Arc;
+use std::time::Instant;
+
 use ich::sched::deque::RangeDeque;
 use ich::sched::runtime::Runtime;
-use ich::sched::{parallel_for, ExecMode, ForOpts, IchParams, Policy};
+use ich::sched::{parallel_for, parallel_for_async, ExecMode, ForOpts, IchParams, Policy};
 use ich::util::json::Json;
 
 fn dispatch_overhead() {
@@ -136,6 +142,139 @@ fn fork_join_overhead() {
     save_json("BENCH_forkjoin.json", &out);
 }
 
+/// Blocking fork-join round trip vs async submission on the shared
+/// pool — single submitter latency plus total throughput under
+/// concurrent submitters. Emits `BENCH_async.json`. The headline
+/// number: the async *submit call* (enqueue + return) must be far
+/// below the blocking round trip (enqueue + run + join).
+fn async_submission() {
+    println!("\n== async epoch submission vs blocking fork-join ==");
+    // Async epochs run all p tids on pool workers (the submitter does
+    // not participate), so full pool service needs p ≤ workers; on a
+    // 1-worker host the async arm measures the detached fallback.
+    let p = Runtime::global().workers().clamp(2, 4);
+    let n = 10_000usize;
+    let reps = 200usize;
+    let policy = Policy::Ich(IchParams::default());
+    let opts = ForOpts { threads: p, pin: false, seed: 7, weights: None, mode: ExecMode::Pool };
+    let body: Arc<dyn Fn(Range<usize>) + Send + Sync> = Arc::new(|rr: Range<usize>| {
+        std::hint::black_box(rr.len());
+    });
+
+    // (a) Blocking round trip per call.
+    let r_block = bench(&format!("blocking fork-join n={n} p={p}"), 1, 3, || {
+        for _ in 0..reps {
+            let m = parallel_for(n, &policy, &opts, &|rr| {
+                std::hint::black_box(rr.len());
+            });
+            assert_eq!(m.total_iters, n as u64);
+        }
+    });
+    let blocking_s = r_block.min_s / reps as f64;
+
+    // (b) Submission latency: time only the submit calls; epochs are
+    // joined through a small sliding window (so the queue stays
+    // bounded) and fully drained outside the timed region.
+    let mut submit_s = f64::INFINITY;
+    for _ in 0..3 {
+        let mut timed = 0.0f64;
+        let mut handles = std::collections::VecDeque::new();
+        for _ in 0..reps {
+            let t = Instant::now();
+            let h = parallel_for_async(n, &policy, &opts, Arc::clone(&body));
+            timed += t.elapsed().as_secs_f64();
+            handles.push_back(h);
+            if handles.len() >= 8 {
+                let m = handles.pop_front().unwrap().join();
+                assert_eq!(m.total_iters, n as u64);
+            }
+        }
+        for h in handles {
+            assert_eq!(h.join().total_iters, n as u64);
+        }
+        submit_s = submit_s.min(timed / reps as f64);
+    }
+    println!(
+        "    -> async submit {} vs blocking round trip {} per call ({:.1}x below)",
+        fmt_s(submit_s),
+        fmt_s(blocking_s),
+        blocking_s / submit_s
+    );
+
+    // (c) Throughput with concurrent submitters: S threads × R loops
+    // each, blocking (each thread joins every loop before the next)
+    // vs async (each thread keeps a window of epochs in flight).
+    let submitters = 3usize;
+    let loops_each = 50usize;
+    let mut blocking_total_s = f64::INFINITY;
+    let mut async_total_s = f64::INFINITY;
+    for _ in 0..3 {
+        let t0 = Instant::now();
+        std::thread::scope(|s| {
+            for t in 0..submitters {
+                let (policy, opts) = (&policy, &opts);
+                s.spawn(move || {
+                    for round in 0..loops_each {
+                        let o = opts.clone().with_seed((t * 1000 + round) as u64);
+                        let m = parallel_for(n, policy, &o, &|rr| {
+                            std::hint::black_box(rr.len());
+                        });
+                        assert_eq!(m.total_iters, n as u64);
+                    }
+                });
+            }
+        });
+        blocking_total_s = blocking_total_s.min(t0.elapsed().as_secs_f64());
+
+        let t0 = Instant::now();
+        std::thread::scope(|s| {
+            for t in 0..submitters {
+                let (policy, opts, body) = (&policy, &opts, &body);
+                s.spawn(move || {
+                    let mut handles = std::collections::VecDeque::new();
+                    for round in 0..loops_each {
+                        let o = opts.clone().with_seed((t * 1000 + round) as u64);
+                        handles.push_back(parallel_for_async(n, policy, &o, Arc::clone(body)));
+                        if handles.len() >= 4 {
+                            let m = handles.pop_front().unwrap().join();
+                            assert_eq!(m.total_iters, n as u64);
+                        }
+                    }
+                    for h in handles {
+                        assert_eq!(h.join().total_iters, n as u64);
+                    }
+                });
+            }
+        });
+        async_total_s = async_total_s.min(t0.elapsed().as_secs_f64());
+    }
+    println!(
+        "    -> {submitters} submitters × {loops_each} loops: blocking {} vs async {} total ({:.2}x)",
+        fmt_s(blocking_total_s),
+        fmt_s(async_total_s),
+        blocking_total_s / async_total_s
+    );
+
+    let mut out = Json::obj();
+    out.set("bench", Json::str("async_submission"));
+    out.set("threads", Json::num(p as f64));
+    out.set("pool_workers", Json::num(Runtime::global().workers() as f64));
+    out.set("n", Json::num(n as f64));
+    out.set("reps", Json::num(reps as f64));
+    out.set("policy", Json::str(&policy.name()));
+    out.set("blocking_round_trip_s", Json::num(blocking_s));
+    out.set("async_submit_s", Json::num(submit_s));
+    out.set("blocking_over_submit", Json::num(blocking_s / submit_s));
+    let mut conc = Json::obj();
+    conc.set("submitters", Json::num(submitters as f64));
+    conc.set("loops_per_submitter", Json::num(loops_each as f64));
+    conc.set("blocking_total_s", Json::num(blocking_total_s));
+    conc.set("async_total_s", Json::num(async_total_s));
+    conc.set("blocking_over_async", Json::num(blocking_total_s / async_total_s));
+    out.set("concurrent", conc);
+    save_json("BENCH_async.json", &out);
+}
+
 fn multithread_smoke() {
     println!("\n== multi-thread correctness overhead (oversubscribed on this host) ==");
     let n = 1_000_000usize;
@@ -154,5 +293,6 @@ fn main() {
     dispatch_overhead();
     deque_primitives();
     fork_join_overhead();
+    async_submission();
     multithread_smoke();
 }

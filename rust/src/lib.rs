@@ -10,7 +10,10 @@
 //! described in `DESIGN.md`:
 //!
 //! - [`sched`] — the L3 coordinator: `parallel_for` with pluggable
-//!   self-scheduling policies (iCh + all the paper's baselines).
+//!   self-scheduling policies (iCh + all the paper's baselines), plus
+//!   `parallel_for_async` for non-blocking epoch submission.
+//! - [`coordinator`] — the L4 serving layer: overlap independent
+//!   loops from many submitters on the shared persistent pool.
 //! - [`sim`] — a discrete-event simulated 28-thread NUMA machine that
 //!   reruns the same policy math in virtual time (this reproduces the
 //!   paper's speedup figures on hardware we don't have).
@@ -23,6 +26,7 @@
 //!   figure of the paper's evaluation.
 
 pub mod apps;
+pub mod coordinator;
 pub mod graph;
 pub mod harness;
 pub mod runtime;
@@ -31,4 +35,6 @@ pub mod sim;
 pub mod sparse;
 pub mod util;
 
-pub use sched::{parallel_for, parallel_for_each, ExecMode, ForOpts, IchParams, Policy, Runtime};
+pub use sched::{
+    parallel_for, parallel_for_async, parallel_for_each, ExecMode, ForOpts, IchParams, LoopJoin, Policy, Runtime,
+};

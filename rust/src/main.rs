@@ -10,12 +10,16 @@
 //!   summary  §6.1 "insight" table (iCh rank + gap per app)
 //!   ablation iCh design-choice ablations
 //!   sweep    --app <name>: every family × Table-2 params × threads
+//!   overlap  --threads <p> --jobs <k> --n <iters>: serve k independent
+//!            loops sequentially vs overlapped (async epochs) on the
+//!            persistent pool and report both wall times
 //!   list     apps, policies, figures
 //!   version
 
 use ich::apps;
+use ich::coordinator::{Coordinator, LoopJob};
 use ich::harness;
-use ich::sched::{table2_grid, Policy, PAPER_FAMILIES};
+use ich::sched::{parallel_for, table2_grid, ExecMode, ForOpts, Policy, PAPER_FAMILIES};
 use ich::sim::{simulate_app, MachineSpec};
 use ich::util::cli::Args;
 use ich::util::table::{f2, Table};
@@ -38,12 +42,14 @@ fn main() {
         "summary" => println!("{}", harness::run_named("summary").unwrap()),
         "ablation" | "ablations" => println!("{}", harness::run_named("ablations").unwrap()),
         "sweep" => cmd_sweep(&args),
+        "overlap" => cmd_overlap(&args),
         "list" => cmd_list(),
         "version" => println!("ich 0.1.0 (paper: Booth & Lane 2020, iCh)"),
         _ => {
-            println!("usage: ich <run|figure|table|summary|ablation|sweep|list|version> [flags]");
+            println!("usage: ich <run|figure|table|summary|ablation|sweep|overlap|list|version> [flags]");
             println!("  e.g.: ich run --app bfs-scale-free --sched ich,0.33 --threads 28");
             println!("        ich run --app spmv --sched guided,1 --threads 4 --real");
+            println!("        ich overlap --threads 2 --jobs 4 --n 2000000");
             println!("        ich figure fig4");
         }
     }
@@ -119,6 +125,67 @@ fn cmd_sweep(args: &Args) {
         }
     }
     println!("# sweep: {} (simulated)\n{}", app.name(), t.render());
+}
+
+/// Serve `--jobs` independent copies of a skewed synthetic loop, once
+/// sequentially (one blocking fork-join after another) and once
+/// overlapped (all submitted as async epochs up front), and report
+/// both wall times. This is the serving-layer scenario the async
+/// submission path exists for.
+fn cmd_overlap(args: &Args) {
+    let threads = args.get_usize("threads", 2);
+    let jobs = args.get_usize("jobs", 4);
+    let n = args.get_usize("n", 2_000_000);
+    let sched = args.get_or("sched", "ich,0.33");
+    let Some(policy) = Policy::parse(sched) else {
+        eprintln!("unknown policy '{sched}'");
+        std::process::exit(2);
+    };
+    // Skewed synthetic body: iteration i costs ~1 + (i % 64)/8 units.
+    let body = |r: std::ops::Range<usize>| {
+        let mut acc = 0u64;
+        for i in r {
+            for j in 0..(1 + (i % 64) / 8) {
+                acc = acc.wrapping_add(i as u64 ^ j as u64);
+            }
+        }
+        std::hint::black_box(acc);
+    };
+
+    let opts = ForOpts { threads, pin: false, seed: 1, weights: None, mode: ExecMode::Pool };
+    // Warm the lazy global pool outside both timed regions so the
+    // sequential arm doesn't pay the one-time worker spawn.
+    parallel_for(1024, &policy, &opts, &body);
+    let t0 = std::time::Instant::now();
+    for j in 0..jobs {
+        let m = parallel_for(n, &policy, &opts.clone().with_seed(j as u64), &body);
+        assert_eq!(m.total_iters, n as u64);
+    }
+    let sequential_s = t0.elapsed().as_secs_f64();
+
+    let coord = Coordinator::new(threads);
+    let t0 = std::time::Instant::now();
+    let job_list: Vec<LoopJob> = (0..jobs)
+        .map(|j| LoopJob::new(&format!("job-{j}"), n, policy.clone(), std::sync::Arc::new(body)).with_seed(j as u64))
+        .collect();
+    let results = coord.run_overlapped(job_list);
+    let overlapped_s = t0.elapsed().as_secs_f64();
+
+    for (name, m) in &results {
+        println!(
+            "  {name}: iters={} chunks={} steals={}ok/{}fail imbalance={:.3}",
+            m.total_iters,
+            m.total_chunks,
+            m.steals_ok,
+            m.steals_failed,
+            m.imbalance()
+        );
+    }
+    println!(
+        "jobs={jobs} n={n} threads={threads} sched={}: sequential {sequential_s:.4}s vs overlapped {overlapped_s:.4}s ({:.2}x)",
+        policy.name(),
+        sequential_s / overlapped_s
+    );
 }
 
 fn cmd_list() {

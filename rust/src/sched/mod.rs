@@ -4,7 +4,11 @@
 //! Entry point: [`parallel_for`] — schedule `n` loop iterations over
 //! `p` worker threads under a [`Policy`]. Bodies receive iteration
 //! *ranges* so per-chunk dispatch overhead is amortized exactly the way
-//! an OpenMP runtime amortizes it.
+//! an OpenMP runtime amortizes it. [`parallel_for_async`] is the
+//! non-blocking variant for serving layers: it enqueues the loop as an
+//! epoch on the persistent pool and returns a [`LoopJoin`] handle, so
+//! independent loops from different submitters overlap instead of
+//! serializing.
 //!
 //! Policies (paper Table 2 plus related-work extensions):
 //! `static`, `dynamic,c`, `guided,c`, `taskloop`, `factoring`,
@@ -15,23 +19,29 @@
 //!
 //! Engines do not spawn threads themselves: each one hands its worker
 //! function to an [`Executor`] (`exec.run(p, f)` runs `f(tid)` exactly
-//! once per `tid in 0..p` and joins). Two executors exist:
+//! once per `tid in 0..p` and joins; `exec.run_async` does the same
+//! without blocking the submitter). Executors:
 //!
 //! - [`runtime::Runtime`] — the default: a **persistent, core-pinned
 //!   worker pool**, spawned once per process and reused across
-//!   `parallel_for` calls via an epoch-based fork-join barrier
-//!   (spin→yield→park). One epoch = publish the type-erased loop body
-//!   to `p − 1` parked workers, run tid 0 on the caller, then join on
-//!   a pending-counter. Nested or concurrent `parallel_for` calls,
-//!   and calls asking for more threads than the pool holds, fall back
-//!   to scoped spawning — no deadlock, only degraded amortization.
-//!   See `sched::runtime` for the full protocol and memory-ordering
-//!   argument.
+//!   `parallel_for` calls. Epochs from any number of submitters queue
+//!   FIFO on the pool (blocking callers participate as tid 0; async
+//!   callers get a join handle), so concurrent and back-to-back loops
+//!   share the amortized workers instead of degrading to per-call
+//!   spawning. Nested `parallel_for` calls from inside a body, and
+//!   calls asking for more threads than the pool holds, still fall
+//!   back to scoped spawning — no deadlock, only degraded
+//!   amortization. See `sched::runtime` for the epoch protocol and
+//!   the heap-epoch safety argument.
 //! - [`SpawnExec`] — per-call scoped spawn + join (the seed behavior),
 //!   selectable with [`ExecMode::Spawn`] for measurement baselines.
+//! - Single-thread runs (`threads == 1`) execute inline on the caller
+//!   with no spawning and **no affinity changes**.
 //!
-//! [`ForOpts::mode`] picks between them; the fork-join overhead gap is
-//! measured by `benches/bench_overhead.rs` (`BENCH_forkjoin.json`).
+//! [`ForOpts::mode`] picks the executor; the fork-join overhead gap is
+//! measured by `benches/bench_overhead.rs` (`BENCH_forkjoin.json`),
+//! and blocking vs async submission by the same bench's
+//! `BENCH_async.json`.
 
 pub mod binlpt;
 pub mod central;
@@ -44,10 +54,11 @@ pub mod runtime;
 pub mod ws;
 
 pub use metrics::{MetricsSink, RunMetrics};
-pub use runtime::{Executor, Runtime, SpawnExec};
+pub use runtime::{Executor, LoopHandle, Runtime, SpawnExec};
 pub use ws::{IchParams, StealMerge};
 
 use std::ops::Range;
+use std::sync::Arc;
 
 /// A self-scheduling policy with its tuning parameters (paper Table 2).
 #[derive(Clone, Debug)]
@@ -162,8 +173,9 @@ impl Policy {
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
 pub enum ExecMode {
     /// The shared persistent worker pool ([`Runtime::global`]).
-    /// Falls back to scoped spawning when the pool is busy (nested or
-    /// concurrent call) or smaller than `threads − 1`.
+    /// Epochs queue FIFO when the pool is busy; runs wider than the
+    /// pool, and nested calls from pool workers, fall back to scoped
+    /// spawning.
     #[default]
     Pool,
     /// Spawn and join fresh OS threads for this call (the seed
@@ -178,13 +190,14 @@ pub struct ForOpts<'a> {
     pub threads: usize,
     /// Pin threads to cores when the host has enough of them
     /// (OMP_PROC_BIND=true analog). Pool workers pin once at spawn,
-    /// so this flag only governs [`ExecMode::Spawn`] runs (the pool's
-    /// internal fallbacks never re-pin the calling thread).
+    /// so this flag only governs [`ExecMode::Spawn`] runs with
+    /// `threads > 1` (the pool's internal fallbacks, async teams, and
+    /// single-thread runs never re-pin the calling thread).
     pub pin: bool,
     /// RNG seed for steal-victim selection (reproducibility).
     pub seed: u64,
     /// Per-iteration workload estimates — consumed only by
-    /// workload-aware policies (BinLPT, HSS).
+    /// workload-aware policies (BinLPT, HSS). Must have length `n`.
     pub weights: Option<&'a [f64]>,
     /// Worker-thread provider (persistent pool by default).
     pub mode: ExecMode,
@@ -217,34 +230,43 @@ impl<'a> ForOpts<'a> {
     }
 }
 
-/// Schedule `n` iterations over the configured threads; `body`
-/// receives disjoint iteration ranges covering `0..n` exactly once.
-/// Returns timing + scheduling metrics.
-pub fn parallel_for(n: usize, policy: &Policy, opts: &ForOpts, body: &(dyn Fn(Range<usize>) + Sync)) -> RunMetrics {
-    let p = opts.threads.max(1);
-    let sink = MetricsSink::new(p);
-    let spawn = SpawnExec::new(opts.pin);
-    let pool;
-    let exec: &dyn Executor = match opts.mode {
-        // p == 1 runs inline either way; don't spawn the global pool
-        // for callers that never fan out.
-        ExecMode::Spawn => &spawn,
-        ExecMode::Pool if p == 1 => &spawn,
-        ExecMode::Pool => {
-            pool = Runtime::global().executor();
-            &pool
+/// Degenerate executor for single-thread runs: the body executes
+/// inline on the caller with no spawning and — unlike
+/// `scoped_run(1, true, …)` — no affinity changes. (A default-opts
+/// `threads == 1` run used to route through the scoped spawner and
+/// permanently pin the *calling* thread to core 0.)
+struct InlineExec;
+
+impl Executor for InlineExec {
+    fn run(&self, p: usize, f: &(dyn Fn(usize) + Sync)) {
+        for tid in 0..p {
+            f(tid);
         }
-    };
-    let start = std::time::Instant::now();
+    }
+}
+
+/// Dispatch one parallel region to its engine. Shared by the blocking
+/// and async entry points so the two cannot drift.
+#[allow(clippy::too_many_arguments)]
+fn run_policy(
+    n: usize,
+    policy: &Policy,
+    p: usize,
+    weights: Option<&[f64]>,
+    seed: u64,
+    exec: &dyn Executor,
+    body: &(dyn Fn(Range<usize>) + Sync),
+    sink: &MetricsSink,
+) {
     match policy {
-        Policy::Static => central::run_static(n, p, exec, body, &sink),
-        Policy::Dynamic { chunk } => central::run_dynamic(n, p, exec, *chunk, body, &sink),
-        Policy::Guided { chunk } => central::run_guided(n, p, exec, *chunk, body, &sink),
-        Policy::Taskloop { num_tasks } => central::run_taskloop(n, p, exec, *num_tasks, body, &sink),
-        Policy::Factoring { alpha } => central::run_factoring(n, p, exec, *alpha, body, &sink),
+        Policy::Static => central::run_static(n, p, exec, body, sink),
+        Policy::Dynamic { chunk } => central::run_dynamic(n, p, exec, *chunk, body, sink),
+        Policy::Guided { chunk } => central::run_guided(n, p, exec, *chunk, body, sink),
+        Policy::Taskloop { num_tasks } => central::run_taskloop(n, p, exec, *num_tasks, body, sink),
+        Policy::Factoring { alpha } => central::run_factoring(n, p, exec, *alpha, body, sink),
         Policy::Binlpt { max_chunks } => {
             let uniform;
-            let w = match opts.weights {
+            let w = match weights {
                 Some(w) => {
                     assert_eq!(w.len(), n, "weights length must equal n");
                     w
@@ -255,14 +277,109 @@ pub fn parallel_for(n: usize, policy: &Policy, opts: &ForOpts, body: &(dyn Fn(Ra
                     &uniform
                 }
             };
-            binlpt::run_binlpt(w, p, exec, *max_chunks, body, &sink)
+            binlpt::run_binlpt(w, p, exec, *max_chunks, body, sink)
         }
-        Policy::Stealing { chunk } => ws::run_stealing(n, p, exec, *chunk, opts.seed, body, &sink),
-        Policy::Ich(prm) => ws::run_ich(n, p, exec, *prm, opts.seed, body, &sink),
-        Policy::Awf => related::run_awf(n, p, exec, body, &sink),
-        Policy::Hss => related::run_hss(n, p, exec, opts.weights, body, &sink),
+        Policy::Stealing { chunk } => ws::run_stealing(n, p, exec, *chunk, seed, body, sink),
+        Policy::Ich(prm) => ws::run_ich(n, p, exec, *prm, seed, body, sink),
+        Policy::Awf => related::run_awf(n, p, exec, body, sink),
+        Policy::Hss => related::run_hss(n, p, exec, weights, body, sink),
     }
+}
+
+/// Schedule `n` iterations over the configured threads; `body`
+/// receives disjoint iteration ranges covering `0..n` exactly once.
+/// Returns timing + scheduling metrics.
+pub fn parallel_for(n: usize, policy: &Policy, opts: &ForOpts, body: &(dyn Fn(Range<usize>) + Sync)) -> RunMetrics {
+    let p = opts.threads.max(1);
+    let sink = MetricsSink::new(p);
+    let spawn = SpawnExec::new(opts.pin);
+    let pool;
+    let exec: &dyn Executor = match opts.mode {
+        // p == 1 runs inline in every mode; don't spawn the global
+        // pool — or touch the caller's affinity — for callers that
+        // never fan out.
+        _ if p == 1 => &InlineExec,
+        ExecMode::Spawn => &spawn,
+        ExecMode::Pool => {
+            pool = Runtime::global().executor();
+            &pool
+        }
+    };
+    let start = std::time::Instant::now();
+    run_policy(n, policy, p, opts.weights, opts.seed, exec, body, &sink);
     sink.collect(start.elapsed())
+}
+
+/// Join handle of an asynchronously submitted `parallel_for`.
+///
+/// Returned by [`parallel_for_async`]; [`LoopJoin::join`] blocks until
+/// the loop completes, rethrows worker panics on the joining thread,
+/// and returns the run's [`RunMetrics`]. The metrics' `elapsed_s`
+/// spans submission to join-observed completion, so it includes any
+/// time the epoch spent queued behind other epochs.
+pub struct LoopJoin {
+    handle: LoopHandle,
+    sink: Arc<MetricsSink>,
+    start: std::time::Instant,
+}
+
+impl LoopJoin {
+    /// Has the loop finished? (Non-blocking.)
+    pub fn is_finished(&self) -> bool {
+        self.handle.is_finished()
+    }
+
+    /// Wait for the loop, rethrow any worker panic, return its metrics.
+    pub fn join(self) -> RunMetrics {
+        self.handle.join();
+        self.sink.collect(self.start.elapsed())
+    }
+}
+
+/// Asynchronous [`parallel_for`] on the global pool: enqueue the loop
+/// as an epoch and return immediately with a [`LoopJoin`]. All `p`
+/// scheduler tids run on pool workers (the submitter does not
+/// participate), so independent loops submitted from different
+/// threads — or several loops from one thread — execute overlapped.
+///
+/// The body must be shareable and `'static` (`Arc`) because the
+/// submitter's frame no longer bounds the epoch's lifetime; `weights`
+/// are copied out of `opts` for the same reason.
+pub fn parallel_for_async(
+    n: usize,
+    policy: &Policy,
+    opts: &ForOpts,
+    body: Arc<dyn Fn(Range<usize>) + Send + Sync>,
+) -> LoopJoin {
+    parallel_for_async_on(Runtime::global(), n, policy, opts, body)
+}
+
+/// [`parallel_for_async`] against an explicit pool — embedders and
+/// tests can target private [`Runtime`]s. `opts.mode == Spawn` runs
+/// the whole loop on a detached per-call thread team instead.
+pub fn parallel_for_async_on(
+    rt: &Runtime,
+    n: usize,
+    policy: &Policy,
+    opts: &ForOpts,
+    body: Arc<dyn Fn(Range<usize>) + Send + Sync>,
+) -> LoopJoin {
+    let p = opts.threads.max(1);
+    let sink = Arc::new(MetricsSink::new(p));
+    let policy = policy.clone();
+    let weights: Option<Vec<f64>> = opts.weights.map(|w| w.to_vec());
+    let seed = opts.seed;
+    let sink2 = Arc::clone(&sink);
+    let start = std::time::Instant::now();
+    let driver: Box<dyn FnOnce(&dyn Executor) + Send> = Box::new(move |exec: &dyn Executor| {
+        let b = |r: Range<usize>| body(r);
+        run_policy(n, &policy, p, weights.as_deref(), seed, exec, &b, &sink2);
+    });
+    let handle = match opts.mode {
+        ExecMode::Pool => rt.submit_driver(p, driver),
+        ExecMode::Spawn => runtime::detach_driver(driver),
+    };
+    LoopJoin { handle, sink, start }
 }
 
 /// Convenience: per-iteration body.
@@ -333,10 +450,38 @@ mod tests {
     }
 
     #[test]
+    fn every_policy_covers_exactly_once_async() {
+        let n = 400;
+        for policy in Policy::representatives() {
+            let hits: Arc<Vec<AtomicU64>> = Arc::new((0..n).map(|_| AtomicU64::new(0)).collect());
+            let w: Vec<f64> = (0..n).map(|i| 1.0 + (i % 7) as f64).collect();
+            let opts = ForOpts { threads: 3, pin: false, seed: 2, weights: Some(&w), ..Default::default() };
+            let h2 = Arc::clone(&hits);
+            let join = parallel_for_async(n, &policy, &opts, Arc::new(move |r: std::ops::Range<usize>| {
+                for i in r {
+                    h2[i].fetch_add(1, SeqCst);
+                }
+            }));
+            let m = join.join();
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(SeqCst), 1, "policy {} iter {i}", policy.name());
+            }
+            assert_eq!(m.total_iters, n as u64, "policy {}", policy.name());
+        }
+    }
+
+    #[test]
     fn parse_round_trips() {
-        for s in ["static", "dynamic,2", "guided,3", "taskloop,0", "binlpt,384", "stealing,64", "ich,0.25", "awf", "hss"] {
-            let p = Policy::parse(s).unwrap();
-            assert_eq!(p.name(), s, "parse/name mismatch for {s}");
+        // Property over every representative — including `factoring`
+        // and the defaults: parse(name()) must reproduce name().
+        for p in Policy::representatives() {
+            let s = p.name();
+            let q = Policy::parse(&s).unwrap_or_else(|| panic!("parse failed for {s}"));
+            assert_eq!(q.name(), s, "parse/name round trip for {s}");
+        }
+        // Non-default parameters and junk.
+        for s in ["dynamic,2", "guided,3", "taskloop,16", "binlpt,384", "stealing,64", "ich,0.25", "factoring,1.5"] {
+            assert_eq!(Policy::parse(s).unwrap().name(), s, "parse/name mismatch for {s}");
         }
         assert!(Policy::parse("nonsense").is_none());
     }
@@ -345,6 +490,7 @@ mod tests {
     fn parse_defaults() {
         assert_eq!(Policy::parse("dynamic").unwrap().name(), "dynamic,1");
         assert_eq!(Policy::parse("ich").unwrap().name(), "ich,0.33");
+        assert_eq!(Policy::parse("factoring").unwrap().name(), "factoring,2");
     }
 
     #[test]
@@ -365,6 +511,42 @@ mod tests {
             acc.fetch_add(i as u64, SeqCst);
         });
         assert_eq!(acc.load(SeqCst), 99 * 100 / 2);
+    }
+
+    #[test]
+    fn parallel_for_async_sums() {
+        let acc = Arc::new(AtomicU64::new(0));
+        let a2 = Arc::clone(&acc);
+        let opts = ForOpts { threads: 3, pin: false, ..Default::default() };
+        let join = parallel_for_async(
+            100,
+            &Policy::Ich(IchParams::default()),
+            &opts,
+            Arc::new(move |r: std::ops::Range<usize>| {
+                for i in r {
+                    a2.fetch_add(i as u64, SeqCst);
+                }
+            }),
+        );
+        let m = join.join();
+        assert_eq!(acc.load(SeqCst), 99 * 100 / 2);
+        assert_eq!(m.total_iters, 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "weights length must equal n")]
+    fn hss_wrong_weights_length_panics() {
+        let w = [1.0f64; 5];
+        let opts = ForOpts { threads: 2, pin: false, weights: Some(&w[..]), ..Default::default() };
+        parallel_for(100, &Policy::Hss, &opts, &|_r| {});
+    }
+
+    #[test]
+    #[should_panic(expected = "weights length must equal n")]
+    fn binlpt_wrong_weights_length_panics() {
+        let w = [1.0f64; 5];
+        let opts = ForOpts { threads: 2, pin: false, weights: Some(&w[..]), ..Default::default() };
+        parallel_for(100, &Policy::Binlpt { max_chunks: 8 }, &opts, &|_r| {});
     }
 
     #[test]

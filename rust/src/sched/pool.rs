@@ -20,10 +20,15 @@ mod ffi {
     /// glibc/musl value of `_SC_NPROCESSORS_ONLN` on Linux.
     pub const SC_NPROCESSORS_ONLN: i32 = 84;
 
+    /// C `long`: pointer-width on every Linux ABI (LP64 / ILP32), so
+    /// a fixed `i64` would be ABI-wrong on 32-bit targets.
+    pub type CLong = isize;
+
     extern "C" {
-        pub fn sysconf(name: i32) -> i64;
+        pub fn sysconf(name: i32) -> CLong;
         /// `cpu_set_t` is a 1024-bit mask; we pass it as `[u64; 16]`.
         pub fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const u64) -> i32;
+        pub fn sched_getaffinity(pid: i32, cpusetsize: usize, mask: *mut u64) -> i32;
     }
 }
 
@@ -67,6 +72,23 @@ pub fn pin_to_cpu(cpu: usize) {
 /// Pin the calling thread to `cpu` (no-op off Linux).
 #[cfg(not(target_os = "linux"))]
 pub fn pin_to_cpu(_cpu: usize) {}
+
+/// The calling thread's CPU affinity mask (1024-bit, as 16 × u64) —
+/// lets tests assert that single-thread and pooled runs leave the
+/// caller's placement untouched. `None` off Linux or on error.
+#[cfg(target_os = "linux")]
+pub fn current_affinity() -> Option<[u64; 16]> {
+    let mut mask = [0u64; 16];
+    // SAFETY: a properly sized, writable mask for self (pid 0).
+    let r = unsafe { ffi::sched_getaffinity(0, std::mem::size_of_val(&mask), mask.as_mut_ptr()) };
+    if r == 0 { Some(mask) } else { None }
+}
+
+/// The calling thread's CPU affinity mask (`None` off Linux).
+#[cfg(not(target_os = "linux"))]
+pub fn current_affinity() -> Option<[u64; 16]> {
+    None
+}
 
 /// Run `f(tid)` on `p` freshly spawned scoped threads and wait for all
 /// of them. Threads are pinned round-robin when the host has enough
@@ -139,6 +161,22 @@ mod tests {
     fn pinning_does_not_crash() {
         scoped_run(2, true, |_tid| {
             std::hint::black_box(1 + 1);
+        });
+    }
+
+    #[test]
+    fn affinity_reads_back_after_pin() {
+        // Pin a throwaway scoped thread (not the test runner's thread)
+        // and read its mask back.
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                pin_to_cpu(0);
+                if let Some(mask) = current_affinity() {
+                    assert_eq!(mask[0] & 1, 1, "pinned thread must include core 0");
+                    let ones: u32 = mask.iter().map(|w| w.count_ones()).sum();
+                    assert_eq!(ones, 1, "pin_to_cpu leaves exactly one allowed core");
+                }
+            });
         });
     }
 }

@@ -75,7 +75,13 @@ pub fn run_hss(
     }
     let blocks: Vec<(usize, usize)> = match history {
         None => policy::static_blocks(n, p),
-        Some(h) => weighted_blocks(h, p),
+        Some(h) => {
+            // `weighted_blocks` partitions 0..h.len(): a wrong-length
+            // history would silently schedule the wrong iteration set
+            // instead of 0..n. Validate like the BinLPT arm does.
+            assert_eq!(h.len(), n, "weights length must equal n");
+            weighted_blocks(h, p)
+        }
     };
     exec.run(p, &|tid| {
         if let Some(&(a, b)) = blocks.get(tid) {
@@ -149,6 +155,16 @@ mod tests {
     fn hss_covers_with_history() {
         let h: Vec<f64> = (0..100).map(|i| 1.0 + i as f64).collect();
         check(100, 4, |b, s| run_hss(100, 4, &SPAWN, Some(&h), b, s));
+    }
+
+    #[test]
+    #[should_panic(expected = "weights length must equal n")]
+    fn hss_rejects_wrong_length_history() {
+        // A 50-element history for a 100-iteration loop used to run
+        // iterations 0..50 (each once) and drop 50..100 silently.
+        let h = vec![1.0f64; 50];
+        let sink = MetricsSink::new(2);
+        run_hss(100, 2, &SPAWN, Some(&h), &|_r| {}, &sink);
     }
 
     #[test]

@@ -1,5 +1,6 @@
 //! Persistent, core-pinned worker-pool runtime — the [`Executor`]
-//! layer under `parallel_for`.
+//! layer under `parallel_for`, with blocking **and asynchronous**
+//! epoch submission.
 //!
 //! # Why
 //!
@@ -8,42 +9,95 @@
 //! `parallel_for` call. libgomp amortizes that away with a persistent
 //! team; so do we: workers are spawned once (lazily for the global
 //! pool), pinned round-robin to cores, and reused across invocations
-//! via an epoch-based fork-join barrier.
+//! via an epoch-based fork-join protocol.
+//!
+//! The first pool design admitted exactly one fork-join at a time
+//! (a `try_lock` run lock over a one-deep per-worker job cell), so a
+//! second submitter silently lost all amortization and fell back to
+//! per-call spawning. This version replaces the job cells with a
+//! small MPSC **epoch queue** per pool: any number of submitters can
+//! have epochs in flight, epochs are dispatched in FIFO order, and a
+//! submitter can enqueue an epoch *without joining it* —
+//! [`Runtime::submit`] returns a [`LoopHandle`] that is joined later,
+//! letting independent loops from a serving layer overlap on one pool.
 //!
 //! # Epoch protocol
 //!
-//! Each worker owns a [`WorkerShared`] slot with an epoch counter
-//! `seq` and a one-deep job cell. One fork-join ("epoch") proceeds:
+//! One fork-join ("epoch") is a heap-allocated [`Epoch`]: a claim
+//! counter, a type-erased loop body, a `pending` completion counter,
+//! and a panic slot. An epoch with `claims` worker assignments
+//! proceeds:
 //!
-//! 1. **Fork.** The submitting thread takes the pool's run lock
-//!    (`try_lock` — if it is already held, this is a nested or
-//!    concurrent `parallel_for` and we fall back to scoped spawning,
-//!    which cannot deadlock). It writes a type-erased pointer to the
-//!    loop body into the job cell of workers `0..p-1`, bumps each
-//!    worker's `seq` with `Release`, and unparks it.
-//! 2. **Run.** A worker wakes from its spin→yield→park idle loop when
-//!    an `Acquire` load of `seq` observes the bump, takes the job, and
-//!    runs it as thread id `i + 1` (the caller runs tid 0 inline).
-//!    Panics are caught so a poisoned body cannot kill a pool thread.
-//! 3. **Join.** Each worker decrements the epoch's `pending` counter
-//!    with `Release` (cloning the waiter handle *before* the decrement
-//!    — after it, the epoch struct on the submitter's stack must not
-//!    be touched) and the last one unparks the submitter, which has
-//!    been spin-then-parking on `pending == 0` with `Acquire`. Worker
-//!    panics are rethrown on the submitting thread after the join, so
-//!    `parallel_for`'s failure-injection semantics are unchanged.
+//! 1. **Fork.** The submitter pushes an `Arc<Epoch>` onto the pool's
+//!    FIFO queue (one short mutex hold) and unparks the workers. A
+//!    *blocking* run ([`Runtime::run`]) then executes tid 0 inline and
+//!    joins; an *async* submission ([`Runtime::submit`]) returns a
+//!    [`LoopHandle`] immediately.
+//! 2. **Claim.** An idle worker (spin→yield→park loop) locks the
+//!    queue, takes the next unclaimed assignment of the **front**
+//!    epoch, and pops the epoch once its last assignment is handed
+//!    out. Claims of one epoch can be executing while a later epoch's
+//!    claims are being handed to other workers — that is the overlap.
+//! 3. **Run.** The worker executes `body(tid)` under `catch_unwind`,
+//!    so a poisoned body cannot kill a pool thread; the first panic of
+//!    an epoch is stashed in the epoch's panic slot.
+//! 4. **Join.** The worker decrements `pending` (`AcqRel`); the one
+//!    that hits zero unparks the registered waiter. The joiner
+//!    (blocking submitter or `LoopHandle::join`) spins briefly, then
+//!    registers itself and parks until `pending == 0`, and finally
+//!    rethrows the stashed panic (worker panics thus surface on the
+//!    joining thread, preserving `parallel_for`'s failure-injection
+//!    semantics).
 //!
-//! The `Acquire`/`Release` pairs on `seq` and `pending`, plus the run
-//! lock hand-off between epochs, are what make the unsynchronized job
-//! cell and the lifetime-erased body pointer sound: a worker reads the
-//! cell only after observing the bump that follows the write, and the
-//! submitter's frame (body + epoch state) outlives every worker access
-//! because it does not return until `pending` hits zero.
+//! # Safety argument (heap epochs)
+//!
+//! All cross-thread epoch state — claim counter, `pending`, waiter,
+//! panic slot — lives in the `Arc<Epoch>`, so its lifetime is
+//! reference-counted and *no* ordering argument is needed for it: the
+//! old stack-epoch rule "clone the waiter before the decrement, never
+//! touch the epoch after" is gone. Two invariants remain:
+//!
+//! - **Publication.** The epoch's fields are written before the push
+//!   and read after a claim; both sides hold the queue mutex, whose
+//!   acquire/release ordering makes the writes visible. No field
+//!   other than `next_claim` (queue-lock-guarded), `pending`, and the
+//!   two mutex-protected slots is ever written after the push.
+//! - **Borrowed bodies.** A blocking run's body is a reference into
+//!   the submitter's frame, type-erased into a raw pointer
+//!   ([`Task::Borrowed`]). The submitter does not return before it
+//!   observes `pending == 0` with `Acquire`; every worker's last
+//!   access to the body pointer happens before its `Release`/`AcqRel`
+//!   decrement of `pending`. Hence every dereference
+//!   happens-before the frame is torn down. Async bodies
+//!   ([`Task::Owned`]) are owned by the epoch itself and need no such
+//!   argument — that ownership move is exactly why the submitter's
+//!   frame no longer bounds an async epoch's lifetime.
+//!
+//! # Deadlock discipline
+//!
+//! Pool workers never block on the queue: a nested `parallel_for`
+//! from inside a body (detected via a thread-local pool id) falls
+//! back to scoped spawning, and [`Runtime::submit_driver`]'s driver
+//! claim *helps* — it executes its own engine's remaining worker
+//! shares instead of parking — so a queue-front epoch always
+//! completes with the workers it already holds. The *submitting*
+//! thread of a blocking run is mid-epoch too while it executes tid 0:
+//! a nested submission from there must not queue behind the epoch its
+//! caller is part of (with work-stealing engines the outer claims
+//! spin until tid 0's chunk retires — a circular wait), so each
+//! thread keeps a stack of pools it has blocking epochs in flight on
+//! and nested same-pool submissions fall back to scoped spawning /
+//! detached teams, exactly like the old held-run-lock detection.
+//! With those two rules, every thread waiting on an epoch is outside
+//! the pool, and FIFO service of the front epoch guarantees global
+//! progress.
 
-use std::cell::UnsafeCell;
+use std::any::Any;
+use std::cell::{Cell, RefCell, UnsafeCell};
+use std::collections::VecDeque;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-use std::sync::atomic::Ordering::{Acquire, Release};
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize};
+use std::sync::atomic::Ordering::{AcqRel, Acquire, Relaxed, Release};
+use std::sync::atomic::{AtomicBool, AtomicU8, AtomicUsize};
 use std::sync::{Arc, Mutex, OnceLock};
 use std::thread::{self, Thread};
 
@@ -55,10 +109,23 @@ use super::pool::{num_cpus, pin_to_cpu, scoped_run};
 /// calls have finished (or a panic has been rethrown) on return.
 pub trait Executor: Sync {
     fn run(&self, p: usize, f: &(dyn Fn(usize) + Sync));
+
+    /// Asynchronous epoch: arrange for `body(tid)` to run exactly once
+    /// for every `tid in 0..p` and return a [`LoopHandle`] without
+    /// waiting for completion. The default implementation degrades to
+    /// a blocking [`Executor::run`] that is already finished when the
+    /// handle is returned — semantically correct (join is a no-op,
+    /// panics are deferred to it), just not overlapped. Pool and
+    /// spawn executors override it with genuinely concurrent paths.
+    fn run_async(&self, p: usize, body: Arc<dyn Fn(usize) + Send + Sync>) -> LoopHandle {
+        let f = |tid: usize| body(tid);
+        let panic = catch_unwind(AssertUnwindSafe(|| self.run(p, &f))).err();
+        LoopHandle::completed(panic)
+    }
 }
 
 /// Per-call scoped spawning (the seed strategy, and the pool's
-/// fallback for nested / concurrent / oversized runs).
+/// fallback for nested / oversized runs).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct SpawnExec {
     pub pin: bool,
@@ -74,6 +141,15 @@ impl Executor for SpawnExec {
     fn run(&self, p: usize, f: &(dyn Fn(usize) + Sync)) {
         scoped_run(p, self.pin, f);
     }
+
+    fn run_async(&self, p: usize, body: Arc<dyn Fn(usize) + Send + Sync>) -> LoopHandle {
+        // A detached coordinator thread pays the per-call spawn cost
+        // (this is the measurement baseline) but never blocks the
+        // submitter. It never pins: pinning is for the pool's
+        // spawn-time placement; a transient team must not re-pin
+        // whatever cores the pool already owns.
+        detach_team(p, body)
+    }
 }
 
 /// Executor view over a [`Runtime`].
@@ -86,12 +162,16 @@ impl Executor for PoolExec<'_> {
     fn run(&self, p: usize, f: &(dyn Fn(usize) + Sync)) {
         self.rt.run(p, f);
     }
+
+    fn run_async(&self, p: usize, body: Arc<dyn Fn(usize) + Send + Sync>) -> LoopHandle {
+        self.rt.submit_arc(p, body)
+    }
 }
 
 /// Type-erased pointer to a `&(dyn Fn(usize) + Sync)` loop body.
 type TaskPtr = *const (dyn Fn(usize) + Sync);
 
-/// Erase the body's lifetime so it can sit in a worker's job cell.
+/// Erase the body's lifetime so it can sit in a queued epoch.
 ///
 /// SAFETY contract (upheld by [`Runtime::run`]): the pointee must stay
 /// alive until the epoch's `pending` counter reaches zero, and no
@@ -102,51 +182,225 @@ fn erase<'a>(f: &'a (dyn Fn(usize) + Sync + 'a)) -> TaskPtr {
     unsafe { std::mem::transmute::<&'a (dyn Fn(usize) + Sync + 'a), TaskPtr>(f) }
 }
 
-/// Join-side state of one fork-join epoch, living on the submitter's
-/// stack for the duration of the run.
+/// An epoch's loop body: borrowed from a blocking submitter's frame,
+/// or owned by the epoch itself (async submission).
+enum Task {
+    /// Blocking run. The submitter's frame outlives the epoch (module
+    /// docs, "Borrowed bodies").
+    Borrowed(TaskPtr),
+    /// Async submission: the epoch owns the body, so the submitter's
+    /// frame is out of the picture entirely.
+    Owned(Arc<dyn Fn(usize) + Send + Sync>),
+}
+
+/// One fork-join epoch, heap-allocated and shared between the
+/// submitter (join side) and the pool workers (claim side).
 struct Epoch {
-    /// Workers still running this epoch.
+    /// Worker assignments this epoch hands out.
+    claims: usize,
+    /// Assignments already handed to workers. Only read/written under
+    /// the pool's queue lock (hence `Relaxed` suffices); an atomic
+    /// only so `Epoch` stays `Sync` without interior-mutability
+    /// gymnastics for this one lock-guarded counter.
+    next_claim: AtomicUsize,
+    /// tid of assignment 0: blocking runs reserve tid 0 for the
+    /// submitter (`tid0 == 1`); async epochs start at 0.
+    tid0: usize,
+    task: Task,
+    /// Assignments not yet finished. The epoch is complete — and a
+    /// borrowed body may be torn down — once this hits zero.
     pending: AtomicUsize,
-    /// The submitting thread, to unpark at the join.
-    waiter: Thread,
-    /// First worker panic, rethrown by the submitter after the join.
-    panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+    /// Thread to unpark when `pending` hits zero (registered by the
+    /// joiner; `None` while nobody is parked on the epoch).
+    waiter: Mutex<Option<Thread>>,
+    /// First body panic, rethrown on the joining thread.
+    panic: Mutex<Option<Box<dyn Any + Send>>>,
 }
 
-/// One dispatched assignment: run `task(tid)`, then check in.
-struct Job {
-    tid: usize,
-    task: TaskPtr,
-    epoch: *const Epoch,
+// SAFETY: the only non-Send/Sync field is the `Task::Borrowed` raw
+// pointer, whose pointee is kept alive and synchronized by the
+// blocking submitter as described in the module docs; `Task::Owned`
+// bodies are `Send + Sync` by bound.
+unsafe impl Send for Epoch {}
+unsafe impl Sync for Epoch {}
+
+impl Epoch {
+    fn new(claims: usize, tid0: usize, task: Task) -> Arc<Epoch> {
+        Arc::new(Epoch {
+            claims,
+            next_claim: AtomicUsize::new(0),
+            tid0,
+            task,
+            pending: AtomicUsize::new(claims),
+            waiter: Mutex::new(None),
+            panic: Mutex::new(None),
+        })
+    }
+
+    /// Record one finished assignment; the last one wakes the joiner.
+    fn finish_one(&self) {
+        if self.pending.fetch_sub(1, AcqRel) == 1 {
+            if let Some(t) = self.waiter.lock().unwrap().take() {
+                t.unpark();
+            }
+        }
+    }
+
+    fn stash_panic(&self, payload: Box<dyn Any + Send>) {
+        // First panic wins (matching std::thread::scope); later ones
+        // in the same epoch are dropped.
+        let mut slot = self.panic.lock().unwrap();
+        if slot.is_none() {
+            *slot = Some(payload);
+        }
+    }
 }
 
-// SAFETY: the raw pointers are valid for the epoch's lifetime (see
-// module docs); the job moves to exactly one worker.
-unsafe impl Send for Job {}
+/// Execute one claimed assignment of an epoch.
+fn execute(epoch: &Epoch, claim: usize) {
+    let tid = epoch.tid0 + claim;
+    let result = catch_unwind(AssertUnwindSafe(|| match &epoch.task {
+        // SAFETY: the blocking submitter keeps the pointee alive until
+        // it observes `pending == 0`, which `finish_one` below cannot
+        // publish before this call returns.
+        Task::Borrowed(ptr) => unsafe { (**ptr)(tid) },
+        Task::Owned(f) => f(tid),
+    }));
+    if let Err(payload) = result {
+        epoch.stash_panic(payload);
+    }
+    epoch.finish_one();
+}
 
-/// A worker's mailbox. `job` is written by the submitter only while
-/// the worker is provably idle (previous epoch joined + run lock
-/// held) and read by the worker only after `seq` observes the bump
-/// published after the write.
-struct WorkerShared {
-    seq: AtomicU64,
+/// Block until `pending == 0`: spin, then yield, then register-and-park.
+fn join_wait(epoch: &Epoch) {
+    let mut step = 0u32;
+    loop {
+        if epoch.pending.load(Acquire) == 0 {
+            return;
+        }
+        if step < WAIT_SPINS + WAIT_YIELDS {
+            wait_step(step);
+            step += 1;
+        } else {
+            *epoch.waiter.lock().unwrap() = Some(thread::current());
+            if epoch.pending.load(Acquire) == 0 {
+                // Completed between the check and the registration;
+                // deregister (best effort — finish_one may have taken
+                // it already) and go.
+                let _ = epoch.waiter.lock().unwrap().take();
+                return;
+            }
+            thread::park();
+        }
+    }
+}
+
+/// Join handle for an asynchronously submitted epoch.
+///
+/// Dropping the handle without joining is allowed: the epoch owns its
+/// body and completes (or is aborted by pool shutdown) on its own.
+/// Worker panics are then dropped with it, like a detached thread's.
+pub struct LoopHandle {
+    inner: HandleInner,
+}
+
+enum HandleInner {
+    /// Finished at submission time (default executor degradation).
+    Done(Option<Box<dyn Any + Send>>),
+    /// A queued / in-flight pool epoch.
+    Epoch(Arc<Epoch>),
+    /// A detached per-call thread team (fallback path).
+    Thread(thread::JoinHandle<()>),
+}
+
+impl LoopHandle {
+    fn completed(panic: Option<Box<dyn Any + Send>>) -> LoopHandle {
+        LoopHandle { inner: HandleInner::Done(panic) }
+    }
+
+    fn from_epoch(epoch: Arc<Epoch>) -> LoopHandle {
+        LoopHandle { inner: HandleInner::Epoch(epoch) }
+    }
+
+    fn from_thread(join: thread::JoinHandle<()>) -> LoopHandle {
+        LoopHandle { inner: HandleInner::Thread(join) }
+    }
+
+    /// Has the epoch finished? (Non-blocking; a `true` here makes
+    /// [`LoopHandle::join`] return without waiting.)
+    pub fn is_finished(&self) -> bool {
+        match &self.inner {
+            HandleInner::Done(_) => true,
+            HandleInner::Epoch(e) => e.pending.load(Acquire) == 0,
+            HandleInner::Thread(j) => j.is_finished(),
+        }
+    }
+
+    /// Wait for the epoch to complete; rethrows the first worker panic
+    /// on this thread.
+    pub fn join(self) {
+        match self.inner {
+            HandleInner::Done(None) => {}
+            HandleInner::Done(Some(payload)) => resume_unwind(payload),
+            HandleInner::Epoch(epoch) => {
+                join_wait(&epoch);
+                if let Some(payload) = epoch.panic.lock().unwrap().take() {
+                    resume_unwind(payload);
+                }
+            }
+            HandleInner::Thread(join) => {
+                if let Err(payload) = join.join() {
+                    resume_unwind(payload);
+                }
+            }
+        }
+    }
+}
+
+/// Queue + shutdown flag shared between a pool's workers and its
+/// submitters.
+struct PoolShared {
+    queue: Mutex<VecDeque<Arc<Epoch>>>,
     shutdown: AtomicBool,
-    job: UnsafeCell<Option<Job>>,
+    /// `parked[i]` is true while worker `i` is (about to be) parked.
+    /// Published with `Release` *before* the worker's final
+    /// empty-queue re-check and read by submitters *after* their
+    /// push: the queue mutex orders the two critical sections, so
+    /// either the worker's re-check saw the new epoch, or the
+    /// submitter's read sees the flag and unparks it — no lost
+    /// wakeup. Lets `enqueue` wake only as many workers as the epoch
+    /// has claims instead of storming every parked worker.
+    parked: Vec<AtomicBool>,
 }
 
-// SAFETY: access to `job` is ordered by `seq`/`pending` as described
-// in the module docs; the atomics are Sync by themselves.
-unsafe impl Sync for WorkerShared {}
+thread_local! {
+    /// Pool id (the `Arc<PoolShared>` address) of the pool this thread
+    /// is a worker of; 0 for every other thread. Lets nested
+    /// `parallel_for` calls from inside a body detect "I *am* the
+    /// pool" and fall back to scoped spawning instead of enqueueing an
+    /// epoch this worker would then have to wait on.
+    static WORKER_OF: Cell<usize> = Cell::new(0);
+
+    /// Pool ids this thread currently has *blocking* epochs in flight
+    /// on (pushed around a blocking run's tid-0 execution). A nested
+    /// submission to such a pool must not queue behind the epoch its
+    /// own caller belongs to: work-stealing engines' claims spin until
+    /// every iteration retires — including the chunk held by the
+    /// nested, blocked caller — a circular wait (module docs,
+    /// "Deadlock discipline").
+    static MID_EPOCH_ON: RefCell<Vec<usize>> = RefCell::new(Vec::new());
+}
 
 struct Worker {
-    shared: Arc<WorkerShared>,
     /// Unpark handle of the worker thread.
     thread: Thread,
     join: Option<thread::JoinHandle<()>>,
 }
 
 /// Idle/join wait tuning: burn a short spin first (fork-join latency
-/// when the pool is hot), then be polite, then park.
+/// when the pool is hot), then be polite; callers park themselves
+/// once `step` exceeds `WAIT_SPINS + WAIT_YIELDS`.
 const WAIT_SPINS: u32 = 256;
 const WAIT_YIELDS: u32 = 64;
 
@@ -154,64 +408,78 @@ const WAIT_YIELDS: u32 = 64;
 fn wait_step(step: u32) {
     if step < WAIT_SPINS {
         std::hint::spin_loop();
-    } else if step < WAIT_SPINS + WAIT_YIELDS {
-        thread::yield_now();
     } else {
-        thread::park();
+        thread::yield_now();
     }
 }
 
-fn worker_loop(shared: Arc<WorkerShared>, cpu: Option<usize>) {
+/// Hand out the next unclaimed assignment of the front epoch, popping
+/// epochs whose assignments are exhausted. FIFO: an epoch's claims
+/// are fully handed out before the next epoch's first claim.
+fn claim_next(shared: &PoolShared) -> Option<(Arc<Epoch>, usize)> {
+    let mut q = shared.queue.lock().unwrap();
+    while let Some(front) = q.front() {
+        let c = front.next_claim.load(Relaxed);
+        if c < front.claims {
+            front.next_claim.store(c + 1, Relaxed);
+            let epoch = Arc::clone(front);
+            if c + 1 == front.claims {
+                q.pop_front();
+            }
+            return Some((epoch, c));
+        }
+        q.pop_front();
+    }
+    None
+}
+
+fn worker_loop(shared: Arc<PoolShared>, idx: usize, cpu: Option<usize>) {
     if let Some(c) = cpu {
         pin_to_cpu(c);
     }
-    let mut seen = 0u64;
+    WORKER_OF.with(|w| w.set(Arc::as_ptr(&shared) as usize));
+    let mut step = 0u32;
     loop {
-        // Wait for a new epoch (or shutdown).
-        let mut step = 0u32;
-        loop {
-            let s = shared.seq.load(Acquire);
-            if s != seen {
-                seen = s;
-                break;
-            }
-            if shared.shutdown.load(Acquire) {
-                return;
-            }
+        if let Some((epoch, claim)) = claim_next(&shared) {
+            step = 0;
+            execute(&epoch, claim);
+            continue;
+        }
+        // Drain-then-exit: shutdown is honored only once the queue is
+        // empty, so epochs enqueued before `drop` still run.
+        if shared.shutdown.load(Acquire) {
+            return;
+        }
+        if step < WAIT_SPINS + WAIT_YIELDS {
             wait_step(step);
             step = step.saturating_add(1);
-        }
-        // SAFETY: the submitter wrote the job before the Release bump
-        // of `seq` that we just Acquired.
-        let Some(job) = (unsafe { (*shared.job.get()).take() }) else { continue };
-        // SAFETY: `task` and `epoch` outlive this epoch (module docs).
-        let task = unsafe { &*job.task };
-        let result = catch_unwind(AssertUnwindSafe(|| task(job.tid)));
-        let epoch = unsafe { &*job.epoch };
-        if let Err(payload) = result {
-            // First panic wins (matching std::thread::scope); later
-            // ones in the same epoch are dropped.
-            let mut slot = epoch.panic.lock().unwrap();
-            if slot.is_none() {
-                *slot = Some(payload);
+        } else {
+            // Publish "parked" BEFORE the final re-check (see
+            // `PoolShared::parked` for the no-lost-wakeup argument).
+            shared.parked[idx].store(true, Release);
+            if let Some((epoch, claim)) = claim_next(&shared) {
+                shared.parked[idx].store(false, Release);
+                step = 0;
+                execute(&epoch, claim);
+                continue;
             }
-        }
-        // Clone the waiter handle BEFORE the decrement: the submitter
-        // may free the epoch the instant `pending` hits zero.
-        let waiter = epoch.waiter.clone();
-        if epoch.pending.fetch_sub(1, Release) == 1 {
-            waiter.unpark();
+            if shared.shutdown.load(Acquire) {
+                shared.parked[idx].store(false, Release);
+                return;
+            }
+            thread::park();
+            shared.parked[idx].store(false, Release);
         }
     }
 }
 
-/// A persistent pool of parked worker threads plus a run lock that
-/// serializes fork-joins on it. The process-wide instance behind
-/// `parallel_for` is [`Runtime::global`]; tests and embedders can
-/// build private pools of any size.
+/// A persistent pool of parked worker threads fed by a FIFO epoch
+/// queue. The process-wide instance behind `parallel_for` is
+/// [`Runtime::global`]; tests and embedders can build private pools
+/// of any size.
 pub struct Runtime {
+    shared: Arc<PoolShared>,
     workers: Vec<Worker>,
-    run_lock: Mutex<()>,
 }
 
 impl Runtime {
@@ -228,23 +496,23 @@ impl Runtime {
     pub fn with_pinning(workers: usize, pin: bool) -> Runtime {
         let ncpus = num_cpus();
         let do_pin = pin && ncpus > workers;
+        let shared = Arc::new(PoolShared {
+            queue: Mutex::new(VecDeque::new()),
+            shutdown: AtomicBool::new(false),
+            parked: (0..workers).map(|_| AtomicBool::new(false)).collect(),
+        });
         let mut ws = Vec::with_capacity(workers);
         for i in 0..workers {
-            let shared = Arc::new(WorkerShared {
-                seq: AtomicU64::new(0),
-                shutdown: AtomicBool::new(false),
-                job: UnsafeCell::new(None),
-            });
             let s2 = Arc::clone(&shared);
             let cpu = if do_pin { Some((i + 1) % ncpus) } else { None };
             let join = thread::Builder::new()
                 .name(format!("ich-worker-{i}"))
-                .spawn(move || worker_loop(s2, cpu))
+                .spawn(move || worker_loop(s2, i, cpu))
                 .expect("spawn pool worker");
             let thread = join.thread().clone();
-            ws.push(Worker { shared, thread, join: Some(join) });
+            ws.push(Worker { thread, join: Some(join) });
         }
-        Runtime { workers: ws, run_lock: Mutex::new(()) }
+        Runtime { shared, workers: ws }
     }
 
     /// The process-wide pool: `num_cpus − 1` workers (the submitter is
@@ -264,17 +532,52 @@ impl Runtime {
         PoolExec { rt: self }
     }
 
-    /// Run `f(tid)` for every `tid in 0..p` — on the pool when it is
-    /// free and big enough, otherwise on per-call scoped threads
-    /// (nested and concurrent fork-joins thus degrade gracefully
-    /// instead of deadlocking). Worker panics are rethrown here.
+    /// Is the calling thread one of this pool's workers?
+    fn on_own_worker(&self) -> bool {
+        WORKER_OF.with(|w| w.get()) == Arc::as_ptr(&self.shared) as usize
+    }
+
+    /// Does the calling thread already have a blocking epoch in flight
+    /// on this pool (i.e. is it executing some outer run's tid 0)?
+    fn mid_epoch_here(&self) -> bool {
+        let id = Arc::as_ptr(&self.shared) as usize;
+        MID_EPOCH_ON.with(|s| s.borrow().contains(&id))
+    }
+
+    /// Push an epoch and wake up to `claims` *parked* workers — awake
+    /// workers find the epoch in their claim loop on their own, and
+    /// the parked-flag handshake (see [`PoolShared::parked`]) makes
+    /// the selective wake race-free, so a small epoch on a big pool
+    /// does not storm every worker with futex wakes.
+    fn enqueue(&self, epoch: &Arc<Epoch>) {
+        self.shared.queue.lock().unwrap().push_back(Arc::clone(epoch));
+        let mut need = epoch.claims;
+        for (i, w) in self.workers.iter().enumerate() {
+            if need == 0 {
+                break;
+            }
+            // swap-claim the worker so concurrent submitters wake
+            // *distinct* workers instead of stacking tokens on one.
+            if self.shared.parked[i].swap(false, AcqRel) {
+                w.thread.unpark();
+                need -= 1;
+            }
+        }
+    }
+
+    /// Run `f(tid)` for every `tid in 0..p` and wait. The epoch is
+    /// queued on the pool (FIFO with any concurrent submitters — no
+    /// more degradation to scoped spawns on contention) while the
+    /// caller participates as tid 0. Worker panics are rethrown here.
     ///
-    /// Thread placement is a spawn-time concern for pools: fallback
-    /// runs never pin, because `scoped_run(_, true, _)` re-pins the
-    /// *calling* thread to core 0 permanently, and the caller here may
-    /// be a pool worker (nested run) or a thread that lost the race
-    /// for a pooled epoch — clobbering the spawn-time round-robin
-    /// assignment and stacking threads on the submitter's core.
+    /// Scoped-spawn fallbacks remain for runs wider than the pool,
+    /// for nested calls from inside a pool worker (which must not
+    /// wait on the queue they are supposed to drain), and for nested
+    /// calls from a thread already mid-epoch on this pool (which must
+    /// not queue behind the epoch its own caller is part of).
+    /// Fallback runs never pin: `scoped_run(_, true, _)` would re-pin the *calling*
+    /// thread — a pool worker or an arbitrary submitter — to core 0
+    /// permanently, clobbering the spawn-time round-robin placement.
     pub fn run(&self, p: usize, f: &(dyn Fn(usize) + Sync)) {
         assert!(p > 0, "need at least one worker");
         if p == 1 {
@@ -286,44 +589,27 @@ impl Runtime {
             scoped_run(p, false, f);
             return;
         }
-        // One fork-join at a time per pool. `try_lock` keeps nested
-        // parallel_for (the lock is held by our own outer call) and
-        // concurrent submitters off the pool — both fall back. A
-        // poisoned lock (a previous run rethrew a body panic while
-        // holding it) is recovered, not treated as busy: the lock
-        // guards no data and the pool workers survived the panic.
-        let _guard = match self.run_lock.try_lock() {
-            Ok(g) => g,
-            Err(std::sync::TryLockError::Poisoned(poisoned)) => poisoned.into_inner(),
-            Err(std::sync::TryLockError::WouldBlock) => {
-                scoped_run(p, false, f);
-                return;
-            }
-        };
-        let epoch = Epoch {
-            pending: AtomicUsize::new(p - 1),
-            waiter: thread::current(),
-            panic: Mutex::new(None),
-        };
-        let task = erase(f);
-        for (i, w) in self.workers[..p - 1].iter().enumerate() {
-            // SAFETY: worker `i` is idle — its previous epoch was
-            // joined before the run lock was released to us.
-            unsafe {
-                *w.shared.job.get() = Some(Job { tid: i + 1, task, epoch: &epoch });
-            }
-            w.shared.seq.fetch_add(1, Release);
-            w.thread.unpark();
+        if self.on_own_worker() || self.mid_epoch_here() {
+            // Nested parallel_for from inside a pool body, or from an
+            // outer blocking run's tid 0 on this same pool: enqueueing
+            // would wait on an epoch that cannot finish before us.
+            scoped_run(p, false, f);
+            return;
         }
-        // The caller participates as tid 0. A panic here must not
-        // unwind past `epoch` while workers still hold pointers into
-        // this frame, so catch it and rethrow after the join.
+        let id = Arc::as_ptr(&self.shared) as usize;
+        let epoch = Epoch::new(p - 1, 1, Task::Borrowed(erase(f)));
+        self.enqueue(&epoch);
+        // The caller participates as tid 0 — marked mid-epoch so a
+        // nested same-pool submission from the body falls back. A
+        // panic here must not unwind past the join while workers may
+        // still hold the borrowed body pointer, so catch it (which
+        // also keeps the push/pop balanced) and rethrow after.
+        MID_EPOCH_ON.with(|s| s.borrow_mut().push(id));
         let mine = catch_unwind(AssertUnwindSafe(|| f(0)));
-        let mut step = 0u32;
-        while epoch.pending.load(Acquire) != 0 {
-            wait_step(step);
-            step = step.saturating_add(1);
-        }
+        MID_EPOCH_ON.with(|s| {
+            s.borrow_mut().pop();
+        });
+        join_wait(&epoch);
         if let Err(payload) = mine {
             resume_unwind(payload);
         }
@@ -331,12 +617,267 @@ impl Runtime {
             resume_unwind(payload);
         }
     }
+
+    /// Asynchronously run `body(tid)` for every `tid in 0..p`: enqueue
+    /// the epoch and return a [`LoopHandle`] immediately. All `p` tids
+    /// execute on pool workers (the submitter does not participate).
+    ///
+    /// Falls back to a detached scoped team when the pool is too small
+    /// for full-width service or the submitter is itself a pool worker.
+    pub fn submit<F>(&self, p: usize, body: F) -> LoopHandle
+    where
+        F: Fn(usize) + Send + Sync + 'static,
+    {
+        self.submit_arc(p, Arc::new(body))
+    }
+
+    /// [`Runtime::submit`] with a pre-shared body.
+    pub fn submit_arc(&self, p: usize, body: Arc<dyn Fn(usize) + Send + Sync>) -> LoopHandle {
+        assert!(p > 0, "need at least one worker");
+        if p > self.workers.len() || self.on_own_worker() || self.mid_epoch_here() {
+            return detach_team(p, body);
+        }
+        let epoch = Epoch::new(p, 0, Task::Owned(body));
+        self.enqueue(&epoch);
+        LoopHandle::from_epoch(epoch)
+    }
+
+    /// Asynchronously run a whole *engine invocation* on the pool: the
+    /// driver closure receives an [`Executor`] and is expected to call
+    /// `exec.run(p, …)` at most once (every scheduling engine does
+    /// exactly one parallel region). The driver runs as engine tid 0
+    /// on a pool worker; the executor it is handed relays the engine's
+    /// worker function to `p − 1` sibling claims of the same epoch, so
+    /// *every* engine tid lands on a pool worker while the submitter
+    /// returns immediately.
+    ///
+    /// The driver claim helps (it executes engine tids whose claims
+    /// have not been picked up yet) rather than parking, so the epoch
+    /// completes even on a pool with a single worker.
+    pub fn submit_driver(&self, p: usize, driver: Box<dyn FnOnce(&dyn Executor) + Send>) -> LoopHandle {
+        assert!(p > 0, "need at least one worker");
+        if p > self.workers.len() || self.on_own_worker() || self.mid_epoch_here() {
+            return detach_driver(driver);
+        }
+        let relay = Arc::new(Relay::new());
+        let driver_cell = Mutex::new(Some(driver));
+        let r2 = Arc::clone(&relay);
+        let body = move |claim: usize| {
+            if claim == 0 {
+                let d = driver_cell.lock().unwrap().take().expect("driver claim runs once");
+                let exec = RelayExec { relay: Arc::clone(&r2) };
+                let out = catch_unwind(AssertUnwindSafe(|| d(&exec)));
+                // Wake participants even when the driver never opened a
+                // parallel region (n == 0 engines, or a driver panic
+                // before `run`).
+                r2.close();
+                if let Err(payload) = out {
+                    resume_unwind(payload); // recorded as the epoch's panic
+                }
+            } else {
+                r2.participate();
+            }
+        };
+        let epoch = Epoch::new(p, 0, Task::Owned(Arc::new(body)));
+        self.enqueue(&epoch);
+        LoopHandle::from_epoch(epoch)
+    }
+}
+
+/// Detached fallback team for async submissions the pool cannot take.
+fn detach_team(p: usize, body: Arc<dyn Fn(usize) + Send + Sync>) -> LoopHandle {
+    let join = thread::Builder::new()
+        .name("ich-async-team".into())
+        .spawn(move || scoped_run(p, false, |tid| body(tid)))
+        .expect("spawn async team thread");
+    LoopHandle::from_thread(join)
+}
+
+/// Detached fallback for async drivers: the whole engine runs on a
+/// fresh thread with per-call scoped teams.
+pub(crate) fn detach_driver(driver: Box<dyn FnOnce(&dyn Executor) + Send>) -> LoopHandle {
+    let join = thread::Builder::new()
+        .name("ich-async-driver".into())
+        .spawn(move || driver(&SpawnExec::new(false)))
+        .expect("spawn async driver thread");
+    LoopHandle::from_thread(join)
+}
+
+/// Relay states: the driver has not opened its parallel region yet /
+/// the engine worker fn is published / the driver finished without
+/// (further) work for participants.
+const RELAY_PENDING: u8 = 0;
+const RELAY_READY: u8 = 1;
+const RELAY_CLOSED: u8 = 2;
+
+/// Bridges one engine-invocation's `exec.run(p, f)` onto the sibling
+/// claims of an async epoch: the driver publishes the type-erased
+/// worker fn, participants pull engine tids from a shared counter.
+struct Relay {
+    /// `RELAY_*` state; `Release`-stored by the driver, `Acquire`-read
+    /// by participants — this pairing publishes `cell` and `sub_p`.
+    state: AtomicU8,
+    /// The engine worker fn, erased. Valid from `RELAY_READY` until
+    /// the driver's `run` returns — which it cannot do while any tid
+    /// is still unclaimed or running (see `RelayExec::run`).
+    cell: UnsafeCell<Option<TaskPtr>>,
+    /// The width the engine actually asked for (== `p` today, but the
+    /// relay only trusts what `run` was called with).
+    sub_p: AtomicUsize,
+    /// Next engine tid to hand out (1-based; tid 0 is the driver's).
+    next: AtomicUsize,
+    /// Engine tids (1..sub_p) not yet finished.
+    pending: AtomicUsize,
+    /// First participant panic, rethrown by the driver's `run`.
+    panic: Mutex<Option<Box<dyn Any + Send>>>,
+}
+
+// SAFETY: `cell` is published with Release on `state` and read with
+// Acquire, and its pointee outlives all reads (see `Relay::run_tid`).
+unsafe impl Send for Relay {}
+unsafe impl Sync for Relay {}
+
+impl Relay {
+    fn new() -> Relay {
+        Relay {
+            state: AtomicU8::new(RELAY_PENDING),
+            cell: UnsafeCell::new(None),
+            sub_p: AtomicUsize::new(0),
+            next: AtomicUsize::new(1),
+            pending: AtomicUsize::new(0),
+            panic: Mutex::new(None),
+        }
+    }
+
+    /// Mark the relay closed if the driver never published a region.
+    fn close(&self) {
+        let _ = self.state.compare_exchange(RELAY_PENDING, RELAY_CLOSED, Release, Relaxed);
+    }
+
+    /// Claim the next unrun engine tid, if any.
+    fn take_tid(&self) -> Option<usize> {
+        let limit = self.sub_p.load(Relaxed);
+        let mut t = self.next.load(Relaxed);
+        loop {
+            if t >= limit {
+                return None;
+            }
+            match self.next.compare_exchange_weak(t, t + 1, AcqRel, Relaxed) {
+                Ok(_) => return Some(t),
+                Err(cur) => t = cur,
+            }
+        }
+    }
+
+    /// Run engine tid `t` against the published worker fn.
+    fn run_tid(&self, t: usize) {
+        // SAFETY: `cell` was written before the `RELAY_READY` Release
+        // store that gated our caller, and the pointee (the engine's
+        // worker fn, on the driver's `run` frame) stays alive until
+        // `pending` hits zero — which this tid's decrement below is a
+        // precondition of.
+        let f = unsafe { &*(*self.cell.get()).expect("relay task published") };
+        let result = catch_unwind(AssertUnwindSafe(|| f(t)));
+        if let Err(payload) = result {
+            let mut slot = self.panic.lock().unwrap();
+            if slot.is_none() {
+                *slot = Some(payload);
+            }
+        }
+        self.pending.fetch_sub(1, AcqRel);
+    }
+
+    /// A participant claim: wait for the driver to publish (or close),
+    /// then run engine tids until none are left.
+    fn participate(&self) {
+        let mut step = 0u32;
+        loop {
+            match self.state.load(Acquire) {
+                RELAY_CLOSED => return,
+                RELAY_READY => break,
+                _ => {
+                    // The driver claim precedes ours in the same epoch,
+                    // so it is already running; its engine preamble is
+                    // short. Spin, then yield, then nap — no parking,
+                    // the driver has no list of us to unpark.
+                    if step < WAIT_SPINS {
+                        std::hint::spin_loop();
+                    } else if step < WAIT_SPINS + WAIT_YIELDS {
+                        thread::yield_now();
+                    } else {
+                        thread::park_timeout(std::time::Duration::from_micros(100));
+                    }
+                    step = step.saturating_add(1);
+                }
+            }
+        }
+        while let Some(t) = self.take_tid() {
+            self.run_tid(t);
+        }
+    }
+}
+
+/// The [`Executor`] handed to an async driver.
+struct RelayExec {
+    relay: Arc<Relay>,
+}
+
+impl Executor for RelayExec {
+    fn run(&self, p: usize, f: &(dyn Fn(usize) + Sync)) {
+        let r = &*self.relay;
+        if p <= 1 {
+            if p == 1 {
+                f(0);
+            }
+            return;
+        }
+        if r.state.load(Relaxed) != RELAY_PENDING {
+            // A second parallel region in one epoch (no engine does
+            // this today): correctness over amortization.
+            scoped_run(p, false, f);
+            return;
+        }
+        // Publish the worker fn, then open the gate.
+        // SAFETY: participants read `cell` only after the Release
+        // store below; we are the only writer.
+        unsafe {
+            *r.cell.get() = Some(erase(f));
+        }
+        r.sub_p.store(p, Relaxed);
+        r.pending.store(p - 1, Relaxed);
+        r.state.store(RELAY_READY, Release);
+        // Engine tid 0 is ours; then help with unclaimed tids instead
+        // of parking — participants may be queued behind busy workers
+        // (or not exist at all on a 1-worker pool).
+        let mine = catch_unwind(AssertUnwindSafe(|| f(0)));
+        let mut step = 0u32;
+        loop {
+            if let Some(t) = r.take_tid() {
+                step = 0;
+                r.run_tid(t);
+            } else if r.pending.load(Acquire) == 0 {
+                break;
+            } else if step < WAIT_SPINS {
+                std::hint::spin_loop();
+                step += 1;
+            } else {
+                thread::yield_now();
+            }
+        }
+        // All accesses to `f` are done; rethrow toward the epoch.
+        if let Err(payload) = mine {
+            resume_unwind(payload);
+        }
+        if let Some(payload) = r.panic.lock().unwrap().take() {
+            resume_unwind(payload);
+        }
+    }
 }
 
 impl Drop for Runtime {
     fn drop(&mut self) {
+        self.shared.shutdown.store(true, Release);
         for w in &self.workers {
-            w.shared.shutdown.store(true, Release);
             w.thread.unpark();
         }
         for w in &mut self.workers {
@@ -344,6 +885,10 @@ impl Drop for Runtime {
                 let _ = join.join();
             }
         }
+        // Workers drain the queue before honoring shutdown, and every
+        // submission path either queues on a pool with workers or
+        // detaches, so no epoch can still be queued here.
+        debug_assert!(self.shared.queue.lock().unwrap().is_empty(), "epochs left behind by pool shutdown");
     }
 }
 
@@ -414,9 +959,8 @@ mod tests {
             }));
             assert!(r.is_err(), "worker panic must rethrow on the submitter");
         }
-        // The pool must be *reused* afterwards — a panic rethrown while
-        // holding the run lock poisons it, and a poisoned lock must be
-        // recovered rather than silently falling back to scoped spawns.
+        // The pool must be *reused* afterwards: a body panic must not
+        // wedge the queue or kill a worker.
         let on_pool = AtomicUsize::new(0);
         rt.run(3, &|tid| {
             let named = std::thread::current().name().is_some_and(|n| n.starts_with("ich-worker"));
@@ -448,8 +992,10 @@ mod tests {
         let rt = Runtime::with_pinning(2, false);
         let count = AtomicUsize::new(0);
         rt.run(2, &|_outer| {
-            // The run lock is held by the outer call: this must take
-            // the scoped path instead of deadlocking.
+            // From a pool worker this must take the scoped path (a
+            // worker cannot wait on the queue it drains); from the
+            // caller it queues behind the outer epoch — either way it
+            // must complete instead of deadlocking.
             rt.run(2, &|_inner| {
                 count.fetch_add(1, SeqCst);
             });
@@ -488,5 +1034,212 @@ mod tests {
         });
         drop(rt); // must not hang
         assert_eq!(count.load(SeqCst), 5);
+    }
+
+    // ---- async submission ------------------------------------------
+
+    #[test]
+    fn submit_runs_every_tid_on_pool_workers() {
+        let rt = Runtime::with_pinning(3, false);
+        let hits: Arc<Vec<AtomicUsize>> = Arc::new((0..3).map(|_| AtomicUsize::new(0)).collect());
+        let on_pool = Arc::new(AtomicUsize::new(0));
+        let (h2, o2) = (Arc::clone(&hits), Arc::clone(&on_pool));
+        let handle = rt.submit(3, move |tid| {
+            h2[tid].fetch_add(1, SeqCst);
+            if thread::current().name().is_some_and(|n| n.starts_with("ich-worker")) {
+                o2.fetch_add(1, SeqCst);
+            }
+        });
+        handle.join();
+        for (tid, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(SeqCst), 1, "tid {tid}");
+        }
+        assert_eq!(on_pool.load(SeqCst), 3, "async tids must all run on pool workers");
+    }
+
+    #[test]
+    fn submit_returns_before_completion() {
+        let rt = Runtime::with_pinning(2, false);
+        let gate = Arc::new(AtomicUsize::new(0));
+        let g2 = Arc::clone(&gate);
+        let handle = rt.submit(2, move |_tid| {
+            while g2.load(SeqCst) == 0 {
+                thread::yield_now();
+            }
+        });
+        // The epoch cannot have finished: its bodies spin on the gate.
+        assert!(!handle.is_finished(), "submit must not block on the epoch");
+        gate.store(1, SeqCst);
+        handle.join();
+    }
+
+    #[test]
+    fn multiple_epochs_in_flight_fifo() {
+        let rt = Runtime::with_pinning(2, false);
+        let count = Arc::new(AtomicUsize::new(0));
+        let handles: Vec<LoopHandle> = (0..50)
+            .map(|_| {
+                let c = Arc::clone(&count);
+                rt.submit(2, move |_tid| {
+                    c.fetch_add(1, SeqCst);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join();
+        }
+        assert_eq!(count.load(SeqCst), 100);
+    }
+
+    #[test]
+    fn submit_panic_rethrows_at_join() {
+        let rt = Runtime::with_pinning(2, false);
+        let handle = rt.submit(2, |tid| {
+            if tid == 1 {
+                panic!("injected async failure");
+            }
+        });
+        let r = catch_unwind(AssertUnwindSafe(|| handle.join()));
+        assert!(r.is_err(), "async worker panic must rethrow at join");
+        // Pool survives.
+        let count = AtomicUsize::new(0);
+        rt.run(3, &|_tid| {
+            count.fetch_add(1, SeqCst);
+        });
+        assert_eq!(count.load(SeqCst), 3);
+    }
+
+    #[test]
+    fn oversized_submit_detaches() {
+        let rt = Runtime::with_pinning(1, false);
+        let hits: Arc<Vec<AtomicUsize>> = Arc::new((0..4).map(|_| AtomicUsize::new(0)).collect());
+        let h2 = Arc::clone(&hits);
+        let handle = rt.submit(4, move |tid| {
+            h2[tid].fetch_add(1, SeqCst);
+        });
+        handle.join();
+        for h in hits.iter() {
+            assert_eq!(h.load(SeqCst), 1);
+        }
+    }
+
+    #[test]
+    fn submit_driver_relays_every_engine_tid() {
+        let rt = Runtime::with_pinning(3, false);
+        let hits: Arc<Vec<AtomicUsize>> = Arc::new((0..3).map(|_| AtomicUsize::new(0)).collect());
+        let on_pool = Arc::new(AtomicUsize::new(0));
+        let (h2, o2) = (Arc::clone(&hits), Arc::clone(&on_pool));
+        let handle = rt.submit_driver(
+            3,
+            Box::new(move |exec: &dyn Executor| {
+                exec.run(3, &|tid| {
+                    h2[tid].fetch_add(1, SeqCst);
+                    if thread::current().name().is_some_and(|n| n.starts_with("ich-worker")) {
+                        o2.fetch_add(1, SeqCst);
+                    }
+                });
+            }),
+        );
+        handle.join();
+        for (tid, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(SeqCst), 1, "tid {tid}");
+        }
+        assert_eq!(on_pool.load(SeqCst), 3, "relayed engine tids must run on pool workers");
+    }
+
+    #[test]
+    fn submit_driver_without_region_completes() {
+        let rt = Runtime::with_pinning(2, false);
+        // Driver never calls exec.run (the n == 0 engine shape): the
+        // relay must close so participant claims do not hang.
+        let handle = rt.submit_driver(2, Box::new(|_exec: &dyn Executor| {}));
+        handle.join();
+    }
+
+    #[test]
+    fn submit_driver_helps_on_single_worker_pool() {
+        let rt = Runtime::with_pinning(1, false);
+        let hits: Arc<Vec<AtomicUsize>> = Arc::new((0..1).map(|_| AtomicUsize::new(0)).collect());
+        let h2 = Arc::clone(&hits);
+        // p == 1 fits the 1-worker pool; the driver runs tid 0 itself.
+        let handle = rt.submit_driver(
+            1,
+            Box::new(move |exec: &dyn Executor| {
+                exec.run(1, &|tid| {
+                    h2[tid].fetch_add(1, SeqCst);
+                });
+            }),
+        );
+        handle.join();
+        assert_eq!(hits[0].load(SeqCst), 1);
+    }
+
+    #[test]
+    fn default_run_async_is_complete_at_return() {
+        struct Inline;
+        impl Executor for Inline {
+            fn run(&self, p: usize, f: &(dyn Fn(usize) + Sync)) {
+                for tid in 0..p {
+                    f(tid);
+                }
+            }
+        }
+        let count = Arc::new(AtomicUsize::new(0));
+        let c2 = Arc::clone(&count);
+        let handle = Inline.run_async(
+            3,
+            Arc::new(move |_tid| {
+                c2.fetch_add(1, SeqCst);
+            }),
+        );
+        assert!(handle.is_finished());
+        handle.join();
+        assert_eq!(count.load(SeqCst), 3);
+    }
+
+    #[test]
+    fn spawn_exec_run_async_overlaps() {
+        let count = Arc::new(AtomicUsize::new(0));
+        let c2 = Arc::clone(&count);
+        let handle = SpawnExec::new(false).run_async(
+            3,
+            Arc::new(move |_tid| {
+                c2.fetch_add(1, SeqCst);
+            }),
+        );
+        handle.join();
+        assert_eq!(count.load(SeqCst), 3);
+    }
+
+    #[test]
+    fn blocking_and_async_submitters_interleave() {
+        let rt = Arc::new(Runtime::with_pinning(3, false));
+        let total = Arc::new(AtomicUsize::new(0));
+        std::thread::scope(|s| {
+            for _ in 0..2 {
+                let rt = Arc::clone(&rt);
+                let total = Arc::clone(&total);
+                s.spawn(move || {
+                    let mut handles = Vec::new();
+                    for round in 0..40 {
+                        if round % 2 == 0 {
+                            rt.run(2, &|_tid| {
+                                total.fetch_add(1, SeqCst);
+                            });
+                        } else {
+                            let t2 = Arc::clone(&total);
+                            handles.push(rt.submit(2, move |_tid| {
+                                t2.fetch_add(1, SeqCst);
+                            }));
+                        }
+                    }
+                    for h in handles {
+                        h.join();
+                    }
+                });
+            }
+        });
+        // 2 threads × 40 rounds × 2 tids each.
+        assert_eq!(total.load(SeqCst), 160);
     }
 }

@@ -260,11 +260,18 @@ fn worker(
         }
         let victim = match chunk_policy {
             ChunkPolicy::Adaptive(prm) if prm.informed => {
-                // Ablation: probe every queue, steal from the fullest.
+                // Ablation: probe every queue, steal from the fullest —
+                // and when even the fullest probe observed an empty
+                // deque, skip the steal attempt entirely. Locking a
+                // victim the probe already saw drained was a
+                // guaranteed failed steal plus mutex traffic on every
+                // retry of the backoff loop.
                 (0..p)
                     .filter(|&v| v != tid)
-                    .max_by_key(|&v| shared.deques[v].remaining())
-                    .unwrap()
+                    .map(|v| (v, shared.deques[v].remaining()))
+                    .max_by_key(|&(_, rem)| rem)
+                    .filter(|&(_, rem)| rem > 0)
+                    .map(|(v, _)| v)
             }
             _ => {
                 // Paper: uniform random victim.
@@ -272,11 +279,11 @@ fn worker(
                 if v >= tid {
                     v += 1;
                 }
-                v
+                Some(v)
             }
         };
-        match shared.deques[victim].steal_half() {
-            Some(stolen) => {
+        match victim.and_then(|v| shared.deques[v].steal_half().map(|stolen| (v, stolen))) {
+            Some((victim, stolen)) => {
                 steal_fails = 0;
                 sink.add_steal(tid, true);
                 if let ChunkPolicy::Adaptive(prm) = chunk_policy {
@@ -377,6 +384,29 @@ mod tests {
                 run_and_check(500, 4, |body, sink| run_ich(500, 4, &SPAWN, prm, 7, body, sink));
             }
         }
+    }
+
+    #[test]
+    fn informed_probe_skips_empty_victims_and_terminates() {
+        // One iteration sleeps while every queue is already drained:
+        // the informed thieves' probes keep observing empty victims.
+        // They must record failed steals (without locking the drained
+        // deques) and the run must still terminate correctly.
+        let n = 4;
+        let p = 4;
+        let sink = MetricsSink::new(p);
+        let body = |r: Range<usize>| {
+            for i in r {
+                if i == 0 {
+                    std::thread::sleep(std::time::Duration::from_millis(50));
+                }
+            }
+        };
+        let prm = IchParams { informed: true, ..Default::default() };
+        run_ich(n, p, &SPAWN, prm, 9, &body, &sink);
+        let m = sink.collect(std::time::Duration::ZERO);
+        assert_eq!(m.total_iters, n as u64);
+        assert!(m.steals_failed >= 1, "drained probes still count as failed steals");
     }
 
     #[test]

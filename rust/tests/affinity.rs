@@ -1,0 +1,46 @@
+//! Regression: a `threads == 1` `parallel_for` with default options
+//! must not alter the calling thread's CPU affinity. (It used to
+//! route through `scoped_run(1, true, …)`, which permanently pinned
+//! the *caller* to core 0.)
+
+use ich::sched::pool::current_affinity;
+use ich::sched::{parallel_for, ForOpts, IchParams, Policy};
+
+#[test]
+fn single_thread_default_opts_preserves_caller_affinity() {
+    let Some(before) = current_affinity() else { return }; // non-Linux: nothing to check
+    let m = parallel_for(10_000, &Policy::Ich(IchParams::default()), &ForOpts::default(), &|r| {
+        std::hint::black_box(r.len());
+    });
+    assert_eq!(m.total_iters, 10_000);
+    let after = current_affinity().expect("affinity readable");
+    assert_eq!(before, after, "threads == 1 run must leave the caller's affinity mask unchanged");
+}
+
+#[test]
+fn single_thread_spawn_mode_preserves_caller_affinity() {
+    // Spawn mode used to hit the same scoped_run(1, true, …) path.
+    let Some(before) = current_affinity() else { return };
+    let opts = ich::sched::ForOpts { mode: ich::sched::ExecMode::Spawn, ..Default::default() };
+    let m = parallel_for(1_000, &Policy::Dynamic { chunk: 16 }, &opts, &|r| {
+        std::hint::black_box(r.len());
+    });
+    assert_eq!(m.total_iters, 1_000);
+    assert_eq!(current_affinity().unwrap(), before, "Spawn-mode threads == 1 run must not pin the caller");
+}
+
+#[test]
+fn single_thread_every_policy_preserves_affinity() {
+    let Some(before) = current_affinity() else { return };
+    let n = 256usize;
+    let w: Vec<f64> = (0..n).map(|i| 1.0 + (i % 3) as f64).collect();
+    for policy in Policy::representatives() {
+        // Default opts: threads == 1, pin == true, ExecMode::Pool.
+        let opts = ForOpts { weights: Some(&w), ..Default::default() };
+        let m = parallel_for(n, &policy, &opts, &|r| {
+            std::hint::black_box(r.len());
+        });
+        assert_eq!(m.total_iters, n as u64, "policy {}", policy.name());
+    }
+    assert_eq!(current_affinity().unwrap(), before, "single-thread runs must not re-pin the caller");
+}

@@ -1,0 +1,218 @@
+//! Async epoch submission stress: independent loops submitted via
+//! `parallel_for_async` from different threads must overlap on pool
+//! workers with exactly-once iteration coverage, deep epoch queues
+//! must drain FIFO, and async body panics must surface at the join.
+
+use ich::sched::runtime::Runtime;
+use ich::sched::{parallel_for, parallel_for_async, parallel_for_async_on, ForOpts, IchParams, Policy};
+use std::ops::Range;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering::SeqCst};
+use std::sync::Arc;
+
+/// The acceptance stress: two independent loops, submitted from two
+/// different OS threads, both proven to run **on pool workers**
+/// (named-thread check over every iteration) and to be in flight
+/// **at the same time** (mutual rendezvous), with exactly-once
+/// coverage. A private pool makes capacity deterministic on any host.
+#[test]
+fn two_async_loops_from_two_threads_overlap_on_pool_workers() {
+    let rt = Runtime::with_pinning(4, false);
+    let n = 50_000usize;
+    let started: Arc<Vec<AtomicBool>> = Arc::new((0..2).map(|_| AtomicBool::new(false)).collect());
+    let seen_other: Arc<Vec<AtomicBool>> = Arc::new((0..2).map(|_| AtomicBool::new(false)).collect());
+    let on_pool: Arc<Vec<AtomicU64>> = Arc::new((0..2).map(|_| AtomicU64::new(0)).collect());
+    let hits: Arc<Vec<Vec<AtomicU64>>> =
+        Arc::new((0..2).map(|_| (0..n).map(|_| AtomicU64::new(0)).collect()).collect());
+
+    let rt_ref = &rt;
+    std::thread::scope(|s| {
+        for loop_id in 0..2usize {
+            let started = Arc::clone(&started);
+            let seen_other = Arc::clone(&seen_other);
+            let on_pool = Arc::clone(&on_pool);
+            let hits = Arc::clone(&hits);
+            s.spawn(move || {
+                let other = 1 - loop_id;
+                let deadline = std::time::Instant::now() + std::time::Duration::from_secs(20);
+                let body = move |r: Range<usize>| {
+                    started[loop_id].store(true, SeqCst);
+                    // Rendezvous: wait (bounded) until the *other*
+                    // loop has started — if submissions serialized,
+                    // one loop could finish before the other begins
+                    // and this flag would stay false.
+                    while !started[other].load(SeqCst) && std::time::Instant::now() < deadline {
+                        std::thread::yield_now();
+                    }
+                    if started[other].load(SeqCst) {
+                        seen_other[loop_id].store(true, SeqCst);
+                    }
+                    if std::thread::current().name().is_some_and(|nm| nm.starts_with("ich-worker")) {
+                        on_pool[loop_id].fetch_add(r.len() as u64, SeqCst);
+                    }
+                    for i in r {
+                        hits[loop_id][i].fetch_add(1, SeqCst);
+                    }
+                };
+                let opts = ForOpts { threads: 2, pin: false, seed: loop_id as u64, ..Default::default() };
+                let join = parallel_for_async_on(rt_ref, n, &Policy::Ich(IchParams::default()), &opts, Arc::new(body));
+                let m = join.join();
+                assert_eq!(m.total_iters, n as u64, "loop {loop_id}");
+            });
+        }
+    });
+
+    for loop_id in 0..2 {
+        for (i, h) in hits[loop_id].iter().enumerate() {
+            assert_eq!(h.load(SeqCst), 1, "loop {loop_id} iter {i}");
+        }
+        assert_eq!(
+            on_pool[loop_id].load(SeqCst),
+            n as u64,
+            "loop {loop_id}: every iteration must execute on a named pool worker"
+        );
+        assert!(
+            seen_other[loop_id].load(SeqCst),
+            "loop {loop_id} never observed the other loop in flight — async submissions serialized"
+        );
+    }
+}
+
+#[test]
+fn many_async_and_blocking_submitters_cover_exactly_once() {
+    // Mixed traffic against the shared global pool: async and blocking
+    // epochs from several threads queue FIFO and must all stay
+    // exactly-once, whatever fallback path each submission takes.
+    let n = 500usize;
+    std::thread::scope(|s| {
+        for t in 0..3u64 {
+            s.spawn(move || {
+                for round in 0..30u64 {
+                    let hits: Arc<Vec<AtomicU64>> = Arc::new((0..n).map(|_| AtomicU64::new(0)).collect());
+                    let opts = ForOpts { threads: 2, pin: false, seed: t * 100 + round, ..Default::default() };
+                    let policy = Policy::Ich(IchParams::default());
+                    if round % 2 == 0 {
+                        let h2 = Arc::clone(&hits);
+                        let m = parallel_for_async(
+                            n,
+                            &policy,
+                            &opts,
+                            Arc::new(move |r: Range<usize>| {
+                                for i in r {
+                                    h2[i].fetch_add(1, SeqCst);
+                                }
+                            }),
+                        )
+                        .join();
+                        assert_eq!(m.total_iters, n as u64);
+                    } else {
+                        let m = parallel_for(n, &policy, &opts, &|r| {
+                            for i in r {
+                                hits[i].fetch_add(1, SeqCst);
+                            }
+                        });
+                        assert_eq!(m.total_iters, n as u64);
+                    }
+                    for (i, h) in hits.iter().enumerate() {
+                        assert_eq!(h.load(SeqCst), 1, "thread {t} round {round} iter {i}");
+                    }
+                }
+            });
+        }
+    });
+}
+
+#[test]
+fn deep_async_queue_drains_fifo() {
+    // 50 epochs queued on a 2-worker pool from one submitter: FIFO
+    // dispatch must complete them all with correct metrics.
+    let rt = Runtime::with_pinning(2, false);
+    let total = Arc::new(AtomicUsize::new(0));
+    let handles: Vec<_> = (0..50u64)
+        .map(|k| {
+            let t2 = Arc::clone(&total);
+            let opts = ForOpts { threads: 2, pin: false, seed: k, ..Default::default() };
+            parallel_for_async_on(
+                &rt,
+                200,
+                &Policy::Guided { chunk: 1 },
+                &opts,
+                Arc::new(move |r: Range<usize>| {
+                    t2.fetch_add(r.len(), SeqCst);
+                }),
+            )
+        })
+        .collect();
+    for h in handles {
+        assert_eq!(h.join().total_iters, 200);
+    }
+    assert_eq!(total.load(SeqCst), 50 * 200);
+}
+
+#[test]
+fn async_body_panic_rethrows_at_join_and_pool_survives() {
+    let rt = Runtime::with_pinning(2, false);
+    let opts = ForOpts { threads: 2, pin: false, ..Default::default() };
+    let join = parallel_for_async_on(
+        &rt,
+        100,
+        &Policy::Dynamic { chunk: 10 },
+        &opts,
+        Arc::new(|r: Range<usize>| {
+            if r.start == 0 {
+                panic!("injected async body failure");
+            }
+        }),
+    );
+    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| join.join()));
+    assert!(r.is_err(), "async body panic must surface at join");
+
+    // The pool keeps serving afterwards.
+    let hits: Arc<Vec<AtomicU64>> = Arc::new((0..50).map(|_| AtomicU64::new(0)).collect());
+    let h2 = Arc::clone(&hits);
+    let m = parallel_for_async_on(
+        &rt,
+        50,
+        &Policy::Static,
+        &opts,
+        Arc::new(move |r: Range<usize>| {
+            for i in r {
+                h2[i].fetch_add(1, SeqCst);
+            }
+        }),
+    )
+    .join();
+    assert_eq!(m.total_iters, 50);
+    for h in hits.iter() {
+        assert_eq!(h.load(SeqCst), 1);
+    }
+}
+
+#[test]
+fn submit_latency_is_below_loop_runtime() {
+    // The point of async submission: the submit call must return well
+    // before the loop completes. A coarse-grained body makes the loop
+    // take a measurable time; the submission itself must not wait on
+    // it.
+    let rt = Runtime::with_pinning(2, false);
+    let opts = ForOpts { threads: 2, pin: false, ..Default::default() };
+    let t0 = std::time::Instant::now();
+    let join = parallel_for_async_on(
+        &rt,
+        8,
+        &Policy::Static,
+        &opts,
+        Arc::new(|r: Range<usize>| {
+            for _ in r {
+                std::thread::sleep(std::time::Duration::from_millis(10));
+            }
+        }),
+    );
+    let submit_s = t0.elapsed();
+    let m = join.join();
+    let total_s = t0.elapsed();
+    assert_eq!(m.total_iters, 8);
+    assert!(
+        submit_s < total_s / 2,
+        "submission ({submit_s:?}) should be far below the loop's round trip ({total_s:?})"
+    );
+}

@@ -1,8 +1,8 @@
 //! Pool-reuse stress: the persistent worker-pool runtime must survive
 //! thousands of consecutive fork-joins over mixed policies with no
-//! thread leaks and exactly-once iteration coverage, and nested
-//! `parallel_for` must fall back to scoped spawn instead of
-//! deadlocking on the pool's run lock.
+//! thread leaks and exactly-once iteration coverage; nested
+//! `parallel_for` from pool workers must fall back to scoped spawn,
+//! and concurrent submitters must queue FIFO, without deadlock.
 
 use ich::sched::runtime::Runtime;
 use ich::sched::{parallel_for, ExecMode, ForOpts, IchParams, Policy};
@@ -100,10 +100,11 @@ fn nested_parallel_for_falls_back_to_scoped_spawn() {
     let opts = ForOpts { threads: 2, pin: false, ..Default::default() };
     let m = parallel_for(outer, &Policy::Dynamic { chunk: 1 }, &opts, &|r| {
         for o in r {
-            // The outer call holds the pool's run lock (when it got the
-            // pool), so this inner call must take the scoped-spawn path
-            // rather than deadlocking — from the caller thread and from
-            // pool workers alike.
+            // From a pool worker this inner call must take the
+            // scoped-spawn path (a worker cannot wait on the queue it
+            // drains); from the submitting thread — which is mid-epoch
+            // on this pool — it must fall back too, not queue behind
+            // the epoch its own caller belongs to.
             let iopts = ForOpts { threads: 2, pin: false, ..Default::default() };
             let im = parallel_for(inner, &Policy::Ich(IchParams::default()), &iopts, &|ir| {
                 for i in ir {
@@ -117,6 +118,33 @@ fn nested_parallel_for_falls_back_to_scoped_spawn() {
     for (i, c) in cells.iter().enumerate() {
         assert_eq!(c.load(SeqCst), 1, "cell {i}");
     }
+}
+
+#[test]
+fn nested_ws_policy_at_full_width_does_not_deadlock() {
+    // Regression for the FIFO epoch queue: the outer iCh epoch spans
+    // every pool worker *and* the submitter, and work-stealing claims
+    // spin until ALL iterations retire — including the chunk whose
+    // body is blocked inside a nested parallel_for. A nested call
+    // from the submitting thread must therefore fall back to scoped
+    // spawning (it is mid-epoch on this pool); queueing it behind the
+    // outer epoch would be a circular wait. Before the mid-epoch
+    // guard this test hung.
+    let n = 64usize;
+    let p = Runtime::global().workers() + 1; // outer epoch fills the pool
+    let inner_iters = AtomicU64::new(0);
+    let opts = ForOpts { threads: p, pin: false, ..Default::default() };
+    let m = parallel_for(n, &Policy::Ich(IchParams::default()), &opts, &|r| {
+        std::hint::black_box(r.len());
+        // Workers and the submitter alike nest an inner loop.
+        let iopts = ForOpts { threads: 2, pin: false, ..Default::default() };
+        let im = parallel_for(32, &Policy::Stealing { chunk: 4 }, &iopts, &|ir| {
+            inner_iters.fetch_add(ir.len() as u64, SeqCst);
+        });
+        assert_eq!(im.total_iters, 32);
+    });
+    assert_eq!(m.total_iters, n as u64);
+    assert!(inner_iters.load(SeqCst) >= 32, "nested loops must have run");
 }
 
 #[test]
@@ -138,8 +166,8 @@ fn spawn_mode_bypasses_the_pool() {
 #[test]
 fn concurrent_parallel_for_from_many_threads() {
     // Several OS threads race `parallel_for` against the shared pool:
-    // at most one wins the pool per instant, the rest fall back — all
-    // must complete correctly.
+    // their epochs queue FIFO on the pool (no more degradation to
+    // scoped spawns on contention) — all must complete correctly.
     let n = 400usize;
     std::thread::scope(|s| {
         for t in 0..4u64 {

@@ -2,9 +2,11 @@
 //! dispatch overhead per policy (empty bodies — pure scheduler cost),
 //! THE-deque operation latency, iCh's adaptation-pass cost, the
 //! fork-join overhead of the persistent worker pool vs per-call thread
-//! spawning (recorded to `BENCH_forkjoin.json`), and blocking vs
+//! spawning (recorded to `BENCH_forkjoin.json`), blocking vs
 //! asynchronous epoch submission under concurrent submitters
-//! (recorded to `BENCH_async.json`).
+//! (recorded to `BENCH_async.json`), and uniform vs topology-biased
+//! steal-victim selection per work-stealing engine (recorded to
+//! `BENCH_numa.json`).
 //! These are the §Perf numbers for the hot path.
 
 mod bench_common;
@@ -16,7 +18,7 @@ use std::time::Instant;
 
 use ich::sched::deque::RangeDeque;
 use ich::sched::runtime::Runtime;
-use ich::sched::{parallel_for, parallel_for_async, ExecMode, ForOpts, IchParams, Policy};
+use ich::sched::{parallel_for, parallel_for_async, ExecMode, ForOpts, IchParams, Policy, Topology, VictimPolicy};
 use ich::util::json::Json;
 
 fn dispatch_overhead() {
@@ -98,6 +100,7 @@ fn fork_join_overhead() {
                     seed: 7,
                     weights: if policy.needs_weights() { Some(&w) } else { None },
                     mode,
+                    ..Default::default()
                 };
                 let r = bench(&format!("forkjoin {} n={n} p={p} {mode:?}", policy.name()), 1, 3, || {
                     for _ in 0..reps {
@@ -156,7 +159,7 @@ fn async_submission() {
     let n = 10_000usize;
     let reps = 200usize;
     let policy = Policy::Ich(IchParams::default());
-    let opts = ForOpts { threads: p, pin: false, seed: 7, weights: None, mode: ExecMode::Pool };
+    let opts = ForOpts { threads: p, pin: false, seed: 7, weights: None, mode: ExecMode::Pool, ..Default::default() };
     let body: Arc<dyn Fn(Range<usize>) + Send + Sync> = Arc::new(|rr: Range<usize>| {
         std::hint::black_box(rr.len());
     });
@@ -275,6 +278,84 @@ fn async_submission() {
     save_json("BENCH_async.json", &out);
 }
 
+/// Uniform vs topology-biased steal-victim selection on an
+/// imbalanced loop (thread 0's initial block carries all the work),
+/// per work-stealing engine. Emits `BENCH_numa.json` with each arm's
+/// wall time and local-steal fraction. On a single-node host (or a
+/// 1-node `ICH_TOPOLOGY` override) the bias gates off and both arms
+/// run the identical uniform path — the json then documents exactly
+/// that.
+fn numa_steal() {
+    println!("\n== numa_steal: uniform vs topology-biased victim selection ==");
+    let topo = Topology::detect();
+    let p = (Runtime::global().workers() + 1).clamp(2, 8);
+    let n = 100_000usize;
+    let heavy = n / p;
+    println!("    topology: {} node(s) over {} core(s); p={p}", topo.nodes(), topo.cores());
+    let mut entries = Vec::new();
+    for policy in [Policy::Stealing { chunk: 1 }, Policy::Ich(IchParams::default())] {
+        let mut times = [0.0f64; 2];
+        for (vi, victim) in [VictimPolicy::Uniform, VictimPolicy::Topo].into_iter().enumerate() {
+            let opts = ForOpts { threads: p, pin: false, seed: 11, weights: None, victim, ..Default::default() };
+            let mut last = None;
+            let r = bench(&format!("numa_steal {} p={p} {victim:?}", policy.name()), 1, 3, || {
+                let m = parallel_for(n, &policy, &opts, &|rr| {
+                    for i in rr {
+                        if i < heavy {
+                            let mut acc = 0u64;
+                            for j in 0..200u64 {
+                                acc = acc.wrapping_add(j ^ i as u64);
+                            }
+                            std::hint::black_box(acc);
+                        }
+                    }
+                });
+                assert_eq!(m.total_iters, n as u64);
+                last = Some(m);
+            });
+            times[vi] = r.min_s;
+            let m = last.expect("at least one sample ran");
+            println!(
+                "    -> {} {victim:?}: local-steal fraction {:.3} ({} local + {} remote = {} ok, {} failed)",
+                policy.name(),
+                m.local_steal_fraction(),
+                m.steals_local,
+                m.steals_remote,
+                m.steals_ok,
+                m.steals_failed
+            );
+            let mut e = Json::obj();
+            e.set("policy", Json::str(&policy.name()));
+            e.set("victim", Json::str(&format!("{victim:?}").to_lowercase()));
+            e.set("time_s", Json::num(r.min_s));
+            e.set("steals_ok", Json::num(m.steals_ok as f64));
+            e.set("steals_local", Json::num(m.steals_local as f64));
+            e.set("steals_remote", Json::num(m.steals_remote as f64));
+            e.set("steals_failed", Json::num(m.steals_failed as f64));
+            e.set("local_steal_fraction", Json::num(m.local_steal_fraction()));
+            entries.push(e);
+        }
+        println!("    == {}: uniform/topo wall-time ratio {:.2}x ==", policy.name(), times[0] / times[1]);
+    }
+    let mut out = Json::obj();
+    out.set("bench", Json::str("numa_steal"));
+    out.set("threads", Json::num(p as f64));
+    out.set("n", Json::num(n as f64));
+    out.set("pool_workers", Json::num(Runtime::global().workers() as f64));
+    out.set("topology_nodes", Json::num(topo.nodes() as f64));
+    out.set("topology_cores", Json::num(topo.cores() as f64));
+    // Where a blocking width-p run's tids live (advisory; null =
+    // unpinned).
+    let tid_nodes: Vec<Json> = Runtime::global()
+        .tid_nodes(p)
+        .into_iter()
+        .map(|node| node.map_or(Json::Null, |x| Json::num(x as f64)))
+        .collect();
+    out.set("tid_nodes", Json::Arr(tid_nodes));
+    out.set("entries", Json::Arr(entries));
+    save_json("BENCH_numa.json", &out);
+}
+
 fn multithread_smoke() {
     println!("\n== multi-thread correctness overhead (oversubscribed on this host) ==");
     let n = 1_000_000usize;
@@ -294,5 +375,6 @@ fn main() {
     deque_primitives();
     fork_join_overhead();
     async_submission();
+    numa_steal();
     multithread_smoke();
 }

@@ -90,6 +90,8 @@ pub(crate) fn absorb_metrics(into: &mut RunMetrics, m: &RunMetrics) {
     into.total_chunks += m.total_chunks;
     into.total_iters += m.total_iters;
     into.steals_ok += m.steals_ok;
+    into.steals_local += m.steals_local;
+    into.steals_remote += m.steals_remote;
     into.steals_failed += m.steals_failed;
     into.backoffs += m.backoffs;
     if into.iters_per_thread.len() < m.iters_per_thread.len() {

@@ -95,6 +95,7 @@ impl Coordinator {
             seed: job.seed,
             weights: job.weights.as_deref(),
             mode: self.mode,
+            ..Default::default()
         };
         let join = parallel_for_async(job.n, &job.policy, &opts, Arc::clone(&job.body));
         InFlight { name: job.name, join }

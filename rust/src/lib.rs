@@ -37,4 +37,5 @@ pub mod util;
 
 pub use sched::{
     parallel_for, parallel_for_async, parallel_for_each, ExecMode, ForOpts, IchParams, LoopJoin, Policy, Runtime,
+    VictimPolicy,
 };

@@ -19,13 +19,27 @@
 use ich::apps;
 use ich::coordinator::{Coordinator, LoopJob};
 use ich::harness;
-use ich::sched::{parallel_for, table2_grid, ExecMode, ForOpts, Policy, PAPER_FAMILIES};
+use ich::sched::{parallel_for, table2_grid, ExecMode, ForOpts, Policy, VictimPolicy, PAPER_FAMILIES};
 use ich::sim::{simulate_app, MachineSpec};
 use ich::util::cli::Args;
 use ich::util::table::{f2, Table};
 
 fn main() {
     let args = Args::from_env(&["real", "verbose"]);
+    // `--steal uniform|topo` sets the process-wide steal-victim
+    // default (every `ForOpts::default()` in apps/harness picks it
+    // up); `ICH_STEAL` is the env equivalent.
+    if let Some(s) = args.get("steal") {
+        match VictimPolicy::parse(s) {
+            Some(v) => {
+                let _ = VictimPolicy::set_process_default(v);
+            }
+            None => {
+                eprintln!("unknown steal policy '{s}' (expected: uniform | topo)");
+                std::process::exit(2);
+            }
+        }
+    }
     let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
     match cmd {
         "run" => cmd_run(&args),
@@ -49,8 +63,10 @@ fn main() {
             println!("usage: ich <run|figure|table|summary|ablation|sweep|overlap|list|version> [flags]");
             println!("  e.g.: ich run --app bfs-scale-free --sched ich,0.33 --threads 28");
             println!("        ich run --app spmv --sched guided,1 --threads 4 --real");
+            println!("        ich run --app spmv --sched ich --threads 4 --real --steal uniform");
             println!("        ich overlap --threads 2 --jobs 4 --n 2000000");
             println!("        ich figure fig4");
+            println!("  --steal uniform|topo  steal-victim policy (default: topo; env ICH_STEAL)");
         }
     }
 }
@@ -152,7 +168,7 @@ fn cmd_overlap(args: &Args) {
         std::hint::black_box(acc);
     };
 
-    let opts = ForOpts { threads, pin: false, seed: 1, weights: None, mode: ExecMode::Pool };
+    let opts = ForOpts { threads, pin: false, seed: 1, weights: None, mode: ExecMode::Pool, ..Default::default() };
     // Warm the lazy global pool outside both timed regions so the
     // sequential arm doesn't pay the one-time worker spawn.
     parallel_for(1024, &policy, &opts, &body);

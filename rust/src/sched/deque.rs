@@ -6,6 +6,24 @@
 //! side under the queue's mutex, rolling back if the owner raced past
 //! (Listing 1 lines 12–16). This mirrors Cilk's THE handshake: both
 //! sides publish with SeqCst stores and re-check the opposite index.
+//!
+//! # Overshoot invariant (PR 3 bugfix)
+//!
+//! The owner's optimistic `begin` store is **clamped to the
+//! last-observed `end`**, so `begin` never publishes past `end`.
+//! The seed stored `begin = b + chunk` unclamped; whenever
+//! `chunk > remaining` (every tail take), `begin` transiently held a
+//! value beyond `end` until the locked slow path repaired it. In that
+//! window a concurrent `remaining()` probe read 0 and a concurrent
+//! `steal_half` — even one that won the race to the lock — returned
+//! `None`, although the tail iterations were not yet claimed by
+//! anyone: informed-steal probes skipped a non-empty victim and
+//! random steals failed for no reason. With the clamp, the optimistic
+//! store *is* the claim: `remaining() == 0` now implies every
+//! iteration is genuinely claimed, and the common tail take no longer
+//! touches the mutex at all (the slow path is reached only when a
+//! thief concurrently cut `end` below the claim — the true THE
+//! conflict).
 
 use std::ops::Range;
 use std::sync::atomic::{AtomicUsize, Ordering::SeqCst};
@@ -37,21 +55,42 @@ impl RangeDeque {
     }
 
     /// Owner-side dispatch of up to `chunk` iterations. Lock-free on
-    /// the common path; falls back to the mutex only when a concurrent
-    /// thief cut `end` below our optimistic claim.
+    /// the common path — *including* the tail take where
+    /// `chunk > remaining`: the optimistic claim is clamped to the
+    /// last-observed `end` (module docs, "Overshoot invariant"), so
+    /// the mutex is needed only when a concurrent thief cut `end`
+    /// below the claim between the two loads.
     pub fn take(&self, chunk: usize) -> Option<Range<usize>> {
+        self.take_impl(chunk, || {})
+    }
+
+    /// `take` with a probe hook between the optimistic claim and the
+    /// conflict check: the regression tests use it to freeze the THE
+    /// window and look at the deque from a thief's point of view.
+    #[inline]
+    fn take_impl(&self, chunk: usize, mid_claim: impl FnOnce()) -> Option<Range<usize>> {
         debug_assert!(chunk > 0);
         let b = self.begin.load(SeqCst);
-        let nb = b.saturating_add(chunk);
+        let e0 = self.end.load(SeqCst);
+        if b >= e0 {
+            return None; // already drained; no store, no lock
+        }
         // Optimistically claim [b, nb): only the owner writes `begin`,
-        // so a plain store is safe with respect to other owners.
+        // so a plain store is safe with respect to other owners. The
+        // clamp to `e0` keeps `begin ≤ end` — publishing past `end`
+        // made concurrent thieves observe an empty non-empty deque
+        // (module docs).
+        let nb = b.saturating_add(chunk).min(e0);
         self.begin.store(nb, SeqCst);
+        mid_claim();
         let e = self.end.load(SeqCst);
         if nb <= e {
             return Some(b..nb); // fast path: no conflict
         }
-        // Conflict: a thief moved `end` (or the queue is empty).
-        // Resolve under the lock, exactly like the THE slow path.
+        // Conflict: a thief cut `end` below our claim between the two
+        // loads. Resolve under the lock, exactly like the THE slow
+        // path; whatever is left of [b, e) is ours (`e − b < chunk`
+        // here, so the owner takes the whole remainder).
         let _g = self.lock.lock().unwrap();
         let e = self.end.load(SeqCst);
         if b >= e {
@@ -68,6 +107,14 @@ impl RangeDeque {
     /// (Listing 1). Returns the stolen range, or None if the victim is
     /// empty or the owner raced us (rollback).
     pub fn steal_half(&self) -> Option<Range<usize>> {
+        self.steal_half_with_len().map(|(r, _)| r)
+    }
+
+    /// [`RangeDeque::steal_half`], also reporting the victim's
+    /// pre-steal queue length: Listing 1 lines 20–22 size the thief's
+    /// chunk clamp against the queue the steal cut from (see
+    /// `policy::clamp_chunk_to_stolen`).
+    pub fn steal_half_with_len(&self) -> Option<(Range<usize>, usize)> {
         let _g = self.lock.lock().unwrap();
         let b = self.begin.load(SeqCst);
         let e = self.end.load(SeqCst);
@@ -84,7 +131,7 @@ impl RangeDeque {
             self.end.store(e, SeqCst);
             return None;
         }
-        Some(ne..e)
+        Some((ne..e, e - b))
     }
 
     /// Used by tests / metrics: true when all iterations dispatched.
@@ -105,6 +152,12 @@ impl RangeDeque {
         self.end.store(r.start, SeqCst);
         self.begin.store(r.start, SeqCst);
         self.end.store(r.end, SeqCst);
+    }
+
+    /// Raw `(begin, end)` snapshot for the invariant tests.
+    #[cfg(test)]
+    fn raw(&self) -> (usize, usize) {
+        (self.begin.load(SeqCst), self.end.load(SeqCst))
     }
 }
 
@@ -195,6 +248,107 @@ mod tests {
         for (i, c) in claimed.iter().enumerate() {
             assert_eq!(c.load(SeqCst), 1, "iteration {i} claimed {} times", c.load(SeqCst));
         }
+    }
+
+    #[test]
+    fn overshooting_take_never_publishes_begin_past_end() {
+        // Regression (PR 3): `take` used to store `begin = b + chunk`
+        // even when that overshot `end`. Until the locked slow path
+        // repaired it, a concurrent thief observed `remaining() == 0`
+        // and `steal_half` rolled back spuriously — an "empty"
+        // observation of a deque whose tail (4..10 here) was not yet
+        // claimed by anyone. The probe hook freezes the THE window
+        // mid-take and checks what a thief would see.
+        let q = RangeDeque::new(0..10);
+        assert_eq!(q.take(4), Some(0..4));
+        let r = q.take_impl(100, || {
+            let (b, e) = q.raw();
+            assert!(b <= e, "optimistic claim overshot end: begin={b} > end={e}");
+            // With the clamped claim the in-flight take already owns
+            // the whole tail, so steal-side observations report a
+            // *truthfully* empty deque rather than a corrupted one.
+            assert_eq!(q.remaining(), 0);
+            assert_eq!(q.steal_half(), None);
+        });
+        assert_eq!(r, Some(4..10), "the clamped claim is the returned chunk");
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn drained_take_leaves_indices_untouched() {
+        // The empty case exits before the optimistic store: no
+        // transient scribble on `begin`, no lock traffic.
+        let q = RangeDeque::new(0..4);
+        assert_eq!(q.take(4), Some(0..4));
+        assert_eq!(q.take(5), None);
+        assert_eq!(q.raw(), (4, 4));
+    }
+
+    #[test]
+    fn steal_half_reports_victim_len() {
+        let q = RangeDeque::new(0..10);
+        let (r, vlen) = q.steal_half_with_len().unwrap();
+        assert_eq!(r, 5..10);
+        assert_eq!(vlen, 10);
+        let (r, vlen) = q.steal_half_with_len().unwrap();
+        assert_eq!(r, 2..5);
+        assert_eq!(vlen, 5);
+    }
+
+    #[test]
+    fn oversized_tail_takes_race_thieves_exactly_once() {
+        // Every owner take requests more than the live remainder —
+        // the worst case for the old overshoot — while thieves hammer
+        // `steal_half`. Exactly-once coverage must hold through the
+        // clamped fast path and the conflict slow path, round after
+        // round.
+        use std::sync::atomic::AtomicBool;
+        const K: usize = 8;
+        const ROUNDS: usize = 2_000;
+        let q = Arc::new(RangeDeque::new(0..0));
+        let marks: Arc<Vec<AtomicU64>> = Arc::new((0..K).map(|_| AtomicU64::new(0)).collect());
+        let claimed = Arc::new(AtomicUsize::new(0)); // items claimed this round
+        let stop = Arc::new(AtomicBool::new(false));
+
+        std::thread::scope(|s| {
+            for _ in 0..2 {
+                let (q, marks, claimed, stop) = (q.clone(), marks.clone(), claimed.clone(), stop.clone());
+                s.spawn(move || {
+                    while !stop.load(SeqCst) {
+                        if let Some(r) = q.steal_half() {
+                            for i in r.clone() {
+                                marks[i].fetch_add(1, SeqCst);
+                            }
+                            claimed.fetch_add(r.len(), SeqCst);
+                        } else {
+                            std::hint::spin_loop();
+                        }
+                    }
+                });
+            }
+            // Owner: refill, then drain with always-oversized takes.
+            for _ in 0..ROUNDS {
+                q.reset(0..K);
+                loop {
+                    let rem = q.remaining();
+                    if let Some(r) = q.take(rem.max(1) + 3) {
+                        for i in r.clone() {
+                            marks[i].fetch_add(1, SeqCst);
+                        }
+                        claimed.fetch_add(r.len(), SeqCst);
+                    }
+                    if claimed.load(SeqCst) == K {
+                        break;
+                    }
+                    std::hint::spin_loop();
+                }
+                for (i, m) in marks.iter().enumerate() {
+                    assert_eq!(m.swap(0, SeqCst), 1, "iteration {i} not claimed exactly once");
+                }
+                claimed.store(0, SeqCst);
+            }
+            stop.store(true, SeqCst);
+        });
     }
 
     #[test]

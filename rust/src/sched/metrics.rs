@@ -15,6 +15,13 @@ pub struct ThreadCounters {
     pub iters: AtomicU64,
     /// Successful steals performed by this thread.
     pub steals_ok: AtomicU64,
+    /// Successful steals from a victim on the thief's own NUMA node.
+    /// Invariant: `steals_local + steals_remote == steals_ok` — every
+    /// successful steal is classified exactly once (unknown locality
+    /// counts as remote).
+    pub steals_local: AtomicU64,
+    /// Successful steals from another (or an unknown) node.
+    pub steals_remote: AtomicU64,
     /// Failed steal attempts (empty victim or THE rollback).
     pub steals_failed: AtomicU64,
     /// Steal-backoff escalations: failed-steal streaks that exhausted
@@ -55,11 +62,25 @@ impl MetricsSink {
         self.per_thread[tid].backoffs.fetch_add(1, Relaxed);
     }
 
+    /// Record a steal attempt of unknown locality (classified as
+    /// remote, preserving `local + remote == ok`).
     #[inline]
     pub fn add_steal(&self, tid: usize, ok: bool) {
+        self.add_steal_located(tid, ok, false);
+    }
+
+    /// Record a steal attempt with victim locality: `local` = the
+    /// victim ran on the thief's own NUMA node.
+    #[inline]
+    pub fn add_steal_located(&self, tid: usize, ok: bool, local: bool) {
         let c = &self.per_thread[tid];
         if ok {
             c.steals_ok.fetch_add(1, Relaxed);
+            if local {
+                c.steals_local.fetch_add(1, Relaxed);
+            } else {
+                c.steals_remote.fetch_add(1, Relaxed);
+            }
         } else {
             c.steals_failed.fetch_add(1, Relaxed);
         }
@@ -73,6 +94,8 @@ impl MetricsSink {
             total_chunks: self.per_thread.iter().map(|c| c.chunks.load(Relaxed)).sum(),
             total_iters: iters.iter().sum(),
             steals_ok: self.per_thread.iter().map(|c| c.steals_ok.load(Relaxed)).sum(),
+            steals_local: self.per_thread.iter().map(|c| c.steals_local.load(Relaxed)).sum(),
+            steals_remote: self.per_thread.iter().map(|c| c.steals_remote.load(Relaxed)).sum(),
             steals_failed: self.per_thread.iter().map(|c| c.steals_failed.load(Relaxed)).sum(),
             backoffs: self.per_thread.iter().map(|c| c.backoffs.load(Relaxed)).sum(),
             iters_per_thread: iters,
@@ -88,6 +111,10 @@ pub struct RunMetrics {
     pub total_chunks: u64,
     pub total_iters: u64,
     pub steals_ok: u64,
+    /// Successful same-node steals (`steals_local + steals_remote ==
+    /// steals_ok`; unknown locality counts as remote).
+    pub steals_local: u64,
+    pub steals_remote: u64,
     pub steals_failed: u64,
     /// Spin→yield backoff transitions across all threads.
     pub backoffs: u64,
@@ -108,6 +135,12 @@ impl RunMetrics {
     /// Mean iterations per dispatched chunk.
     pub fn mean_chunk(&self) -> f64 {
         if self.total_chunks == 0 { 0.0 } else { self.total_iters as f64 / self.total_chunks as f64 }
+    }
+
+    /// Fraction of successful steals that stayed on the thief's NUMA
+    /// node (0.0 when the run stole nothing).
+    pub fn local_steal_fraction(&self) -> f64 {
+        if self.steals_ok == 0 { 0.0 } else { self.steals_local as f64 / self.steals_ok as f64 }
     }
 }
 
@@ -132,6 +165,26 @@ mod tests {
         assert_eq!(r.backoffs, 1);
         assert_eq!(r.iters_per_thread, vec![10, 30]);
         assert!((r.elapsed_s - 0.005).abs() < 1e-9);
+        // Unknown locality lands in the remote bucket.
+        assert_eq!((r.steals_local, r.steals_remote), (0, 1));
+    }
+
+    #[test]
+    fn steal_locality_sums_to_total() {
+        let m = MetricsSink::new(3);
+        m.add_steal_located(0, true, true);
+        m.add_steal_located(1, true, false);
+        m.add_steal_located(1, true, true);
+        m.add_steal_located(2, false, true); // failures are not classified
+        m.add_steal(2, true);
+        let r = m.collect(Duration::ZERO);
+        assert_eq!(r.steals_ok, 4);
+        assert_eq!(r.steals_local, 2);
+        assert_eq!(r.steals_remote, 2);
+        assert_eq!(r.steals_local + r.steals_remote, r.steals_ok);
+        assert_eq!(r.steals_failed, 1);
+        assert!((r.local_steal_fraction() - 0.5).abs() < 1e-12);
+        assert_eq!(RunMetrics::default().local_steal_fraction(), 0.0);
     }
 
     #[test]

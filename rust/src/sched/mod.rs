@@ -42,6 +42,12 @@
 //! measured by `benches/bench_overhead.rs` (`BENCH_forkjoin.json`),
 //! and blocking vs async submission by the same bench's
 //! `BENCH_async.json`.
+//!
+//! [`ForOpts::victim`] picks the steal-victim policy of the
+//! work-stealing engines: uniform random (paper §3.3) or two-tier
+//! topology-biased selection over the core→NUMA-node map discovered
+//! by [`topology::Topology::detect`] (`BENCH_numa.json` measures the
+//! local-steal fraction and wall-time effect per engine).
 
 pub mod binlpt;
 pub mod central;
@@ -51,10 +57,12 @@ pub mod policy;
 pub mod pool;
 pub mod related;
 pub mod runtime;
+pub mod topology;
 pub mod ws;
 
 pub use metrics::{MetricsSink, RunMetrics};
 pub use runtime::{Executor, LoopHandle, Runtime, SpawnExec};
+pub use topology::{Topology, VictimPolicy};
 pub use ws::{IchParams, StealMerge};
 
 use std::ops::Range;
@@ -201,11 +209,25 @@ pub struct ForOpts<'a> {
     pub weights: Option<&'a [f64]>,
     /// Worker-thread provider (persistent pool by default).
     pub mode: ExecMode,
+    /// Steal-victim selection for the work-stealing engines
+    /// (`stealing`, `ich`): uniform random (the paper's rule) or
+    /// two-tier topology-biased. The default comes from
+    /// [`VictimPolicy::process_default`] (CLI `--steal` / `ICH_STEAL`
+    /// env, else `Topo`, which degrades to exact uniform selection on
+    /// single-node topologies).
+    pub victim: VictimPolicy,
 }
 
 impl Default for ForOpts<'_> {
     fn default() -> Self {
-        ForOpts { threads: 1, pin: true, seed: 0x1C4, weights: None, mode: ExecMode::Pool }
+        ForOpts {
+            threads: 1,
+            pin: true,
+            seed: 0x1C4,
+            weights: None,
+            mode: ExecMode::Pool,
+            victim: VictimPolicy::process_default(),
+        }
     }
 }
 
@@ -226,6 +248,11 @@ impl<'a> ForOpts<'a> {
 
     pub fn with_mode(mut self, mode: ExecMode) -> Self {
         self.mode = mode;
+        self
+    }
+
+    pub fn with_victim(mut self, victim: VictimPolicy) -> Self {
+        self.victim = victim;
         self
     }
 }
@@ -254,6 +281,7 @@ fn run_policy(
     p: usize,
     weights: Option<&[f64]>,
     seed: u64,
+    victim: VictimPolicy,
     exec: &dyn Executor,
     body: &(dyn Fn(Range<usize>) + Sync),
     sink: &MetricsSink,
@@ -279,8 +307,8 @@ fn run_policy(
             };
             binlpt::run_binlpt(w, p, exec, *max_chunks, body, sink)
         }
-        Policy::Stealing { chunk } => ws::run_stealing(n, p, exec, *chunk, seed, body, sink),
-        Policy::Ich(prm) => ws::run_ich(n, p, exec, *prm, seed, body, sink),
+        Policy::Stealing { chunk } => ws::run_stealing(n, p, exec, *chunk, seed, victim, body, sink),
+        Policy::Ich(prm) => ws::run_ich(n, p, exec, *prm, seed, victim, body, sink),
         Policy::Awf => related::run_awf(n, p, exec, body, sink),
         Policy::Hss => related::run_hss(n, p, exec, weights, body, sink),
     }
@@ -306,7 +334,7 @@ pub fn parallel_for(n: usize, policy: &Policy, opts: &ForOpts, body: &(dyn Fn(Ra
         }
     };
     let start = std::time::Instant::now();
-    run_policy(n, policy, p, opts.weights, opts.seed, exec, body, &sink);
+    run_policy(n, policy, p, opts.weights, opts.seed, opts.victim, exec, body, &sink);
     sink.collect(start.elapsed())
 }
 
@@ -369,11 +397,12 @@ pub fn parallel_for_async_on(
     let policy = policy.clone();
     let weights: Option<Vec<f64>> = opts.weights.map(|w| w.to_vec());
     let seed = opts.seed;
+    let victim = opts.victim;
     let sink2 = Arc::clone(&sink);
     let start = std::time::Instant::now();
     let driver: Box<dyn FnOnce(&dyn Executor) + Send> = Box::new(move |exec: &dyn Executor| {
         let b = |r: Range<usize>| body(r);
-        run_policy(n, &policy, p, weights.as_deref(), seed, exec, &b, &sink2);
+        run_policy(n, &policy, p, weights.as_deref(), seed, victim, exec, &b, &sink2);
     });
     let handle = match opts.mode {
         ExecMode::Pool => rt.submit_driver(p, driver),
@@ -435,7 +464,7 @@ mod tests {
             for policy in &policies {
                 let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
                 let w: Vec<f64> = (0..n).map(|i| 1.0 + (i % 7) as f64).collect();
-                let opts = ForOpts { threads: 4, pin: false, seed: 1, weights: Some(&w), mode };
+                let opts = ForOpts { threads: 4, pin: false, seed: 1, weights: Some(&w), mode, ..Default::default() };
                 let m = parallel_for(n, policy, &opts, &|r| {
                     for i in r {
                         hits[i].fetch_add(1, SeqCst);

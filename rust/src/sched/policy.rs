@@ -95,13 +95,27 @@ pub fn steal_merge(thief: IchState, victim: IchState) -> IchState {
 }
 
 /// Listing 1 lines 20–22: if the stolen half is no bigger than the
-/// merged chunk size would be, clamp the divisor so the whole stolen
-/// range is one chunk.
-pub fn clamp_chunk_to_stolen(stolen: usize, remaining_after: usize, d: f64) -> f64 {
-    let chunk = ich_chunk(remaining_after.max(1), d);
+/// chunk the post-merge divisor implies, clamp the divisor so the
+/// whole stolen range is dispatched as a single chunk.
+///
+/// `victim_len` is the victim's queue length at steal time — the
+/// queue the merged divisor was calibrated against — so the clamp
+/// fires whenever `stolen = ⌈victim_len/2⌉ ≤ victim_len/d`, i.e. for
+/// any merged `d ≲ 2` (Low-classified threads halve `d` toward 1, so
+/// this is a live path after steals from slow victims). The seed
+/// compared against the thief's *re-homed* queue instead — asking
+/// whether `stolen ≤ stolen/d`, impossible for `d > 1` given
+/// `D_MIN = 1` — which made the clamp dead code.
+///
+/// On fire the divisor collapses to [`D_MIN`], so the thief's next
+/// dispatch on its re-homed queue of `stolen` iterations is
+/// `ich_chunk(stolen, D_MIN) == stolen`: exactly Listing 1's
+/// `chunk ← stolen`. (`d` stays adaptive state — the very next
+/// classification pass adjusts it again.)
+pub fn clamp_chunk_to_stolen(stolen: usize, victim_len: usize, d: f64) -> f64 {
+    let chunk = ich_chunk(victim_len.max(1), d);
     if stolen <= chunk {
-        // chunk becomes exactly the stolen half
-        1.0_f64.max(remaining_after.max(1) as f64 / stolen.max(1) as f64)
+        D_MIN
     } else {
         d
     }
@@ -340,11 +354,31 @@ mod tests {
     }
 
     #[test]
-    fn clamp_chunk_to_stolen_behaviour() {
-        // stolen half small relative to chunk -> d grows so chunk == stolen
-        let d = clamp_chunk_to_stolen(5, 5, 1.0);
-        assert_eq!(ich_chunk(5, d), 5);
-        // stolen large -> keep d
-        assert_eq!(clamp_chunk_to_stolen(50, 50, 4.0), 4.0);
+    fn clamp_chunk_to_stolen_listing1() {
+        // Victim held 100 iterations, dispatching chunks of 100/d.
+        // Merged d = 2 → chunk 50; the stolen half (50) fits in one
+        // chunk, so the divisor collapses and the thief's next
+        // dispatch covers the whole re-homed range.
+        let d = clamp_chunk_to_stolen(50, 100, 2.0);
+        assert_eq!(d, D_MIN);
+        assert_eq!(ich_chunk(50, d), 50, "whole stolen range in one chunk");
+        // Merged d = 4 → chunk 25 < 50 stolen → divisor unchanged.
+        assert_eq!(clamp_chunk_to_stolen(50, 100, 4.0), 4.0);
+        // Single-iteration steals always one-shot.
+        assert_eq!(clamp_chunk_to_stolen(1, 1, 8.0), D_MIN);
+    }
+
+    #[test]
+    fn clamp_reachable_for_low_divisors() {
+        // Regression (PR 3): the seed compared `stolen ≤ stolen/d`,
+        // which cannot hold for d > 1 (D_MIN = 1) — the clamp was
+        // dead. Against the victim's pre-steal queue it fires for any
+        // merged d ≤ 2 and stays off above.
+        for d in [1.0, 1.5, 2.0] {
+            assert_eq!(clamp_chunk_to_stolen(50, 100, d), D_MIN, "must fire for d={d}");
+        }
+        for d in [2.5, 4.0, 28.0] {
+            assert_eq!(clamp_chunk_to_stolen(50, 100, d), d, "must not fire for d={d}");
+        }
     }
 }

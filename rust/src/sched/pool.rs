@@ -13,7 +13,24 @@
 //! uses by default — see that module for the epoch fork-join protocol
 //! that amortizes this per-call spawn cost away.
 
+use std::cell::Cell;
 use std::sync::OnceLock;
+
+thread_local! {
+    /// Core this thread was last *successfully* pinned to (`None` =
+    /// never pinned, or the pin syscall failed — e.g. the target core
+    /// sits outside a `taskset` affinity mask). The topology layer
+    /// ([`super::topology::current_node`]) maps it to a NUMA node for
+    /// steal-victim locality, so correctness of the map depends on
+    /// recording only pins that actually took effect.
+    static PINNED_CORE: Cell<Option<usize>> = Cell::new(None);
+}
+
+/// The core the calling thread is pinned to, if `pin_to_cpu` ever
+/// succeeded on this thread.
+pub fn pinned_core() -> Option<usize> {
+    PINNED_CORE.with(|c| c.get())
+}
 
 #[cfg(target_os = "linux")]
 mod ffi {
@@ -64,8 +81,9 @@ pub fn pin_to_cpu(cpu: usize) {
     }
     mask[word] = 1u64 << bit;
     // SAFETY: a properly sized, initialized affinity mask for self (pid 0).
-    unsafe {
-        ffi::sched_setaffinity(0, std::mem::size_of_val(&mask), mask.as_ptr());
+    let r = unsafe { ffi::sched_setaffinity(0, std::mem::size_of_val(&mask), mask.as_ptr()) };
+    if r == 0 {
+        PINNED_CORE.with(|c| c.set(Some(cpu)));
     }
 }
 
@@ -161,6 +179,21 @@ mod tests {
     fn pinning_does_not_crash() {
         scoped_run(2, true, |_tid| {
             std::hint::black_box(1 + 1);
+        });
+    }
+
+    #[test]
+    fn pinned_core_tracks_successful_pins() {
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                assert_eq!(pinned_core(), None, "fresh thread starts unpinned");
+                pin_to_cpu(0);
+                // Only assert when the pin observably took effect (it
+                // is best-effort under restricted affinity masks).
+                if current_affinity().is_some_and(|m| m[0] & 1 == 1) {
+                    assert_eq!(pinned_core(), Some(0), "successful pin must be recorded");
+                }
+            });
         });
     }
 

@@ -101,7 +101,8 @@ use std::sync::atomic::{AtomicBool, AtomicU8, AtomicUsize};
 use std::sync::{Arc, Mutex, OnceLock};
 use std::thread::{self, Thread};
 
-use super::pool::{num_cpus, pin_to_cpu, scoped_run};
+use super::pool::{num_cpus, pin_to_cpu, pinned_core, scoped_run};
+use super::topology::Topology;
 
 /// How a scheduling engine obtains its `p` worker threads. Engines
 /// call `run` once per parallel region; the executor guarantees
@@ -480,6 +481,12 @@ fn worker_loop(shared: Arc<PoolShared>, idx: usize, cpu: Option<usize>) {
 pub struct Runtime {
     shared: Arc<PoolShared>,
     workers: Vec<Worker>,
+    /// Core worker `i` was asked to pin to at spawn (`None` =
+    /// unpinned pool). The pin itself is best-effort — under a
+    /// restricted affinity mask a worker may end up elsewhere, in
+    /// which case its own `pinned_core` thread-local (what the
+    /// engines consult) stays `None`.
+    cores: Vec<Option<usize>>,
 }
 
 impl Runtime {
@@ -502,9 +509,11 @@ impl Runtime {
             parked: (0..workers).map(|_| AtomicBool::new(false)).collect(),
         });
         let mut ws = Vec::with_capacity(workers);
+        let mut cores = Vec::with_capacity(workers);
         for i in 0..workers {
             let s2 = Arc::clone(&shared);
             let cpu = if do_pin { Some((i + 1) % ncpus) } else { None };
+            cores.push(cpu);
             let join = thread::Builder::new()
                 .name(format!("ich-worker-{i}"))
                 .spawn(move || worker_loop(s2, i, cpu))
@@ -512,7 +521,7 @@ impl Runtime {
             let thread = join.thread().clone();
             ws.push(Worker { thread, join: Some(join) });
         }
-        Runtime { shared, workers: ws }
+        Runtime { shared, workers: ws, cores }
     }
 
     /// The process-wide pool: `num_cpus − 1` workers (the submitter is
@@ -525,6 +534,34 @@ impl Runtime {
     /// Pool size (excluding the submitting thread).
     pub fn workers(&self) -> usize {
         self.workers.len()
+    }
+
+    /// Spawn-time core pinning of each pool worker (`None` =
+    /// unpinned).
+    pub fn worker_cores(&self) -> &[Option<usize>] {
+        &self.cores
+    }
+
+    /// NUMA node of pool worker `i` under the detected topology
+    /// (`None` when the worker is unpinned).
+    pub fn worker_node(&self, i: usize) -> Option<usize> {
+        self.cores.get(i).copied().flatten().map(|c| Topology::detect().node_of(c))
+    }
+
+    /// Advisory tid → node map for a blocking width-`p` run submitted
+    /// from the *calling* thread: tid 0 is the submitter (its pinned
+    /// node, if any), tids `1..p` map onto pool workers in spawn
+    /// order. Engines do not rely on this — epoch claims land on
+    /// workers dynamically, so each worker publishes its own node at
+    /// entry (`sched::ws`) — but it gives embedders and benches a
+    /// faithful picture of where a run's threads live.
+    pub fn tid_nodes(&self, p: usize) -> Vec<Option<usize>> {
+        let mut map = Vec::with_capacity(p);
+        map.push(pinned_core().map(|c| Topology::detect().node_of(c)));
+        for i in 0..p.saturating_sub(1) {
+            map.push(self.worker_node(i));
+        }
+        map
     }
 
     /// An [`Executor`] view of this pool.
@@ -1001,6 +1038,26 @@ mod tests {
             });
         });
         assert_eq!(count.load(SeqCst), 4);
+    }
+
+    #[test]
+    fn worker_core_and_node_maps() {
+        // Unpinned pool: no cores, no nodes, but a full-length map.
+        let rt = Runtime::with_pinning(2, false);
+        assert_eq!(rt.worker_cores(), &[None, None]);
+        assert_eq!(rt.worker_node(0), None);
+        assert_eq!(rt.worker_node(99), None, "out-of-range worker is None, not a panic");
+        assert_eq!(rt.tid_nodes(3).len(), 3);
+        drop(rt);
+        // Pinned pool (only when the host has a spare core).
+        let rt = Runtime::new(1);
+        if num_cpus() > 1 {
+            let c = 1 % num_cpus();
+            assert_eq!(rt.worker_cores(), &[Some(c)]);
+            assert_eq!(rt.worker_node(0), Some(Topology::detect().node_of(c)));
+        } else {
+            assert_eq!(rt.worker_cores(), &[None]);
+        }
     }
 
     #[test]

@@ -1,0 +1,529 @@
+//! Machine topology: the core → NUMA-node map behind topology-aware
+//! steal-victim selection (ROADMAP's NUMA item; paper §6.2 notes the
+//! cross-socket steal penalty the sim has always modeled).
+//!
+//! # Discovery order
+//!
+//! [`Topology::detect`] resolves the process-wide topology once, in
+//! this order:
+//!
+//! 1. **`ICH_TOPOLOGY` env override** — either `"NxM"` (N nodes × M
+//!    cores per node, block layout: cores `[i*M, (i+1)*M)` live on
+//!    node `i`, matching `OMP_PLACES=cores` on the paper's testbed)
+//!    or an explicit per-core node list `"0,0,1,1"`. This is how CI
+//!    exercises multi-node code paths on single-socket runners and
+//!    how a container can opt out of sysfs.
+//! 2. **Linux sysfs** — `/sys/devices/system/node/node*/cpulist`
+//!    (authoritative NUMA map), falling back to
+//!    `/sys/devices/system/cpu/cpu*/topology/physical_package_id`
+//!    (socket ids) when the node directory is absent.
+//! 3. **Single-node fallback** — every core on node 0. Containers
+//!    without sysfs, macOS, and malformed overrides all land here;
+//!    a single-node topology disables the steal bias entirely, so
+//!    those hosts keep the exact uniform victim selection the paper
+//!    describes (§3.3) with no new overhead path.
+//!
+//! # Who consumes it
+//!
+//! - `sched::ws` builds a [`VictimSelector`] per thief when the run's
+//!   [`VictimPolicy`] is `Topo` *and* the detected topology has more
+//!   than one node; workers learn their own node from the pinned-core
+//!   thread-local ([`crate::sched::pool::pinned_core`]).
+//! - `sched::runtime::Runtime` maps its spawn-time worker pinning
+//!   through [`Topology::node_of`] to expose worker → node and
+//!   tid → node views to embedders and benches.
+//! - `sim::policies` mirrors the same two-tier selection over the
+//!   virtual machine's socket map, so the simulator and the real
+//!   runtime cannot drift on victim choice.
+
+use std::sync::OnceLock;
+
+use super::pool::{num_cpus, pinned_core};
+use crate::util::rng::Rng;
+
+/// A core → NUMA-node map.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Topology {
+    /// `node_of_core[c]` = node of core `c`.
+    node_of_core: Vec<usize>,
+    /// Node count (max node id + 1).
+    nodes: usize,
+}
+
+impl Topology {
+    fn from_map(node_of_core: Vec<usize>) -> Topology {
+        debug_assert!(!node_of_core.is_empty());
+        let nodes = node_of_core.iter().copied().max().unwrap_or(0) + 1;
+        Topology { node_of_core, nodes }
+    }
+
+    /// Every core on node 0 (the container / macOS fallback).
+    pub fn single_node(cores: usize) -> Topology {
+        Topology { node_of_core: vec![0; cores.max(1)], nodes: 1 }
+    }
+
+    /// Synthetic block topology: `nodes` × `cores_per_node`, cores
+    /// `[i*cpn, (i+1)*cpn)` on node `i`.
+    pub fn synthetic(nodes: usize, cores_per_node: usize) -> Topology {
+        let (nodes, cpn) = (nodes.max(1), cores_per_node.max(1));
+        let map = (0..nodes * cpn).map(|c| c / cpn).collect();
+        Topology::from_map(map)
+    }
+
+    /// Parse an `ICH_TOPOLOGY` spec: `"2x14"` or `"0,0,1,1"`.
+    /// Returns `None` on anything malformed (the caller falls back to
+    /// the next discovery stage, never panics).
+    pub fn parse_spec(spec: &str) -> Option<Topology> {
+        let spec = spec.trim();
+        if let Some((n, m)) = spec.split_once(['x', 'X']) {
+            let nodes: usize = n.trim().parse().ok()?;
+            let cpn: usize = m.trim().parse().ok()?;
+            if nodes == 0 || cpn == 0 {
+                return None;
+            }
+            return Some(Topology::synthetic(nodes, cpn));
+        }
+        let map: Option<Vec<usize>> = spec.split(',').map(|t| t.trim().parse().ok()).collect();
+        let map = map?;
+        if map.is_empty() {
+            return None;
+        }
+        Some(Topology::from_map(map))
+    }
+
+    /// Read the topology from Linux sysfs; `None` when unavailable.
+    #[cfg(target_os = "linux")]
+    fn from_sysfs() -> Option<Topology> {
+        Topology::from_node_dirs("/sys/devices/system/node")
+            .or_else(|| Topology::from_package_ids("/sys/devices/system/cpu"))
+    }
+
+    #[cfg(not(target_os = "linux"))]
+    fn from_sysfs() -> Option<Topology> {
+        None
+    }
+
+    /// `/sys/devices/system/node/node<N>/cpulist` (one file per NUMA
+    /// node, e.g. `"0-13,28-41"`).
+    fn from_node_dirs(root: &str) -> Option<Topology> {
+        let mut map: Vec<usize> = Vec::new();
+        let mut nodes_seen = 0usize;
+        for entry in std::fs::read_dir(root).ok()? {
+            let entry = entry.ok()?;
+            let name = entry.file_name();
+            let name = name.to_str()?;
+            let Some(id) = name.strip_prefix("node").and_then(|s| s.parse::<usize>().ok()) else {
+                continue;
+            };
+            let list = std::fs::read_to_string(entry.path().join("cpulist")).ok()?;
+            for core in parse_cpulist(&list)? {
+                if core >= map.len() {
+                    map.resize(core + 1, usize::MAX);
+                }
+                map[core] = id;
+            }
+            nodes_seen += 1;
+        }
+        // Require a complete map: every core assigned, ≥ 1 node.
+        if nodes_seen == 0 || map.is_empty() || map.contains(&usize::MAX) {
+            return None;
+        }
+        Some(Topology::from_map(map))
+    }
+
+    /// `/sys/devices/system/cpu/cpu<N>/topology/physical_package_id`
+    /// (socket ids as a NUMA stand-in).
+    fn from_package_ids(root: &str) -> Option<Topology> {
+        let mut map: Vec<usize> = Vec::new();
+        for core in 0.. {
+            let path = format!("{root}/cpu{core}/topology/physical_package_id");
+            let Ok(s) = std::fs::read_to_string(&path) else { break };
+            map.push(s.trim().parse().ok()?);
+        }
+        if map.is_empty() {
+            return None;
+        }
+        Some(Topology::from_map(map))
+    }
+
+    /// The process-wide topology, detected once (see the module docs
+    /// for the discovery order).
+    pub fn detect() -> &'static Topology {
+        static TOPO: OnceLock<Topology> = OnceLock::new();
+        TOPO.get_or_init(|| {
+            if let Ok(spec) = std::env::var("ICH_TOPOLOGY") {
+                if let Some(t) = Topology::parse_spec(&spec) {
+                    return t;
+                }
+            }
+            Topology::from_sysfs().unwrap_or_else(|| Topology::single_node(num_cpus()))
+        })
+    }
+
+    /// NUMA node of `core`. Cores beyond the map (e.g. an `NxM`
+    /// override narrower than the machine) wrap around, keeping the
+    /// function total.
+    #[inline]
+    pub fn node_of(&self, core: usize) -> usize {
+        self.node_of_core[core % self.node_of_core.len()]
+    }
+
+    /// Number of NUMA nodes.
+    #[inline]
+    pub fn nodes(&self) -> usize {
+        self.nodes
+    }
+
+    /// Number of mapped cores.
+    pub fn cores(&self) -> usize {
+        self.node_of_core.len()
+    }
+}
+
+/// Parse a sysfs cpulist like `"0-13,28-41"` into core ids.
+fn parse_cpulist(s: &str) -> Option<Vec<usize>> {
+    let mut out = Vec::new();
+    for part in s.trim().split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        match part.split_once('-') {
+            Some((a, b)) => {
+                let (a, b) = (a.trim().parse::<usize>().ok()?, b.trim().parse::<usize>().ok()?);
+                if a > b {
+                    return None;
+                }
+                out.extend(a..=b);
+            }
+            None => out.push(part.parse().ok()?),
+        }
+    }
+    Some(out)
+}
+
+/// NUMA node of the calling thread, via its pinned core (`None` when
+/// the thread was never successfully pinned — e.g. unpinned scoped
+/// spawns, oversubscribed hosts, non-Linux).
+pub fn current_node() -> Option<usize> {
+    pinned_core().map(|c| Topology::detect().node_of(c))
+}
+
+/// How work-stealing engines choose a victim (`ForOpts::victim` /
+/// `--steal` / `ICH_STEAL`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum VictimPolicy {
+    /// Uniform random victim (the paper's §3.3 rule).
+    Uniform,
+    /// Two-tier topology bias: prefer same-node victims, fall back
+    /// after repeated local failures. On a single-node topology this
+    /// is *behaviorally identical* to `Uniform` — the engines gate the
+    /// bias on `Topology::detect().nodes() > 1` and take the exact
+    /// uniform code path otherwise.
+    #[default]
+    Topo,
+}
+
+impl VictimPolicy {
+    /// Parse a CLI/env spelling.
+    pub fn parse(s: &str) -> Option<VictimPolicy> {
+        match s.trim() {
+            "uniform" | "random" => Some(VictimPolicy::Uniform),
+            "topo" | "numa" => Some(VictimPolicy::Topo),
+            _ => None,
+        }
+    }
+
+    /// Process-wide default used by `ForOpts::default()`: the value
+    /// installed by [`VictimPolicy::set_process_default`] (the CLI's
+    /// `--steal` flag), else the `ICH_STEAL` env var, else `Topo`.
+    pub fn process_default() -> VictimPolicy {
+        *process_default_cell().get_or_init(|| {
+            std::env::var("ICH_STEAL").ok().and_then(|s| VictimPolicy::parse(&s)).unwrap_or_default()
+        })
+    }
+
+    /// Install the process-wide default (first caller wins, mirroring
+    /// `OnceLock`; returns false if the default was already resolved).
+    pub fn set_process_default(v: VictimPolicy) -> bool {
+        process_default_cell().set(v).is_ok()
+    }
+}
+
+fn process_default_cell() -> &'static OnceLock<VictimPolicy> {
+    static DEFAULT: OnceLock<VictimPolicy> = OnceLock::new();
+    &DEFAULT
+}
+
+/// While same-node candidates exist (and the thief's node is known),
+/// a biased pick goes local with probability `LOCAL_BIAS_NUM /
+/// LOCAL_BIAS_DEN` — the complement keeps every remote victim
+/// reachable on every attempt, so no node can be starved.
+pub const LOCAL_BIAS_NUM: usize = 7;
+pub const LOCAL_BIAS_DEN: usize = 8;
+
+/// Consecutive failed *local* steals after which the thief widens to
+/// fully uniform selection until its next success: when the local
+/// node drains, cross-node stealing must not wait on the 1/8 tail.
+pub const REMOTE_FALLBACK_FAILS: u32 = 2;
+
+/// The paper's uniform victim draw (§3.3): one `rng.below(p-1)` call,
+/// skipping the thief itself. This is THE uniform draw — the engines
+/// (`sched::ws`), the simulator (`sim::policies`), and
+/// [`VictimSelector::pick`]'s degenerate cases all call it, so the
+/// "`Topo` is behaviorally identical to `Uniform` on one node"
+/// guarantee can never drift out from under a single edited copy.
+#[inline]
+pub fn uniform_victim(tid: usize, p: usize, rng: &mut Rng) -> usize {
+    debug_assert!(p >= 2, "need a victim to pick from");
+    let mut v = rng.below(p - 1);
+    if v >= tid {
+        v += 1;
+    }
+    v
+}
+
+/// Two-tier steal-victim selection state (one per thief). Shared by
+/// the real engines (`sched::ws`) and the simulator (`sim::policies`)
+/// so the two runtimes run the same victim logic — the same way
+/// `sched::policy` shares the chunk math.
+#[derive(Clone, Debug, Default)]
+pub struct VictimSelector {
+    /// Consecutive failed same-node steals since the last success.
+    local_fails: u32,
+}
+
+impl VictimSelector {
+    pub fn new() -> VictimSelector {
+        VictimSelector::default()
+    }
+
+    /// Pick a victim in `0..p`, never `tid`. `node_of(t)` reports the
+    /// node tid `t` currently runs on (`None` = unknown). Returns the
+    /// victim and whether it is on the thief's own node.
+    ///
+    /// Degenerate cases — unknown own node, all candidates local, no
+    /// candidate local, or the remote fallback being active — use the
+    /// exact uniform draw (one `rng.below(p-1)`), so a single-node
+    /// topology consumes the identical RNG stream as `Uniform` mode.
+    pub fn pick<F: Fn(usize) -> Option<usize>>(
+        &self,
+        tid: usize,
+        p: usize,
+        my_node: Option<usize>,
+        node_of: F,
+        rng: &mut Rng,
+    ) -> (usize, bool) {
+        let Some(me) = my_node else {
+            return (uniform_victim(tid, p, rng), false);
+        };
+        let is_local = |t: usize| node_of(t) == Some(me);
+        let locals = (0..p).filter(|&t| t != tid && is_local(t)).count();
+        let total = p - 1;
+        if locals == 0 || locals == total || self.local_fails >= REMOTE_FALLBACK_FAILS {
+            let v = uniform_victim(tid, p, rng);
+            return (v, is_local(v));
+        }
+        if rng.below(LOCAL_BIAS_DEN) < LOCAL_BIAS_NUM {
+            // Uniform among same-node victims.
+            let mut k = rng.below(locals);
+            for t in (0..p).filter(|&t| t != tid && is_local(t)) {
+                if k == 0 {
+                    return (t, true);
+                }
+                k -= 1;
+            }
+        } else {
+            // Uniform among remote victims (starvation freedom).
+            let mut k = rng.below(total - locals);
+            for t in (0..p).filter(|&t| t != tid && !is_local(t)) {
+                if k == 0 {
+                    return (t, false);
+                }
+                k -= 1;
+            }
+        }
+        unreachable!("counted candidate must exist")
+    }
+
+    /// Report the outcome of the steal attempt on the picked victim.
+    /// Successes re-arm the local bias; failed local steals count
+    /// toward [`REMOTE_FALLBACK_FAILS`]; failed remote steals leave
+    /// the counter alone (the fallback is already uniform).
+    pub fn record(&mut self, ok: bool, was_local: bool) {
+        if ok {
+            self.local_fails = 0;
+        } else if was_local {
+            self.local_fails = self.local_fails.saturating_add(1);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_nxm_spec() {
+        let t = Topology::parse_spec("2x14").unwrap();
+        assert_eq!(t.nodes(), 2);
+        assert_eq!(t.cores(), 28);
+        assert_eq!(t.node_of(0), 0);
+        assert_eq!(t.node_of(13), 0);
+        assert_eq!(t.node_of(14), 1);
+        assert_eq!(t.node_of(27), 1);
+        // Cores beyond the map wrap, keeping node_of total.
+        assert_eq!(t.node_of(28), 0);
+    }
+
+    #[test]
+    fn parse_list_spec() {
+        let t = Topology::parse_spec("0, 0, 1, 1").unwrap();
+        assert_eq!(t.nodes(), 2);
+        assert_eq!(t.cores(), 4);
+        assert_eq!(t.node_of(2), 1);
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        for bad in ["", "x", "0x4", "2x0", "2x", "a,b", "1,2,"] {
+            assert!(Topology::parse_spec(bad).is_none(), "spec {bad:?} must be rejected");
+        }
+    }
+
+    #[test]
+    fn single_node_and_synthetic() {
+        let t = Topology::single_node(8);
+        assert_eq!(t.nodes(), 1);
+        assert!((0..8).all(|c| t.node_of(c) == 0));
+        let t = Topology::synthetic(4, 2);
+        assert_eq!(t.nodes(), 4);
+        assert_eq!(t.node_of(7), 3);
+    }
+
+    #[test]
+    fn cpulist_parsing() {
+        assert_eq!(parse_cpulist("0-3").unwrap(), vec![0, 1, 2, 3]);
+        assert_eq!(parse_cpulist("0-1,4,6-7\n").unwrap(), vec![0, 1, 4, 6, 7]);
+        assert_eq!(parse_cpulist("5").unwrap(), vec![5]);
+        assert!(parse_cpulist("3-1").is_none());
+        assert!(parse_cpulist("a-b").is_none());
+    }
+
+    #[test]
+    fn detect_is_cached_and_sane() {
+        let a = Topology::detect();
+        let b = Topology::detect();
+        assert!(std::ptr::eq(a, b));
+        assert!(a.nodes() >= 1);
+        assert!(a.cores() >= 1);
+    }
+
+    #[test]
+    fn victim_policy_parse() {
+        assert_eq!(VictimPolicy::parse("uniform"), Some(VictimPolicy::Uniform));
+        assert_eq!(VictimPolicy::parse("topo"), Some(VictimPolicy::Topo));
+        assert_eq!(VictimPolicy::parse("numa"), Some(VictimPolicy::Topo));
+        assert_eq!(VictimPolicy::parse("nonsense"), None);
+    }
+
+    #[test]
+    fn selector_never_picks_self() {
+        let topo = Topology::synthetic(2, 2);
+        let mut rng = Rng::new(7);
+        for p in [2usize, 3, 4, 7] {
+            for tid in 0..p {
+                let sel = VictimSelector::new();
+                for _ in 0..500 {
+                    let (v, _) = sel.pick(tid, p, Some(topo.node_of(tid)), |t| Some(topo.node_of(t)), &mut rng);
+                    assert_ne!(v, tid, "p={p} tid={tid}");
+                    assert!(v < p);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn single_node_pick_matches_uniform_stream() {
+        // On a 1-node map the biased selector must consume the exact
+        // same RNG stream as the paper's uniform draw — this is the
+        // "behaviorally identical on single-node hosts" guarantee.
+        let p = 6;
+        let (mut r1, mut r2) = (Rng::new(42), Rng::new(42));
+        let sel = VictimSelector::new();
+        for _ in 0..2_000 {
+            let (v, local) = sel.pick(2, p, Some(0), |_| Some(0), &mut r1);
+            assert_eq!(v, uniform_victim(2, p, &mut r2));
+            assert!(local, "every victim is local on one node");
+        }
+    }
+
+    #[test]
+    fn every_victim_eventually_reachable_under_bias() {
+        // 2 nodes × 3 cores, thief on node 0: remote victims must
+        // still be picked (the 1/8 tail), so no node starves.
+        let topo = Topology::synthetic(2, 3);
+        let p = 6;
+        let sel = VictimSelector::new();
+        let mut rng = Rng::new(11);
+        let mut hits = vec![0usize; p];
+        for _ in 0..20_000 {
+            let (v, _) = sel.pick(0, p, Some(0), |t| Some(topo.node_of(t)), &mut rng);
+            hits[v] += 1;
+        }
+        assert_eq!(hits[0], 0, "never self");
+        for (t, &h) in hits.iter().enumerate().skip(1) {
+            assert!(h > 0, "victim {t} starved: {hits:?}");
+        }
+        // And the bias is real: local victims are picked far more often.
+        let local: usize = hits[1..3].iter().sum();
+        let remote: usize = hits[3..].iter().sum();
+        assert!(local > remote * 2, "local {local} vs remote {remote}");
+    }
+
+    #[test]
+    fn remote_fallback_after_local_failures() {
+        let topo = Topology::synthetic(2, 3);
+        let p = 6;
+        let mut sel = VictimSelector::new();
+        let mut rng = Rng::new(5);
+        for _ in 0..REMOTE_FALLBACK_FAILS {
+            sel.record(false, true);
+        }
+        // Fallback active: the draw is fully uniform, so remote
+        // victims appear at their uniform rate (3 of 5 candidates).
+        let mut remote = 0usize;
+        let draws = 5_000;
+        for _ in 0..draws {
+            let (v, local) = sel.pick(0, p, Some(0), |t| Some(topo.node_of(t)), &mut rng);
+            assert_ne!(v, 0);
+            if !local {
+                remote += 1;
+            }
+        }
+        let frac = remote as f64 / draws as f64;
+        assert!((0.45..=0.75).contains(&frac), "uniform fallback expected ~0.6 remote, got {frac}");
+        // A success re-arms the bias.
+        sel.record(true, false);
+        let mut remote = 0usize;
+        for _ in 0..draws {
+            let (_, local) = sel.pick(0, p, Some(0), |t| Some(topo.node_of(t)), &mut rng);
+            if !local {
+                remote += 1;
+            }
+        }
+        assert!((remote as f64 / draws as f64) < 0.25, "bias must be re-armed after a success");
+    }
+
+    #[test]
+    fn unknown_own_node_is_uniform() {
+        let p = 4;
+        let sel = VictimSelector::new();
+        let (mut r1, mut r2) = (Rng::new(9), Rng::new(9));
+        for _ in 0..1_000 {
+            let (v, local) = sel.pick(1, p, None, |_| Some(0), &mut r1);
+            assert_eq!(v, uniform_victim(1, p, &mut r2));
+            assert!(!local, "locality is unknowable without an own node");
+        }
+    }
+}

@@ -8,6 +8,20 @@
 //! `|q_i|/d_i` with throughput classification for iCh — which is
 //! precisely the paper's claimed contribution, so the engines share
 //! all other code.
+//!
+//! # Victim selection (PR 3)
+//!
+//! Both engines take a [`VictimPolicy`]: `Uniform` is the paper's
+//! random victim; `Topo` biases thieves toward same-node victims via
+//! the shared [`VictimSelector`] (see `sched::topology` for the
+//! two-tier rule and `sim::policies` for the simulator's mirror of
+//! it). The bias engages only when the detected topology has more
+//! than one node *and* `p > 2` — otherwise the steal path is the
+//! exact uniform code, so single-node hosts pay nothing. Workers
+//! publish the node they run on into the shared state at entry
+//! (claims land on pool workers dynamically, so the map cannot be
+//! static), and successful steals are classified local/remote in the
+//! [`MetricsSink`].
 
 use std::ops::Range;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering::Relaxed, Ordering::SeqCst};
@@ -16,6 +30,7 @@ use super::deque::RangeDeque;
 use super::metrics::MetricsSink;
 use super::policy::{self, IchState};
 use super::runtime::Executor;
+use super::topology::{self, Topology, VictimPolicy, VictimSelector};
 use crate::util::rng::Rng;
 use crate::util::sync::CachePadded;
 
@@ -96,10 +111,18 @@ struct Shared {
     ks: Vec<CachePadded<AtomicU64>>,
     /// Published per-thread d_i (f64 bits) for steal-time merging.
     ds: Vec<CachePadded<AtomicU64>>,
+    /// NUMA node the worker running tid `i` published at entry
+    /// (`usize::MAX` = unknown / not yet published). Written once per
+    /// worker, read only on the cold steal path.
+    nodes: Vec<AtomicUsize>,
+    /// Two-tier victim selection active (VictimPolicy::Topo on a
+    /// multi-node topology with p > 2). When false the steal path is
+    /// the exact uniform code the paper describes.
+    topo_bias: bool,
 }
 
 impl Shared {
-    fn new(n: usize, p: usize, d0: f64) -> Shared {
+    fn new(n: usize, p: usize, d0: f64, topo_bias: bool) -> Shared {
         let blocks = policy::static_blocks(n, p);
         let mut deques: Vec<RangeDeque> = blocks.iter().map(|&(a, b)| RangeDeque::new(a..b)).collect();
         // static_blocks returns min(p, n) blocks; pad with empty queues
@@ -114,6 +137,8 @@ impl Shared {
             inv_p: 1.0 / p as f64,
             ks: (0..p).map(|_| CachePadded::new(AtomicU64::new(0))).collect(),
             ds: (0..p).map(|_| CachePadded::new(AtomicU64::new(d0.to_bits()))).collect(),
+            nodes: (0..p).map(|_| AtomicUsize::new(usize::MAX)).collect(),
+            topo_bias,
         }
     }
 
@@ -142,37 +167,43 @@ impl Shared {
 const STEAL_SPIN_FAILS: u32 = 6;
 
 /// Run the fixed-chunk work-stealing baseline.
+#[allow(clippy::too_many_arguments)]
 pub fn run_stealing(
     n: usize,
     p: usize,
     exec: &dyn Executor,
     chunk: usize,
     seed: u64,
+    victim: VictimPolicy,
     body: &(dyn Fn(Range<usize>) + Sync),
     sink: &MetricsSink,
 ) {
-    run_engine(n, p, exec, ChunkPolicy::Fixed(chunk.max(1)), seed, body, sink)
+    run_engine(n, p, exec, ChunkPolicy::Fixed(chunk.max(1)), seed, victim, body, sink)
 }
 
 /// Run iCh.
+#[allow(clippy::too_many_arguments)]
 pub fn run_ich(
     n: usize,
     p: usize,
     exec: &dyn Executor,
     params: IchParams,
     seed: u64,
+    victim: VictimPolicy,
     body: &(dyn Fn(Range<usize>) + Sync),
     sink: &MetricsSink,
 ) {
-    run_engine(n, p, exec, ChunkPolicy::Adaptive(params), seed, body, sink)
+    run_engine(n, p, exec, ChunkPolicy::Adaptive(params), seed, victim, body, sink)
 }
 
+#[allow(clippy::too_many_arguments)]
 fn run_engine(
     n: usize,
     p: usize,
     exec: &dyn Executor,
     chunk_policy: ChunkPolicy,
     seed: u64,
+    victim: VictimPolicy,
     body: &(dyn Fn(Range<usize>) + Sync),
     sink: &MetricsSink,
 ) {
@@ -183,7 +214,10 @@ fn run_engine(
         ChunkPolicy::Adaptive(prm) => prm.d0.unwrap_or(p as f64).max(policy::D_MIN),
         ChunkPolicy::Fixed(_) => policy::D_MIN,
     };
-    let shared = Shared::new(n, p, d0);
+    // Single-node hosts (and 2-thread runs, where there is only one
+    // possible victim) keep the exact uniform steal path.
+    let topo_bias = victim == VictimPolicy::Topo && p > 2 && Topology::detect().nodes() > 1;
+    let shared = Shared::new(n, p, d0, topo_bias);
     let chunk_policy = &chunk_policy;
     let shared = &shared;
 
@@ -205,6 +239,12 @@ fn worker(
 ) {
     let mut rng = Rng::new(seed ^ (tid as u64).wrapping_mul(0x9E3779B97F4A7C15) ^ 0x5851F42D4C957F2D);
     let mut st = IchState { k: 0.0, d: f64::from_bits(shared.ds[tid].load(Relaxed)) };
+    // Publish which NUMA node this tid actually runs on (pool claims
+    // land on workers dynamically, so the map must come from the
+    // worker itself) and set up the two-tier victim selector.
+    let my_node = topology::current_node();
+    shared.nodes[tid].store(my_node.unwrap_or(usize::MAX), Relaxed);
+    let mut selector = VictimSelector::new();
     // Hot-path counters are thread-local and flushed once on exit
     // (perf pass: avoids two shared RMWs per chunk).
     let mut local_chunks = 0u64;
@@ -258,7 +298,11 @@ fn worker(
             // mean our own in-flight body finished the last chunk.
             continue;
         }
-        let victim = match chunk_policy {
+        let node_of = |t: usize| {
+            let x = shared.nodes[t].load(Relaxed);
+            (x != usize::MAX).then_some(x)
+        };
+        let (victim, was_local) = match chunk_policy {
             ChunkPolicy::Adaptive(prm) if prm.informed => {
                 // Ablation: probe every queue, steal from the fullest —
                 // and when even the fullest probe observed an empty
@@ -266,26 +310,31 @@ fn worker(
                 // victim the probe already saw drained was a
                 // guaranteed failed steal plus mutex traffic on every
                 // retry of the backoff loop.
-                (0..p)
+                let probe = (0..p)
                     .filter(|&v| v != tid)
                     .map(|v| (v, shared.deques[v].remaining()))
                     .max_by_key(|&(_, rem)| rem)
                     .filter(|&(_, rem)| rem > 0)
-                    .map(|(v, _)| v)
+                    .map(|(v, _)| v);
+                let local = probe.is_some_and(|v| my_node.is_some() && node_of(v) == my_node);
+                (probe, local)
+            }
+            _ if shared.topo_bias => {
+                // Two-tier topology bias (see `sched::topology`).
+                let (v, local) = selector.pick(tid, p, my_node, node_of, &mut rng);
+                (Some(v), local)
             }
             _ => {
                 // Paper: uniform random victim.
-                let mut v = rng.below(p - 1);
-                if v >= tid {
-                    v += 1;
-                }
-                Some(v)
+                let v = topology::uniform_victim(tid, p, &mut rng);
+                (Some(v), my_node.is_some() && node_of(v) == my_node)
             }
         };
-        match victim.and_then(|v| shared.deques[v].steal_half().map(|stolen| (v, stolen))) {
-            Some((victim, stolen)) => {
+        match victim.and_then(|v| shared.deques[v].steal_half_with_len().map(|(stolen, vlen)| (v, stolen, vlen))) {
+            Some((victim, stolen, vlen)) => {
                 steal_fails = 0;
-                sink.add_steal(tid, true);
+                selector.record(true, was_local);
+                sink.add_steal_located(tid, true, was_local);
                 if let ChunkPolicy::Adaptive(prm) = chunk_policy {
                     // Listing 1 lines 6–7 (+ merge-rule ablations).
                     let vic = IchState {
@@ -297,8 +346,10 @@ fn worker(
                         StealMerge::Victim => vic,
                         StealMerge::Keep => st,
                     };
-                    // Lines 20–22: the stolen half caps the next chunk.
-                    st.d = policy::clamp_chunk_to_stolen(stolen.len(), stolen.len(), st.d);
+                    // Lines 20–22: one-shot the stolen half when the
+                    // merged divisor, sized on the victim's pre-steal
+                    // queue, would dispatch it as a single chunk.
+                    st.d = policy::clamp_chunk_to_stolen(stolen.len(), vlen, st.d);
                     shared.ks[tid].store(st.k as u64, Relaxed);
                     shared.ds[tid].store(st.d.to_bits(), Relaxed);
                 }
@@ -307,7 +358,8 @@ fn worker(
                 shared.deques[tid].reset(stolen);
             }
             None => {
-                sink.add_steal(tid, false);
+                selector.record(false, was_local);
+                sink.add_steal_located(tid, false, was_local);
                 // Bounded exponential backoff (§3.3 refinement): the
                 // seed runtime issued a single pause hint and retried,
                 // hammering victims' locks when the loop drains. Spin
@@ -357,23 +409,27 @@ mod tests {
     #[test]
     fn stealing_executes_every_iteration_once() {
         for &(n, p) in &[(1usize, 1usize), (10, 4), (1000, 4), (1000, 7), (97, 3)] {
-            run_and_check(n, p, |body, sink| run_stealing(n, p, &SPAWN, 2, 42, body, sink));
+            for victim in [VictimPolicy::Uniform, VictimPolicy::Topo] {
+                run_and_check(n, p, |body, sink| run_stealing(n, p, &SPAWN, 2, 42, victim, body, sink));
+            }
         }
     }
 
     #[test]
     fn ich_executes_every_iteration_once() {
         for &(n, p) in &[(1usize, 1usize), (10, 4), (1000, 4), (1000, 7), (97, 3)] {
-            run_and_check(n, p, |body, sink| {
-                run_ich(n, p, &SPAWN, IchParams::with_eps(0.33), 42, body, sink)
-            });
+            for victim in [VictimPolicy::Uniform, VictimPolicy::Topo] {
+                run_and_check(n, p, |body, sink| {
+                    run_ich(n, p, &SPAWN, IchParams::with_eps(0.33), 42, victim, body, sink)
+                });
+            }
         }
     }
 
     #[test]
     fn ich_zero_iterations_is_noop() {
         let sink = MetricsSink::new(2);
-        run_ich(0, 2, &SPAWN, IchParams::default(), 1, &|_r| panic!("no body calls"), &sink);
+        run_ich(0, 2, &SPAWN, IchParams::default(), 1, VictimPolicy::Uniform, &|_r| panic!("no body calls"), &sink);
     }
 
     #[test]
@@ -381,7 +437,9 @@ mod tests {
         for merge in [StealMerge::Average, StealMerge::Victim, StealMerge::Keep] {
             for informed in [false, true] {
                 let prm = IchParams { merge, informed, ..IchParams::with_eps(0.25) };
-                run_and_check(500, 4, |body, sink| run_ich(500, 4, &SPAWN, prm, 7, body, sink));
+                run_and_check(500, 4, |body, sink| {
+                    run_ich(500, 4, &SPAWN, prm, 7, VictimPolicy::Uniform, body, sink)
+                });
             }
         }
     }
@@ -403,7 +461,7 @@ mod tests {
             }
         };
         let prm = IchParams { informed: true, ..Default::default() };
-        run_ich(n, p, &SPAWN, prm, 9, &body, &sink);
+        run_ich(n, p, &SPAWN, prm, 9, VictimPolicy::Uniform, &body, &sink);
         let m = sink.collect(std::time::Duration::ZERO);
         assert_eq!(m.total_iters, n as u64);
         assert!(m.steals_failed >= 1, "drained probes still count as failed steals");
@@ -412,7 +470,7 @@ mod tests {
     #[test]
     fn ich_inverted_ablation_still_correct() {
         let prm = IchParams { inverted: true, ..Default::default() };
-        run_and_check(500, 4, |body, sink| run_ich(500, 4, &SPAWN, prm, 11, body, sink));
+        run_and_check(500, 4, |body, sink| run_ich(500, 4, &SPAWN, prm, 11, VictimPolicy::Uniform, body, sink));
     }
 
     #[test]
@@ -434,10 +492,41 @@ mod tests {
                 }
             }
         };
-        run_ich(n, p, &SPAWN, IchParams::default(), 3, &body, &sink);
+        run_ich(n, p, &SPAWN, IchParams::default(), 3, VictimPolicy::Uniform, &body, &sink);
         let m = sink.collect(std::time::Duration::ZERO);
         assert_eq!(m.total_iters, n as u64);
         assert!(m.steals_ok > 0, "expected at least one successful steal");
+    }
+
+    #[test]
+    fn steal_locality_counters_sum_to_total() {
+        // Same imbalanced shape as above, under both victim policies:
+        // every successful steal must be classified exactly once.
+        let n = 4000;
+        let p = 4;
+        for victim in [VictimPolicy::Uniform, VictimPolicy::Topo] {
+            let sink = MetricsSink::new(p);
+            let body = |r: Range<usize>| {
+                for i in r {
+                    if i < n / p {
+                        let mut acc = 0u64;
+                        for j in 0..2_000u64 {
+                            acc = acc.wrapping_add(j ^ i as u64);
+                        }
+                        std::hint::black_box(acc);
+                    }
+                }
+            };
+            run_ich(n, p, &SPAWN, IchParams::default(), 3, victim, &body, &sink);
+            let m = sink.collect(std::time::Duration::ZERO);
+            assert_eq!(m.total_iters, n as u64);
+            assert!(m.steals_ok > 0, "expected steals under {victim:?}");
+            assert_eq!(
+                m.steals_local + m.steals_remote,
+                m.steals_ok,
+                "locality classification must partition successful steals ({victim:?})"
+            );
+        }
     }
 
     #[test]
@@ -447,7 +536,7 @@ mod tests {
         let exec = rt.executor();
         for &(n, p) in &[(1000usize, 4usize), (97, 2)] {
             run_and_check(n, p, |body, sink| {
-                run_ich(n, p, &exec, IchParams::default(), 42, body, sink)
+                run_ich(n, p, &exec, IchParams::default(), 42, VictimPolicy::Topo, body, sink)
             });
         }
     }
@@ -468,7 +557,7 @@ mod tests {
                 }
             }
         };
-        run_stealing(n, p, &SPAWN, 1, 9, &body, &sink);
+        run_stealing(n, p, &SPAWN, 1, 9, VictimPolicy::Uniform, &body, &sink);
         let m = sink.collect(std::time::Duration::ZERO);
         assert_eq!(m.total_iters, n as u64);
         assert!(m.backoffs >= 1, "expected a spin→yield backoff while iteration 0 slept");
@@ -483,7 +572,7 @@ mod tests {
     #[test]
     fn single_thread_never_steals() {
         let sink = MetricsSink::new(1);
-        run_ich(100, 1, &SPAWN, IchParams::default(), 5, &|_r| {}, &sink);
+        run_ich(100, 1, &SPAWN, IchParams::default(), 5, VictimPolicy::Topo, &|_r| {}, &sink);
         let m = sink.collect(std::time::Duration::ZERO);
         assert_eq!(m.steals_ok + m.steals_failed, 0);
         assert_eq!(m.total_iters, 100);

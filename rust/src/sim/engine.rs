@@ -62,6 +62,10 @@ pub struct SimCtx<'a> {
     // --- counters for validation / metrics ---
     pub chunks: u64,
     pub steals_ok: u64,
+    /// Successful steals where thief and victim share a socket
+    /// (`steals_local ≤ steals_ok`), mirroring the real runtime's
+    /// locality counters.
+    pub steals_local: u64,
     pub steals_fail: u64,
 }
 
@@ -104,6 +108,8 @@ pub struct SimResult {
     pub time: f64,
     pub chunks: u64,
     pub steals_ok: u64,
+    /// Same-socket successful steals (≤ `steals_ok`).
+    pub steals_local: u64,
     pub steals_fail: u64,
     /// Iterations executed per thread (validation: sums to n).
     pub iters_per_thread: Vec<u64>,
@@ -115,6 +121,7 @@ impl SimResult {
         self.time += other.time;
         self.chunks += other.chunks;
         self.steals_ok += other.steals_ok;
+        self.steals_local += other.steals_local;
         self.steals_fail += other.steals_fail;
         if self.iters_per_thread.len() < other.iters_per_thread.len() {
             self.iters_per_thread.resize(other.iters_per_thread.len(), 0);
@@ -193,6 +200,7 @@ pub fn simulate_loop(
         executed: 0,
         chunks: 0,
         steals_ok: 0,
+        steals_local: 0,
         steals_fail: 0,
     };
 
@@ -278,6 +286,7 @@ pub fn simulate_loop(
     res.time = makespan;
     res.chunks = ctx.chunks;
     res.steals_ok = ctx.steals_ok;
+    res.steals_local = ctx.steals_local;
     res.steals_fail = ctx.steals_fail;
     res
 }
@@ -368,6 +377,7 @@ mod tests {
             executed: 0,
             chunks: 0,
             steals_ok: 0,
+            steals_local: 0,
             steals_fail: 0,
         };
         let d1 = ctx.central_op(0.0, 8.0, 3.0);

@@ -5,6 +5,7 @@
 
 use super::engine::{Acquire, SimCtx, SimSched};
 use crate::sched::policy::{self, IchState};
+use crate::sched::topology::{self, VictimPolicy, VictimSelector};
 use crate::sched::ws::{IchParams, StealMerge};
 use crate::sched::Policy;
 
@@ -240,8 +241,9 @@ enum WsMode {
 }
 
 /// Virtual-time mirror of `sched::ws`: per-thread ranges, owner-side
-/// dispatch, random-victim half-stealing, and (for iCh) the adaptive
-/// chunk logic from `sched::policy`.
+/// dispatch, half-stealing with the runtime's two-tier victim
+/// selection, and (for iCh) the adaptive chunk logic from
+/// `sched::policy`.
 struct WsSim {
     mode: WsMode,
     /// Per-thread remaining range [begin, end).
@@ -249,6 +251,16 @@ struct WsSim {
     states: Vec<IchState>,
     /// Consecutive failed steals per thread (backoff).
     fails: Vec<u32>,
+    /// Per-thief two-tier victim selection, shared with the real
+    /// engines (`sched::topology`) so the two runtimes cannot drift.
+    sel: Vec<VictimSelector>,
+    /// tid → socket, cached from the machine spec on first steal.
+    sockets: Vec<usize>,
+    /// Victim policy, resolved from the process-wide knob (CLI
+    /// `--steal` / `ICH_STEAL`) — the same default every
+    /// `ForOpts::default()` resolves to, so the sim follows the
+    /// runtime when the user switches to uniform stealing.
+    victim: VictimPolicy,
 }
 
 impl WsSim {
@@ -271,7 +283,15 @@ impl WsSim {
             WsMode::Fixed(_) => policy::D_MIN,
         };
         let _ = n;
-        WsSim { mode, deques, states: vec![IchState { k: 0.0, d: d0 }; p], fails: vec![0; p] }
+        WsSim {
+            mode,
+            deques,
+            states: vec![IchState { k: 0.0, d: d0 }; p],
+            fails: vec![0; p],
+            sel: (0..p).map(|_| VictimSelector::new()).collect(),
+            sockets: Vec::new(),
+            victim: VictimPolicy::process_default(),
+        }
     }
 
     fn remaining(&self, tid: usize) -> usize {
@@ -313,14 +333,28 @@ impl SimSched for WsSim {
             return Acquire::Busy { until: now + ctx.spec.c_steal_fail };
         }
 
-        // Random-victim steal attempt (§3.3).
-        let mut v = ctx.rng.below(ctx.p - 1);
-        if v >= tid {
-            v += 1;
+        // Steal attempt (§3.3). Victim selection is aligned with the
+        // real runtime (`sched::ws`): two-tier topology bias on
+        // multi-socket machines with p > 2 when the process-wide
+        // victim policy (CLI `--steal` / `ICH_STEAL`) is `Topo`, the
+        // paper's uniform draw otherwise — the same gate, constants,
+        // and fallback rule via the shared `VictimSelector` and
+        // `uniform_victim`.
+        if self.sockets.is_empty() {
+            self.sockets = (0..ctx.p).map(|t| ctx.socket_of(t)).collect();
         }
+        let two_tier = self.victim == VictimPolicy::Topo && ctx.spec.sockets > 1 && ctx.p > 2;
+        let (v, was_local) = if two_tier {
+            let socks = &self.sockets;
+            self.sel[tid].pick(tid, ctx.p, Some(socks[tid]), |t| Some(socks[t]), &mut ctx.rng)
+        } else {
+            let v = topology::uniform_victim(tid, ctx.p, &mut ctx.rng);
+            (v, self.sockets[v] == self.sockets[tid])
+        };
         let vrem = self.remaining(v);
         if vrem == 0 {
             ctx.steals_fail += 1;
+            self.sel[tid].record(false, was_local);
             self.fails[tid] = (self.fails[tid] + 1).min(6);
             // Exponential backoff keeps the event count bounded while
             // matching real spin-with-pause behaviour.
@@ -329,7 +363,7 @@ impl SimSched for WsSim {
         }
         // Steal half through the victim's queue lock; cross-socket
         // steals pay the NUMA multiplier.
-        let numa = if ctx.socket_of(tid) == ctx.socket_of(v) { 1.0 } else { ctx.spec.numa_steal_mult };
+        let numa = if was_local { 1.0 } else { ctx.spec.numa_steal_mult };
         let cost = ctx.queue_op(v, now, ctx.spec.c_steal_ok * numa, ctx.spec.c_steal_serial * numa);
         let half = vrem.div_ceil(2);
         let ne = self.deques[v].1 - half;
@@ -337,6 +371,10 @@ impl SimSched for WsSim {
         self.deques[v].1 = ne;
         self.deques[tid] = stolen;
         ctx.steals_ok += 1;
+        if was_local {
+            ctx.steals_local += 1;
+        }
+        self.sel[tid].record(true, was_local);
         self.fails[tid] = 0;
         if let WsMode::Adaptive(prm) = &self.mode {
             let merged = match prm.merge {
@@ -345,7 +383,9 @@ impl SimSched for WsSim {
                 StealMerge::Keep => self.states[tid],
             };
             self.states[tid] = merged;
-            self.states[tid].d = policy::clamp_chunk_to_stolen(half, half, self.states[tid].d);
+            // Listing 1 lines 20–22, sized on the victim's pre-steal
+            // queue (see `policy::clamp_chunk_to_stolen`).
+            self.states[tid].d = policy::clamp_chunk_to_stolen(half, vrem, self.states[tid].d);
         }
         // Per Listing 1 the thief immediately starts on the stolen
         // range (lines 23–24 set begin/end and the thread proceeds to
@@ -440,6 +480,21 @@ mod tests {
         }
         let r = run(&Policy::Ich(IchParams::default()), weights, 4);
         assert!(r.steals_ok > 0, "expected steals, got {:?}", r);
+    }
+
+    #[test]
+    fn steal_locality_is_tracked_on_the_two_socket_model() {
+        // 28 threads over 2×14 sockets with the work in socket 0's
+        // blocks: the two-tier victim selection must record locality,
+        // and local steals can never exceed total steals.
+        let mut weights = vec![1.0; 2800];
+        for w in weights.iter_mut().take(200) {
+            *w = 500.0;
+        }
+        let r = run(&Policy::Ich(IchParams::default()), weights, 28);
+        assert!(r.steals_ok > 0, "expected steals, got {r:?}");
+        assert!(r.steals_local <= r.steals_ok);
+        assert!(r.steals_local > 0, "socket-0 thieves should hit local victims under the 7/8 bias");
     }
 
     #[test]

@@ -1,0 +1,116 @@
+//! Victim-selection properties (PR 3): no engine ever steals from
+//! itself, topology bias never starves a victim, single-node hosts
+//! keep the paper's exact uniform behavior, and the locality
+//! counters partition successful steals.
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicU64, Ordering::SeqCst};
+
+use ich::sched::topology::{uniform_victim, Topology, VictimSelector, REMOTE_FALLBACK_FAILS};
+use ich::sched::{parallel_for, ForOpts, IchParams, Policy, VictimPolicy};
+use ich::util::rng::Rng;
+
+/// Property sweep: across thread counts, topologies, thief positions,
+/// and selector states (including mid-fallback), the selector never
+/// returns the thief itself and always returns a valid tid.
+#[test]
+fn selector_never_picks_self_across_state_space() {
+    let mut rng = Rng::new(0xD1CE);
+    for topo in [Topology::single_node(8), Topology::synthetic(2, 4), Topology::synthetic(4, 2)] {
+        for p in [2usize, 3, 5, 8, 28] {
+            for tid in [0, 1, p / 2, p - 1] {
+                let mut sel = VictimSelector::new();
+                for round in 0..400 {
+                    let (v, _) = sel.pick(tid, p, Some(topo.node_of(tid)), |t| Some(topo.node_of(t)), &mut rng);
+                    assert_ne!(v, tid, "self-steal at p={p} tid={tid} round={round}");
+                    assert!(v < p, "victim out of range at p={p} tid={tid}");
+                    // Mutate the selector state as a real thief would.
+                    sel.record(round % 3 == 0, round % 2 == 0);
+                }
+            }
+        }
+    }
+}
+
+/// With topology bias every victim — including every remote-node
+/// victim — is picked eventually, under both a fresh selector and one
+/// that has entered the remote fallback.
+#[test]
+fn topology_bias_reaches_every_victim() {
+    let topo = Topology::synthetic(2, 14);
+    let p = 28;
+    for warm_fails in [0, REMOTE_FALLBACK_FAILS] {
+        let mut sel = VictimSelector::new();
+        for _ in 0..warm_fails {
+            sel.record(false, true);
+        }
+        let mut rng = Rng::new(77 + warm_fails as u64);
+        let mut hits = vec![0u32; p];
+        for _ in 0..60_000 {
+            let (v, _) = sel.pick(3, p, Some(topo.node_of(3)), |t| Some(topo.node_of(t)), &mut rng);
+            hits[v] += 1;
+        }
+        assert_eq!(hits[3], 0, "never self");
+        for (t, &h) in hits.iter().enumerate() {
+            if t != 3 {
+                assert!(h > 0, "victim {t} starved (warm_fails={warm_fails}): {hits:?}");
+            }
+        }
+    }
+}
+
+/// End-to-end: an imbalanced iCh run records locality counters that
+/// sum to the successful-steal total, under both victim policies and
+/// whatever topology this host (or `ICH_TOPOLOGY`) reports.
+#[test]
+fn engine_locality_counters_partition_steals() {
+    let n = 6_000usize;
+    let p = 4;
+    for victim in [VictimPolicy::Uniform, VictimPolicy::Topo] {
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        let opts = ForOpts { threads: p, pin: false, seed: 5, weights: None, victim, ..Default::default() };
+        let m = parallel_for(n, &Policy::Ich(IchParams::default()), &opts, &|r: Range<usize>| {
+            for i in r {
+                hits[i].fetch_add(1, SeqCst);
+                if i < n / p {
+                    let mut acc = 0u64;
+                    for j in 0..1_500u64 {
+                        acc = acc.wrapping_add(j ^ i as u64);
+                    }
+                    std::hint::black_box(acc);
+                }
+            }
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(SeqCst), 1, "iteration {i} under {victim:?}");
+        }
+        assert_eq!(m.total_iters, n as u64);
+        assert!(m.steals_ok > 0, "imbalanced run must steal ({victim:?})");
+        assert_eq!(
+            m.steals_local + m.steals_remote,
+            m.steals_ok,
+            "local+remote must equal total successful steals ({victim:?})"
+        );
+        assert!((0.0..=1.0).contains(&m.local_steal_fraction()));
+    }
+}
+
+/// On a single-node topology the biased selector consumes the exact
+/// RNG stream of `uniform_victim` — the one canonical draw the
+/// engines and the simulator also call — so `Topo` is behaviorally
+/// identical to `Uniform` wherever there is nothing to bias toward.
+#[test]
+fn single_node_topo_is_uniform() {
+    let topo = Topology::single_node(16);
+    for p in [2usize, 4, 9] {
+        for tid in 0..p {
+            let sel = VictimSelector::new();
+            let (mut biased_rng, mut uniform_rng) = (Rng::new(900 + p as u64), Rng::new(900 + p as u64));
+            for _ in 0..300 {
+                let (v, _) = sel.pick(tid, p, Some(topo.node_of(tid)), |t| Some(topo.node_of(t)), &mut biased_rng);
+                let u = uniform_victim(tid, p, &mut uniform_rng);
+                assert_eq!(v, u, "single-node pick must match uniform at p={p} tid={tid}");
+            }
+        }
+    }
+}

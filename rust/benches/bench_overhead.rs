@@ -4,9 +4,11 @@
 //! fork-join overhead of the persistent worker pool vs per-call thread
 //! spawning (recorded to `BENCH_forkjoin.json`), blocking vs
 //! asynchronous epoch submission under concurrent submitters
-//! (recorded to `BENCH_async.json`), and uniform vs topology-biased
+//! (recorded to `BENCH_async.json`), uniform vs topology-biased
 //! steal-victim selection per work-stealing engine (recorded to
-//! `BENCH_numa.json`).
+//! `BENCH_numa.json`), and Interactive queue-wait percentiles under
+//! saturating Background load, FIFO vs multi-class dispatch
+//! (recorded to `BENCH_priority.json`).
 //! These are the §Perf numbers for the hot path.
 
 mod bench_common;
@@ -18,7 +20,10 @@ use std::time::Instant;
 
 use ich::sched::deque::RangeDeque;
 use ich::sched::runtime::Runtime;
-use ich::sched::{parallel_for, parallel_for_async, ExecMode, ForOpts, IchParams, Policy, Topology, VictimPolicy};
+use ich::sched::{
+    parallel_for, parallel_for_async, parallel_for_async_on, ExecMode, ForOpts, IchParams, LatencyClass, Policy,
+    Topology, VictimPolicy,
+};
 use ich::util::json::Json;
 
 fn dispatch_overhead() {
@@ -356,6 +361,101 @@ fn numa_steal() {
     save_json("BENCH_numa.json", &out);
 }
 
+/// Sorted-sample percentile (nearest-rank).
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// The dispatch-latency measurement behind the priorities tentpole:
+/// Interactive probe loops submitted into a pool saturated with a
+/// sliding window of heavy Background loops, measuring each probe's
+/// queue wait (submission → first claim). The FIFO arm submits the
+/// identical traffic with a single class — the PR 2 order — so the
+/// comparison isolates what multi-class dispatch (priority + chunk-
+/// granular preemption) buys. Emits `BENCH_priority.json`.
+fn dispatch_latency() {
+    println!("\n== dispatch_latency: Interactive queue wait under Background saturation ==");
+    let workers = 2usize;
+    let p = 2usize;
+    let n_bg = 400_000usize;
+    let n_probe = 1_000usize;
+    let window = 8usize;
+    // Enough samples that the reported p99 is a real percentile, not
+    // the single max (index round(0.99·119) = 118 of 120).
+    let probes = 120usize;
+    let policy = Policy::Dynamic { chunk: 64 };
+    let body: Arc<dyn Fn(Range<usize>) + Send + Sync> = Arc::new(|rr: Range<usize>| {
+        std::hint::black_box(rr.len());
+    });
+
+    let mut out = Json::obj();
+    out.set("bench", Json::str("dispatch_latency"));
+    out.set("pool_workers", Json::num(workers as f64));
+    out.set("threads", Json::num(p as f64));
+    out.set("n_background", Json::num(n_bg as f64));
+    out.set("n_probe", Json::num(n_probe as f64));
+    out.set("background_window", Json::num(window as f64));
+    out.set("probes", Json::num(probes as f64));
+    let mut p99s = [0.0f64; 2];
+    let arms = [
+        ("fifo", LatencyClass::Batch, LatencyClass::Batch),
+        ("classed", LatencyClass::Background, LatencyClass::Interactive),
+    ];
+    for (arm_idx, (arm, bg_class, probe_class)) in arms.into_iter().enumerate() {
+        // Fresh pool per arm: cumulative class stats and queue state
+        // stay comparable.
+        let rt = Runtime::with_pinning(workers, false);
+        let bg_opts =
+            ForOpts { threads: p, pin: false, seed: 3, mode: ExecMode::Pool, class: bg_class, ..Default::default() };
+        let probe_opts =
+            ForOpts { threads: p, pin: false, seed: 4, mode: ExecMode::Pool, class: probe_class, ..Default::default() };
+        let mut backlog = std::collections::VecDeque::new();
+        let mut waits: Vec<f64> = Vec::with_capacity(probes);
+        for k in 0..probes {
+            // Keep the background window saturated.
+            while backlog.len() < window {
+                backlog.push_back(parallel_for_async_on(&rt, n_bg, &policy, &bg_opts, Arc::clone(&body)));
+            }
+            let m = parallel_for_async_on(&rt, n_probe, &policy, &probe_opts, Arc::clone(&body)).join();
+            assert_eq!(m.total_iters, n_probe as u64, "probe {k}");
+            waits.push(m.queue_wait_s);
+            // Retire one background loop per probe so the queue keeps
+            // turning over without unbounded growth.
+            if let Some(h) = backlog.pop_front() {
+                assert_eq!(h.join().total_iters, n_bg as u64);
+            }
+        }
+        for h in backlog {
+            assert_eq!(h.join().total_iters, n_bg as u64);
+        }
+        waits.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let (p50, p99) = (percentile(&waits, 50.0), percentile(&waits, 99.0));
+        p99s[arm_idx] = p99;
+        println!(
+            "    -> {arm}: probe queue wait p50 {} / p99 {} (mean {})",
+            fmt_s(p50),
+            fmt_s(p99),
+            fmt_s(waits.iter().sum::<f64>() / waits.len() as f64)
+        );
+        let mut e = Json::obj();
+        e.set("arm", Json::str(arm));
+        e.set("background_class", Json::str(bg_class.name()));
+        e.set("probe_class", Json::str(probe_class.name()));
+        e.set("queue_wait_p50_s", Json::num(p50));
+        e.set("queue_wait_p99_s", Json::num(p99));
+        e.set("queue_wait_max_s", Json::num(*waits.last().unwrap()));
+        out.set(arm, e);
+    }
+    let speedup = p99s[0] / p99s[1].max(1e-12);
+    println!("    == Interactive p99 queue wait: classed {:.1}x below FIFO ==", speedup);
+    out.set("fifo_over_classed_p99", Json::num(speedup));
+    save_json("BENCH_priority.json", &out);
+}
+
 fn multithread_smoke() {
     println!("\n== multi-thread correctness overhead (oversubscribed on this host) ==");
     let n = 1_000_000usize;
@@ -376,5 +476,6 @@ fn main() {
     fork_join_overhead();
     async_submission();
     numa_steal();
+    dispatch_latency();
     multithread_smoke();
 }

@@ -8,15 +8,22 @@
 //! runtime did under concurrent submitters).
 //!
 //! Shape: build [`LoopJob`]s (loop size, policy, optional workload
-//! weights, body), hand them to a [`Coordinator`], and either collect
-//! [`InFlight`] handles to join at your own pace or use
-//! [`Coordinator::run_overlapped`] to submit everything up front and
-//! join in submission order.
+//! weights, **latency class / deadline**, body), hand them to a
+//! [`Coordinator`], and either collect [`InFlight`] handles to join
+//! at your own pace or use [`Coordinator::run_overlapped`] to submit
+//! everything up front and join in submission order. Per-job classes
+//! ride the pool's multi-class dispatch queue: an `Interactive` job
+//! submitted behind a backlog of `Background` jobs starts (and
+//! usually finishes) before them, preempting running background
+//! chunks at chunk granularity (see `sched::dispatch`).
 
 use std::ops::Range;
 use std::sync::Arc;
 
-use crate::sched::{parallel_for_async, ExecMode, ForOpts, LoopJoin, Policy, RunMetrics};
+use crate::sched::runtime::Runtime;
+use crate::sched::{
+    parallel_for_async, parallel_for_async_on, ExecMode, ForOpts, LatencyClass, LoopJoin, Policy, RunMetrics,
+};
 
 /// One independent loop to serve.
 pub struct LoopJob {
@@ -30,12 +37,25 @@ pub struct LoopJob {
     pub weights: Option<Vec<f64>>,
     /// Steal-victim RNG seed.
     pub seed: u64,
+    /// Dispatch class on the pool's multi-class epoch queue.
+    pub class: LatencyClass,
+    /// Virtual-tick deadline for EDF ordering within the class.
+    pub deadline: Option<u64>,
     body: Arc<dyn Fn(Range<usize>) + Send + Sync>,
 }
 
 impl LoopJob {
     pub fn new(name: &str, n: usize, policy: Policy, body: Arc<dyn Fn(Range<usize>) + Send + Sync>) -> LoopJob {
-        LoopJob { name: name.to_string(), n, policy, weights: None, seed: 0x1C4, body }
+        LoopJob {
+            name: name.to_string(),
+            n,
+            policy,
+            weights: None,
+            seed: 0x1C4,
+            class: LatencyClass::process_default(),
+            deadline: None,
+            body,
+        }
     }
 
     pub fn with_weights(mut self, w: Vec<f64>) -> LoopJob {
@@ -45,6 +65,16 @@ impl LoopJob {
 
     pub fn with_seed(mut self, seed: u64) -> LoopJob {
         self.seed = seed;
+        self
+    }
+
+    pub fn with_class(mut self, class: LatencyClass) -> LoopJob {
+        self.class = class;
+        self
+    }
+
+    pub fn with_deadline(mut self, deadline: u64) -> LoopJob {
+        self.deadline = Some(deadline);
         self
     }
 }
@@ -72,18 +102,28 @@ pub struct Coordinator {
     /// Scheduler width per loop.
     threads: usize,
     mode: ExecMode,
+    /// Explicit pool to serve from (`None` = the shared global pool).
+    pool: Option<Arc<Runtime>>,
 }
 
 impl Coordinator {
     /// Coordinator submitting `threads`-wide loops to the shared pool.
     pub fn new(threads: usize) -> Coordinator {
-        Coordinator { threads, mode: ExecMode::Pool }
+        Coordinator { threads, mode: ExecMode::Pool, pool: None }
     }
 
     /// Measurement baseline: detached per-call thread teams instead of
     /// the pool.
     pub fn with_mode(mut self, mode: ExecMode) -> Coordinator {
         self.mode = mode;
+        self
+    }
+
+    /// Serve from a private pool instead of the process-wide one —
+    /// embedders with dedicated capacity, and tests that need a
+    /// deterministic worker count.
+    pub fn with_pool(mut self, rt: Arc<Runtime>) -> Coordinator {
+        self.pool = Some(rt);
         self
     }
 
@@ -95,9 +135,14 @@ impl Coordinator {
             seed: job.seed,
             weights: job.weights.as_deref(),
             mode: self.mode,
+            class: job.class,
+            deadline: job.deadline,
             ..Default::default()
         };
-        let join = parallel_for_async(job.n, &job.policy, &opts, Arc::clone(&job.body));
+        let join = match &self.pool {
+            Some(rt) => parallel_for_async_on(rt, job.n, &job.policy, &opts, Arc::clone(&job.body)),
+            None => parallel_for_async(job.n, &job.policy, &opts, Arc::clone(&job.body)),
+        };
         InFlight { name: job.name, join }
     }
 
@@ -162,6 +207,24 @@ mod tests {
         let (na, ma) = ha.join();
         assert_eq!((na.as_str(), nb.as_str()), ("a", "b"));
         assert_eq!(ma.total_iters + mb.total_iters, 2 * n as u64);
+    }
+
+    #[test]
+    fn per_job_classes_reach_the_dispatcher() {
+        let n = 500;
+        let hits: Arc<Vec<AtomicU64>> = Arc::new((0..n).map(|_| AtomicU64::new(0)).collect());
+        // Private pool: deterministic width, and the job must queue as
+        // a real pool epoch (not a detached fallback team).
+        let coord = Coordinator::new(2).with_pool(Arc::new(crate::sched::Runtime::with_pinning(2, false)));
+        let job = counting_job("hot", n, &hits).with_class(LatencyClass::Interactive).with_deadline(5);
+        let (name, m) = coord.submit(job).join();
+        assert_eq!(name, "hot");
+        assert_eq!(m.total_iters, n as u64);
+        assert_eq!(m.class, LatencyClass::Interactive, "job class must reach the dispatcher and the metrics");
+        assert!(m.queue_wait_s > 0.0, "pool-dispatched job must report its queue wait");
+        for h in hits.iter() {
+            assert_eq!(h.load(SeqCst), 1);
+        }
     }
 
     #[test]

@@ -36,6 +36,6 @@ pub mod sparse;
 pub mod util;
 
 pub use sched::{
-    parallel_for, parallel_for_async, parallel_for_each, ExecMode, ForOpts, IchParams, LoopJoin, Policy, Runtime,
-    VictimPolicy,
+    parallel_for, parallel_for_async, parallel_for_each, ExecMode, ForOpts, IchParams, LatencyClass, LoopJoin,
+    Policy, Runtime, VictimPolicy,
 };

@@ -19,7 +19,7 @@
 use ich::apps;
 use ich::coordinator::{Coordinator, LoopJob};
 use ich::harness;
-use ich::sched::{parallel_for, table2_grid, ExecMode, ForOpts, Policy, VictimPolicy, PAPER_FAMILIES};
+use ich::sched::{parallel_for, table2_grid, ExecMode, ForOpts, LatencyClass, Policy, VictimPolicy, PAPER_FAMILIES};
 use ich::sim::{simulate_app, MachineSpec};
 use ich::util::cli::Args;
 use ich::util::table::{f2, Table};
@@ -36,6 +36,20 @@ fn main() {
             }
             None => {
                 eprintln!("unknown steal policy '{s}' (expected: uniform | topo)");
+                std::process::exit(2);
+            }
+        }
+    }
+    // `--class interactive|batch|background` sets the process-wide
+    // dispatch class for pool submissions (`ICH_CLASS` is the env
+    // equivalent); `ich overlap` also honors it per run.
+    if let Some(s) = args.get("class") {
+        match LatencyClass::parse(s) {
+            Some(c) => {
+                let _ = LatencyClass::set_process_default(c);
+            }
+            None => {
+                eprintln!("unknown latency class '{s}' (expected: interactive | batch | background)");
                 std::process::exit(2);
             }
         }
@@ -65,8 +79,10 @@ fn main() {
             println!("        ich run --app spmv --sched guided,1 --threads 4 --real");
             println!("        ich run --app spmv --sched ich --threads 4 --real --steal uniform");
             println!("        ich overlap --threads 2 --jobs 4 --n 2000000");
+            println!("        ich overlap --threads 2 --jobs 8 --class background");
             println!("        ich figure fig4");
             println!("  --steal uniform|topo  steal-victim policy (default: topo; env ICH_STEAL)");
+            println!("  --class interactive|batch|background  dispatch class (default: batch; env ICH_CLASS)");
         }
     }
 }
@@ -189,7 +205,10 @@ fn cmd_overlap(args: &Args) {
 
     for (name, m) in &results {
         println!(
-            "  {name}: iters={} chunks={} steals={}ok/{}fail imbalance={:.3}",
+            "  {name}: class={} queue_wait={:.6}s{} iters={} chunks={} steals={}ok/{}fail imbalance={:.3}",
+            m.class.name(),
+            m.queue_wait_s,
+            if m.promoted { " (promoted)" } else { "" },
             m.total_iters,
             m.total_chunks,
             m.steals_ok,
@@ -197,9 +216,25 @@ fn cmd_overlap(args: &Args) {
             m.imbalance()
         );
     }
+    // Per-class dispatch counters of the shared pool (submissions,
+    // dispatches, promotions, queue waits) for the whole command.
+    for cs in ich::sched::Runtime::global().class_stats() {
+        if cs.submitted > 0 {
+            println!(
+                "  class {}: submitted={} dispatched={} promotions={} queue_wait total={:.6}s max={:.6}s",
+                cs.class.name(),
+                cs.submitted,
+                cs.dispatched,
+                cs.promotions,
+                cs.queue_wait_s_total,
+                cs.queue_wait_s_max
+            );
+        }
+    }
     println!(
-        "jobs={jobs} n={n} threads={threads} sched={}: sequential {sequential_s:.4}s vs overlapped {overlapped_s:.4}s ({:.2}x)",
+        "jobs={jobs} n={n} threads={threads} sched={} class={}: sequential {sequential_s:.4}s vs overlapped {overlapped_s:.4}s ({:.2}x)",
         policy.name(),
+        LatencyClass::process_default().name(),
         sequential_s / overlapped_s
     );
 }

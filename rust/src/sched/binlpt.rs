@@ -12,7 +12,7 @@ use std::sync::atomic::{AtomicBool, Ordering::SeqCst};
 
 use super::metrics::MetricsSink;
 use super::policy;
-use super::runtime::Executor;
+use super::runtime::{preempt_point, Executor};
 
 pub fn run_binlpt(
     weights: &[f64],
@@ -32,6 +32,8 @@ pub fn run_binlpt(
     exec.run(p, &|tid| {
         // Phase 1: our own LPT-assigned chunks.
         for &ci in &assign[tid] {
+            // Chunk boundary: yield to a higher-class epoch.
+            preempt_point();
             if claim(&claimed, ci) {
                 let (a, b) = chunks[ci];
                 body(a..b);
@@ -40,6 +42,7 @@ pub fn run_binlpt(
         }
         // Phase 2: rebalance — claim any chunk not yet started.
         for ci in 0..chunks.len() {
+            preempt_point();
             if claim(&claimed, ci) {
                 let (a, b) = chunks[ci];
                 body(a..b);

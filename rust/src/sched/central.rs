@@ -7,7 +7,7 @@ use std::sync::atomic::{AtomicUsize, Ordering::SeqCst};
 
 use super::metrics::MetricsSink;
 use super::policy;
-use super::runtime::Executor;
+use super::runtime::{preempt_point, Executor};
 
 /// `static`: thread t executes its contiguous block; no shared state.
 pub fn run_static(n: usize, p: usize, exec: &dyn Executor, body: &(dyn Fn(Range<usize>) + Sync), sink: &MetricsSink) {
@@ -39,6 +39,8 @@ pub fn run_dynamic(
     let chunk = chunk.max(1);
     let next = AtomicUsize::new(0);
     exec.run(p, &|tid| loop {
+        // Chunk boundary: yield to a higher-class epoch, if pending.
+        preempt_point();
         let b = next.fetch_add(chunk, SeqCst);
         if b >= n {
             return;
@@ -65,6 +67,8 @@ pub fn run_guided(
     }
     let next = AtomicUsize::new(0);
     exec.run(p, &|tid| loop {
+        // Chunk boundary: yield to a higher-class epoch, if pending.
+        preempt_point();
         let mut b = next.load(SeqCst);
         let e = loop {
             if b >= n {
@@ -92,6 +96,8 @@ pub fn run_chunk_list(
 ) {
     let next = AtomicUsize::new(0);
     exec.run(p, &|tid| loop {
+        // Chunk boundary: yield to a higher-class epoch, if pending.
+        preempt_point();
         let i = next.fetch_add(1, SeqCst);
         let Some(&(a, b)) = chunks.get(i) else { return };
         body(a..b);

@@ -1,0 +1,404 @@
+//! Multi-class epoch dispatch: the deterministic ordering core behind
+//! the pool's epoch queue (PR 2 was strictly FIFO; a serving layer
+//! needs latency classes so one long low-value loop cannot
+//! head-of-line-block every latency-sensitive submission).
+//!
+//! # The dispatch rule
+//!
+//! Every queued entry carries a [`LatencyClass`], an optional absolute
+//! **deadline** (a virtual `u64` tick — only its *ordering* matters,
+//! so tests drive it from a virtual clock and never sleep), and an
+//! arrival sequence number. Selection of the next entry to dispatch:
+//!
+//! 1. **Anti-starvation first.** If any entry has been *skipped* at
+//!    least [`PROMOTE_K`] times (a later-arriving, higher-class entry
+//!    was dispatched past it), the earliest-arrived such entry is
+//!    promoted and dispatched next, whatever its class. This bounds
+//!    the bypass count of every entry by `PROMOTE_K` (see the
+//!    invariant below).
+//! 2. **Class priority.** Otherwise the highest class wins:
+//!    `Interactive` before `Batch` before `Background`.
+//! 3. **EDF within class.** Inside a class, the earliest deadline
+//!    wins; entries without a deadline sort last.
+//! 4. **FIFO among peers.** Ties (same class, same deadline) break by
+//!    arrival order.
+//!
+//! *Skip accounting*: when an entry is removed (fully dispatched),
+//! every remaining entry that arrived **earlier** and has a **lower**
+//! class gains one skip. Reordering *within* a class (EDF) is not a
+//! skip — EDF is allowed to starve a deadline-less peer, priority
+//! bypass across classes is not.
+//!
+//! **Invariant (promotion bound):** no entry is ever skipped more than
+//! `PROMOTE_K` times. Proof sketch: a skip of `e` requires dispatching
+//! a *later* arrival past it, but once `e.skips ≥ PROMOTE_K` rule 1
+//! only dispatches starving entries that arrived *no later* than the
+//! earliest starving one — and `e` is starving, so nothing later than
+//! `e` can be selected until `e` itself is. The conformance harness
+//! (`tests/dispatch_conformance.rs`) asserts this on randomized
+//! traces, differentially against the simulator's independent model
+//! ([`crate::sim::sim_dispatch_order`]).
+//!
+//! With a single class and no deadlines the rule degenerates to exact
+//! FIFO — the PR 2 order — because rule 1 never triggers (skips
+//! require a class bypass) and rules 2–4 reduce to arrival order.
+//! `tests/property_tests.rs` pins that equivalence.
+//!
+//! The queue is a plain deterministic data structure: the runtime
+//! wraps it in the pool mutex, the conformance harness drives it
+//! directly with scripted arrivals, and `sim::policies` reimplements
+//! the same rule independently for differential testing.
+
+use std::sync::OnceLock;
+
+/// Latency class of a submitted epoch (`ForOpts::class`, CLI
+/// `--class`, env `ICH_CLASS`). Order of declaration is priority
+/// order: `rank 0` dispatches first.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum LatencyClass {
+    /// Latency-sensitive: dispatched before everything non-starving.
+    Interactive,
+    /// The default: ordinary fork-join traffic (exact PR 2 FIFO when
+    /// every submission uses it).
+    #[default]
+    Batch,
+    /// Throughput work that tolerates bypass (bounded by
+    /// [`PROMOTE_K`]).
+    Background,
+}
+
+/// All classes, in priority (rank) order.
+pub const CLASSES: [LatencyClass; 3] = [LatencyClass::Interactive, LatencyClass::Batch, LatencyClass::Background];
+
+impl LatencyClass {
+    /// Priority rank: 0 = highest (`Interactive`), 2 = lowest.
+    #[inline]
+    pub fn rank(self) -> u8 {
+        match self {
+            LatencyClass::Interactive => 0,
+            LatencyClass::Batch => 1,
+            LatencyClass::Background => 2,
+        }
+    }
+
+    /// Inverse of [`LatencyClass::rank`] (clamped to `Background`).
+    pub fn from_rank(rank: u8) -> LatencyClass {
+        match rank {
+            0 => LatencyClass::Interactive,
+            1 => LatencyClass::Batch,
+            _ => LatencyClass::Background,
+        }
+    }
+
+    /// Canonical spelling used by the CLI and result files.
+    pub fn name(self) -> &'static str {
+        match self {
+            LatencyClass::Interactive => "interactive",
+            LatencyClass::Batch => "batch",
+            LatencyClass::Background => "background",
+        }
+    }
+
+    /// Parse a CLI/env spelling.
+    pub fn parse(s: &str) -> Option<LatencyClass> {
+        match s.trim() {
+            "interactive" | "i" => Some(LatencyClass::Interactive),
+            "batch" | "b" => Some(LatencyClass::Batch),
+            "background" | "bg" => Some(LatencyClass::Background),
+            _ => None,
+        }
+    }
+
+    /// Process-wide default used by `ForOpts::default()`: the value
+    /// installed by [`LatencyClass::set_process_default`] (the CLI's
+    /// `--class` flag), else the `ICH_CLASS` env var, else `Batch`.
+    pub fn process_default() -> LatencyClass {
+        *class_default_cell().get_or_init(|| {
+            std::env::var("ICH_CLASS").ok().and_then(|s| LatencyClass::parse(&s)).unwrap_or_default()
+        })
+    }
+
+    /// Install the process-wide default (first caller wins, mirroring
+    /// `OnceLock`; returns false if the default was already resolved).
+    pub fn set_process_default(c: LatencyClass) -> bool {
+        class_default_cell().set(c).is_ok()
+    }
+}
+
+fn class_default_cell() -> &'static OnceLock<LatencyClass> {
+    static DEFAULT: OnceLock<LatencyClass> = OnceLock::new();
+    &DEFAULT
+}
+
+/// Skips after which an entry is promoted past class priority
+/// (dispatch rule 1). The weight of the anti-starvation rule: larger
+/// values favor strict priority, 0 disables priority entirely.
+pub const PROMOTE_K: u64 = 4;
+
+/// Dispatch metadata returned when an entry is removed from the queue.
+#[derive(Clone, Copy, Debug)]
+pub struct PopInfo {
+    pub class: LatencyClass,
+    /// Arrival sequence number assigned by [`DispatchQueue::push`].
+    pub seq: u64,
+    /// Times this entry was bypassed by a later, higher-class arrival.
+    pub skips: u64,
+    /// Whether rule 1 (anti-starvation) selected it.
+    pub promoted: bool,
+}
+
+struct Entry<T> {
+    item: T,
+    class: LatencyClass,
+    /// Virtual-tick deadline; `None` sorts after every deadline.
+    deadline: Option<u64>,
+    seq: u64,
+    skips: u64,
+}
+
+/// Deterministic multi-class EDF queue with bounded anti-starvation —
+/// see the module docs for the exact rule.
+pub struct DispatchQueue<T> {
+    entries: Vec<Entry<T>>,
+    next_seq: u64,
+    promote_k: u64,
+}
+
+impl<T> Default for DispatchQueue<T> {
+    fn default() -> Self {
+        DispatchQueue::new()
+    }
+}
+
+impl<T> DispatchQueue<T> {
+    pub fn new() -> DispatchQueue<T> {
+        DispatchQueue::with_promote_k(PROMOTE_K)
+    }
+
+    /// Queue with an explicit promotion threshold (tests).
+    pub fn with_promote_k(promote_k: u64) -> DispatchQueue<T> {
+        DispatchQueue { entries: Vec::new(), next_seq: 0, promote_k }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Enqueue an item; returns its arrival sequence number.
+    pub fn push(&mut self, item: T, class: LatencyClass, deadline: Option<u64>) -> u64 {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.entries.push(Entry { item, class, deadline, seq, skips: 0 });
+        seq
+    }
+
+    /// Is this entry starving (rule 1 applies to it)?
+    fn starving(&self, e: &Entry<T>) -> bool {
+        e.skips >= self.promote_k
+    }
+
+    /// Index of the entry the dispatch rule selects next.
+    pub fn best_index(&self) -> Option<usize> {
+        if self.entries.is_empty() {
+            return None;
+        }
+        // Rule 1: earliest-arrived starving entry, if any.
+        let starving = self.entries.iter().enumerate().filter(|(_, e)| self.starving(e)).min_by_key(|(_, e)| e.seq);
+        if let Some((i, _)) = starving {
+            return Some(i);
+        }
+        // Rules 2–4: (class rank, deadline, arrival).
+        self.entries
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, e)| (e.class.rank(), e.deadline.unwrap_or(u64::MAX), e.seq))
+            .map(|(i, _)| i)
+    }
+
+    /// Effective priority rank of entry `i`: its class rank, or 0
+    /// (highest) once it is starving. Drives the preemption mask —
+    /// a starving Background entry must pull workers like an
+    /// Interactive one.
+    pub fn effective_rank(&self, i: usize) -> u8 {
+        let e = &self.entries[i];
+        if self.starving(e) { 0 } else { e.class.rank() }
+    }
+
+    /// Borrow entry `i`'s item (index from [`DispatchQueue::best_index`]).
+    pub fn item(&self, i: usize) -> &T {
+        &self.entries[i].item
+    }
+
+    /// Remove entry `i`, applying skip accounting to the entries it
+    /// bypassed (earlier arrival, lower class).
+    pub fn remove_at(&mut self, i: usize) -> (T, PopInfo) {
+        let removed = self.entries.remove(i);
+        let info = PopInfo {
+            class: removed.class,
+            seq: removed.seq,
+            skips: removed.skips,
+            promoted: removed.skips >= self.promote_k,
+        };
+        for e in &mut self.entries {
+            if e.seq < removed.seq && e.class.rank() > removed.class.rank() {
+                e.skips += 1;
+            }
+        }
+        (removed.item, info)
+    }
+
+    /// Select-and-remove in one step (the conformance harness's view;
+    /// the runtime uses `best_index`/`item`/`remove_at` separately so
+    /// a multi-claim epoch can stay queued until its last claim).
+    pub fn pop_best(&mut self) -> Option<(T, PopInfo)> {
+        self.best_index().map(|i| self.remove_at(i))
+    }
+
+    /// Bitmask of effective ranks present (`bit r` set ⇔ some entry
+    /// has effective rank `r`). The runtime caches this in an atomic
+    /// so `preempt_point` can test "anything higher-priority pending?"
+    /// without taking the queue lock.
+    pub fn class_mask(&self) -> u8 {
+        let mut mask = 0u8;
+        for i in 0..self.entries.len() {
+            mask |= 1 << self.effective_rank(i);
+        }
+        mask
+    }
+}
+
+/// Does `mask` (a [`DispatchQueue::class_mask`]) contain an entry of
+/// strictly higher priority than `rank`?
+#[inline]
+pub fn mask_has_higher(mask: u8, rank: u8) -> bool {
+    mask & ((1u8 << rank.min(7)) - 1) != 0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drain(q: &mut DispatchQueue<usize>) -> Vec<(usize, PopInfo)> {
+        let mut out = Vec::new();
+        while let Some(x) = q.pop_best() {
+            out.push(x);
+        }
+        out
+    }
+
+    #[test]
+    fn single_class_is_fifo() {
+        let mut q = DispatchQueue::new();
+        for i in 0..6usize {
+            q.push(i, LatencyClass::Batch, None);
+        }
+        let order: Vec<usize> = drain(&mut q).into_iter().map(|(i, _)| i).collect();
+        assert_eq!(order, vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn class_priority_orders_across_classes() {
+        let mut q = DispatchQueue::new();
+        q.push(0, LatencyClass::Background, None);
+        q.push(1, LatencyClass::Batch, None);
+        q.push(2, LatencyClass::Interactive, None);
+        let order: Vec<usize> = drain(&mut q).into_iter().map(|(i, _)| i).collect();
+        assert_eq!(order, vec![2, 1, 0]);
+    }
+
+    #[test]
+    fn edf_within_class_none_sorts_last() {
+        let mut q = DispatchQueue::new();
+        q.push(0, LatencyClass::Interactive, Some(50));
+        q.push(1, LatencyClass::Interactive, Some(10));
+        q.push(2, LatencyClass::Interactive, None);
+        q.push(3, LatencyClass::Interactive, Some(10));
+        let order: Vec<usize> = drain(&mut q).into_iter().map(|(i, _)| i).collect();
+        // deadline 10 (seq ties FIFO), 50, then the deadline-less one.
+        assert_eq!(order, vec![1, 3, 0, 2]);
+    }
+
+    #[test]
+    fn background_promotes_after_k_skips() {
+        let mut q = DispatchQueue::with_promote_k(2);
+        q.push(0, LatencyClass::Background, None);
+        // Two later Interactive arrivals bypass it (two skips)...
+        q.push(1, LatencyClass::Interactive, None);
+        q.push(2, LatencyClass::Interactive, None);
+        assert_eq!(q.pop_best().unwrap().0, 1);
+        assert_eq!(q.pop_best().unwrap().0, 2);
+        // ...so the third Interactive arrival must NOT bypass it.
+        q.push(3, LatencyClass::Interactive, None);
+        let (item, info) = q.pop_best().unwrap();
+        assert_eq!(item, 0, "starving Background entry dispatches next");
+        assert!(info.promoted);
+        assert_eq!(info.skips, 2);
+        assert_eq!(q.pop_best().unwrap().0, 3);
+    }
+
+    #[test]
+    fn skips_never_exceed_k() {
+        // Adversarial: keep feeding Interactive entries past one
+        // Background entry; the bound must hold whatever the pressure.
+        let mut q = DispatchQueue::new();
+        q.push(999usize, LatencyClass::Background, None);
+        let mut max_skips = 0;
+        let mut next = 0usize;
+        for _ in 0..50 {
+            q.push(next, LatencyClass::Interactive, None);
+            next += 1;
+            let (_, info) = q.pop_best().unwrap();
+            max_skips = max_skips.max(info.skips);
+            if q.is_empty() {
+                break;
+            }
+        }
+        assert!(max_skips <= PROMOTE_K, "promotion bound violated: {max_skips}");
+    }
+
+    #[test]
+    fn edf_reorder_within_class_is_not_a_skip() {
+        let mut q = DispatchQueue::with_promote_k(1);
+        q.push(0, LatencyClass::Batch, None);
+        q.push(1, LatencyClass::Batch, Some(5));
+        // EDF dispatches 1 first, but 0 must not count as skipped
+        // (same class), so a later same-class deadline still wins.
+        assert_eq!(q.pop_best().unwrap().0, 1);
+        q.push(2, LatencyClass::Batch, Some(7));
+        assert_eq!(q.pop_best().unwrap().0, 2, "no spurious promotion from EDF reorder");
+        assert_eq!(q.pop_best().unwrap().0, 0);
+    }
+
+    #[test]
+    fn class_mask_tracks_effective_ranks() {
+        let mut q = DispatchQueue::with_promote_k(1);
+        assert_eq!(q.class_mask(), 0);
+        q.push(0, LatencyClass::Background, None);
+        assert_eq!(q.class_mask(), 0b100);
+        q.push(1, LatencyClass::Batch, None);
+        assert_eq!(q.class_mask(), 0b110);
+        // Dispatch the Batch entry: the Background one is bypassed
+        // once (k = 1) and becomes effective-Interactive.
+        let i = q.best_index().unwrap();
+        assert_eq!(*q.item(i), 1);
+        q.remove_at(i);
+        assert_eq!(q.class_mask(), 0b001, "starving entry reports rank 0");
+        assert!(mask_has_higher(q.class_mask(), 1));
+        assert!(!mask_has_higher(q.class_mask(), 0));
+    }
+
+    #[test]
+    fn parse_and_names_round_trip() {
+        for c in CLASSES {
+            assert_eq!(LatencyClass::parse(c.name()), Some(c));
+            assert_eq!(LatencyClass::from_rank(c.rank()), c);
+        }
+        assert_eq!(LatencyClass::parse("bg"), Some(LatencyClass::Background));
+        assert!(LatencyClass::parse("nonsense").is_none());
+        assert_eq!(LatencyClass::default(), LatencyClass::Batch);
+    }
+}

@@ -3,6 +3,7 @@
 //! Per-thread counters are kept in cache-line-padded slots so metric
 //! collection never introduces false sharing into the hot loop.
 
+use super::dispatch::LatencyClass;
 use crate::util::sync::CachePadded;
 use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
 
@@ -99,6 +100,13 @@ impl MetricsSink {
             steals_failed: self.per_thread.iter().map(|c| c.steals_failed.load(Relaxed)).sum(),
             backoffs: self.per_thread.iter().map(|c| c.backoffs.load(Relaxed)).sum(),
             iters_per_thread: iters,
+            // Dispatch fields are filled in by the submission layer
+            // (`parallel_for` / `LoopJoin::join`) after collection —
+            // the sink itself never sees the pool's epoch queue.
+            class: LatencyClass::default(),
+            queue_wait_s: 0.0,
+            promoted: false,
+            dispatch_skips: 0,
         }
     }
 }
@@ -119,6 +127,17 @@ pub struct RunMetrics {
     /// Spin→yield backoff transitions across all threads.
     pub backoffs: u64,
     pub iters_per_thread: Vec<u64>,
+    /// Dispatch class the run was submitted under (`Batch` default).
+    pub class: LatencyClass,
+    /// Submission → first claim hand-out on the pool's multi-class
+    /// epoch queue (0.0 for runs that never queued: single-thread,
+    /// spawn-mode, and fallback paths).
+    pub queue_wait_s: f64,
+    /// Whether anti-starvation promotion dispatched the run's epoch.
+    pub promoted: bool,
+    /// Times the epoch was bypassed by later, higher-class arrivals
+    /// (bounded by `sched::dispatch::PROMOTE_K`).
+    pub dispatch_skips: u64,
 }
 
 impl RunMetrics {

@@ -48,10 +48,23 @@
 //! topology-biased selection over the core→NUMA-node map discovered
 //! by [`topology::Topology::detect`] (`BENCH_numa.json` measures the
 //! local-steal fraction and wall-time effect per engine).
+//!
+//! [`ForOpts::class`] / [`ForOpts::deadline`] pick the **dispatch
+//! class** of the submission on the pool's multi-class epoch queue:
+//! `Interactive` > `Batch` (default) > `Background`, EDF within a
+//! class, bounded anti-starvation promotion across classes, and
+//! chunk-granular preemption (engines poll
+//! [`runtime::preempt_point`] between chunk claims, so a newly
+//! arrived `Interactive` loop pulls workers out of a running
+//! `Background` loop without aborting chunks). See `sched::dispatch`
+//! for the exact ordering rule and `sched::runtime` for how it is
+//! enforced; `BENCH_priority.json` measures the Interactive queue-wait
+//! win under saturating Background load.
 
 pub mod binlpt;
 pub mod central;
 pub mod deque;
+pub mod dispatch;
 pub mod metrics;
 pub mod policy;
 pub mod pool;
@@ -60,8 +73,9 @@ pub mod runtime;
 pub mod topology;
 pub mod ws;
 
+pub use dispatch::{DispatchQueue, LatencyClass, PopInfo, CLASSES, PROMOTE_K};
 pub use metrics::{MetricsSink, RunMetrics};
-pub use runtime::{Executor, LoopHandle, Runtime, SpawnExec};
+pub use runtime::{preempt_point, ClassStats, DispatchInfo, Executor, LoopHandle, Runtime, SpawnExec, SubmitOpts};
 pub use topology::{Topology, VictimPolicy};
 pub use ws::{IchParams, StealMerge};
 
@@ -216,6 +230,14 @@ pub struct ForOpts<'a> {
     /// env, else `Topo`, which degrades to exact uniform selection on
     /// single-node topologies).
     pub victim: VictimPolicy,
+    /// Dispatch class on the pool's multi-class epoch queue. The
+    /// default comes from [`LatencyClass::process_default`] (CLI
+    /// `--class` / `ICH_CLASS` env, else `Batch` — all-default
+    /// traffic keeps the exact classless FIFO order).
+    pub class: LatencyClass,
+    /// Absolute virtual-tick deadline for EDF ordering within the
+    /// class (`None` = no deadline, sorts after every deadline).
+    pub deadline: Option<u64>,
 }
 
 impl Default for ForOpts<'_> {
@@ -227,6 +249,8 @@ impl Default for ForOpts<'_> {
             weights: None,
             mode: ExecMode::Pool,
             victim: VictimPolicy::process_default(),
+            class: LatencyClass::process_default(),
+            deadline: None,
         }
     }
 }
@@ -254,6 +278,21 @@ impl<'a> ForOpts<'a> {
     pub fn with_victim(mut self, victim: VictimPolicy) -> Self {
         self.victim = victim;
         self
+    }
+
+    pub fn with_class(mut self, class: LatencyClass) -> Self {
+        self.class = class;
+        self
+    }
+
+    pub fn with_deadline(mut self, deadline: u64) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    /// The [`SubmitOpts`] this run hands the pool.
+    fn submit_opts(&self) -> SubmitOpts {
+        SubmitOpts { class: self.class, deadline: self.deadline, pin_fallback: self.pin }
     }
 }
 
@@ -320,22 +359,36 @@ fn run_policy(
 pub fn parallel_for(n: usize, policy: &Policy, opts: &ForOpts, body: &(dyn Fn(Range<usize>) + Sync)) -> RunMetrics {
     let p = opts.threads.max(1);
     let sink = MetricsSink::new(p);
-    let spawn = SpawnExec::new(opts.pin);
-    let pool;
-    let exec: &dyn Executor = match opts.mode {
+    // `start` is taken only once the executor exists, so the first
+    // pool-mode call in a process does not charge the one-time lazy
+    // global-pool spawn to its own elapsed_s.
+    let start;
+    let dispatch = if p == 1 {
         // p == 1 runs inline in every mode; don't spawn the global
         // pool — or touch the caller's affinity — for callers that
         // never fan out.
-        _ if p == 1 => &InlineExec,
-        ExecMode::Spawn => &spawn,
-        ExecMode::Pool => {
-            pool = Runtime::global().executor();
-            &pool
-        }
+        start = std::time::Instant::now();
+        run_policy(n, policy, p, opts.weights, opts.seed, opts.victim, &InlineExec, body, &sink);
+        None
+    } else if opts.mode == ExecMode::Spawn {
+        let spawn = SpawnExec::new(opts.pin);
+        start = std::time::Instant::now();
+        run_policy(n, policy, p, opts.weights, opts.seed, opts.victim, &spawn, body, &sink);
+        None
+    } else {
+        let pool = Runtime::global().executor_with(opts.submit_opts());
+        start = std::time::Instant::now();
+        run_policy(n, policy, p, opts.weights, opts.seed, opts.victim, &pool, body, &sink);
+        pool.take_report()
     };
-    let start = std::time::Instant::now();
-    run_policy(n, policy, p, opts.weights, opts.seed, opts.victim, exec, body, &sink);
-    sink.collect(start.elapsed())
+    let mut m = sink.collect(start.elapsed());
+    m.class = opts.class;
+    if let Some(d) = dispatch {
+        m.queue_wait_s = d.queue_wait_s;
+        m.promoted = d.promoted;
+        m.dispatch_skips = d.skips;
+    }
+    m
 }
 
 /// Join handle of an asynchronously submitted `parallel_for`.
@@ -349,6 +402,7 @@ pub struct LoopJoin {
     handle: LoopHandle,
     sink: Arc<MetricsSink>,
     start: std::time::Instant,
+    class: LatencyClass,
 }
 
 impl LoopJoin {
@@ -357,10 +411,19 @@ impl LoopJoin {
         self.handle.is_finished()
     }
 
-    /// Wait for the loop, rethrow any worker panic, return its metrics.
+    /// Wait for the loop, rethrow any worker panic, return its metrics
+    /// (including the dispatch class, queue wait, and promotion state
+    /// when the loop ran as a pool epoch).
     pub fn join(self) -> RunMetrics {
-        self.handle.join();
-        self.sink.collect(self.start.elapsed())
+        let dispatch = self.handle.join_with_dispatch();
+        let mut m = self.sink.collect(self.start.elapsed());
+        m.class = self.class;
+        if let Some(d) = dispatch {
+            m.queue_wait_s = d.queue_wait_s;
+            m.promoted = d.promoted;
+            m.dispatch_skips = d.skips;
+        }
+        m
     }
 }
 
@@ -405,10 +468,12 @@ pub fn parallel_for_async_on(
         run_policy(n, &policy, p, weights.as_deref(), seed, victim, exec, &b, &sink2);
     });
     let handle = match opts.mode {
-        ExecMode::Pool => rt.submit_driver(p, driver),
-        ExecMode::Spawn => runtime::detach_driver(driver),
+        ExecMode::Pool => rt.submit_driver_with(p, driver, opts.submit_opts()),
+        // Spawn mode honors the per-run pin the same way blocking
+        // Spawn runs do: the teams' spawned members pin round-robin.
+        ExecMode::Spawn => runtime::detach_driver(driver, opts.pin),
     };
-    LoopJoin { handle, sink, start }
+    LoopJoin { handle, sink, start, class: opts.class }
 }
 
 /// Convenience: per-iteration body.
@@ -593,5 +658,30 @@ mod tests {
         assert!(Policy::Binlpt { max_chunks: 8 }.needs_weights());
         assert!(Policy::Hss.needs_weights());
         assert!(!Policy::Ich(IchParams::default()).needs_weights());
+    }
+
+    #[test]
+    fn dispatch_class_flows_into_run_metrics() {
+        // Pool mode: the run queues as a real epoch, so the metrics
+        // must carry the class and a measured queue wait.
+        let opts = ForOpts { threads: 2, pin: false, ..Default::default() }
+            .with_class(LatencyClass::Interactive)
+            .with_deadline(9);
+        let m = parallel_for(500, &Policy::Dynamic { chunk: 16 }, &opts, &|r| {
+            std::hint::black_box(r.len());
+        });
+        assert_eq!(m.total_iters, 500);
+        assert_eq!(m.class, LatencyClass::Interactive);
+        assert!(m.queue_wait_s > 0.0, "pool-dispatched run must report its queue wait");
+        assert!(m.dispatch_skips <= crate::sched::dispatch::PROMOTE_K);
+
+        // Spawn mode never touches the dispatch queue: class is still
+        // reported, wait stays zero.
+        let opts = ForOpts { threads: 2, pin: false, mode: ExecMode::Spawn, ..Default::default() }
+            .with_class(LatencyClass::Background);
+        let m = parallel_for(100, &Policy::Static, &opts, &|_r| {});
+        assert_eq!(m.class, LatencyClass::Background);
+        assert_eq!(m.queue_wait_s, 0.0);
+        assert!(!m.promoted);
     }
 }

@@ -108,18 +108,32 @@ pub fn current_affinity() -> Option<[u64; 16]> {
     None
 }
 
-/// Run `f(tid)` on `p` freshly spawned scoped threads and wait for all
-/// of them. Threads are pinned round-robin when the host has enough
-/// cores. This pays a spawn+join per call — prefer the persistent
-/// pool ([`super::runtime::Runtime`]) for repeated short loops.
-pub fn scoped_run<F>(p: usize, pin: bool, f: F)
+/// Which threads of a scoped team get pinned (always round-robin,
+/// always gated on the host having a core per thread).
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum TeamPin {
+    /// Nobody pins.
+    None,
+    /// Spawned tids `1..p` pin; the calling thread (tid 0) keeps its
+    /// affinity.
+    Workers,
+    /// Everyone pins, caller included (tid 0 → core 0).
+    All,
+}
+
+/// One scoped fork-join over `p` threads with the given pin mode —
+/// the single implementation behind [`scoped_run`] and
+/// [`scoped_run_pin_workers`], so the spawn loop, the
+/// `num_cpus() >= p` gate, and the `p == 1` shortcut cannot drift
+/// between the two.
+fn scoped_run_with_pin<F>(p: usize, pin: TeamPin, f: F)
 where
     F: Fn(usize) + Sync,
 {
     assert!(p > 0, "need at least one worker");
-    let do_pin = pin && num_cpus() >= p;
+    let do_pin = pin != TeamPin::None && num_cpus() >= p;
     if p == 1 {
-        if do_pin {
+        if do_pin && pin == TeamPin::All {
             pin_to_cpu(0);
         }
         f(0);
@@ -135,11 +149,38 @@ where
                 f(tid);
             });
         }
-        if do_pin {
+        if do_pin && pin == TeamPin::All {
             pin_to_cpu(0);
         }
         f(0); // caller participates as thread 0
     });
+}
+
+/// Run `f(tid)` on `p` freshly spawned scoped threads and wait for all
+/// of them. Threads are pinned round-robin when the host has enough
+/// cores. This pays a spawn+join per call — prefer the persistent
+/// pool ([`super::runtime::Runtime`]) for repeated short loops.
+pub fn scoped_run<F>(p: usize, pin: bool, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    scoped_run_with_pin(p, if pin { TeamPin::All } else { TeamPin::None }, f);
+}
+
+/// Like [`scoped_run`] with pinning applied to the *spawned* threads
+/// only: tids `1..p` are pinned round-robin (when the host has a core
+/// per thread) while the calling thread — tid 0 — keeps its affinity
+/// untouched. This is the per-run pinning policy of the pool's
+/// oversized-run fallback ([`super::runtime::SubmitOpts::pin_fallback`]):
+/// the caller's placement belongs to whoever pinned it (the pool's
+/// spawn-time map, a `taskset`, nobody), so a transient team must
+/// never re-pin it, but its own short-lived members may still honor
+/// `ForOpts::pin`.
+pub fn scoped_run_pin_workers<F>(p: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    scoped_run_with_pin(p, TeamPin::Workers, f);
 }
 
 #[cfg(test)]
@@ -180,6 +221,22 @@ mod tests {
         scoped_run(2, true, |_tid| {
             std::hint::black_box(1 + 1);
         });
+    }
+
+    #[test]
+    fn pin_workers_variant_covers_and_never_pins_the_caller() {
+        let before = current_affinity();
+        let p = 4;
+        let hits: Vec<AtomicUsize> = (0..p).map(|_| AtomicUsize::new(0)).collect();
+        scoped_run_pin_workers(p, |tid| {
+            hits[tid].fetch_add(1, Ordering::SeqCst);
+        });
+        for (tid, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::SeqCst), 1, "tid {tid}");
+        }
+        if let Some(b) = before {
+            assert_eq!(current_affinity().unwrap(), b, "caller affinity must survive the pinned team");
+        }
     }
 
     #[test]

@@ -9,7 +9,7 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering::SeqCst};
 
 use super::metrics::MetricsSink;
 use super::policy;
-use super::runtime::Executor;
+use super::runtime::{preempt_point, Executor};
 use crate::util::sync::CachePadded;
 
 /// AWF: factoring-style central scheduling where each thread's chunk
@@ -26,6 +26,8 @@ pub fn run_awf(n: usize, p: usize, exec: &dyn Executor, body: &(dyn Fn(Range<usi
     let busy: Vec<CachePadded<AtomicU64>> = (0..p).map(|_| CachePadded::new(AtomicU64::new(1))).collect();
 
     exec.run(p, &|tid| loop {
+        // Chunk boundary: yield to a higher-class epoch, if pending.
+        preempt_point();
         // weight_t = (own throughput) / (mean throughput); 1.0 before
         // any measurement exists.
         let my_rate = done[tid].load(SeqCst) as f64 / busy[tid].load(SeqCst) as f64;

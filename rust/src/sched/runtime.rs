@@ -89,19 +89,72 @@
 //! and nested same-pool submissions fall back to scoped spawning /
 //! detached teams, exactly like the old held-run-lock detection.
 //! With those two rules, every thread waiting on an epoch is outside
-//! the pool, and FIFO service of the front epoch guarantees global
-//! progress.
+//! the pool, and bounded-bypass service of the queue (see below)
+//! guarantees global progress.
+//!
+//! # Multi-class dispatch (priorities + deadlines)
+//!
+//! The epoch queue is no longer strictly FIFO: it is a
+//! [`DispatchQueue`] ordering epochs by [`LatencyClass`]
+//! (`Interactive` > `Batch` > `Background`), earliest-deadline-first
+//! within a class, FIFO among equal-deadline peers, with
+//! anti-starvation promotion after [`crate::sched::dispatch::PROMOTE_K`]
+//! cross-class bypasses — see `sched::dispatch` for the exact rule
+//! and its bounded-bypass invariant. When every submission uses the
+//! default `Batch` class with no deadline, the dispatch order is the
+//! exact FIFO of the previous design.
+//!
+//! Classes and deadlines enter through [`SubmitOpts`]
+//! ([`Runtime::run_with`], [`Runtime::submit_arc_with`],
+//! [`Runtime::submit_driver_with`]) or, one level up, through
+//! `ForOpts::class` / `ForOpts::deadline` on `parallel_for` and
+//! `parallel_for_async`:
+//!
+//! ```
+//! use ich::sched::runtime::{Runtime, SubmitOpts};
+//! use ich::sched::LatencyClass;
+//!
+//! let rt = Runtime::with_pinning(2, false);
+//! // A low-priority sweep...
+//! let bg = rt.submit_arc_with(
+//!     2,
+//!     std::sync::Arc::new(|_tid: usize| { /* heavy scan */ }),
+//!     SubmitOpts { class: LatencyClass::Background, ..Default::default() },
+//! );
+//! // ...must not delay a latency-sensitive request with a deadline.
+//! let hot = rt.submit_arc_with(
+//!     2,
+//!     std::sync::Arc::new(|_tid: usize| { /* request handler */ }),
+//!     SubmitOpts { class: LatencyClass::Interactive, deadline: Some(42), ..Default::default() },
+//! );
+//! hot.join();
+//! bg.join();
+//! ```
+//!
+//! **Preemption at chunk granularity.** A newly arrived
+//! higher-class epoch does not wait for running lower-class bodies to
+//! finish: scheduling engines call [`preempt_point`] between chunk
+//! claims, and a pool thread executing a lower-class claim
+//! claims-and-runs the higher-class epoch *inline* at that boundary,
+//! then resumes its interrupted loop. No chunk is aborted — running
+//! chunks retire normally — so exactly-once execution is preserved
+//! (pinned by `tests/dispatch_conformance.rs`). Recursion is bounded
+//! by the class count: a preempted claim only yields to *strictly*
+//! higher effective priority. The check is two thread-local reads
+//! plus one relaxed atomic load of a cached class mask, so engines
+//! can afford it per chunk.
 
 use std::any::Any;
 use std::cell::{Cell, RefCell, UnsafeCell};
-use std::collections::VecDeque;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::Ordering::{AcqRel, Acquire, Relaxed, Release};
-use std::sync::atomic::{AtomicBool, AtomicU8, AtomicUsize};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, AtomicUsize};
 use std::sync::{Arc, Mutex, OnceLock};
 use std::thread::{self, Thread};
+use std::time::Instant;
 
-use super::pool::{num_cpus, pin_to_cpu, pinned_core, scoped_run};
+use super::dispatch::{mask_has_higher, DispatchQueue, LatencyClass, PopInfo};
+use super::pool::{num_cpus, pin_to_cpu, pinned_core, scoped_run, scoped_run_pin_workers};
 use super::topology::Topology;
 
 /// How a scheduling engine obtains its `p` worker threads. Engines
@@ -146,26 +199,110 @@ impl Executor for SpawnExec {
     fn run_async(&self, p: usize, body: Arc<dyn Fn(usize) + Send + Sync>) -> LoopHandle {
         // A detached coordinator thread pays the per-call spawn cost
         // (this is the measurement baseline) but never blocks the
-        // submitter. It never pins: pinning is for the pool's
-        // spawn-time placement; a transient team must not re-pin
-        // whatever cores the pool already owns.
-        detach_team(p, body)
+        // submitter. With `pin` set, only the team's *spawned* members
+        // are pinned (workers-only round-robin) — the detached
+        // coordinator thread itself stays unpinned, mirroring the
+        // blocking fallback's caller-untouched rule.
+        detach_team(p, body, self.pin)
     }
 }
 
-/// Executor view over a [`Runtime`].
-#[derive(Clone, Copy)]
+/// Per-submission dispatch options: latency class, optional deadline,
+/// and the per-run pinning preference of fallback scoped teams.
+#[derive(Clone, Copy, Debug)]
+pub struct SubmitOpts {
+    /// Dispatch class (see [`LatencyClass`]). The default is
+    /// [`LatencyClass::process_default`] (CLI `--class` / `ICH_CLASS`
+    /// env, else `Batch`) — the same resolution `ForOpts` uses, so
+    /// direct `Runtime` submissions and `parallel_for` traffic agree
+    /// on what "default class" means; all-default traffic reproduces
+    /// the exact FIFO order of the classless queue.
+    pub class: LatencyClass,
+    /// Absolute virtual-tick deadline for EDF ordering within the
+    /// class (`None` sorts after every deadline). Only the ordering of
+    /// these values matters — the runtime never compares them against
+    /// a wall clock.
+    pub deadline: Option<u64>,
+    /// When a run cannot be served by the pool (wider than the pool's
+    /// worker count) and falls back to a per-call scoped team, pin the
+    /// *spawned* team members round-robin. The calling thread's
+    /// affinity is never touched, and nested fallbacks from pool
+    /// workers stay unpinned — re-pinning either would clobber
+    /// placement this run does not own.
+    pub pin_fallback: bool,
+}
+
+impl Default for SubmitOpts {
+    fn default() -> SubmitOpts {
+        SubmitOpts { class: LatencyClass::process_default(), deadline: None, pin_fallback: false }
+    }
+}
+
+/// How the pool dispatched one epoch (readable after its join).
+#[derive(Clone, Copy, Debug)]
+pub struct DispatchInfo {
+    pub class: LatencyClass,
+    /// Submission → first claim hand-out.
+    pub queue_wait_s: f64,
+    /// Whether anti-starvation promotion selected the epoch.
+    pub promoted: bool,
+    /// Times the epoch was bypassed by later, higher-class arrivals.
+    pub skips: u64,
+}
+
+/// Cumulative per-class dispatch counters of one pool
+/// ([`Runtime::class_stats`]).
+#[derive(Clone, Copy, Debug)]
+pub struct ClassStats {
+    pub class: LatencyClass,
+    /// Epochs enqueued with this class.
+    pub submitted: u64,
+    /// Epochs whose first claim has been handed out.
+    pub dispatched: u64,
+    /// Epochs dispatched via anti-starvation promotion.
+    pub promotions: u64,
+    /// Total submission → first-claim wait across dispatched epochs.
+    pub queue_wait_s_total: f64,
+    /// Largest single queue wait seen.
+    pub queue_wait_s_max: f64,
+}
+
+/// Per-class aggregation cells (one triple per pool).
+#[derive(Default)]
+struct ClassAgg {
+    submitted: AtomicU64,
+    dispatched: AtomicU64,
+    promotions: AtomicU64,
+    queue_wait_ns: AtomicU64,
+    queue_wait_ns_max: AtomicU64,
+}
+
+/// Executor view over a [`Runtime`], carrying the dispatch options of
+/// one submission and reporting back how the pool dispatched it.
 pub struct PoolExec<'a> {
     rt: &'a Runtime,
+    opts: SubmitOpts,
+    /// Dispatch info of the last blocking run through this view
+    /// (engines call `run` exactly once per invocation).
+    report: Mutex<Option<DispatchInfo>>,
+}
+
+impl PoolExec<'_> {
+    /// Dispatch info recorded by the last [`Executor::run`] through
+    /// this view (`None` for fallback paths and single-thread runs).
+    pub fn take_report(&self) -> Option<DispatchInfo> {
+        self.report.lock().unwrap().take()
+    }
 }
 
 impl Executor for PoolExec<'_> {
     fn run(&self, p: usize, f: &(dyn Fn(usize) + Sync)) {
-        self.rt.run(p, f);
+        let info = self.rt.run_with(p, f, self.opts);
+        *self.report.lock().unwrap() = info;
     }
 
     fn run_async(&self, p: usize, body: Arc<dyn Fn(usize) + Send + Sync>) -> LoopHandle {
-        self.rt.submit_arc(p, body)
+        self.rt.submit_arc_with(p, body, self.opts)
     }
 }
 
@@ -216,6 +353,19 @@ struct Epoch {
     waiter: Mutex<Option<Thread>>,
     /// First body panic, rethrown on the joining thread.
     panic: Mutex<Option<Box<dyn Any + Send>>>,
+    /// Dispatch class (multi-class queue ordering).
+    class: LatencyClass,
+    /// Virtual-tick deadline for EDF ordering within the class.
+    deadline: Option<u64>,
+    /// When the epoch was enqueued (queue-wait measurement).
+    enqueued_at: Instant,
+    /// Submission → first claim hand-out, in nanoseconds (0 = not yet
+    /// dispatched; a genuine zero-length wait is stored as 1).
+    dispatched_ns: AtomicU64,
+    /// Bypass count recorded when the queue removed the epoch.
+    skips: AtomicU64,
+    /// Whether anti-starvation promotion dispatched the epoch.
+    promoted: AtomicBool,
 }
 
 // SAFETY: the only non-Send/Sync field is the `Task::Borrowed` raw
@@ -226,7 +376,7 @@ unsafe impl Send for Epoch {}
 unsafe impl Sync for Epoch {}
 
 impl Epoch {
-    fn new(claims: usize, tid0: usize, task: Task) -> Arc<Epoch> {
+    fn new(claims: usize, tid0: usize, task: Task, opts: SubmitOpts) -> Arc<Epoch> {
         Arc::new(Epoch {
             claims,
             next_claim: AtomicUsize::new(0),
@@ -235,7 +385,23 @@ impl Epoch {
             pending: AtomicUsize::new(claims),
             waiter: Mutex::new(None),
             panic: Mutex::new(None),
+            class: opts.class,
+            deadline: opts.deadline,
+            enqueued_at: Instant::now(),
+            dispatched_ns: AtomicU64::new(0),
+            skips: AtomicU64::new(0),
+            promoted: AtomicBool::new(false),
         })
+    }
+
+    /// Dispatch metadata (complete once the epoch has been joined).
+    fn dispatch_info(&self) -> DispatchInfo {
+        DispatchInfo {
+            class: self.class,
+            queue_wait_s: self.dispatched_ns.load(Acquire) as f64 * 1e-9,
+            promoted: self.promoted.load(Acquire),
+            skips: self.skips.load(Acquire),
+        }
     }
 
     /// Record one finished assignment; the last one wakes the joiner.
@@ -338,6 +504,28 @@ impl LoopHandle {
         }
     }
 
+    /// How the pool dispatched this epoch: class, queue wait,
+    /// promotion. `None` for completed-at-submission and detached-
+    /// thread handles (they never touched the dispatch queue); wait
+    /// and promotion fields are final only once the handle has been
+    /// joined.
+    pub fn dispatch_info(&self) -> Option<DispatchInfo> {
+        match &self.inner {
+            HandleInner::Epoch(e) => Some(e.dispatch_info()),
+            _ => None,
+        }
+    }
+
+    /// [`LoopHandle::join`], then report the final dispatch info.
+    pub fn join_with_dispatch(self) -> Option<DispatchInfo> {
+        let epoch = match &self.inner {
+            HandleInner::Epoch(e) => Some(Arc::clone(e)),
+            _ => None,
+        };
+        self.join();
+        epoch.map(|e| e.dispatch_info())
+    }
+
     /// Wait for the epoch to complete; rethrows the first worker panic
     /// on this thread.
     pub fn join(self) {
@@ -362,7 +550,14 @@ impl LoopHandle {
 /// Queue + shutdown flag shared between a pool's workers and its
 /// submitters.
 struct PoolShared {
-    queue: Mutex<VecDeque<Arc<Epoch>>>,
+    queue: Mutex<DispatchQueue<Arc<Epoch>>>,
+    /// Cached [`DispatchQueue::class_mask`] (bit `r` ⇔ an entry with
+    /// effective rank `r` is pending), refreshed under the queue lock
+    /// after every push/claim. Lets [`preempt_point`] answer "anything
+    /// higher-priority pending?" with one relaxed load.
+    class_mask: AtomicU8,
+    /// Per-class dispatch counters, indexed by [`LatencyClass::rank`].
+    stats: [ClassAgg; 3],
     shutdown: AtomicBool,
     /// `parked[i]` is true while worker `i` is (about to be) parked.
     /// Published with `Release` *before* the worker's final
@@ -391,6 +586,105 @@ thread_local! {
     /// nested, blocked caller — a circular wait (module docs,
     /// "Deadlock discipline").
     static MID_EPOCH_ON: RefCell<Vec<usize>> = RefCell::new(Vec::new());
+
+    /// Mirror of `PREEMPT_ON.len()`, kept in a `Cell` so the
+    /// per-chunk fast path of [`preempt_point`] (and the engines'
+    /// classless/Spawn baselines, where the stack is provably empty)
+    /// costs one thread-local read instead of a `RefCell` borrow.
+    static PREEMPT_DEPTH: Cell<usize> = Cell::new(0);
+
+    /// Stack of preemption frames, one per epoch claim this thread is
+    /// currently executing (bottom = outermost). [`preempt_point`]
+    /// consults the top to decide whether a pending higher-class
+    /// epoch should be claimed-and-run inline at a chunk boundary.
+    static PREEMPT_ON: RefCell<Vec<PreemptFrame>> = RefCell::new(Vec::new());
+}
+
+/// Preemption context of one executing claim.
+struct PreemptFrame {
+    shared: Arc<PoolShared>,
+    /// Effective rank the claim was dispatched at (preemption
+    /// threshold: only strictly higher ranks interrupt it).
+    rank: u8,
+    /// Higher-class claims this claim has already yielded to. Once it
+    /// reaches [`super::dispatch::PROMOTE_K`] the claim stops
+    /// yielding: queued entries have a bounded bypass count, and a
+    /// *running* claim must not be strictly worse off than a queued
+    /// one, or a sustained high-class stream would suspend it forever
+    /// while its queued siblings finish via promotion.
+    yields: u64,
+}
+
+/// Depth of inline epoch execution on this thread: 0 outside any pool
+/// claim, 1 inside a claim, 2+ when a higher-class epoch preempted a
+/// running lower-class claim at a chunk boundary. Exposed so the
+/// conformance harness can prove a claim really ran *preempted*.
+pub fn preempt_depth() -> usize {
+    PREEMPT_DEPTH.with(|d| d.get())
+}
+
+/// Cooperative preemption check — scheduling engines call this
+/// between chunk claims. If the calling thread is executing a pool
+/// epoch claim and that pool has a pending epoch of *strictly higher*
+/// effective priority, claim and execute the higher epoch inline,
+/// then return to the interrupted claim. Outside pool claims (scoped
+/// spawns, inline runs) this is two thread-local reads and returns
+/// immediately.
+///
+/// The interrupted claim's total yields are bounded by
+/// [`super::dispatch::PROMOTE_K`] — the same anti-starvation weight
+/// the queue applies to bypassed entries — so a sustained stream of
+/// higher-class arrivals cannot suspend a running claim forever; once
+/// the bound is hit the claim runs to completion and further
+/// higher-class epochs wait their (short) turn in the queue.
+#[inline]
+pub fn preempt_point() {
+    // Fast path: outside any pool claim (scoped spawns, inline runs,
+    // the classless baseline) this is a single Cell read.
+    if PREEMPT_DEPTH.with(|d| d.get()) == 0 {
+        return;
+    }
+    loop {
+        let hit = PREEMPT_ON.with(|s| {
+            let s = s.borrow();
+            let f = s.last()?;
+            if f.yields >= super::dispatch::PROMOTE_K {
+                return None;
+            }
+            if mask_has_higher(f.shared.class_mask.load(Relaxed), f.rank) {
+                Some((Arc::clone(&f.shared), f.rank))
+            } else {
+                None
+            }
+        });
+        let Some((shared, rank)) = hit else { return };
+        let Some((epoch, claim, eff)) = claim_next_above(&shared, rank) else { return };
+        PREEMPT_ON.with(|s| {
+            if let Some(f) = s.borrow_mut().last_mut() {
+                f.yields += 1;
+            }
+        });
+        execute_claim(&shared, &epoch, claim, eff);
+    }
+}
+
+/// Execute one claim with the preemption context pushed, so chunk
+/// boundaries inside the body can yield to higher classes. `rank` is
+/// the *effective* rank the dispatcher selected the claim at — for a
+/// promoted (starving) epoch that is 0, so an anti-starvation
+/// dispatch cannot be re-preempted by the very classes that starved
+/// it, and preemption recursion stays bounded by the class count (a
+/// rank-0 claim yields to nothing).
+fn execute_claim(shared: &Arc<PoolShared>, epoch: &Epoch, claim: usize, rank: u8) {
+    PREEMPT_ON.with(|s| s.borrow_mut().push(PreemptFrame { shared: Arc::clone(shared), rank, yields: 0 }));
+    PREEMPT_DEPTH.with(|d| d.set(d.get() + 1));
+    // `execute` never unwinds (body panics are caught and stashed on
+    // the epoch), so the pop below always runs.
+    execute(epoch, claim);
+    PREEMPT_DEPTH.with(|d| d.set(d.get() - 1));
+    PREEMPT_ON.with(|s| {
+        s.borrow_mut().pop();
+    });
 }
 
 struct Worker {
@@ -414,24 +708,69 @@ fn wait_step(step: u32) {
     }
 }
 
-/// Hand out the next unclaimed assignment of the front epoch, popping
-/// epochs whose assignments are exhausted. FIFO: an epoch's claims
-/// are fully handed out before the next epoch's first claim.
-fn claim_next(shared: &PoolShared) -> Option<(Arc<Epoch>, usize)> {
+/// Hand out the next unclaimed assignment of the best epoch under the
+/// multi-class dispatch rule (`sched::dispatch`), removing an epoch
+/// once its last assignment is handed out. A partially claimed epoch
+/// stays queued, but a higher-class arrival outranks it for *new*
+/// claims — that is preemption at chunk granularity: running claims
+/// retire normally while fresh workers go to the higher class.
+fn claim_next(shared: &PoolShared) -> Option<(Arc<Epoch>, usize, u8)> {
+    claim_next_above(shared, u8::MAX)
+}
+
+/// Like [`claim_next`], but only dispatches epochs whose effective
+/// rank is *strictly higher priority* (numerically lower) than
+/// `below_rank` — the preemption filter. The returned rank is the
+/// effective rank the claim was selected at (0 for an anti-starvation
+/// promotion), which the executing thread adopts as its own
+/// preemption threshold.
+fn claim_next_above(shared: &PoolShared, below_rank: u8) -> Option<(Arc<Epoch>, usize, u8)> {
     let mut q = shared.queue.lock().unwrap();
-    while let Some(front) = q.front() {
-        let c = front.next_claim.load(Relaxed);
-        if c < front.claims {
-            front.next_claim.store(c + 1, Relaxed);
-            let epoch = Arc::clone(front);
-            if c + 1 == front.claims {
-                q.pop_front();
-            }
-            return Some((epoch, c));
+    let out = loop {
+        let Some(idx) = q.best_index() else { break None };
+        let eff = q.effective_rank(idx);
+        if eff >= below_rank {
+            break None;
         }
-        q.pop_front();
+        let epoch = Arc::clone(q.item(idx));
+        let c = epoch.next_claim.load(Relaxed);
+        if c < epoch.claims {
+            epoch.next_claim.store(c + 1, Relaxed);
+            if c + 1 == epoch.claims {
+                let (_, info) = q.remove_at(idx);
+                note_removed(shared, &epoch, &info);
+            }
+            if c == 0 {
+                note_first_dispatch(shared, &epoch);
+            }
+            break Some((epoch, c, eff));
+        }
+        // Defensive: an exhausted epoch cannot stay queued (its last
+        // claim removes it above), but never spin on one if it does.
+        let (_, info) = q.remove_at(idx);
+        note_removed(shared, &epoch, &info);
+    };
+    shared.class_mask.store(q.class_mask(), Relaxed);
+    out
+}
+
+/// Record an epoch's first claim hand-out: its queue wait, per class.
+fn note_first_dispatch(shared: &PoolShared, epoch: &Epoch) {
+    let wait_ns = (epoch.enqueued_at.elapsed().as_nanos() as u64).max(1);
+    epoch.dispatched_ns.store(wait_ns, Release);
+    let agg = &shared.stats[epoch.class.rank() as usize];
+    agg.dispatched.fetch_add(1, Relaxed);
+    agg.queue_wait_ns.fetch_add(wait_ns, Relaxed);
+    agg.queue_wait_ns_max.fetch_max(wait_ns, Relaxed);
+}
+
+/// Record the queue's removal verdict (bypass count / promotion).
+fn note_removed(shared: &PoolShared, epoch: &Epoch, info: &PopInfo) {
+    epoch.skips.store(info.skips, Release);
+    if info.promoted {
+        epoch.promoted.store(true, Release);
+        shared.stats[epoch.class.rank() as usize].promotions.fetch_add(1, Relaxed);
     }
-    None
 }
 
 fn worker_loop(shared: Arc<PoolShared>, idx: usize, cpu: Option<usize>) {
@@ -441,9 +780,9 @@ fn worker_loop(shared: Arc<PoolShared>, idx: usize, cpu: Option<usize>) {
     WORKER_OF.with(|w| w.set(Arc::as_ptr(&shared) as usize));
     let mut step = 0u32;
     loop {
-        if let Some((epoch, claim)) = claim_next(&shared) {
+        if let Some((epoch, claim, rank)) = claim_next(&shared) {
             step = 0;
-            execute(&epoch, claim);
+            execute_claim(&shared, &epoch, claim, rank);
             continue;
         }
         // Drain-then-exit: shutdown is honored only once the queue is
@@ -458,10 +797,10 @@ fn worker_loop(shared: Arc<PoolShared>, idx: usize, cpu: Option<usize>) {
             // Publish "parked" BEFORE the final re-check (see
             // `PoolShared::parked` for the no-lost-wakeup argument).
             shared.parked[idx].store(true, Release);
-            if let Some((epoch, claim)) = claim_next(&shared) {
+            if let Some((epoch, claim, rank)) = claim_next(&shared) {
                 shared.parked[idx].store(false, Release);
                 step = 0;
-                execute(&epoch, claim);
+                execute_claim(&shared, &epoch, claim, rank);
                 continue;
             }
             if shared.shutdown.load(Acquire) {
@@ -504,7 +843,9 @@ impl Runtime {
         let ncpus = num_cpus();
         let do_pin = pin && ncpus > workers;
         let shared = Arc::new(PoolShared {
-            queue: Mutex::new(VecDeque::new()),
+            queue: Mutex::new(DispatchQueue::new()),
+            class_mask: AtomicU8::new(0),
+            stats: std::array::from_fn(|_| ClassAgg::default()),
             shutdown: AtomicBool::new(false),
             parked: (0..workers).map(|_| AtomicBool::new(false)).collect(),
         });
@@ -564,9 +905,31 @@ impl Runtime {
         map
     }
 
-    /// An [`Executor`] view of this pool.
+    /// An [`Executor`] view of this pool (default dispatch options).
     pub fn executor(&self) -> PoolExec<'_> {
-        PoolExec { rt: self }
+        self.executor_with(SubmitOpts::default())
+    }
+
+    /// An [`Executor`] view submitting with explicit dispatch options
+    /// (latency class, deadline, fallback pinning).
+    pub fn executor_with(&self, opts: SubmitOpts) -> PoolExec<'_> {
+        PoolExec { rt: self, opts, report: Mutex::new(None) }
+    }
+
+    /// Cumulative per-class dispatch counters of this pool, indexed by
+    /// [`LatencyClass::rank`] order (Interactive, Batch, Background).
+    pub fn class_stats(&self) -> [ClassStats; 3] {
+        std::array::from_fn(|i| {
+            let a = &self.shared.stats[i];
+            ClassStats {
+                class: LatencyClass::from_rank(i as u8),
+                submitted: a.submitted.load(Relaxed),
+                dispatched: a.dispatched.load(Relaxed),
+                promotions: a.promotions.load(Relaxed),
+                queue_wait_s_total: a.queue_wait_ns.load(Relaxed) as f64 * 1e-9,
+                queue_wait_s_max: a.queue_wait_ns_max.load(Relaxed) as f64 * 1e-9,
+            }
+        })
     }
 
     /// Is the calling thread one of this pool's workers?
@@ -587,7 +950,12 @@ impl Runtime {
     /// the selective wake race-free, so a small epoch on a big pool
     /// does not storm every worker with futex wakes.
     fn enqueue(&self, epoch: &Arc<Epoch>) {
-        self.shared.queue.lock().unwrap().push_back(Arc::clone(epoch));
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.push(Arc::clone(epoch), epoch.class, epoch.deadline);
+            self.shared.class_mask.store(q.class_mask(), Relaxed);
+        }
+        self.shared.stats[epoch.class.rank() as usize].submitted.fetch_add(1, Relaxed);
         let mut need = epoch.claims;
         for (i, w) in self.workers.iter().enumerate() {
             if need == 0 {
@@ -612,32 +980,56 @@ impl Runtime {
     /// wait on the queue they are supposed to drain), and for nested
     /// calls from a thread already mid-epoch on this pool (which must
     /// not queue behind the epoch its own caller is part of).
-    /// Fallback runs never pin: `scoped_run(_, true, _)` would re-pin the *calling*
-    /// thread — a pool worker or an arbitrary submitter — to core 0
-    /// permanently, clobbering the spawn-time round-robin placement.
+    /// Fallback runs never pin the *calling* thread:
+    /// `scoped_run(_, true, _)` would re-pin it — a pool worker or an
+    /// arbitrary submitter — to core 0 permanently, clobbering the
+    /// spawn-time round-robin placement. An oversized run *can* opt
+    /// into pinning its spawned team members via
+    /// [`SubmitOpts::pin_fallback`] ([`Runtime::run_with`]).
     pub fn run(&self, p: usize, f: &(dyn Fn(usize) + Sync)) {
+        self.run_with(p, f, SubmitOpts::default());
+    }
+
+    /// [`Runtime::run`] with explicit dispatch options. Returns how
+    /// the pool dispatched the epoch (`None` on the inline and
+    /// scoped-fallback paths, which never queue).
+    pub fn run_with(&self, p: usize, f: &(dyn Fn(usize) + Sync), opts: SubmitOpts) -> Option<DispatchInfo> {
         assert!(p > 0, "need at least one worker");
         if p == 1 {
             f(0);
-            return;
+            return None;
         }
         if p - 1 > self.workers.len() {
-            // More threads than pool workers: per-call spawn.
-            scoped_run(p, false, f);
-            return;
+            // More threads than pool workers: per-call spawn. The
+            // per-run pin preference governs the spawned team members
+            // only (the caller's affinity is never touched).
+            if opts.pin_fallback {
+                scoped_run_pin_workers(p, f);
+            } else {
+                scoped_run(p, false, f);
+            }
+            return None;
         }
         if self.on_own_worker() || self.mid_epoch_here() {
             // Nested parallel_for from inside a pool body, or from an
             // outer blocking run's tid 0 on this same pool: enqueueing
             // would wait on an epoch that cannot finish before us.
+            // Never pinned — a nested team would clobber cores the
+            // pool's own workers occupy.
             scoped_run(p, false, f);
-            return;
+            return None;
         }
         let id = Arc::as_ptr(&self.shared) as usize;
-        let epoch = Epoch::new(p - 1, 1, Task::Borrowed(erase(f)));
+        let epoch = Epoch::new(p - 1, 1, Task::Borrowed(erase(f)), opts);
         self.enqueue(&epoch);
         // The caller participates as tid 0 — marked mid-epoch so a
-        // nested same-pool submission from the body falls back. A
+        // nested same-pool submission from the body falls back. The
+        // preemption context is deliberately NOT pushed here: only
+        // pool workers inline-execute foreign epochs. The submitter is
+        // an application thread that may hold application locks across
+        // parallel_for; running an arbitrary higher-class body on it
+        // could deadlock on those locks (lock inversion), so its tid-0
+        // share never yields — preemption happens on the workers. A
         // panic here must not unwind past the join while workers may
         // still hold the borrowed body pointer, so catch it (which
         // also keeps the push/pop balanced) and rethrow after.
@@ -653,6 +1045,7 @@ impl Runtime {
         if let Some(payload) = epoch.panic.lock().unwrap().take() {
             resume_unwind(payload);
         }
+        Some(epoch.dispatch_info())
     }
 
     /// Asynchronously run `body(tid)` for every `tid in 0..p`: enqueue
@@ -670,11 +1063,23 @@ impl Runtime {
 
     /// [`Runtime::submit`] with a pre-shared body.
     pub fn submit_arc(&self, p: usize, body: Arc<dyn Fn(usize) + Send + Sync>) -> LoopHandle {
+        self.submit_arc_with(p, body, SubmitOpts::default())
+    }
+
+    /// [`Runtime::submit_arc`] with explicit dispatch options.
+    pub fn submit_arc_with(&self, p: usize, body: Arc<dyn Fn(usize) + Send + Sync>, opts: SubmitOpts) -> LoopHandle {
         assert!(p > 0, "need at least one worker");
-        if p > self.workers.len() || self.on_own_worker() || self.mid_epoch_here() {
-            return detach_team(p, body);
+        if p > self.workers.len() {
+            // Oversized for the pool: detached team, honoring the
+            // per-run pin for its spawned members.
+            return detach_team(p, body, opts.pin_fallback);
         }
-        let epoch = Epoch::new(p, 0, Task::Owned(body));
+        if self.on_own_worker() || self.mid_epoch_here() {
+            // Nested submissions never pin (they would clobber cores
+            // the pool's own workers occupy).
+            return detach_team(p, body, false);
+        }
+        let epoch = Epoch::new(p, 0, Task::Owned(body), opts);
         self.enqueue(&epoch);
         LoopHandle::from_epoch(epoch)
     }
@@ -692,9 +1097,25 @@ impl Runtime {
     /// have not been picked up yet) rather than parking, so the epoch
     /// completes even on a pool with a single worker.
     pub fn submit_driver(&self, p: usize, driver: Box<dyn FnOnce(&dyn Executor) + Send>) -> LoopHandle {
+        self.submit_driver_with(p, driver, SubmitOpts::default())
+    }
+
+    /// [`Runtime::submit_driver`] with explicit dispatch options.
+    pub fn submit_driver_with(
+        &self,
+        p: usize,
+        driver: Box<dyn FnOnce(&dyn Executor) + Send>,
+        opts: SubmitOpts,
+    ) -> LoopHandle {
         assert!(p > 0, "need at least one worker");
-        if p > self.workers.len() || self.on_own_worker() || self.mid_epoch_here() {
-            return detach_driver(driver);
+        if p > self.workers.len() {
+            // Oversized for the pool: detached driver, honoring the
+            // per-run pin for its scoped teams' spawned members.
+            return detach_driver(driver, opts.pin_fallback);
+        }
+        if self.on_own_worker() || self.mid_epoch_here() {
+            // Nested submissions never pin.
+            return detach_driver(driver, false);
         }
         let relay = Arc::new(Relay::new());
         let driver_cell = Mutex::new(Some(driver));
@@ -715,27 +1136,54 @@ impl Runtime {
                 r2.participate();
             }
         };
-        let epoch = Epoch::new(p, 0, Task::Owned(Arc::new(body)));
+        let epoch = Epoch::new(p, 0, Task::Owned(Arc::new(body)), opts);
         self.enqueue(&epoch);
         LoopHandle::from_epoch(epoch)
     }
 }
 
 /// Detached fallback team for async submissions the pool cannot take.
-fn detach_team(p: usize, body: Arc<dyn Fn(usize) + Send + Sync>) -> LoopHandle {
+/// `pin_workers` pins the spawned team members round-robin (the
+/// per-run `ForOpts::pin` preference); the detached coordinator
+/// thread itself is never pinned.
+fn detach_team(p: usize, body: Arc<dyn Fn(usize) + Send + Sync>, pin_workers: bool) -> LoopHandle {
     let join = thread::Builder::new()
         .name("ich-async-team".into())
-        .spawn(move || scoped_run(p, false, |tid| body(tid)))
+        .spawn(move || {
+            if pin_workers {
+                scoped_run_pin_workers(p, |tid| body(tid));
+            } else {
+                scoped_run(p, false, |tid| body(tid));
+            }
+        })
         .expect("spawn async team thread");
     LoopHandle::from_thread(join)
 }
 
+/// Executor for detached drivers honoring the per-run pin: spawned
+/// team members are pinned round-robin, the calling (detached
+/// coordinator) thread is left alone.
+struct SpawnPinWorkers;
+
+impl Executor for SpawnPinWorkers {
+    fn run(&self, p: usize, f: &(dyn Fn(usize) + Sync)) {
+        scoped_run_pin_workers(p, f);
+    }
+}
+
 /// Detached fallback for async drivers: the whole engine runs on a
-/// fresh thread with per-call scoped teams.
-pub(crate) fn detach_driver(driver: Box<dyn FnOnce(&dyn Executor) + Send>) -> LoopHandle {
+/// fresh thread with per-call scoped teams, pinning the teams'
+/// spawned members when the run asked for it.
+pub(crate) fn detach_driver(driver: Box<dyn FnOnce(&dyn Executor) + Send>, pin_workers: bool) -> LoopHandle {
     let join = thread::Builder::new()
         .name("ich-async-driver".into())
-        .spawn(move || driver(&SpawnExec::new(false)))
+        .spawn(move || {
+            if pin_workers {
+                driver(&SpawnPinWorkers);
+            } else {
+                driver(&SpawnExec::new(false));
+            }
+        })
         .expect("spawn async driver thread");
     LoopHandle::from_thread(join)
 }
@@ -1298,5 +1746,189 @@ mod tests {
         });
         // 2 threads × 40 rounds × 2 tids each.
         assert_eq!(total.load(SeqCst), 160);
+    }
+
+    // ---- multi-class dispatch --------------------------------------
+
+    use std::sync::Condvar;
+
+    /// Park the (single) worker of `rt` inside a gate epoch: returns
+    /// once the gate body is running, so everything submitted next
+    /// queues deterministically behind it. Open the returned release
+    /// pair to let the gate finish.
+    fn hold_worker(rt: &Runtime) -> (LoopHandle, Arc<(Mutex<bool>, Condvar)>) {
+        let started = Arc::new((Mutex::new(false), Condvar::new()));
+        let release = Arc::new((Mutex::new(false), Condvar::new()));
+        let (s2, r2) = (Arc::clone(&started), Arc::clone(&release));
+        let gate = rt.submit_arc_with(
+            1,
+            Arc::new(move |_tid| {
+                {
+                    let (m, cv) = &*s2;
+                    *m.lock().unwrap() = true;
+                    cv.notify_all();
+                }
+                let (m, cv) = &*r2;
+                let mut go = m.lock().unwrap();
+                while !*go {
+                    go = cv.wait(go).unwrap();
+                }
+            }),
+            SubmitOpts::default(),
+        );
+        let (m, cv) = &*started;
+        let mut st = m.lock().unwrap();
+        while !*st {
+            st = cv.wait(st).unwrap();
+        }
+        drop(st);
+        (gate, release)
+    }
+
+    fn open(release: &Arc<(Mutex<bool>, Condvar)>) {
+        let (m, cv) = &**release;
+        *m.lock().unwrap() = true;
+        cv.notify_all();
+    }
+
+    #[test]
+    fn higher_class_epochs_bypass_queued_lower_ones() {
+        let rt = Runtime::with_pinning(1, false);
+        let (gate, release) = hold_worker(&rt);
+        let order: Arc<Mutex<Vec<&'static str>>> = Arc::new(Mutex::new(Vec::new()));
+        let mut handles = Vec::new();
+        for (name, class, deadline) in [
+            ("bg", LatencyClass::Background, None),
+            ("batch-late", LatencyClass::Batch, Some(20u64)),
+            ("batch-early", LatencyClass::Batch, Some(10)),
+            ("hot", LatencyClass::Interactive, None),
+        ] {
+            let o = Arc::clone(&order);
+            handles.push(rt.submit_arc_with(
+                1,
+                Arc::new(move |_tid| o.lock().unwrap().push(name)),
+                SubmitOpts { class, deadline, ..Default::default() },
+            ));
+        }
+        open(&release);
+        gate.join();
+        for h in handles {
+            h.join();
+        }
+        assert_eq!(
+            *order.lock().unwrap(),
+            vec!["hot", "batch-early", "batch-late", "bg"],
+            "class priority then EDF then arrival must order the queue"
+        );
+    }
+
+    #[test]
+    fn all_default_class_dispatch_stays_fifo() {
+        let rt = Runtime::with_pinning(1, false);
+        let (gate, release) = hold_worker(&rt);
+        let order: Arc<Mutex<Vec<usize>>> = Arc::new(Mutex::new(Vec::new()));
+        let handles: Vec<LoopHandle> = (0..6usize)
+            .map(|i| {
+                let o = Arc::clone(&order);
+                rt.submit(1, move |_tid| o.lock().unwrap().push(i))
+            })
+            .collect();
+        open(&release);
+        gate.join();
+        for h in handles {
+            h.join();
+        }
+        assert_eq!(*order.lock().unwrap(), vec![0, 1, 2, 3, 4, 5], "default class must keep the PR 2 FIFO order");
+    }
+
+    #[test]
+    fn preempt_point_runs_higher_class_epoch_inline() {
+        let rt = Runtime::with_pinning(1, false);
+        let started = Arc::new(AtomicUsize::new(0));
+        let hot_ran = Arc::new(AtomicUsize::new(0));
+        let depth_seen = Arc::new(AtomicUsize::new(0));
+        let (s2, h2) = (Arc::clone(&started), Arc::clone(&hot_ran));
+        let bg = rt.submit_arc_with(
+            1,
+            Arc::new(move |_tid| {
+                s2.store(1, SeqCst);
+                // Chunk-boundary stand-in: poll the preemption hook
+                // until the hot epoch has run inline.
+                while h2.load(SeqCst) == 0 {
+                    preempt_point();
+                    thread::yield_now();
+                }
+            }),
+            SubmitOpts { class: LatencyClass::Background, ..Default::default() },
+        );
+        while started.load(SeqCst) == 0 {
+            thread::yield_now();
+        }
+        // The only worker is busy in the background body: the hot
+        // epoch can only execute through its preempt_point.
+        let (h3, d2) = (Arc::clone(&hot_ran), Arc::clone(&depth_seen));
+        let hot = rt.submit_arc_with(
+            1,
+            Arc::new(move |_tid| {
+                d2.store(preempt_depth(), SeqCst);
+                h3.fetch_add(1, SeqCst);
+            }),
+            SubmitOpts { class: LatencyClass::Interactive, ..Default::default() },
+        );
+        hot.join();
+        bg.join();
+        assert_eq!(hot_ran.load(SeqCst), 1, "hot epoch must run exactly once");
+        assert!(
+            depth_seen.load(SeqCst) >= 2,
+            "hot epoch must have executed inside the background claim (depth {})",
+            depth_seen.load(SeqCst)
+        );
+    }
+
+    #[test]
+    fn dispatch_info_and_class_stats_accumulate() {
+        let rt = Runtime::with_pinning(1, false);
+        let opts = SubmitOpts { class: LatencyClass::Interactive, deadline: Some(7), ..Default::default() };
+        let handle = rt.submit_arc_with(1, Arc::new(|_tid| {}), opts);
+        let info = handle.join_with_dispatch().expect("pool-dispatched epoch has info");
+        assert_eq!(info.class, LatencyClass::Interactive);
+        assert!(info.queue_wait_s > 0.0, "joined epoch must report a measured queue wait");
+        assert!(!info.promoted);
+        let stats = rt.class_stats();
+        let hot = &stats[LatencyClass::Interactive.rank() as usize];
+        assert_eq!(hot.class, LatencyClass::Interactive);
+        assert_eq!(hot.submitted, 1);
+        assert_eq!(hot.dispatched, 1);
+        assert_eq!(hot.promotions, 0);
+        assert!(hot.queue_wait_s_total > 0.0);
+        assert!(hot.queue_wait_s_max <= hot.queue_wait_s_total + 1e-12);
+        // Blocking runs report too.
+        let bg_opts = SubmitOpts { class: LatencyClass::Background, ..Default::default() };
+        let d = rt.run_with(2, &|_tid| {}, bg_opts).expect("pool-width run reports dispatch info");
+        assert_eq!(d.class, LatencyClass::Background);
+        assert_eq!(rt.class_stats()[LatencyClass::Background.rank() as usize].submitted, 1);
+    }
+
+    #[test]
+    fn background_epoch_promotes_under_interactive_pressure() {
+        use super::super::dispatch::PROMOTE_K;
+        let rt = Runtime::with_pinning(1, false);
+        let (gate, release) = hold_worker(&rt);
+        let bg_opts = SubmitOpts { class: LatencyClass::Background, ..Default::default() };
+        let bg = rt.submit_arc_with(1, Arc::new(|_tid| {}), bg_opts);
+        // Enough Interactive arrivals to push the background epoch past
+        // the promotion threshold.
+        let hot_opts = SubmitOpts { class: LatencyClass::Interactive, ..Default::default() };
+        let hot: Vec<LoopHandle> =
+            (0..PROMOTE_K + 3).map(|_| rt.submit_arc_with(1, Arc::new(|_tid| {}), hot_opts)).collect();
+        open(&release);
+        gate.join();
+        for h in hot {
+            h.join();
+        }
+        let info = bg.join_with_dispatch().expect("background epoch dispatched");
+        assert!(info.skips <= PROMOTE_K, "promotion bound violated: {} skips", info.skips);
+        assert!(info.promoted, "K-times-bypassed background epoch must be promoted");
+        assert_eq!(rt.class_stats()[LatencyClass::Background.rank() as usize].promotions, 1);
     }
 }

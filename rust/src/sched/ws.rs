@@ -29,7 +29,7 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering::Relaxed, Ordering::Seq
 use super::deque::RangeDeque;
 use super::metrics::MetricsSink;
 use super::policy::{self, IchState};
-use super::runtime::Executor;
+use super::runtime::{preempt_point, Executor};
 use super::topology::{self, Topology, VictimPolicy, VictimSelector};
 use crate::util::rng::Rng;
 use crate::util::sync::CachePadded;
@@ -255,6 +255,10 @@ fn worker(
     loop {
         // ---- Drain the local queue ----------------------------------
         loop {
+            // Chunk boundary: yield to a higher-class epoch, if
+            // pending (chunk-granular preemption; the running chunk
+            // always retires first, so exactly-once is untouched).
+            preempt_point();
             let me = &shared.deques[tid];
             let chunk = match chunk_policy {
                 ChunkPolicy::Fixed(c) => *c,
@@ -298,6 +302,9 @@ fn worker(
             // mean our own in-flight body finished the last chunk.
             continue;
         }
+        // Steal attempts are chunk boundaries too: an idle thief is
+        // exactly the worker a higher-class epoch should take.
+        preempt_point();
         let node_of = |t: usize| {
             let x = shared.nodes[t].load(Relaxed);
             (x != usize::MAX).then_some(x)
@@ -444,19 +451,36 @@ mod tests {
         }
     }
 
+    /// Total failed steals recorded so far (readable concurrently —
+    /// the counters are plain atomics).
+    fn failed_steals(sink: &MetricsSink) -> u64 {
+        sink.per_thread.iter().map(|c| c.steals_failed.load(Relaxed)).sum()
+    }
+
+    fn backoffs(sink: &MetricsSink) -> u64 {
+        sink.per_thread.iter().map(|c| c.backoffs.load(Relaxed)).sum()
+    }
+
     #[test]
     fn informed_probe_skips_empty_victims_and_terminates() {
-        // One iteration sleeps while every queue is already drained:
-        // the informed thieves' probes keep observing empty victims.
-        // They must record failed steals (without locking the drained
-        // deques) and the run must still terminate correctly.
+        // One iteration stays in flight while every queue is already
+        // drained: the informed thieves' probes keep observing empty
+        // victims. They must record failed steals (without locking the
+        // drained deques) and the run must still terminate correctly.
+        // The holder waits for the *condition itself* (a failed steal
+        // showing up in the sink) instead of a fixed wall-clock sleep,
+        // so the test is exact rather than timing-dependent; the
+        // 10-second cap only bounds a genuinely failing run.
         let n = 4;
         let p = 4;
         let sink = MetricsSink::new(p);
         let body = |r: Range<usize>| {
             for i in r {
                 if i == 0 {
-                    std::thread::sleep(std::time::Duration::from_millis(50));
+                    let t0 = std::time::Instant::now();
+                    while failed_steals(&sink) == 0 && t0.elapsed() < std::time::Duration::from_secs(10) {
+                        std::thread::yield_now();
+                    }
                 }
             }
         };
@@ -543,17 +567,22 @@ mod tests {
 
     #[test]
     fn failed_steals_record_backoff_transitions() {
-        // One iteration sleeps while every queue is already drained:
-        // the three idle threads must fail steals continuously for the
-        // whole sleep, exhaust the bounded spin phase, and record a
-        // spin→yield transition in the sink.
+        // One iteration stays in flight while every queue is already
+        // drained: the three idle threads must fail steals
+        // continuously, exhaust the bounded spin phase, and record a
+        // spin→yield transition in the sink. The holder waits for the
+        // recorded transition itself (condition-based, no wall-clock
+        // sleep); the 10-second cap only bounds a failing run.
         let n = 4;
         let p = 4;
         let sink = MetricsSink::new(p);
         let body = |r: Range<usize>| {
             for i in r {
                 if i == 0 {
-                    std::thread::sleep(std::time::Duration::from_millis(100));
+                    let t0 = std::time::Instant::now();
+                    while backoffs(&sink) == 0 && t0.elapsed() < std::time::Duration::from_secs(10) {
+                        std::thread::yield_now();
+                    }
                 }
             }
         };

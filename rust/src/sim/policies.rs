@@ -413,6 +413,89 @@ impl SimSched for WsSim {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Multi-class dispatch model (runtime epoch queue)
+// ---------------------------------------------------------------------------
+
+/// One epoch arrival in a dispatch trace for [`sim_dispatch_order`].
+/// `after` is the virtual arrival time measured in completed
+/// dispatches: the entry is admitted once `after` earlier entries
+/// have been dispatched (0 = present from the start). Traces must be
+/// sorted by `after` — arrivals are admitted in slice order, which
+/// is the arrival-sequence order the runtime's queue sees.
+#[derive(Clone, Copy, Debug)]
+pub struct SimArrival {
+    pub class: crate::sched::LatencyClass,
+    pub deadline: Option<u64>,
+    pub after: usize,
+}
+
+/// The simulator's *independent* model of the pool's multi-class
+/// dispatch rule (`sched::dispatch`): class priority, EDF within a
+/// class, FIFO among equal-deadline peers, and anti-starvation
+/// promotion once an entry has been bypassed `promote_k` times by
+/// later, higher-class arrivals. Returns the indices of `arrivals`
+/// in dispatch order.
+///
+/// This is a deliberate re-implementation (O(n²) scan over a pending
+/// list, no shared code with `DispatchQueue`) so the conformance
+/// harness can differentially test the runtime against it.
+pub fn sim_dispatch_order(arrivals: &[SimArrival], promote_k: u64) -> Vec<usize> {
+    struct Pending {
+        idx: usize,
+        rank: u8,
+        deadline: u64,
+        skips: u64,
+    }
+    let n = arrivals.len();
+    let mut order: Vec<usize> = Vec::with_capacity(n);
+    let mut pending: Vec<Pending> = Vec::new();
+    let mut admitted = 0usize;
+    let admit = |pending: &mut Vec<Pending>, i: usize| {
+        let a = arrivals[i];
+        pending.push(Pending { idx: i, rank: a.class.rank(), deadline: a.deadline.unwrap_or(u64::MAX), skips: 0 });
+    };
+    while order.len() < n {
+        while admitted < n && arrivals[admitted].after <= order.len() {
+            admit(&mut pending, admitted);
+            admitted += 1;
+        }
+        if pending.is_empty() {
+            // Idle gap in the trace: jump the virtual clock to the
+            // next arrival batch.
+            let next_after = arrivals[admitted].after;
+            while admitted < n && arrivals[admitted].after == next_after {
+                admit(&mut pending, admitted);
+                admitted += 1;
+            }
+        }
+        // Selection: earliest-arrived starving entry, else
+        // (class rank, deadline, arrival).
+        let mut best = 0usize;
+        for i in 1..pending.len() {
+            let (a, b) = (&pending[i], &pending[best]);
+            let (a_starving, b_starving) = (a.skips >= promote_k, b.skips >= promote_k);
+            let a_wins = match (a_starving, b_starving) {
+                (true, false) => true,
+                (false, true) => false,
+                (true, true) => a.idx < b.idx,
+                (false, false) => (a.rank, a.deadline, a.idx) < (b.rank, b.deadline, b.idx),
+            };
+            if a_wins {
+                best = i;
+            }
+        }
+        let sel = pending.remove(best);
+        for e in &mut pending {
+            if e.idx < sel.idx && e.rank > sel.rank {
+                e.skips += 1;
+            }
+        }
+        order.push(sel.idx);
+    }
+    order
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -540,5 +623,46 @@ mod tests {
         let b = run(&Policy::Ich(IchParams::default()), weights, 14);
         assert_eq!(a.time, b.time);
         assert_eq!(a.steals_ok, b.steals_ok);
+    }
+
+    #[test]
+    fn dispatch_model_orders_classes_and_deadlines() {
+        use crate::sched::LatencyClass as C;
+        let t = |class, deadline, after| SimArrival { class, deadline, after };
+        // One batch: Background first-in, then Batch with deadlines,
+        // then Interactive.
+        let order = sim_dispatch_order(
+            &[
+                t(C::Background, None, 0),
+                t(C::Batch, Some(20), 0),
+                t(C::Batch, Some(10), 0),
+                t(C::Interactive, None, 0),
+            ],
+            4,
+        );
+        assert_eq!(order, vec![3, 2, 1, 0]);
+    }
+
+    #[test]
+    fn dispatch_model_promotes_bypassed_background() {
+        use crate::sched::LatencyClass as C;
+        // A Background entry with a stream of Interactive arrivals
+        // landing behind it (one new arrival per dispatch): with
+        // promote_k = 2 it must dispatch after exactly 2 bypasses.
+        let mut arrivals = vec![SimArrival { class: C::Background, deadline: None, after: 0 }];
+        for i in 0..5usize {
+            arrivals.push(SimArrival { class: C::Interactive, deadline: None, after: i });
+        }
+        let order = sim_dispatch_order(&arrivals, 2);
+        let bg_pos = order.iter().position(|&i| i == 0).unwrap();
+        assert_eq!(bg_pos, 2, "background dispatches after exactly k = 2 bypasses: {order:?}");
+    }
+
+    #[test]
+    fn dispatch_model_single_class_is_fifo() {
+        use crate::sched::LatencyClass as C;
+        let arrivals: Vec<SimArrival> =
+            (0..7).map(|i| SimArrival { class: C::Batch, deadline: None, after: i / 3 }).collect();
+        assert_eq!(sim_dispatch_order(&arrivals, 4), (0..7).collect::<Vec<_>>());
     }
 }

@@ -1,10 +1,15 @@
-//! Regression: a `threads == 1` `parallel_for` with default options
-//! must not alter the calling thread's CPU affinity. (It used to
-//! route through `scoped_run(1, true, …)`, which permanently pinned
-//! the *caller* to core 0.)
+//! Affinity regressions: (a) a `threads == 1` `parallel_for` with
+//! default options must not alter the calling thread's CPU affinity
+//! (it used to route through `scoped_run(1, true, …)`, which
+//! permanently pinned the *caller* to core 0); (b) `ForOpts::pin`
+//! now governs the pool's oversized-run fallback too — the spawned
+//! team members honor the per-run pin while the caller's mask stays
+//! untouched on both the pinned and unpinned fallback paths.
 
-use ich::sched::pool::current_affinity;
-use ich::sched::{parallel_for, ForOpts, IchParams, Policy};
+use ich::sched::pool::{current_affinity, num_cpus, pinned_core};
+use ich::sched::runtime::{Runtime, SubmitOpts};
+use ich::sched::{parallel_for, ExecMode, ForOpts, IchParams, Policy};
+use std::sync::atomic::{AtomicUsize, Ordering::SeqCst};
 
 #[test]
 fn single_thread_default_opts_preserves_caller_affinity() {
@@ -27,6 +32,106 @@ fn single_thread_spawn_mode_preserves_caller_affinity() {
     });
     assert_eq!(m.total_iters, 1_000);
     assert_eq!(current_affinity().unwrap(), before, "Spawn-mode threads == 1 run must not pin the caller");
+}
+
+/// Satellite regression (ROADMAP "per-run pinning for the pool
+/// fallback path"): an oversized run through `ExecMode::Pool` falls
+/// back to a scoped team; with `pin == true` the *spawned* tids are
+/// pinned round-robin while the caller's affinity stays untouched.
+#[test]
+fn pool_fallback_honors_per_run_pin_for_workers_only() {
+    let Some(before) = current_affinity() else { return }; // non-Linux: nothing to check
+    let rt = Runtime::with_pinning(1, false); // 1 worker, run wants 4 → fallback
+    let p = 4usize;
+
+    // Pinned fallback: spawned tids record the core they landed on.
+    let cores: Vec<AtomicUsize> = (0..p).map(|_| AtomicUsize::new(usize::MAX)).collect();
+    let info = rt.run_with(
+        p,
+        &|tid| {
+            if let Some(c) = pinned_core() {
+                cores[tid].store(c, SeqCst);
+            }
+        },
+        SubmitOpts { pin_fallback: true, ..Default::default() },
+    );
+    assert!(info.is_none(), "fallback runs never queue, so they report no dispatch info");
+    assert_eq!(current_affinity().unwrap(), before, "pinned fallback must not touch the caller's mask");
+    assert_eq!(cores[0].load(SeqCst), usize::MAX, "tid 0 (the caller) must stay unpinned");
+    if num_cpus() >= p {
+        for (tid, c) in cores.iter().enumerate().skip(1) {
+            let c = c.load(SeqCst);
+            // Pins are best-effort (a taskset mask can veto them); when
+            // one took effect it must be the round-robin target core.
+            if c != usize::MAX {
+                assert_eq!(c, tid % num_cpus(), "tid {tid} pinned to the wrong core");
+            }
+        }
+    }
+
+    // Unpinned fallback (the default): nobody gets pinned at all.
+    let cores: Vec<AtomicUsize> = (0..p).map(|_| AtomicUsize::new(usize::MAX)).collect();
+    rt.run(p, &|tid| {
+        if let Some(c) = pinned_core() {
+            cores[tid].store(c, SeqCst);
+        }
+    });
+    for (tid, c) in cores.iter().enumerate() {
+        assert_eq!(c.load(SeqCst), usize::MAX, "unpinned fallback must not pin tid {tid}");
+    }
+    assert_eq!(current_affinity().unwrap(), before);
+}
+
+/// The async oversized fallback (detached team) honors the same
+/// per-run pin: spawned tids pin round-robin, tid 0 (the detached
+/// coordinator thread) and the submitting caller stay unpinned.
+#[test]
+fn async_oversized_fallback_honors_per_run_pin() {
+    let Some(before) = current_affinity() else { return };
+    let rt = Runtime::with_pinning(1, false); // 1 worker, submit wants 4 → detached team
+    let p = 4usize;
+    let cores: std::sync::Arc<Vec<AtomicUsize>> =
+        std::sync::Arc::new((0..p).map(|_| AtomicUsize::new(usize::MAX)).collect());
+    let c2 = std::sync::Arc::clone(&cores);
+    let handle = rt.submit_arc_with(
+        p,
+        std::sync::Arc::new(move |tid: usize| {
+            if let Some(c) = pinned_core() {
+                c2[tid].store(c, SeqCst);
+            }
+        }),
+        SubmitOpts { pin_fallback: true, ..Default::default() },
+    );
+    handle.join();
+    assert_eq!(current_affinity().unwrap(), before, "async fallback must not touch the submitter's mask");
+    assert_eq!(cores[0].load(SeqCst), usize::MAX, "tid 0 (the detached coordinator) must stay unpinned");
+    if num_cpus() >= p {
+        for (tid, c) in cores.iter().enumerate().skip(1) {
+            let c = c.load(SeqCst);
+            if c != usize::MAX {
+                assert_eq!(c, tid % num_cpus(), "tid {tid} pinned to the wrong core");
+            }
+        }
+    }
+}
+
+/// The same per-run preference reaches the fallback through the
+/// public `parallel_for` path (`ForOpts::pin` + `ExecMode::Pool` on a
+/// run wider than the global pool is served by a scoped team).
+#[test]
+fn parallel_for_pool_mode_oversized_run_preserves_caller_affinity() {
+    let Some(before) = current_affinity() else { return };
+    let workers = ich::sched::Runtime::global().workers();
+    let opts = ForOpts { threads: workers + 2, pin: true, mode: ExecMode::Pool, ..Default::default() };
+    let m = parallel_for(4_096, &Policy::Dynamic { chunk: 64 }, &opts, &|r| {
+        std::hint::black_box(r.len());
+    });
+    assert_eq!(m.total_iters, 4_096);
+    assert_eq!(
+        current_affinity().unwrap(),
+        before,
+        "oversized pool run with pin=true must pin only its spawned team, never the caller"
+    );
 }
 
 #[test]

@@ -188,31 +188,36 @@ fn async_body_panic_rethrows_at_join_and_pool_survives() {
 }
 
 #[test]
-fn submit_latency_is_below_loop_runtime() {
-    // The point of async submission: the submit call must return well
-    // before the loop completes. A coarse-grained body makes the loop
-    // take a measurable time; the submission itself must not wait on
-    // it.
+fn submit_returns_while_loop_is_still_in_flight() {
+    // The point of async submission: the submit call must return
+    // before the loop completes. The old version proved it with a
+    // 10 ms-per-iteration sleeping body and a wall-clock ratio — a
+    // flake surface under CI load. This version blocks every body on
+    // a condvar gate instead: when the submit call has returned and
+    // the handle reports unfinished, the submission provably did not
+    // wait on the loop, with no timing assertion at all.
     let rt = Runtime::with_pinning(2, false);
     let opts = ForOpts { threads: 2, pin: false, ..Default::default() };
-    let t0 = std::time::Instant::now();
+    let gate = Arc::new((std::sync::Mutex::new(false), std::sync::Condvar::new()));
+    let g2 = Arc::clone(&gate);
     let join = parallel_for_async_on(
         &rt,
         8,
         &Policy::Static,
         &opts,
-        Arc::new(|r: Range<usize>| {
-            for _ in r {
-                std::thread::sleep(std::time::Duration::from_millis(10));
+        Arc::new(move |_r: Range<usize>| {
+            let (m, cv) = &*g2;
+            let mut go = m.lock().unwrap();
+            while !*go {
+                go = cv.wait(go).unwrap();
             }
         }),
     );
-    let submit_s = t0.elapsed();
-    let m = join.join();
-    let total_s = t0.elapsed();
-    assert_eq!(m.total_iters, 8);
-    assert!(
-        submit_s < total_s / 2,
-        "submission ({submit_s:?}) should be far below the loop's round trip ({total_s:?})"
-    );
+    // Every body is parked on the gate, so the loop cannot have
+    // finished — yet the submit call has already returned.
+    assert!(!join.is_finished(), "async submission must not wait on the loop");
+    let (m, cv) = &*gate;
+    *m.lock().unwrap() = true;
+    cv.notify_all();
+    assert_eq!(join.join().total_iters, 8);
 }

@@ -1,0 +1,424 @@
+//! Scheduling-conformance harness for the pool's multi-class epoch
+//! dispatcher (`sched::dispatch` + `sched::runtime`).
+//!
+//! Everything here is **deterministic and sleep-free**: scripted
+//! arrival sequences are staged behind condvar gates (a worker is
+//! parked inside a gate epoch while the trace is enqueued, so the
+//! dispatch order is a pure function of the queue's contents), and
+//! deadlines are virtual `u64` ticks — only their ordering matters.
+//! The harness proves four properties:
+//!
+//! 1. **EDF within a class** (and class priority across classes) on
+//!    scripted arrivals, observed on the *real* runtime.
+//! 2. **Bounded promotion delay**: no entry is ever bypassed more
+//!    than `PROMOTE_K` times, on randomized traces.
+//! 3. **Exactly-once chunk execution under preemption**: an
+//!    Interactive loop pulls busy workers out of a running Background
+//!    loop at chunk boundaries (proven via `preempt_depth`), and both
+//!    loops still cover every iteration exactly once.
+//! 4. **Differential agreement**: the runtime's observed dispatch
+//!    order equals the simulator's independent model
+//!    (`sim::sim_dispatch_order`) — and the `DispatchQueue` equals it
+//!    too — on ≥ 100 randomized traces.
+
+use ich::sched::runtime::{preempt_depth, Runtime, SubmitOpts};
+use ich::sched::{parallel_for_async_on, DispatchQueue, ForOpts, LatencyClass, Policy, PROMOTE_K};
+use ich::sim::{sim_dispatch_order, SimArrival};
+use ich::util::rng::Rng;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering::SeqCst};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Reusable one-shot gate: `wait` blocks until `open` (condvar, no
+/// wall-clock sleeps anywhere).
+struct Gate {
+    m: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl Gate {
+    fn new() -> Arc<Gate> {
+        Arc::new(Gate { m: Mutex::new(false), cv: Condvar::new() })
+    }
+
+    fn open(&self) {
+        *self.m.lock().unwrap() = true;
+        self.cv.notify_all();
+    }
+
+    fn wait(&self) {
+        let mut open = self.m.lock().unwrap();
+        while !*open {
+            open = self.cv.wait(open).unwrap();
+        }
+    }
+}
+
+/// Park the single worker of `rt` inside a gate epoch. Returns once
+/// the gate body is running on the worker, so every epoch submitted
+/// afterwards queues behind it and is dispatched in pure queue order
+/// when `release` opens.
+fn hold_worker(rt: &Runtime) -> (ich::sched::LoopHandle, Arc<Gate>) {
+    let started = Gate::new();
+    let release = Gate::new();
+    let (s2, r2) = (Arc::clone(&started), Arc::clone(&release));
+    let handle = rt.submit_arc_with(
+        1,
+        Arc::new(move |_tid| {
+            s2.open();
+            r2.wait();
+        }),
+        SubmitOpts::default(),
+    );
+    started.wait();
+    (handle, release)
+}
+
+/// Drive a scripted trace through a 1-worker pool: epochs are
+/// enqueued while the worker is held, then released; each epoch's
+/// body records its dispatch position. Returns the indices in
+/// dispatch order.
+fn runtime_dispatch_order(rt: &Runtime, trace: &[(LatencyClass, Option<u64>)]) -> Vec<usize> {
+    let (gate, release) = hold_worker(rt);
+    let order: Arc<Mutex<Vec<usize>>> = Arc::new(Mutex::new(Vec::new()));
+    let handles: Vec<_> = trace
+        .iter()
+        .enumerate()
+        .map(|(i, &(class, deadline))| {
+            let o = Arc::clone(&order);
+            rt.submit_arc_with(
+                1,
+                Arc::new(move |_tid| o.lock().unwrap().push(i)),
+                SubmitOpts { class, deadline, ..Default::default() },
+            )
+        })
+        .collect();
+    release.open();
+    gate.join();
+    for h in handles {
+        h.join();
+    }
+    let out = order.lock().unwrap().clone();
+    out
+}
+
+// ---------------------------------------------------------------------------
+// 1. EDF within class, class priority across classes (real runtime)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn edf_orders_same_class_epochs_on_the_runtime() {
+    let rt = Runtime::with_pinning(1, false);
+    let i = LatencyClass::Interactive;
+    let trace = [(i, Some(50u64)), (i, Some(10)), (i, Some(30)), (i, None), (i, Some(20))];
+    let order = runtime_dispatch_order(&rt, &trace);
+    assert_eq!(order, vec![1, 4, 2, 0, 3], "EDF within class, deadline-less entries last");
+}
+
+#[test]
+fn class_priority_with_edf_and_fifo_tiebreaks_on_the_runtime() {
+    let rt = Runtime::with_pinning(1, false);
+    let trace = [
+        (LatencyClass::Background, None),
+        (LatencyClass::Batch, Some(20u64)),
+        (LatencyClass::Batch, Some(20)),
+        (LatencyClass::Interactive, Some(99)),
+        (LatencyClass::Batch, Some(5)),
+    ];
+    let order = runtime_dispatch_order(&rt, &trace);
+    // Interactive first; Batch by (deadline, arrival): 4, then the two
+    // deadline-20 peers FIFO (1 before 2); Background last.
+    assert_eq!(order, vec![3, 4, 1, 2, 0]);
+}
+
+#[test]
+fn all_batch_no_deadline_reproduces_fifo_on_the_runtime() {
+    let rt = Runtime::with_pinning(1, false);
+    let trace: Vec<(LatencyClass, Option<u64>)> = (0..8).map(|_| (LatencyClass::Batch, None)).collect();
+    let order = runtime_dispatch_order(&rt, &trace);
+    assert_eq!(order, (0..8).collect::<Vec<_>>(), "default class must reproduce the classless FIFO order");
+}
+
+// ---------------------------------------------------------------------------
+// 2. Bounded promotion delay (randomized, queue level)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn promotion_bound_k_holds_on_random_traces() {
+    let mut rng = Rng::new(0xD15A7C);
+    for case in 0..300 {
+        let m = 2 + rng.below(14);
+        let mut q: DispatchQueue<usize> = DispatchQueue::new();
+        let mut popped = vec![false; m];
+        let mut pushed = 0usize;
+        // Interleave pushes and pops randomly; drain at the end.
+        while popped.iter().any(|&d| !d) {
+            let can_push = pushed < m;
+            if can_push && (q.is_empty() || rng.below(2) == 0) {
+                let class = LatencyClass::from_rank(rng.below(3) as u8);
+                let deadline = if rng.below(2) == 0 { Some(rng.below(100) as u64) } else { None };
+                q.push(pushed, class, deadline);
+                pushed += 1;
+            } else {
+                let (idx, info) = q.pop_best().expect("non-empty queue pops");
+                assert!(
+                    info.skips <= PROMOTE_K,
+                    "case {case}: entry {idx} bypassed {} > K = {PROMOTE_K} times",
+                    info.skips
+                );
+                assert!(!popped[idx], "case {case}: entry {idx} dispatched twice");
+                popped[idx] = true;
+            }
+        }
+        assert!(q.is_empty(), "case {case}: every entry must eventually dispatch");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 3. Exactly-once chunk execution under preemption (real engines)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn preemption_at_chunk_granularity_preserves_exactly_once() {
+    let rt = Runtime::with_pinning(2, false);
+    let n_bg = 5_000usize;
+    let n_hot = 64usize;
+    let release = Gate::new();
+
+    // Background loop: every chunk body blocks on the release gate
+    // (open = no-op once released), so BOTH workers are parked *inside
+    // chunks* while the Interactive loop is submitted — `entered`
+    // counts the blocked bodies, and the submission below waits for
+    // both, because a still-idle worker would otherwise pick the hot
+    // epoch up directly (depth 1) instead of through a preempt point.
+    // Dynamic chunk=1 gives the engine a preempt point between every
+    // pair of iterations.
+    let bg_hits: Arc<Vec<AtomicU64>> = Arc::new((0..n_bg).map(|_| AtomicU64::new(0)).collect());
+    let entered = Arc::new(AtomicUsize::new(0));
+    let (e2, r2, bh) = (Arc::clone(&entered), Arc::clone(&release), Arc::clone(&bg_hits));
+    let bg_opts = ForOpts { threads: 2, pin: false, class: LatencyClass::Background, ..Default::default() };
+    let bg = parallel_for_async_on(
+        &rt,
+        n_bg,
+        &Policy::Dynamic { chunk: 1 },
+        &bg_opts,
+        Arc::new(move |r: std::ops::Range<usize>| {
+            e2.fetch_add(1, SeqCst);
+            r2.wait();
+            for i in r {
+                bh[i].fetch_add(1, SeqCst);
+            }
+        }),
+    );
+    // Both engine tids run on distinct pool workers; wait until both
+    // are blocked inside their first chunk (no sleeps — this resolves
+    // as soon as the workers claim).
+    while entered.load(SeqCst) < 2 {
+        std::thread::yield_now();
+    }
+
+    // Both workers are now blocked inside background chunks: the hot
+    // loop below can only execute through their preempt points, i.e.
+    // at depth ≥ 2 on this pool.
+    let hot_hits: Arc<Vec<AtomicU64>> = Arc::new((0..n_hot).map(|_| AtomicU64::new(0)).collect());
+    let min_depth = Arc::new(AtomicUsize::new(usize::MAX));
+    let (hh, md) = (Arc::clone(&hot_hits), Arc::clone(&min_depth));
+    let hot_opts = ForOpts { threads: 2, pin: false, class: LatencyClass::Interactive, ..Default::default() };
+    let hot = parallel_for_async_on(
+        &rt,
+        n_hot,
+        &Policy::Dynamic { chunk: 4 },
+        &hot_opts,
+        Arc::new(move |r: std::ops::Range<usize>| {
+            md.fetch_min(preempt_depth(), SeqCst);
+            for i in r {
+                hh[i].fetch_add(1, SeqCst);
+            }
+        }),
+    );
+    release.open();
+
+    let hm = hot.join();
+    let bm = bg.join();
+    assert_eq!(hm.total_iters, n_hot as u64);
+    assert_eq!(bm.total_iters, n_bg as u64);
+    for (i, h) in hot_hits.iter().enumerate() {
+        assert_eq!(h.load(SeqCst), 1, "hot iter {i} must run exactly once under preemption");
+    }
+    for (i, h) in bg_hits.iter().enumerate() {
+        assert_eq!(h.load(SeqCst), 1, "background iter {i} must run exactly once despite being preempted");
+    }
+    assert!(
+        min_depth.load(SeqCst) >= 2,
+        "every hot chunk must have executed inside a preempted background claim (min depth {})",
+        min_depth.load(SeqCst)
+    );
+    assert_eq!(hm.class, LatencyClass::Interactive);
+    assert_eq!(bm.class, LatencyClass::Background);
+}
+
+// ---------------------------------------------------------------------------
+// 4. Differential: runtime vs DispatchQueue vs the simulator's model
+// ---------------------------------------------------------------------------
+
+#[test]
+fn runtime_and_queue_agree_with_sim_model_on_random_traces() {
+    let rt = Runtime::with_pinning(1, false);
+    let mut rng = Rng::new(0x51D1FF);
+    for case in 0..110 {
+        let m = 3 + rng.below(10);
+        let trace: Vec<(LatencyClass, Option<u64>)> = (0..m)
+            .map(|_| {
+                let class = LatencyClass::from_rank(rng.below(3) as u8);
+                let deadline = if rng.below(2) == 0 { Some(rng.below(50) as u64) } else { None };
+                (class, deadline)
+            })
+            .collect();
+        let arrivals: Vec<SimArrival> =
+            trace.iter().map(|&(class, deadline)| SimArrival { class, deadline, after: 0 }).collect();
+        let expected = sim_dispatch_order(&arrivals, PROMOTE_K);
+
+        // DispatchQueue vs the model.
+        let mut q: DispatchQueue<usize> = DispatchQueue::new();
+        for (i, &(class, deadline)) in trace.iter().enumerate() {
+            q.push(i, class, deadline);
+        }
+        let mut queue_order = Vec::with_capacity(m);
+        while let Some((i, info)) = q.pop_best() {
+            assert!(info.skips <= PROMOTE_K, "case {case}: promotion bound violated in queue");
+            queue_order.push(i);
+        }
+        assert_eq!(queue_order, expected, "case {case}: DispatchQueue disagrees with the sim model ({trace:?})");
+
+        // Real runtime vs the model.
+        let observed = runtime_dispatch_order(&rt, &trace);
+        assert_eq!(observed, expected, "case {case}: runtime dispatch disagrees with the sim model ({trace:?})");
+    }
+}
+
+#[test]
+fn queue_agrees_with_sim_model_on_staged_arrivals() {
+    // Staged traces (arrivals admitted after k dispatches) exercise
+    // the promotion machinery across batches — queue level, with the
+    // virtual clock being the dispatch count.
+    let mut rng = Rng::new(0xA77A1F);
+    for case in 0..200 {
+        let m = 3 + rng.below(12);
+        let mut after = 0usize;
+        let arrivals: Vec<SimArrival> = (0..m)
+            .map(|_| {
+                after += rng.below(3); // non-decreasing virtual arrival times
+                SimArrival {
+                    class: LatencyClass::from_rank(rng.below(3) as u8),
+                    deadline: if rng.below(2) == 0 { Some(rng.below(50) as u64) } else { None },
+                    after,
+                }
+            })
+            .collect();
+        let expected = sim_dispatch_order(&arrivals, PROMOTE_K);
+
+        let mut q: DispatchQueue<usize> = DispatchQueue::new();
+        let mut admitted = 0usize;
+        let mut order: Vec<usize> = Vec::with_capacity(m);
+        while order.len() < m {
+            while admitted < m && arrivals[admitted].after <= order.len() {
+                q.push(admitted, arrivals[admitted].class, arrivals[admitted].deadline);
+                admitted += 1;
+            }
+            if q.is_empty() {
+                // Idle gap: admit the next batch, like the model does.
+                let next_after = arrivals[admitted].after;
+                while admitted < m && arrivals[admitted].after == next_after {
+                    q.push(admitted, arrivals[admitted].class, arrivals[admitted].deadline);
+                    admitted += 1;
+                }
+            }
+            let (i, info) = q.pop_best().expect("queue has work");
+            assert!(info.skips <= PROMOTE_K, "case {case}: promotion bound violated");
+            order.push(i);
+        }
+        assert_eq!(order, expected, "case {case}: staged-arrival disagreement ({arrivals:?})");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Coordinator: Interactive behind a Background backlog
+// ---------------------------------------------------------------------------
+
+#[test]
+fn interactive_job_bypasses_queued_background_backlog() {
+    use ich::coordinator::{Coordinator, LoopJob};
+
+    // 1-worker private pool, 1-thread jobs: dispatch order is the
+    // exact queue order, no timing involved.
+    let rt = Arc::new(Runtime::with_pinning(1, false));
+    let coord = Coordinator::new(1).with_pool(Arc::clone(&rt));
+    let events: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
+    let started = Gate::new();
+    let release = Gate::new();
+
+    // A gate job occupies the worker while the backlog queues up.
+    let (s2, r2) = (Arc::clone(&started), Arc::clone(&release));
+    let gate_body: Arc<dyn Fn(std::ops::Range<usize>) + Send + Sync> = Arc::new(move |_r| {
+        s2.open();
+        r2.wait();
+    });
+    let gate_job = LoopJob::new("gate", 1, Policy::Static, gate_body).with_class(LatencyClass::Background);
+    let gate = coord.submit(gate_job);
+    started.wait();
+
+    // 8 queued Background epochs...
+    let mut backlog = Vec::new();
+    for k in 0..8 {
+        let ev = Arc::clone(&events);
+        let name = format!("bg-{k}");
+        let n2 = name.clone();
+        let body: Arc<dyn Fn(std::ops::Range<usize>) + Send + Sync> = Arc::new(move |r| {
+            let mut ev = ev.lock().unwrap();
+            if r.start == 0 {
+                ev.push(format!("start {n2}"));
+            }
+            if r.end == 2_000 {
+                ev.push(format!("end {n2}"));
+            }
+        });
+        let job = LoopJob::new(&name, 2_000, Policy::Dynamic { chunk: 64 }, body);
+        backlog.push(coord.submit(job.with_class(LatencyClass::Background)));
+    }
+    // ...then one Interactive job submitted *behind* all of them.
+    let ev = Arc::clone(&events);
+    let hot_body: Arc<dyn Fn(std::ops::Range<usize>) + Send + Sync> = Arc::new(move |r| {
+        if r.start == 0 {
+            ev.lock().unwrap().push("start hot".into());
+        }
+    });
+    let hot_job = LoopJob::new("hot", 64, Policy::Dynamic { chunk: 16 }, hot_body);
+    let hot = coord.submit(hot_job.with_class(LatencyClass::Interactive).with_deadline(1));
+
+    release.open();
+    gate.join();
+    let (_, hm) = hot.join();
+    assert_eq!(hm.total_iters, 64);
+    assert_eq!(hm.class, LatencyClass::Interactive);
+    for b in backlog {
+        let (_, m) = b.join();
+        assert_eq!(m.total_iters, 2_000);
+    }
+
+    let ev = events.lock().unwrap();
+    let pos = |needle: &str| ev.iter().position(|e| e == needle);
+    let hot_start = pos("start hot").expect("hot job ran");
+    for k in 0..8 {
+        if let Some(end) = pos(&format!("end bg-{k}")) {
+            assert!(
+                hot_start < end,
+                "interactive job must start before background job {k} finishes: {ev:?}"
+            );
+        }
+        if let Some(start) = pos(&format!("start bg-{k}")) {
+            assert!(
+                hot_start < start,
+                "on a held 1-worker pool the interactive job even starts before background job {k}: {ev:?}"
+            );
+        }
+    }
+}

@@ -5,11 +5,15 @@
 //! 1. exactly-once execution for arbitrary (n, p, policy),
 //! 2. the simulator conserves work for arbitrary weight shapes,
 //! 3. iCh's adaptive state stays within its clamps,
-//! 4. partitioning helpers cover the index space exactly.
+//! 4. partitioning helpers cover the index space exactly,
+//! 5. the multi-class dispatch queue starves nobody, keeps FIFO among
+//!    equal-deadline peers, degenerates to the exact classless FIFO
+//!    order on single-class traces, and agrees with the simulator's
+//!    independent model of the dispatch rule.
 
 use ich::sched::policy::{self, Class, IchState};
-use ich::sched::{ForOpts, IchParams, Policy};
-use ich::sim::{simulate_app, LoopSpec, MachineSpec};
+use ich::sched::{DispatchQueue, ForOpts, IchParams, LatencyClass, Policy, PROMOTE_K};
+use ich::sim::{sim_dispatch_order, simulate_app, LoopSpec, MachineSpec, SimArrival};
 use ich::util::proptest_lite::{arbitrary_weights, check, small_size};
 use std::sync::atomic::{AtomicU64, Ordering::SeqCst};
 
@@ -154,6 +158,119 @@ fn prop_partitions_cover_exactly() {
                 return Err(format!("binlpt: {assigned} assigned of {} chunks", chunks.len()));
             }
             cover(&ich::sched::related::weighted_blocks(&w, p), "weighted_blocks")?;
+        }
+        Ok(())
+    });
+}
+
+fn random_trace(rng: &mut ich::util::rng::Rng, m: usize) -> Vec<(LatencyClass, Option<u64>)> {
+    (0..m)
+        .map(|_| {
+            let class = LatencyClass::from_rank(rng.below(3) as u8);
+            let deadline = if rng.below(2) == 0 { Some(rng.below(64) as u64) } else { None };
+            (class, deadline)
+        })
+        .collect()
+}
+
+#[test]
+fn prop_dispatch_no_starvation_and_promotion_bound() {
+    check("dispatch-no-starvation", 0x57A2, 150, |rng, _case| {
+        let m = 1 + rng.below(16);
+        let trace = random_trace(rng, m);
+        let mut q: DispatchQueue<usize> = DispatchQueue::new();
+        for (i, &(c, d)) in trace.iter().enumerate() {
+            q.push(i, c, d);
+        }
+        let mut seen = vec![false; m];
+        while let Some((i, info)) = q.pop_best() {
+            if info.skips > PROMOTE_K {
+                return Err(format!("entry {i} bypassed {} > K = {PROMOTE_K} times ({trace:?})", info.skips));
+            }
+            if seen[i] {
+                return Err(format!("entry {i} dispatched twice"));
+            }
+            seen[i] = true;
+        }
+        if let Some(i) = seen.iter().position(|&s| !s) {
+            return Err(format!("entry {i} starved ({trace:?})"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dispatch_fifo_within_equal_deadline_peers() {
+    check("dispatch-fifo-peers", 0xF1F0, 150, |rng, _case| {
+        let m = 1 + rng.below(16);
+        let trace = random_trace(rng, m);
+        let mut q: DispatchQueue<usize> = DispatchQueue::new();
+        for (i, &(c, d)) in trace.iter().enumerate() {
+            q.push(i, c, d);
+        }
+        let mut order = Vec::with_capacity(m);
+        while let Some((i, _)) = q.pop_best() {
+            order.push(i);
+        }
+        // Among entries with identical (class, deadline), dispatch
+        // order must be arrival order — promotion can reorder an
+        // entry relative to *other* classes, never within its peers.
+        for a in 0..order.len() {
+            for b in a + 1..order.len() {
+                let (ia, ib) = (order[a], order[b]);
+                if trace[ia] == trace[ib] && ia > ib {
+                    return Err(format!("peers dispatched out of arrival order: {ia} before {ib} ({trace:?})"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dispatch_single_class_reproduces_classless_fifo() {
+    check("dispatch-classless-fifo", 0xF1F1, 100, |rng, _case| {
+        // Disabling classes = submitting everything with one class and
+        // no deadline. The dispatch order must be the exact FIFO order
+        // of the PR 2 queue, whatever the shared class is.
+        let m = 1 + rng.below(20);
+        let class = LatencyClass::from_rank(rng.below(3) as u8);
+        let mut q: DispatchQueue<usize> = DispatchQueue::new();
+        for i in 0..m {
+            q.push(i, class, None);
+        }
+        let mut order = Vec::with_capacity(m);
+        while let Some((i, info)) = q.pop_best() {
+            if info.skips != 0 || info.promoted {
+                return Err(format!("single-class trace produced skips/promotions at entry {i}"));
+            }
+            order.push(i);
+        }
+        if order != (0..m).collect::<Vec<_>>() {
+            return Err(format!("single-class order {order:?} is not FIFO (class {class:?})"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dispatch_queue_agrees_with_sim_model() {
+    check("dispatch-vs-sim", 0xD1FF, 150, |rng, _case| {
+        let m = 1 + rng.below(14);
+        let trace = random_trace(rng, m);
+        let arrivals: Vec<SimArrival> =
+            trace.iter().map(|&(class, deadline)| SimArrival { class, deadline, after: 0 }).collect();
+        let expected = sim_dispatch_order(&arrivals, PROMOTE_K);
+        let mut q: DispatchQueue<usize> = DispatchQueue::new();
+        for (i, &(c, d)) in trace.iter().enumerate() {
+            q.push(i, c, d);
+        }
+        let mut order = Vec::with_capacity(m);
+        while let Some((i, _)) = q.pop_best() {
+            order.push(i);
+        }
+        if order != expected {
+            return Err(format!("queue {order:?} != sim model {expected:?} ({trace:?})"));
         }
         Ok(())
     });

@@ -6,8 +6,10 @@
 //! asynchronous epoch submission under concurrent submitters
 //! (recorded to `BENCH_async.json`), uniform vs topology-biased
 //! steal-victim selection per work-stealing engine (recorded to
-//! `BENCH_numa.json`), and Interactive queue-wait percentiles under
-//! saturating Background load, FIFO vs multi-class dispatch
+//! `BENCH_numa.json`), uniform vs topo vs distance-ranked victim
+//! selection on a ≥2-node distance-matrix topology (recorded to
+//! `BENCH_distance.json`), and Interactive queue-wait percentiles
+//! under saturating Background load, FIFO vs multi-class dispatch
 //! (recorded to `BENCH_priority.json`).
 //! These are the §Perf numbers for the hot path.
 
@@ -22,9 +24,18 @@ use ich::sched::deque::RangeDeque;
 use ich::sched::runtime::Runtime;
 use ich::sched::{
     parallel_for, parallel_for_async, parallel_for_async_on, ExecMode, ForOpts, IchParams, LatencyClass, Policy,
-    Topology, VictimPolicy,
+    RunMetrics, Topology, VictimPolicy,
 };
 use ich::util::json::Json;
+
+/// Is the process running under an `ICH_TOPOLOGY` override (operator-
+/// or `main`-installed)? Recorded in every emitted JSON so numbers
+/// measured against a synthetic topology can never masquerade as
+/// testbed data — the override changes the victim-bias gates of every
+/// benchmark in this process, not just the topology-focused ones.
+fn topology_overridden() -> bool {
+    std::env::var_os("ICH_TOPOLOGY").is_some()
+}
 
 fn dispatch_overhead() {
     println!("== L3 scheduler overhead (real runtime, empty bodies) ==");
@@ -144,6 +155,7 @@ fn fork_join_overhead() {
     out.set("bench", Json::str("fork_join_overhead"));
     out.set("threads", Json::num(p as f64));
     out.set("pool_workers", Json::num(Runtime::global().workers() as f64));
+    out.set("topology_override", Json::Bool(topology_overridden()));
     out.set("cases", Json::num(cases as f64));
     out.set("pool_wins", Json::num(pool_wins as f64));
     out.set("entries", Json::Arr(entries));
@@ -267,6 +279,7 @@ fn async_submission() {
     out.set("bench", Json::str("async_submission"));
     out.set("threads", Json::num(p as f64));
     out.set("pool_workers", Json::num(Runtime::global().workers() as f64));
+    out.set("topology_override", Json::Bool(topology_overridden()));
     out.set("n", Json::num(n as f64));
     out.set("reps", Json::num(reps as f64));
     out.set("policy", Json::str(&policy.name()));
@@ -283,6 +296,45 @@ fn async_submission() {
     save_json("BENCH_async.json", &out);
 }
 
+/// One steal-bench arm, shared by `numa_steal` and `distance_rank`:
+/// run `policy` under `victim` on the canonical imbalanced loop
+/// (thread 0's initial block carries all the work) and return the
+/// min wall time, the last sample's metrics, and the per-arm JSON
+/// entry — so the workload shape and JSON schema cannot drift between
+/// the two benches.
+fn steal_arm(bench_name: &str, policy: &Policy, victim: VictimPolicy, p: usize, n: usize, seed: u64) -> (f64, RunMetrics, Json) {
+    let heavy = n / p;
+    let opts = ForOpts { threads: p, pin: false, seed, weights: None, victim, ..Default::default() };
+    let mut last = None;
+    let r = bench(&format!("{bench_name} {} p={p} {victim:?}", policy.name()), 1, 3, || {
+        let m = parallel_for(n, policy, &opts, &|rr| {
+            for i in rr {
+                if i < heavy {
+                    let mut acc = 0u64;
+                    for j in 0..200u64 {
+                        acc = acc.wrapping_add(j ^ i as u64);
+                    }
+                    std::hint::black_box(acc);
+                }
+            }
+        });
+        assert_eq!(m.total_iters, n as u64);
+        last = Some(m);
+    });
+    let m = last.expect("at least one sample ran");
+    let mut e = Json::obj();
+    e.set("policy", Json::str(&policy.name()));
+    e.set("victim", Json::str(&format!("{victim:?}").to_lowercase()));
+    e.set("time_s", Json::num(r.min_s));
+    e.set("steals_ok", Json::num(m.steals_ok as f64));
+    e.set("steals_local", Json::num(m.steals_local as f64));
+    e.set("steals_remote", Json::num(m.steals_remote as f64));
+    e.set("steals_failed", Json::num(m.steals_failed as f64));
+    e.set("local_steal_fraction", Json::num(m.local_steal_fraction()));
+    e.set("steals_by_tier", Json::Arr(m.steals_by_tier.iter().map(|&s| Json::num(s as f64)).collect()));
+    (r.min_s, m, e)
+}
+
 /// Uniform vs topology-biased steal-victim selection on an
 /// imbalanced loop (thread 0's initial block carries all the work),
 /// per work-stealing engine. Emits `BENCH_numa.json` with each arm's
@@ -295,31 +347,13 @@ fn numa_steal() {
     let topo = Topology::detect();
     let p = (Runtime::global().workers() + 1).clamp(2, 8);
     let n = 100_000usize;
-    let heavy = n / p;
     println!("    topology: {} node(s) over {} core(s); p={p}", topo.nodes(), topo.cores());
     let mut entries = Vec::new();
     for policy in [Policy::Stealing { chunk: 1 }, Policy::Ich(IchParams::default())] {
         let mut times = [0.0f64; 2];
         for (vi, victim) in [VictimPolicy::Uniform, VictimPolicy::Topo].into_iter().enumerate() {
-            let opts = ForOpts { threads: p, pin: false, seed: 11, weights: None, victim, ..Default::default() };
-            let mut last = None;
-            let r = bench(&format!("numa_steal {} p={p} {victim:?}", policy.name()), 1, 3, || {
-                let m = parallel_for(n, &policy, &opts, &|rr| {
-                    for i in rr {
-                        if i < heavy {
-                            let mut acc = 0u64;
-                            for j in 0..200u64 {
-                                acc = acc.wrapping_add(j ^ i as u64);
-                            }
-                            std::hint::black_box(acc);
-                        }
-                    }
-                });
-                assert_eq!(m.total_iters, n as u64);
-                last = Some(m);
-            });
-            times[vi] = r.min_s;
-            let m = last.expect("at least one sample ran");
+            let (t, m, e) = steal_arm("numa_steal", &policy, victim, p, n, 11);
+            times[vi] = t;
             println!(
                 "    -> {} {victim:?}: local-steal fraction {:.3} ({} local + {} remote = {} ok, {} failed)",
                 policy.name(),
@@ -329,15 +363,6 @@ fn numa_steal() {
                 m.steals_ok,
                 m.steals_failed
             );
-            let mut e = Json::obj();
-            e.set("policy", Json::str(&policy.name()));
-            e.set("victim", Json::str(&format!("{victim:?}").to_lowercase()));
-            e.set("time_s", Json::num(r.min_s));
-            e.set("steals_ok", Json::num(m.steals_ok as f64));
-            e.set("steals_local", Json::num(m.steals_local as f64));
-            e.set("steals_remote", Json::num(m.steals_remote as f64));
-            e.set("steals_failed", Json::num(m.steals_failed as f64));
-            e.set("local_steal_fraction", Json::num(m.local_steal_fraction()));
             entries.push(e);
         }
         println!("    == {}: uniform/topo wall-time ratio {:.2}x ==", policy.name(), times[0] / times[1]);
@@ -349,6 +374,7 @@ fn numa_steal() {
     out.set("pool_workers", Json::num(Runtime::global().workers() as f64));
     out.set("topology_nodes", Json::num(topo.nodes() as f64));
     out.set("topology_cores", Json::num(topo.cores() as f64));
+    out.set("topology_override", Json::Bool(topology_overridden()));
     // Where a blocking width-p run's tids live (advisory; null =
     // unpinned).
     let tid_nodes: Vec<Json> = Runtime::global()
@@ -394,6 +420,7 @@ fn dispatch_latency() {
 
     let mut out = Json::obj();
     out.set("bench", Json::str("dispatch_latency"));
+    out.set("topology_override", Json::Bool(topology_overridden()));
     out.set("pool_workers", Json::num(workers as f64));
     out.set("threads", Json::num(p as f64));
     out.set("n_background", Json::num(n_bg as f64));
@@ -456,6 +483,72 @@ fn dispatch_latency() {
     save_json("BENCH_priority.json", &out);
 }
 
+/// The distance-tentpole measurement: uniform vs two-tier topo vs
+/// distance-*ranked* victim selection on the same imbalanced loop,
+/// per work-stealing engine, on a ≥2-node distance-matrix topology
+/// (`main` installs a synthetic `ICH_TOPOLOGY` override when the host
+/// has none, so the ranked gate is really exercised). Emits
+/// `BENCH_distance.json` with each arm's wall time, local-steal
+/// fraction, and per-distance-tier steal split.
+fn distance_rank() {
+    println!("\n== distance_rank: uniform vs topo vs ranked victim selection ==");
+    let topo = Topology::detect();
+    let p = (Runtime::global().workers() + 1).clamp(2, 8);
+    let n = 100_000usize;
+    println!(
+        "    topology: {} node(s) over {} core(s), {} distance tier(s); p={p}",
+        topo.nodes(),
+        topo.cores(),
+        topo.tier_count()
+    );
+    let mut entries = Vec::new();
+    for policy in [Policy::Stealing { chunk: 1 }, Policy::Ich(IchParams::default())] {
+        let mut times = [0.0f64; 3];
+        let mut fractions = [0.0f64; 3];
+        for (vi, victim) in [VictimPolicy::Uniform, VictimPolicy::Topo, VictimPolicy::Ranked].into_iter().enumerate() {
+            let (t, m, e) = steal_arm("distance_rank", &policy, victim, p, n, 23);
+            times[vi] = t;
+            fractions[vi] = m.local_steal_fraction();
+            println!(
+                "    -> {} {victim:?}: local-steal fraction {:.3}, tiers {:?} ({} ok, {} failed)",
+                policy.name(),
+                m.local_steal_fraction(),
+                m.steals_by_tier,
+                m.steals_ok,
+                m.steals_failed
+            );
+            entries.push(e);
+        }
+        println!(
+            "    == {}: wall time uniform/topo/ranked = {:.4}/{:.4}/{:.4}s; local fraction {:.3}/{:.3}/{:.3} ==",
+            policy.name(),
+            times[0],
+            times[1],
+            times[2],
+            fractions[0],
+            fractions[1],
+            fractions[2]
+        );
+    }
+    let mut out = Json::obj();
+    out.set("bench", Json::str("distance_rank"));
+    out.set("threads", Json::num(p as f64));
+    out.set("n", Json::num(n as f64));
+    out.set("pool_workers", Json::num(Runtime::global().workers() as f64));
+    out.set("topology_nodes", Json::num(topo.nodes() as f64));
+    out.set("topology_cores", Json::num(topo.cores() as f64));
+    out.set("topology_tiers", Json::num(topo.tier_count() as f64));
+    out.set("topology_override", Json::Bool(topology_overridden()));
+    let dist: Vec<Json> = topo
+        .distance_matrix()
+        .iter()
+        .map(|row| Json::Arr(row.iter().map(|&d| Json::num(d as f64)).collect()))
+        .collect();
+    out.set("distance_matrix", Json::Arr(dist));
+    out.set("entries", Json::Arr(entries));
+    save_json("BENCH_distance.json", &out);
+}
+
 fn multithread_smoke() {
     println!("\n== multi-thread correctness overhead (oversubscribed on this host) ==");
     let n = 1_000_000usize;
@@ -471,11 +564,26 @@ fn multithread_smoke() {
 }
 
 fn main() {
+    // The distance_rank bench needs a ≥2-node topology with a real
+    // distance matrix to exercise the ranked gate. On *single-node*
+    // hosts, install a synthetic override BEFORE the first
+    // Topology::detect() resolves (affects only this bench process).
+    // A genuine multi-node host (sysfs node dirs OR multi-socket
+    // package ids — the same discovery detect() uses) and an operator
+    // override are both left alone — masking a real testbed's SLIT
+    // with a fake 4-core map would silently invalidate every
+    // locality number this binary exists to measure.
+    if std::env::var_os("ICH_TOPOLOGY").is_none() && !ich::sched::topology::host_is_multi_node() {
+        std::env::set_var("ICH_TOPOLOGY", "2x2@10,25;25,10");
+        println!("NOTE: single-node host — synthetic ICH_TOPOLOGY=2x2@10,25;25,10 installed for this process;");
+        println!("      every emitted JSON below carries \"topology_override\": true.");
+    }
     dispatch_overhead();
     deque_primitives();
     fork_join_overhead();
     async_submission();
     numa_steal();
+    distance_rank();
     dispatch_latency();
     multithread_smoke();
 }

@@ -92,6 +92,12 @@ pub(crate) fn absorb_metrics(into: &mut RunMetrics, m: &RunMetrics) {
     into.steals_ok += m.steals_ok;
     into.steals_local += m.steals_local;
     into.steals_remote += m.steals_remote;
+    if into.steals_by_tier.len() < m.steals_by_tier.len() {
+        into.steals_by_tier.resize(m.steals_by_tier.len(), 0);
+    }
+    for (a, b) in into.steals_by_tier.iter_mut().zip(&m.steals_by_tier) {
+        *a += b;
+    }
     into.steals_failed += m.steals_failed;
     into.backoffs += m.backoffs;
     if into.iters_per_thread.len() < m.iters_per_thread.len() {

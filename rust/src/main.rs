@@ -26,16 +26,19 @@ use ich::util::table::{f2, Table};
 
 fn main() {
     let args = Args::from_env(&["real", "verbose"]);
-    // `--steal uniform|topo` sets the process-wide steal-victim
+    // `--steal uniform|topo|ranked` sets the process-wide steal-victim
     // default (every `ForOpts::default()` in apps/harness picks it
-    // up); `ICH_STEAL` is the env equivalent.
+    // up); `ICH_STEAL` is the env equivalent. `ranked` needs a
+    // topology with distance information (sysfs SLIT or the extended
+    // `ICH_TOPOLOGY` syntax, e.g. `2x14@10,21;21,10`) — without one it
+    // degrades to the exact uniform path.
     if let Some(s) = args.get("steal") {
         match VictimPolicy::parse(s) {
             Some(v) => {
                 let _ = VictimPolicy::set_process_default(v);
             }
             None => {
-                eprintln!("unknown steal policy '{s}' (expected: uniform | topo)");
+                eprintln!("unknown steal policy '{s}' (expected: uniform | topo | ranked)");
                 std::process::exit(2);
             }
         }
@@ -81,8 +84,12 @@ fn main() {
             println!("        ich overlap --threads 2 --jobs 4 --n 2000000");
             println!("        ich overlap --threads 2 --jobs 8 --class background");
             println!("        ich figure fig4");
-            println!("  --steal uniform|topo  steal-victim policy (default: topo; env ICH_STEAL)");
+            println!("        ICH_TOPOLOGY='2x14@10,21;21,10' ich run --app spmv --sched ich --real --steal ranked");
+            println!("  --steal uniform|topo|ranked  steal-victim policy (default: topo; env ICH_STEAL);");
+            println!("        ranked draws victims with probability decaying per NUMA-distance tier");
             println!("  --class interactive|batch|background  dispatch class (default: batch; env ICH_CLASS)");
+            println!("  ICH_TOPOLOGY  core->node map override: NxM | per-core list, with an optional");
+            println!("        @-suffixed node-distance matrix (rows ';'-separated): 2x14@10,21;21,10");
         }
     }
 }

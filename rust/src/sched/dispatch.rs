@@ -18,10 +18,23 @@
 //!    invariant below).
 //! 2. **Class priority.** Otherwise the highest class wins:
 //!    `Interactive` before `Batch` before `Background`.
-//! 3. **EDF within class.** Inside a class, the earliest deadline
-//!    wins; entries without a deadline sort last.
-//! 4. **FIFO among peers.** Ties (same class, same deadline) break by
-//!    arrival order.
+//! 3. **EDF within class, distance-weighted.** Inside a class, the
+//!    earliest *effective* deadline wins; entries without a deadline
+//!    sort last. The effective deadline a particular claimant sees is
+//!    `deadline + excess(claimant_node, origin_node)` — entries carry
+//!    the NUMA node they were submitted from
+//!    ([`DispatchQueue::push_from`]), and a claiming worker passes its
+//!    own node plus a distance-excess function
+//!    ([`DispatchQueue::best_index_from`]; the runtime uses
+//!    `Topology::edf_distance_penalty`). A near-deadline epoch is thus
+//!    claimed first by workers that won't pay cross-socket traffic for
+//!    it, while a far worker effectively defers to nearer epochs of
+//!    the same class. When the claimant's node, the origin, or the
+//!    deadline is unknown the weight is neutral and the key is the
+//!    plain deadline — so the PR 4 ordering is reproduced exactly on
+//!    unpinned pools and deadline-less traffic.
+//! 4. **FIFO among peers.** Ties (same class, same effective
+//!    deadline) break by arrival order.
 //!
 //! *Skip accounting*: when an entry is removed (fully dispatched),
 //! every remaining entry that arrived **earlier** and has a **lower**
@@ -152,8 +165,16 @@ struct Entry<T> {
     class: LatencyClass,
     /// Virtual-tick deadline; `None` sorts after every deadline.
     deadline: Option<u64>,
+    /// NUMA node the entry was submitted from (`None` = unknown —
+    /// the distance weight is then neutral for this entry).
+    origin: Option<usize>,
     seq: u64,
     skips: u64,
+}
+
+/// Neutral distance weight: [`DispatchQueue::best_index`]'s view.
+fn no_excess(_claimant: usize, _origin: usize) -> u64 {
+    0
 }
 
 /// Deterministic multi-class EDF queue with bounded anti-starvation —
@@ -188,11 +209,19 @@ impl<T> DispatchQueue<T> {
         self.entries.is_empty()
     }
 
-    /// Enqueue an item; returns its arrival sequence number.
+    /// Enqueue an item with no submission origin; returns its arrival
+    /// sequence number.
     pub fn push(&mut self, item: T, class: LatencyClass, deadline: Option<u64>) -> u64 {
+        self.push_from(item, class, deadline, None)
+    }
+
+    /// Enqueue an item, recording the NUMA node it was submitted from
+    /// (the distance-weighted EDF key's origin side); returns its
+    /// arrival sequence number.
+    pub fn push_from(&mut self, item: T, class: LatencyClass, deadline: Option<u64>, origin: Option<usize>) -> u64 {
         let seq = self.next_seq;
         self.next_seq += 1;
-        self.entries.push(Entry { item, class, deadline, seq, skips: 0 });
+        self.entries.push(Entry { item, class, deadline, origin, seq, skips: 0 });
         seq
     }
 
@@ -201,8 +230,35 @@ impl<T> DispatchQueue<T> {
         e.skips >= self.promote_k
     }
 
-    /// Index of the entry the dispatch rule selects next.
+    /// The effective (distance-weighted) deadline entry `e` presents
+    /// to a claimant on `claimant_node`: `deadline + excess(claimant,
+    /// origin)` when all three are known, the plain deadline when the
+    /// claimant or origin is unknown, `u64::MAX` for deadline-less
+    /// entries (they sort last either way).
+    fn weighted_deadline(e: &Entry<T>, claimant_node: Option<usize>, excess: &dyn Fn(usize, usize) -> u64) -> u64 {
+        match (e.deadline, claimant_node, e.origin) {
+            (None, _, _) => u64::MAX,
+            (Some(d), Some(w), Some(o)) => d.saturating_add(excess(w, o)),
+            (Some(d), _, _) => d,
+        }
+    }
+
+    /// Index of the entry the dispatch rule selects next, with the
+    /// neutral distance weight (claimant unknown).
     pub fn best_index(&self) -> Option<usize> {
+        self.best_index_from(None, &no_excess)
+    }
+
+    /// Index of the entry the dispatch rule selects next for a
+    /// claimant on `claimant_node`, weighting the within-class EDF key
+    /// by `excess(claimant_node, origin_node)` extra ticks (rule 3).
+    /// Anti-starvation (rule 1) and class priority (rule 2) are
+    /// distance-blind, so the promotion bound is unaffected.
+    pub fn best_index_from(
+        &self,
+        claimant_node: Option<usize>,
+        excess: &dyn Fn(usize, usize) -> u64,
+    ) -> Option<usize> {
         if self.entries.is_empty() {
             return None;
         }
@@ -211,11 +267,11 @@ impl<T> DispatchQueue<T> {
         if let Some((i, _)) = starving {
             return Some(i);
         }
-        // Rules 2–4: (class rank, deadline, arrival).
+        // Rules 2–4: (class rank, weighted deadline, arrival).
         self.entries
             .iter()
             .enumerate()
-            .min_by_key(|(_, e)| (e.class.rank(), e.deadline.unwrap_or(u64::MAX), e.seq))
+            .min_by_key(|(_, e)| (e.class.rank(), Self::weighted_deadline(e, claimant_node, excess), e.seq))
             .map(|(i, _)| i)
     }
 
@@ -389,6 +445,75 @@ mod tests {
         assert_eq!(q.class_mask(), 0b001, "starving entry reports rank 0");
         assert!(mask_has_higher(q.class_mask(), 1));
         assert!(!mask_has_higher(q.class_mask(), 0));
+    }
+
+    /// 2-node SLIT excess: cross-node claims add 11 ticks.
+    fn cross_excess(w: usize, o: usize) -> u64 {
+        if w == o {
+            0
+        } else {
+            11
+        }
+    }
+
+    #[test]
+    fn distance_weight_prefers_near_origin_at_close_deadlines() {
+        let mut q = DispatchQueue::new();
+        // Far origin (node 1) arrives first with the earlier deadline;
+        // near origin (node 0) has a deadline within the cross-node
+        // excess, so a node-0 claimant takes the near epoch first.
+        q.push_from(0, LatencyClass::Batch, Some(10), Some(1));
+        q.push_from(1, LatencyClass::Batch, Some(15), Some(0));
+        let i = q.best_index_from(Some(0), &cross_excess).unwrap();
+        assert_eq!(*q.item(i), 1, "near origin wins inside the distance excess");
+        // A node-1 claimant sees the mirror image.
+        let i = q.best_index_from(Some(1), &cross_excess).unwrap();
+        assert_eq!(*q.item(i), 0);
+        // A deadline gap wider than the excess still wins regardless
+        // of distance.
+        let mut q = DispatchQueue::new();
+        q.push_from(0, LatencyClass::Batch, Some(10), Some(1));
+        q.push_from(1, LatencyClass::Batch, Some(30), Some(0));
+        assert_eq!(*q.item(q.best_index_from(Some(0), &cross_excess).unwrap()), 0);
+    }
+
+    #[test]
+    fn distance_weight_is_neutral_without_nodes_and_across_classes() {
+        let mut q = DispatchQueue::new();
+        q.push_from(0, LatencyClass::Batch, Some(10), Some(1));
+        q.push_from(1, LatencyClass::Batch, Some(15), Some(0));
+        // Unknown claimant → plain EDF (earliest deadline first).
+        assert_eq!(*q.item(q.best_index_from(None, &cross_excess).unwrap()), 0);
+        assert_eq!(q.best_index(), q.best_index_from(None, &cross_excess));
+        // Unknown origin → that entry is unweighted even for a known
+        // claimant.
+        let mut q = DispatchQueue::new();
+        q.push_from(0, LatencyClass::Batch, Some(10), None);
+        q.push_from(1, LatencyClass::Batch, Some(15), Some(0));
+        assert_eq!(*q.item(q.best_index_from(Some(0), &cross_excess).unwrap()), 0);
+        // Class priority stays distance-blind: a far Interactive epoch
+        // still beats a near Batch one.
+        let mut q = DispatchQueue::new();
+        q.push_from(0, LatencyClass::Interactive, Some(10), Some(1));
+        q.push_from(1, LatencyClass::Batch, Some(10), Some(0));
+        assert_eq!(*q.item(q.best_index_from(Some(0), &cross_excess).unwrap()), 0);
+        // Deadline-less entries sort last whatever their origin.
+        let mut q = DispatchQueue::new();
+        q.push_from(0, LatencyClass::Batch, None, Some(0));
+        q.push_from(1, LatencyClass::Batch, Some(1_000_000), Some(1));
+        assert_eq!(*q.item(q.best_index_from(Some(0), &cross_excess).unwrap()), 1);
+    }
+
+    #[test]
+    fn distance_weight_never_bypasses_promotion() {
+        // A starving entry wins over every distance-weighted rival.
+        let mut q = DispatchQueue::with_promote_k(1);
+        q.push_from(0, LatencyClass::Background, Some(5), Some(0));
+        q.push_from(1, LatencyClass::Interactive, None, Some(0));
+        assert_eq!(q.pop_best().unwrap().0, 1); // bg skipped once → starving
+        q.push_from(2, LatencyClass::Interactive, Some(1), Some(0));
+        let i = q.best_index_from(Some(0), &cross_excess).unwrap();
+        assert_eq!(*q.item(i), 0, "anti-starvation is distance-blind");
     }
 
     #[test]

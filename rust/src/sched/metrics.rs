@@ -4,6 +4,7 @@
 //! collection never introduces false sharing into the hot loop.
 
 use super::dispatch::LatencyClass;
+use super::topology::Topology;
 use crate::util::sync::CachePadded;
 use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
 
@@ -23,11 +24,26 @@ pub struct ThreadCounters {
     pub steals_local: AtomicU64,
     /// Successful steals from another (or an unknown) node.
     pub steals_remote: AtomicU64,
+    /// Successful steals per distance tier of the detected topology:
+    /// slot `i` = the topology's tier `i` (0 = same node, rising with
+    /// NUMA distance), last slot = unknown locality. Invariant:
+    /// Σ slots == `steals_ok`.
+    pub steals_tier: Vec<AtomicU64>,
     /// Failed steal attempts (empty victim or THE rollback).
     pub steals_failed: AtomicU64,
     /// Steal-backoff escalations: failed-steal streaks that exhausted
     /// the bounded spin phase and fell back to `thread::yield_now`.
     pub backoffs: AtomicU64,
+}
+
+impl ThreadCounters {
+    fn with_tiers(tiers: usize) -> ThreadCounters {
+        ThreadCounters {
+            // +1: a dedicated unknown-locality bucket at the end.
+            steals_tier: (0..tiers + 1).map(|_| AtomicU64::new(0)).collect(),
+            ..Default::default()
+        }
+    }
 }
 
 /// Shared metrics sink for one `parallel_for` invocation.
@@ -36,8 +52,14 @@ pub struct MetricsSink {
 }
 
 impl MetricsSink {
+    /// Sink sized for the detected topology's distance tiers.
     pub fn new(p: usize) -> MetricsSink {
-        MetricsSink { per_thread: (0..p).map(|_| CachePadded::new(ThreadCounters::default())).collect() }
+        MetricsSink::with_tiers(p, Topology::detect().tier_count())
+    }
+
+    /// Sink with an explicit distance-tier count (tests).
+    pub fn with_tiers(p: usize, tiers: usize) -> MetricsSink {
+        MetricsSink { per_thread: (0..p).map(|_| CachePadded::new(ThreadCounters::with_tiers(tiers))).collect() }
     }
 
     #[inline]
@@ -67,13 +89,16 @@ impl MetricsSink {
     /// remote, preserving `local + remote == ok`).
     #[inline]
     pub fn add_steal(&self, tid: usize, ok: bool) {
-        self.add_steal_located(tid, ok, false);
+        self.add_steal_at(tid, ok, false, None);
     }
 
-    /// Record a steal attempt with victim locality: `local` = the
-    /// victim ran on the thief's own NUMA node.
+    /// Record a steal attempt with full distance information: `tier`
+    /// is the topology distance tier between thief and victim (0 =
+    /// same node; `None` = unknown locality → the dedicated last
+    /// bucket). Keeps both partitions exact:
+    /// `local + remote == ok` and `Σ tier buckets == ok`.
     #[inline]
-    pub fn add_steal_located(&self, tid: usize, ok: bool, local: bool) {
+    pub fn add_steal_at(&self, tid: usize, ok: bool, local: bool, tier: Option<usize>) {
         let c = &self.per_thread[tid];
         if ok {
             c.steals_ok.fetch_add(1, Relaxed);
@@ -82,6 +107,17 @@ impl MetricsSink {
             } else {
                 c.steals_remote.fetch_add(1, Relaxed);
             }
+            let slots = &c.steals_tier;
+            if !slots.is_empty() {
+                // Known tiers clamp into the known range; unknown (or
+                // a sink built before the topology grew tiers) lands
+                // in the last, dedicated bucket.
+                let i = match tier {
+                    Some(t) if slots.len() >= 2 => t.min(slots.len() - 2),
+                    _ => slots.len() - 1,
+                };
+                slots[i].fetch_add(1, Relaxed);
+            }
         } else {
             c.steals_failed.fetch_add(1, Relaxed);
         }
@@ -89,6 +125,13 @@ impl MetricsSink {
 
     pub fn collect(&self, elapsed: std::time::Duration) -> RunMetrics {
         let iters: Vec<u64> = self.per_thread.iter().map(|c| c.iters.load(Relaxed)).collect();
+        let tiers = self.per_thread.first().map_or(0, |c| c.steals_tier.len());
+        let mut steals_by_tier = vec![0u64; tiers];
+        for c in &self.per_thread {
+            for (acc, slot) in steals_by_tier.iter_mut().zip(&c.steals_tier) {
+                *acc += slot.load(Relaxed);
+            }
+        }
         RunMetrics {
             threads: self.per_thread.len(),
             elapsed_s: elapsed.as_secs_f64(),
@@ -97,6 +140,7 @@ impl MetricsSink {
             steals_ok: self.per_thread.iter().map(|c| c.steals_ok.load(Relaxed)).sum(),
             steals_local: self.per_thread.iter().map(|c| c.steals_local.load(Relaxed)).sum(),
             steals_remote: self.per_thread.iter().map(|c| c.steals_remote.load(Relaxed)).sum(),
+            steals_by_tier,
             steals_failed: self.per_thread.iter().map(|c| c.steals_failed.load(Relaxed)).sum(),
             backoffs: self.per_thread.iter().map(|c| c.backoffs.load(Relaxed)).sum(),
             iters_per_thread: iters,
@@ -123,6 +167,11 @@ pub struct RunMetrics {
     /// steals_ok`; unknown locality counts as remote).
     pub steals_local: u64,
     pub steals_remote: u64,
+    /// Successful steals per topology distance tier (slot `i` = tier
+    /// `i`, 0 = same node; last slot = unknown locality). Invariant:
+    /// Σ slots == `steals_ok`. Empty for hand-built sinks with no
+    /// tier slots.
+    pub steals_by_tier: Vec<u64>,
     pub steals_failed: u64,
     /// Spin→yield backoff transitions across all threads.
     pub backoffs: u64,
@@ -191,10 +240,10 @@ mod tests {
     #[test]
     fn steal_locality_sums_to_total() {
         let m = MetricsSink::new(3);
-        m.add_steal_located(0, true, true);
-        m.add_steal_located(1, true, false);
-        m.add_steal_located(1, true, true);
-        m.add_steal_located(2, false, true); // failures are not classified
+        m.add_steal_at(0, true, true, Some(0));
+        m.add_steal_at(1, true, false, Some(1));
+        m.add_steal_at(1, true, true, Some(0));
+        m.add_steal_at(2, false, true, None); // failures are not classified
         m.add_steal(2, true);
         let r = m.collect(Duration::ZERO);
         assert_eq!(r.steals_ok, 4);
@@ -204,6 +253,25 @@ mod tests {
         assert_eq!(r.steals_failed, 1);
         assert!((r.local_steal_fraction() - 0.5).abs() < 1e-12);
         assert_eq!(RunMetrics::default().local_steal_fraction(), 0.0);
+        // Tier buckets partition successful steals on every path.
+        assert_eq!(r.steals_by_tier.iter().sum::<u64>(), r.steals_ok);
+    }
+
+    #[test]
+    fn steal_tier_buckets_partition_and_clamp() {
+        // 3 known tiers + 1 unknown bucket.
+        let m = MetricsSink::with_tiers(2, 3);
+        m.add_steal_at(0, true, true, Some(0));
+        m.add_steal_at(0, true, false, Some(1));
+        m.add_steal_at(1, true, false, Some(2));
+        m.add_steal_at(1, true, false, None); // unknown → last bucket
+        m.add_steal_at(1, true, false, Some(99)); // clamps into the known range
+        m.add_steal_at(0, false, false, Some(0)); // failures never bucket
+        let r = m.collect(Duration::ZERO);
+        assert_eq!(r.steals_ok, 5);
+        assert_eq!(r.steals_by_tier, vec![1, 1, 2, 1]);
+        assert_eq!(r.steals_by_tier.iter().sum::<u64>(), r.steals_ok);
+        assert_eq!(r.steals_failed, 1);
     }
 
     #[test]

@@ -44,10 +44,16 @@
 //! `BENCH_async.json`.
 //!
 //! [`ForOpts::victim`] picks the steal-victim policy of the
-//! work-stealing engines: uniform random (paper §3.3) or two-tier
-//! topology-biased selection over the core→NUMA-node map discovered
-//! by [`topology::Topology::detect`] (`BENCH_numa.json` measures the
-//! local-steal fraction and wall-time effect per engine).
+//! work-stealing engines: uniform random (paper §3.3), two-tier
+//! topology-biased, or distance-*ranked* multi-tier selection over
+//! the core→NUMA-node map and node-distance matrix discovered by
+//! [`topology::Topology::detect`] (`BENCH_numa.json` measures the
+//! two-tier local-steal fraction and wall-time effect per engine;
+//! `BENCH_distance.json` compares uniform vs topo vs ranked on a
+//! ≥2-node distance topology). The same matrix weights the pool's
+//! within-class EDF dispatch key, so near-deadline epochs land on
+//! workers that won't pay cross-socket traffic (see `sched::dispatch`
+//! and `sched::runtime`).
 //!
 //! [`ForOpts::class`] / [`ForOpts::deadline`] pick the **dispatch
 //! class** of the submission on the pool's multi-class epoch queue:
@@ -224,11 +230,13 @@ pub struct ForOpts<'a> {
     /// Worker-thread provider (persistent pool by default).
     pub mode: ExecMode,
     /// Steal-victim selection for the work-stealing engines
-    /// (`stealing`, `ich`): uniform random (the paper's rule) or
-    /// two-tier topology-biased. The default comes from
+    /// (`stealing`, `ich`): uniform random (the paper's rule),
+    /// two-tier topology-biased, or distance-ranked multi-tier over
+    /// the node-distance matrix. The default comes from
     /// [`VictimPolicy::process_default`] (CLI `--steal` / `ICH_STEAL`
-    /// env, else `Topo`, which degrades to exact uniform selection on
-    /// single-node topologies).
+    /// env, else `Topo`); both biased modes degrade to exact uniform
+    /// selection on single-node (for `Ranked`, also all-equidistant)
+    /// topologies.
     pub victim: VictimPolicy,
     /// Dispatch class on the pool's multi-class epoch queue. The
     /// default comes from [`LatencyClass::process_default`] (CLI
@@ -290,9 +298,11 @@ impl<'a> ForOpts<'a> {
         self
     }
 
-    /// The [`SubmitOpts`] this run hands the pool.
+    /// The [`SubmitOpts`] this run hands the pool. The submission
+    /// origin is left to auto-detection (the submitting thread's
+    /// pinned core, if any).
     fn submit_opts(&self) -> SubmitOpts {
-        SubmitOpts { class: self.class, deadline: self.deadline, pin_fallback: self.pin }
+        SubmitOpts { class: self.class, deadline: self.deadline, pin_fallback: self.pin, origin: None }
     }
 }
 

@@ -180,18 +180,29 @@ pub fn binlpt_partition(weights: &[f64], max_chunks: usize, p: usize) -> (Vec<(u
     let n = weights.len();
     let k = max_chunks.max(1);
     let total: f64 = weights.iter().sum();
-    let target = (total / k as f64).max(f64::MIN_POSITIVE);
     // Greedy contiguous split: close each chunk when it reaches the
-    // mean chunk workload.
+    // *current* mean chunk workload — recomputed as remaining weight /
+    // remaining chunk budget after every close. The seed fixed
+    // target = total/k up front and discarded the overshoot, so a
+    // heavy prefix (each iteration ≥ the global mean) burned one
+    // budget slot per iteration while a light tail could never reach
+    // the stale target again: the split collapsed to a handful of
+    // chunks plus one giant tail, degrading the LPT assignment to
+    // near-static exactly on the skewed inputs BinLPT exists for.
     let mut chunks: Vec<(usize, usize)> = Vec::new();
     let mut start = 0usize;
     let mut acc = 0.0;
+    let mut remaining = total;
+    let mut target = (total / k as f64).max(f64::MIN_POSITIVE);
     for i in 0..n {
         acc += weights[i];
         if acc >= target && chunks.len() + 1 < k {
             chunks.push((start, i + 1));
             start = i + 1;
+            remaining = (remaining - acc).max(0.0);
             acc = 0.0;
+            let left = (k - chunks.len()) as f64;
+            target = (remaining / left).max(f64::MIN_POSITIVE);
         }
     }
     if start < n {
@@ -343,6 +354,35 @@ mod tests {
         let (l0, l1) = (load(&assign[0]), load(&assign[1]));
         let imbalance = l0.max(l1) / (l0.min(l1)).max(1.0);
         assert!(imbalance < 2.0, "LPT imbalance too large: {l0} vs {l1}");
+    }
+
+    #[test]
+    fn binlpt_heavy_prefix_keeps_chunk_budget() {
+        // Regression (this PR): with the seed's fixed target =
+        // total/k, each of the 4 heavy prefix iterations (225 ≥
+        // 996/8 = 124.5) closed its own chunk, and the 96-unit light
+        // tail could never reach the stale target again — 5 chunks
+        // total, and LPT had to hand one thread a 321-unit chunk pair
+        // (imbalance ≈ 1.29 over the 249 mean). Recomputing the
+        // target from remaining weight / remaining budget splits the
+        // tail into the unused budget: 8 chunks, perfect 249/thread.
+        let mut w = vec![1.0; 100];
+        for x in w.iter_mut().take(4) {
+            *x = 225.0;
+        }
+        let p = 4;
+        let (chunks, assign) = binlpt_partition(&w, 8, p);
+        covers_exactly(&chunks, 100);
+        assert_eq!(chunks.len(), 8, "the whole chunk budget must be spent: {chunks:?}");
+        let load = |tis: &Vec<usize>| -> f64 {
+            tis.iter().map(|&c| w[chunks[c].0..chunks[c].1].iter().sum::<f64>()).sum()
+        };
+        let max_load = assign.iter().map(load).fold(0.0f64, f64::max);
+        let mean = w.iter().sum::<f64>() / p as f64;
+        assert!(
+            max_load / mean < 1.05,
+            "post-LPT imbalance must be near-perfect with a full budget: max {max_load} mean {mean}"
+        );
     }
 
     #[test]

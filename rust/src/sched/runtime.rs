@@ -104,6 +104,15 @@
 //! default `Batch` class with no deadline, the dispatch order is the
 //! exact FIFO of the previous design.
 //!
+//! The within-class EDF key is **distance-weighted**: every epoch
+//! records the NUMA node it was submitted from, and a claiming worker
+//! weights each epoch's deadline by
+//! `Topology::edf_distance_penalty(worker_node, origin)` — so at
+//! comparable deadlines a near-deadline epoch is picked up by workers
+//! that won't pay cross-socket traffic for it. Unpinned workers and
+//! origin-less epochs see the unweighted key, so single-node hosts
+//! and the conformance harness observe the exact PR 4 order.
+//!
 //! Classes and deadlines enter through [`SubmitOpts`]
 //! ([`Runtime::run_with`], [`Runtime::submit_arc_with`],
 //! [`Runtime::submit_driver_with`]) or, one level up, through
@@ -155,7 +164,7 @@ use std::time::Instant;
 
 use super::dispatch::{mask_has_higher, DispatchQueue, LatencyClass, PopInfo};
 use super::pool::{num_cpus, pin_to_cpu, pinned_core, scoped_run, scoped_run_pin_workers};
-use super::topology::Topology;
+use super::topology::{self, Topology};
 
 /// How a scheduling engine obtains its `p` worker threads. Engines
 /// call `run` once per parallel region; the executor guarantees
@@ -230,11 +239,17 @@ pub struct SubmitOpts {
     /// workers stay unpinned — re-pinning either would clobber
     /// placement this run does not own.
     pub pin_fallback: bool,
+    /// Submission-origin NUMA node for the distance-weighted EDF key
+    /// (`None` = derive it from the submitting thread's pinned core,
+    /// which is unknown for unpinned submitters — the weight is then
+    /// neutral). Embedders that know where a request's data lives can
+    /// set this explicitly without pinning their submitting threads.
+    pub origin: Option<usize>,
 }
 
 impl Default for SubmitOpts {
     fn default() -> SubmitOpts {
-        SubmitOpts { class: LatencyClass::process_default(), deadline: None, pin_fallback: false }
+        SubmitOpts { class: LatencyClass::process_default(), deadline: None, pin_fallback: false, origin: None }
     }
 }
 
@@ -248,6 +263,10 @@ pub struct DispatchInfo {
     pub promoted: bool,
     /// Times the epoch was bypassed by later, higher-class arrivals.
     pub skips: u64,
+    /// Submission-origin node the distance-weighted EDF key saw
+    /// ([`SubmitOpts::origin`], else the submitting thread's node;
+    /// `None` = unknown, weight neutral).
+    pub origin: Option<usize>,
 }
 
 /// Cumulative per-class dispatch counters of one pool
@@ -357,6 +376,10 @@ struct Epoch {
     class: LatencyClass,
     /// Virtual-tick deadline for EDF ordering within the class.
     deadline: Option<u64>,
+    /// NUMA node of the submitting thread (`None` = unpinned / unknown):
+    /// the origin side of the distance-weighted EDF key, so claiming
+    /// workers prefer near-origin epochs at comparable deadlines.
+    origin: Option<usize>,
     /// When the epoch was enqueued (queue-wait measurement).
     enqueued_at: Instant,
     /// Submission → first claim hand-out, in nanoseconds (0 = not yet
@@ -387,6 +410,7 @@ impl Epoch {
             panic: Mutex::new(None),
             class: opts.class,
             deadline: opts.deadline,
+            origin: opts.origin.or_else(topology::current_node),
             enqueued_at: Instant::now(),
             dispatched_ns: AtomicU64::new(0),
             skips: AtomicU64::new(0),
@@ -401,6 +425,7 @@ impl Epoch {
             queue_wait_s: self.dispatched_ns.load(Acquire) as f64 * 1e-9,
             promoted: self.promoted.load(Acquire),
             skips: self.skips.load(Acquire),
+            origin: self.origin,
         }
     }
 
@@ -724,10 +749,20 @@ fn claim_next(shared: &PoolShared) -> Option<(Arc<Epoch>, usize, u8)> {
 /// effective rank the claim was selected at (0 for an anti-starvation
 /// promotion), which the executing thread adopts as its own
 /// preemption threshold.
+///
+/// Selection is made from the *claiming thread's* vantage: its NUMA
+/// node (known for pinned pool workers) weights the within-class EDF
+/// key by [`Topology::edf_distance_penalty`] against each epoch's
+/// submission origin, so near-deadline epochs are claimed by workers
+/// that won't pay cross-socket traffic for them. Unpinned claimants
+/// (and origin-less epochs) see the exact PR 4 ordering.
 fn claim_next_above(shared: &PoolShared, below_rank: u8) -> Option<(Arc<Epoch>, usize, u8)> {
+    let topo = Topology::detect();
+    let me = topology::current_node();
+    let excess = |w: usize, o: usize| topo.edf_distance_penalty(w, o);
     let mut q = shared.queue.lock().unwrap();
     let out = loop {
-        let Some(idx) = q.best_index() else { break None };
+        let Some(idx) = q.best_index_from(me, &excess) else { break None };
         let eff = q.effective_rank(idx);
         if eff >= below_rank {
             break None;
@@ -952,7 +987,7 @@ impl Runtime {
     fn enqueue(&self, epoch: &Arc<Epoch>) {
         {
             let mut q = self.shared.queue.lock().unwrap();
-            q.push(Arc::clone(epoch), epoch.class, epoch.deadline);
+            q.push_from(Arc::clone(epoch), epoch.class, epoch.deadline, epoch.origin);
             self.shared.class_mask.store(q.class_mask(), Relaxed);
         }
         self.shared.stats[epoch.class.rank() as usize].submitted.fetch_add(1, Relaxed);
@@ -1907,6 +1942,29 @@ mod tests {
         let d = rt.run_with(2, &|_tid| {}, bg_opts).expect("pool-width run reports dispatch info");
         assert_eq!(d.class, LatencyClass::Background);
         assert_eq!(rt.class_stats()[LatencyClass::Background.rank() as usize].submitted, 1);
+    }
+
+    #[test]
+    fn submission_origin_reaches_the_dispatch_queue() {
+        let rt = Runtime::with_pinning(1, false);
+        // Explicit origin: an embedder that knows where a request's
+        // data lives declares it without pinning anything, and it must
+        // flow through the epoch into the dispatch metadata the
+        // distance-weighted EDF key reads.
+        let opts = SubmitOpts { origin: Some(1), deadline: Some(5), ..Default::default() };
+        let info = rt.submit_arc_with(1, Arc::new(|_tid| {}), opts).join_with_dispatch().expect("pool epoch");
+        assert_eq!(info.origin, Some(1), "explicit SubmitOpts::origin must reach the queue entry");
+        // Auto-derived origin: a *pinned* submitting thread's node
+        // must become the epoch origin with no explicit opt-in. The
+        // pin is best-effort (restricted affinity masks may refuse
+        // it), so the assertion is gated on the pin actually landing.
+        pin_to_cpu(0);
+        if let Some(core) = pinned_core() {
+            let expected = Some(Topology::detect().node_of(core));
+            let info =
+                rt.submit_arc_with(1, Arc::new(|_tid| {}), SubmitOpts::default()).join_with_dispatch().unwrap();
+            assert_eq!(info.origin, expected, "pinned submitter's node must be auto-derived as the origin");
+        }
     }
 
     #[test]

@@ -1,6 +1,7 @@
-//! Machine topology: the core → NUMA-node map behind topology-aware
-//! steal-victim selection (ROADMAP's NUMA item; paper §6.2 notes the
-//! cross-socket steal penalty the sim has always modeled).
+//! Machine topology: the core → NUMA-node map **and node-distance
+//! matrix** behind topology-aware steal-victim selection and
+//! distance-weighted dispatch (ROADMAP's NUMA items; paper §6.2 notes
+//! the cross-socket steal penalty the sim has always modeled).
 //!
 //! # Discovery order
 //!
@@ -10,11 +11,15 @@
 //! 1. **`ICH_TOPOLOGY` env override** — either `"NxM"` (N nodes × M
 //!    cores per node, block layout: cores `[i*M, (i+1)*M)` live on
 //!    node `i`, matching `OMP_PLACES=cores` on the paper's testbed)
-//!    or an explicit per-core node list `"0,0,1,1"`. This is how CI
-//!    exercises multi-node code paths on single-socket runners and
-//!    how a container can opt out of sysfs.
+//!    or an explicit per-core node list `"0,0,1,1"`. Either form may
+//!    carry an explicit SLIT-style node-distance matrix after an `@`:
+//!    `"2x14@10,21;21,10"` (rows separated by `;`, one row per node,
+//!    row `a` entry `b` = distance from node `a` to node `b`). This is
+//!    how CI exercises multi-node and multi-tier code paths on
+//!    single-socket runners and how a container can opt out of sysfs.
 //! 2. **Linux sysfs** — `/sys/devices/system/node/node*/cpulist`
-//!    (authoritative NUMA map), falling back to
+//!    (authoritative NUMA map) plus `node*/distance` (the ACPI SLIT),
+//!    falling back to
 //!    `/sys/devices/system/cpu/cpu*/topology/physical_package_id`
 //!    (socket ids) when the node directory is absent.
 //! 3. **Single-node fallback** — every core on node 0. Containers
@@ -23,72 +28,158 @@
 //!    those hosts keep the exact uniform victim selection the paper
 //!    describes (§3.3) with no new overhead path.
 //!
+//! Whenever no explicit distance matrix is available, a sane default
+//! is synthesized: [`LOCAL_DISTANCE`] on the diagonal and
+//! [`REMOTE_DISTANCE`] off it (the kernel's own SLIT default), so a
+//! multi-node map without SLIT data still ranks local before remote.
+//!
 //! # Who consumes it
 //!
 //! - `sched::ws` builds a [`VictimSelector`] per thief when the run's
-//!   [`VictimPolicy`] is `Topo` *and* the detected topology has more
-//!   than one node; workers learn their own node from the pinned-core
-//!   thread-local ([`crate::sched::pool::pinned_core`]).
+//!   [`VictimPolicy`] is `Topo` (two-tier local/remote bias) or
+//!   `Ranked` (multi-tier, probability decaying per distance tier)
+//!   *and* the detected topology has distance information to exploit;
+//!   workers learn their own node from the pinned-core thread-local
+//!   ([`crate::sched::pool::pinned_core`]).
 //! - `sched::runtime::Runtime` maps its spawn-time worker pinning
 //!   through [`Topology::node_of`] to expose worker → node and
-//!   tid → node views to embedders and benches.
-//! - `sim::policies` mirrors the same two-tier selection over the
-//!   virtual machine's socket map, so the simulator and the real
-//!   runtime cannot drift on victim choice.
+//!   tid → node views, and weights the dispatch queue's EDF key by
+//!   [`Topology::edf_distance_penalty`] between an epoch's submitting
+//!   node and the claiming worker's node.
+//! - `sim::policies` mirrors the same two-tier and ranked selection
+//!   over the virtual machine's socket-distance matrix, so the
+//!   simulator and the real runtime cannot drift on victim choice.
 
 use std::sync::OnceLock;
 
 use super::pool::{num_cpus, pinned_core};
 use crate::util::rng::Rng;
 
-/// A core → NUMA-node map.
+/// SLIT convention: distance of a node to itself.
+pub const LOCAL_DISTANCE: u64 = 10;
+
+/// SLIT convention: default distance between distinct nodes when no
+/// explicit matrix is available (the kernel's own fallback).
+pub const REMOTE_DISTANCE: u64 = 20;
+
+/// The default local/remote matrix for `nodes` nodes.
+fn default_distance(nodes: usize) -> Vec<Vec<u64>> {
+    (0..nodes)
+        .map(|a| (0..nodes).map(|b| if a == b { LOCAL_DISTANCE } else { REMOTE_DISTANCE }).collect())
+        .collect()
+}
+
+/// Sorted distinct distances of a matrix (the distance *tiers*).
+fn tiers_of(distance: &[Vec<u64>]) -> Vec<u64> {
+    let mut t: Vec<u64> = distance.iter().flat_map(|row| row.iter().copied()).collect();
+    t.sort_unstable();
+    t.dedup();
+    t
+}
+
+/// A core → NUMA-node map plus the node-distance matrix.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Topology {
     /// `node_of_core[c]` = node of core `c`.
     node_of_core: Vec<usize>,
     /// Node count (max node id + 1).
     nodes: usize,
+    /// `distance[a][b]` = SLIT-style distance from node `a` to node
+    /// `b` (`nodes × nodes`, diagonal = local). Synthesized from
+    /// [`LOCAL_DISTANCE`]/[`REMOTE_DISTANCE`] when the host (or the
+    /// override) provides none.
+    distance: Vec<Vec<u64>>,
+    /// Sorted distinct distance values — the distance *tiers* the
+    /// ranked victim selector and the per-tier steal metrics index by.
+    tiers: Vec<u64>,
 }
 
 impl Topology {
     fn from_map(node_of_core: Vec<usize>) -> Topology {
         debug_assert!(!node_of_core.is_empty());
         let nodes = node_of_core.iter().copied().max().unwrap_or(0) + 1;
-        Topology { node_of_core, nodes }
+        let distance = default_distance(nodes);
+        let tiers = tiers_of(&distance);
+        Topology { node_of_core, nodes, distance, tiers }
     }
 
     /// Every core on node 0 (the container / macOS fallback).
     pub fn single_node(cores: usize) -> Topology {
-        Topology { node_of_core: vec![0; cores.max(1)], nodes: 1 }
+        Topology {
+            node_of_core: vec![0; cores.max(1)],
+            nodes: 1,
+            distance: default_distance(1),
+            tiers: vec![LOCAL_DISTANCE],
+        }
     }
 
     /// Synthetic block topology: `nodes` × `cores_per_node`, cores
-    /// `[i*cpn, (i+1)*cpn)` on node `i`.
+    /// `[i*cpn, (i+1)*cpn)` on node `i` (default distance matrix).
     pub fn synthetic(nodes: usize, cores_per_node: usize) -> Topology {
         let (nodes, cpn) = (nodes.max(1), cores_per_node.max(1));
         let map = (0..nodes * cpn).map(|c| c / cpn).collect();
         Topology::from_map(map)
     }
 
-    /// Parse an `ICH_TOPOLOGY` spec: `"2x14"` or `"0,0,1,1"`.
-    /// Returns `None` on anything malformed (the caller falls back to
-    /// the next discovery stage, never panics).
+    /// Replace the distance matrix. Returns `None` when the matrix is
+    /// malformed for this topology: not `nodes × nodes`, or any entry
+    /// zero (SLIT distances are ≥ 1; 0 would break ratio weighting).
+    pub fn with_distance(mut self, distance: Vec<Vec<u64>>) -> Option<Topology> {
+        if distance.len() != self.nodes
+            || distance.iter().any(|row| row.len() != self.nodes)
+            || distance.iter().any(|row| row.iter().any(|&d| d == 0))
+        {
+            return None;
+        }
+        self.tiers = tiers_of(&distance);
+        self.distance = distance;
+        Some(self)
+    }
+
+    /// Parse the `@`-suffix distance matrix of an `ICH_TOPOLOGY` spec:
+    /// rows separated by `;`, entries by `,` (`"10,21;21,10"`).
+    /// Shape and positivity are validated by [`Topology::with_distance`].
+    fn parse_distance(s: &str) -> Option<Vec<Vec<u64>>> {
+        let s = s.trim();
+        if s.is_empty() {
+            return None;
+        }
+        s.split(';')
+            .map(|row| row.split(',').map(|t| t.trim().parse::<u64>().ok()).collect::<Option<Vec<u64>>>())
+            .collect()
+    }
+
+    /// Parse an `ICH_TOPOLOGY` spec: `"2x14"` or `"0,0,1,1"`, each
+    /// optionally followed by `@` and an explicit node-distance matrix
+    /// (`"2x14@10,21;21,10"`). Returns `None` on anything malformed —
+    /// including a matrix whose shape does not match the node count —
+    /// so the caller falls back to the next discovery stage instead of
+    /// running with a half-parsed topology.
     pub fn parse_spec(spec: &str) -> Option<Topology> {
         let spec = spec.trim();
-        if let Some((n, m)) = spec.split_once(['x', 'X']) {
+        let (map_spec, dist_spec) = match spec.split_once('@') {
+            Some((m, d)) => (m.trim(), Some(d)),
+            None => (spec, None),
+        };
+        let topo = if let Some((n, m)) = map_spec.split_once(['x', 'X']) {
             let nodes: usize = n.trim().parse().ok()?;
             let cpn: usize = m.trim().parse().ok()?;
             if nodes == 0 || cpn == 0 {
                 return None;
             }
-            return Some(Topology::synthetic(nodes, cpn));
+            Topology::synthetic(nodes, cpn)
+        } else {
+            let map: Option<Vec<usize>> = map_spec.split(',').map(|t| t.trim().parse().ok()).collect();
+            let map = map?;
+            if map.is_empty() {
+                return None;
+            }
+            Topology::from_map(map)
+        };
+        match dist_spec {
+            None => Some(topo),
+            Some(d) => topo.with_distance(Topology::parse_distance(d)?),
         }
-        let map: Option<Vec<usize>> = spec.split(',').map(|t| t.trim().parse().ok()).collect();
-        let map = map?;
-        if map.is_empty() {
-            return None;
-        }
-        Some(Topology::from_map(map))
     }
 
     /// Read the topology from Linux sysfs; `None` when unavailable.
@@ -104,10 +195,14 @@ impl Topology {
     }
 
     /// `/sys/devices/system/node/node<N>/cpulist` (one file per NUMA
-    /// node, e.g. `"0-13,28-41"`).
+    /// node, e.g. `"0-13,28-41"`), plus `node<N>/distance` (the ACPI
+    /// SLIT row: whitespace-separated distances to every node, in node
+    /// order). A missing or malformed SLIT degrades to the default
+    /// local/remote matrix — never to a rejected topology.
     fn from_node_dirs(root: &str) -> Option<Topology> {
         let mut map: Vec<usize> = Vec::new();
         let mut nodes_seen = 0usize;
+        let mut slit: Vec<(usize, Vec<u64>)> = Vec::new();
         for entry in std::fs::read_dir(root).ok()? {
             let entry = entry.ok()?;
             let name = entry.file_name();
@@ -122,13 +217,39 @@ impl Topology {
                 }
                 map[core] = id;
             }
+            if let Ok(row) = std::fs::read_to_string(entry.path().join("distance")) {
+                if let Some(parsed) = parse_slit_row(&row) {
+                    slit.push((id, parsed));
+                }
+            }
             nodes_seen += 1;
         }
         // Require a complete map: every core assigned, ≥ 1 node.
         if nodes_seen == 0 || map.is_empty() || map.contains(&usize::MAX) {
             return None;
         }
-        Some(Topology::from_map(map))
+        let topo = Topology::from_map(map);
+        // Assemble the SLIT: one complete row per CPU node, else keep
+        // the synthesized default. SLIT rows cover *every* node —
+        // including CPU-less memory-only nodes (CXL/HBM), which
+        // contribute no cores and therefore no columns here — so rows
+        // longer than the CPU-node count are truncated to the leading
+        // CPU-node columns rather than rejected (memory-only nodes are
+        // numbered after the CPU nodes on real firmware).
+        let nodes = topo.nodes;
+        let mut matrix = vec![Vec::new(); nodes];
+        for (id, mut row) in slit {
+            if id < nodes {
+                row.truncate(nodes);
+                matrix[id] = row;
+            }
+        }
+        if matrix.iter().all(|row| row.len() == nodes) {
+            if let Some(t) = topo.clone().with_distance(matrix) {
+                return Some(t);
+            }
+        }
+        Some(topo)
     }
 
     /// `/sys/devices/system/cpu/cpu<N>/topology/physical_package_id`
@@ -178,6 +299,59 @@ impl Topology {
     pub fn cores(&self) -> usize {
         self.node_of_core.len()
     }
+
+    /// SLIT distance from node `a` to node `b`. Out-of-range node ids
+    /// wrap (mirroring [`Topology::node_of`]'s totality).
+    #[inline]
+    pub fn distance(&self, a: usize, b: usize) -> u64 {
+        self.distance[a % self.nodes][b % self.nodes]
+    }
+
+    /// The full node-distance matrix (`nodes × nodes`).
+    pub fn distance_matrix(&self) -> &[Vec<u64>] {
+        &self.distance
+    }
+
+    /// Number of distance tiers (distinct distance values, local
+    /// included). 1 on single-node and all-equidistant topologies,
+    /// 2 under the default local/remote matrix, more with a real SLIT.
+    pub fn tier_count(&self) -> usize {
+        self.tiers.len()
+    }
+
+    /// Distance tier between nodes `a` and `b`: the rank of their
+    /// distance among this topology's distinct distances (0 = the
+    /// nearest tier, typically `a == b`).
+    #[inline]
+    pub fn tier_of(&self, a: usize, b: usize) -> usize {
+        let d = self.distance(a, b);
+        self.tiers.iter().position(|&t| t == d).unwrap_or(0)
+    }
+
+    /// Does distance carry no information (single node, or every
+    /// entry of the matrix — diagonal included — equal)? Ranked
+    /// selection gates off here and keeps the exact uniform path.
+    pub fn is_equidistant(&self) -> bool {
+        self.tiers.len() <= 1
+    }
+
+    /// Extra EDF ticks a claim by a worker on `worker_node` adds to an
+    /// epoch submitted from `origin`: the distance above the origin's
+    /// local distance, so same-node claims are neutral (0) and
+    /// cross-node claims push the epoch's effective deadline out by
+    /// the SLIT excess. Deadlines are virtual ticks; callers choosing
+    /// deadline scales should know one SLIT hop ≈ 10 ticks.
+    #[inline]
+    pub fn edf_distance_penalty(&self, worker_node: usize, origin: usize) -> u64 {
+        self.distance(worker_node, origin).saturating_sub(self.distance(origin, origin))
+    }
+}
+
+/// Parse one sysfs `node*/distance` row: whitespace-separated
+/// positive integers ("10 21").
+fn parse_slit_row(s: &str) -> Option<Vec<u64>> {
+    let row: Option<Vec<u64>> = s.split_whitespace().map(|t| t.parse::<u64>().ok().filter(|&d| d > 0)).collect();
+    row.filter(|r| !r.is_empty())
 }
 
 /// Parse a sysfs cpulist like `"0-13,28-41"` into core ids.
@@ -209,6 +383,16 @@ pub fn current_node() -> Option<usize> {
     pinned_core().map(|c| Topology::detect().node_of(c))
 }
 
+/// Does the *hardware* report more than one NUMA node (sysfs node
+/// dirs, falling back to physical-package ids)? Unlike
+/// [`Topology::detect`], this ignores any `ICH_TOPOLOGY` override and
+/// the detect cache — it answers what the host actually is, so tools
+/// deciding whether to install a synthetic override (e.g.
+/// `bench_overhead`) never mask a real multi-socket testbed.
+pub fn host_is_multi_node() -> bool {
+    Topology::from_sysfs().is_some_and(|t| t.nodes() > 1)
+}
+
 /// How work-stealing engines choose a victim (`ForOpts::victim` /
 /// `--steal` / `ICH_STEAL`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
@@ -222,6 +406,15 @@ pub enum VictimPolicy {
     /// uniform code path otherwise.
     #[default]
     Topo,
+    /// Distance-*ranked* multi-tier bias: victims are drawn with
+    /// probability decaying per distance tier of the node-distance
+    /// matrix (nearest tier first, each farther tier reached with the
+    /// complement of [`LOCAL_BIAS_NUM`]`/`[`LOCAL_BIAS_DEN`]), with
+    /// the same starvation-freedom fallback as `Topo`. On single-node
+    /// or all-equidistant topologies the engines gate this off and it
+    /// is *behaviorally identical* to `Uniform` (byte-identical RNG
+    /// stream).
+    Ranked,
 }
 
 impl VictimPolicy {
@@ -230,6 +423,7 @@ impl VictimPolicy {
         match s.trim() {
             "uniform" | "random" => Some(VictimPolicy::Uniform),
             "topo" | "numa" => Some(VictimPolicy::Topo),
+            "ranked" | "distance" => Some(VictimPolicy::Ranked),
             _ => None,
         }
     }
@@ -283,14 +477,20 @@ pub fn uniform_victim(tid: usize, p: usize, rng: &mut Rng) -> usize {
     v
 }
 
-/// Two-tier steal-victim selection state (one per thief). Shared by
-/// the real engines (`sched::ws`) and the simulator (`sim::policies`)
-/// so the two runtimes run the same victim logic — the same way
-/// `sched::policy` shares the chunk math.
+/// Biased steal-victim selection state (one per thief): two-tier
+/// ([`VictimSelector::pick`], `VictimPolicy::Topo`) or distance-ranked
+/// multi-tier ([`VictimSelector::pick_ranked`], `VictimPolicy::Ranked`).
+/// Shared by the real engines (`sched::ws`) and the simulator
+/// (`sim::policies`) so the two runtimes run the same victim logic —
+/// the same way `sched::policy` shares the chunk math.
 #[derive(Clone, Debug, Default)]
 pub struct VictimSelector {
     /// Consecutive failed same-node steals since the last success.
     local_fails: u32,
+    /// Reusable snapshot of candidate nodes (see
+    /// [`VictimSelector::snapshot_nodes`]): grown once per thief, so
+    /// the TOCTOU-safe snapshot costs no per-steal-attempt allocation.
+    nodes: Vec<Option<usize>>,
 }
 
 impl VictimSelector {
@@ -298,16 +498,30 @@ impl VictimSelector {
         VictimSelector::default()
     }
 
+    /// Snapshot `node_of` over `0..p` into the reusable scratch
+    /// buffer. The engines back `node_of` with live atomics that
+    /// workers publish into at epoch entry; re-reading between a
+    /// candidate count and the selection walk could shrink a counted
+    /// set mid-pick and run the walk off its end, so every pick works
+    /// against one coherent snapshot.
+    fn snapshot_nodes<F: Fn(usize) -> Option<usize>>(&mut self, p: usize, node_of: F) {
+        self.nodes.clear();
+        self.nodes.extend((0..p).map(node_of));
+    }
+
     /// Pick a victim in `0..p`, never `tid`. `node_of(t)` reports the
     /// node tid `t` currently runs on (`None` = unknown). Returns the
     /// victim and whether it is on the thief's own node.
+    ///
+    /// `node_of` is snapshotted once at entry (see
+    /// [`VictimSelector::snapshot_nodes`] for why).
     ///
     /// Degenerate cases — unknown own node, all candidates local, no
     /// candidate local, or the remote fallback being active — use the
     /// exact uniform draw (one `rng.below(p-1)`), so a single-node
     /// topology consumes the identical RNG stream as `Uniform` mode.
     pub fn pick<F: Fn(usize) -> Option<usize>>(
-        &self,
+        &mut self,
         tid: usize,
         p: usize,
         my_node: Option<usize>,
@@ -317,7 +531,9 @@ impl VictimSelector {
         let Some(me) = my_node else {
             return (uniform_victim(tid, p, rng), false);
         };
-        let is_local = |t: usize| node_of(t) == Some(me);
+        self.snapshot_nodes(p, node_of);
+        let nodes = &self.nodes;
+        let is_local = |t: usize| nodes[t] == Some(me);
         let locals = (0..p).filter(|&t| t != tid && is_local(t)).count();
         let total = p - 1;
         if locals == 0 || locals == total || self.local_fails >= REMOTE_FALLBACK_FAILS {
@@ -344,6 +560,88 @@ impl VictimSelector {
             }
         }
         unreachable!("counted candidate must exist")
+    }
+
+    /// Distance-*ranked* pick (the [`VictimPolicy::Ranked`] rule):
+    /// candidates are grouped into tiers by `node_dist(my_node,
+    /// their_node)` and the thief walks the tiers in ascending
+    /// distance, staying on the current tier with probability
+    /// [`LOCAL_BIAS_NUM`]`/`[`LOCAL_BIAS_DEN`] — so tier `i` is
+    /// reached with probability `(1/8)^i` and the farthest tier
+    /// absorbs the remainder. Every tier is reachable on every
+    /// attempt, so no node can be starved; candidates whose node is
+    /// unknown sort into a last tier at distance `u64::MAX`.
+    ///
+    /// Degenerate cases — unknown own node, a single distance tier
+    /// among the candidates (single-node and all-equidistant
+    /// topologies), or the starvation fallback being active — use the
+    /// exact uniform draw (one `rng.below(p-1)`), so those hosts
+    /// consume the byte-identical RNG stream as `Uniform` mode. On a
+    /// two-tier matrix this rule degenerates to [`VictimSelector::pick`]'s
+    /// 7/8-local two-tier bias. Like [`VictimSelector::pick`],
+    /// `node_of` is snapshotted once at entry so a concurrent node
+    /// publication cannot move a candidate between tiers mid-walk
+    /// (see [`VictimSelector::snapshot_nodes`]).
+    pub fn pick_ranked<F, D>(
+        &mut self,
+        tid: usize,
+        p: usize,
+        my_node: Option<usize>,
+        node_of: F,
+        node_dist: D,
+        rng: &mut Rng,
+    ) -> (usize, bool)
+    where
+        F: Fn(usize) -> Option<usize>,
+        D: Fn(usize, usize) -> u64,
+    {
+        let Some(me) = my_node else {
+            return (uniform_victim(tid, p, rng), false);
+        };
+        self.snapshot_nodes(p, node_of);
+        let nodes = &self.nodes;
+        let is_local = |t: usize| nodes[t] == Some(me);
+        let dist_of = |t: usize| nodes[t].map_or(u64::MAX, |n| node_dist(me, n));
+        let mut min_d = u64::MAX;
+        let mut max_d = 0u64;
+        for t in (0..p).filter(|&t| t != tid) {
+            let d = dist_of(t);
+            min_d = min_d.min(d);
+            max_d = max_d.max(d);
+        }
+        if min_d == max_d || self.local_fails >= REMOTE_FALLBACK_FAILS {
+            let v = uniform_victim(tid, p, rng);
+            return (v, is_local(v));
+        }
+        // Walk tiers by ascending distance.
+        let mut cur = min_d;
+        loop {
+            let members = (0..p).filter(|&t| t != tid && dist_of(t) == cur).count();
+            debug_assert!(members > 0, "tier walk landed on an empty tier");
+            // Smallest candidate distance strictly beyond this tier.
+            let mut next: Option<u64> = None;
+            for t in (0..p).filter(|&t| t != tid) {
+                let d = dist_of(t);
+                let better = match next {
+                    None => d > cur,
+                    Some(nd) => d > cur && d < nd,
+                };
+                if better {
+                    next = Some(d);
+                }
+            }
+            if next.is_none() || rng.below(LOCAL_BIAS_DEN) < LOCAL_BIAS_NUM {
+                let mut k = rng.below(members);
+                for t in (0..p).filter(|&t| t != tid && dist_of(t) == cur) {
+                    if k == 0 {
+                        return (t, is_local(t));
+                    }
+                    k -= 1;
+                }
+                unreachable!("counted tier member must exist");
+            }
+            cur = next.expect("next tier exists when the stay-draw fails");
+        }
     }
 
     /// Report the outcome of the steal attempt on the picked victim.
@@ -392,6 +690,76 @@ mod tests {
     }
 
     #[test]
+    fn parse_distance_matrix_spec() {
+        let t = Topology::parse_spec("2x14@10,21;21,10").unwrap();
+        assert_eq!(t.nodes(), 2);
+        assert_eq!(t.cores(), 28);
+        assert_eq!(t.distance(0, 0), 10);
+        assert_eq!(t.distance(0, 1), 21);
+        assert_eq!(t.distance(1, 0), 21);
+        assert_eq!(t.tier_count(), 2);
+        assert_eq!(t.tier_of(0, 0), 0);
+        assert_eq!(t.tier_of(0, 1), 1);
+        assert!(!t.is_equidistant());
+        // Per-core-list form carries a matrix too.
+        let t = Topology::parse_spec("0,0,1,1,2,2@10,20,40;20,10,80;40,80,10").unwrap();
+        assert_eq!(t.nodes(), 3);
+        assert_eq!(t.tier_count(), 5, "tiers are the distinct distances: 10,20,40,80");
+        assert_eq!(t.tier_of(1, 2), 4, "80 is the farthest tier");
+        // Equidistant override (diagonal included): distance carries
+        // no information, the ranked gate must see that.
+        let t = Topology::parse_spec("2x3@10,10;10,10").unwrap();
+        assert!(t.is_equidistant());
+    }
+
+    #[test]
+    fn parse_rejects_malformed_distance_matrix() {
+        for bad in [
+            "2x2@",                  // empty matrix
+            "2x2@10,21",             // one row for two nodes
+            "2x2@10,21;21",          // ragged row
+            "2x2@10,21;21,10;10,10", // too many rows
+            "2x2@10,0;21,10",        // zero distance
+            "2x2@a,b;c,d",           // non-numeric
+            "2x2@10,21;21,10@1,2",   // double @ (second matrix is garbage)
+            "0,0,1@10,21;21",        // list form, ragged matrix
+        ] {
+            assert!(Topology::parse_spec(bad).is_none(), "spec {bad:?} must be rejected");
+        }
+    }
+
+    #[test]
+    fn default_distance_is_local_remote() {
+        let t = Topology::synthetic(3, 2);
+        assert_eq!(t.distance(0, 0), LOCAL_DISTANCE);
+        assert_eq!(t.distance(0, 2), REMOTE_DISTANCE);
+        assert_eq!(t.tier_count(), 2);
+        assert!(!t.is_equidistant());
+        let t = Topology::single_node(4);
+        assert_eq!(t.tier_count(), 1);
+        assert!(t.is_equidistant());
+        // Node ids wrap like core ids, keeping distance total.
+        assert_eq!(t.distance(5, 9), LOCAL_DISTANCE);
+    }
+
+    #[test]
+    fn edf_distance_penalty_is_excess_over_local() {
+        let t = Topology::parse_spec("2x1@10,25;25,10").unwrap();
+        assert_eq!(t.edf_distance_penalty(0, 0), 0, "same-node claims are neutral");
+        assert_eq!(t.edf_distance_penalty(1, 0), 15);
+        assert_eq!(t.edf_distance_penalty(0, 1), 15);
+    }
+
+    #[test]
+    fn slit_row_parsing() {
+        assert_eq!(parse_slit_row("10 21\n").unwrap(), vec![10, 21]);
+        assert_eq!(parse_slit_row("10").unwrap(), vec![10]);
+        assert!(parse_slit_row("").is_none());
+        assert!(parse_slit_row("10 x").is_none());
+        assert!(parse_slit_row("10 0").is_none(), "zero distances are malformed");
+    }
+
+    #[test]
     fn single_node_and_synthetic() {
         let t = Topology::single_node(8);
         assert_eq!(t.nodes(), 1);
@@ -433,7 +801,7 @@ mod tests {
         let mut rng = Rng::new(7);
         for p in [2usize, 3, 4, 7] {
             for tid in 0..p {
-                let sel = VictimSelector::new();
+                let mut sel = VictimSelector::new();
                 for _ in 0..500 {
                     let (v, _) = sel.pick(tid, p, Some(topo.node_of(tid)), |t| Some(topo.node_of(t)), &mut rng);
                     assert_ne!(v, tid, "p={p} tid={tid}");
@@ -450,7 +818,7 @@ mod tests {
         // "behaviorally identical on single-node hosts" guarantee.
         let p = 6;
         let (mut r1, mut r2) = (Rng::new(42), Rng::new(42));
-        let sel = VictimSelector::new();
+        let mut sel = VictimSelector::new();
         for _ in 0..2_000 {
             let (v, local) = sel.pick(2, p, Some(0), |_| Some(0), &mut r1);
             assert_eq!(v, uniform_victim(2, p, &mut r2));
@@ -464,7 +832,7 @@ mod tests {
         // still be picked (the 1/8 tail), so no node starves.
         let topo = Topology::synthetic(2, 3);
         let p = 6;
-        let sel = VictimSelector::new();
+        let mut sel = VictimSelector::new();
         let mut rng = Rng::new(11);
         let mut hits = vec![0usize; p];
         for _ in 0..20_000 {
@@ -518,12 +886,92 @@ mod tests {
     #[test]
     fn unknown_own_node_is_uniform() {
         let p = 4;
-        let sel = VictimSelector::new();
+        let mut sel = VictimSelector::new();
         let (mut r1, mut r2) = (Rng::new(9), Rng::new(9));
         for _ in 0..1_000 {
             let (v, local) = sel.pick(1, p, None, |_| Some(0), &mut r1);
             assert_eq!(v, uniform_victim(1, p, &mut r2));
             assert!(!local, "locality is unknowable without an own node");
         }
+    }
+
+    #[test]
+    fn ranked_pick_decays_per_tier() {
+        // 3 nodes × 2 cores, SLIT 10/20/40 from node 0: tier counts
+        // must decay roughly geometrically (7/8 tier0, 7/64 tier1,
+        // 1/64 tier2 — the last tier absorbs the remainder).
+        let topo = Topology::parse_spec("0,0,1,1,2,2@10,20,40;20,10,40;40,40,10").unwrap();
+        let p = 6;
+        let mut sel = VictimSelector::new();
+        let mut rng = Rng::new(31);
+        let mut tier_hits = [0usize; 3];
+        let draws = 40_000;
+        for _ in 0..draws {
+            let (v, _) =
+                sel.pick_ranked(0, p, Some(0), |t| Some(topo.node_of(t)), |a, b| topo.distance(a, b), &mut rng);
+            assert_ne!(v, 0);
+            tier_hits[topo.tier_of(0, topo.node_of(v))] += 1;
+        }
+        assert!(tier_hits[0] > tier_hits[1] * 4, "tier0 must dominate tier1: {tier_hits:?}");
+        assert!(tier_hits[1] > tier_hits[2] * 3, "tier1 must dominate tier2: {tier_hits:?}");
+        assert!(tier_hits[2] > 0, "the farthest tier must never starve: {tier_hits:?}");
+    }
+
+    #[test]
+    fn ranked_single_tier_matches_uniform_stream() {
+        // Single node, and a multi-node all-equidistant matrix: both
+        // must consume the exact uniform RNG stream.
+        let single = Topology::single_node(8);
+        let equi = Topology::parse_spec("2x3@10,10;10,10").unwrap();
+        for topo in [&single, &equi] {
+            let p = 6;
+            let (mut r1, mut r2) = (Rng::new(77), Rng::new(77));
+            let mut sel = VictimSelector::new();
+            for _ in 0..2_000 {
+                let (v, _) = sel.pick_ranked(
+                    2,
+                    p,
+                    Some(topo.node_of(2)),
+                    |t| Some(topo.node_of(t)),
+                    |a, b| topo.distance(a, b),
+                    &mut r1,
+                );
+                assert_eq!(v, uniform_victim(2, p, &mut r2));
+            }
+        }
+    }
+
+    #[test]
+    fn ranked_fallback_after_local_failures_is_uniform() {
+        let topo = Topology::parse_spec("2x3@10,40;40,10").unwrap();
+        let p = 6;
+        let mut sel = VictimSelector::new();
+        for _ in 0..REMOTE_FALLBACK_FAILS {
+            sel.record(false, true);
+        }
+        let (mut r1, mut r2) = (Rng::new(13), Rng::new(13));
+        for _ in 0..1_000 {
+            let (v, _) =
+                sel.pick_ranked(0, p, Some(0), |t| Some(topo.node_of(t)), |a, b| topo.distance(a, b), &mut r1);
+            assert_eq!(v, uniform_victim(0, p, &mut r2), "active fallback must be the exact uniform draw");
+        }
+    }
+
+    #[test]
+    fn ranked_unknown_node_candidates_land_in_last_tier() {
+        // Candidate 3's node is unknown: it must still be reachable
+        // (it forms the farthest tier) and never crash the tier walk.
+        let p = 4;
+        let mut sel = VictimSelector::new();
+        let mut rng = Rng::new(5);
+        let node_of = |t: usize| if t == 3 { None } else { Some(t % 2) };
+        let mut hits = [0usize; 4];
+        for _ in 0..20_000 {
+            let (v, _) = sel.pick_ranked(0, p, Some(0), node_of, |a, b| if a == b { 10 } else { 20 }, &mut rng);
+            assert_ne!(v, 0);
+            hits[v] += 1;
+        }
+        assert!(hits[3] > 0, "unknown-node victim must not starve: {hits:?}");
+        assert!(hits[2] > hits[3], "known same-node victim outdraws the unknown tier: {hits:?}");
     }
 }

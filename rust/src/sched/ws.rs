@@ -9,19 +9,23 @@
 //! precisely the paper's claimed contribution, so the engines share
 //! all other code.
 //!
-//! # Victim selection (PR 3)
+//! # Victim selection (PR 3, distance-ranked in PR 5)
 //!
 //! Both engines take a [`VictimPolicy`]: `Uniform` is the paper's
 //! random victim; `Topo` biases thieves toward same-node victims via
-//! the shared [`VictimSelector`] (see `sched::topology` for the
-//! two-tier rule and `sim::policies` for the simulator's mirror of
-//! it). The bias engages only when the detected topology has more
-//! than one node *and* `p > 2` — otherwise the steal path is the
-//! exact uniform code, so single-node hosts pay nothing. Workers
-//! publish the node they run on into the shared state at entry
-//! (claims land on pool workers dynamically, so the map cannot be
-//! static), and successful steals are classified local/remote in the
-//! [`MetricsSink`].
+//! the shared [`VictimSelector`]; `Ranked` generalizes the bias to
+//! the full node-distance matrix — victims are drawn with probability
+//! decaying per distance *tier* (see `sched::topology` for the
+//! two-tier and ranked rules and `sim::policies` for the simulator's
+//! mirror of them). A bias engages only when the detected topology has
+//! more than one node (`Ranked` additionally requires a
+//! non-equidistant distance matrix) *and* `p > 2` — otherwise the
+//! steal path is the exact uniform code, so single-node hosts pay
+//! nothing and consume the byte-identical RNG stream. Workers publish
+//! the node they run on into the shared state at entry (claims land on
+//! pool workers dynamically, so the map cannot be static), and
+//! successful steals are classified local/remote *and* per distance
+//! tier in the [`MetricsSink`].
 
 use std::ops::Range;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering::Relaxed, Ordering::SeqCst};
@@ -81,6 +85,31 @@ enum ChunkPolicy {
     Adaptive(IchParams),
 }
 
+/// Which steal-victim bias a run resolved to after gating its
+/// [`VictimPolicy`] against the detected topology and `p` (see
+/// `run_engine`): `Uniform` is the exact paper path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum StealBias {
+    Uniform,
+    TwoTier,
+    Ranked,
+}
+
+/// Publish a worker's adaptive state field as f64 bits. Both `k` and
+/// `d` round-trip through bits: `steal_merge`'s averaging produces
+/// fractional values, and an `as u64` truncation (the seed's `k`
+/// path) would hand thieves a lossy victim state to merge against.
+#[inline]
+fn publish_f64(slot: &AtomicU64, v: f64) {
+    slot.store(v.to_bits(), Relaxed);
+}
+
+/// Read a state field published by [`publish_f64`].
+#[inline]
+fn read_f64(slot: &AtomicU64) -> f64 {
+    f64::from_bits(slot.load(Relaxed))
+}
+
 /// Decrements the shared termination counter on drop — including
 /// drops caused by unwinding out of a panicking loop body.
 struct RemainingGuard<'a> {
@@ -106,8 +135,9 @@ struct Shared {
     total: usize,
     /// 1/p, precomputed for the μ hot path.
     inv_p: f64,
-    /// Published per-thread k_i (completed iterations) — read only on
-    /// the cold steal path for state merging, not for μ.
+    /// Published per-thread k_i (completed iterations, **f64 bits** —
+    /// steal merges average, so k is fractional) — read only on the
+    /// cold steal path for state merging, not for μ.
     ks: Vec<CachePadded<AtomicU64>>,
     /// Published per-thread d_i (f64 bits) for steal-time merging.
     ds: Vec<CachePadded<AtomicU64>>,
@@ -115,14 +145,14 @@ struct Shared {
     /// (`usize::MAX` = unknown / not yet published). Written once per
     /// worker, read only on the cold steal path.
     nodes: Vec<AtomicUsize>,
-    /// Two-tier victim selection active (VictimPolicy::Topo on a
-    /// multi-node topology with p > 2). When false the steal path is
-    /// the exact uniform code the paper describes.
-    topo_bias: bool,
+    /// Victim bias this run gated to (TwoTier = `Topo` on a multi-node
+    /// topology with p > 2; Ranked additionally needs distance tiers).
+    /// `Uniform` is the exact steal path the paper describes.
+    bias: StealBias,
 }
 
 impl Shared {
-    fn new(n: usize, p: usize, d0: f64, topo_bias: bool) -> Shared {
+    fn new(n: usize, p: usize, d0: f64, bias: StealBias) -> Shared {
         let blocks = policy::static_blocks(n, p);
         let mut deques: Vec<RangeDeque> = blocks.iter().map(|&(a, b)| RangeDeque::new(a..b)).collect();
         // static_blocks returns min(p, n) blocks; pad with empty queues
@@ -135,10 +165,11 @@ impl Shared {
             remaining: CachePadded::new(AtomicUsize::new(n)),
             total: n,
             inv_p: 1.0 / p as f64,
+            // 0u64 is exactly 0.0f64's bit pattern, so fresh k reads 0.
             ks: (0..p).map(|_| CachePadded::new(AtomicU64::new(0))).collect(),
             ds: (0..p).map(|_| CachePadded::new(AtomicU64::new(d0.to_bits()))).collect(),
             nodes: (0..p).map(|_| AtomicUsize::new(usize::MAX)).collect(),
-            topo_bias,
+            bias,
         }
     }
 
@@ -215,9 +246,21 @@ fn run_engine(
         ChunkPolicy::Fixed(_) => policy::D_MIN,
     };
     // Single-node hosts (and 2-thread runs, where there is only one
-    // possible victim) keep the exact uniform steal path.
-    let topo_bias = victim == VictimPolicy::Topo && p > 2 && Topology::detect().nodes() > 1;
-    let shared = Shared::new(n, p, d0, topo_bias);
+    // possible victim) keep the exact uniform steal path. Ranked
+    // additionally gates on the distance matrix carrying information:
+    // an all-equidistant matrix has nothing to rank by, so those
+    // hosts also consume the byte-identical uniform RNG stream.
+    let topo = Topology::detect();
+    let bias = if p > 2 && topo.nodes() > 1 {
+        match victim {
+            VictimPolicy::Topo => StealBias::TwoTier,
+            VictimPolicy::Ranked if !topo.is_equidistant() => StealBias::Ranked,
+            _ => StealBias::Uniform,
+        }
+    } else {
+        StealBias::Uniform
+    };
+    let shared = Shared::new(n, p, d0, bias);
     let chunk_policy = &chunk_policy;
     let shared = &shared;
 
@@ -238,7 +281,7 @@ fn worker(
     sink: &MetricsSink,
 ) {
     let mut rng = Rng::new(seed ^ (tid as u64).wrapping_mul(0x9E3779B97F4A7C15) ^ 0x5851F42D4C957F2D);
-    let mut st = IchState { k: 0.0, d: f64::from_bits(shared.ds[tid].load(Relaxed)) };
+    let mut st = IchState { k: 0.0, d: read_f64(&shared.ds[tid]) };
     // Publish which NUMA node this tid actually runs on (pool claims
     // land on workers dynamically, so the map must come from the
     // worker itself) and set up the two-tier victim selector.
@@ -283,12 +326,12 @@ fn worker(
             // `remaining` decrement above already fed the global
             // completed count, so no per-thread scan happens here.
             if let ChunkPolicy::Adaptive(prm) = chunk_policy {
-                shared.ks[tid].store(st.k as u64, Relaxed);
+                publish_f64(&shared.ks[tid], st.k);
                 let mu = shared.mu();
                 let delta = policy::delta(prm.eps, mu);
                 let class = policy::classify(st.k, mu, delta);
                 st.d = if prm.inverted { policy::adapt_inverted(st.d, class) } else { policy::adapt(st.d, class) };
-                shared.ds[tid].store(st.d.to_bits(), Relaxed);
+                publish_f64(&shared.ds[tid], st.d);
             }
         }
 
@@ -326,28 +369,44 @@ fn worker(
                 let local = probe.is_some_and(|v| my_node.is_some() && node_of(v) == my_node);
                 (probe, local)
             }
-            _ if shared.topo_bias => {
-                // Two-tier topology bias (see `sched::topology`).
-                let (v, local) = selector.pick(tid, p, my_node, node_of, &mut rng);
-                (Some(v), local)
-            }
-            _ => {
-                // Paper: uniform random victim.
-                let v = topology::uniform_victim(tid, p, &mut rng);
-                (Some(v), my_node.is_some() && node_of(v) == my_node)
-            }
+            _ => match shared.bias {
+                StealBias::TwoTier => {
+                    // Two-tier topology bias (see `sched::topology`).
+                    let (v, local) = selector.pick(tid, p, my_node, node_of, &mut rng);
+                    (Some(v), local)
+                }
+                StealBias::Ranked => {
+                    // Distance-ranked multi-tier bias over the node-
+                    // distance matrix (see `sched::topology`).
+                    let topo = Topology::detect();
+                    let (v, local) =
+                        selector.pick_ranked(tid, p, my_node, node_of, |a, b| topo.distance(a, b), &mut rng);
+                    (Some(v), local)
+                }
+                StealBias::Uniform => {
+                    // Paper: uniform random victim.
+                    let v = topology::uniform_victim(tid, p, &mut rng);
+                    (Some(v), my_node.is_some() && node_of(v) == my_node)
+                }
+            },
         };
         match victim.and_then(|v| shared.deques[v].steal_half_with_len().map(|(stolen, vlen)| (v, stolen, vlen))) {
             Some((victim, stolen, vlen)) => {
                 steal_fails = 0;
                 selector.record(true, was_local);
-                sink.add_steal_located(tid, true, was_local);
+                // Classify the steal's distance tier (0 = same node)
+                // for the per-tier counters; unknown nodes land in the
+                // sink's dedicated unknown bucket.
+                let tier = my_node.and_then(|me| node_of(victim).map(|vn| Topology::detect().tier_of(me, vn)));
+                sink.add_steal_at(tid, true, was_local, tier);
                 if let ChunkPolicy::Adaptive(prm) = chunk_policy {
                     // Listing 1 lines 6–7 (+ merge-rule ablations).
-                    let vic = IchState {
-                        k: shared.ks[victim].load(Relaxed) as f64,
-                        d: f64::from_bits(shared.ds[victim].load(Relaxed)),
-                    };
+                    // Both fields round-trip through f64 bits: the
+                    // seed published k via `as u64`, truncating the
+                    // fractional k that steal_merge's averaging
+                    // produces, so thieves merged against a lossy
+                    // victim state.
+                    let vic = IchState { k: read_f64(&shared.ks[victim]), d: read_f64(&shared.ds[victim]) };
                     st = match prm.merge {
                         StealMerge::Average => policy::steal_merge(st, vic),
                         StealMerge::Victim => vic,
@@ -357,8 +416,8 @@ fn worker(
                     // merged divisor, sized on the victim's pre-steal
                     // queue, would dispatch it as a single chunk.
                     st.d = policy::clamp_chunk_to_stolen(stolen.len(), vlen, st.d);
-                    shared.ks[tid].store(st.k as u64, Relaxed);
-                    shared.ds[tid].store(st.d.to_bits(), Relaxed);
+                    publish_f64(&shared.ks[tid], st.k);
+                    publish_f64(&shared.ds[tid], st.d);
                 }
                 // Re-home the stolen range in our own queue so others
                 // can steal from us in turn (Listing 1 lines 23–24).
@@ -366,7 +425,7 @@ fn worker(
             }
             None => {
                 selector.record(false, was_local);
-                sink.add_steal_located(tid, false, was_local);
+                sink.add_steal_at(tid, false, was_local, None);
                 // Bounded exponential backoff (§3.3 refinement): the
                 // seed runtime issued a single pause hint and retried,
                 // hammering victims' locks when the loop drains. Spin
@@ -416,7 +475,7 @@ mod tests {
     #[test]
     fn stealing_executes_every_iteration_once() {
         for &(n, p) in &[(1usize, 1usize), (10, 4), (1000, 4), (1000, 7), (97, 3)] {
-            for victim in [VictimPolicy::Uniform, VictimPolicy::Topo] {
+            for victim in [VictimPolicy::Uniform, VictimPolicy::Topo, VictimPolicy::Ranked] {
                 run_and_check(n, p, |body, sink| run_stealing(n, p, &SPAWN, 2, 42, victim, body, sink));
             }
         }
@@ -425,12 +484,32 @@ mod tests {
     #[test]
     fn ich_executes_every_iteration_once() {
         for &(n, p) in &[(1usize, 1usize), (10, 4), (1000, 4), (1000, 7), (97, 3)] {
-            for victim in [VictimPolicy::Uniform, VictimPolicy::Topo] {
+            for victim in [VictimPolicy::Uniform, VictimPolicy::Topo, VictimPolicy::Ranked] {
                 run_and_check(n, p, |body, sink| {
                     run_ich(n, p, &SPAWN, IchParams::with_eps(0.33), 42, victim, body, sink)
                 });
             }
         }
+    }
+
+    #[test]
+    fn published_k_roundtrips_fractional_state() {
+        // Regression (this PR): the seed published k with `st.k as
+        // u64` while d round-tripped via to_bits, so the fractional k
+        // that steal_merge's averaging produces (e.g. (1+2)/2 = 1.5)
+        // reached thieves truncated. Publish/read exactly as the
+        // worker's owner loop and steal path do, and assert the
+        // victim state a thief merges against is bit-exact.
+        let shared = Shared::new(8, 4, 4.0, StealBias::Uniform);
+        let vic_state = IchState { k: 2.5, d: 3.25 };
+        publish_f64(&shared.ks[1], vic_state.k);
+        publish_f64(&shared.ds[1], vic_state.d);
+        let vic = IchState { k: read_f64(&shared.ks[1]), d: read_f64(&shared.ds[1]) };
+        assert_eq!(vic, vic_state, "published victim state must round-trip bit-exactly");
+        let merged = policy::steal_merge(IchState { k: 2.0, d: 1.0 }, vic);
+        assert_eq!(merged.k, 2.25, "merge must see the victim's true fractional k");
+        // Fresh slots read as exactly 0.0 (0u64 == 0.0f64.to_bits()).
+        assert_eq!(read_f64(&shared.ks[0]), 0.0);
     }
 
     #[test]
@@ -524,11 +603,12 @@ mod tests {
 
     #[test]
     fn steal_locality_counters_sum_to_total() {
-        // Same imbalanced shape as above, under both victim policies:
-        // every successful steal must be classified exactly once.
+        // Same imbalanced shape as above, under every victim policy:
+        // every successful steal must be classified exactly once —
+        // into local/remote AND into exactly one distance-tier bucket.
         let n = 4000;
         let p = 4;
-        for victim in [VictimPolicy::Uniform, VictimPolicy::Topo] {
+        for victim in [VictimPolicy::Uniform, VictimPolicy::Topo, VictimPolicy::Ranked] {
             let sink = MetricsSink::new(p);
             let body = |r: Range<usize>| {
                 for i in r {
@@ -549,6 +629,11 @@ mod tests {
                 m.steals_local + m.steals_remote,
                 m.steals_ok,
                 "locality classification must partition successful steals ({victim:?})"
+            );
+            assert_eq!(
+                m.steals_by_tier.iter().sum::<u64>(),
+                m.steals_ok,
+                "distance-tier buckets must partition successful steals ({victim:?})"
             );
         }
     }

@@ -10,6 +10,21 @@
 
 use crate::util::rng::Rng;
 
+/// SLIT convention: a socket's distance to itself.
+pub const DIST_LOCAL: u64 = 10;
+
+/// Default cross-socket distance. 25/10 preserves the 2.5× cross-NUMA
+/// steal-cost multiplier the model has always been calibrated with
+/// (the pre-matrix `numa_steal_mult`).
+pub const DIST_REMOTE: u64 = 25;
+
+/// The default local/remote distance matrix for `sockets` sockets.
+pub fn default_distance(sockets: usize) -> Vec<Vec<u64>> {
+    (0..sockets)
+        .map(|a| (0..sockets).map(|b| if a == b { DIST_LOCAL } else { DIST_REMOTE }).collect())
+        .collect()
+}
+
 /// Topology + cost-model constants.
 #[derive(Clone, Debug)]
 pub struct MachineSpec {
@@ -38,9 +53,14 @@ pub struct MachineSpec {
     pub c_steal_ok: f64,
     /// Serialized portion of a steal on the victim's lock.
     pub c_steal_serial: f64,
-    /// Multiplier on steal costs when thief and victim are on
-    /// different sockets (§6.2 notes the cross-NUMA steal penalty).
-    pub numa_steal_mult: f64,
+    /// SLIT-style socket-distance matrix (`sockets × sockets`,
+    /// diagonal = local). Replaces the old scalar `numa_steal_mult`:
+    /// steal costs scale by `distance[a][b] / distance[a][a]`
+    /// ([`MachineSpec::steal_mult`], §6.2's cross-NUMA steal penalty,
+    /// now per distance tier), and the ranked victim selector ranks
+    /// victims by these distances exactly like the real runtime ranks
+    /// by the detected topology's matrix.
+    pub distance: Vec<Vec<u64>>,
     /// Fork-join cost per parallel loop: fixed + per-thread part.
     pub c_fork_base: f64,
     pub c_fork_per_thread: f64,
@@ -67,7 +87,7 @@ impl Default for MachineSpec {
             c_steal_fail: 12.0,
             c_steal_ok: 40.0,
             c_steal_serial: 10.0,
-            numa_steal_mult: 2.5,
+            distance: default_distance(2),
             c_fork_base: 60.0,
             c_fork_per_thread: 6.0,
             c_task_create: 30.0,
@@ -88,9 +108,47 @@ impl MachineSpec {
     }
 
     /// Socket of a pinned thread (threads fill socket 0 first, as with
-    /// OMP_PLACES=cores on the testbed).
+    /// OMP_PLACES=cores on the testbed). Oversubscribed tids wrap
+    /// modulo the core count, mirroring the runtime: a run wider than
+    /// the machine is served by the scoped-spawn fallback (a
+    /// persistent pool is never oversubscribed *and* pinned —
+    /// `Runtime::with_pinning` gates pinning on a spare core per
+    /// worker), whose pinned teams place tid `t` on core
+    /// `t % ncpus` (`pool::pin_to_cpu` wraps internally) — so extra
+    /// threads cycle across sockets. The seed clamped them all onto
+    /// the *last* socket (`.min(sockets-1)`), piling every surplus
+    /// thread on socket 1 where no runtime path does.
     pub fn socket_of(&self, tid: usize) -> usize {
-        (tid / self.cores_per_socket).min(self.sockets - 1)
+        (tid % self.total_cores().max(1)) / self.cores_per_socket.max(1)
+    }
+
+    /// SLIT distance from socket `a` to socket `b`. Total: sockets
+    /// beyond the matrix (defensive) fall back to local/remote
+    /// defaults.
+    pub fn node_distance(&self, a: usize, b: usize) -> u64 {
+        self.distance
+            .get(a)
+            .and_then(|row| row.get(b))
+            .copied()
+            .unwrap_or(if a == b { DIST_LOCAL } else { DIST_REMOTE })
+    }
+
+    /// Steal-cost multiplier between sockets: the distance ratio over
+    /// the thief's local distance (1.0 on-socket; 2.5 cross-socket
+    /// under the default matrix — the old `numa_steal_mult`).
+    pub fn steal_mult(&self, thief: usize, victim: usize) -> f64 {
+        self.node_distance(thief, victim) as f64 / self.node_distance(thief, thief).max(1) as f64
+    }
+
+    /// Does the distance matrix carry no information (one socket, or
+    /// every entry equal)? The ranked victim selection gates off here,
+    /// mirroring `Topology::is_equidistant`.
+    pub fn is_equidistant(&self) -> bool {
+        if self.sockets <= 1 {
+            return true;
+        }
+        let first = self.node_distance(0, 0);
+        (0..self.sockets).all(|a| (0..self.sockets).all(|b| self.node_distance(a, b) == first))
     }
 
     /// Per-core speed factors for p threads (deterministic in `seed`).
@@ -121,6 +179,43 @@ mod tests {
         assert_eq!(m.socket_of(13), 0);
         assert_eq!(m.socket_of(14), 1);
         assert_eq!(m.socket_of(27), 1);
+    }
+
+    #[test]
+    fn oversubscribed_tids_wrap_round_robin() {
+        // Regression (this PR): the seed clamped tid ≥ 28 onto the
+        // last socket, but the runtime path an oversubscribed run
+        // actually takes (the scoped-spawn fallback, whose pinned
+        // teams wrap via `pin_to_cpu`'s `% num_cpus`) cycles extra
+        // threads across cores — the sim must wrap the same way.
+        let m = MachineSpec::default();
+        assert_eq!(m.socket_of(28), 0, "tid 28 wraps onto socket 0");
+        assert_eq!(m.socket_of(41), 0);
+        assert_eq!(m.socket_of(42), 1);
+        assert_eq!(m.socket_of(56), 0);
+        // The per-socket thread census is then balanced, not piled on
+        // the last socket.
+        let p = 56;
+        let on_socket_1 = (0..p).filter(|&t| m.socket_of(t) == 1).count();
+        assert_eq!(on_socket_1, 28, "2× oversubscription splits evenly across sockets");
+    }
+
+    #[test]
+    fn distance_matrix_preserves_calibrated_steal_mult() {
+        let m = MachineSpec::default();
+        assert_eq!(m.node_distance(0, 0), DIST_LOCAL);
+        assert_eq!(m.node_distance(0, 1), DIST_REMOTE);
+        assert!((m.steal_mult(0, 0) - 1.0).abs() < 1e-12);
+        assert!((m.steal_mult(0, 1) - 2.5).abs() < 1e-12, "default matrix keeps the 2.5 cross-socket multiplier");
+        assert!(!m.is_equidistant());
+        // Out-of-matrix sockets degrade to the defaults, never panic.
+        assert_eq!(m.node_distance(7, 7), DIST_LOCAL);
+        assert_eq!(m.node_distance(7, 8), DIST_REMOTE);
+        // Equidistant and single-socket matrices carry no rank signal.
+        let flat = MachineSpec { distance: vec![vec![10, 10], vec![10, 10]], ..Default::default() };
+        assert!(flat.is_equidistant());
+        let single = MachineSpec { sockets: 1, distance: default_distance(1), ..Default::default() };
+        assert!(single.is_equidistant());
     }
 
     #[test]

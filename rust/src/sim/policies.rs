@@ -273,6 +273,12 @@ impl WsSim {
     }
 
     fn new(n: usize, p: usize, mode: WsMode) -> WsSim {
+        WsSim::with_victim(n, p, mode, VictimPolicy::process_default())
+    }
+
+    /// Explicit-victim constructor (tests pin `Ranked`/`Uniform`
+    /// without touching the process-wide default).
+    fn with_victim(n: usize, p: usize, mode: WsMode, victim: VictimPolicy) -> WsSim {
         let blocks = policy::static_blocks(n, p);
         let mut deques: Vec<(usize, usize)> = blocks;
         while deques.len() < p {
@@ -290,7 +296,7 @@ impl WsSim {
             fails: vec![0; p],
             sel: (0..p).map(|_| VictimSelector::new()).collect(),
             sockets: Vec::new(),
-            victim: VictimPolicy::process_default(),
+            victim,
         }
     }
 
@@ -334,22 +340,39 @@ impl SimSched for WsSim {
         }
 
         // Steal attempt (§3.3). Victim selection is aligned with the
-        // real runtime (`sched::ws`): two-tier topology bias on
-        // multi-socket machines with p > 2 when the process-wide
-        // victim policy (CLI `--steal` / `ICH_STEAL`) is `Topo`, the
-        // paper's uniform draw otherwise — the same gate, constants,
-        // and fallback rule via the shared `VictimSelector` and
-        // `uniform_victim`.
+        // real runtime (`sched::ws`): on multi-socket machines with
+        // p > 2, `Topo` runs the two-tier bias and `Ranked` the
+        // distance-ranked multi-tier bias over the machine's
+        // socket-distance matrix (gated off when the matrix is
+        // equidistant, exactly like the real engines gate on
+        // `Topology::is_equidistant`); the paper's uniform draw
+        // otherwise — the same gates, constants, and fallback rule
+        // via the shared `VictimSelector` and `uniform_victim`.
         if self.sockets.is_empty() {
             self.sockets = (0..ctx.p).map(|t| ctx.socket_of(t)).collect();
         }
-        let two_tier = self.victim == VictimPolicy::Topo && ctx.spec.sockets > 1 && ctx.p > 2;
-        let (v, was_local) = if two_tier {
-            let socks = &self.sockets;
-            self.sel[tid].pick(tid, ctx.p, Some(socks[tid]), |t| Some(socks[t]), &mut ctx.rng)
-        } else {
-            let v = topology::uniform_victim(tid, ctx.p, &mut ctx.rng);
-            (v, self.sockets[v] == self.sockets[tid])
+        let multi = ctx.spec.sockets > 1 && ctx.p > 2;
+        let (v, was_local) = match self.victim {
+            VictimPolicy::Topo if multi => {
+                let socks = &self.sockets;
+                self.sel[tid].pick(tid, ctx.p, Some(socks[tid]), |t| Some(socks[t]), &mut ctx.rng)
+            }
+            VictimPolicy::Ranked if multi && !ctx.spec.is_equidistant() => {
+                let spec = ctx.spec;
+                let socks = &self.sockets;
+                self.sel[tid].pick_ranked(
+                    tid,
+                    ctx.p,
+                    Some(socks[tid]),
+                    |t| Some(socks[t]),
+                    |a, b| spec.node_distance(a, b),
+                    &mut ctx.rng,
+                )
+            }
+            _ => {
+                let v = topology::uniform_victim(tid, ctx.p, &mut ctx.rng);
+                (v, self.sockets[v] == self.sockets[tid])
+            }
         };
         let vrem = self.remaining(v);
         if vrem == 0 {
@@ -362,8 +385,10 @@ impl SimSched for WsSim {
             return Acquire::Busy { until: now + backoff };
         }
         // Steal half through the victim's queue lock; cross-socket
-        // steals pay the NUMA multiplier.
-        let numa = if was_local { 1.0 } else { ctx.spec.numa_steal_mult };
+        // steals pay the distance-ratio multiplier (1.0 on-socket,
+        // distance[a][b]/distance[a][a] across — 2.5 under the
+        // default matrix, the model's historical calibration).
+        let numa = ctx.spec.steal_mult(self.sockets[tid], self.sockets[v]);
         let cost = ctx.queue_op(v, now, ctx.spec.c_steal_ok * numa, ctx.spec.c_steal_serial * numa);
         let half = vrem.div_ceil(2);
         let ne = self.deques[v].1 - half;
@@ -422,17 +447,29 @@ impl SimSched for WsSim {
 /// dispatches: the entry is admitted once `after` earlier entries
 /// have been dispatched (0 = present from the start). Traces must be
 /// sorted by `after` — arrivals are admitted in slice order, which
-/// is the arrival-sequence order the runtime's queue sees.
+/// is the arrival-sequence order the runtime's queue sees. `origin`
+/// is the NUMA node the epoch was submitted from (`None` = unknown,
+/// distance weight neutral), consumed by
+/// [`sim_dispatch_order_from`]'s weighted EDF key.
 #[derive(Clone, Copy, Debug)]
 pub struct SimArrival {
     pub class: crate::sched::LatencyClass,
     pub deadline: Option<u64>,
+    pub origin: Option<usize>,
     pub after: usize,
+}
+
+/// [`sim_dispatch_order_from`] with the neutral distance weight
+/// (claimant unknown) — the pre-distance model.
+pub fn sim_dispatch_order(arrivals: &[SimArrival], promote_k: u64) -> Vec<usize> {
+    sim_dispatch_order_from(arrivals, promote_k, None, &|_, _| 0)
 }
 
 /// The simulator's *independent* model of the pool's multi-class
 /// dispatch rule (`sched::dispatch`): class priority, EDF within a
-/// class, FIFO among equal-deadline peers, and anti-starvation
+/// class weighted by `excess(claimant_node, origin)` extra ticks
+/// (neutral when the claimant or an entry's origin is unknown), FIFO
+/// among equal-effective-deadline peers, and anti-starvation
 /// promotion once an entry has been bypassed `promote_k` times by
 /// later, higher-class arrivals. Returns the indices of `arrivals`
 /// in dispatch order.
@@ -440,7 +477,12 @@ pub struct SimArrival {
 /// This is a deliberate re-implementation (O(n²) scan over a pending
 /// list, no shared code with `DispatchQueue`) so the conformance
 /// harness can differentially test the runtime against it.
-pub fn sim_dispatch_order(arrivals: &[SimArrival], promote_k: u64) -> Vec<usize> {
+pub fn sim_dispatch_order_from(
+    arrivals: &[SimArrival],
+    promote_k: u64,
+    claimant_node: Option<usize>,
+    excess: &dyn Fn(usize, usize) -> u64,
+) -> Vec<usize> {
     struct Pending {
         idx: usize,
         rank: u8,
@@ -453,7 +495,14 @@ pub fn sim_dispatch_order(arrivals: &[SimArrival], promote_k: u64) -> Vec<usize>
     let mut admitted = 0usize;
     let admit = |pending: &mut Vec<Pending>, i: usize| {
         let a = arrivals[i];
-        pending.push(Pending { idx: i, rank: a.class.rank(), deadline: a.deadline.unwrap_or(u64::MAX), skips: 0 });
+        // The weighted effective deadline is fixed per (claimant,
+        // entry) pair, so it can be resolved at admission.
+        let deadline = match (a.deadline, claimant_node, a.origin) {
+            (None, _, _) => u64::MAX,
+            (Some(d), Some(w), Some(o)) => d.saturating_add(excess(w, o)),
+            (Some(d), _, _) => d,
+        };
+        pending.push(Pending { idx: i, rank: a.class.rank(), deadline, skips: 0 });
     };
     while order.len() < n {
         while admitted < n && arrivals[admitted].after <= order.len() {
@@ -628,7 +677,7 @@ mod tests {
     #[test]
     fn dispatch_model_orders_classes_and_deadlines() {
         use crate::sched::LatencyClass as C;
-        let t = |class, deadline, after| SimArrival { class, deadline, after };
+        let t = |class, deadline, after| SimArrival { class, deadline, origin: None, after };
         // One batch: Background first-in, then Batch with deadlines,
         // then Interactive.
         let order = sim_dispatch_order(
@@ -649,9 +698,9 @@ mod tests {
         // A Background entry with a stream of Interactive arrivals
         // landing behind it (one new arrival per dispatch): with
         // promote_k = 2 it must dispatch after exactly 2 bypasses.
-        let mut arrivals = vec![SimArrival { class: C::Background, deadline: None, after: 0 }];
+        let mut arrivals = vec![SimArrival { class: C::Background, deadline: None, origin: None, after: 0 }];
         for i in 0..5usize {
-            arrivals.push(SimArrival { class: C::Interactive, deadline: None, after: i });
+            arrivals.push(SimArrival { class: C::Interactive, deadline: None, origin: None, after: i });
         }
         let order = sim_dispatch_order(&arrivals, 2);
         let bg_pos = order.iter().position(|&i| i == 0).unwrap();
@@ -662,7 +711,79 @@ mod tests {
     fn dispatch_model_single_class_is_fifo() {
         use crate::sched::LatencyClass as C;
         let arrivals: Vec<SimArrival> =
-            (0..7).map(|i| SimArrival { class: C::Batch, deadline: None, after: i / 3 }).collect();
+            (0..7).map(|i| SimArrival { class: C::Batch, deadline: None, origin: None, after: i / 3 }).collect();
         assert_eq!(sim_dispatch_order(&arrivals, 4), (0..7).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn dispatch_model_distance_weight_reorders_within_class() {
+        use crate::sched::LatencyClass as C;
+        let excess = |w: usize, o: usize| if w == o { 0 } else { 11u64 };
+        let arrivals = [
+            SimArrival { class: C::Batch, deadline: Some(10), origin: Some(1), after: 0 },
+            SimArrival { class: C::Batch, deadline: Some(15), origin: Some(0), after: 0 },
+        ];
+        // A node-0 claimant inflates the far entry past the near one.
+        assert_eq!(sim_dispatch_order_from(&arrivals, 4, Some(0), &excess), vec![1, 0]);
+        // A node-1 claimant (and the neutral model) keep plain EDF.
+        assert_eq!(sim_dispatch_order_from(&arrivals, 4, Some(1), &excess), vec![0, 1]);
+        assert_eq!(sim_dispatch_order(&arrivals, 4), vec![0, 1]);
+    }
+
+    #[test]
+    fn ranked_victim_selection_runs_on_the_two_socket_model() {
+        // Drive the WsSim with an explicit Ranked victim policy (the
+        // process default is left alone): socket-0-heavy work on the
+        // 2×14 model must complete exactly, record locality, and be
+        // deterministic — the ranked selector consumes the machine's
+        // distance matrix just like the engines consume the detected
+        // topology's.
+        let spec = MachineSpec::default();
+        let mut weights = vec![1.0; 2800];
+        for w in weights.iter_mut().take(200) {
+            *w = 500.0;
+        }
+        let ls = LoopSpec::new(weights, 0.0);
+        let run_once = || {
+            let mut pol = WsSim::with_victim(
+                ls.weights.len(),
+                28,
+                WsMode::Adaptive(IchParams::default()),
+                VictimPolicy::Ranked,
+            );
+            simulate_loop(&spec, 28, &ls, 42, &mut pol)
+        };
+        let r = run_once();
+        assert_eq!(r.iters_per_thread.iter().sum::<u64>(), 2800);
+        assert!(r.steals_ok > 0, "imbalanced ranked run must steal: {r:?}");
+        assert!(r.steals_local <= r.steals_ok);
+        assert!(r.steals_local > 0, "ranked bias must find same-socket victims");
+        let r2 = run_once();
+        assert_eq!(r.time, r2.time, "ranked sim must stay deterministic");
+        assert_eq!(r.steals_ok, r2.steals_ok);
+    }
+
+    #[test]
+    fn ranked_on_equidistant_matrix_matches_uniform_sim() {
+        // An all-equidistant matrix has nothing to rank by: the gate
+        // must fall back to the exact uniform path, so the whole sim
+        // trajectory (RNG stream included) matches Uniform bit-exactly.
+        let spec = MachineSpec { distance: vec![vec![10, 10], vec![10, 10]], ..Default::default() };
+        let mut weights = vec![1.0; 1400];
+        for w in weights.iter_mut().take(100) {
+            *w = 300.0;
+        }
+        let ls = LoopSpec::new(weights, 0.0);
+        let run_with = |victim: VictimPolicy| {
+            let mut pol =
+                WsSim::with_victim(ls.weights.len(), 28, WsMode::Adaptive(IchParams::default()), victim);
+            simulate_loop(&spec, 28, &ls, 7, &mut pol)
+        };
+        let ranked = run_with(VictimPolicy::Ranked);
+        let uniform = run_with(VictimPolicy::Uniform);
+        assert_eq!(ranked.time, uniform.time, "equidistant Ranked must be byte-identical to Uniform");
+        assert_eq!(ranked.steals_ok, uniform.steals_ok);
+        assert_eq!(ranked.steals_fail, uniform.steals_fail);
+        assert_eq!(ranked.iters_per_thread, uniform.iters_per_thread);
     }
 }

@@ -23,7 +23,7 @@
 
 use ich::sched::runtime::{preempt_depth, Runtime, SubmitOpts};
 use ich::sched::{parallel_for_async_on, DispatchQueue, ForOpts, LatencyClass, Policy, PROMOTE_K};
-use ich::sim::{sim_dispatch_order, SimArrival};
+use ich::sim::{sim_dispatch_order, sim_dispatch_order_from, SimArrival};
 use ich::util::rng::Rng;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering::SeqCst};
 use std::sync::{Arc, Condvar, Mutex};
@@ -274,7 +274,7 @@ fn runtime_and_queue_agree_with_sim_model_on_random_traces() {
             })
             .collect();
         let arrivals: Vec<SimArrival> =
-            trace.iter().map(|&(class, deadline)| SimArrival { class, deadline, after: 0 }).collect();
+            trace.iter().map(|&(class, deadline)| SimArrival { class, deadline, origin: None, after: 0 }).collect();
         let expected = sim_dispatch_order(&arrivals, PROMOTE_K);
 
         // DispatchQueue vs the model.
@@ -310,6 +310,7 @@ fn queue_agrees_with_sim_model_on_staged_arrivals() {
                 SimArrival {
                     class: LatencyClass::from_rank(rng.below(3) as u8),
                     deadline: if rng.below(2) == 0 { Some(rng.below(50) as u64) } else { None },
+                    origin: None,
                     after,
                 }
             })
@@ -337,6 +338,69 @@ fn queue_agrees_with_sim_model_on_staged_arrivals() {
             order.push(i);
         }
         assert_eq!(order, expected, "case {case}: staged-arrival disagreement ({arrivals:?})");
+    }
+}
+
+#[test]
+fn queue_agrees_with_sim_model_under_distance_weighted_edf() {
+    // Distance-weighted EDF differential: random traces with random
+    // submission origins over a 2-node distance matrix, selected from
+    // every claimant vantage (unknown, node 0, node 1). The
+    // `DispatchQueue` and the simulator's independent model must agree
+    // on the full dispatch order, and the promotion bound must hold —
+    // the distance weight reorders only *within* a class, so it can
+    // never starve anything.
+    let dist = [[10u64, 21], [21, 10]];
+    let excess = move |w: usize, o: usize| dist[w % 2][o % 2] - dist[o % 2][o % 2];
+    let mut rng = Rng::new(0xD157EDF);
+    for case in 0..200 {
+        let m = 3 + rng.below(10);
+        let trace: Vec<(LatencyClass, Option<u64>, Option<usize>)> = (0..m)
+            .map(|_| {
+                let class = LatencyClass::from_rank(rng.below(3) as u8);
+                let deadline = if rng.below(2) == 0 { Some(rng.below(50) as u64) } else { None };
+                let origin = match rng.below(3) {
+                    0 => None,
+                    x => Some(x - 1),
+                };
+                (class, deadline, origin)
+            })
+            .collect();
+        for claimant in [None, Some(0usize), Some(1)] {
+            let arrivals: Vec<SimArrival> = trace
+                .iter()
+                .map(|&(class, deadline, origin)| SimArrival { class, deadline, origin, after: 0 })
+                .collect();
+            let expected = sim_dispatch_order_from(&arrivals, PROMOTE_K, claimant, &excess);
+            let mut q: DispatchQueue<usize> = DispatchQueue::new();
+            for (i, &(class, deadline, origin)) in trace.iter().enumerate() {
+                q.push_from(i, class, deadline, origin);
+            }
+            let mut order = Vec::with_capacity(m);
+            while let Some(i) = q.best_index_from(claimant, &excess) {
+                let (item, info) = q.remove_at(i);
+                assert!(
+                    info.skips <= PROMOTE_K,
+                    "case {case} claimant {claimant:?}: promotion bound violated under distance weighting"
+                );
+                order.push(item);
+            }
+            assert_eq!(
+                order, expected,
+                "case {case} claimant {claimant:?}: queue disagrees with the sim model ({trace:?})"
+            );
+        }
+        // The neutral-claimant weighted order must equal the plain
+        // (pre-distance) model: unknown claimant ⇒ unweighted key.
+        let arrivals: Vec<SimArrival> = trace
+            .iter()
+            .map(|&(class, deadline, origin)| SimArrival { class, deadline, origin, after: 0 })
+            .collect();
+        assert_eq!(
+            sim_dispatch_order_from(&arrivals, PROMOTE_K, None, &excess),
+            sim_dispatch_order(&arrivals, PROMOTE_K),
+            "case {case}: neutral claimant must reproduce the unweighted order"
+        );
     }
 }
 

@@ -259,7 +259,7 @@ fn prop_dispatch_queue_agrees_with_sim_model() {
         let m = 1 + rng.below(14);
         let trace = random_trace(rng, m);
         let arrivals: Vec<SimArrival> =
-            trace.iter().map(|&(class, deadline)| SimArrival { class, deadline, after: 0 }).collect();
+            trace.iter().map(|&(class, deadline)| SimArrival { class, deadline, origin: None, after: 0 }).collect();
         let expected = sim_dispatch_order(&arrivals, PROMOTE_K);
         let mut q: DispatchQueue<usize> = DispatchQueue::new();
         for (i, &(c, d)) in trace.iter().enumerate() {

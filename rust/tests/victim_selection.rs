@@ -1,7 +1,10 @@
-//! Victim-selection properties (PR 3): no engine ever steals from
-//! itself, topology bias never starves a victim, single-node hosts
-//! keep the paper's exact uniform behavior, and the locality
-//! counters partition successful steals.
+//! Victim-selection properties (PR 3, distance-ranked in PR 5): no
+//! engine ever steals from itself, topology bias never starves a
+//! victim — including the ranked selector under extreme distance
+//! skew — single-node and all-equidistant hosts keep the paper's
+//! exact uniform behavior, the `ICH_TOPOLOGY` distance syntax
+//! round-trips (malformed matrices rejected), and the locality and
+//! distance-tier counters partition successful steals.
 
 use std::ops::Range;
 use std::sync::atomic::{AtomicU64, Ordering::SeqCst};
@@ -59,14 +62,154 @@ fn topology_bias_reaches_every_victim() {
     }
 }
 
+/// Ranked selector property sweep: across thread counts, multi-tier
+/// distance topologies, thief positions, and selector states
+/// (including mid-fallback), the ranked pick never returns the thief
+/// itself and always returns a valid tid.
+#[test]
+fn ranked_selector_never_picks_self_across_state_space() {
+    let mut rng = Rng::new(0x7A2CED);
+    let topos = [
+        Topology::single_node(8),
+        Topology::parse_spec("2x4@10,21;21,10").unwrap(),
+        Topology::parse_spec("4x2@10,16,32,64;16,10,32,64;32,32,10,16;64,64,16,10").unwrap(),
+        Topology::parse_spec("2x3@10,10;10,10").unwrap(), // equidistant
+    ];
+    for topo in &topos {
+        for p in [2usize, 3, 5, 8, 28] {
+            for tid in [0, 1, p / 2, p - 1] {
+                let mut sel = VictimSelector::new();
+                for round in 0..400 {
+                    let (v, _) = sel.pick_ranked(
+                        tid,
+                        p,
+                        Some(topo.node_of(tid)),
+                        |t| Some(topo.node_of(t)),
+                        |a, b| topo.distance(a, b),
+                        &mut rng,
+                    );
+                    assert_ne!(v, tid, "ranked self-steal at p={p} tid={tid} round={round}");
+                    assert!(v < p, "ranked victim out of range at p={p} tid={tid}");
+                    sel.record(round % 3 == 0, round % 2 == 0);
+                }
+            }
+        }
+    }
+}
+
+/// Starvation freedom under extreme distance skew: with one tier 25×
+/// farther than the next, every victim — including every farthest-
+/// tier victim — is still picked, fresh and mid-fallback.
+#[test]
+fn ranked_starvation_freedom_under_extreme_distance_skew() {
+    let topo = Topology::parse_spec("3x4@10,11,255;11,10,255;255,255,10").unwrap();
+    let p = 12;
+    for warm_fails in [0, REMOTE_FALLBACK_FAILS] {
+        let mut sel = VictimSelector::new();
+        for _ in 0..warm_fails {
+            sel.record(false, true);
+        }
+        let mut rng = Rng::new(4242 + warm_fails as u64);
+        let mut hits = vec![0u32; p];
+        for _ in 0..80_000 {
+            let (v, _) = sel.pick_ranked(
+                1,
+                p,
+                Some(topo.node_of(1)),
+                |t| Some(topo.node_of(t)),
+                |a, b| topo.distance(a, b),
+                &mut rng,
+            );
+            hits[v] += 1;
+        }
+        assert_eq!(hits[1], 0, "never self");
+        for (t, &h) in hits.iter().enumerate() {
+            if t != 1 {
+                assert!(h > 0, "victim {t} starved under skew (warm_fails={warm_fails}): {hits:?}");
+            }
+        }
+        if warm_fails == 0 {
+            // And the ranking is real: the thief's own node (tier 0)
+            // outdraws the 255-distance tier by a wide margin.
+            let near: u32 = (0..4).filter(|&t| t != 1).map(|t| hits[t]).sum();
+            let far: u32 = (8..12).map(|t| hits[t]).sum();
+            assert!(near > far * 4, "near tier must dominate the far tier: {hits:?}");
+        }
+    }
+}
+
+/// On single-node and all-equidistant topologies the ranked selector
+/// consumes the exact RNG stream of `uniform_victim` — the same gate
+/// discipline PR 3 pinned for the two-tier selector.
+#[test]
+fn ranked_single_node_and_equidistant_match_uniform_stream() {
+    let topos =
+        [Topology::single_node(16), Topology::parse_spec("2x8@10,10;10,10").unwrap()];
+    for topo in &topos {
+        for p in [2usize, 4, 9] {
+            for tid in 0..p {
+                let mut sel = VictimSelector::new();
+                let (mut ranked_rng, mut uniform_rng) = (Rng::new(700 + p as u64), Rng::new(700 + p as u64));
+                for _ in 0..300 {
+                    let (v, _) = sel.pick_ranked(
+                        tid,
+                        p,
+                        Some(topo.node_of(tid)),
+                        |t| Some(topo.node_of(t)),
+                        |a, b| topo.distance(a, b),
+                        &mut ranked_rng,
+                    );
+                    let u = uniform_victim(tid, p, &mut uniform_rng);
+                    assert_eq!(v, u, "ranked pick must match uniform at p={p} tid={tid}");
+                }
+            }
+        }
+    }
+}
+
+/// `ICH_TOPOLOGY` distance-syntax round trips: the documented specs
+/// parse to the matrix they spell, and malformed matrices are
+/// rejected outright (never half-applied).
+#[test]
+fn ich_topology_distance_syntax_round_trips() {
+    // The spec from the CI job and the docs.
+    let t = Topology::parse_spec("2x14@10,21;21,10").unwrap();
+    assert_eq!((t.nodes(), t.cores()), (2, 28));
+    assert_eq!(t.distance_matrix(), &[vec![10, 21], vec![21, 10]]);
+    assert_eq!(t.tier_count(), 2);
+    assert_eq!(t.edf_distance_penalty(1, 0), 11);
+    // Asymmetric SLITs are legal and preserved verbatim.
+    let t = Topology::parse_spec("0,1@10,20;31,10").unwrap();
+    assert_eq!(t.distance(0, 1), 20);
+    assert_eq!(t.distance(1, 0), 31);
+    assert_eq!(t.tier_count(), 3);
+    // Without a matrix the default local/remote SLIT is synthesized.
+    let t = Topology::parse_spec("2x2").unwrap();
+    assert_eq!(t.distance(0, 0), 10);
+    assert_eq!(t.distance(0, 1), 20);
+    // Malformed matrices reject the whole spec.
+    for bad in [
+        "2x2@",
+        "2x2@10,21",
+        "2x2@10,21;21",
+        "2x2@10,21;21,10;21,10",
+        "2x2@10,21;21,0",
+        "2x2@10,21;x,10",
+        "0,0,1@10",
+    ] {
+        assert!(Topology::parse_spec(bad).is_none(), "spec {bad:?} must be rejected");
+    }
+}
+
 /// End-to-end: an imbalanced iCh run records locality counters that
-/// sum to the successful-steal total, under both victim policies and
-/// whatever topology this host (or `ICH_TOPOLOGY`) reports.
+/// sum to the successful-steal total, under every victim policy and
+/// whatever topology this host (or `ICH_TOPOLOGY`) reports — and the
+/// distance-tier buckets partition the same total.
 #[test]
 fn engine_locality_counters_partition_steals() {
     let n = 6_000usize;
     let p = 4;
-    for victim in [VictimPolicy::Uniform, VictimPolicy::Topo] {
+    for victim in [VictimPolicy::Uniform, VictimPolicy::Topo, VictimPolicy::Ranked] {
         let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
         let opts = ForOpts { threads: p, pin: false, seed: 5, weights: None, victim, ..Default::default() };
         let m = parallel_for(n, &Policy::Ich(IchParams::default()), &opts, &|r: Range<usize>| {
@@ -91,6 +234,11 @@ fn engine_locality_counters_partition_steals() {
             m.steals_ok,
             "local+remote must equal total successful steals ({victim:?})"
         );
+        assert_eq!(
+            m.steals_by_tier.iter().sum::<u64>(),
+            m.steals_ok,
+            "distance-tier buckets must partition successful steals ({victim:?})"
+        );
         assert!((0.0..=1.0).contains(&m.local_steal_fraction()));
     }
 }
@@ -104,7 +252,7 @@ fn single_node_topo_is_uniform() {
     let topo = Topology::single_node(16);
     for p in [2usize, 4, 9] {
         for tid in 0..p {
-            let sel = VictimSelector::new();
+            let mut sel = VictimSelector::new();
             let (mut biased_rng, mut uniform_rng) = (Rng::new(900 + p as u64), Rng::new(900 + p as u64));
             for _ in 0..300 {
                 let (v, _) = sel.pick(tid, p, Some(topo.node_of(tid)), |t| Some(topo.node_of(t)), &mut biased_rng);

@@ -8,9 +8,12 @@
 //! steal-victim selection per work-stealing engine (recorded to
 //! `BENCH_numa.json`), uniform vs topo vs distance-ranked victim
 //! selection on a ≥2-node distance-matrix topology (recorded to
-//! `BENCH_distance.json`), and Interactive queue-wait percentiles
+//! `BENCH_distance.json`), Interactive queue-wait percentiles
 //! under saturating Background load, FIFO vs multi-class dispatch
-//! (recorded to `BENCH_priority.json`).
+//! (recorded to `BENCH_priority.json`), and work assisting on a
+//! straggler-heavy loop — idle pool workers joining the in-flight
+//! epoch vs pool-WS-only and the scoped-spawn fallback (recorded to
+//! `BENCH_assist.json`).
 //! These are the §Perf numbers for the hot path.
 
 mod bench_common;
@@ -549,6 +552,86 @@ fn distance_rank() {
     save_json("BENCH_distance.json", &out);
 }
 
+/// The work-assisting tentpole measurement: a straggler-heavy loop
+/// submitted at width p on a pool with idle workers, three arms —
+/// pool-WS-only (assist off: surplus workers park), the scoped-spawn
+/// fallback (fresh width-p team per call), and assist on (idle
+/// workers join the in-flight epoch through the assist board). Emits
+/// `BENCH_assist.json` with each arm's wall time plus the assist-on
+/// arm's assist count, assist fraction (joiner chunks / total
+/// chunks), and idle-worker head-room. On a 1-core host the arms
+/// time-share and the wall-time gap flattens; the assist fraction
+/// still proves the joiners worked.
+fn assist_straggler() {
+    println!("\n== assist_straggler: idle pool workers join an in-flight straggler-heavy loop ==");
+    let workers = 4usize;
+    let p = 2usize; // submitted width: leaves `workers - p` workers idle
+    let n = 30_000usize;
+    let heavy_every = 64usize;
+    let policy = Policy::Ich(IchParams::default());
+    let body: Arc<dyn Fn(Range<usize>) + Send + Sync> = Arc::new(move |rr: Range<usize>| {
+        for i in rr {
+            // Sparse stragglers: every 64th iteration is ~100× the rest.
+            let spin = if i % heavy_every == 0 { 4_000u64 } else { 40 };
+            let mut acc = 0u64;
+            for j in 0..spin {
+                acc = acc.wrapping_add(j ^ i as u64);
+            }
+            std::hint::black_box(acc);
+        }
+    });
+
+    let mut out = Json::obj();
+    out.set("bench", Json::str("assist_straggler"));
+    out.set("topology_override", Json::Bool(topology_overridden()));
+    out.set("pool_workers", Json::num(workers as f64));
+    out.set("threads", Json::num(p as f64));
+    out.set("idle_workers", Json::num((workers - p) as f64));
+    out.set("n", Json::num(n as f64));
+    out.set("policy", Json::str(&policy.name()));
+    let arms = [("pool_ws", ExecMode::Pool, false), ("scoped", ExecMode::Spawn, false), ("assist", ExecMode::Pool, true)];
+    let mut times = [0.0f64; 3];
+    for (ai, (arm, mode, assist)) in arms.into_iter().enumerate() {
+        // Fresh private pool per arm so board/queue state stays
+        // comparable (the Spawn arm never touches it).
+        let rt = Runtime::with_pinning(workers, false);
+        let opts = ForOpts { threads: p, pin: false, seed: 31, mode, assist, ..Default::default() };
+        let mut last = None;
+        let r = bench(&format!("assist_straggler {arm} p={p} workers={workers}"), 1, 3, || {
+            let m = parallel_for_async_on(&rt, n, &policy, &opts, Arc::clone(&body)).join();
+            assert_eq!(m.total_iters, n as u64);
+            last = Some(m);
+        });
+        let m = last.expect("at least one sample ran");
+        times[ai] = r.min_s;
+        let fraction = if m.total_chunks == 0 { 0.0 } else { m.assist_chunks as f64 / m.total_chunks as f64 };
+        println!(
+            "    -> {arm}: {} ({} assists, assist fraction {:.3}, {} joiner iters)",
+            fmt_s(r.min_s),
+            m.assists,
+            fraction,
+            m.assist_iters
+        );
+        let mut e = Json::obj();
+        e.set("arm", Json::str(arm));
+        e.set("assist_enabled", Json::Bool(assist));
+        e.set("time_s", Json::num(r.min_s));
+        e.set("assists", Json::num(m.assists as f64));
+        e.set("assist_chunks", Json::num(m.assist_chunks as f64));
+        e.set("assist_iters", Json::num(m.assist_iters as f64));
+        e.set("assist_fraction", Json::num(fraction));
+        out.set(arm, e);
+    }
+    println!(
+        "    == assist vs pool-WS {:.2}x, vs scoped fallback {:.2}x ==",
+        times[0] / times[2],
+        times[1] / times[2]
+    );
+    out.set("pool_ws_over_assist", Json::num(times[0] / times[2]));
+    out.set("scoped_over_assist", Json::num(times[1] / times[2]));
+    save_json("BENCH_assist.json", &out);
+}
+
 fn multithread_smoke() {
     println!("\n== multi-thread correctness overhead (oversubscribed on this host) ==");
     let n = 1_000_000usize;
@@ -585,5 +668,6 @@ fn main() {
     numa_steal();
     distance_rank();
     dispatch_latency();
+    assist_straggler();
     multithread_smoke();
 }

@@ -43,6 +43,22 @@ fn main() {
             }
         }
     }
+    // `--assist on|off` sets the process-wide work-assisting default
+    // (`ICH_ASSIST` is the env equivalent): idle pool workers join
+    // in-flight epochs and blocking submitters self-assist their own
+    // epoch instead of spinning. Off (the default) keeps the engines
+    // byte-identical to the assist-free runtime.
+    if let Some(s) = args.get("assist") {
+        match ich::sched::assist::parse(s) {
+            Some(on) => {
+                let _ = ich::sched::assist::set_process_default(on);
+            }
+            None => {
+                eprintln!("unknown assist setting '{s}' (expected: on | off)");
+                std::process::exit(2);
+            }
+        }
+    }
     // `--class interactive|batch|background` sets the process-wide
     // dispatch class for pool submissions (`ICH_CLASS` is the env
     // equivalent); `ich overlap` also honors it per run.
@@ -88,6 +104,8 @@ fn main() {
             println!("  --steal uniform|topo|ranked  steal-victim policy (default: topo; env ICH_STEAL);");
             println!("        ranked draws victims with probability decaying per NUMA-distance tier");
             println!("  --class interactive|batch|background  dispatch class (default: batch; env ICH_CLASS)");
+            println!("  --assist on|off  work assisting (default: off; env ICH_ASSIST): idle pool workers");
+            println!("        join in-flight loops and blocking submitters run chunks of their own epoch");
             println!("  ICH_TOPOLOGY  core->node map override: NxM | per-core list, with an optional");
             println!("        @-suffixed node-distance matrix (rows ';'-separated): 2x14@10,21;21,10");
         }

@@ -1,0 +1,384 @@
+//! Pool-level **work assisting** (Visser): idle workers dynamically
+//! join in-flight loops.
+//!
+//! The pool's epoch protocol fixes an epoch's worker count at
+//! submission time: `claims` assignments are handed out once and
+//! `pending` only counts down, so a worker that retires its claim
+//! early — or was never recruited because every assignment was taken —
+//! idles in the spin→yield→park ladder while another epoch's loop
+//! straggles. Work assisting closes that gap at *self-scheduling
+//! granularity*: each in-flight, assist-enabled epoch publishes an
+//! [`ActivityRecord`] on its pool's [`AssistBoard`]; an idle worker
+//! that failed to claim from the dispatch queue scans the board and
+//! *joins* a running loop as a late participant, claiming chunks
+//! through the engine's own scheduling rule (shared counter, claim
+//! array, or an empty work-stealing deque it immediately steals into).
+//!
+//! # The join/finish race
+//!
+//! A record's [`ActivityRecord::gate`] packs a joiner count in its low
+//! bits and a CLOSED flag in its top bit. Joining is a CAS that fails
+//! once CLOSED is set, so a joiner that loses the race against epoch
+//! completion backs out without touching the engine (or the epoch's
+//! `pending` counter — it never incremented anything to begin with).
+//! The publisher closes the gate and then *drains* it — spins until
+//! the joiner count is zero — before its engine frame unwinds, so a
+//! joiner that won the CAS holds the engine state alive for exactly
+//! the duration of its visit. That pair of rules is the entire
+//! lifetime argument for the type-erased `target` pointer.
+//!
+//! # Recruitment steering
+//!
+//! Scanners order candidates by dispatch class first (Interactive
+//! loops recruit assistants before Batch, Background last — Background
+//! epochs effectively *donate* idle workers rather than attract them)
+//! and by NUMA distance tier from the scanner's node within a class,
+//! the same ranking steal-victim selection applies
+//! ([`VictimSelector::assist_tier`]).
+//!
+//! # Gating
+//!
+//! Everything here is reached only when a submission opted in
+//! (`ForOpts::assist` / `--assist` / `ICH_ASSIST`): with assist off no
+//! record is ever published, scanners see an empty board behind one
+//! relaxed load, and no engine sizes for late joiners — the off path
+//! is byte-identical to the pre-assist runtime, RNG streams included.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::Ordering::{AcqRel, Acquire, Relaxed, Release};
+use std::sync::atomic::AtomicUsize;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use super::dispatch::LatencyClass;
+use super::topology::{Topology, VictimSelector};
+
+/// Process-wide assist default used by `ForOpts::default()` /
+/// `SubmitOpts::default()`: the value installed by
+/// [`set_process_default`] (the CLI's `--assist` flag), else the
+/// `ICH_ASSIST` env var (`1`/`true`/`on` ⇔ enabled), else off.
+pub fn process_default() -> bool {
+    *default_cell().get_or_init(|| std::env::var("ICH_ASSIST").ok().and_then(|s| parse(&s)).unwrap_or(false))
+}
+
+/// Install the process-wide default (first caller wins, mirroring
+/// `OnceLock`; returns false if the default was already resolved).
+pub fn set_process_default(on: bool) -> bool {
+    default_cell().set(on).is_ok()
+}
+
+/// Parse a CLI/env spelling of the assist toggle.
+pub fn parse(s: &str) -> Option<bool> {
+    match s.trim().to_ascii_lowercase().as_str() {
+        "1" | "true" | "on" | "yes" => Some(true),
+        "0" | "false" | "off" | "no" => Some(false),
+        _ => None,
+    }
+}
+
+fn default_cell() -> &'static OnceLock<bool> {
+    static DEFAULT: OnceLock<bool> = OnceLock::new();
+    &DEFAULT
+}
+
+/// An engine's in-flight loop, joinable by idle pool workers. The
+/// engine exposes its self-scheduling claim path; the board never
+/// looks inside.
+pub trait Assistable: Sync {
+    /// Is there still unclaimed work? Advisory — a stale `true` only
+    /// wastes a join attempt, a stale `false` only delays one.
+    fn has_work(&self) -> bool;
+
+    /// Claim a joiner slot, or `None` once the engine's late-joiner
+    /// budget is exhausted.
+    fn try_join(&self) -> Option<usize>;
+
+    /// Participate as joiner `slot` until the loop's work is done.
+    fn assist(&self, slot: usize);
+}
+
+/// Generic [`Assistable`] adapter: wraps an engine's joiner entry
+/// point with a bounded slot counter. Joiner `slot` runs as engine
+/// tid `base + slot`, so late participants get tids disjoint from the
+/// `0..base` epoch members.
+pub struct LoopAssist<'a> {
+    next: AtomicUsize,
+    max: usize,
+    base: usize,
+    has_work: &'a (dyn Fn() -> bool + Sync),
+    run: &'a (dyn Fn(usize) + Sync),
+}
+
+impl<'a> LoopAssist<'a> {
+    pub fn new(
+        base: usize,
+        max: usize,
+        has_work: &'a (dyn Fn() -> bool + Sync),
+        run: &'a (dyn Fn(usize) + Sync),
+    ) -> LoopAssist<'a> {
+        LoopAssist { next: AtomicUsize::new(0), max, base, has_work, run }
+    }
+}
+
+impl Assistable for LoopAssist<'_> {
+    fn has_work(&self) -> bool {
+        (self.has_work)()
+    }
+
+    fn try_join(&self) -> Option<usize> {
+        let mut s = self.next.load(Relaxed);
+        loop {
+            if s >= self.max {
+                return None;
+            }
+            match self.next.compare_exchange_weak(s, s + 1, AcqRel, Relaxed) {
+                Ok(_) => return Some(s),
+                Err(cur) => s = cur,
+            }
+        }
+    }
+
+    fn assist(&self, slot: usize) {
+        (self.run)(self.base + slot)
+    }
+}
+
+/// Joiner-gate CLOSED flag (top bit); the low bits count joiners
+/// currently inside the record's engine.
+const CLOSED: usize = 1 << (usize::BITS - 1);
+
+/// One published in-flight loop: the gate, the recruitment-steering
+/// metadata, and the type-erased engine handle.
+pub struct ActivityRecord {
+    /// Joiner count (low bits) | CLOSED (top bit). See the module
+    /// docs' join/finish-race argument.
+    gate: AtomicUsize,
+    /// Dispatch class of the publishing epoch (recruitment order).
+    class: LatencyClass,
+    /// Submission-origin node (distance-tier recruitment order).
+    origin: Option<usize>,
+    /// The engine state, lifetime-erased. Dereferenced only between a
+    /// successful [`ActivityRecord::try_enter`] and the matching
+    /// [`ActivityRecord::leave`]; the publisher's
+    /// [`ActivityRecord::close_and_drain`] runs before the pointee is
+    /// torn down, which makes every such window safe.
+    target: *const (dyn Assistable + 'static),
+    /// First joiner panic, handed back to the publisher (the epoch's
+    /// own panic path rethrows it at join).
+    panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+}
+
+// SAFETY: the raw `target` pointer is the only non-Send/Sync field;
+// its pointee is `Sync` (the `Assistable` bound) and stays alive for
+// every dereference by the gate protocol described on the field.
+unsafe impl Send for ActivityRecord {}
+unsafe impl Sync for ActivityRecord {}
+
+impl ActivityRecord {
+    /// Build a record for `target`.
+    ///
+    /// # Safety
+    ///
+    /// The caller must run [`ActivityRecord::close_and_drain`] before
+    /// `target`'s referent is dropped (the publisher guard in
+    /// `sched::runtime` does this on drop).
+    pub(crate) unsafe fn new(
+        target: &(dyn Assistable + '_),
+        class: LatencyClass,
+        origin: Option<usize>,
+    ) -> Arc<ActivityRecord> {
+        // A fat reference and a fat raw pointer share layout; only the
+        // lifetime is being erased (same trick as `runtime::erase`).
+        let target =
+            std::mem::transmute::<&(dyn Assistable + '_), *const (dyn Assistable + 'static)>(target);
+        Arc::new(ActivityRecord { gate: AtomicUsize::new(0), class, origin, target, panic: Mutex::new(None) })
+    }
+
+    /// Enter the joiner gate; fails iff the record is CLOSED (the
+    /// lost finish race — back out touching nothing).
+    fn try_enter(&self) -> bool {
+        let mut g = self.gate.load(Acquire);
+        loop {
+            if g & CLOSED != 0 {
+                return false;
+            }
+            match self.gate.compare_exchange_weak(g, g + 1, AcqRel, Acquire) {
+                Ok(_) => return true,
+                Err(cur) => g = cur,
+            }
+        }
+    }
+
+    fn leave(&self) {
+        self.gate.fetch_sub(1, Release);
+    }
+
+    /// Publisher side: refuse new joiners, then wait until every
+    /// in-flight joiner has left the engine frame. After this returns
+    /// the `target` pointee may be torn down.
+    pub(crate) fn close_and_drain(&self) {
+        self.gate.fetch_or(CLOSED, AcqRel);
+        let mut step = 0u32;
+        while self.gate.load(Acquire) != CLOSED {
+            if step < 64 {
+                std::hint::spin_loop();
+            } else {
+                std::thread::yield_now();
+            }
+            step = step.saturating_add(1);
+        }
+    }
+
+    /// First joiner panic, if any (publisher side, post-drain).
+    pub(crate) fn take_panic(&self) -> Option<Box<dyn std::any::Any + Send>> {
+        self.panic.lock().unwrap().take()
+    }
+}
+
+/// Per-pool shared array of in-flight assistable activities.
+#[derive(Default)]
+pub struct AssistBoard {
+    records: Mutex<Vec<Arc<ActivityRecord>>>,
+    /// Relaxed mirror of the record count, so the worker idle path
+    /// pays one load — not a lock — while assist is unused.
+    live: AtomicUsize,
+}
+
+impl AssistBoard {
+    pub fn new() -> AssistBoard {
+        AssistBoard::default()
+    }
+
+    /// Nothing published? (One relaxed load; the assist-off fast path.)
+    pub fn is_idle(&self) -> bool {
+        self.live.load(Relaxed) == 0
+    }
+
+    pub(crate) fn publish(&self, rec: Arc<ActivityRecord>) {
+        self.records.lock().unwrap().push(rec);
+        self.live.fetch_add(1, Release);
+    }
+
+    pub(crate) fn retire(&self, rec: &Arc<ActivityRecord>) {
+        self.records.lock().unwrap().retain(|r| !Arc::ptr_eq(r, rec));
+        self.live.fetch_sub(1, Release);
+    }
+
+    /// One idle-worker scan: snapshot the board, order candidates by
+    /// (class rank, distance tier from `my_node`) — Interactive loops
+    /// recruit first, near-origin loops before far ones — and join the
+    /// first that admits us. Returns whether any assist work ran.
+    pub(crate) fn scan(&self, my_node: Option<usize>) -> bool {
+        let mut recs = self.records.lock().unwrap().clone();
+        if recs.is_empty() {
+            return false;
+        }
+        let topo = Topology::detect();
+        recs.sort_by_key(|r| (r.class.rank(), VictimSelector::assist_tier(topo, my_node, r.origin)));
+        for rec in recs {
+            if !rec.try_enter() {
+                continue;
+            }
+            // Gate held: the publisher drains us out before the engine
+            // frame unwinds, so `target` is dereferenceable here.
+            let target = unsafe { &*rec.target };
+            // A body panic must not unwind past `leave` (the publisher
+            // would drain forever) or kill the pool thread; catch it
+            // and hand it to the publisher like a worker claim would.
+            let worked = catch_unwind(AssertUnwindSafe(|| {
+                if !target.has_work() {
+                    return false;
+                }
+                match target.try_join() {
+                    Some(slot) => {
+                        target.assist(slot);
+                        true
+                    }
+                    None => false,
+                }
+            }));
+            let worked = match worked {
+                Ok(w) => w,
+                Err(payload) => {
+                    let mut slot = rec.panic.lock().unwrap();
+                    if slot.is_none() {
+                        *slot = Some(payload);
+                    }
+                    true
+                }
+            };
+            rec.leave();
+            if worked {
+                return true;
+            }
+        }
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+    use std::sync::atomic::Ordering::SeqCst;
+
+    #[test]
+    fn parse_spellings() {
+        assert_eq!(parse("1"), Some(true));
+        assert_eq!(parse(" on "), Some(true));
+        assert_eq!(parse("TRUE"), Some(true));
+        assert_eq!(parse("0"), Some(false));
+        assert_eq!(parse("off"), Some(false));
+        assert_eq!(parse("maybe"), None);
+    }
+
+    #[test]
+    fn gate_rejects_after_close() {
+        let counter = AtomicU64::new(0);
+        let bump = move |_tid: usize| {
+            counter.fetch_add(1, SeqCst);
+        };
+        let has = || true;
+        let target = LoopAssist::new(2, 4, &has, &bump);
+        let rec = unsafe { ActivityRecord::new(&target, LatencyClass::Batch, None) };
+        assert!(rec.try_enter());
+        rec.leave();
+        rec.close_and_drain();
+        assert!(!rec.try_enter(), "a joiner losing the finish race must back out");
+    }
+
+    #[test]
+    fn loop_assist_slots_are_bounded_and_offset() {
+        let tids = Mutex::new(Vec::new());
+        let run = |tid: usize| tids.lock().unwrap().push(tid);
+        let has = || true;
+        let a = LoopAssist::new(3, 2, &has, &run);
+        let s0 = a.try_join().unwrap();
+        let s1 = a.try_join().unwrap();
+        assert_eq!((s0, s1), (0, 1));
+        assert!(a.try_join().is_none(), "slot budget is hard");
+        a.assist(s0);
+        a.assist(s1);
+        assert_eq!(*tids.lock().unwrap(), vec![3, 4]);
+    }
+
+    #[test]
+    fn board_scan_runs_and_retires() {
+        let board = AssistBoard::new();
+        assert!(board.is_idle());
+        let ran = AtomicU64::new(0);
+        let run = |_tid: usize| {
+            ran.fetch_add(1, SeqCst);
+        };
+        let has = || ran.load(SeqCst) == 0;
+        let target = LoopAssist::new(1, 8, &has, &run);
+        let rec = unsafe { ActivityRecord::new(&target, LatencyClass::Interactive, None) };
+        board.publish(Arc::clone(&rec));
+        assert!(!board.is_idle());
+        assert!(board.scan(None), "scan must join the published loop");
+        assert_eq!(ran.load(SeqCst), 1);
+        assert!(!board.scan(None), "drained loop admits no more work");
+        rec.close_and_drain();
+        board.retire(&rec);
+        assert!(board.is_idle());
+    }
+}

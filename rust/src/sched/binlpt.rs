@@ -12,7 +12,7 @@ use std::sync::atomic::{AtomicBool, Ordering::SeqCst};
 
 use super::metrics::MetricsSink;
 use super::policy;
-use super::runtime::{preempt_point, Executor};
+use super::runtime::{preempt_point, run_assistable, Executor};
 
 pub fn run_binlpt(
     weights: &[f64],
@@ -29,27 +29,41 @@ pub fn run_binlpt(
     let (chunks, assign) = policy::binlpt_partition(weights, max_chunks, p);
     let claimed: Vec<AtomicBool> = (0..chunks.len()).map(|_| AtomicBool::new(false)).collect();
 
-    exec.run(p, &|tid| {
-        // Phase 1: our own LPT-assigned chunks.
-        for &ci in &assign[tid] {
-            // Chunk boundary: yield to a higher-class epoch.
-            preempt_point();
-            if claim(&claimed, ci) {
-                let (a, b) = chunks[ci];
-                body(a..b);
-                sink.add_chunk(tid, (b - a) as u64);
-            }
-        }
-        // Phase 2: rebalance — claim any chunk not yet started.
+    // Phase 2 (rebalance): claim any chunk not yet started. Shared
+    // with assist joiners — they have no LPT assignment, so they enter
+    // straight here; the claim bit makes a lost finish race benign.
+    let phase2 = |wid: Option<usize>| {
         for ci in 0..chunks.len() {
             preempt_point();
             if claim(&claimed, ci) {
                 let (a, b) = chunks[ci];
                 body(a..b);
-                sink.add_chunk(tid, (b - a) as u64);
+                sink.add_chunk_at(wid, (b - a) as u64);
             }
         }
-    });
+    };
+    run_assistable(
+        exec,
+        p,
+        &|| claimed.iter().any(|c| !c.load(SeqCst)),
+        &|tid| {
+            // Phase 1: our own LPT-assigned chunks.
+            for &ci in &assign[tid] {
+                // Chunk boundary: yield to a higher-class epoch.
+                preempt_point();
+                if claim(&claimed, ci) {
+                    let (a, b) = chunks[ci];
+                    body(a..b);
+                    sink.add_chunk(tid, (b - a) as u64);
+                }
+            }
+            phase2(Some(tid));
+        },
+        &|_tid| {
+            sink.note_assist();
+            phase2(None)
+        },
+    );
 }
 
 #[inline]

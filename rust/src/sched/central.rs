@@ -7,7 +7,7 @@ use std::sync::atomic::{AtomicUsize, Ordering::SeqCst};
 
 use super::metrics::MetricsSink;
 use super::policy;
-use super::runtime::{preempt_point, Executor};
+use super::runtime::{preempt_point, run_assistable, Executor};
 
 /// `static`: thread t executes its contiguous block; no shared state.
 pub fn run_static(n: usize, p: usize, exec: &dyn Executor, body: &(dyn Fn(Range<usize>) + Sync), sink: &MetricsSink) {
@@ -38,7 +38,11 @@ pub fn run_dynamic(
     }
     let chunk = chunk.max(1);
     let next = AtomicUsize::new(0);
-    exec.run(p, &|tid| loop {
+    // One claim loop serves members (`Some(tid)`) and assist joiners
+    // (`None` — their chunks land in the global assist counters). The
+    // central counter makes late joining trivially race-free: a joiner
+    // that loses the finish race just observes `next >= n`.
+    let claim = |wid: Option<usize>| loop {
         // Chunk boundary: yield to a higher-class epoch, if pending.
         preempt_point();
         let b = next.fetch_add(chunk, SeqCst);
@@ -47,8 +51,18 @@ pub fn run_dynamic(
         }
         let e = (b + chunk).min(n);
         body(b..e);
-        sink.add_chunk(tid, (e - b) as u64);
-    });
+        sink.add_chunk_at(wid, (e - b) as u64);
+    };
+    run_assistable(
+        exec,
+        p,
+        &|| next.load(SeqCst) < n,
+        &|tid| claim(Some(tid)),
+        &|_tid| {
+            sink.note_assist();
+            claim(None)
+        },
+    );
 }
 
 /// `guided, min_chunk`: chunk = max(remaining/p, min_chunk), claimed
@@ -66,7 +80,7 @@ pub fn run_guided(
         return;
     }
     let next = AtomicUsize::new(0);
-    exec.run(p, &|tid| loop {
+    let claim = |wid: Option<usize>| loop {
         // Chunk boundary: yield to a higher-class epoch, if pending.
         preempt_point();
         let mut b = next.load(SeqCst);
@@ -81,8 +95,18 @@ pub fn run_guided(
             }
         };
         body(b..e);
-        sink.add_chunk(tid, (e - b) as u64);
-    });
+        sink.add_chunk_at(wid, (e - b) as u64);
+    };
+    run_assistable(
+        exec,
+        p,
+        &|| next.load(SeqCst) < n,
+        &|tid| claim(Some(tid)),
+        &|_tid| {
+            sink.note_assist();
+            claim(None)
+        },
+    );
 }
 
 /// Execute a precomputed chunk list from a shared index — the engine
@@ -95,14 +119,24 @@ pub fn run_chunk_list(
     sink: &MetricsSink,
 ) {
     let next = AtomicUsize::new(0);
-    exec.run(p, &|tid| loop {
+    let claim = |wid: Option<usize>| loop {
         // Chunk boundary: yield to a higher-class epoch, if pending.
         preempt_point();
         let i = next.fetch_add(1, SeqCst);
         let Some(&(a, b)) = chunks.get(i) else { return };
         body(a..b);
-        sink.add_chunk(tid, (b - a) as u64);
-    });
+        sink.add_chunk_at(wid, (b - a) as u64);
+    };
+    run_assistable(
+        exec,
+        p,
+        &|| next.load(SeqCst) < chunks.len(),
+        &|tid| claim(Some(tid)),
+        &|_tid| {
+            sink.note_assist();
+            claim(None)
+        },
+    );
 }
 
 /// `taskloop num_tasks(t)`: n iterations pre-split into t contiguous

@@ -49,6 +49,17 @@ impl ThreadCounters {
 /// Shared metrics sink for one `parallel_for` invocation.
 pub struct MetricsSink {
     pub per_thread: Vec<CachePadded<ThreadCounters>>,
+    /// Late joiners that entered this loop through work assisting
+    /// (one count per join, not per chunk).
+    pub assists: AtomicU64,
+    /// Chunks executed by assisting joiners. Joiner tids lie beyond
+    /// the `0..p` member range, so their work is accumulated here
+    /// globally rather than in `per_thread`; the partition invariant
+    /// is `Σ per_thread chunks + assist_chunks == total_chunks` (and
+    /// likewise for iterations).
+    pub assist_chunks: AtomicU64,
+    /// Iterations executed by assisting joiners.
+    pub assist_iters: AtomicU64,
 }
 
 impl MetricsSink {
@@ -59,7 +70,39 @@ impl MetricsSink {
 
     /// Sink with an explicit distance-tier count (tests).
     pub fn with_tiers(p: usize, tiers: usize) -> MetricsSink {
-        MetricsSink { per_thread: (0..p).map(|_| CachePadded::new(ThreadCounters::with_tiers(tiers))).collect() }
+        MetricsSink {
+            per_thread: (0..p).map(|_| CachePadded::new(ThreadCounters::with_tiers(tiers))).collect(),
+            assists: AtomicU64::new(0),
+            assist_chunks: AtomicU64::new(0),
+            assist_iters: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one late joiner entering the loop (work assisting).
+    #[inline]
+    pub fn note_assist(&self) {
+        self.assists.fetch_add(1, Relaxed);
+    }
+
+    /// Bulk-accumulate an assisting joiner's chunks/iterations (the
+    /// assist mirror of [`MetricsSink::add_bulk`]; joiners flush once
+    /// at exit too).
+    #[inline]
+    pub fn add_assist_bulk(&self, chunks: u64, iters: u64) {
+        self.assist_chunks.fetch_add(chunks, Relaxed);
+        self.assist_iters.fetch_add(iters, Relaxed);
+    }
+
+    /// Record one chunk for member tids (`Some`, into `per_thread`) or
+    /// an assisting joiner (`None`, into the global assist counters) —
+    /// the claim-loop-agnostic entry point for engines whose one loop
+    /// serves both sides.
+    #[inline]
+    pub fn add_chunk_at(&self, tid: Option<usize>, iters: u64) {
+        match tid {
+            Some(t) => self.add_chunk(t, iters),
+            None => self.add_assist_bulk(1, iters),
+        }
     }
 
     #[inline]
@@ -132,11 +175,18 @@ impl MetricsSink {
                 *acc += slot.load(Relaxed);
             }
         }
+        let assist_chunks = self.assist_chunks.load(Relaxed);
+        let assist_iters = self.assist_iters.load(Relaxed);
         RunMetrics {
             threads: self.per_thread.len(),
             elapsed_s: elapsed.as_secs_f64(),
-            total_chunks: self.per_thread.iter().map(|c| c.chunks.load(Relaxed)).sum(),
-            total_iters: iters.iter().sum(),
+            // Totals cover members *and* assisting joiners: member
+            // claims + assists partition the executed chunks.
+            total_chunks: self.per_thread.iter().map(|c| c.chunks.load(Relaxed)).sum::<u64>() + assist_chunks,
+            total_iters: iters.iter().sum::<u64>() + assist_iters,
+            assists: self.assists.load(Relaxed),
+            assist_chunks,
+            assist_iters,
             steals_ok: self.per_thread.iter().map(|c| c.steals_ok.load(Relaxed)).sum(),
             steals_local: self.per_thread.iter().map(|c| c.steals_local.load(Relaxed)).sum(),
             steals_remote: self.per_thread.iter().map(|c| c.steals_remote.load(Relaxed)).sum(),
@@ -175,6 +225,16 @@ pub struct RunMetrics {
     pub steals_failed: u64,
     /// Spin→yield backoff transitions across all threads.
     pub backoffs: u64,
+    /// Late joiners that entered the loop through work assisting.
+    pub assists: u64,
+    /// Chunks executed by assisting joiners. Partition invariant:
+    /// `Σ per-thread chunks + assist_chunks == total_chunks`.
+    pub assist_chunks: u64,
+    /// Iterations executed by assisting joiners. Partition invariant:
+    /// `Σ iters_per_thread + assist_iters == total_iters`.
+    pub assist_iters: u64,
+    /// Per *member* tid executed iterations (joiner work is in
+    /// `assist_iters`, not here).
     pub iters_per_thread: Vec<u64>,
     /// Dispatch class the run was submitted under (`Batch` default).
     pub class: LatencyClass,

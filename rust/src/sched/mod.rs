@@ -67,6 +67,7 @@
 //! enforced; `BENCH_priority.json` measures the Interactive queue-wait
 //! win under saturating Background load.
 
+pub mod assist;
 pub mod binlpt;
 pub mod central;
 pub mod deque;
@@ -246,6 +247,13 @@ pub struct ForOpts<'a> {
     /// Absolute virtual-tick deadline for EDF ordering within the
     /// class (`None` = no deadline, sorts after every deadline).
     pub deadline: Option<u64>,
+    /// Work assisting: publish this run's epoch on the pool's assist
+    /// board so idle workers join it mid-flight, and let the blocking
+    /// submitter execute chunks of its own epoch instead of spinning.
+    /// The default comes from [`assist::process_default`] (CLI
+    /// `--assist` / `ICH_ASSIST` env, else off — the off-path is
+    /// byte-identical to the pre-assist runtime).
+    pub assist: bool,
 }
 
 impl Default for ForOpts<'_> {
@@ -259,6 +267,7 @@ impl Default for ForOpts<'_> {
             victim: VictimPolicy::process_default(),
             class: LatencyClass::process_default(),
             deadline: None,
+            assist: assist::process_default(),
         }
     }
 }
@@ -298,11 +307,22 @@ impl<'a> ForOpts<'a> {
         self
     }
 
+    pub fn with_assist(mut self, assist: bool) -> Self {
+        self.assist = assist;
+        self
+    }
+
     /// The [`SubmitOpts`] this run hands the pool. The submission
     /// origin is left to auto-detection (the submitting thread's
     /// pinned core, if any).
     fn submit_opts(&self) -> SubmitOpts {
-        SubmitOpts { class: self.class, deadline: self.deadline, pin_fallback: self.pin, origin: None }
+        SubmitOpts {
+            class: self.class,
+            deadline: self.deadline,
+            pin_fallback: self.pin,
+            origin: None,
+            assist: self.assist,
+        }
     }
 }
 

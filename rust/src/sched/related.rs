@@ -9,7 +9,7 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering::SeqCst};
 
 use super::metrics::MetricsSink;
 use super::policy;
-use super::runtime::{preempt_point, Executor};
+use super::runtime::{preempt_point, run_assistable, Executor};
 use crate::util::sync::CachePadded;
 
 /// AWF: factoring-style central scheduling where each thread's chunk
@@ -25,17 +25,26 @@ pub fn run_awf(n: usize, p: usize, exec: &dyn Executor, body: &(dyn Fn(Range<usi
     let done: Vec<CachePadded<AtomicU64>> = (0..p).map(|_| CachePadded::new(AtomicU64::new(0))).collect();
     let busy: Vec<CachePadded<AtomicU64>> = (0..p).map(|_| CachePadded::new(AtomicU64::new(1))).collect();
 
-    exec.run(p, &|tid| loop {
+    // One claim loop serves members (`Some(tid)`, with a measured
+    // weight and history updates) and assist joiners (`None`: the
+    // weight/history arrays are sized for members only, so a joiner
+    // schedules at the neutral weight 1.0 and records no history).
+    let claim = |wid: Option<usize>| loop {
         // Chunk boundary: yield to a higher-class epoch, if pending.
         preempt_point();
         // weight_t = (own throughput) / (mean throughput); 1.0 before
         // any measurement exists.
-        let my_rate = done[tid].load(SeqCst) as f64 / busy[tid].load(SeqCst) as f64;
-        let mean_rate = {
-            let s: f64 = (0..p).map(|j| done[j].load(SeqCst) as f64 / busy[j].load(SeqCst) as f64).sum();
-            s / p as f64
+        let w = match wid {
+            Some(tid) => {
+                let my_rate = done[tid].load(SeqCst) as f64 / busy[tid].load(SeqCst) as f64;
+                let mean_rate = {
+                    let s: f64 = (0..p).map(|j| done[j].load(SeqCst) as f64 / busy[j].load(SeqCst) as f64).sum();
+                    s / p as f64
+                };
+                if mean_rate > 0.0 && my_rate > 0.0 { (my_rate / mean_rate).clamp(0.25, 4.0) } else { 1.0 }
+            }
+            None => 1.0,
         };
-        let w = if mean_rate > 0.0 && my_rate > 0.0 { (my_rate / mean_rate).clamp(0.25, 4.0) } else { 1.0 };
 
         let mut b = next.load(SeqCst);
         let e = loop {
@@ -52,10 +61,22 @@ pub fn run_awf(n: usize, p: usize, exec: &dyn Executor, body: &(dyn Fn(Range<usi
         let t0 = std::time::Instant::now();
         body(b..e);
         let dt = t0.elapsed().as_nanos() as u64;
-        done[tid].fetch_add((e - b) as u64, SeqCst);
-        busy[tid].fetch_add(dt.max(1), SeqCst);
-        sink.add_chunk(tid, (e - b) as u64);
-    });
+        if let Some(tid) = wid {
+            done[tid].fetch_add((e - b) as u64, SeqCst);
+            busy[tid].fetch_add(dt.max(1), SeqCst);
+        }
+        sink.add_chunk_at(wid, (e - b) as u64);
+    };
+    run_assistable(
+        exec,
+        p,
+        &|| next.load(SeqCst) < n,
+        &|tid| claim(Some(tid)),
+        &|_tid| {
+            sink.note_assist();
+            claim(None)
+        },
+    );
 }
 
 /// HSS-lite: history-aware scheduling for nested loops. Given

@@ -21,33 +21,60 @@
 //! [`Runtime::submit`] returns a [`LoopHandle`] that is joined later,
 //! letting independent loops from a serving layer overlap on one pool.
 //!
-//! # Epoch protocol
+//! # Epoch protocol: submit → claim → assist → retire
 //!
 //! One fork-join ("epoch") is a heap-allocated [`Epoch`]: a claim
 //! counter, a type-erased loop body, a `pending` completion counter,
 //! and a panic slot. An epoch with `claims` worker assignments
 //! proceeds:
 //!
-//! 1. **Fork.** The submitter pushes an `Arc<Epoch>` onto the pool's
+//! 1. **Submit.** The submitter pushes an `Arc<Epoch>` onto the pool's
 //!    FIFO queue (one short mutex hold) and unparks the workers. A
 //!    *blocking* run ([`Runtime::run`]) then executes tid 0 inline and
 //!    joins; an *async* submission ([`Runtime::submit`]) returns a
-//!    [`LoopHandle`] immediately.
+//!    [`LoopHandle`] immediately. An assist-enabled submission
+//!    (`SubmitOpts::assist`) additionally has its *engine* publish an
+//!    activity record on the pool's [`super::assist::AssistBoard`]
+//!    before the region opens.
 //! 2. **Claim.** An idle worker (spin→yield→park loop) locks the
 //!    queue, takes the next unclaimed assignment of the **front**
 //!    epoch, and pops the epoch once its last assignment is handed
 //!    out. Claims of one epoch can be executing while a later epoch's
 //!    claims are being handed to other workers — that is the overlap.
-//! 3. **Run.** The worker executes `body(tid)` under `catch_unwind`,
-//!    so a poisoned body cannot kill a pool thread; the first panic of
-//!    an epoch is stashed in the epoch's panic slot.
-//! 4. **Join.** The worker decrements `pending` (`AcqRel`); the one
-//!    that hits zero unparks the registered waiter. The joiner
-//!    (blocking submitter or `LoopHandle::join`) spins briefly, then
-//!    registers itself and parks until `pending == 0`, and finally
-//!    rethrows the stashed panic (worker panics thus surface on the
-//!    joining thread, preserving `parallel_for`'s failure-injection
-//!    semantics).
+//!    The worker executes `body(tid)` under `catch_unwind`, so a
+//!    poisoned body cannot kill a pool thread; the first panic of an
+//!    epoch is stashed in the epoch's panic slot.
+//! 3. **Assist.** A worker that finds *no* claimable assignment —
+//!    every epoch's claims are handed out, but loops are still
+//!    running — scans the assist board before parking and *joins* an
+//!    in-flight loop as a late participant, pulling chunks through
+//!    the engine's own self-scheduling rule under a fresh engine tid
+//!    `≥ p`. Joining is race-free against completion: the record's
+//!    joiner gate is a CAS that fails once the publisher has closed
+//!    it, so a joiner that loses the finish race backs out without
+//!    touching the engine *or* the epoch's `pending` counter (it
+//!    never incremented either); a joiner that wins holds the gate,
+//!    and the publisher drains the gate to zero before its engine
+//!    frame unwinds — the full lifetime argument for the record's
+//!    type-erased engine handle. The blocking submitter plays the
+//!    same card in reverse: with assist on, instead of burning its
+//!    spin/yield window in [`LoopHandle::join`] / `run`, it
+//!    *self-assists* — claims its own epoch's undispatched
+//!    assignments from the queue and executes them inline.
+//! 4. **Retire.** The worker (or joiner-side engine exit) decrements
+//!    `pending` (`AcqRel`); the one that hits zero unparks the
+//!    registered waiter. The joiner spins briefly, then registers
+//!    itself and parks until `pending == 0`, and finally rethrows the
+//!    stashed panic (worker panics thus surface on the joining
+//!    thread, preserving `parallel_for`'s failure-injection
+//!    semantics). An assist-enabled engine retires its activity
+//!    record first — close, drain, rethrow any joiner panic — so no
+//!    joiner can outlive the engine state it borrowed.
+//!
+//! With assist off (the default; `ForOpts::assist` / `--assist` /
+//! `ICH_ASSIST` opt in) no record is ever published and the pool's
+//! behavior — dispatch order, RNG streams, float accounting — is
+//! byte-identical to the pre-assist runtime.
 //!
 //! # Safety argument (heap epochs)
 //!
@@ -158,10 +185,11 @@ use std::cell::{Cell, RefCell, UnsafeCell};
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::Ordering::{AcqRel, Acquire, Relaxed, Release};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, AtomicUsize};
-use std::sync::{Arc, Mutex, OnceLock};
+use std::sync::{Arc, Mutex, OnceLock, Weak};
 use std::thread::{self, Thread};
 use std::time::Instant;
 
+use super::assist::{self, ActivityRecord, AssistBoard, Assistable};
 use super::dispatch::{mask_has_higher, DispatchQueue, LatencyClass, PopInfo};
 use super::pool::{num_cpus, pin_to_cpu, pinned_core, scoped_run, scoped_run_pin_workers};
 use super::topology::{self, Topology};
@@ -184,6 +212,18 @@ pub trait Executor: Sync {
         let f = |tid: usize| body(tid);
         let panic = catch_unwind(AssertUnwindSafe(|| self.run(p, &f))).err();
         LoopHandle::completed(panic)
+    }
+
+    /// Assist context for a width-`p` region through this executor:
+    /// `Some` iff the submission opted into work assisting *and* the
+    /// region will be pool-served with idle capacity left over. The
+    /// engine publishes its loop on the pool's assist board through
+    /// the returned context ([`AssistCtx::publish`] /
+    /// [`run_assistable`]); executors without a pool — scoped spawns,
+    /// inline, fallback paths — return `None` and the engine runs
+    /// exactly its pre-assist code path.
+    fn assist_ctx(&self, _p: usize) -> Option<AssistCtx> {
+        None
     }
 }
 
@@ -245,11 +285,24 @@ pub struct SubmitOpts {
     /// neutral). Embedders that know where a request's data lives can
     /// set this explicitly without pinning their submitting threads.
     pub origin: Option<usize>,
+    /// Work assisting (module docs, step 3): publish this epoch's loop
+    /// on the pool's assist board so idle workers can join it, and let
+    /// the blocking joiner self-assist instead of spinning. Defaults
+    /// to [`assist::process_default`] (CLI `--assist` / `ICH_ASSIST`
+    /// env, else off); with it off the pool is byte-identical to the
+    /// pre-assist runtime.
+    pub assist: bool,
 }
 
 impl Default for SubmitOpts {
     fn default() -> SubmitOpts {
-        SubmitOpts { class: LatencyClass::process_default(), deadline: None, pin_fallback: false, origin: None }
+        SubmitOpts {
+            class: LatencyClass::process_default(),
+            deadline: None,
+            pin_fallback: false,
+            origin: None,
+            assist: assist::process_default(),
+        }
     }
 }
 
@@ -323,6 +376,159 @@ impl Executor for PoolExec<'_> {
     fn run_async(&self, p: usize, body: Arc<dyn Fn(usize) + Send + Sync>) -> LoopHandle {
         self.rt.submit_arc_with(p, body, self.opts)
     }
+
+    fn assist_ctx(&self, p: usize) -> Option<AssistCtx> {
+        // Mirror run_with's dispatch decision exactly: the fallback
+        // paths (inline, oversized, nested) never publish.
+        if !self.opts.assist
+            || p <= 1
+            || p - 1 > self.rt.workers.len()
+            || self.rt.on_own_worker()
+            || self.rt.mid_epoch_here()
+        {
+            return None;
+        }
+        AssistCtx::new(&self.rt.shared, self.opts, self.rt.workers.len() - (p - 1))
+    }
+}
+
+/// Pool-side context an assist-enabled submission hands its engine:
+/// where to publish the loop, how recruitment is steered, and how
+/// many late joiners the pool can possibly supply.
+#[derive(Clone)]
+pub struct AssistCtx {
+    shared: Arc<PoolShared>,
+    class: LatencyClass,
+    origin: Option<usize>,
+    extra: usize,
+}
+
+impl AssistCtx {
+    fn new(shared: &Arc<PoolShared>, opts: SubmitOpts, extra: usize) -> Option<AssistCtx> {
+        if extra == 0 {
+            return None;
+        }
+        Some(AssistCtx {
+            shared: Arc::clone(shared),
+            class: opts.class,
+            origin: opts.origin.or_else(topology::current_node),
+            extra,
+        })
+    }
+
+    /// Upper bound on late joiners (pool workers the region leaves
+    /// idle); engines size joiner-visible state for `p + extra` tids.
+    pub fn extra_slots(&self) -> usize {
+        self.extra
+    }
+
+    /// Publish `target` on the pool's assist board and wake idle
+    /// workers per the submission's class steering: `Interactive`
+    /// recruits every possible assistant, `Batch` nudges one, and
+    /// `Background` wakes nobody — it only *donates* already-awake
+    /// idle workers that happen to scan past it.
+    ///
+    /// # Safety
+    ///
+    /// The caller must keep `target` alive until the returned scope is
+    /// finished or dropped (both close and drain the record) — i.e.
+    /// declare `target` before the scope binding and call
+    /// [`AssistScope::finish`] after the engine's region returns.
+    pub unsafe fn publish(&self, target: &(dyn Assistable + '_)) -> AssistScope {
+        let rec = ActivityRecord::new(target, self.class, self.origin);
+        self.shared.board.publish(Arc::clone(&rec));
+        let wake = match self.class.rank() {
+            0 => self.extra,
+            1 => 1,
+            _ => 0,
+        };
+        wake_parked(&self.shared, wake);
+        AssistScope { shared: Arc::clone(&self.shared), rec, done: false }
+    }
+}
+
+/// Publisher-side guard of one activity record: closing it (by
+/// [`AssistScope::finish`] or drop) refuses new joiners, drains the
+/// ones inside the engine, and retires the record from the board —
+/// after which the engine state the record pointed at may unwind.
+pub struct AssistScope {
+    shared: Arc<PoolShared>,
+    rec: Arc<ActivityRecord>,
+    done: bool,
+}
+
+impl AssistScope {
+    /// Close, drain, retire — then surface the first joiner panic so
+    /// the engine can rethrow it toward the epoch like any member
+    /// panic.
+    pub fn finish(mut self) -> Option<Box<dyn Any + Send>> {
+        self.close();
+        self.rec.take_panic()
+    }
+
+    fn close(&mut self) {
+        if !self.done {
+            self.done = true;
+            self.rec.close_and_drain();
+            self.shared.board.retire(&self.rec);
+        }
+    }
+}
+
+impl Drop for AssistScope {
+    fn drop(&mut self) {
+        // Unwinding past `finish` (an engine member panicked) still
+        // closes and drains; the joiner panic, if any, is dropped in
+        // favor of the member's (first-panic-wins, like Epoch's slot).
+        self.close();
+    }
+}
+
+/// Run an engine's one parallel region with assist publication when
+/// the executor grants it: `worker(tid)` serves member tids `0..p` as
+/// always, and late joiners admitted through the board run
+/// `joiner(tid)` with fresh tids `p..p + extra`. `has_work` is the
+/// engine's remaining-range signal — a joiner is admitted only while
+/// it reports true. Without an assist context this is exactly
+/// `exec.run(p, worker)`.
+pub fn run_assistable(
+    exec: &dyn Executor,
+    p: usize,
+    has_work: &(dyn Fn() -> bool + Sync),
+    worker: &(dyn Fn(usize) + Sync),
+    joiner: &(dyn Fn(usize) + Sync),
+) {
+    match exec.assist_ctx(p) {
+        Some(ctx) => {
+            let target = assist::LoopAssist::new(p, ctx.extra_slots(), has_work, joiner);
+            // SAFETY: `target` is declared before `scope`, so even on
+            // unwind the scope's close-and-drain precedes its drop.
+            let scope = unsafe { ctx.publish(&target) };
+            exec.run(p, worker);
+            if let Some(payload) = scope.finish() {
+                resume_unwind(payload);
+            }
+        }
+        None => exec.run(p, worker),
+    }
+}
+
+/// Wake up to `n` parked workers of `shared` (the same swap-claim
+/// handshake `enqueue` uses, reachable from contexts that only hold
+/// the shared state — e.g. an assist publish from inside a driver
+/// claim).
+fn wake_parked(shared: &PoolShared, n: usize) {
+    let Some(handles) = shared.handles.get() else { return };
+    let mut need = n;
+    for (i, t) in handles.iter().enumerate() {
+        if need == 0 {
+            break;
+        }
+        if shared.parked[i].swap(false, AcqRel) {
+            t.unpark();
+            need -= 1;
+        }
+    }
 }
 
 /// Type-erased pointer to a `&(dyn Fn(usize) + Sync)` loop body.
@@ -389,6 +595,9 @@ struct Epoch {
     skips: AtomicU64,
     /// Whether anti-starvation promotion dispatched the epoch.
     promoted: AtomicBool,
+    /// Work assisting opted in ([`SubmitOpts::assist`]): the joiner
+    /// side self-assists instead of spinning.
+    assist: bool,
 }
 
 // SAFETY: the only non-Send/Sync field is the `Task::Borrowed` raw
@@ -415,6 +624,7 @@ impl Epoch {
             dispatched_ns: AtomicU64::new(0),
             skips: AtomicU64::new(0),
             promoted: AtomicBool::new(false),
+            assist: opts.assist,
         })
     }
 
@@ -500,8 +710,10 @@ pub struct LoopHandle {
 enum HandleInner {
     /// Finished at submission time (default executor degradation).
     Done(Option<Box<dyn Any + Send>>),
-    /// A queued / in-flight pool epoch.
-    Epoch(Arc<Epoch>),
+    /// A queued / in-flight pool epoch, plus its pool (weak: a handle
+    /// must not keep a dropped pool's shared state alive) so an
+    /// assist-enabled join can self-assist instead of spinning.
+    Epoch(Arc<Epoch>, Weak<PoolShared>),
     /// A detached per-call thread team (fallback path).
     Thread(thread::JoinHandle<()>),
 }
@@ -511,8 +723,8 @@ impl LoopHandle {
         LoopHandle { inner: HandleInner::Done(panic) }
     }
 
-    fn from_epoch(epoch: Arc<Epoch>) -> LoopHandle {
-        LoopHandle { inner: HandleInner::Epoch(epoch) }
+    fn from_epoch(epoch: Arc<Epoch>, pool: Weak<PoolShared>) -> LoopHandle {
+        LoopHandle { inner: HandleInner::Epoch(epoch, pool) }
     }
 
     fn from_thread(join: thread::JoinHandle<()>) -> LoopHandle {
@@ -524,7 +736,7 @@ impl LoopHandle {
     pub fn is_finished(&self) -> bool {
         match &self.inner {
             HandleInner::Done(_) => true,
-            HandleInner::Epoch(e) => e.pending.load(Acquire) == 0,
+            HandleInner::Epoch(e, _) => e.pending.load(Acquire) == 0,
             HandleInner::Thread(j) => j.is_finished(),
         }
     }
@@ -536,7 +748,7 @@ impl LoopHandle {
     /// joined.
     pub fn dispatch_info(&self) -> Option<DispatchInfo> {
         match &self.inner {
-            HandleInner::Epoch(e) => Some(e.dispatch_info()),
+            HandleInner::Epoch(e, _) => Some(e.dispatch_info()),
             _ => None,
         }
     }
@@ -544,7 +756,7 @@ impl LoopHandle {
     /// [`LoopHandle::join`], then report the final dispatch info.
     pub fn join_with_dispatch(self) -> Option<DispatchInfo> {
         let epoch = match &self.inner {
-            HandleInner::Epoch(e) => Some(Arc::clone(e)),
+            HandleInner::Epoch(e, _) => Some(Arc::clone(e)),
             _ => None,
         };
         self.join();
@@ -552,12 +764,19 @@ impl LoopHandle {
     }
 
     /// Wait for the epoch to complete; rethrows the first worker panic
-    /// on this thread.
+    /// on this thread. With work assisting on, the joiner first
+    /// executes its own epoch's undispatched assignments inline
+    /// (self-assist) instead of spinning toward a park.
     pub fn join(self) {
         match self.inner {
             HandleInner::Done(None) => {}
             HandleInner::Done(Some(payload)) => resume_unwind(payload),
-            HandleInner::Epoch(epoch) => {
+            HandleInner::Epoch(epoch, pool) => {
+                if epoch.assist {
+                    if let Some(shared) = pool.upgrade() {
+                        self_assist(&shared, &epoch);
+                    }
+                }
                 join_wait(&epoch);
                 if let Some(payload) = epoch.panic.lock().unwrap().take() {
                     resume_unwind(payload);
@@ -593,6 +812,14 @@ struct PoolShared {
     /// wakeup. Lets `enqueue` wake only as many workers as the epoch
     /// has claims instead of storming every parked worker.
     parked: Vec<AtomicBool>,
+    /// In-flight assistable activities (work assisting, module docs
+    /// step 3). Empty — one relaxed load on the worker idle path —
+    /// unless a submission opted in via [`SubmitOpts::assist`].
+    board: AssistBoard,
+    /// Unpark handles of the pool's workers, set once after spawn so
+    /// contexts holding only the shared state (assist publishes from
+    /// driver claims) can wake parked workers.
+    handles: OnceLock<Vec<Thread>>,
 }
 
 thread_local! {
@@ -789,6 +1016,53 @@ fn claim_next_above(shared: &PoolShared, below_rank: u8) -> Option<(Arc<Epoch>, 
     out
 }
 
+/// Take the next undispatched assignment of *this specific epoch*, if
+/// it is still queued — the self-assist claim path: the blocking
+/// joiner only ever serves its own epoch, bypassing the dispatch
+/// order (it would otherwise sit spinning while its claims wait
+/// behind busy workers). Bookkeeping mirrors [`claim_next_above`].
+fn claim_own(shared: &PoolShared, epoch: &Arc<Epoch>) -> Option<usize> {
+    let mut q = shared.queue.lock().unwrap();
+    let out = (0..q.len()).find(|&i| Arc::ptr_eq(q.item(i), epoch)).map(|idx| {
+        let c = epoch.next_claim.load(Relaxed);
+        debug_assert!(c < epoch.claims, "exhausted epoch cannot stay queued");
+        epoch.next_claim.store(c + 1, Relaxed);
+        if c + 1 == epoch.claims {
+            let (_, info) = q.remove_at(idx);
+            note_removed(shared, epoch, &info);
+        }
+        if c == 0 {
+            note_first_dispatch(shared, epoch);
+        }
+        c
+    });
+    shared.class_mask.store(q.class_mask(), Relaxed);
+    out
+}
+
+/// Self-assist (work assisting, joiner side): before blocking on
+/// `pending`, execute the epoch's own still-queued assignments inline
+/// on the joining thread. Runs with this pool marked mid-epoch so a
+/// nested submission from a body executed here falls back exactly as
+/// the blocking tid-0 share does; no preemption frame is pushed — the
+/// joiner is an application thread that may hold application locks
+/// (the same lock-inversion rule as the tid-0 share).
+fn self_assist(shared: &Arc<PoolShared>, epoch: &Arc<Epoch>) {
+    let id = Arc::as_ptr(shared) as usize;
+    MID_EPOCH_ON.with(|s| s.borrow_mut().push(id));
+    while epoch.pending.load(Acquire) != 0 {
+        // `execute` never unwinds (body panics are caught and stashed
+        // on the epoch), so the pop below always runs.
+        match claim_own(shared, epoch) {
+            Some(c) => execute(epoch, c),
+            None => break,
+        }
+    }
+    MID_EPOCH_ON.with(|s| {
+        s.borrow_mut().pop();
+    });
+}
+
 /// Record an epoch's first claim hand-out: its queue wait, per class.
 fn note_first_dispatch(shared: &PoolShared, epoch: &Epoch) {
     let wait_ns = (epoch.enqueued_at.elapsed().as_nanos() as u64).max(1);
@@ -813,11 +1087,22 @@ fn worker_loop(shared: Arc<PoolShared>, idx: usize, cpu: Option<usize>) {
         pin_to_cpu(c);
     }
     WORKER_OF.with(|w| w.set(Arc::as_ptr(&shared) as usize));
+    let my_node = topology::current_node();
     let mut step = 0u32;
     loop {
         if let Some((epoch, claim, rank)) = claim_next(&shared) {
             step = 0;
             execute_claim(&shared, &epoch, claim, rank);
+            continue;
+        }
+        // No claimable assignment: before winding down toward park,
+        // try to *assist* an in-flight loop (module docs, step 3).
+        // Recruitment is steered inside the scan — Interactive loops
+        // first, then by SLIT distance from this worker's node to the
+        // loop's submission origin. The `is_idle` gate keeps the
+        // assist-off path at one relaxed load.
+        if !shared.board.is_idle() && shared.board.scan(my_node) {
+            step = 0;
             continue;
         }
         // Drain-then-exit: shutdown is honored only once the queue is
@@ -883,6 +1168,8 @@ impl Runtime {
             stats: std::array::from_fn(|_| ClassAgg::default()),
             shutdown: AtomicBool::new(false),
             parked: (0..workers).map(|_| AtomicBool::new(false)).collect(),
+            board: AssistBoard::new(),
+            handles: OnceLock::new(),
         });
         let mut ws = Vec::with_capacity(workers);
         let mut cores = Vec::with_capacity(workers);
@@ -897,6 +1184,7 @@ impl Runtime {
             let thread = join.thread().clone();
             ws.push(Worker { thread, join: Some(join) });
         }
+        let _ = shared.handles.set(ws.iter().map(|w| w.thread.clone()).collect());
         Runtime { shared, workers: ws, cores }
     }
 
@@ -1073,6 +1361,12 @@ impl Runtime {
         MID_EPOCH_ON.with(|s| {
             s.borrow_mut().pop();
         });
+        if epoch.assist {
+            // Joiner-side work assisting: run our own epoch's
+            // undispatched assignments instead of burning the
+            // spin/yield window below on a busy pool.
+            self_assist(&self.shared, &epoch);
+        }
         join_wait(&epoch);
         if let Err(payload) = mine {
             resume_unwind(payload);
@@ -1116,7 +1410,7 @@ impl Runtime {
         }
         let epoch = Epoch::new(p, 0, Task::Owned(body), opts);
         self.enqueue(&epoch);
-        LoopHandle::from_epoch(epoch)
+        LoopHandle::from_epoch(epoch, Arc::downgrade(&self.shared))
     }
 
     /// Asynchronously run a whole *engine invocation* on the pool: the
@@ -1152,13 +1446,18 @@ impl Runtime {
             // Nested submissions never pin.
             return detach_driver(driver, false);
         }
+        // Assist context for the driver's engine, resolved on the
+        // submitting thread (its node is the epoch origin) — the
+        // driver claim only clones it. All `p` claims are pool-served,
+        // so the idle budget is what the pool has beyond them.
+        let actx = if opts.assist { AssistCtx::new(&self.shared, opts, self.workers.len() - p) } else { None };
         let relay = Arc::new(Relay::new());
         let driver_cell = Mutex::new(Some(driver));
         let r2 = Arc::clone(&relay);
         let body = move |claim: usize| {
             if claim == 0 {
                 let d = driver_cell.lock().unwrap().take().expect("driver claim runs once");
-                let exec = RelayExec { relay: Arc::clone(&r2) };
+                let exec = RelayExec { relay: Arc::clone(&r2), assist: actx.clone() };
                 let out = catch_unwind(AssertUnwindSafe(|| d(&exec)));
                 // Wake participants even when the driver never opened a
                 // parallel region (n == 0 engines, or a driver panic
@@ -1173,7 +1472,7 @@ impl Runtime {
         };
         let epoch = Epoch::new(p, 0, Task::Owned(Arc::new(body)), opts);
         self.enqueue(&epoch);
-        LoopHandle::from_epoch(epoch)
+        LoopHandle::from_epoch(epoch, Arc::downgrade(&self.shared))
     }
 }
 
@@ -1340,9 +1639,17 @@ impl Relay {
 /// The [`Executor`] handed to an async driver.
 struct RelayExec {
     relay: Arc<Relay>,
+    /// Assist context of the submission (resolved at submit time on
+    /// the submitting thread), handed to the driver's engine so a
+    /// driver-relayed region is assistable like a blocking one.
+    assist: Option<AssistCtx>,
 }
 
 impl Executor for RelayExec {
+    fn assist_ctx(&self, _p: usize) -> Option<AssistCtx> {
+        self.assist.clone()
+    }
+
     fn run(&self, p: usize, f: &(dyn Fn(usize) + Sync)) {
         let r = &*self.relay;
         if p <= 1 {
@@ -1839,10 +2146,12 @@ mod tests {
             ("hot", LatencyClass::Interactive, None),
         ] {
             let o = Arc::clone(&order);
+            // assist off: a self-assisting join would run its own epoch
+            // ahead of the dispatch order this test is proving.
             handles.push(rt.submit_arc_with(
                 1,
                 Arc::new(move |_tid| o.lock().unwrap().push(name)),
-                SubmitOpts { class, deadline, ..Default::default() },
+                SubmitOpts { class, deadline, assist: false, ..Default::default() },
             ));
         }
         open(&release);
@@ -1883,6 +2192,9 @@ mod tests {
         let hot_ran = Arc::new(AtomicUsize::new(0));
         let depth_seen = Arc::new(AtomicUsize::new(0));
         let (s2, h2) = (Arc::clone(&started), Arc::clone(&hot_ran));
+        // assist off on both epochs: a self-assisting join would run
+        // the hot body on this thread at depth 0 instead of through
+        // the worker's preempt point.
         let bg = rt.submit_arc_with(
             1,
             Arc::new(move |_tid| {
@@ -1894,7 +2206,7 @@ mod tests {
                     thread::yield_now();
                 }
             }),
-            SubmitOpts { class: LatencyClass::Background, ..Default::default() },
+            SubmitOpts { class: LatencyClass::Background, assist: false, ..Default::default() },
         );
         while started.load(SeqCst) == 0 {
             thread::yield_now();
@@ -1908,7 +2220,7 @@ mod tests {
                 d2.store(preempt_depth(), SeqCst);
                 h3.fetch_add(1, SeqCst);
             }),
-            SubmitOpts { class: LatencyClass::Interactive, ..Default::default() },
+            SubmitOpts { class: LatencyClass::Interactive, assist: false, ..Default::default() },
         );
         hot.join();
         bg.join();
@@ -1972,11 +2284,14 @@ mod tests {
         use super::super::dispatch::PROMOTE_K;
         let rt = Runtime::with_pinning(1, false);
         let (gate, release) = hold_worker(&rt);
-        let bg_opts = SubmitOpts { class: LatencyClass::Background, ..Default::default() };
+        // assist off: self-assisting joins would drain the queue from
+        // the submitting thread, bypassing the promotion machinery this
+        // test observes.
+        let bg_opts = SubmitOpts { class: LatencyClass::Background, assist: false, ..Default::default() };
         let bg = rt.submit_arc_with(1, Arc::new(|_tid| {}), bg_opts);
         // Enough Interactive arrivals to push the background epoch past
         // the promotion threshold.
-        let hot_opts = SubmitOpts { class: LatencyClass::Interactive, ..Default::default() };
+        let hot_opts = SubmitOpts { class: LatencyClass::Interactive, assist: false, ..Default::default() };
         let hot: Vec<LoopHandle> =
             (0..PROMOTE_K + 3).map(|_| rt.submit_arc_with(1, Arc::new(|_tid| {}), hot_opts)).collect();
         open(&release);

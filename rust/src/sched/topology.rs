@@ -406,14 +406,16 @@ pub enum VictimPolicy {
     /// uniform code path otherwise.
     #[default]
     Topo,
-    /// Distance-*ranked* multi-tier bias: victims are drawn with
-    /// probability decaying per distance tier of the node-distance
-    /// matrix (nearest tier first, each farther tier reached with the
-    /// complement of [`LOCAL_BIAS_NUM`]`/`[`LOCAL_BIAS_DEN`]), with
-    /// the same starvation-freedom fallback as `Topo`. On single-node
-    /// or all-equidistant topologies the engines gate this off and it
-    /// is *behaviorally identical* to `Uniform` (byte-identical RNG
-    /// stream).
+    /// Distance-*ranked* multi-tier bias: victims are drawn by
+    /// walking the distance tiers of the node-distance matrix nearest
+    /// first, staying on each tier with a **magnitude-weighted**
+    /// probability derived from the SLIT values themselves
+    /// ([`ranked_stay_num`]`/`[`RANKED_STAY_DEN`] — a barely-farther
+    /// next tier splits the draw near-evenly, a much-farther one is
+    /// escaped to rarely), with the same starvation-freedom fallback
+    /// as `Topo`. On single-node or all-equidistant topologies the
+    /// engines gate this off and it is *behaviorally identical* to
+    /// `Uniform` (byte-identical RNG stream).
     Ranked,
 }
 
@@ -460,6 +462,27 @@ pub const LOCAL_BIAS_DEN: usize = 8;
 /// fully uniform selection until its next success: when the local
 /// node drains, cross-node stealing must not wait on the 1/8 tail.
 pub const REMOTE_FALLBACK_FAILS: u32 = 2;
+
+/// Denominator of the ranked tier walk's stay draw (see
+/// [`ranked_stay_num`]).
+pub const RANKED_STAY_DEN: usize = 64;
+
+/// Stay-weight of the ranked tier walk: on the tier at SLIT distance
+/// `cur`, with the next-nearest tier at distance `next`, the thief
+/// stays with probability `ranked_stay_num(cur, next) /`
+/// [`RANKED_STAY_DEN`]. The weight is the normalized relative
+/// magnitude `next / (cur + next)`, clamped to `[1/2, 7/8]`:
+/// near-equal tiers split the draw almost evenly (there is little
+/// locality to protect), a much-farther tier is escaped to rarely —
+/// but never less often than the fixed ladder's 1/8, so every tier
+/// keeps the same starvation-freedom escape mass as before.
+#[inline]
+pub fn ranked_stay_num(cur: u64, next: u64) -> usize {
+    // u128 intermediate: `next` may be the unknown-node tier at
+    // u64::MAX, where `cur + next` would overflow.
+    let num = (RANKED_STAY_DEN as u128 * next as u128) / (cur as u128 + next as u128);
+    (num as usize).clamp(RANKED_STAY_DEN / 2, RANKED_STAY_DEN - RANKED_STAY_DEN / 8)
+}
 
 /// The paper's uniform victim draw (§3.3): one `rng.below(p-1)` call,
 /// skipping the thief itself. This is THE uniform draw — the engines
@@ -565,23 +588,24 @@ impl VictimSelector {
     /// Distance-*ranked* pick (the [`VictimPolicy::Ranked`] rule):
     /// candidates are grouped into tiers by `node_dist(my_node,
     /// their_node)` and the thief walks the tiers in ascending
-    /// distance, staying on the current tier with probability
-    /// [`LOCAL_BIAS_NUM`]`/`[`LOCAL_BIAS_DEN`] — so tier `i` is
-    /// reached with probability `(1/8)^i` and the farthest tier
-    /// absorbs the remainder. Every tier is reachable on every
-    /// attempt, so no node can be starved; candidates whose node is
+    /// distance, staying on the current tier with the
+    /// **magnitude-weighted** probability [`ranked_stay_num`]` /`
+    /// [`RANKED_STAY_DEN`] derived from the normalized SLIT distances
+    /// of the current and next tiers — a barely-farther next tier
+    /// splits the draw near-evenly, a much-farther one is escaped to
+    /// with at most the old fixed ladder's 1/8 mass. Every tier is
+    /// reachable on every attempt (the stay probability is capped at
+    /// 7/8), so no node can be starved; candidates whose node is
     /// unknown sort into a last tier at distance `u64::MAX`.
     ///
     /// Degenerate cases — unknown own node, a single distance tier
     /// among the candidates (single-node and all-equidistant
     /// topologies), or the starvation fallback being active — use the
     /// exact uniform draw (one `rng.below(p-1)`), so those hosts
-    /// consume the byte-identical RNG stream as `Uniform` mode. On a
-    /// two-tier matrix this rule degenerates to [`VictimSelector::pick`]'s
-    /// 7/8-local two-tier bias. Like [`VictimSelector::pick`],
-    /// `node_of` is snapshotted once at entry so a concurrent node
-    /// publication cannot move a candidate between tiers mid-walk
-    /// (see [`VictimSelector::snapshot_nodes`]).
+    /// consume the byte-identical RNG stream as `Uniform` mode. Like
+    /// [`VictimSelector::pick`], `node_of` is snapshotted once at
+    /// entry so a concurrent node publication cannot move a candidate
+    /// between tiers mid-walk (see [`VictimSelector::snapshot_nodes`]).
     pub fn pick_ranked<F, D>(
         &mut self,
         tid: usize,
@@ -630,7 +654,11 @@ impl VictimSelector {
                     next = Some(d);
                 }
             }
-            if next.is_none() || rng.below(LOCAL_BIAS_DEN) < LOCAL_BIAS_NUM {
+            let stay = match next {
+                None => true,
+                Some(nd) => rng.below(RANKED_STAY_DEN) < ranked_stay_num(cur, nd),
+            };
+            if stay {
                 let mut k = rng.below(members);
                 for t in (0..p).filter(|&t| t != tid && dist_of(t) == cur) {
                     if k == 0 {
@@ -641,6 +669,18 @@ impl VictimSelector {
                 unreachable!("counted tier member must exist");
             }
             cur = next.expect("next tier exists when the stay-draw fails");
+        }
+    }
+
+    /// Rank an *assist* target the way steal victims are ranked: the
+    /// SLIT distance from the scanning worker's node to the epoch's
+    /// submission origin (smaller = recruited first). An unknown side
+    /// sorts last (`u64::MAX`) — with no distance information the
+    /// target is never preferred over a known-near one.
+    pub fn assist_tier(topo: &Topology, me: Option<usize>, origin: Option<usize>) -> u64 {
+        match (me, origin) {
+            (Some(m), Some(o)) => topo.distance(m, o),
+            _ => u64::MAX,
         }
     }
 
@@ -897,9 +937,11 @@ mod tests {
 
     #[test]
     fn ranked_pick_decays_per_tier() {
-        // 3 nodes × 2 cores, SLIT 10/20/40 from node 0: tier counts
-        // must decay roughly geometrically (7/8 tier0, 7/64 tier1,
-        // 1/64 tier2 — the last tier absorbs the remainder).
+        // 3 nodes × 2 cores, SLIT 10/20/40 from node 0. With the
+        // magnitude-weighted stay draw both hops weigh 42/64 (stay):
+        // tier0 ≈ 0.656, tier1 ≈ 0.344·0.656 ≈ 0.226, tier2 ≈ 0.118 —
+        // a ~3×/~2× geometric decay instead of the old fixed ladder's
+        // 8×, because these tiers are only moderately farther.
         let topo = Topology::parse_spec("0,0,1,1,2,2@10,20,40;20,10,40;40,40,10").unwrap();
         let p = 6;
         let mut sel = VictimSelector::new();
@@ -912,9 +954,42 @@ mod tests {
             assert_ne!(v, 0);
             tier_hits[topo.tier_of(0, topo.node_of(v))] += 1;
         }
-        assert!(tier_hits[0] > tier_hits[1] * 4, "tier0 must dominate tier1: {tier_hits:?}");
-        assert!(tier_hits[1] > tier_hits[2] * 3, "tier1 must dominate tier2: {tier_hits:?}");
+        assert!(tier_hits[0] > tier_hits[1] * 2, "tier0 must dominate tier1: {tier_hits:?}");
+        assert!(tier_hits[1] * 2 > tier_hits[2] * 3, "tier1 must dominate tier2: {tier_hits:?}");
         assert!(tier_hits[2] > 0, "the farthest tier must never starve: {tier_hits:?}");
+    }
+
+    #[test]
+    fn ranked_stay_weight_tracks_distance_magnitudes() {
+        // Near-equal tiers split the draw almost evenly...
+        assert_eq!(ranked_stay_num(20, 21), RANKED_STAY_DEN / 2);
+        assert_eq!(ranked_stay_num(10, 10), RANKED_STAY_DEN / 2);
+        // ...a moderately farther tier is kept with proportional mass...
+        assert_eq!(ranked_stay_num(10, 20), 42);
+        assert_eq!(ranked_stay_num(10, 21), 43);
+        // ...and a much-farther tier is capped at the old 7/8 ladder,
+        // preserving the 1/8 starvation-freedom escape mass — even for
+        // the unknown-node tier at u64::MAX (no overflow).
+        assert_eq!(ranked_stay_num(10, 80), RANKED_STAY_DEN - RANKED_STAY_DEN / 8);
+        assert_eq!(ranked_stay_num(10, u64::MAX), RANKED_STAY_DEN - RANKED_STAY_DEN / 8);
+        // Monotone in the gap: a farther next tier never lowers stay.
+        let mut prev = 0;
+        for next in 10..200 {
+            let n = ranked_stay_num(10, next);
+            assert!(n >= prev, "stay weight must not drop as the next tier recedes");
+            prev = n;
+        }
+    }
+
+    #[test]
+    fn assist_tier_ranks_by_origin_distance() {
+        let topo = Topology::parse_spec("2x1@10,21;21,10").unwrap();
+        assert_eq!(VictimSelector::assist_tier(&topo, Some(0), Some(0)), 10);
+        assert_eq!(VictimSelector::assist_tier(&topo, Some(0), Some(1)), 21);
+        assert!(VictimSelector::assist_tier(&topo, Some(0), Some(0)) < VictimSelector::assist_tier(&topo, Some(0), Some(1)));
+        // Unknown on either side sorts last.
+        assert_eq!(VictimSelector::assist_tier(&topo, None, Some(1)), u64::MAX);
+        assert_eq!(VictimSelector::assist_tier(&topo, Some(0), None), u64::MAX);
     }
 
     #[test]

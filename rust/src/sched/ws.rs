@@ -33,7 +33,7 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering::Relaxed, Ordering::Seq
 use super::deque::RangeDeque;
 use super::metrics::MetricsSink;
 use super::policy::{self, IchState};
-use super::runtime::{preempt_point, Executor};
+use super::runtime::{preempt_point, run_assistable, Executor};
 use super::topology::{self, Topology, VictimPolicy, VictimSelector};
 use crate::util::rng::Rng;
 use crate::util::sync::CachePadded;
@@ -149,15 +149,27 @@ struct Shared {
     /// topology with p > 2; Ranked additionally needs distance tiers).
     /// `Uniform` is the exact steal path the paper describes.
     bias: StealBias,
+    /// Scheduler width at submission (the p the caller asked for).
+    base_p: usize,
+    /// Current participant count: `base_p` members plus every assist
+    /// joiner that has entered. Divisor of the iCh μ once it diverges
+    /// from `base_p` (with assist off it never does, so the μ float
+    /// math stays byte-identical to the pre-assist engine).
+    participants: AtomicUsize,
+    /// One past the highest tid active so far — the victim-selection
+    /// width. Joiners bump it before their first steal, so members
+    /// steal back from joiner deques exactly like peer deques.
+    live: CachePadded<AtomicUsize>,
 }
 
 impl Shared {
-    fn new(n: usize, p: usize, d0: f64, bias: StealBias) -> Shared {
+    fn new(n: usize, p: usize, d0: f64, bias: StealBias, extra: usize) -> Shared {
         let blocks = policy::static_blocks(n, p);
         let mut deques: Vec<RangeDeque> = blocks.iter().map(|&(a, b)| RangeDeque::new(a..b)).collect();
         // static_blocks returns min(p, n) blocks; pad with empty queues
-        // so every thread owns one.
-        while deques.len() < p {
+        // so every member thread — and every potential assist joiner
+        // (tids p..p+extra) — owns one to re-home stolen ranges in.
+        while deques.len() < p + extra {
             deques.push(RangeDeque::new(0..0));
         }
         Shared {
@@ -166,11 +178,21 @@ impl Shared {
             total: n,
             inv_p: 1.0 / p as f64,
             // 0u64 is exactly 0.0f64's bit pattern, so fresh k reads 0.
-            ks: (0..p).map(|_| CachePadded::new(AtomicU64::new(0))).collect(),
-            ds: (0..p).map(|_| CachePadded::new(AtomicU64::new(d0.to_bits()))).collect(),
-            nodes: (0..p).map(|_| AtomicUsize::new(usize::MAX)).collect(),
+            ks: (0..p + extra).map(|_| CachePadded::new(AtomicU64::new(0))).collect(),
+            ds: (0..p + extra).map(|_| CachePadded::new(AtomicU64::new(d0.to_bits()))).collect(),
+            nodes: (0..p + extra).map(|_| AtomicUsize::new(usize::MAX)).collect(),
             bias,
+            base_p: p,
+            participants: AtomicUsize::new(p),
+            live: CachePadded::new(AtomicUsize::new(p)),
         }
+    }
+
+    /// A joiner entered: widen the victim range to cover its deque and
+    /// fold it into the μ divisor.
+    fn register_joiner(&self, tid: usize) {
+        self.participants.fetch_add(1, Relaxed);
+        self.live.fetch_max(tid + 1, Relaxed);
     }
 
     /// Running mean completed iterations per thread, μ = (n −
@@ -187,7 +209,14 @@ impl Shared {
     #[inline]
     fn mu(&self) -> f64 {
         let done = self.total - self.remaining.load(Relaxed).min(self.total);
-        done as f64 * self.inv_p
+        let q = self.participants.load(Relaxed);
+        if q == self.base_p {
+            // No joiners (the only state with assist off): exact
+            // pre-assist float expression.
+            done as f64 * self.inv_p
+        } else {
+            done as f64 / q as f64
+        }
     }
 }
 
@@ -260,13 +289,32 @@ fn run_engine(
     } else {
         StealBias::Uniform
     };
-    let shared = Shared::new(n, p, d0, bias);
+    // Work assisting (PR 6): size the shared state for the pool's
+    // potential late joiners up front — deque/k/d/node slots must
+    // exist before a joiner can register. `assist_ctx` is None with
+    // assist off (or off the pool), so `extra == 0` reproduces the
+    // pre-assist layout exactly.
+    let extra = exec.assist_ctx(p).map(|c| c.extra_slots()).unwrap_or(0);
+    let shared = Shared::new(n, p, d0, bias, extra);
     let chunk_policy = &chunk_policy;
     let shared = &shared;
 
-    exec.run(p, &move |tid| {
-        worker(tid, p, seed, shared, chunk_policy, body, sink);
-    });
+    run_assistable(
+        exec,
+        p,
+        &|| shared.remaining.load(SeqCst) != 0,
+        &move |tid| {
+            worker(tid, p, seed, shared, chunk_policy, body, sink);
+        },
+        &move |tid| {
+            // Late joiner (tid ≥ p): register its deque slot and μ
+            // share, then run the ordinary worker loop — it steals its
+            // first range like any drained peer.
+            shared.register_joiner(tid);
+            sink.note_assist();
+            worker(tid, p, seed, shared, chunk_policy, body, sink);
+        },
+    );
 
     debug_assert_eq!(shared.remaining.load(SeqCst), 0, "all iterations must execute");
 }
@@ -288,6 +336,10 @@ fn worker(
     let my_node = topology::current_node();
     shared.nodes[tid].store(my_node.unwrap_or(usize::MAX), Relaxed);
     let mut selector = VictimSelector::new();
+    // Steal counters live in the sink's `0..p` member slots and are
+    // only ever reported as sums, so an assist joiner (tid ≥ p) folds
+    // its steal traffic into a member slot; members use their own.
+    let stid = tid % p;
     // Hot-path counters are thread-local and flushed once on exit
     // (perf pass: avoids two shared RMWs per chunk).
     let mut local_chunks = 0u64;
@@ -337,7 +389,13 @@ fn worker(
 
         // ---- Local queue empty: steal (§3.3) -------------------------
         if shared.remaining.load(SeqCst) == 0 {
-            sink.add_bulk(tid, local_chunks, local_iters);
+            if tid < p {
+                sink.add_bulk(tid, local_chunks, local_iters);
+            } else {
+                // Assist joiner: its work lands in the global assist
+                // counters so claims + assists partition the totals.
+                sink.add_assist_bulk(local_chunks, local_iters);
+            }
             return;
         }
         if p == 1 {
@@ -348,6 +406,10 @@ fn worker(
         // Steal attempts are chunk boundaries too: an idle thief is
         // exactly the worker a higher-class epoch should take.
         preempt_point();
+        // Victim-selection width: members plus every joiner that has
+        // registered so far. With assist off this is always exactly p,
+        // so the victim draws consume the byte-identical RNG stream.
+        let w = shared.live.load(Relaxed).max(tid + 1);
         let node_of = |t: usize| {
             let x = shared.nodes[t].load(Relaxed);
             (x != usize::MAX).then_some(x)
@@ -360,7 +422,7 @@ fn worker(
                 // victim the probe already saw drained was a
                 // guaranteed failed steal plus mutex traffic on every
                 // retry of the backoff loop.
-                let probe = (0..p)
+                let probe = (0..w)
                     .filter(|&v| v != tid)
                     .map(|v| (v, shared.deques[v].remaining()))
                     .max_by_key(|&(_, rem)| rem)
@@ -372,7 +434,7 @@ fn worker(
             _ => match shared.bias {
                 StealBias::TwoTier => {
                     // Two-tier topology bias (see `sched::topology`).
-                    let (v, local) = selector.pick(tid, p, my_node, node_of, &mut rng);
+                    let (v, local) = selector.pick(tid, w, my_node, node_of, &mut rng);
                     (Some(v), local)
                 }
                 StealBias::Ranked => {
@@ -380,12 +442,12 @@ fn worker(
                     // distance matrix (see `sched::topology`).
                     let topo = Topology::detect();
                     let (v, local) =
-                        selector.pick_ranked(tid, p, my_node, node_of, |a, b| topo.distance(a, b), &mut rng);
+                        selector.pick_ranked(tid, w, my_node, node_of, |a, b| topo.distance(a, b), &mut rng);
                     (Some(v), local)
                 }
                 StealBias::Uniform => {
                     // Paper: uniform random victim.
-                    let v = topology::uniform_victim(tid, p, &mut rng);
+                    let v = topology::uniform_victim(tid, w, &mut rng);
                     (Some(v), my_node.is_some() && node_of(v) == my_node)
                 }
             },
@@ -398,7 +460,7 @@ fn worker(
                 // for the per-tier counters; unknown nodes land in the
                 // sink's dedicated unknown bucket.
                 let tier = my_node.and_then(|me| node_of(victim).map(|vn| Topology::detect().tier_of(me, vn)));
-                sink.add_steal_at(tid, true, was_local, tier);
+                sink.add_steal_at(stid, true, was_local, tier);
                 if let ChunkPolicy::Adaptive(prm) = chunk_policy {
                     // Listing 1 lines 6–7 (+ merge-rule ablations).
                     // Both fields round-trip through f64 bits: the
@@ -425,7 +487,7 @@ fn worker(
             }
             None => {
                 selector.record(false, was_local);
-                sink.add_steal_at(tid, false, was_local, None);
+                sink.add_steal_at(stid, false, was_local, None);
                 // Bounded exponential backoff (§3.3 refinement): the
                 // seed runtime issued a single pause hint and retried,
                 // hammering victims' locks when the loop drains. Spin
@@ -437,7 +499,7 @@ fn worker(
                     }
                 } else {
                     if steal_fails == STEAL_SPIN_FAILS + 1 {
-                        sink.add_backoff(tid);
+                        sink.add_backoff(stid);
                     }
                     std::thread::yield_now();
                 }
@@ -500,7 +562,7 @@ mod tests {
         // reached thieves truncated. Publish/read exactly as the
         // worker's owner loop and steal path do, and assert the
         // victim state a thief merges against is bit-exact.
-        let shared = Shared::new(8, 4, 4.0, StealBias::Uniform);
+        let shared = Shared::new(8, 4, 4.0, StealBias::Uniform, 0);
         let vic_state = IchState { k: 2.5, d: 3.25 };
         publish_f64(&shared.ks[1], vic_state.k);
         publish_f64(&shared.ds[1], vic_state.d);

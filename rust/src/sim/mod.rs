@@ -14,7 +14,7 @@ pub mod policies;
 
 pub use engine::{Acquire, LoopSpec, SimCtx, SimResult, SimSched};
 pub use machine::MachineSpec;
-pub use policies::{make_sim_policy, sim_dispatch_order, sim_dispatch_order_from, SimArrival};
+pub use policies::{make_assist_sim_policy, make_sim_policy, sim_dispatch_order, sim_dispatch_order_from, AssistSim, SimArrival};
 
 use crate::sched::Policy;
 

@@ -29,6 +29,81 @@ pub fn make_sim_policy(policy: &Policy, weights: &[f64], p: usize) -> Box<dyn Si
     }
 }
 
+/// Build the sim-side mirror of a work-assisted loop: `p` members run
+/// the policy from virtual time 0 and `arrive.len()` assist joiners
+/// enter at the given virtual times (simulate with
+/// `p + arrive.len()` threads). Mirrors the runtime's assist layer:
+/// a joiner that arrives after the loop has finished backs out
+/// without joining, tid-indexed policy state is padded so joiners own
+/// real deque/history slots, and non-assistable policies (`static`,
+/// `hss`) give joiners nothing — exactly like the real engines.
+pub fn make_assist_sim_policy(policy: &Policy, weights: &[f64], p: usize, arrive: &[f64]) -> Box<dyn SimSched> {
+    let n = weights.len();
+    let slots = p + arrive.len();
+    let inner: Box<dyn SimSched> = match policy {
+        Policy::Static => Box::new(ChunkListSim::local(policy::static_blocks(n, p), slots)),
+        Policy::Dynamic { chunk } => Box::new(CentralSim::dynamic(n, *chunk)),
+        Policy::Guided { chunk } => Box::new(CentralSim::guided(n, *chunk)),
+        Policy::Taskloop { num_tasks } => {
+            let t = if *num_tasks == 0 { p } else { *num_tasks };
+            Box::new(ChunkListSim::central_with_task_overhead(policy::taskloop_chunks(n, t)))
+        }
+        Policy::Factoring { alpha } => Box::new(ChunkListSim::central(policy::factoring_chunks(n, p, *alpha))),
+        Policy::Binlpt { max_chunks } => Box::new(BinlptSim::new(weights, *max_chunks, p).padded(slots)),
+        Policy::Stealing { chunk } => Box::new(WsSim::fixed(n, p, *chunk).padded(slots)),
+        Policy::Ich(prm) => Box::new(WsSim::adaptive(n, p, *prm).padded(slots)),
+        Policy::Awf => Box::new(AwfSim::new(n, slots)),
+        Policy::Hss => Box::new(ChunkListSim::local(crate::sched::related::weighted_blocks(weights, p), slots)),
+    };
+    Box::new(AssistSim::new(inner, p, arrive.to_vec()))
+}
+
+/// Work-assist wrapper: gates joiner tids (`>= base_p`) behind their
+/// virtual arrival time, then delegates to the wrapped policy. The
+/// join/finish race resolves exactly like the runtime's gate: a
+/// joiner observing the loop already complete returns `Done` without
+/// ever registering as an assist.
+pub struct AssistSim {
+    inner: Box<dyn SimSched>,
+    base_p: usize,
+    arrive: Vec<f64>,
+    joined: Vec<bool>,
+    /// Joiners that actually entered (the sim's `RunMetrics::assists`).
+    pub assists: u64,
+}
+
+impl AssistSim {
+    pub fn new(inner: Box<dyn SimSched>, base_p: usize, arrive: Vec<f64>) -> AssistSim {
+        let joined = vec![false; arrive.len()];
+        AssistSim { inner, base_p, arrive, joined, assists: 0 }
+    }
+}
+
+impl SimSched for AssistSim {
+    fn acquire(&mut self, tid: usize, now: f64, ctx: &mut SimCtx) -> Acquire {
+        if tid >= self.base_p {
+            let s = tid - self.base_p;
+            if ctx.executed >= ctx.n {
+                // Lost the finish race (or the loop ended before the
+                // arrival): back out without joining.
+                return Acquire::Done;
+            }
+            if now < self.arrive[s] {
+                return Acquire::Busy { until: self.arrive[s] };
+            }
+            if !self.joined[s] {
+                self.joined[s] = true;
+                self.assists += 1;
+            }
+        }
+        self.inner.acquire(tid, now, ctx)
+    }
+
+    fn on_complete(&mut self, tid: usize, lo: usize, hi: usize, now: f64, ctx: &mut SimCtx) {
+        self.inner.on_complete(tid, lo, hi, now, ctx)
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Central-queue policies (dynamic / guided)
 // ---------------------------------------------------------------------------
@@ -156,6 +231,15 @@ impl BinlptSim {
         let (chunks, assign) = policy::binlpt_partition(weights, max_chunks, p);
         let nchunks = chunks.len();
         BinlptSim { chunks, assign, claimed: vec![false; nchunks], own_pos: vec![0; p], scan: 0 }
+    }
+
+    /// Widen the tid-indexed state for assist joiners: joiner tids own
+    /// an empty LPT assignment, so they enter straight at phase 2 —
+    /// exactly like the runtime's BinLPT joiners.
+    fn padded(mut self, slots: usize) -> BinlptSim {
+        self.assign.resize(slots, Vec::new());
+        self.own_pos.resize(slots, 0);
+        self
     }
 }
 
@@ -298,6 +382,22 @@ impl WsSim {
             sockets: Vec::new(),
             victim,
         }
+    }
+
+    /// Widen the tid-indexed state for assist joiners: joiner tids own
+    /// empty deques (they steal their first range) and fresh adaptive
+    /// state at d₀ — mirroring the runtime's `Shared::new` extra slots.
+    fn padded(mut self, slots: usize) -> WsSim {
+        let d0 = self.states.first().map_or(policy::D_MIN, |s| s.d);
+        while self.deques.len() < slots {
+            self.deques.push((0, 0));
+        }
+        self.states.resize(slots, IchState { k: 0.0, d: d0 });
+        self.fails.resize(slots, 0);
+        while self.sel.len() < slots {
+            self.sel.push(VictimSelector::new());
+        }
+        self
     }
 
     fn remaining(&self, tid: usize) -> usize {
@@ -761,6 +861,72 @@ mod tests {
         let r2 = run_once();
         assert_eq!(r.time, r2.time, "ranked sim must stay deterministic");
         assert_eq!(r.steals_ok, r2.steals_ok);
+    }
+
+    #[test]
+    fn assist_sim_conserves_iterations_for_every_policy() {
+        // 4 members + 2 joiners arriving mid-loop: every policy must
+        // still execute each iteration exactly once (conservation), and
+        // the assistable ones must actually let the joiners work.
+        let weights: Vec<f64> = (0..600).map(|i| 1.0 + (i % 17) as f64 * 10.0).collect();
+        let spec = MachineSpec::default();
+        let ls = LoopSpec::new(weights.clone(), 0.0);
+        for pol in all_policies() {
+            let arrive = [50.0, 200.0];
+            let mut sched = make_assist_sim_policy(&pol, &ls.weights, 4, &arrive);
+            let r = simulate_loop(&spec, 4 + arrive.len(), &ls, 11, sched.as_mut());
+            assert_eq!(r.iters_per_thread.iter().sum::<u64>(), 600, "policy {}", pol.name());
+        }
+    }
+
+    #[test]
+    fn assist_sim_joiners_share_assistable_work() {
+        // Straggler-heavy central-queue loop: joiners arriving early
+        // must pick up a share of the iterations (nonzero joiner tids).
+        let weights = vec![100.0; 2000];
+        let spec = MachineSpec::default();
+        let ls = LoopSpec::new(weights, 0.0);
+        let arrive = [1.0, 1.0];
+        let mut sched = make_assist_sim_policy(&Policy::Dynamic { chunk: 4 }, &ls.weights, 2, &arrive);
+        let r = simulate_loop(&spec, 4, &ls, 3, sched.as_mut());
+        assert_eq!(r.iters_per_thread.iter().sum::<u64>(), 2000);
+        let joiner_iters: u64 = r.iters_per_thread[2..].iter().sum();
+        assert!(joiner_iters > 0, "early joiners must execute iterations: {r:?}");
+    }
+
+    #[test]
+    fn assist_sim_late_joiner_backs_out_without_joining() {
+        // Joiner arrival far beyond the loop's makespan: it must lose
+        // the finish race, execute nothing, and never count as an
+        // assist — the sim's mirror of the gate's closed CAS.
+        let weights = vec![10.0; 100];
+        let spec = MachineSpec::default();
+        let ls = LoopSpec::new(weights, 0.0);
+        let inner = make_sim_policy(&Policy::Dynamic { chunk: 4 }, &ls.weights, 2);
+        let mut sched = AssistSim::new(inner, 2, vec![1e18]);
+        let r = simulate_loop(&spec, 3, &ls, 5, &mut sched);
+        assert_eq!(r.iters_per_thread.iter().sum::<u64>(), 100);
+        assert_eq!(r.iters_per_thread[2], 0, "late joiner must not execute work");
+        assert_eq!(sched.assists, 0, "a backed-out joiner never registers");
+    }
+
+    #[test]
+    fn assist_sim_with_no_joiners_matches_base_policy() {
+        // Zero joiners: the wrapper must be a pass-through — identical
+        // trajectory (time, steals, per-thread iterations) to the bare
+        // policy. This is the sim side of the off-path differential.
+        let weights: Vec<f64> = (0..1400).map(|i| 1.0 + (i % 5) as f64 * 40.0).collect();
+        let spec = MachineSpec::default();
+        let ls = LoopSpec::new(weights, 0.0);
+        for pol in all_policies() {
+            let mut base = make_sim_policy(&pol, &ls.weights, 4);
+            let a = simulate_loop(&spec, 4, &ls, 21, base.as_mut());
+            let mut wrapped = make_assist_sim_policy(&pol, &ls.weights, 4, &[]);
+            let b = simulate_loop(&spec, 4, &ls, 21, wrapped.as_mut());
+            assert_eq!(a.time, b.time, "policy {}", pol.name());
+            assert_eq!(a.steals_ok, b.steals_ok, "policy {}", pol.name());
+            assert_eq!(a.iters_per_thread, b.iters_per_thread, "policy {}", pol.name());
+        }
     }
 
     #[test]

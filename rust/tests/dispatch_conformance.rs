@@ -67,7 +67,9 @@ fn hold_worker(rt: &Runtime) -> (ich::sched::LoopHandle, Arc<Gate>) {
             s2.open();
             r2.wait();
         }),
-        SubmitOpts::default(),
+        // assist off: these conformance traces prove pure dispatcher
+        // order, which a self-assisting join intentionally bypasses.
+        SubmitOpts { assist: false, ..Default::default() },
     );
     started.wait();
     (handle, release)
@@ -88,7 +90,7 @@ fn runtime_dispatch_order(rt: &Runtime, trace: &[(LatencyClass, Option<u64>)]) -
             rt.submit_arc_with(
                 1,
                 Arc::new(move |_tid| o.lock().unwrap().push(i)),
-                SubmitOpts { class, deadline, ..Default::default() },
+                SubmitOpts { class, deadline, assist: false, ..Default::default() },
             )
         })
         .collect();
@@ -195,7 +197,9 @@ fn preemption_at_chunk_granularity_preserves_exactly_once() {
     let bg_hits: Arc<Vec<AtomicU64>> = Arc::new((0..n_bg).map(|_| AtomicU64::new(0)).collect());
     let entered = Arc::new(AtomicUsize::new(0));
     let (e2, r2, bh) = (Arc::clone(&entered), Arc::clone(&release), Arc::clone(&bg_hits));
-    let bg_opts = ForOpts { threads: 2, pin: false, class: LatencyClass::Background, ..Default::default() };
+    // assist off on both loops: the test measures preemption through
+    // the worker's chunk-boundary hook, not main-thread self-assist.
+    let bg_opts = ForOpts { threads: 2, pin: false, class: LatencyClass::Background, assist: false, ..Default::default() };
     let bg = parallel_for_async_on(
         &rt,
         n_bg,
@@ -222,7 +226,7 @@ fn preemption_at_chunk_granularity_preserves_exactly_once() {
     let hot_hits: Arc<Vec<AtomicU64>> = Arc::new((0..n_hot).map(|_| AtomicU64::new(0)).collect());
     let min_depth = Arc::new(AtomicUsize::new(usize::MAX));
     let (hh, md) = (Arc::clone(&hot_hits), Arc::clone(&min_depth));
-    let hot_opts = ForOpts { threads: 2, pin: false, class: LatencyClass::Interactive, ..Default::default() };
+    let hot_opts = ForOpts { threads: 2, pin: false, class: LatencyClass::Interactive, assist: false, ..Default::default() };
     let hot = parallel_for_async_on(
         &rt,
         n_hot,

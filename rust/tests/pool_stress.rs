@@ -5,8 +5,10 @@
 //! and concurrent submitters must queue FIFO, without deadlock.
 
 use ich::sched::runtime::Runtime;
-use ich::sched::{parallel_for, ExecMode, ForOpts, IchParams, Policy};
+use ich::sched::{parallel_for, parallel_for_async_on, ExecMode, ForOpts, IchParams, Policy};
+use std::ops::Range;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering::SeqCst};
+use std::sync::Arc;
 
 /// Number of live pool workers (threads named `ich-worker-*`) in this
 /// process — immune to the unnamed scoped/test threads other tests in
@@ -161,6 +163,141 @@ fn spawn_mode_bypasses_the_pool() {
     for h in &hits {
         assert_eq!(h.load(SeqCst), 1);
     }
+}
+
+#[test]
+fn assist_stress_exactly_once_and_partition_under_join_finish_races() {
+    // Work-assisting stress: a private 4-worker pool serves narrow
+    // epochs, so surplus workers are idle at submit time and join
+    // mid-flight through the assist board. Randomized assistable
+    // policies and a straggler-heavy body maximize join/finish races —
+    // a scanner that loses the finish race must back out without
+    // touching `pending` — so every round must still cover each
+    // iteration exactly once, and the metrics partition (member iters
+    // + joiner iters == total) must hold.
+    let rt = Runtime::with_pinning(4, false);
+    let policies = [
+        Policy::Dynamic { chunk: 1 },
+        Policy::Guided { chunk: 1 },
+        Policy::Stealing { chunk: 4 },
+        Policy::Ich(IchParams::default()),
+        Policy::Binlpt { max_chunks: 48 },
+        Policy::Awf,
+    ];
+    let n = 300usize;
+    let w: Vec<f64> = (0..n).map(|i| if i % 97 == 0 { 50.0 } else { 1.0 }).collect();
+    let hits: Arc<Vec<AtomicU64>> = Arc::new((0..n).map(|_| AtomicU64::new(0)).collect());
+    let hits2 = Arc::clone(&hits);
+    let body: Arc<dyn Fn(Range<usize>) + Send + Sync> = Arc::new(move |r: Range<usize>| {
+        for i in r {
+            hits2[i].fetch_add(1, SeqCst);
+            // Sparse stragglers stretch the epoch so woken scanners
+            // find it still in flight (and some arrive after it ends).
+            let spin = if i % 97 == 0 { 4_000u64 } else { 20 };
+            let mut acc = 0u64;
+            for j in 0..spin {
+                acc = acc.wrapping_add(j ^ i as u64);
+            }
+            std::hint::black_box(acc);
+        }
+    });
+    let mut total_assists = 0u64;
+    for round in 0..120usize {
+        let policy = &policies[round % policies.len()];
+        for h in hits.iter() {
+            h.store(0, SeqCst);
+        }
+        let opts = ForOpts {
+            threads: 1 + round % 2, // narrow widths leave idle workers to recruit
+            pin: false,
+            seed: round as u64,
+            weights: Some(&w),
+            assist: true,
+            ..Default::default()
+        };
+        let m = parallel_for_async_on(&rt, n, policy, &opts, Arc::clone(&body)).join();
+        assert_eq!(m.total_iters, n as u64, "round {round} policy {}", policy.name());
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(SeqCst), 1, "round {round} policy {} iter {i}", policy.name());
+        }
+        let member: u64 = m.iters_per_thread.iter().sum();
+        assert_eq!(
+            member + m.assist_iters,
+            m.total_iters,
+            "round {round} policy {}: member/joiner iteration partition broken",
+            policy.name()
+        );
+        if m.assist_chunks > 0 {
+            assert!(m.assists > 0, "round {round}: joiner chunks without a recorded join");
+        }
+        total_assists += m.assists;
+    }
+    // 120 straggler rounds with idle workers on the board's wake path:
+    // if no joiner ever entered, the recruitment path is dead.
+    assert!(total_assists > 0, "no idle worker ever joined an epoch across 120 rounds");
+}
+
+#[test]
+fn nested_submission_inside_assisted_epoch_bypasses_assist() {
+    // A nested parallel_for from inside an assisted epoch must take
+    // the scoped-spawn fallback (mid-epoch guard) and must never
+    // publish to the assist board: even with assist requested, the
+    // inner run reports zero assists.
+    let outer = 6usize;
+    let inner = 64usize;
+    let cells: Vec<AtomicU64> = (0..outer * inner).map(|_| AtomicU64::new(0)).collect();
+    let opts = ForOpts { threads: 2, pin: false, assist: true, ..Default::default() };
+    let m = parallel_for(outer, &Policy::Dynamic { chunk: 1 }, &opts, &|r| {
+        for o in r {
+            let iopts = ForOpts { threads: 2, pin: false, assist: true, ..Default::default() };
+            let im = parallel_for(inner, &Policy::Ich(IchParams::default()), &iopts, &|ir| {
+                for i in ir {
+                    cells[o * inner + i].fetch_add(1, SeqCst);
+                }
+            });
+            assert_eq!(im.total_iters, inner as u64);
+            assert_eq!(im.assists, 0, "nested run must bypass the assist board");
+            assert_eq!(im.assist_chunks, 0, "nested run must bypass the assist board");
+        }
+    });
+    assert_eq!(m.total_iters, outer as u64);
+    for (i, c) in cells.iter().enumerate() {
+        assert_eq!(c.load(SeqCst), 1, "cell {i}");
+    }
+}
+
+#[test]
+fn single_submitter_blocking_latency_no_worse_with_assist() {
+    // Satellite regression guard: with assist on, a blocking submitter
+    // claims chunks of its own epoch instead of spinning in the join
+    // wait — single-submitter latency must not regress. Min-of-5 with
+    // generous 4x slack keeps the check meaningful but unflaky.
+    let n = 20_000usize;
+    let policy = Policy::Dynamic { chunk: 16 };
+    let body = |r: Range<usize>| {
+        let mut acc = 0u64;
+        for i in r {
+            for j in 0..24u64 {
+                acc = acc.wrapping_add(j ^ i as u64);
+            }
+        }
+        std::hint::black_box(acc);
+    };
+    let time = |assist: bool| {
+        let opts = ForOpts { threads: 2, pin: false, seed: 7, assist, ..Default::default() };
+        parallel_for(n, &policy, &opts, &body); // warm the pool + caches
+        let mut best = f64::INFINITY;
+        for _ in 0..5 {
+            let t0 = std::time::Instant::now();
+            let m = parallel_for(n, &policy, &opts, &body);
+            assert_eq!(m.total_iters, n as u64);
+            best = best.min(t0.elapsed().as_secs_f64());
+        }
+        best
+    };
+    let off = time(false);
+    let on = time(true);
+    assert!(on <= off * 4.0 + 0.01, "assist-on blocking latency regressed: {on:.6}s vs {off:.6}s off");
 }
 
 #[test]

@@ -58,6 +58,58 @@ fn prop_exactly_once_execution() {
 }
 
 #[test]
+fn prop_assist_exactly_once_and_partition_with_off_differential() {
+    // Work-assisting differential: for arbitrary (n, p, policy) the
+    // assist-on run must stay exactly-once with the member/joiner
+    // metrics partition intact (member iters + joiner iters == total),
+    // and the assist-off run of the same case must never touch the
+    // assist counters — the off path is the pre-assist runtime.
+    check("assist-on-off", 0xA5515, 40, |rng, _case| {
+        let n = small_size(rng, 0, 2_000);
+        let p = 1 + rng.below(4);
+        let policy = random_policy(rng);
+        let w = arbitrary_weights(rng, n);
+        let seed = rng.next_u64();
+        for assist in [true, false] {
+            let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+            let opts = ForOpts { threads: p, pin: false, seed, weights: Some(&w), assist, ..Default::default() };
+            let m = ich::parallel_for(n, &policy, &opts, &|r| {
+                for i in r {
+                    hits[i].fetch_add(1, SeqCst);
+                }
+            });
+            if m.total_iters != n as u64 {
+                return Err(format!("assist={assist} policy {}: metrics {} != n {}", policy.name(), m.total_iters, n));
+            }
+            for (i, h) in hits.iter().enumerate() {
+                let c = h.load(SeqCst);
+                if c != 1 {
+                    return Err(format!("assist={assist} policy {} p={p} n={n}: iteration {i} ran {c} times", policy.name()));
+                }
+            }
+            let member: u64 = m.iters_per_thread.iter().sum();
+            if member + m.assist_iters != m.total_iters {
+                return Err(format!(
+                    "assist={assist} policy {}: partition broken: {member} member + {} joiner != {} total",
+                    policy.name(),
+                    m.assist_iters,
+                    m.total_iters
+                ));
+            }
+            if !assist && (m.assists != 0 || m.assist_chunks != 0 || m.assist_iters != 0) {
+                return Err(format!(
+                    "policy {}: assist-off run recorded assist activity ({} joins, {} chunks)",
+                    policy.name(),
+                    m.assists,
+                    m.assist_chunks
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_sim_conserves_work() {
     let spec = MachineSpec::default();
     check("sim-conserves-work", 0x51A1, 60, |rng, _case| {

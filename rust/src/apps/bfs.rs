@@ -77,7 +77,7 @@ impl App for Bfs {
     fn run_real(&self, policy: &Policy, threads: usize, seed: u64) -> RealRun {
         let n = self.graph.num_vertices();
         let dist: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(u32::MAX)).collect();
-        dist[self.source].store(0, SeqCst);
+        dist[self.source].store(0, SeqCst); // order: SeqCst seed write before the parallel kernel
         let mut frontier: Vec<usize> = vec![self.source];
         let mut level = 0u32;
         let mut agg = RunMetrics::default();
@@ -93,17 +93,17 @@ impl App for Bfs {
                 for fi in r {
                     let v = fr[fi];
                     for &u in self.graph.neighbors(v) {
-                        let _ = dist[u as usize].compare_exchange(u32::MAX, level, SeqCst, SeqCst);
+                        let _ = dist[u as usize].compare_exchange(u32::MAX, level, SeqCst, SeqCst); // order: SeqCst claim; first writer sets the level
                     }
                 }
             });
             absorb(&mut agg, &m);
             // Build the next frontier (serial scan, as Rodinia does the
             // flag sweep between kernels).
-            frontier = (0..n).filter(|&v| dist[v].load(SeqCst) == level).collect();
+            frontier = (0..n).filter(|&v| dist[v].load(SeqCst) == level).collect(); // order: SeqCst sweep between kernels (workers joined)
         }
         let elapsed = start.elapsed().as_secs_f64();
-        let got: Vec<u32> = dist.iter().map(|d| d.load(SeqCst)).collect();
+        let got: Vec<u32> = dist.iter().map(|d| d.load(SeqCst)).collect(); // order: readback after the fork-join barrier
         let valid = got == self.reference;
         let checksum = got.iter().filter(|&&d| d != u32::MAX).map(|&d| d as f64).sum();
         RealRun { elapsed_s: elapsed, metrics: agg, checksum, valid }

@@ -168,12 +168,12 @@ impl App for Kmeans {
                 (0..self.n).map(|_| std::sync::atomic::AtomicU32::new(0)).collect();
             let m = parallel_for(self.n, policy, &opts, &|r| {
                 for i in r {
-                    assign_cells[i].store(self.nearest(i, cent_ref), std::sync::atomic::Ordering::Relaxed);
+                    assign_cells[i].store(self.nearest(i, cent_ref), std::sync::atomic::Ordering::Relaxed); // order: Relaxed — per-iteration slots are disjoint; the join publishes
                 }
             });
             bfs_absorb(&mut agg, &m);
             for i in 0..self.n {
-                assign[i] = assign_cells[i].load(std::sync::atomic::Ordering::Relaxed);
+                assign[i] = assign_cells[i].load(std::sync::atomic::Ordering::Relaxed); // order: Relaxed readback after the fork-join barrier
             }
             cent = self.update(&assign);
         }

@@ -132,11 +132,11 @@ impl App for LavaMd {
         let metrics = parallel_for(n, policy, &opts, &|r| {
             for b in r {
                 let f = self.box_force(b);
-                forces[b].store(f.to_bits(), std::sync::atomic::Ordering::Relaxed);
+                forces[b].store(f.to_bits(), std::sync::atomic::Ordering::Relaxed); // order: Relaxed — per-box slots are disjoint; the join publishes
             }
         });
         let elapsed = start.elapsed().as_secs_f64();
-        let got: Vec<f32> = forces.iter().map(|f| f32::from_bits(f.load(std::sync::atomic::Ordering::Relaxed))).collect();
+        let got: Vec<f32> = forces.iter().map(|f| f32::from_bits(f.load(std::sync::atomic::Ordering::Relaxed))).collect(); // order: Relaxed readback after the fork-join barrier
         let valid = got
             .iter()
             .zip(&self.reference)

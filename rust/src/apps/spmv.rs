@@ -61,13 +61,13 @@ impl App for Spmv {
             let m = parallel_for(n, policy, &opts, &|r| {
                 for row in r {
                     let v = self.a.spmv_row(row, &self.x);
-                    y[row].store(v.to_bits(), Relaxed);
+                    y[row].store(v.to_bits(), Relaxed); // order: Relaxed — per-row slots are disjoint; the join publishes
                 }
             });
             super::absorb_metrics(&mut agg, &m);
         }
         let elapsed = start.elapsed().as_secs_f64();
-        let got: Vec<f32> = y.iter().map(|v| f32::from_bits(v.load(Relaxed))).collect();
+        let got: Vec<f32> = y.iter().map(|v| f32::from_bits(v.load(Relaxed))).collect(); // order: Relaxed readback after the fork-join barrier
         let valid = got
             .iter()
             .zip(&self.reference)

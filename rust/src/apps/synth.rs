@@ -118,10 +118,10 @@ impl App for Synth {
                 std::hint::black_box(spin((weights[i] * scale) as u64));
                 local += 1;
             }
-            done.fetch_add(local, Relaxed);
+            done.fetch_add(local, Relaxed); // order: Relaxed tally; the join publishes
         });
         let elapsed = start.elapsed().as_secs_f64();
-        let executed = done.load(Relaxed);
+        let executed = done.load(Relaxed); // order: Relaxed readback after the fork-join barrier
         RealRun {
             elapsed_s: elapsed,
             metrics,

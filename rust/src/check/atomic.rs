@@ -1,0 +1,452 @@
+//! Shim atomic types: drop-in replacements for `std::sync::atomic`
+//! that route every operation through the checker when an exploration
+//! is active on the current thread, and fall back to the real
+//! primitive otherwise (so production code and plain unit tests see
+//! identical behavior — the shim *is* a real atomic then).
+//!
+//! Each shim value carries the real atomic plus a lazily-assigned
+//! model location id (assigned at first operation under a model, i.e.
+//! in decision-path order — deterministic under replay). Within a
+//! model, a load is a *schedule point with a value choice*: the
+//! explorer enumerates which message of the modification order the
+//! load reads, per the thread's view (see [`super::mem`]).
+//!
+//! Deliberate simplifications, documented here because the mutation
+//! self-tests rely on knowing them: `compare_exchange_weak` never
+//! fails spuriously (modeled as strong), and a CAS — success or
+//! failure — reads the newest message (RMW atomicity; a failed CAS is
+//! modeled as a coherent read-don't-write). Plain loads remain fully
+//! weak, which is where all the modeled protocols' stale-read bugs
+//! live.
+
+use std::sync::atomic::{AtomicUsize as RawUsize, Ordering};
+
+use super::exec::{ctx, Ctx, Ev, ExecHandle, Feas, CONTROLLER, PH_INVARIANT};
+
+/// Checker-side implementation shared by all widths: everything is a
+/// `u64` in the model.
+struct Cell {
+    loc: RawUsize, // 0 = unregistered, else model loc id + 1
+}
+
+impl Cell {
+    const fn new() -> Cell {
+        Cell { loc: RawUsize::new(0) }
+    }
+
+    fn model_load(&self, h: &ExecHandle, tid: usize, init: u64, ord: Ordering) -> u64 {
+        h.sched_op(tid, Feas::Free, |st, tid| {
+            let lid = st.ensure_loc(&self.loc, init);
+            let forced = ExecHandle::note_load(st, tid, lid);
+            ExecHandle::with_view(st, tid, |st, view| {
+                let cands = st.mem.candidates(lid, view, ord == Ordering::SeqCst, forced);
+                let idx = if cands.len() > 1 { st.path.decide(cands.len()) } else { 0 };
+                let (val, ts, latest) = st.mem.load(lid, cands[idx], ord, view); // order: model-memory op; `ord` feeds the view logic, not the hardware
+                st.push_event(tid, Ev::Load { tid, loc: lid, ord, val, ts, stale: !latest });
+                if !latest {
+                    ExecHandle::note_stale(st, tid);
+                }
+                val
+            })
+        })
+    }
+
+    fn model_store(&self, h: &ExecHandle, tid: usize, init: u64, val: u64, ord: Ordering) {
+        h.sched_op(tid, Feas::Free, |st, tid| {
+            let lid = st.ensure_loc(&self.loc, init);
+            ExecHandle::clear_last_load(st, tid);
+            ExecHandle::with_view(st, tid, |st, view| {
+                let ts = st.mem.store(lid, val, ord, view); // order: model-memory op; `ord` feeds the view logic, not the hardware
+                st.push_event(tid, Ev::Store { tid, loc: lid, ord, val, ts });
+            });
+        })
+    }
+
+    fn model_rmw(
+        &self,
+        h: &ExecHandle,
+        tid: usize,
+        init: u64,
+        op: &'static str,
+        ord: Ordering,
+        f: impl FnOnce(u64) -> u64,
+    ) -> u64 {
+        h.sched_op(tid, Feas::Free, |st, tid| {
+            let lid = st.ensure_loc(&self.loc, init);
+            ExecHandle::clear_last_load(st, tid);
+            ExecHandle::with_view(st, tid, |st, view| {
+                let mut newv = 0;
+                let (old, ts) = st.mem.rmw(
+                    lid,
+                    |o| {
+                        newv = f(o);
+                        newv
+                    },
+                    ord,
+                    view,
+                );
+                st.push_event(tid, Ev::Rmw { tid, loc: lid, ord, op, old, new: newv, ts });
+                old
+            })
+        })
+    }
+
+    fn model_cas(
+        &self,
+        h: &ExecHandle,
+        tid: usize,
+        init: u64,
+        current: u64,
+        new: u64,
+        success: Ordering,
+        failure: Ordering,
+    ) -> Result<u64, u64> {
+        h.sched_op(tid, Feas::Free, |st, tid| {
+            let lid = st.ensure_loc(&self.loc, init);
+            ExecHandle::clear_last_load(st, tid);
+            ExecHandle::with_view(st, tid, |st, view| {
+                let latest = st.mem.peek_latest(lid);
+                if latest == current {
+                    let (old, ts) = st.mem.rmw(lid, |_| new, success, view);
+                    st.push_event(tid, Ev::Rmw { tid, loc: lid, ord: success, op: "compare_exchange", old, new, ts });
+                    Ok(old)
+                } else {
+                    // Failed CAS = a coherent read of the newest
+                    // message with the failure ordering.
+                    let idx = st.mem.locs[lid].msgs.len() - 1;
+                    let (val, ts, _) = st.mem.load(lid, idx, failure, view);
+                    st.push_event(tid, Ev::Load { tid, loc: lid, ord: failure, val, ts, stale: false });
+                    Err(val)
+                }
+            })
+        })
+    }
+
+    /// Setup/finale-phase op (controller, immediate): full memory
+    /// semantics with the controller's view; loads read the newest
+    /// message; nothing is logged (only Run-phase ops form the trace).
+    fn immediate<R>(&self, h: &ExecHandle, init: u64, f: impl FnOnce(&mut super::exec::ExecState, usize) -> R) -> R {
+        h.immediate_op(|st| {
+            let lid = st.ensure_loc(&self.loc, init);
+            f(st, lid)
+        })
+    }
+}
+
+macro_rules! shim_atomic {
+    ($name:ident, $raw:ty, $prim:ty) => {
+        /// Checker-aware drop-in for the std atomic of the same name.
+        pub struct $name {
+            real: $raw,
+            cell: Cell,
+        }
+
+        impl $name {
+            pub const fn new(v: $prim) -> $name {
+                $name { real: <$raw>::new(v), cell: Cell::new() }
+            }
+
+            fn init(&self) -> u64 {
+                // order: the real atomic is the initial-value carrier
+                // under a model (never raced: models register before
+                // any concurrent step); full-strength everywhere else.
+                self.real.load(Ordering::SeqCst) as u64
+            }
+
+            pub fn load(&self, ord: Ordering) -> $prim {
+                match ctx() {
+                    Ctx::None => self.real.load(ord), // order: caller's ordering — pass-through outside a checker run
+                    Ctx::Controller(h) => {
+                        if h.phase.load(Ordering::Relaxed) == PH_INVARIANT { // order: Relaxed — phase is serialized by the controller lock
+                            // Peek mode: whole-state assertions read
+                            // the newest value with no side effects.
+                            h.immediate_op(|st| {
+                                let lid = st.ensure_loc(&self.cell.loc, self.init());
+                                st.mem.peek_latest(lid)
+                            }) as $prim
+                        } else {
+                            let init = self.init();
+                            self.cell.immediate(&h, init, |st, lid| {
+                                ExecHandle::with_view(st, CONTROLLER, |st, view| {
+                                    let idx = st.mem.locs[lid].msgs.len() - 1;
+                                    st.mem.load(lid, idx, ord, view).0 // order: model-memory op; `ord` feeds the view logic, not the hardware
+                                })
+                            }) as $prim
+                        }
+                    }
+                    Ctx::VThread(h, tid) => self.cell.model_load(&h, tid, self.init(), ord) as $prim,
+                }
+            }
+
+            pub fn store(&self, val: $prim, ord: Ordering) {
+                match ctx() {
+                    Ctx::None => self.real.store(val, ord), // order: caller's ordering — pass-through outside a checker run
+                    Ctx::Controller(h) => {
+                        assert!(
+                            h.phase.load(Ordering::Relaxed) != PH_INVARIANT, // order: Relaxed — phase is serialized by the controller lock
+                            "invariant closures must not write shim atomics"
+                        );
+                        let init = self.init();
+                        self.cell.immediate(&h, init, |st, lid| {
+                            ExecHandle::with_view(st, CONTROLLER, |st, view| {
+                                st.mem.store(lid, val as u64, ord, view); // order: model-memory op; `ord` feeds the view logic, not the hardware
+                            })
+                        })
+                    }
+                    Ctx::VThread(h, tid) => self.cell.model_store(&h, tid, self.init(), val as u64, ord),
+                }
+            }
+
+            pub fn swap(&self, val: $prim, ord: Ordering) -> $prim {
+                self.rmw("swap", ord, move |_| val, |r| r.swap(val, ord)) // order: caller's ordering — pass-through outside a checker run
+            }
+
+            pub fn fetch_add(&self, val: $prim, ord: Ordering) -> $prim {
+                self.rmw("fetch_add", ord, move |o| o.wrapping_add(val), |r| r.fetch_add(val, ord)) // order: caller's ordering — pass-through outside a checker run
+            }
+
+            pub fn fetch_sub(&self, val: $prim, ord: Ordering) -> $prim {
+                self.rmw("fetch_sub", ord, move |o| o.wrapping_sub(val), |r| r.fetch_sub(val, ord)) // order: caller's ordering — pass-through outside a checker run
+            }
+
+            pub fn fetch_or(&self, val: $prim, ord: Ordering) -> $prim {
+                self.rmw("fetch_or", ord, move |o| o | val, |r| r.fetch_or(val, ord)) // order: caller's ordering — pass-through outside a checker run
+            }
+
+            pub fn fetch_and(&self, val: $prim, ord: Ordering) -> $prim {
+                self.rmw("fetch_and", ord, move |o| o & val, |r| r.fetch_and(val, ord)) // order: caller's ordering — pass-through outside a checker run
+            }
+
+            pub fn compare_exchange(
+                &self,
+                current: $prim,
+                new: $prim,
+                success: Ordering,
+                failure: Ordering,
+            ) -> Result<$prim, $prim> {
+                match ctx() {
+                    Ctx::None => self.real.compare_exchange(current, new, success, failure),
+                    Ctx::Controller(h) => {
+                        assert!(
+                            h.phase.load(Ordering::Relaxed) != PH_INVARIANT, // order: Relaxed — phase is serialized by the controller lock
+                            "invariant closures must not write shim atomics"
+                        );
+                        let init = self.init();
+                        self.cell.immediate(&h, init, |st, lid| {
+                            let latest = st.mem.peek_latest(lid);
+                            ExecHandle::with_view(st, CONTROLLER, |st, view| {
+                                if latest == current as u64 {
+                                    let (old, _) = st.mem.rmw(lid, |_| new as u64, success, view);
+                                    Ok(old as $prim)
+                                } else {
+                                    let idx = st.mem.locs[lid].msgs.len() - 1;
+                                    Err(st.mem.load(lid, idx, failure, view).0 as $prim)
+                                }
+                            })
+                        })
+                    }
+                    Ctx::VThread(h, tid) => self
+                        .cell
+                        .model_cas(&h, tid, self.init(), current as u64, new as u64, success, failure)
+                        .map(|v| v as $prim)
+                        .map_err(|v| v as $prim),
+                }
+            }
+
+            /// Modeled as strong: the checker explores no spurious
+            /// failures (documented under-approximation).
+            pub fn compare_exchange_weak(
+                &self,
+                current: $prim,
+                new: $prim,
+                success: Ordering,
+                failure: Ordering,
+            ) -> Result<$prim, $prim> {
+                self.compare_exchange(current, new, success, failure)
+            }
+
+            fn rmw(
+                &self,
+                op: &'static str,
+                ord: Ordering,
+                f: impl FnOnce(u64) -> u64,
+                real: impl FnOnce(&$raw) -> $prim,
+            ) -> $prim {
+                match ctx() {
+                    Ctx::None => real(&self.real),
+                    Ctx::Controller(h) => {
+                        assert!(
+                            h.phase.load(Ordering::Relaxed) != PH_INVARIANT, // order: Relaxed — phase is serialized by the controller lock
+                            "invariant closures must not write shim atomics"
+                        );
+                        let init = self.init();
+                        self.cell.immediate(&h, init, |st, lid| {
+                            ExecHandle::with_view(st, CONTROLLER, |st, view| {
+                                st.mem.rmw(lid, f, ord, view).0
+                            })
+                        }) as $prim
+                    }
+                    Ctx::VThread(h, tid) => self.cell.model_rmw(&h, tid, self.init(), op, ord, f) as $prim,
+                }
+            }
+        }
+
+        impl std::fmt::Debug for $name {
+            fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+                f.debug_tuple(stringify!($name)).field(&self.load(Ordering::SeqCst)).finish() // order: SeqCst debug snapshot
+            }
+        }
+
+        impl Default for $name {
+            fn default() -> $name {
+                $name::new(Default::default())
+            }
+        }
+    };
+}
+
+shim_atomic!(AtomicU64, std::sync::atomic::AtomicU64, u64);
+shim_atomic!(AtomicUsize, std::sync::atomic::AtomicUsize, usize);
+
+/// Checker-aware drop-in for `std::sync::atomic::AtomicBool` (bools
+/// ride the same u64 machinery; 0 = false, 1 = true).
+pub struct AtomicBool {
+    real: std::sync::atomic::AtomicBool,
+    cell: Cell,
+}
+
+impl AtomicBool {
+    pub const fn new(v: bool) -> AtomicBool {
+        AtomicBool { real: std::sync::atomic::AtomicBool::new(v), cell: Cell::new() }
+    }
+
+    fn init(&self) -> u64 {
+        // order: initial-value carrier only; see the integer shims.
+        self.real.load(Ordering::SeqCst) as u64
+    }
+
+    pub fn load(&self, ord: Ordering) -> bool {
+        match ctx() {
+            Ctx::None => self.real.load(ord), // order: caller's ordering — pass-through outside a checker run
+            Ctx::Controller(h) => {
+                if h.phase.load(Ordering::Relaxed) == PH_INVARIANT { // order: Relaxed — phase is serialized by the controller lock
+                    h.immediate_op(|st| {
+                        let lid = st.ensure_loc(&self.cell.loc, self.init());
+                        st.mem.peek_latest(lid)
+                    }) != 0
+                } else {
+                    let init = self.init();
+                    self.cell.immediate(&h, init, |st, lid| {
+                        ExecHandle::with_view(st, CONTROLLER, |st, view| {
+                            let idx = st.mem.locs[lid].msgs.len() - 1;
+                            st.mem.load(lid, idx, ord, view).0 // order: model-memory op; `ord` feeds the view logic, not the hardware
+                        })
+                    }) != 0
+                }
+            }
+            Ctx::VThread(h, tid) => self.cell.model_load(&h, tid, self.init(), ord) != 0,
+        }
+    }
+
+    pub fn store(&self, val: bool, ord: Ordering) {
+        match ctx() {
+            Ctx::None => self.real.store(val, ord), // order: caller's ordering — pass-through outside a checker run
+            Ctx::Controller(h) => {
+                assert!(
+                    h.phase.load(Ordering::Relaxed) != PH_INVARIANT, // order: Relaxed — phase is serialized by the controller lock
+                    "invariant closures must not write shim atomics"
+                );
+                let init = self.init();
+                self.cell.immediate(&h, init, |st, lid| {
+                    ExecHandle::with_view(st, CONTROLLER, |st, view| {
+                        st.mem.store(lid, val as u64, ord, view); // order: model-memory op; `ord` feeds the view logic, not the hardware
+                    })
+                })
+            }
+            Ctx::VThread(h, tid) => self.cell.model_store(&h, tid, self.init(), val as u64, ord),
+        }
+    }
+
+    pub fn swap(&self, val: bool, ord: Ordering) -> bool {
+        match ctx() {
+            Ctx::None => self.real.swap(val, ord), // order: caller's ordering — pass-through outside a checker run
+            Ctx::Controller(h) => {
+                assert!(
+                    h.phase.load(Ordering::Relaxed) != PH_INVARIANT, // order: Relaxed — phase is serialized by the controller lock
+                    "invariant closures must not write shim atomics"
+                );
+                let init = self.init();
+                self.cell.immediate(&h, init, |st, lid| {
+                    ExecHandle::with_view(st, CONTROLLER, |st, view| {
+                        st.mem.rmw(lid, |_| val as u64, ord, view).0
+                    })
+                }) != 0
+            }
+            Ctx::VThread(h, tid) => self.cell.model_rmw(&h, tid, self.init(), "swap", ord, |_| val as u64) != 0,
+        }
+    }
+
+    pub fn compare_exchange(
+        &self,
+        current: bool,
+        new: bool,
+        success: Ordering,
+        failure: Ordering,
+    ) -> Result<bool, bool> {
+        match ctx() {
+            Ctx::None => self.real.compare_exchange(current, new, success, failure),
+            Ctx::Controller(_) | Ctx::VThread(..) => {
+                let h = match ctx() {
+                    Ctx::VThread(h, tid) => {
+                        return self
+                            .cell
+                            .model_cas(&h, tid, self.init(), current as u64, new as u64, success, failure)
+                            .map(|v| v != 0)
+                            .map_err(|v| v != 0);
+                    }
+                    Ctx::Controller(h) => h,
+                    Ctx::None => unreachable!(),
+                };
+                assert!(
+                    h.phase.load(Ordering::Relaxed) != PH_INVARIANT, // order: Relaxed — phase is serialized by the controller lock
+                    "invariant closures must not write shim atomics"
+                );
+                let init = self.init();
+                self.cell.immediate(&h, init, |st, lid| {
+                    let latest = st.mem.peek_latest(lid);
+                    ExecHandle::with_view(st, CONTROLLER, |st, view| {
+                        if latest == current as u64 {
+                            let (old, _) = st.mem.rmw(lid, |_| new as u64, success, view);
+                            Ok(old != 0)
+                        } else {
+                            let idx = st.mem.locs[lid].msgs.len() - 1;
+                            Err(st.mem.load(lid, idx, failure, view).0 != 0)
+                        }
+                    })
+                })
+            }
+        }
+    }
+
+    pub fn compare_exchange_weak(
+        &self,
+        current: bool,
+        new: bool,
+        success: Ordering,
+        failure: Ordering,
+    ) -> Result<bool, bool> {
+        self.compare_exchange(current, new, success, failure)
+    }
+}
+
+impl std::fmt::Debug for AtomicBool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_tuple("AtomicBool").field(&self.load(Ordering::SeqCst)).finish() // order: SeqCst debug snapshot
+    }
+}
+
+impl Default for AtomicBool {
+    fn default() -> AtomicBool {
+        AtomicBool::new(false)
+    }
+}

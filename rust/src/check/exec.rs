@@ -1,0 +1,1025 @@
+//! Execution engine: virtual threads, the serializing controller, and
+//! the DFS schedule explorer with iterative preemption bounding and
+//! state-hash pruning.
+//!
+//! Each *virtual thread* of a model runs on a real OS thread, but
+//! every shim operation (`check::atomic`, `check::sync`) is a
+//! **schedule point**: the thread announces the operation it wants to
+//! perform and blocks until the controller grants it one step. The
+//! controller therefore sees a stable global state at every decision,
+//! picks the next thread per the DFS decision path, and lets exactly
+//! one operation execute — interleavings are enumerated, not sampled.
+//!
+//! Two kinds of decision node make up a path: *thread* choices (which
+//! runnable thread steps next; switching away from a still-runnable
+//! thread costs one unit of the preemption budget) and *load* choices
+//! (which message of the location's modification order a weak load
+//! reads — see [`super::mem`]). Paths are explored depth-first with
+//! the SC-like option first (current thread keeps running; loads read
+//! the newest message), so counterexamples surface at the smallest
+//! preemption count that exhibits them.
+//!
+//! Fairness rules that keep exploration finite (documented in the
+//! `check` module docs): a spin hint ([`yield_hint`]) deschedules the
+//! spinner until some other thread performs a store/RMW, and a
+//! repeated load of an unchanged location converges to the newest
+//! message. A state where every unfinished thread is blocked or
+//! spinning is reported as a deadlock/livelock counterexample — this
+//! is exactly how a lost park/unpark wakeup shows up.
+
+use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU8, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use super::mem::{fnv, MemModel, View, FNV_SEED};
+use super::{CheckOpts, Scenario};
+
+/// Process-wide count of live explorations: the shims' fast path —
+/// zero means every shim op goes straight to the real primitive.
+// order: a plain monotone gate checked before a thread-local lookup;
+// no data is published through it.
+pub(crate) static ACTIVE_EXECS: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    /// (execution handle, virtual-thread id) of the current thread;
+    /// [`CONTROLLER`] marks the controller itself (setup / invariant /
+    /// finale phases).
+    static EXEC: std::cell::RefCell<Option<(Arc<ExecHandle>, usize)>> = const { std::cell::RefCell::new(None) };
+}
+
+pub(crate) const CONTROLLER: usize = usize::MAX;
+
+/// What the current thread is, checker-wise.
+pub(crate) enum Ctx {
+    /// No execution anywhere near: shims run the real primitive.
+    None,
+    /// The controller in a non-Run phase (setup/invariant/finale).
+    Controller(Arc<ExecHandle>),
+    /// Virtual thread `tid` of an execution.
+    VThread(Arc<ExecHandle>, usize),
+}
+
+pub(crate) fn ctx() -> Ctx {
+    // order: fast-path gate only (see ACTIVE_EXECS); the thread-local
+    // is the authority.
+    if ACTIVE_EXECS.load(Ordering::Relaxed) == 0 {
+        return Ctx::None;
+    }
+    EXEC.with(|e| match &*e.borrow() {
+        None => Ctx::None,
+        Some((h, tid)) if *tid == CONTROLLER => Ctx::Controller(Arc::clone(h)),
+        Some((h, tid)) => Ctx::VThread(Arc::clone(h), *tid),
+    })
+}
+
+/// Sentinel panic payload used to unwind virtual threads out of an
+/// abandoned execution (prune / counterexample elsewhere); the thread
+/// wrapper swallows it.
+pub(crate) struct PoisonAbort;
+
+/// Execution phase, mirrored atomically so shims can dispatch without
+/// taking the state lock.
+pub(crate) const PH_SETUP: u8 = 1;
+pub(crate) const PH_RUN: u8 = 2;
+pub(crate) const PH_INVARIANT: u8 = 3;
+pub(crate) const PH_FINALE: u8 = 4;
+
+/// Feasibility class of an announced operation: when may the
+/// controller grant it?
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum Feas {
+    /// Always grantable (atomic ops, unlock, unpark, yield…).
+    Free,
+    /// Needs the mutex at `addr` to be free.
+    Mutex(usize),
+    /// Needs this thread's park token.
+    ParkToken,
+    /// Needs a pending condvar wakeup for this thread.
+    CvWoken(usize),
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Status {
+    /// Executing user code (or not yet at its first schedule point).
+    Running,
+    /// Announced an op; waiting for a grant.
+    AtPoint,
+    Finished,
+    Panicked,
+}
+
+struct VThread {
+    status: Status,
+    pending: Option<Feas>,
+    /// This thread's memory view.
+    view: View,
+    /// Rolling FNV over every operation performed — the thread's
+    /// continuation proxy in the state hash (closures are
+    /// deterministic, so history determines future behavior).
+    hist: u64,
+    /// `Some(write_epoch)` after a spin hint: descheduled until some
+    /// thread stores/RMWs (bumping the epoch).
+    yielded_at: Option<u64>,
+    /// Bounded staleness: (loc, modification-order length) of the most
+    /// recent load; re-reading an unchanged location forces the
+    /// newest message.
+    last_load: Option<(usize, usize)>,
+    /// True when some load since the last spin decision returned a
+    /// non-newest message. A spinner in this state is NOT descheduled
+    /// by [`ExecHandle::yield_hint`]: its next load of the same
+    /// location is forced to the newest message (bounded staleness),
+    /// so re-running it makes progress even with no further stores —
+    /// descheduling it would report a false deadlock.
+    stale_read: bool,
+    panic_msg: String,
+}
+
+impl VThread {
+    fn new() -> VThread {
+        VThread {
+            status: Status::Running,
+            pending: None,
+            view: View::default(),
+            hist: FNV_SEED,
+            yielded_at: None,
+            last_load: None,
+            stale_read: false,
+            panic_msg: String::new(),
+        }
+    }
+}
+
+struct MutexSt {
+    owner: Option<usize>,
+    /// View released by the last unlock; joined by the next locker.
+    unlock_view: View,
+}
+
+#[derive(Default)]
+struct CvSt {
+    waiters: Vec<usize>,
+    woken: Vec<usize>,
+}
+
+/// One recorded operation (compact; rendered to text only for
+/// counterexample / replay logs).
+#[derive(Clone)]
+pub(crate) enum Ev {
+    Load { tid: usize, loc: usize, ord: Ordering, val: u64, ts: u64, stale: bool },
+    Store { tid: usize, loc: usize, ord: Ordering, val: u64, ts: u64 },
+    Rmw { tid: usize, loc: usize, ord: Ordering, op: &'static str, old: u64, new: u64, ts: u64 },
+    Lock { tid: usize, m: usize },
+    Unlock { tid: usize, m: usize },
+    Park { tid: usize },
+    Unpark { tid: usize, target: usize },
+    YieldHint { tid: usize },
+    CvRelease { tid: usize, cv: usize },
+    CvWake { tid: usize, cv: usize },
+    CvNotify { tid: usize, cv: usize, woke: usize },
+}
+
+fn ord_name(o: Ordering) -> &'static str {
+    match o {
+        Ordering::Relaxed => "Relaxed",
+        Ordering::Acquire => "Acquire",
+        Ordering::Release => "Release",
+        Ordering::AcqRel => "AcqRel",
+        Ordering::SeqCst => "SeqCst",
+        _ => "?",
+    }
+}
+
+impl Ev {
+    fn render(&self) -> String {
+        match *self {
+            Ev::Load { tid, loc, ord, val, ts, stale } => {
+                let s = if stale { " (stale)" } else { "" };
+                format!("T{tid} a{loc}.load({}) -> {val} @t{ts}{s}", ord_name(ord)) // order: event-log rendering, not an atomic op
+            }
+            Ev::Store { tid, loc, ord, val, ts } => {
+                format!("T{tid} a{loc}.store({}) = {val} @t{ts}", ord_name(ord)) // order: event-log rendering, not an atomic op
+            }
+            Ev::Rmw { tid, loc, ord, op, old, new, ts } => {
+                format!("T{tid} a{loc}.{op}({}) {old} -> {new} @t{ts}", ord_name(ord))
+            }
+            Ev::Lock { tid, m } => format!("T{tid} m{m}.lock"),
+            Ev::Unlock { tid, m } => format!("T{tid} m{m}.unlock"),
+            Ev::Park { tid } => format!("T{tid} park"),
+            Ev::Unpark { tid, target } => format!("T{tid} unpark(T{target})"),
+            Ev::YieldHint { tid } => format!("T{tid} spin-yield"),
+            Ev::CvRelease { tid, cv } => format!("T{tid} cv{cv}.wait (release)"),
+            Ev::CvWake { tid, cv } => format!("T{tid} cv{cv}.wait (woken)"),
+            Ev::CvNotify { tid, cv, woke } => format!("T{tid} cv{cv}.notify -> T{woke}"),
+        }
+    }
+
+    fn fold_hash(&self, h: &mut u64) {
+        // Loc ids are grant-order deterministic, so folding them keeps
+        // the hash replay-stable (see module docs on pruning).
+        match *self {
+            Ev::Load { loc, ord, val, ts, .. } => {
+                fnv(h, 1);
+                fnv(h, loc as u64);
+                fnv(h, ord as u64);
+                fnv(h, val);
+                fnv(h, ts);
+            }
+            Ev::Store { loc, ord, val, ts, .. } => {
+                fnv(h, 2);
+                fnv(h, loc as u64);
+                fnv(h, ord as u64);
+                fnv(h, val);
+                fnv(h, ts);
+            }
+            Ev::Rmw { loc, ord, old, new, ts, .. } => {
+                fnv(h, 3);
+                fnv(h, loc as u64);
+                fnv(h, ord as u64);
+                fnv(h, old);
+                fnv(h, new);
+                fnv(h, ts);
+            }
+            Ev::Lock { m, .. } => {
+                fnv(h, 4);
+                fnv(h, m as u64);
+            }
+            Ev::Unlock { m, .. } => {
+                fnv(h, 5);
+                fnv(h, m as u64);
+            }
+            Ev::Park { .. } => fnv(h, 6),
+            Ev::Unpark { target, .. } => {
+                fnv(h, 7);
+                fnv(h, target as u64);
+            }
+            Ev::YieldHint { .. } => fnv(h, 8),
+            Ev::CvRelease { cv, .. } => {
+                fnv(h, 9);
+                fnv(h, cv as u64);
+            }
+            Ev::CvWake { cv, .. } => {
+                fnv(h, 10);
+                fnv(h, cv as u64);
+            }
+            Ev::CvNotify { cv, woke, .. } => {
+                fnv(h, 11);
+                fnv(h, cv as u64);
+                fnv(h, woke as u64);
+            }
+        }
+    }
+}
+
+/// DFS decision path. `forced` is set in replay mode.
+#[derive(Default)]
+pub(crate) struct Path {
+    nodes: Vec<(usize, usize)>, // (chosen, arity)
+    cursor: usize,
+    forced: Option<Vec<usize>>,
+    pub(crate) diverged: bool,
+}
+
+impl Path {
+    pub(crate) fn decide(&mut self, arity: usize) -> usize {
+        debug_assert!(arity >= 1);
+        if let Some(f) = &self.forced {
+            let chosen = match f.get(self.cursor) {
+                Some(&c) if c < arity => c,
+                _ => {
+                    self.diverged = true;
+                    0
+                }
+            };
+            self.cursor += 1;
+            return chosen;
+        }
+        let chosen = if self.cursor < self.nodes.len() {
+            debug_assert_eq!(
+                self.nodes[self.cursor].1,
+                arity,
+                "non-deterministic model: arity changed on replayed prefix"
+            );
+            self.nodes[self.cursor].0
+        } else {
+            self.nodes.push((0, arity));
+            0
+        };
+        self.cursor += 1;
+        chosen
+    }
+
+    /// True while the cursor extends the path into fresh territory
+    /// (the only nodes where state-hash pruning may apply).
+    fn at_fresh_node(&self) -> bool {
+        self.forced.is_none() && self.cursor >= self.nodes.len()
+    }
+
+    /// Advance to the next unexplored sibling; false when the tree for
+    /// this preemption bound is exhausted.
+    fn backtrack(&mut self) -> bool {
+        while let Some(&(chosen, arity)) = self.nodes.last() {
+            if chosen + 1 < arity {
+                let i = self.nodes.len() - 1;
+                self.nodes[i].0 += 1;
+                return true;
+            }
+            self.nodes.pop();
+        }
+        false
+    }
+
+    fn reset_cursor(&mut self) {
+        self.cursor = 0;
+        self.diverged = false;
+    }
+
+    pub(crate) fn choices(&self) -> Vec<usize> {
+        self.nodes.iter().map(|&(c, _)| c).collect()
+    }
+}
+
+/// Mutable state of one execution (behind [`ExecHandle::m`]).
+pub(crate) struct ExecState {
+    pub(crate) mem: MemModel,
+    threads: Vec<VThread>,
+    mutexes: Vec<MutexSt>,
+    mutex_ids: HashMap<usize, usize>,
+    cvs: Vec<CvSt>,
+    cv_ids: HashMap<usize, usize>,
+    park_tokens: Vec<bool>,
+    /// Whose move it is (set by the controller, cleared by the granted
+    /// thread).
+    turn: Option<usize>,
+    last_run: Option<usize>,
+    pub(crate) path: Path,
+    events: Vec<Ev>,
+    poisoned: bool,
+    /// Controller-owned view for setup/finale-phase shim ops.
+    init_view: View,
+}
+
+impl ExecState {
+    fn new() -> ExecState {
+        ExecState {
+            mem: MemModel::default(),
+            threads: Vec::new(),
+            mutexes: Vec::new(),
+            mutex_ids: HashMap::new(),
+            cvs: Vec::new(),
+            cv_ids: HashMap::new(),
+            park_tokens: Vec::new(),
+            turn: None,
+            last_run: None,
+            path: Path::default(),
+            events: Vec::new(),
+            poisoned: false,
+            init_view: View::default(),
+        }
+    }
+
+    fn reset(&mut self, nthreads: usize) {
+        self.mem = MemModel::default();
+        self.threads = (0..nthreads).map(|_| VThread::new()).collect();
+        self.mutexes.clear();
+        self.mutex_ids.clear();
+        self.cvs.clear();
+        self.cv_ids.clear();
+        self.park_tokens = vec![false; nthreads];
+        self.turn = None;
+        self.last_run = None;
+        self.path.reset_cursor();
+        self.events.clear();
+        self.poisoned = false;
+        self.init_view = View::default();
+    }
+
+    /// Lazily register the atomic location behind `cell` (shim types
+    /// carry a `0 = unregistered, id+1` cell). Registration happens at
+    /// operation-execution time, which is decision-path order — i.e.
+    /// deterministic under replay, keeping ids, logs, and state hashes
+    /// replay-stable.
+    pub(crate) fn ensure_loc(&mut self, cell: &AtomicUsize, init: u64) -> usize {
+        // order: the cell is only ever touched under the execution
+        // lock (executions are serialized); atomicity just lets the
+        // shim struct stay `Sync` without interior-mutability UB.
+        let v = cell.load(Ordering::Relaxed);
+        if v != 0 {
+            return v - 1;
+        }
+        let id = self.mem.register(init);
+        cell.store(id + 1, Ordering::Relaxed); // order: Relaxed — registration runs under the controller lock
+        id
+    }
+
+    fn ensure_mutex(&mut self, addr: usize) -> usize {
+        if let Some(&i) = self.mutex_ids.get(&addr) {
+            return i;
+        }
+        self.mutexes.push(MutexSt { owner: None, unlock_view: View::default() });
+        let id = self.mutexes.len() - 1;
+        self.mutex_ids.insert(addr, id);
+        id
+    }
+
+    fn ensure_cv(&mut self, addr: usize) -> usize {
+        if let Some(&i) = self.cv_ids.get(&addr) {
+            return i;
+        }
+        self.cvs.push(CvSt::default());
+        let id = self.cvs.len() - 1;
+        self.cv_ids.insert(addr, id);
+        id
+    }
+
+    /// True when no model-level mutex is held (invariant closures use
+    /// this to skip assertions that only hold outside critical
+    /// sections).
+    pub(crate) fn locks_all_free(&self) -> bool {
+        self.mutexes.iter().all(|m| m.owner.is_none())
+    }
+
+    pub(crate) fn push_event(&mut self, tid: usize, ev: Ev) {
+        if tid != CONTROLLER {
+            ev.fold_hash(&mut self.threads[tid].hist);
+        }
+        self.events.push(ev);
+    }
+
+    fn feasible(&self, tid: usize, f: Feas) -> bool {
+        match f {
+            Feas::Free => true,
+            Feas::Mutex(addr) => match self.mutex_ids.get(&addr) {
+                Some(&m) => self.mutexes[m].owner.is_none(),
+                None => true,
+            },
+            Feas::ParkToken => self.park_tokens[tid],
+            Feas::CvWoken(addr) => match self.cv_ids.get(&addr) {
+                Some(&cv) => self.cvs[cv].woken.contains(&tid),
+                None => false,
+            },
+        }
+    }
+
+    /// Runnable = announced, feasible, and not spin-descheduled.
+    fn runnable(&self, tid: usize) -> bool {
+        let t = &self.threads[tid];
+        if t.status != Status::AtPoint {
+            return false;
+        }
+        if let Some(e) = t.yielded_at {
+            if e == self.mem.write_epoch {
+                return false; // spinning; nothing changed since
+            }
+        }
+        t.pending.map(|f| self.feasible(tid, f)).unwrap_or(false)
+    }
+
+    fn state_hash(&self) -> u64 {
+        let mut h = FNV_SEED;
+        self.mem.fold_hash(&mut h);
+        for t in &self.threads {
+            fnv(&mut h, t.status as u64);
+            fnv(&mut h, t.hist);
+            t.view.fold_hash(&mut h);
+            fnv(&mut h, matches!(t.yielded_at, Some(e) if e == self.mem.write_epoch) as u64);
+            // Staleness bookkeeping steers future load candidate sets
+            // and spin runnability — states differing here must not be
+            // conflated by the prune map.
+            let (ll, lv) = t.last_load.map(|(l, v)| (l as u64 + 1, v as u64)).unwrap_or((0, 0));
+            fnv(&mut h, ll);
+            fnv(&mut h, lv);
+            fnv(&mut h, t.stale_read as u64);
+        }
+        for m in &self.mutexes {
+            fnv(&mut h, m.owner.map(|o| o as u64 + 1).unwrap_or(0));
+            m.unlock_view.fold_hash(&mut h);
+        }
+        for &p in &self.park_tokens {
+            fnv(&mut h, p as u64);
+        }
+        for cv in &self.cvs {
+            for &w in &cv.waiters {
+                fnv(&mut h, w as u64 + 1);
+            }
+            fnv(&mut h, 0xc0);
+            for &w in &cv.woken {
+                fnv(&mut h, w as u64 + 1);
+            }
+            fnv(&mut h, 0xc1);
+        }
+        h
+    }
+
+    fn render_log(&self) -> String {
+        let mut s = String::new();
+        for e in &self.events {
+            s.push_str(&e.render());
+            s.push('\n');
+        }
+        s
+    }
+
+    fn stuck_description(&self) -> String {
+        let mut parts = Vec::new();
+        for (i, t) in self.threads.iter().enumerate() {
+            if t.status == Status::Finished {
+                continue;
+            }
+            let why = if matches!(t.yielded_at, Some(e) if e == self.mem.write_epoch) {
+                "spinning (no store can ever satisfy its wait)".to_string()
+            } else {
+                match t.pending {
+                    Some(Feas::Mutex(addr)) => match self.mutex_ids.get(&addr) {
+                        Some(&m) => format!("blocked on m{m} (held by T{:?})", self.mutexes[m].owner),
+                        None => "blocked on an unregistered mutex".to_string(),
+                    },
+                    Some(Feas::ParkToken) => "parked with no unpark token".to_string(),
+                    Some(Feas::CvWoken(_)) => "waiting on a condvar nobody will notify".to_string(),
+                    _ => "not runnable".to_string(),
+                }
+            };
+            parts.push(format!("T{i} {why}"));
+        }
+        parts.join("; ")
+    }
+}
+
+/// Shared handle between the controller and its virtual threads.
+pub(crate) struct ExecHandle {
+    m: Mutex<ExecState>,
+    cv: Condvar,
+    /// Phase mirror so shims dispatch without the state lock.
+    // order: written only under the state lock; readers only need the
+    // value, not any associated data.
+    pub(crate) phase: AtomicU8,
+}
+
+impl ExecHandle {
+    fn new() -> Arc<ExecHandle> {
+        Arc::new(ExecHandle { m: Mutex::new(ExecState::new()), cv: Condvar::new(), phase: AtomicU8::new(PH_SETUP) })
+    }
+
+    /// Virtual-thread side: announce an operation of feasibility class
+    /// `feas`, block until granted, then execute `f` on the state.
+    /// This is THE schedule point — every shim op funnels through it.
+    pub(crate) fn sched_op<R>(&self, tid: usize, feas: Feas, f: impl FnOnce(&mut ExecState, usize) -> R) -> R {
+        if std::thread::panicking() {
+            // Unwinding (assertion counterexample or poison teardown):
+            // run the effect immediately, no schedule point — a guard
+            // Drop must never announce/block here (double panic or a
+            // controller wedge would follow).
+            let mut st = self.m.lock().unwrap();
+            return f(&mut st, tid);
+        }
+        let mut st = self.m.lock().unwrap();
+        if st.poisoned {
+            drop(st);
+            std::panic::panic_any(PoisonAbort);
+        }
+        st.threads[tid].pending = Some(feas);
+        st.threads[tid].status = Status::AtPoint;
+        self.cv.notify_all();
+        while st.turn != Some(tid) {
+            if st.poisoned {
+                drop(st);
+                std::panic::panic_any(PoisonAbort);
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+        st.turn = None;
+        st.threads[tid].status = Status::Running;
+        st.threads[tid].pending = None;
+        let r = f(&mut st, tid);
+        self.cv.notify_all();
+        r
+    }
+
+    /// Controller-phase shim op (setup / finale): executes immediately
+    /// with the controller's own view; loads read the newest message.
+    pub(crate) fn immediate_op<R>(&self, f: impl FnOnce(&mut ExecState) -> R) -> R {
+        let mut st = self.m.lock().unwrap();
+        f(&mut st)
+    }
+
+    /// Split-borrow helper: take a thread's view out, run, put back.
+    pub(crate) fn with_view<R>(st: &mut ExecState, tid: usize, f: impl FnOnce(&mut ExecState, &mut View) -> R) -> R {
+        if tid == CONTROLLER {
+            let mut v = std::mem::take(&mut st.init_view);
+            let r = f(st, &mut v);
+            st.init_view = v;
+            r
+        } else {
+            let mut v = std::mem::take(&mut st.threads[tid].view);
+            let r = f(st, &mut v);
+            st.threads[tid].view = v;
+            r
+        }
+    }
+
+    pub(crate) fn note_load(st: &mut ExecState, tid: usize, loc: usize) -> bool {
+        // Bounded staleness: re-reading an unchanged location after
+        // already reading it converges to the newest message, so wait
+        // loops terminate (module docs).
+        let len = st.mem.locs[loc].msgs.len();
+        let forced = tid != CONTROLLER && matches!(st.threads[tid].last_load, Some((l, v)) if l == loc && v == len);
+        if tid != CONTROLLER {
+            st.threads[tid].last_load = Some((loc, len));
+        }
+        forced
+    }
+
+    pub(crate) fn clear_last_load(st: &mut ExecState, tid: usize) {
+        if tid != CONTROLLER {
+            st.threads[tid].last_load = None;
+        }
+    }
+
+    /// Record that `tid`'s load returned a non-newest message (keeps a
+    /// subsequent spin hint from descheduling it; see
+    /// [`VThread::stale_read`]).
+    pub(crate) fn note_stale(st: &mut ExecState, tid: usize) {
+        if tid != CONTROLLER {
+            st.threads[tid].stale_read = true;
+        }
+    }
+
+    // ----- mutex / condvar / park protocol (used by check::sync) ----
+
+    pub(crate) fn mutex_lock(&self, tid: usize, addr: usize) {
+        self.sched_op(tid, Feas::Mutex(addr), |st, tid| {
+            let m = st.ensure_mutex(addr);
+            assert!(st.mutexes[m].owner.is_none(), "checker bug: granted a held mutex");
+            st.mutexes[m].owner = Some(tid);
+            let uv = st.mutexes[m].unlock_view.clone();
+            st.threads[tid].view.join(&uv);
+            st.push_event(tid, Ev::Lock { tid, m });
+        });
+    }
+
+    pub(crate) fn mutex_unlock(&self, tid: usize, addr: usize) {
+        self.sched_op(tid, Feas::Free, |st, tid| {
+            let m = st.ensure_mutex(addr);
+            debug_assert_eq!(st.mutexes[m].owner, Some(tid), "unlock by non-owner");
+            st.mutexes[m].owner = None;
+            st.mutexes[m].unlock_view = st.threads[tid].view.clone();
+            st.push_event(tid, Ev::Unlock { tid, m });
+        });
+    }
+
+    pub(crate) fn cv_wait(&self, tid: usize, cv_addr: usize, mutex_addr: usize) {
+        // Phase 1: atomically release the mutex and join the waiters.
+        self.sched_op(tid, Feas::Free, |st, tid| {
+            let cv = st.ensure_cv(cv_addr);
+            let m = st.ensure_mutex(mutex_addr);
+            debug_assert_eq!(st.mutexes[m].owner, Some(tid));
+            st.mutexes[m].owner = None;
+            st.mutexes[m].unlock_view = st.threads[tid].view.clone();
+            st.cvs[cv].waiters.push(tid);
+            st.push_event(tid, Ev::CvRelease { tid, cv });
+        });
+        // Phase 2: block until a notify moves us to `woken`.
+        self.sched_op(tid, Feas::CvWoken(cv_addr), |st, tid| {
+            let cv = st.ensure_cv(cv_addr);
+            st.cvs[cv].woken.retain(|&t| t != tid);
+            st.push_event(tid, Ev::CvWake { tid, cv });
+        });
+        // Phase 3: reacquire the mutex.
+        self.mutex_lock(tid, mutex_addr);
+    }
+
+    pub(crate) fn cv_notify(&self, tid: usize, cv_addr: usize, all: bool) {
+        self.sched_op(tid, Feas::Free, |st, tid| {
+            let cv = st.ensure_cv(cv_addr);
+            loop {
+                if st.cvs[cv].waiters.is_empty() {
+                    break;
+                }
+                let w = st.cvs[cv].waiters.remove(0);
+                st.cvs[cv].woken.push(w);
+                st.push_event(tid, Ev::CvNotify { tid, cv, woke: w });
+                if !all {
+                    break;
+                }
+            }
+        });
+    }
+
+    pub(crate) fn park(&self, tid: usize) {
+        self.sched_op(tid, Feas::ParkToken, |st, tid| {
+            st.park_tokens[tid] = false;
+            st.push_event(tid, Ev::Park { tid });
+        });
+    }
+
+    pub(crate) fn unpark(&self, tid: usize, target: usize) {
+        self.sched_op(tid, Feas::Free, |st, tid| {
+            st.park_tokens[target] = true;
+            st.push_event(tid, Ev::Unpark { tid, target });
+        });
+    }
+
+    /// Spin hint: deschedule the caller until any store/RMW happens —
+    /// unless its spin condition was evaluated from a stale read, in
+    /// which case it stays runnable (the re-read is forced to the
+    /// newest message, so the loop converges without new stores).
+    pub(crate) fn yield_hint(&self, tid: usize) {
+        self.sched_op(tid, Feas::Free, |st, tid| {
+            if st.threads[tid].stale_read {
+                st.threads[tid].stale_read = false;
+            } else {
+                st.threads[tid].yielded_at = Some(st.mem.write_epoch);
+            }
+            st.push_event(tid, Ev::YieldHint { tid });
+        });
+    }
+}
+
+/// Why one execution ended.
+pub(crate) enum Outcome {
+    Completed,
+    Pruned,
+    Failed { message: String, log: String },
+}
+
+/// Drives one complete execution of `scenario` under the decision
+/// path in `handle`'s state. Assumes `st.path` is positioned (cursor
+/// 0) and state freshly reset by the caller.
+fn run_execution(
+    handle: &Arc<ExecHandle>,
+    scenario: Scenario,
+    budget: u32,
+    seen: Option<&mut HashMap<u64, u32>>,
+    max_steps: usize,
+) -> Outcome {
+    let Scenario { threads, invariant, finale } = scenario;
+    let n = threads.len();
+    handle.m.lock().unwrap().reset(n);
+    handle.phase.store(PH_RUN, Ordering::Relaxed); // order: Relaxed — phase is serialized by the controller lock
+    let mut budget_left = budget;
+    let mut seen = seen;
+
+    // Spawn the virtual threads on real OS threads.
+    let joins: Vec<_> = threads
+        .into_iter()
+        .enumerate()
+        .map(|(tid, f)| {
+            let h = Arc::clone(handle);
+            std::thread::spawn(move || {
+                EXEC.with(|e| *e.borrow_mut() = Some((Arc::clone(&h), tid)));
+                let r = catch_unwind(AssertUnwindSafe(f));
+                let mut st = h.m.lock().unwrap();
+                match r {
+                    Ok(()) => st.threads[tid].status = Status::Finished,
+                    Err(p) if p.is::<PoisonAbort>() => st.threads[tid].status = Status::Finished,
+                    Err(p) => {
+                        st.threads[tid].panic_msg = panic_message(&p);
+                        st.threads[tid].status = Status::Panicked;
+                    }
+                }
+                h.cv.notify_all();
+                EXEC.with(|e| *e.borrow_mut() = None);
+            })
+        })
+        .collect();
+
+    let fail = |handle: &Arc<ExecHandle>, message: String| -> Outcome {
+        let mut st = handle.m.lock().unwrap();
+        let log = format!("{}== {message}\n", st.render_log());
+        st.poisoned = true;
+        handle.cv.notify_all();
+        Outcome::Failed { message, log }
+    };
+
+    let mut steps = 0usize;
+    let outcome = loop {
+        // Wait for a stable state: nobody Running.
+        let mut st = handle.m.lock().unwrap();
+        while st.threads.iter().any(|t| t.status == Status::Running) {
+            st = handle.cv.wait(st).unwrap();
+        }
+        if let Some((i, t)) = st.threads.iter().enumerate().find(|(_, t)| t.status == Status::Panicked) {
+            let msg = format!("T{i} panicked: {}", t.panic_msg);
+            drop(st);
+            break fail(handle, msg);
+        }
+        if st.path.diverged {
+            drop(st);
+            break fail(handle, "replay diverged: seed does not match this model/build".to_string());
+        }
+
+        // Whole-state invariant between steps (release the state lock
+        // so the invariant's shim reads can re-take it in peek mode).
+        if let Some(inv) = &invariant {
+            handle.phase.store(PH_INVARIANT, Ordering::Relaxed); // order: Relaxed — phase is serialized by the controller lock
+            drop(st);
+            let r = catch_unwind(AssertUnwindSafe(|| inv()));
+            handle.phase.store(PH_RUN, Ordering::Relaxed); // order: Relaxed — phase is serialized by the controller lock
+            if let Err(p) = r {
+                break fail(handle, format!("invariant violated: {}", panic_message(&p)));
+            }
+            st = handle.m.lock().unwrap();
+        }
+
+        let mut cands: Vec<usize> = (0..st.threads.len()).filter(|&i| st.runnable(i)).collect();
+        if cands.is_empty() {
+            if st.threads.iter().all(|t| t.status == Status::Finished) {
+                handle.phase.store(PH_FINALE, Ordering::Relaxed); // order: Relaxed — phase is serialized by the controller lock
+                drop(st);
+                if let Some(fin) = finale {
+                    if let Err(p) = catch_unwind(AssertUnwindSafe(fin)) {
+                        break fail(handle, format!("finale assertion failed: {}", panic_message(&p)));
+                    }
+                }
+                break Outcome::Completed;
+            }
+            let msg = format!("deadlock: {}", st.stuck_description());
+            drop(st);
+            break fail(handle, msg);
+        }
+
+        steps += 1;
+        if steps > max_steps {
+            drop(st);
+            break fail(handle, format!("step limit ({max_steps}) exceeded — livelock or model too large"));
+        }
+
+        // Current-thread-first ordering: index 0 continues the last
+        // running thread (no preemption), so the DFS default is the
+        // SC-like sequential schedule.
+        let cur = st.last_run.filter(|c| cands.contains(c));
+        if let Some(c) = cur {
+            cands.retain(|&t| t != c);
+            cands.insert(0, c);
+        }
+
+        // Sound state-hash pruning, fresh nodes only: a state already
+        // explored with at least this much preemption budget left has
+        // an identical (or larger) continuation tree.
+        if st.path.at_fresh_node() {
+            if let Some(seen) = seen.as_deref_mut() {
+                let h = {
+                    let mut h = st.state_hash();
+                    fnv(&mut h, 0x9e);
+                    h
+                };
+                match seen.get(&h) {
+                    Some(&b) if b >= budget_left => {
+                        st.poisoned = true;
+                        handle.cv.notify_all();
+                        drop(st);
+                        break Outcome::Pruned;
+                    }
+                    _ => {
+                        seen.insert(h, budget_left);
+                    }
+                }
+            }
+        }
+
+        let arity = if budget_left == 0 && cur.is_some() { 1 } else { cands.len() };
+        let idx = st.path.decide(arity);
+        let chosen = cands[idx];
+        if cur.is_some() && chosen != cur.unwrap() {
+            budget_left -= 1;
+        }
+        st.last_run = Some(chosen);
+        st.turn = Some(chosen);
+        handle.cv.notify_all();
+        // Loop re-entry waits until the granted thread leaves Running.
+        drop(st);
+    };
+
+    for j in joins {
+        let _ = j.join();
+    }
+    outcome
+}
+
+fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&'static str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic payload>".to_string()
+    }
+}
+
+/// Guard installing the controller identity + active-exec count.
+struct ControllerGuard {
+    handle: Arc<ExecHandle>,
+}
+
+impl ControllerGuard {
+    fn new(handle: &Arc<ExecHandle>) -> ControllerGuard {
+        ACTIVE_EXECS.fetch_add(1, Ordering::Relaxed); // order: Relaxed liveness counter
+        EXEC.with(|e| *e.borrow_mut() = Some((Arc::clone(handle), CONTROLLER)));
+        ControllerGuard { handle: Arc::clone(handle) }
+    }
+}
+
+impl Drop for ControllerGuard {
+    fn drop(&mut self) {
+        let _ = &self.handle;
+        EXEC.with(|e| *e.borrow_mut() = None);
+        ACTIVE_EXECS.fetch_sub(1, Ordering::Relaxed); // order: Relaxed liveness counter
+    }
+}
+
+/// Exploration result (see [`super::Stats`] / [`super::Counterexample`]
+/// for the public shapes).
+pub(crate) struct ExploreResult {
+    pub(crate) schedules: usize,
+    pub(crate) pruned: usize,
+    pub(crate) complete: bool,
+    pub(crate) failure: Option<(String, String, Vec<usize>)>, // (message, log, choices)
+}
+
+/// DFS over all schedules of `setup`'s scenario, iterating the
+/// preemption bound 0..=`opts.preemption_bound`.
+pub(crate) fn explore_impl(opts: &CheckOpts, mut setup: impl FnMut() -> Scenario) -> ExploreResult {
+    let handle = ExecHandle::new();
+    let _guard = ControllerGuard::new(&handle);
+    let mut seen: HashMap<u64, u32> = HashMap::new();
+    let mut schedules = 0usize;
+    let mut pruned = 0usize;
+
+    for bound in 0..=opts.preemption_bound {
+        handle.m.lock().unwrap().path = Path::default();
+        loop {
+            if schedules >= opts.max_schedules {
+                return ExploreResult { schedules, pruned, complete: false, failure: None };
+            }
+            handle.phase.store(PH_SETUP, Ordering::Relaxed); // order: Relaxed — phase is serialized by the controller lock
+            let scenario = {
+                // Setup runs with shims in immediate mode: locations
+                // register with their initial values, single-threaded.
+                handle.m.lock().unwrap().reset(0);
+                setup()
+            };
+            assert!(
+                (1..=4).contains(&scenario.threads.len()),
+                "checker scenarios take 1..=4 virtual threads, got {}",
+                scenario.threads.len()
+            );
+            // Preserve the path across the reset done in run_execution
+            // (reset clears state but must keep DFS position).
+            let path = std::mem::take(&mut handle.m.lock().unwrap().path);
+            let nthreads = scenario.threads.len();
+            {
+                let mut st = handle.m.lock().unwrap();
+                st.reset(nthreads);
+                st.path = path;
+            }
+            let outcome = run_execution(&handle, scenario, bound, Some(&mut seen), opts.max_steps);
+            schedules += 1;
+            match outcome {
+                Outcome::Completed => {}
+                Outcome::Pruned => pruned += 1,
+                Outcome::Failed { message, log } => {
+                    let choices = handle.m.lock().unwrap().path.choices();
+                    return ExploreResult { schedules, pruned, complete: false, failure: Some((message, log, choices)) };
+                }
+            }
+            let mut st = handle.m.lock().unwrap();
+            if !st.path.backtrack() {
+                break;
+            }
+            st.path.reset_cursor();
+        }
+    }
+    ExploreResult { schedules, pruned, complete: true, failure: None }
+}
+
+/// Replay one schedule (the forced choice list) and return its log —
+/// identical, byte for byte, to the log of the exploration that
+/// produced the seed.
+pub(crate) fn replay_impl(
+    opts: &CheckOpts,
+    choices: Vec<usize>,
+    mut setup: impl FnMut() -> Scenario,
+) -> (String, Option<String>) {
+    let handle = ExecHandle::new();
+    let _guard = ControllerGuard::new(&handle);
+    handle.phase.store(PH_SETUP, Ordering::Relaxed); // order: Relaxed — phase is serialized by the controller lock
+    {
+        handle.m.lock().unwrap().reset(0);
+    }
+    let scenario = setup();
+    let nthreads = scenario.threads.len();
+    {
+        let mut st = handle.m.lock().unwrap();
+        st.reset(nthreads);
+        st.path = Path { forced: Some(choices), ..Path::default() };
+    }
+    let outcome = run_execution(&handle, scenario, u32::MAX, None, opts.max_steps);
+    match outcome {
+        Outcome::Completed => {
+            let log = handle.m.lock().unwrap().render_log();
+            (log, None)
+        }
+        Outcome::Pruned => unreachable!("replay never prunes"),
+        Outcome::Failed { message, log } => (log, Some(message)),
+    }
+}

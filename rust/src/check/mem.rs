@@ -1,0 +1,239 @@
+//! Operational weak-memory model for the checker: a view-based
+//! store-buffer abstraction in which `Relaxed`/`Acquire`/`Release`
+//! visibility is *observably* weaker than `SeqCst`.
+//!
+//! Every atomic location keeps its full modification order as a list
+//! of timestamped messages; every virtual thread carries a **view** —
+//! the per-location timestamp floor below which it can no longer read.
+//! A store appends a message; a load *chooses* among the messages at
+//! or above the thread's floor (the scheduler enumerates that choice,
+//! so a stale read is a real branch of the exploration, not a logging
+//! artifact). Ordering strength maps onto view transfer:
+//!
+//! - `Relaxed` stores carry an empty view; `Relaxed` loads advance
+//!   only the loaded location's floor (coherence), never the rest.
+//! - `Release` stores embed the writer's whole view into the message;
+//!   an `Acquire` load that reads the message joins it into the
+//!   reader's view — the classic message-passing edge.
+//! - RMWs always read the **latest** message (atomicity) and append
+//!   immediately after it; a releasing RMW also carries forward the
+//!   view of the message it replaced, preserving release sequences
+//!   (`fetch_sub(Release)` chains through an intervening
+//!   `fetch_or(AcqRel)`).
+//! - `SeqCst` ops additionally synchronize through one global SC
+//!   view: an SC store joins into it, an SC load joins from it first.
+//!   This forbids the store-buffering litmus outcome (both SC readers
+//!   seeing zero) that `Acquire`/`Release` still allows — the
+//!   observable gap between the two strengths.
+//!
+//! The model is an *under*-approximation of C11 in two deliberate
+//! ways (documented in `check::` module docs): modification order is
+//! append order, and a repeated load of an unchanged location
+//! converges to the latest message (bounded staleness) so that wait
+//! loops terminate. Both keep exploration finite without hiding the
+//! stale-read behaviors the mutation self-tests must observe.
+
+use std::sync::atomic::Ordering;
+
+/// Per-location timestamp floors, indexed by location id. Missing
+/// entries are 0 (the initial message is always visible).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub(crate) struct View(Vec<u64>);
+
+impl View {
+    pub(crate) fn get(&self, loc: usize) -> u64 {
+        self.0.get(loc).copied().unwrap_or(0)
+    }
+
+    pub(crate) fn set_max(&mut self, loc: usize, ts: u64) {
+        if self.0.len() <= loc {
+            self.0.resize(loc + 1, 0);
+        }
+        self.0[loc] = self.0[loc].max(ts);
+    }
+
+    /// Pointwise maximum (the lattice join of two views).
+    pub(crate) fn join(&mut self, other: &View) {
+        if self.0.len() < other.0.len() {
+            self.0.resize(other.0.len(), 0);
+        }
+        for (l, &ts) in other.0.iter().enumerate() {
+            if ts > self.0[l] {
+                self.0[l] = ts;
+            }
+        }
+    }
+
+    pub(crate) fn fold_hash(&self, h: &mut u64) {
+        for &ts in &self.0 {
+            fnv(h, ts);
+        }
+        fnv(h, 0x5eed);
+    }
+}
+
+/// One entry of a location's modification order.
+#[derive(Clone, Debug)]
+pub(crate) struct Msg {
+    pub(crate) ts: u64,
+    pub(crate) val: u64,
+    /// View transferred to acquiring readers (empty for `Relaxed`
+    /// stores; the writer's view for `Release`/`SeqCst`).
+    pub(crate) view: View,
+}
+
+/// An atomic location: name, modification order, timestamp counter.
+pub(crate) struct Loc {
+    pub(crate) msgs: Vec<Msg>,
+    pub(crate) next_ts: u64,
+}
+
+impl Loc {
+    fn new(init: u64) -> Loc {
+        Loc { msgs: vec![Msg { ts: 0, val: init, view: View::default() }], next_ts: 1 }
+    }
+
+    pub(crate) fn latest(&self) -> &Msg {
+        self.msgs.last().expect("a location always has its initial message")
+    }
+}
+
+fn acquires(ord: Ordering) -> bool {
+    matches!(ord, Ordering::Acquire | Ordering::AcqRel | Ordering::SeqCst)
+}
+
+fn releases(ord: Ordering) -> bool {
+    matches!(ord, Ordering::Release | Ordering::AcqRel | Ordering::SeqCst)
+}
+
+/// Shared-memory state of one execution: every registered location
+/// plus the global SC view.
+#[derive(Default)]
+pub(crate) struct MemModel {
+    pub(crate) locs: Vec<Loc>,
+    sc: View,
+    /// Bumped on every store/RMW; spin-yield fairness keys off it.
+    pub(crate) write_epoch: u64,
+}
+
+impl MemModel {
+    /// Register a new location holding `init`; returns its id.
+    pub(crate) fn register(&mut self, init: u64) -> usize {
+        self.locs.push(Loc::new(init));
+        self.locs.len() - 1
+    }
+
+    /// The messages a thread with view `cur` may legally read from
+    /// `loc`, newest first (index 0 = the SC-like default branch).
+    /// With `forced_latest` (bounded staleness — the thread re-reads
+    /// an unchanged location) only the newest is offered.
+    pub(crate) fn candidates(&self, loc: usize, cur: &View, sc_load: bool, forced_latest: bool) -> Vec<usize> {
+        let l = &self.locs[loc];
+        if forced_latest {
+            return vec![l.msgs.len() - 1];
+        }
+        let mut floor = cur.get(loc);
+        if sc_load {
+            floor = floor.max(self.sc.get(loc));
+        }
+        let mut out: Vec<usize> = (0..l.msgs.len()).filter(|&i| l.msgs[i].ts >= floor).collect();
+        out.reverse();
+        out
+    }
+
+    /// Perform a load that reads message index `idx` (a candidate from
+    /// [`MemModel::candidates`]); updates `cur` per `ord`. Returns
+    /// `(value, ts, was_latest)`.
+    pub(crate) fn load(&mut self, loc: usize, idx: usize, ord: Ordering, cur: &mut View) -> (u64, u64, bool) {
+        if ord == Ordering::SeqCst {
+            cur.join(&self.sc);
+        }
+        let latest = idx + 1 == self.locs[loc].msgs.len();
+        let m = &self.locs[loc].msgs[idx];
+        let (val, ts) = (m.val, m.ts);
+        if acquires(ord) {
+            let v = m.view.clone();
+            cur.join(&v);
+        }
+        cur.set_max(loc, ts);
+        (val, ts, latest)
+    }
+
+    /// Append a store of `val`; returns its timestamp.
+    pub(crate) fn store(&mut self, loc: usize, val: u64, ord: Ordering, cur: &mut View) -> u64 {
+        if ord == Ordering::SeqCst {
+            cur.join(&self.sc);
+        }
+        let ts = self.locs[loc].next_ts;
+        self.locs[loc].next_ts += 1;
+        cur.set_max(loc, ts);
+        let mut view = if releases(ord) { cur.clone() } else { View::default() };
+        view.set_max(loc, ts);
+        if ord == Ordering::SeqCst {
+            self.sc.join(&view);
+        }
+        self.locs[loc].msgs.push(Msg { ts, val, view });
+        self.write_epoch += 1;
+        ts
+    }
+
+    /// Read-modify-write: reads the **latest** message, appends
+    /// `f(old)` right after it. Returns `(old, new_ts)`.
+    pub(crate) fn rmw(&mut self, loc: usize, f: impl FnOnce(u64) -> u64, ord: Ordering, cur: &mut View) -> (u64, u64) {
+        if ord == Ordering::SeqCst {
+            cur.join(&self.sc);
+        }
+        let (old, prev_view) = {
+            let m = self.locs[loc].latest();
+            (m.val, m.view.clone())
+        };
+        if acquires(ord) {
+            cur.join(&prev_view);
+        }
+        let ts = self.locs[loc].next_ts;
+        self.locs[loc].next_ts += 1;
+        cur.set_max(loc, ts);
+        // Release-sequence carry: the new message keeps the replaced
+        // message's view even when this RMW itself is not releasing.
+        let mut view = prev_view;
+        if releases(ord) {
+            view.join(cur);
+        }
+        view.set_max(loc, ts);
+        if ord == Ordering::SeqCst {
+            self.sc.join(&view);
+        }
+        self.locs[loc].msgs.push(Msg { ts, val: f(old), view });
+        self.write_epoch += 1;
+        (old, ts)
+    }
+
+    /// Invariant-mode peek: the globally newest value, no view or log
+    /// effects (controller-side whole-state assertions).
+    pub(crate) fn peek_latest(&self, loc: usize) -> u64 {
+        self.locs[loc].latest().val
+    }
+
+    pub(crate) fn fold_hash(&self, h: &mut u64) {
+        for l in &self.locs {
+            for m in &l.msgs {
+                fnv(h, m.ts);
+                fnv(h, m.val);
+                m.view.fold_hash(h);
+            }
+            fnv(h, 0x10c);
+        }
+        self.sc.fold_hash(h);
+    }
+}
+
+/// One FNV-1a folding step (the checker's only hash; no external
+/// hasher crates in the offline build).
+pub(crate) fn fnv(h: &mut u64, x: u64) {
+    for b in x.to_le_bytes() {
+        *h ^= b as u64;
+        *h = h.wrapping_mul(0x100000001b3);
+    }
+}
+
+pub(crate) const FNV_SEED: u64 = 0xcbf29ce484222325;

@@ -1,0 +1,794 @@
+//! The scheduler core's lock-free protocols, ported onto the checker
+//! shim and explored exhaustively — plus mutation twins that prove the
+//! checker *catches* each protocol's historical bug class.
+//!
+//! Four protocols ride the **real** production types (no parallel
+//! logic copy — `util::sync::shim` swaps their atomics for the
+//! checker's under `cfg(test)` / `--features check`):
+//!
+//! 1. [`deque_the`] — `sched::deque::RangeDeque` owner `take` racing
+//!    `steal_half`, including the PR 3 THE clamp. Invariant: `begin`
+//!    never overshoots the deque's maximum-ever `end`; finale: every
+//!    iteration claimed exactly once or still queued.
+//! 2. [`dispatch_mask`] — `sched::dispatch::DispatchQueue` push/claim
+//!    under the pool lock with the runtime's Relaxed `class_mask`
+//!    mirror: the mirror may only be published *inside* the lock.
+//! 3. [`parked_wake`] — the runtime's parked-flag publish → re-check →
+//!    park handshake vs `enqueue`'s push → swap → unpark (lost-wakeup
+//!    freedom; a lost wakeup presents as a checker deadlock).
+//! 4. [`assist_gate`] — `sched::assist::ActivityRecord` `try_enter` /
+//!    `leave` vs `close_and_drain`: losers back out untouched, joiner
+//!    work is exactly-once, and the Release(leave) → Acquire(drain)
+//!    edge publishes joiner writes to the publisher.
+//!
+//! [`mu_merge`] additionally models the PR 6 follow-up: assist joiners
+//! fold into the μ divisor (`ws::Shared::register_joiner`), pinning
+//! the merged estimate the simulator fix must agree with.
+//!
+//! The mutation twins ([`MutDeque`], [`MutGate`], and the `bool`/
+//! `Ordering` knobs on the scenario builders) re-introduce each bug —
+//! clamp removed, orderings relaxed, mask published outside the lock,
+//! re-check dropped, CLOSED guard removed — and the self-tests in this
+//! file demand a counterexample within the default bounds, then replay
+//! its seed through the `ICH_CHECK_REPLAY` entry point and require a
+//! byte-identical event log. The happens-before edges asserted here
+//! are catalogued in `sched/MEMORY_MODEL.md`.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use super::atomic::{AtomicBool, AtomicUsize};
+use super::{all_locks_free, sync, Ghost, Scenario};
+use super::{AcqRel, Acquire, Relaxed, Release, SeqCst};
+use crate::sched::assist::{ActivityRecord, Assistable};
+use crate::sched::deque::RangeDeque;
+use crate::sched::dispatch::{DispatchQueue, LatencyClass};
+
+// ---------------------------------------------------------------------------
+// Protocol 1: THE deque (owner take vs steal_half, PR 3 clamp)
+// ---------------------------------------------------------------------------
+
+/// Iteration accounting shared by the deque models: claimed ranges are
+/// pairwise disjoint, and claimed ∪ residual covers `0..n` exactly.
+fn deque_accounting(n: usize, claimed: &[(usize, usize, &'static str)], residual: (usize, usize)) {
+    let mut seen = vec![false; n];
+    for &(s, e, who) in claimed {
+        for i in s..e {
+            assert!(i < n, "{who} claimed out-of-range iteration {i}");
+            assert!(!seen[i], "iteration {i} claimed twice (second by {who}) — exactly-once violated");
+            seen[i] = true;
+        }
+    }
+    let (b, e) = residual;
+    for i in b..e.min(n) {
+        assert!(!seen[i], "iteration {i} both claimed and still queued");
+        seen[i] = true;
+    }
+    for (i, s) in seen.iter().enumerate() {
+        assert!(*s, "iteration {i} lost — neither claimed nor still queued");
+    }
+}
+
+/// The real [`RangeDeque`]: one owner issuing two tail `take(3)` calls
+/// (the second engages the THE clamp) against one thief's
+/// `steal_half`. All orderings are the production `SeqCst`.
+pub fn deque_the() -> Scenario {
+    const N: usize = 4;
+    let q = Arc::new(RangeDeque::new(0..N));
+    let claimed = Ghost::new(Vec::<(usize, usize, &'static str)>::new());
+    let inv_q = q.clone();
+    let fin_q = q.clone();
+    let fin_claimed = claimed.clone();
+    Scenario::new()
+        .thread({
+            let (q, claimed) = (q.clone(), claimed.clone());
+            move || {
+                for _ in 0..2 {
+                    if let Some(r) = q.take(3) {
+                        claimed.with(|c| c.push((r.start, r.end, "owner")));
+                    }
+                }
+            }
+        })
+        .thread({
+            let (q, claimed) = (q.clone(), claimed.clone());
+            move || {
+                if let Some(r) = q.steal_half() {
+                    claimed.with(|c| c.push((r.start, r.end, "thief")));
+                }
+            }
+        })
+        .invariant(move || {
+            // take→clamp edge: the optimistic claim is bounded by an
+            // observed end, and end never exceeds its initial value —
+            // so begin ≤ N at every step, lock held or not. (The
+            // unclamped seed code stored begin = b + chunk and broke
+            // this on any tail take.)
+            let (b, _e) = inv_q.raw();
+            assert!(b <= N, "THE clamp violated: begin {b} overshot the maximum end {N}");
+            let _ = all_locks_free();
+        })
+        .finale(move || {
+            let (b, e) = fin_q.raw();
+            deque_accounting(N, &fin_claimed.get(), (b, e));
+        })
+}
+
+/// Faithful miniature of [`RangeDeque`]'s index protocol with two
+/// injectable mutations for the checker's self-tests: `clamp: false`
+/// removes the PR 3 THE clamp (`nb = b + chunk` unbounded), and `ord`
+/// weakens every atomic from the production `SeqCst`.
+pub struct MutDeque {
+    begin: AtomicUsize,
+    end: AtomicUsize,
+    lock: sync::Mutex<()>,
+    clamp: bool,
+    ord: Ordering,
+}
+
+impl MutDeque {
+    pub fn new(n: usize, clamp: bool, ord: Ordering) -> MutDeque {
+        MutDeque { begin: AtomicUsize::new(0), end: AtomicUsize::new(n), lock: sync::Mutex::new(()), clamp, ord }
+    }
+
+    /// Mirror of `RangeDeque::take_impl` (fast path, conflict slow
+    /// path, drained rollback), minus the injected mutation.
+    pub fn take(&self, chunk: usize) -> Option<(usize, usize)> {
+        let b = self.begin.load(self.ord); // order: `self.ord` — the mutation knob under test (SeqCst when faithful)
+        let e0 = self.end.load(self.ord); // order: `self.ord` — the mutation knob under test
+        if b >= e0 {
+            return None;
+        }
+        let nb = if self.clamp { (b + chunk).min(e0) } else { b + chunk };
+        self.begin.store(nb, self.ord); // order: `self.ord` — the mutation knob under test
+        let e = self.end.load(self.ord); // order: `self.ord` — the mutation knob under test
+        if nb <= e {
+            return Some((b, nb));
+        }
+        let _g = self.lock.lock().unwrap();
+        let e = self.end.load(self.ord); // order: `self.ord` — re-read under the lock
+        if b >= e {
+            self.begin.store(b, self.ord); // order: `self.ord` — drained rollback
+            return None;
+        }
+        let take = chunk.min(e - b);
+        self.begin.store(b + take, self.ord); // order: `self.ord` — clamped claim under the lock
+        Some((b, b + take))
+    }
+
+    /// Mirror of `RangeDeque::steal_half` (locked cut + re-check).
+    pub fn steal_half(&self) -> Option<(usize, usize)> {
+        let _g = self.lock.lock().unwrap();
+        let b = self.begin.load(self.ord); // order: `self.ord` — the mutation knob under test
+        let e = self.end.load(self.ord); // order: `self.ord` — the mutation knob under test
+        if e <= b {
+            return None;
+        }
+        let half = (e - b).div_ceil(2);
+        let ne = e - half;
+        self.end.store(ne, self.ord); // order: `self.ord` — the steal cut
+        let b2 = self.begin.load(self.ord); // order: `self.ord` — re-check against the owner
+        if ne < b2 {
+            self.end.store(e, self.ord); // order: `self.ord` — cut rollback
+            return None;
+        }
+        Some((ne, e))
+    }
+
+    pub fn raw(&self) -> (usize, usize) {
+        (self.begin.load(SeqCst), self.end.load(SeqCst)) // order: SeqCst snapshot for invariants/finale
+    }
+}
+
+/// [`deque_the`]'s owner/thief shape over a [`MutDeque`]. With
+/// `(true, SeqCst)` this is the faithful copy and must pass; with the
+/// clamp removed the invariant catches the overshoot, and with
+/// `Relaxed` orderings the thief can act on a stale `begin`/`end` and
+/// double-claim (exactly-once violation in the finale).
+pub fn mut_deque(clamp: bool, ord: Ordering) -> Scenario {
+    const N: usize = 4;
+    let q = Arc::new(MutDeque::new(N, clamp, ord));
+    let claimed = Ghost::new(Vec::<(usize, usize, &'static str)>::new());
+    let inv_q = q.clone();
+    let fin_q = q.clone();
+    let fin_claimed = claimed.clone();
+    Scenario::new()
+        .thread({
+            let (q, claimed) = (q.clone(), claimed.clone());
+            move || {
+                for _ in 0..2 {
+                    if let Some((s, e)) = q.take(3) {
+                        claimed.with(|c| c.push((s, e, "owner")));
+                    }
+                }
+            }
+        })
+        .thread({
+            let (q, claimed) = (q.clone(), claimed.clone());
+            move || {
+                if let Some((s, e)) = q.steal_half() {
+                    claimed.with(|c| c.push((s, e, "thief")));
+                }
+            }
+        })
+        .invariant(move || {
+            let (b, _e) = inv_q.raw();
+            assert!(b <= N, "THE clamp violated: begin {b} overshot the maximum end {N}");
+        })
+        .finale(move || {
+            let (b, e) = fin_q.raw();
+            deque_accounting(N, &fin_claimed.get(), (b, e));
+        })
+}
+
+// ---------------------------------------------------------------------------
+// Protocol 2: dispatch queue + class-mask mirror
+// ---------------------------------------------------------------------------
+
+/// The real [`DispatchQueue`] under the pool lock with the runtime's
+/// Relaxed `class_mask` mirror: two submitters push (Interactive /
+/// Background), one claimant drains guided by the mask.
+///
+/// `mask_inside_lock: true` is the production protocol (runtime.rs
+/// stores the mirror while still holding the queue lock): a claimant
+/// observing a nonzero mask then locking always finds an entry, and
+/// the drained queue leaves the mirror at 0. `false` is the mutant —
+/// publish after unlock — whose stale mirror both strands a set bit
+/// after the drain and lets the claimant observe a bit over an empty
+/// queue.
+pub fn dispatch_mask(mask_inside_lock: bool) -> Scenario {
+    let q = Arc::new(sync::Mutex::new(DispatchQueue::<u32>::new()));
+    let mask = Arc::new(AtomicUsize::new(0));
+    let claimed = Ghost::new(Vec::<(u32, u8)>::new());
+    let fin_mask = mask.clone();
+    let fin_claimed = claimed.clone();
+
+    let pusher =
+        |q: Arc<sync::Mutex<DispatchQueue<u32>>>, mask: Arc<AtomicUsize>, item: u32, class: LatencyClass| {
+            move || {
+                let mut g = q.lock().unwrap();
+                let _ = g.push(item, class, None);
+                let m = g.class_mask() as usize;
+                if mask_inside_lock {
+                    // order: mirror published under the queue lock, so
+                    // it is coherent with the content it describes
+                    // (runtime.rs `enqueue`); Relaxed suffices here.
+                    mask.store(m, Relaxed);
+                    drop(g);
+                } else {
+                    // Mutant: publish after unlock — the mirror races
+                    // the next lock holder's recompute.
+                    drop(g);
+                    mask.store(m, Relaxed); // order: Relaxed mirror — this is the mutant arm (published after unlock)
+                }
+            }
+        };
+
+    Scenario::new()
+        .thread(pusher(q.clone(), mask.clone(), 1, LatencyClass::Interactive))
+        .thread(pusher(q.clone(), mask.clone(), 2, LatencyClass::Background))
+        .thread({
+            let (q, mask, claimed) = (q.clone(), mask.clone(), claimed.clone());
+            move || {
+                let mut step = 0usize;
+                loop {
+                    if claimed.with(|c| c.len()) >= 2 {
+                        break;
+                    }
+                    if mask.load(Relaxed) == 0 { // order: Relaxed mask peek; the lock re-validates (runtime.rs preempt_point)
+                        sync::backoff(step);
+                        step += 1;
+                        continue;
+                    }
+                    let mut g = q.lock().unwrap();
+                    let popped = g.pop_best();
+                    let m = g.class_mask() as usize;
+                    // order: claimant re-publishes the mirror under the
+                    // same lock (runtime.rs claim paths).
+                    mask.store(m, Relaxed);
+                    drop(g);
+                    let (item, info) =
+                        popped.expect("claimant observed a nonzero class mask but found an empty queue");
+                    claimed.with(|c| c.push((item, info.class.rank())));
+                }
+            }
+        })
+        .finale(move || {
+            let mut c = fin_claimed.get();
+            c.sort_unstable();
+            let items: Vec<u32> = c.iter().map(|&(i, _)| i).collect();
+            assert_eq!(items, vec![1, 2], "each push claimed exactly once, got {c:?}");
+            assert_eq!(fin_mask.load(SeqCst), 0, "class-mask mirror out of sync with the drained queue"); // order: SeqCst finale readback (threads joined)
+        })
+}
+
+// ---------------------------------------------------------------------------
+// Protocol 3: parked-flag publish → wake handshake
+// ---------------------------------------------------------------------------
+
+/// Hand-port of the runtime's worker-park handshake: the worker
+/// publishes `parked` (Release), re-checks the queue, then parks; the
+/// submitter pushes, then consumes the flag with a single `swap`
+/// (AcqRel) and unparks on `true`.
+///
+/// `recheck: false` drops the publish→re-check step (the classic lost
+/// wakeup: push and swap both land between the worker's empty pop and
+/// its park — reported as a checker deadlock). `swap_wake: false`
+/// replaces the swap with a load+store pair whose load may act on a
+/// stale `false` (same deadlock, via the store buffer rather than the
+/// interleaving).
+pub fn parked_wake(recheck: bool, swap_wake: bool) -> Scenario {
+    let queue = Arc::new(sync::Mutex::new(Vec::<u64>::new()));
+    let parked = Arc::new(AtomicBool::new(false));
+    let done = Ghost::new(Vec::<u64>::new());
+    let fin_done = done.clone();
+    Scenario::new()
+        .thread({
+            // Worker = vthread 0, the `unpark(0)` target.
+            let (queue, parked, done) = (queue.clone(), parked.clone(), done.clone());
+            move || loop {
+                if let Some(x) = queue.lock().unwrap().pop() {
+                    done.with(|d| d.push(x));
+                    break;
+                }
+                // publish→wake edge: the flag must be visible before
+                // the worker commits to parking…
+                parked.store(true, Release); // order: publish before the queue re-check
+                if recheck && !queue.lock().unwrap().is_empty() {
+                    // …and the re-check closes the window between the
+                    // empty pop and the publish.
+                    parked.store(false, Relaxed); // order: same-thread retract, no ordering needed
+                    continue;
+                }
+                sync::park();
+                parked.store(false, Release); // order: wake consumed; next episode starts clean
+            }
+        })
+        .thread({
+            let (queue, parked) = (queue.clone(), parked.clone());
+            move || {
+                queue.lock().unwrap().push(7);
+                let was_parked = if swap_wake {
+                    // order: one RMW — reads the true flag even when
+                    // the worker's publish has not been acquired
+                    // (runtime.rs wake path).
+                    parked.swap(false, AcqRel)
+                } else {
+                    // Mutant: load+store pair — the load may read a
+                    // stale `false` and skip the wake.
+                    let p = parked.load(Acquire); // order: Acquire load — half of the mutant's broken load+store pair
+                    if p {
+                        parked.store(false, Relaxed); // order: Relaxed store — the other half of the mutant pair
+                    }
+                    p
+                };
+                if was_parked {
+                    sync::unpark(0);
+                }
+            }
+        })
+        .finale(move || {
+            assert_eq!(fin_done.get(), vec![7], "submitted item must be processed (no lost wakeup)");
+        })
+}
+
+// ---------------------------------------------------------------------------
+// Protocol 4: assist gate (ActivityRecord) join vs close_and_drain
+// ---------------------------------------------------------------------------
+
+/// Model-side engine target: a bounded slot ladder plus a Relaxed
+/// claims counter standing in for joiner-executed chunks. The counter
+/// is Relaxed *on purpose*: the gate's Release(leave) →
+/// Acquire(drain) edge is what makes it visible to the publisher.
+struct ModelTarget {
+    slots: AtomicUsize,
+    claims: AtomicUsize,
+    max: usize,
+}
+
+impl ModelTarget {
+    fn new(max: usize) -> Arc<ModelTarget> {
+        Arc::new(ModelTarget { slots: AtomicUsize::new(0), claims: AtomicUsize::new(0), max })
+    }
+}
+
+impl Assistable for ModelTarget {
+    fn has_work(&self) -> bool {
+        true
+    }
+
+    fn try_join(&self) -> Option<usize> {
+        // Mirror of `LoopAssist::try_join`'s bounded CAS ladder.
+        let mut s = self.slots.load(Acquire); // order: mirror of LoopAssist
+        loop {
+            if s >= self.max {
+                return None;
+            }
+            match self.slots.compare_exchange_weak(s, s + 1, AcqRel, Relaxed) { // order: AcqRel slot CAS, mirroring LoopAssist::try_join
+                Ok(_) => return Some(s),
+                Err(cur) => s = cur,
+            }
+        }
+    }
+
+    fn assist(&self, _slot: usize) {
+        let _ = self.claims.fetch_add(1, Relaxed); // order: published by the gate's leave(Release)
+    }
+}
+
+/// Joiner body shared by the real-gate and mutant-gate scenarios:
+/// enter, assert the target is still alive, claim a slot, contribute
+/// one chunk, leave. A failed enter backs out touching nothing.
+fn joiner_body(
+    enter: impl Fn() -> bool,
+    leave: impl Fn(),
+    target: &ModelTarget,
+    torn: &Ghost<bool>,
+    joined: &Ghost<usize>,
+) {
+    if enter() {
+        assert!(!torn.get(), "joiner entered a gate whose target was already torn down");
+        if let Some(slot) = target.try_join() {
+            joined.with(|j| *j += 1);
+            target.assist(slot);
+        }
+        leave();
+    }
+    // else: lost the close race — backed out, ghost untouched.
+}
+
+/// Publisher body shared by both gate scenarios: close + drain, then
+/// tear down and verify every joiner contribution is visible.
+fn publisher_body(drain: impl FnOnce(), target: &ModelTarget, torn: &Ghost<bool>, joined: &Ghost<usize>) {
+    drain();
+    torn.with(|t| *t = true);
+    // join→close edge: post-drain, joiner engine writes are visible.
+    let claims = target.claims.load(Relaxed) as usize; // order: the drain already synchronized
+    let grants = joined.get();
+    assert_eq!(
+        claims, grants,
+        "post-drain claims ({claims}) must equal granted slots ({grants}) — the leave→drain edge is broken"
+    );
+    assert!(grants <= 1, "slot CAS over-granted: {grants} grants for 1 slot");
+}
+
+/// The real [`ActivityRecord`] gate: two joiners race one publisher's
+/// `close_and_drain` over a 1-slot target. Losers back out untouched,
+/// at most one slot is granted, and the publisher's post-drain read of
+/// the Relaxed claims counter is exact.
+pub fn assist_gate() -> Scenario {
+    let target = ModelTarget::new(1);
+    // SAFETY: `close_and_drain` runs (publisher thread) before anyone
+    // tears the target down, and the Arcs outlive the scenario.
+    let rec = unsafe { ActivityRecord::new(&*target, LatencyClass::Batch, None) };
+    let torn = Ghost::new(false);
+    let joined = Ghost::new(0usize);
+    let mut s = Scenario::new();
+    for _ in 0..2 {
+        let (rec, target, torn, joined) = (rec.clone(), target.clone(), torn.clone(), joined.clone());
+        s = s.thread(move || {
+            joiner_body(|| rec.try_enter(), || rec.leave(), &target, &torn, &joined);
+        });
+    }
+    s.thread({
+        let (rec, target, torn, joined) = (rec.clone(), target.clone(), torn.clone(), joined.clone());
+        move || publisher_body(|| rec.close_and_drain(), &target, &torn, &joined)
+    })
+}
+
+/// Gate close bit for [`MutGate`] (same bit as `assist::CLOSED`).
+const MUT_CLOSED: usize = 1 << (usize::BITS - 1);
+
+/// Miniature of [`ActivityRecord`]'s gate with injectable mutations:
+/// `guard_closed: false` removes the CLOSED check in `try_enter`
+/// (blind increment — joiners slip in after teardown), and
+/// `leave_ord`/`drain_ord` weaken the Release(leave) → Acquire(drain)
+/// publication edge.
+pub struct MutGate {
+    gate: AtomicUsize,
+    guard_closed: bool,
+    leave_ord: Ordering,
+    drain_ord: Ordering,
+}
+
+impl MutGate {
+    pub fn new(guard_closed: bool, leave_ord: Ordering, drain_ord: Ordering) -> MutGate {
+        MutGate { gate: AtomicUsize::new(0), guard_closed, leave_ord, drain_ord }
+    }
+
+    pub fn try_enter(&self) -> bool {
+        if !self.guard_closed {
+            let _ = self.gate.fetch_add(1, AcqRel); // order: blind AcqRel increment — the guard-removed mutant arm
+            return true;
+        }
+        let mut g = self.gate.load(Acquire); // order: Acquire seed read, mirroring ActivityRecord::try_enter
+        loop {
+            if g & MUT_CLOSED != 0 {
+                return false;
+            }
+            match self.gate.compare_exchange_weak(g, g + 1, AcqRel, Acquire) { // order: AcqRel enter CAS, mirroring ActivityRecord::try_enter
+                Ok(_) => return true,
+                Err(cur) => g = cur,
+            }
+        }
+    }
+
+    pub fn leave(&self) {
+        let _ = self.gate.fetch_sub(1, self.leave_ord); // order: `leave_ord` — the mutation knob on the leave edge
+    }
+
+    pub fn close_and_drain(&self) {
+        let _ = self.gate.fetch_or(MUT_CLOSED, AcqRel); // order: AcqRel close, mirroring close_and_drain
+        let mut step = 0usize;
+        while self.gate.load(self.drain_ord) != MUT_CLOSED { // order: `drain_ord` — the mutation knob on the drain edge
+            sync::backoff(step);
+            step = step.saturating_add(1);
+        }
+    }
+}
+
+/// [`assist_gate`]'s shape over a [`MutGate`]. `(true, Release,
+/// Acquire)` is the faithful copy and must pass; the mutations must be
+/// caught.
+pub fn mut_assist_gate(guard_closed: bool, leave_ord: Ordering, drain_ord: Ordering) -> Scenario {
+    let target = ModelTarget::new(1);
+    let gate = Arc::new(MutGate::new(guard_closed, leave_ord, drain_ord));
+    let torn = Ghost::new(false);
+    let joined = Ghost::new(0usize);
+    let mut s = Scenario::new();
+    for _ in 0..2 {
+        let (gate, target, torn, joined) = (gate.clone(), target.clone(), torn.clone(), joined.clone());
+        s = s.thread(move || {
+            joiner_body(|| gate.try_enter(), || gate.leave(), &target, &torn, &joined);
+        });
+    }
+    s.thread({
+        let (gate, target, torn, joined) = (gate.clone(), target.clone(), torn.clone(), joined.clone());
+        move || publisher_body(|| gate.close_and_drain(), &target, &torn, &joined)
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Protocol 5 (PR 6 follow-up): assist joiners fold into the μ divisor
+// ---------------------------------------------------------------------------
+
+/// The μ-merge protocol of `ws::Shared`: members batch completed
+/// iterations into the global `remaining` counter (SeqCst, matching
+/// `RemainingGuard`), an assist joiner first registers in the
+/// `participants` divisor (`register_joiner`, one Relaxed RMW) and
+/// then contributes its own samples. μ over the quiesced state is
+/// done/participants — members complete 4 and 2, the joiner 6, so the
+/// merged estimate is pinned at 12/3 = 4 (the same figure the
+/// simulator's `WsSim` active-divisor unit test pins).
+///
+/// `register: false` is the mutant — the joiner contributes samples
+/// without entering the divisor (exactly the pre-fix simulator bug
+/// class), inflating μ to 6.
+pub fn mu_merge(register: bool) -> Scenario {
+    const TOTAL: usize = 12;
+    const BASE_P: usize = 2;
+    let remaining = Arc::new(AtomicUsize::new(TOTAL));
+    let participants = Arc::new(AtomicUsize::new(BASE_P));
+    let inv = (remaining.clone(), participants.clone());
+    let fin = (remaining.clone(), participants.clone());
+    Scenario::new()
+        .thread({
+            let remaining = remaining.clone();
+            move || {
+                let _ = remaining.fetch_sub(4, SeqCst); // order: RemainingGuard batch (member 0)
+            }
+        })
+        .thread({
+            let remaining = remaining.clone();
+            move || {
+                let _ = remaining.fetch_sub(2, SeqCst); // order: RemainingGuard batch (member 1)
+            }
+        })
+        .thread({
+            let (remaining, participants) = (remaining.clone(), participants.clone());
+            move || {
+                if register {
+                    // order: divisor entry is an RMW — never lost, no
+                    // ordering needed (ws::Shared::register_joiner).
+                    let _ = participants.fetch_add(1, Relaxed);
+                }
+                let _ = remaining.fetch_sub(6, SeqCst); // order: joiner's own sample batch
+            }
+        })
+        .invariant(move || {
+            let (remaining, participants) = &inv;
+            let r = remaining.load(SeqCst); // order: SeqCst invariant peek
+            let q = participants.load(SeqCst); // order: SeqCst invariant peek
+            assert!(r <= TOTAL, "remaining grew past the total");
+            assert!((BASE_P..=BASE_P + 1).contains(&q), "participants left [base_p, base_p+1]: {q}");
+        })
+        .finale(move || {
+            let (remaining, participants) = &fin;
+            let done = TOTAL - remaining.load(SeqCst); // order: SeqCst finale readback (threads joined)
+            let q = participants.load(SeqCst); // order: SeqCst finale readback (threads joined)
+            assert_eq!(done, TOTAL, "all samples must land");
+            let mu = done as f64 / q as f64;
+            assert!((mu - 4.0).abs() < 1e-12, "merged μ must count the joiner in the divisor: got {mu}, want 4");
+        })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{explore, explore_seeded, must_fail, replay, CheckOpts, Counterexample};
+    use super::*;
+
+    fn opts() -> CheckOpts {
+        CheckOpts::default()
+    }
+
+    /// Known-bad seed corpus, snapshot-style: the first run of each
+    /// mutation test records its counterexample seed under
+    /// `tests/check_seeds/<name>.seed`; every later run replays the
+    /// *stored* schedule and demands it still fails. Delete a file to
+    /// re-record after an intentional explorer/model change.
+    fn corpus_seed(name: &str, fresh: &str) -> String {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/check_seeds");
+        let path = dir.join(format!("{name}.seed"));
+        match std::fs::read_to_string(&path) {
+            Ok(s) => s.trim().to_string(),
+            Err(_) => {
+                std::fs::create_dir_all(&dir).expect("create tests/check_seeds");
+                std::fs::write(&path, format!("{fresh}\n")).expect("persist known-bad seed");
+                fresh.to_string()
+            }
+        }
+    }
+
+    /// Satellite: every mutation self-test replays both the fresh and
+    /// the persisted known-bad seed through the direct API and the
+    /// `ICH_CHECK_REPLAY` entry point, demanding a byte-identical
+    /// event log each way.
+    fn assert_seed_replays(name: &str, cex: &Counterexample, mut setup: impl FnMut() -> Scenario) {
+        let (log, failure) = replay(name, &opts(), &cex.seed, &mut setup);
+        assert_eq!(log, cex.log, "direct replay must reproduce the identical event log");
+        assert!(failure.is_some(), "replayed schedule must still fail");
+        let err = explore_seeded(name, &opts(), Some(&cex.seed), &mut setup)
+            .expect_err("ICH_CHECK_REPLAY of a counterexample seed must fail");
+        assert_eq!(err.log, cex.log, "ICH_CHECK_REPLAY replay must be byte-identical");
+        assert_eq!(err.seed, cex.seed, "replay reports the same seed it consumed");
+
+        // Corpus half: the persisted seed (recorded on first run) must
+        // keep reproducing a failure, with both replay entry points
+        // agreeing byte-for-byte on the event log.
+        let stored = corpus_seed(name, &cex.seed);
+        let (stored_log, stored_failure) = replay(name, &opts(), &stored, &mut setup);
+        assert!(
+            stored_failure.is_some(),
+            "stored seed `{stored}` for `{name}` no longer fails — \
+             delete tests/check_seeds/{name}.seed to re-record"
+        );
+        let err = explore_seeded(name, &opts(), Some(&stored), &mut setup)
+            .expect_err("ICH_CHECK_REPLAY of the stored seed must fail");
+        assert_eq!(err.log, stored_log, "stored-seed replay must be byte-identical across entry points");
+    }
+
+    // ---- protocol 1: THE deque ----
+
+    #[test]
+    fn deque_the_exhaustive() {
+        let stats = explore("deque_the", &opts(), deque_the).expect("the real THE deque protocol is correct");
+        assert!(stats.complete, "deque model must be exhaustively explored within bounds");
+    }
+
+    #[test]
+    fn mut_deque_faithful_copy_passes() {
+        let stats = explore("deque_faithful", &opts(), || mut_deque(true, SeqCst))
+            .expect("the faithful MutDeque copy matches the real protocol");
+        assert!(stats.complete);
+    }
+
+    #[test]
+    fn mutation_clamp_removed_is_caught() {
+        let cex = must_fail("deque_clamp_mutant", &opts(), || mut_deque(false, SeqCst));
+        assert!(
+            cex.message.contains("overshot") || cex.message.contains("exactly-once"),
+            "unexpected failure: {}",
+            cex.message
+        );
+        assert_seed_replays("deque_clamp_mutant", &cex, || mut_deque(false, SeqCst));
+    }
+
+    #[test]
+    fn mutation_deque_relaxed_is_caught() {
+        let cex = must_fail("deque_relaxed_mutant", &opts(), || mut_deque(true, Relaxed));
+        assert_seed_replays("deque_relaxed_mutant", &cex, || mut_deque(true, Relaxed));
+    }
+
+    // ---- protocol 2: dispatch mask ----
+
+    #[test]
+    fn dispatch_mask_exhaustive() {
+        let stats = explore("dispatch_mask", &opts(), || dispatch_mask(true))
+            .expect("in-lock mask publication keeps the mirror coherent");
+        assert!(stats.complete, "dispatch model must be exhaustively explored within bounds");
+    }
+
+    #[test]
+    fn mutation_mask_outside_lock_is_caught() {
+        let cex = must_fail("dispatch_mask_mutant", &opts(), || dispatch_mask(false));
+        assert!(cex.message.contains("mask"), "unexpected failure: {}", cex.message);
+        assert_seed_replays("dispatch_mask_mutant", &cex, || dispatch_mask(false));
+    }
+
+    // ---- protocol 3: parked-flag handshake ----
+
+    #[test]
+    fn parked_wake_exhaustive() {
+        let stats = explore("parked_wake", &opts(), || parked_wake(true, true))
+            .expect("publish→re-check→park never loses a wakeup");
+        assert!(stats.complete, "parked model must be exhaustively explored within bounds");
+    }
+
+    #[test]
+    fn mutation_missing_recheck_is_caught() {
+        let cex = must_fail("parked_recheck_mutant", &opts(), || parked_wake(false, true));
+        assert!(cex.message.contains("deadlock"), "expected a lost-wakeup deadlock, got: {}", cex.message);
+        assert_seed_replays("parked_recheck_mutant", &cex, || parked_wake(false, true));
+    }
+
+    #[test]
+    fn mutation_stale_wake_flag_is_caught() {
+        let cex = must_fail("parked_swap_mutant", &opts(), || parked_wake(true, false));
+        assert!(cex.message.contains("deadlock"), "expected a lost-wakeup deadlock, got: {}", cex.message);
+        assert_seed_replays("parked_swap_mutant", &cex, || parked_wake(true, false));
+    }
+
+    // ---- protocol 4: assist gate ----
+
+    #[test]
+    fn assist_gate_exhaustive() {
+        let stats =
+            explore("assist_gate", &opts(), assist_gate).expect("the real ActivityRecord gate is correct");
+        assert!(stats.complete, "assist model must be exhaustively explored within bounds");
+    }
+
+    #[test]
+    fn mut_gate_faithful_copy_passes() {
+        let stats = explore("assist_gate_faithful", &opts(), || mut_assist_gate(true, Release, Acquire))
+            .expect("the faithful MutGate copy matches the real protocol");
+        assert!(stats.complete);
+    }
+
+    #[test]
+    fn mutation_gate_relaxed_is_caught() {
+        let cex = must_fail("assist_gate_relaxed_mutant", &opts(), || mut_assist_gate(true, Relaxed, Relaxed));
+        assert!(
+            cex.message.contains("leave→drain") || cex.message.contains("claims"),
+            "unexpected failure: {}",
+            cex.message
+        );
+        assert_seed_replays("assist_gate_relaxed_mutant", &cex, || mut_assist_gate(true, Relaxed, Relaxed));
+    }
+
+    #[test]
+    fn mutation_gate_unchecked_enter_is_caught() {
+        let cex = must_fail("assist_gate_open_mutant", &opts(), || mut_assist_gate(false, Release, Acquire));
+        assert!(
+            cex.message.contains("torn down") || cex.message.contains("claims"),
+            "unexpected failure: {}",
+            cex.message
+        );
+        assert_seed_replays("assist_gate_open_mutant", &cex, || mut_assist_gate(false, Release, Acquire));
+    }
+
+    // ---- protocol 5: μ merge ----
+
+    #[test]
+    fn mu_merge_counts_joiners() {
+        let stats =
+            explore("mu_merge", &opts(), || mu_merge(true)).expect("registered joiners fold into the μ divisor");
+        assert!(stats.complete, "μ model must be exhaustively explored within bounds");
+    }
+
+    #[test]
+    fn mutation_unregistered_joiner_is_caught() {
+        let cex = must_fail("mu_merge_mutant", &opts(), || mu_merge(false));
+        assert!(cex.message.contains("divisor"), "unexpected failure: {}", cex.message);
+        assert_seed_replays("mu_merge_mutant", &cex, || mu_merge(false));
+    }
+}

@@ -1,0 +1,221 @@
+//! Shim `Mutex`/`Condvar` plus virtual-thread `park`/`unpark` and the
+//! spin-hint `backoff` — the blocking half of the checker's API.
+//!
+//! Under a model, lock acquisition order, condvar wakeups, and park
+//! tokens are controller state: a blocked virtual thread simply is
+//! not schedulable, so a protocol that can block forever shows up as
+//! a deadlock counterexample rather than a hung test. Outside a model
+//! everything forwards to `std` (the shim Mutex *is* a std Mutex
+//! then, wrapped for API parity).
+//!
+//! Inside a model the real `std::sync::Mutex` still provides the
+//! `&mut T` — but it can never be contended, because the controller
+//! grants the model-level lock to one thread at a time and guards
+//! drop the real lock before announcing the model-level unlock.
+
+use std::ops::{Deref, DerefMut};
+use std::sync::{Arc, LockResult};
+
+use super::exec::{ctx, Ctx, ExecHandle, PH_INVARIANT, PH_RUN};
+
+/// Checker-aware drop-in for `std::sync::Mutex`.
+pub struct Mutex<T> {
+    inner: std::sync::Mutex<T>,
+}
+
+pub struct MutexGuard<'a, T> {
+    real: Option<std::sync::MutexGuard<'a, T>>,
+    /// The mutex this guard came from — lets `Condvar::wait` relock
+    /// after the model-level wait without unstable std APIs.
+    mx: &'a std::sync::Mutex<T>,
+    /// Set when the model-level lock is held and must be released on
+    /// drop: (handle, vthread id, model key = address of the mutex).
+    model: Option<(Arc<ExecHandle>, usize, usize)>,
+}
+
+impl<T> Mutex<T> {
+    pub const fn new(t: T) -> Mutex<T> {
+        Mutex { inner: std::sync::Mutex::new(t) }
+    }
+
+    fn addr(&self) -> usize {
+        &self.inner as *const _ as usize
+    }
+
+    pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+        match ctx() {
+            Ctx::VThread(h, tid) => {
+                h.mutex_lock(tid, self.addr());
+                let real = self.inner.lock().expect("shim mutex poisoned under model");
+                Ok(MutexGuard { real: Some(real), mx: &self.inner, model: Some((h, tid, self.addr())) })
+            }
+            Ctx::Controller(h) => {
+                assert!(
+                    h.phase.load(std::sync::atomic::Ordering::Relaxed) != PH_INVARIANT, // order: Relaxed — the controller is the only phase writer
+                    "invariant closures must not take shim locks"
+                );
+                assert!(
+                    h.phase.load(std::sync::atomic::Ordering::Relaxed) != PH_RUN, // order: Relaxed — the controller is the only phase writer
+                    "checker bug: controller locking during the run phase"
+                );
+                // Setup/finale are single-threaded: take the real lock
+                // only; the model-level mutex state is untouched (and
+                // must be free — every vthread has finished or not yet
+                // started).
+                let real = self.inner.lock().expect("shim mutex poisoned under model");
+                Ok(MutexGuard { real: Some(real), mx: &self.inner, model: None })
+            }
+            Ctx::None => match self.inner.lock() {
+                Ok(g) => Ok(MutexGuard { real: Some(g), mx: &self.inner, model: None }),
+                Err(p) => Err(std::sync::PoisonError::new(MutexGuard {
+                    real: Some(p.into_inner()),
+                    mx: &self.inner,
+                    model: None,
+                })),
+            },
+        }
+    }
+
+    pub fn into_inner(self) -> LockResult<T> {
+        self.inner.into_inner()
+    }
+
+    pub fn get_mut(&mut self) -> LockResult<&mut T> {
+        self.inner.get_mut()
+    }
+}
+
+impl<T> Drop for MutexGuard<'_, T> {
+    fn drop(&mut self) {
+        // Release the real lock first, then announce the model-level
+        // unlock: the next model-granted locker must find the real
+        // mutex already free (the reverse order can wedge the
+        // controller behind a Running thread blocked on the real
+        // lock).
+        self.real = None;
+        if let Some((h, tid, addr)) = self.model.take() {
+            h.mutex_unlock(tid, addr);
+        }
+    }
+}
+
+impl<T> Deref for MutexGuard<'_, T> {
+    type Target = T;
+
+    fn deref(&self) -> &T {
+        self.real.as_ref().expect("guard alive")
+    }
+}
+
+impl<T> DerefMut for MutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.real.as_mut().expect("guard alive")
+    }
+}
+
+impl<T: std::fmt::Debug> std::fmt::Debug for Mutex<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        self.inner.fmt(f)
+    }
+}
+
+impl<T: Default> Default for Mutex<T> {
+    fn default() -> Mutex<T> {
+        Mutex::new(T::default())
+    }
+}
+
+/// Checker-aware drop-in for `std::sync::Condvar`.
+#[derive(Default)]
+pub struct Condvar {
+    inner: std::sync::Condvar,
+}
+
+impl Condvar {
+    pub const fn new() -> Condvar {
+        Condvar { inner: std::sync::Condvar::new() }
+    }
+
+    fn addr(&self) -> usize {
+        &self.inner as *const _ as usize
+    }
+
+    pub fn wait<'a, T>(&self, guard: MutexGuard<'a, T>) -> LockResult<MutexGuard<'a, T>> {
+        let mut guard = guard;
+        let mx = guard.mx;
+        match guard.model.take() {
+            Some((h, tid, maddr)) => {
+                // Model wait: drop the real lock, run the three-phase
+                // protocol (release + block-until-notified + relock),
+                // then retake the real lock.
+                guard.real = None;
+                h.cv_wait(tid, self.addr(), maddr);
+                let real = mx.lock().expect("shim mutex poisoned under model");
+                Ok(MutexGuard { real: Some(real), mx, model: Some((h, tid, maddr)) })
+            }
+            None => {
+                let real = guard.real.take().expect("guard alive");
+                match self.inner.wait(real) {
+                    Ok(g) => Ok(MutexGuard { real: Some(g), mx, model: None }),
+                    Err(p) => {
+                        Err(std::sync::PoisonError::new(MutexGuard { real: Some(p.into_inner()), mx, model: None }))
+                    }
+                }
+            }
+        }
+    }
+
+    pub fn notify_one(&self) {
+        if let Ctx::VThread(h, tid) = ctx() {
+            h.cv_notify(tid, self.addr(), false);
+        } else {
+            self.inner.notify_one();
+        }
+    }
+
+    pub fn notify_all(&self) {
+        if let Ctx::VThread(h, tid) = ctx() {
+            h.cv_notify(tid, self.addr(), true);
+        } else {
+            self.inner.notify_all();
+        }
+    }
+}
+
+/// Park the calling thread until it holds an unpark token. Models use
+/// vthread ids; outside a model this is `std::thread::park()` (the
+/// token semantics match).
+pub fn park() {
+    match ctx() {
+        Ctx::VThread(h, tid) => h.park(tid),
+        _ => std::thread::park(),
+    }
+}
+
+/// Hand an unpark token to virtual thread `target`. Model-only: real
+/// code unparks via `std::thread::Thread` handles, which the checker
+/// does not wrap.
+pub fn unpark(target: usize) {
+    match ctx() {
+        Ctx::VThread(h, tid) => h.unpark(tid, target),
+        _ => panic!("check::sync::unpark is only meaningful inside a model"),
+    }
+}
+
+/// Spin/yield backoff ladder, checker-aware: under a model a backoff
+/// is a *fairness point* — the spinner is descheduled until some other
+/// thread performs a store or RMW, which is what makes wait loops
+/// explorable (and genuine livelocks reportable) instead of infinite.
+/// Outside a model this is the usual spin-then-yield ladder.
+pub fn backoff(step: usize) {
+    match ctx() {
+        Ctx::VThread(h, tid) => h.yield_hint(tid),
+        _ => {
+            if step < 64 {
+                std::hint::spin_loop();
+            } else {
+                std::thread::yield_now();
+            }
+        }
+    }
+}

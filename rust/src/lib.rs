@@ -26,6 +26,8 @@
 //!   figure of the paper's evaluation.
 
 pub mod apps;
+#[cfg(any(test, feature = "check"))]
+pub mod check;
 pub mod coordinator;
 pub mod graph;
 pub mod harness;

@@ -13,6 +13,8 @@
 //!   overlap  --threads <p> --jobs <k> --n <iters>: serve k independent
 //!            loops sequentially vs overlapped (async epochs) on the
 //!            persistent pool and report both wall times
+//!   lint-atomics  scan src/ for atomic ops lacking `// order:` comments
+//!            and `unsafe` lacking `// SAFETY:` comments (CI gate)
 //!   list     apps, policies, figures
 //!   version
 
@@ -90,10 +92,19 @@ fn main() {
         "ablation" | "ablations" => println!("{}", harness::run_named("ablations").unwrap()),
         "sweep" => cmd_sweep(&args),
         "overlap" => cmd_overlap(&args),
+        "lint-atomics" => {
+            // `--dir` overrides the default (this crate's own src/),
+            // so CI can point the lint at a checkout-relative path.
+            let root = args
+                .get("dir")
+                .map(std::path::PathBuf::from)
+                .unwrap_or_else(|| std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("src"));
+            std::process::exit(ich::util::lint::run(&root));
+        }
         "list" => cmd_list(),
         "version" => println!("ich 0.1.0 (paper: Booth & Lane 2020, iCh)"),
         _ => {
-            println!("usage: ich <run|figure|table|summary|ablation|sweep|overlap|list|version> [flags]");
+            println!("usage: ich <run|figure|table|summary|ablation|sweep|overlap|lint-atomics|list|version> [flags]");
             println!("  e.g.: ich run --app bfs-scale-free --sched ich,0.33 --threads 28");
             println!("        ich run --app spmv --sched guided,1 --threads 4 --real");
             println!("        ich run --app spmv --sched ich --threads 4 --real --steal uniform");

@@ -46,8 +46,12 @@
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::Ordering::{AcqRel, Acquire, Relaxed, Release};
-use std::sync::atomic::AtomicUsize;
-use std::sync::{Arc, Mutex, OnceLock};
+use std::sync::{Arc, OnceLock};
+
+// Checker-aware aliases: std types in production, `crate::check` shims
+// in test/check builds so `check::models::assist_gate` explores the
+// real join/close protocol (see `util::sync::shim`).
+use crate::util::sync::shim::{backoff, AtomicUsize, Mutex};
 
 use super::dispatch::LatencyClass;
 use super::topology::{Topology, VictimSelector};
@@ -125,12 +129,12 @@ impl Assistable for LoopAssist<'_> {
     }
 
     fn try_join(&self) -> Option<usize> {
-        let mut s = self.next.load(Relaxed);
+        let mut s = self.next.load(Relaxed); // order: Relaxed seed read; the CAS below is the claim
         loop {
             if s >= self.max {
                 return None;
             }
-            match self.next.compare_exchange_weak(s, s + 1, AcqRel, Relaxed) {
+            match self.next.compare_exchange_weak(s, s + 1, AcqRel, Relaxed) { // order: AcqRel slot CAS — winner sees prior slot setup; failure retries
                 Ok(_) => return Some(s),
                 Err(cur) => s = cur,
             }
@@ -171,7 +175,7 @@ pub struct ActivityRecord {
 // its pointee is `Sync` (the `Assistable` bound) and stays alive for
 // every dereference by the gate protocol described on the field.
 unsafe impl Send for ActivityRecord {}
-unsafe impl Sync for ActivityRecord {}
+unsafe impl Sync for ActivityRecord {} // SAFETY: same argument as Send above
 
 impl ActivityRecord {
     /// Build a record for `target`.
@@ -181,7 +185,7 @@ impl ActivityRecord {
     /// The caller must run [`ActivityRecord::close_and_drain`] before
     /// `target`'s referent is dropped (the publisher guard in
     /// `sched::runtime` does this on drop).
-    pub(crate) unsafe fn new(
+    pub(crate) unsafe fn new( // SAFETY: contract in the `# Safety` section above
         target: &(dyn Assistable + '_),
         class: LatencyClass,
         origin: Option<usize>,
@@ -194,36 +198,36 @@ impl ActivityRecord {
     }
 
     /// Enter the joiner gate; fails iff the record is CLOSED (the
-    /// lost finish race — back out touching nothing).
-    fn try_enter(&self) -> bool {
-        let mut g = self.gate.load(Acquire);
+    /// lost finish race — back out touching nothing). `pub(crate)` so
+    /// the checker models drive the real gate directly.
+    pub(crate) fn try_enter(&self) -> bool {
+        let mut g = self.gate.load(Acquire); // order: Acquire seed read; pairs with close's AcqRel fetch_or
         loop {
             if g & CLOSED != 0 {
                 return false;
             }
-            match self.gate.compare_exchange_weak(g, g + 1, AcqRel, Acquire) {
+            match self.gate.compare_exchange_weak(g, g + 1, AcqRel, Acquire) { // order: AcqRel enter CAS; failure re-reads with Acquire for the CLOSED bit
                 Ok(_) => return true,
                 Err(cur) => g = cur,
             }
         }
     }
 
-    fn leave(&self) {
-        self.gate.fetch_sub(1, Release);
+    pub(crate) fn leave(&self) {
+        self.gate.fetch_sub(1, Release); // order: Release — publishes joiner engine writes to the drain loop
     }
 
     /// Publisher side: refuse new joiners, then wait until every
     /// in-flight joiner has left the engine frame. After this returns
     /// the `target` pointee may be torn down.
     pub(crate) fn close_and_drain(&self) {
-        self.gate.fetch_or(CLOSED, AcqRel);
-        let mut step = 0u32;
-        while self.gate.load(Acquire) != CLOSED {
-            if step < 64 {
-                std::hint::spin_loop();
-            } else {
-                std::thread::yield_now();
-            }
+        self.gate.fetch_or(CLOSED, AcqRel); // order: AcqRel — closes the gate and joins prior enter/leave edges
+        let mut step = 0usize;
+        while self.gate.load(Acquire) != CLOSED { // order: Acquire drain spin; pairs with leave's Release (MEMORY_MODEL.md)
+            // Checker-aware backoff: under a model this is the
+            // fairness point that lets the drain wait be explored
+            // finitely (and a stuck drain be reported as a deadlock).
+            backoff(step);
             step = step.saturating_add(1);
         }
     }
@@ -250,17 +254,17 @@ impl AssistBoard {
 
     /// Nothing published? (One relaxed load; the assist-off fast path.)
     pub fn is_idle(&self) -> bool {
-        self.live.load(Relaxed) == 0
+        self.live.load(Relaxed) == 0 // order: Relaxed peek; the gate CAS re-validates before any join
     }
 
     pub(crate) fn publish(&self, rec: Arc<ActivityRecord>) {
         self.records.lock().unwrap().push(rec);
-        self.live.fetch_add(1, Release);
+        self.live.fetch_add(1, Release); // order: Release — record visible in the lock before the count says so
     }
 
     pub(crate) fn retire(&self, rec: &Arc<ActivityRecord>) {
         self.records.lock().unwrap().retain(|r| !Arc::ptr_eq(r, rec));
-        self.live.fetch_sub(1, Release);
+        self.live.fetch_sub(1, Release); // order: Release retire; the close/drain already quiesced joiners
     }
 
     /// One idle-worker scan: snapshot the board, order candidates by
@@ -278,8 +282,8 @@ impl AssistBoard {
             if !rec.try_enter() {
                 continue;
             }
-            // Gate held: the publisher drains us out before the engine
-            // frame unwinds, so `target` is dereferenceable here.
+            // SAFETY: gate held — the publisher drains us out before
+            // the engine frame unwinds, so `target` is dereferenceable.
             let target = unsafe { &*rec.target };
             // A body panic must not unwind past `leave` (the publisher
             // would drain forever) or kill the pool thread; catch it

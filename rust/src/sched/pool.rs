@@ -32,7 +32,10 @@ pub fn pinned_core() -> Option<usize> {
     PINNED_CORE.with(|c| c.get())
 }
 
-#[cfg(target_os = "linux")]
+// Miri cannot interpret foreign calls: every libc entry point below
+// is compiled out under `cfg(miri)` and the portable fallbacks take
+// over (available_parallelism, no-op pinning).
+#[cfg(all(target_os = "linux", not(miri)))]
 mod ffi {
     /// glibc/musl value of `_SC_NPROCESSORS_ONLN` on Linux.
     pub const SC_NPROCESSORS_ONLN: i32 = 84;
@@ -49,14 +52,14 @@ mod ffi {
     }
 }
 
-#[cfg(target_os = "linux")]
+#[cfg(all(target_os = "linux", not(miri)))]
 fn detect_cpus() -> usize {
     // SAFETY: sysconf is async-signal-safe and has no memory effects.
     let n = unsafe { ffi::sysconf(ffi::SC_NPROCESSORS_ONLN) };
     if n <= 0 { 1 } else { n as usize }
 }
 
-#[cfg(not(target_os = "linux"))]
+#[cfg(any(not(target_os = "linux"), miri))]
 fn detect_cpus() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
@@ -71,7 +74,7 @@ pub fn num_cpus() -> usize {
 
 /// Pin the calling thread to `cpu` (mod the core count; best-effort,
 /// errors ignored; no-op off Linux).
-#[cfg(target_os = "linux")]
+#[cfg(all(target_os = "linux", not(miri)))]
 pub fn pin_to_cpu(cpu: usize) {
     let cpu = cpu % num_cpus();
     let mut mask = [0u64; 16]; // 1024-bit cpu_set_t
@@ -88,13 +91,13 @@ pub fn pin_to_cpu(cpu: usize) {
 }
 
 /// Pin the calling thread to `cpu` (no-op off Linux).
-#[cfg(not(target_os = "linux"))]
+#[cfg(any(not(target_os = "linux"), miri))]
 pub fn pin_to_cpu(_cpu: usize) {}
 
 /// The calling thread's CPU affinity mask (1024-bit, as 16 × u64) —
 /// lets tests assert that single-thread and pooled runs leave the
 /// caller's placement untouched. `None` off Linux or on error.
-#[cfg(target_os = "linux")]
+#[cfg(all(target_os = "linux", not(miri)))]
 pub fn current_affinity() -> Option<[u64; 16]> {
     let mut mask = [0u64; 16];
     // SAFETY: a properly sized, writable mask for self (pid 0).
@@ -103,7 +106,7 @@ pub fn current_affinity() -> Option<[u64; 16]> {
 }
 
 /// The calling thread's CPU affinity mask (`None` off Linux).
-#[cfg(not(target_os = "linux"))]
+#[cfg(any(not(target_os = "linux"), miri))]
 pub fn current_affinity() -> Option<[u64; 16]> {
     None
 }

@@ -179,6 +179,19 @@
 //! higher effective priority. The check is two thread-local reads
 //! plus one relaxed atomic load of a cached class mask, so engines
 //! can afford it per chunk.
+//!
+//! # Memory-model appendix
+//!
+//! The ordering obligations of this file's lock-free pieces — the
+//! parked-flag publish→wake handshake, the dispatch queue's in-lock
+//! class-mask mirror, the THE deque's take→clamp rule, and the assist
+//! gate's join→close protocol — are enumerated edge by edge in
+//! `src/sched/MEMORY_MODEL.md`, and each edge is proven by a
+//! deterministic model over the *real* types in
+//! `crate::check::models` (run under `cargo test`, replayable via
+//! `ICH_CHECK_REPLAY=<model>:<seed>`). The in-code `// order:`
+//! comments at every atomic site name the edge the site belongs to;
+//! `ich lint-atomics` keeps them present.
 
 use std::any::Any;
 use std::cell::{Cell, RefCell, UnsafeCell};
@@ -434,7 +447,7 @@ impl AssistCtx {
     /// finished or dropped (both close and drain the record) — i.e.
     /// declare `target` before the scope binding and call
     /// [`AssistScope::finish`] after the engine's region returns.
-    pub unsafe fn publish(&self, target: &(dyn Assistable + '_)) -> AssistScope {
+    pub unsafe fn publish(&self, target: &(dyn Assistable + '_)) -> AssistScope { // SAFETY: contract in the `# Safety` section above
         let rec = ActivityRecord::new(target, self.class, self.origin);
         self.shared.board.publish(Arc::clone(&rec));
         let wake = match self.class.rank() {
@@ -524,7 +537,7 @@ fn wake_parked(shared: &PoolShared, n: usize) {
         if need == 0 {
             break;
         }
-        if shared.parked[i].swap(false, AcqRel) {
+        if shared.parked[i].swap(false, AcqRel) { // order: AcqRel swap — one RMW reads the parked publish, never stale (parked_wake model)
             t.unpark();
             need -= 1;
         }
@@ -542,7 +555,7 @@ type TaskPtr = *const (dyn Fn(usize) + Sync);
 fn erase<'a>(f: &'a (dyn Fn(usize) + Sync + 'a)) -> TaskPtr {
     // A fat reference and a fat raw pointer share layout; only the
     // lifetime is being erased here.
-    unsafe { std::mem::transmute::<&'a (dyn Fn(usize) + Sync + 'a), TaskPtr>(f) }
+    unsafe { std::mem::transmute::<&'a (dyn Fn(usize) + Sync + 'a), TaskPtr>(f) } // SAFETY: see the layout comment above; lifetime contract on `erase`'s doc
 }
 
 /// An epoch's loop body: borrowed from a blocking submitter's frame,
@@ -632,16 +645,16 @@ impl Epoch {
     fn dispatch_info(&self) -> DispatchInfo {
         DispatchInfo {
             class: self.class,
-            queue_wait_s: self.dispatched_ns.load(Acquire) as f64 * 1e-9,
-            promoted: self.promoted.load(Acquire),
-            skips: self.skips.load(Acquire),
+            queue_wait_s: self.dispatched_ns.load(Acquire) as f64 * 1e-9, // order: Acquire — pairs with the dispatch path's Release stores
+            promoted: self.promoted.load(Acquire), // order: Acquire — pairs with the dispatch path's Release stores
+            skips: self.skips.load(Acquire), // order: Acquire — pairs with the dispatch path's Release stores
             origin: self.origin,
         }
     }
 
     /// Record one finished assignment; the last one wakes the joiner.
     fn finish_one(&self) {
-        if self.pending.fetch_sub(1, AcqRel) == 1 {
+        if self.pending.fetch_sub(1, AcqRel) == 1 { // order: AcqRel — the last decrement publishes chunk writes to the joiner
             if let Some(t) = self.waiter.lock().unwrap().take() {
                 t.unpark();
             }
@@ -678,7 +691,7 @@ fn execute(epoch: &Epoch, claim: usize) {
 fn join_wait(epoch: &Epoch) {
     let mut step = 0u32;
     loop {
-        if epoch.pending.load(Acquire) == 0 {
+        if epoch.pending.load(Acquire) == 0 { // order: Acquire — joins the workers' AcqRel pending decrements
             return;
         }
         if step < WAIT_SPINS + WAIT_YIELDS {
@@ -686,7 +699,7 @@ fn join_wait(epoch: &Epoch) {
             step += 1;
         } else {
             *epoch.waiter.lock().unwrap() = Some(thread::current());
-            if epoch.pending.load(Acquire) == 0 {
+            if epoch.pending.load(Acquire) == 0 { // order: Acquire — joins the workers' AcqRel pending decrements
                 // Completed between the check and the registration;
                 // deregister (best effort — finish_one may have taken
                 // it already) and go.
@@ -736,7 +749,7 @@ impl LoopHandle {
     pub fn is_finished(&self) -> bool {
         match &self.inner {
             HandleInner::Done(_) => true,
-            HandleInner::Epoch(e, _) => e.pending.load(Acquire) == 0,
+            HandleInner::Epoch(e, _) => e.pending.load(Acquire) == 0, // order: Acquire — joins the workers' AcqRel pending decrements
             HandleInner::Thread(j) => j.is_finished(),
         }
     }
@@ -903,7 +916,7 @@ pub fn preempt_point() {
             if f.yields >= super::dispatch::PROMOTE_K {
                 return None;
             }
-            if mask_has_higher(f.shared.class_mask.load(Relaxed), f.rank) {
+            if mask_has_higher(f.shared.class_mask.load(Relaxed), f.rank) { // order: Relaxed peek; the queue lock re-validates (dispatch_mask model)
                 Some((Arc::clone(&f.shared), f.rank))
             } else {
                 None
@@ -995,9 +1008,9 @@ fn claim_next_above(shared: &PoolShared, below_rank: u8) -> Option<(Arc<Epoch>, 
             break None;
         }
         let epoch = Arc::clone(q.item(idx));
-        let c = epoch.next_claim.load(Relaxed);
+        let c = epoch.next_claim.load(Relaxed); // order: Relaxed — next_claim is guarded by the queue lock
         if c < epoch.claims {
-            epoch.next_claim.store(c + 1, Relaxed);
+            epoch.next_claim.store(c + 1, Relaxed); // order: Relaxed — next_claim is guarded by the queue lock
             if c + 1 == epoch.claims {
                 let (_, info) = q.remove_at(idx);
                 note_removed(shared, &epoch, &info);
@@ -1012,7 +1025,7 @@ fn claim_next_above(shared: &PoolShared, below_rank: u8) -> Option<(Arc<Epoch>, 
         let (_, info) = q.remove_at(idx);
         note_removed(shared, &epoch, &info);
     };
-    shared.class_mask.store(q.class_mask(), Relaxed);
+    shared.class_mask.store(q.class_mask(), Relaxed); // order: Relaxed mirror published under the queue lock (dispatch_mask model)
     out
 }
 
@@ -1024,9 +1037,9 @@ fn claim_next_above(shared: &PoolShared, below_rank: u8) -> Option<(Arc<Epoch>, 
 fn claim_own(shared: &PoolShared, epoch: &Arc<Epoch>) -> Option<usize> {
     let mut q = shared.queue.lock().unwrap();
     let out = (0..q.len()).find(|&i| Arc::ptr_eq(q.item(i), epoch)).map(|idx| {
-        let c = epoch.next_claim.load(Relaxed);
+        let c = epoch.next_claim.load(Relaxed); // order: Relaxed — next_claim is guarded by the queue lock
         debug_assert!(c < epoch.claims, "exhausted epoch cannot stay queued");
-        epoch.next_claim.store(c + 1, Relaxed);
+        epoch.next_claim.store(c + 1, Relaxed); // order: Relaxed — next_claim is guarded by the queue lock
         if c + 1 == epoch.claims {
             let (_, info) = q.remove_at(idx);
             note_removed(shared, epoch, &info);
@@ -1036,7 +1049,7 @@ fn claim_own(shared: &PoolShared, epoch: &Arc<Epoch>) -> Option<usize> {
         }
         c
     });
-    shared.class_mask.store(q.class_mask(), Relaxed);
+    shared.class_mask.store(q.class_mask(), Relaxed); // order: Relaxed mirror published under the queue lock (dispatch_mask model)
     out
 }
 
@@ -1050,7 +1063,7 @@ fn claim_own(shared: &PoolShared, epoch: &Arc<Epoch>) -> Option<usize> {
 fn self_assist(shared: &Arc<PoolShared>, epoch: &Arc<Epoch>) {
     let id = Arc::as_ptr(shared) as usize;
     MID_EPOCH_ON.with(|s| s.borrow_mut().push(id));
-    while epoch.pending.load(Acquire) != 0 {
+    while epoch.pending.load(Acquire) != 0 { // order: Acquire — joins the workers' AcqRel pending decrements
         // `execute` never unwinds (body panics are caught and stashed
         // on the epoch), so the pop below always runs.
         match claim_own(shared, epoch) {
@@ -1066,19 +1079,19 @@ fn self_assist(shared: &Arc<PoolShared>, epoch: &Arc<Epoch>) {
 /// Record an epoch's first claim hand-out: its queue wait, per class.
 fn note_first_dispatch(shared: &PoolShared, epoch: &Epoch) {
     let wait_ns = (epoch.enqueued_at.elapsed().as_nanos() as u64).max(1);
-    epoch.dispatched_ns.store(wait_ns, Release);
+    epoch.dispatched_ns.store(wait_ns, Release); // order: Release — pairs with the metrics Acquire loads
     let agg = &shared.stats[epoch.class.rank() as usize];
-    agg.dispatched.fetch_add(1, Relaxed);
-    agg.queue_wait_ns.fetch_add(wait_ns, Relaxed);
-    agg.queue_wait_ns_max.fetch_max(wait_ns, Relaxed);
+    agg.dispatched.fetch_add(1, Relaxed); // order: Relaxed stat counter; readers tolerate drift
+    agg.queue_wait_ns.fetch_add(wait_ns, Relaxed); // order: Relaxed stat counter; readers tolerate drift
+    agg.queue_wait_ns_max.fetch_max(wait_ns, Relaxed); // order: Relaxed stat counter; readers tolerate drift
 }
 
 /// Record the queue's removal verdict (bypass count / promotion).
 fn note_removed(shared: &PoolShared, epoch: &Epoch, info: &PopInfo) {
-    epoch.skips.store(info.skips, Release);
+    epoch.skips.store(info.skips, Release); // order: Release — pairs with the metrics Acquire loads
     if info.promoted {
-        epoch.promoted.store(true, Release);
-        shared.stats[epoch.class.rank() as usize].promotions.fetch_add(1, Relaxed);
+        epoch.promoted.store(true, Release); // order: Release — pairs with the metrics Acquire loads
+        shared.stats[epoch.class.rank() as usize].promotions.fetch_add(1, Relaxed); // order: Relaxed stat counter; readers tolerate drift
     }
 }
 
@@ -1107,7 +1120,7 @@ fn worker_loop(shared: Arc<PoolShared>, idx: usize, cpu: Option<usize>) {
         }
         // Drain-then-exit: shutdown is honored only once the queue is
         // empty, so epochs enqueued before `drop` still run.
-        if shared.shutdown.load(Acquire) {
+        if shared.shutdown.load(Acquire) { // order: Acquire — joins the shutdown Release store
             return;
         }
         if step < WAIT_SPINS + WAIT_YIELDS {
@@ -1116,19 +1129,19 @@ fn worker_loop(shared: Arc<PoolShared>, idx: usize, cpu: Option<usize>) {
         } else {
             // Publish "parked" BEFORE the final re-check (see
             // `PoolShared::parked` for the no-lost-wakeup argument).
-            shared.parked[idx].store(true, Release);
+            shared.parked[idx].store(true, Release); // order: Release publish before the queue re-check (parked_wake model)
             if let Some((epoch, claim, rank)) = claim_next(&shared) {
-                shared.parked[idx].store(false, Release);
+                shared.parked[idx].store(false, Release); // order: Release retract; the flag episode is over
                 step = 0;
                 execute_claim(&shared, &epoch, claim, rank);
                 continue;
             }
-            if shared.shutdown.load(Acquire) {
-                shared.parked[idx].store(false, Release);
+            if shared.shutdown.load(Acquire) { // order: Acquire — joins the shutdown Release store
+                shared.parked[idx].store(false, Release); // order: Release retract on shutdown
                 return;
             }
             thread::park();
-            shared.parked[idx].store(false, Release);
+            shared.parked[idx].store(false, Release); // order: Release — wake consumed; next episode starts clean
         }
     }
 }
@@ -1246,11 +1259,11 @@ impl Runtime {
             let a = &self.shared.stats[i];
             ClassStats {
                 class: LatencyClass::from_rank(i as u8),
-                submitted: a.submitted.load(Relaxed),
-                dispatched: a.dispatched.load(Relaxed),
-                promotions: a.promotions.load(Relaxed),
-                queue_wait_s_total: a.queue_wait_ns.load(Relaxed) as f64 * 1e-9,
-                queue_wait_s_max: a.queue_wait_ns_max.load(Relaxed) as f64 * 1e-9,
+                submitted: a.submitted.load(Relaxed), // order: Relaxed stat snapshot
+                dispatched: a.dispatched.load(Relaxed), // order: Relaxed stat snapshot
+                promotions: a.promotions.load(Relaxed), // order: Relaxed stat snapshot
+                queue_wait_s_total: a.queue_wait_ns.load(Relaxed) as f64 * 1e-9, // order: Relaxed stat snapshot
+                queue_wait_s_max: a.queue_wait_ns_max.load(Relaxed) as f64 * 1e-9, // order: Relaxed stat snapshot
             }
         })
     }
@@ -1276,9 +1289,9 @@ impl Runtime {
         {
             let mut q = self.shared.queue.lock().unwrap();
             q.push_from(Arc::clone(epoch), epoch.class, epoch.deadline, epoch.origin);
-            self.shared.class_mask.store(q.class_mask(), Relaxed);
+            self.shared.class_mask.store(q.class_mask(), Relaxed); // order: Relaxed mirror published under the queue lock (dispatch_mask model)
         }
-        self.shared.stats[epoch.class.rank() as usize].submitted.fetch_add(1, Relaxed);
+        self.shared.stats[epoch.class.rank() as usize].submitted.fetch_add(1, Relaxed); // order: Relaxed stat counter; readers tolerate drift
         let mut need = epoch.claims;
         for (i, w) in self.workers.iter().enumerate() {
             if need == 0 {
@@ -1286,7 +1299,7 @@ impl Runtime {
             }
             // swap-claim the worker so concurrent submitters wake
             // *distinct* workers instead of stacking tokens on one.
-            if self.shared.parked[i].swap(false, AcqRel) {
+            if self.shared.parked[i].swap(false, AcqRel) { // order: AcqRel swap — one RMW reads the parked publish, never stale (parked_wake model)
                 w.thread.unpark();
                 need -= 1;
             }
@@ -1570,18 +1583,18 @@ impl Relay {
 
     /// Mark the relay closed if the driver never published a region.
     fn close(&self) {
-        let _ = self.state.compare_exchange(RELAY_PENDING, RELAY_CLOSED, Release, Relaxed);
+        let _ = self.state.compare_exchange(RELAY_PENDING, RELAY_CLOSED, Release, Relaxed); // order: Release close; losers see CLOSED with their Acquire state load
     }
 
     /// Claim the next unrun engine tid, if any.
     fn take_tid(&self) -> Option<usize> {
-        let limit = self.sub_p.load(Relaxed);
-        let mut t = self.next.load(Relaxed);
+        let limit = self.sub_p.load(Relaxed); // order: Relaxed — sub_p is set before the READY Release gate
+        let mut t = self.next.load(Relaxed); // order: Relaxed seed read; the CAS below is the claim
         loop {
             if t >= limit {
                 return None;
             }
-            match self.next.compare_exchange_weak(t, t + 1, AcqRel, Relaxed) {
+            match self.next.compare_exchange_weak(t, t + 1, AcqRel, Relaxed) { // order: AcqRel tid CAS; exactly one runner per tid
                 Ok(_) => return Some(t),
                 Err(cur) => t = cur,
             }
@@ -1603,7 +1616,7 @@ impl Relay {
                 *slot = Some(payload);
             }
         }
-        self.pending.fetch_sub(1, AcqRel);
+        self.pending.fetch_sub(1, AcqRel); // order: AcqRel — publishes this tid's work to the driver's drain
     }
 
     /// A participant claim: wait for the driver to publish (or close),
@@ -1611,7 +1624,7 @@ impl Relay {
     fn participate(&self) {
         let mut step = 0u32;
         loop {
-            match self.state.load(Acquire) {
+            match self.state.load(Acquire) { // order: Acquire — joins the READY/CLOSED Release stores
                 RELAY_CLOSED => return,
                 RELAY_READY => break,
                 _ => {
@@ -1658,7 +1671,7 @@ impl Executor for RelayExec {
             }
             return;
         }
-        if r.state.load(Relaxed) != RELAY_PENDING {
+        if r.state.load(Relaxed) != RELAY_PENDING { // order: Relaxed fast-path peek; only this driver writes READY
             // A second parallel region in one epoch (no engine does
             // this today): correctness over amortization.
             scoped_run(p, false, f);
@@ -1670,9 +1683,9 @@ impl Executor for RelayExec {
         unsafe {
             *r.cell.get() = Some(erase(f));
         }
-        r.sub_p.store(p, Relaxed);
-        r.pending.store(p - 1, Relaxed);
-        r.state.store(RELAY_READY, Release);
+        r.sub_p.store(p, Relaxed); // order: Relaxed — gated by the READY Release store below
+        r.pending.store(p - 1, Relaxed); // order: Relaxed — gated by the READY Release store below
+        r.state.store(RELAY_READY, Release); // order: Release — opens the gate; participants Acquire it
         // Engine tid 0 is ours; then help with unclaimed tids instead
         // of parking — participants may be queued behind busy workers
         // (or not exist at all on a 1-worker pool).
@@ -1682,7 +1695,7 @@ impl Executor for RelayExec {
             if let Some(t) = r.take_tid() {
                 step = 0;
                 r.run_tid(t);
-            } else if r.pending.load(Acquire) == 0 {
+            } else if r.pending.load(Acquire) == 0 { // order: Acquire — joins the participants' AcqRel decrements
                 break;
             } else if step < WAIT_SPINS {
                 std::hint::spin_loop();
@@ -1703,7 +1716,7 @@ impl Executor for RelayExec {
 
 impl Drop for Runtime {
     fn drop(&mut self) {
-        self.shared.shutdown.store(true, Release);
+        self.shared.shutdown.store(true, Release); // order: Release shutdown; workers join with Acquire
         for w in &self.workers {
             w.thread.unpark();
         }

@@ -183,13 +183,16 @@ impl Topology {
     }
 
     /// Read the topology from Linux sysfs; `None` when unavailable.
-    #[cfg(target_os = "linux")]
+    // Miri isolates the interpreted program from the host filesystem,
+    // so sysfs discovery is compiled out and tests fall back to the
+    // `ICH_TOPOLOGY` override / single-node default.
+    #[cfg(all(target_os = "linux", not(miri)))]
     fn from_sysfs() -> Option<Topology> {
         Topology::from_node_dirs("/sys/devices/system/node")
             .or_else(|| Topology::from_package_ids("/sys/devices/system/cpu"))
     }
 
-    #[cfg(not(target_os = "linux"))]
+    #[cfg(any(not(target_os = "linux"), miri))]
     fn from_sysfs() -> Option<Topology> {
         None
     }

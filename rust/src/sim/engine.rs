@@ -99,6 +99,11 @@ pub trait SimSched {
     fn acquire(&mut self, tid: usize, now: f64, ctx: &mut SimCtx) -> Acquire;
     /// Chunk [lo, hi) finished at `now` on `tid`.
     fn on_complete(&mut self, _tid: usize, _lo: usize, _hi: usize, _now: f64, _ctx: &mut SimCtx) {}
+    /// An assist joiner `tid` entered the loop (fired once per joiner,
+    /// by `AssistSim`). Policies whose estimates divide by the number
+    /// of participants widen the divisor here, mirroring the runtime's
+    /// `ws::Shared::register_joiner`.
+    fn notify_join(&mut self, _tid: usize) {}
 }
 
 /// Result of simulating one loop (or a whole loop sequence).

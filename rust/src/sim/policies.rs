@@ -94,6 +94,11 @@ impl SimSched for AssistSim {
             if !self.joined[s] {
                 self.joined[s] = true;
                 self.assists += 1;
+                // The runtime registers a joiner in the participant
+                // divisor before it executes its first chunk
+                // (`Shared::register_joiner`); the sim mirror is this
+                // forward.
+                self.inner.notify_join(tid);
             }
         }
         self.inner.acquire(tid, now, ctx)
@@ -345,6 +350,12 @@ struct WsSim {
     /// `ForOpts::default()` resolves to, so the sim follows the
     /// runtime when the user switches to uniform stealing.
     victim: VictimPolicy,
+    /// Threads currently in the μ divisor: the base members plus every
+    /// assist joiner that has actually entered (`notify_join`). The
+    /// runtime mirror is `ws::Shared::participants` — dividing by the
+    /// padded slot count instead would deflate μ with slots whose k is
+    /// still 0 because the joiner never arrived.
+    active: usize,
 }
 
 impl WsSim {
@@ -381,6 +392,7 @@ impl WsSim {
             sel: (0..p).map(|_| VictimSelector::new()).collect(),
             sockets: Vec::new(),
             victim,
+            active: p,
         }
     }
 
@@ -402,6 +414,14 @@ impl WsSim {
 
     fn remaining(&self, tid: usize) -> usize {
         self.deques[tid].1 - self.deques[tid].0
+    }
+
+    /// §3.2 mean progress over the threads actually participating —
+    /// identical to `ws::Shared::mu()`'s done/participants once the
+    /// joiners' samples are folded in (pinned by the checker's
+    /// `mu_merge` model and `ws_mu_divisor_tracks_joined_threads`).
+    fn mu(&self) -> f64 {
+        self.states.iter().map(|s| s.k).sum::<f64>() / self.active as f64
     }
 
     fn chunk_for(&self, tid: usize) -> usize {
@@ -524,17 +544,24 @@ impl SimSched for WsSim {
         Acquire::Chunk { lo, hi: lo + c, overhead: cost + ctx.spec.c_dispatch_local }
     }
 
-    fn on_complete(&mut self, tid: usize, lo: usize, hi: usize, _now: f64, ctx: &mut SimCtx) {
+    fn on_complete(&mut self, tid: usize, lo: usize, hi: usize, _now: f64, _ctx: &mut SimCtx) {
         let st = &mut self.states[tid];
         st.k += (hi - lo) as f64;
         if let WsMode::Adaptive(prm) = &self.mode {
-            // §3.2: classify against μ ± δ over *all* threads' k.
-            let mu = self.states.iter().map(|s| s.k).sum::<f64>() / ctx.p as f64;
+            // §3.2: classify against μ ± δ over the participating
+            // threads' k (joiners enter the divisor via notify_join).
+            let mu = self.mu();
             let delta = policy::delta(prm.eps, mu);
             let st = &mut self.states[tid];
             let class = policy::classify(st.k, mu, delta);
             st.d = if prm.inverted { policy::adapt_inverted(st.d, class) } else { policy::adapt(st.d, class) };
         }
+    }
+
+    fn notify_join(&mut self, _tid: usize) {
+        // Fired at most once per joiner (AssistSim's joined[] guard);
+        // capped defensively at the padded slot count.
+        self.active = (self.active + 1).min(self.states.len());
     }
 }
 
@@ -927,6 +954,63 @@ mod tests {
             assert_eq!(a.steals_ok, b.steals_ok, "policy {}", pol.name());
             assert_eq!(a.iters_per_thread, b.iters_per_thread, "policy {}", pol.name());
         }
+    }
+
+    #[test]
+    fn ws_mu_divisor_tracks_joined_threads() {
+        // PR 6 follow-up, pinned against the checker's `mu_merge`
+        // model: members have completed 4 and 2 iterations when the
+        // assist joiner enters and contributes 6. Pre-join μ divides
+        // by the 2 members (μ = 3); post-join by 3 participants
+        // (μ = (4+2+6)/3 = 4) — never by the padded slot count, which
+        // would deflate μ with never-arrived joiners' zero progress.
+        let mut ws = WsSim::adaptive(12, 2, IchParams::default()).padded(3);
+        assert_eq!(ws.active, 2, "padding must not widen the divisor");
+        ws.states[0].k = 4.0;
+        ws.states[1].k = 2.0;
+        assert!((ws.mu() - 3.0).abs() < 1e-12, "pre-join μ over members only, got {}", ws.mu());
+        ws.notify_join(2);
+        ws.states[2].k = 6.0;
+        assert!((ws.mu() - 4.0).abs() < 1e-12, "post-join μ counts the joiner, got {}", ws.mu());
+    }
+
+    #[test]
+    fn assist_sim_forwards_join_to_inner_policy_exactly_once() {
+        use crate::util::rng::Rng;
+
+        struct JoinProbe {
+            joins: std::rc::Rc<std::cell::RefCell<Vec<usize>>>,
+        }
+        impl SimSched for JoinProbe {
+            fn acquire(&mut self, _tid: usize, _now: f64, _ctx: &mut SimCtx) -> Acquire {
+                Acquire::Done
+            }
+            fn notify_join(&mut self, tid: usize) {
+                self.joins.borrow_mut().push(tid);
+            }
+        }
+
+        let joins = std::rc::Rc::new(std::cell::RefCell::new(Vec::new()));
+        let mut sched = AssistSim::new(Box::new(JoinProbe { joins: joins.clone() }), 2, vec![0.0]);
+        let spec = MachineSpec::default();
+        let mut ctx = SimCtx {
+            spec: &spec,
+            p: 3,
+            n: 10,
+            rng: Rng::new(0),
+            central_free: 0.0,
+            queue_free: vec![0.0; 3],
+            executed: 0,
+            chunks: 0,
+            steals_ok: 0,
+            steals_local: 0,
+            steals_fail: 0,
+        };
+        let _ = sched.acquire(0, 0.0, &mut ctx); // member: never a join
+        let _ = sched.acquire(2, 1.0, &mut ctx); // joiner enters
+        let _ = sched.acquire(2, 2.0, &mut ctx); // re-acquire: no second join
+        assert_eq!(*joins.borrow(), vec![2], "joiner tid forwarded to the inner policy once");
+        assert_eq!(sched.assists, 1);
     }
 
     #[test]

@@ -1,0 +1,237 @@
+//! `ich lint-atomics`: in-house lint for the lock-free scheduler core.
+//!
+//! Two conventions, enforced in CI (stand-ins for clippy restriction
+//! lints, which the offline zero-dependency build cannot run):
+//!
+//! - every atomic operation that names a memory `Ordering` must carry
+//!   an adjacent `// order:` comment justifying the choice (same line
+//!   or within the six lines directly above — a trailing note or a
+//!   short block above the call both count);
+//! - every `unsafe` keyword must carry an adjacent `// SAFETY:`
+//!   comment, same adjacency rule.
+//!
+//! `#[cfg(test)] mod tests` blocks are exempt: test assertions poke
+//! atomics to *observe* state, they are not protocol code. The models
+//! in `check::models` are deliberately **not** exempt — they document
+//! the production protocols and their mutants, so their orderings are
+//! exactly where the comments matter most.
+
+use std::fs;
+use std::io;
+use std::path::Path;
+
+/// One convention violation at `file:line`.
+#[derive(Debug)]
+pub struct Violation {
+    pub file: String,
+    pub line: usize,
+    pub message: String,
+}
+
+/// Atomic methods whose call sites take an `Ordering`.
+const ATOMIC_METHODS: &[&str] = &[
+    ".load(",
+    ".store(",
+    ".swap(",
+    ".fetch_add(",
+    ".fetch_sub(",
+    ".fetch_or(",
+    ".fetch_and(",
+    ".fetch_xor(",
+    ".fetch_max(",
+    ".fetch_min(",
+    ".compare_exchange(",
+    ".compare_exchange_weak(",
+];
+
+/// Evidence that the call on this line actually passes an `Ordering`
+/// (filters out `Vec::swap`, `HashMap` lookups, and other homonyms).
+const ORDER_TOKENS: &[&str] =
+    &["Relaxed", "Acquire", "Release", "AcqRel", "SeqCst", "ord)", "ord,", "ordering)", "ordering,", "self.ord"];
+
+/// How many lines above a site the justifying comment may sit (block
+/// comments explaining a protocol edge run to a handful of lines).
+const LOOKBACK: usize = 6;
+
+fn is_comment_line(line: &str) -> bool {
+    line.trim_start().starts_with("//")
+}
+
+/// The keyword, spelled non-contiguously so the lint does not flag
+/// its own needle when scanning this file.
+const UNSAFE_KW: &str = concat!("un", "safe");
+
+/// Does `line` contain the `unsafe` keyword as a standalone token
+/// (not part of a longer identifier such as `unsafe_code`)?
+fn has_unsafe_token(line: &str) -> bool {
+    let bytes = line.as_bytes();
+    let mut from = 0;
+    while let Some(pos) = line[from..].find(UNSAFE_KW) {
+        let start = from + pos;
+        let end = start + UNSAFE_KW.len();
+        let pre_ok = start == 0 || !(bytes[start - 1].is_ascii_alphanumeric() || bytes[start - 1] == b'_');
+        let post_ok = end >= bytes.len() || !(bytes[end].is_ascii_alphanumeric() || bytes[end] == b'_');
+        if pre_ok && post_ok {
+            return true;
+        }
+        from = end;
+    }
+    false
+}
+
+/// First line index belonging to a trailing `#[cfg(test)] mod tests`
+/// block (the repo convention keeps it last in the file); everything
+/// from there on is exempt.
+fn test_cutoff(lines: &[&str]) -> usize {
+    for (i, line) in lines.iter().enumerate() {
+        let t = line.trim_start();
+        if t.starts_with("mod tests") {
+            // The `#[cfg(test)]` attribute sits directly above.
+            return i.saturating_sub(1);
+        }
+    }
+    lines.len()
+}
+
+fn marker_nearby(lines: &[&str], i: usize, marker: &str) -> bool {
+    if lines[i].contains(marker) {
+        return true;
+    }
+    lines[..i].iter().rev().take(LOOKBACK).any(|l| l.contains(marker))
+}
+
+/// Lint one file's source text. `file` is only used for reporting.
+pub fn lint_source(file: &str, src: &str) -> Vec<Violation> {
+    let lines: Vec<&str> = src.lines().collect();
+    let cutoff = test_cutoff(&lines);
+    let mut out = Vec::new();
+    for (i, line) in lines.iter().enumerate().take(cutoff) {
+        if is_comment_line(line) {
+            continue;
+        }
+        let atomic = ATOMIC_METHODS.iter().any(|m| line.contains(m))
+            && ORDER_TOKENS.iter().any(|t| line.contains(t));
+        if atomic && !marker_nearby(&lines, i, "// order:") {
+            out.push(Violation {
+                file: file.to_string(),
+                line: i + 1,
+                message: "atomic operation without an adjacent `// order:` comment".to_string(),
+            });
+        }
+        if has_unsafe_token(line) && !marker_nearby(&lines, i, "// SAFETY:") {
+            out.push(Violation {
+                file: file.to_string(),
+                line: i + 1,
+                message: format!("`{UNSAFE_KW}` without an adjacent `// SAFETY:` comment"),
+            });
+        }
+    }
+    out
+}
+
+fn walk(dir: &Path, files: &mut Vec<std::path::PathBuf>) -> io::Result<()> {
+    let mut entries: Vec<_> = fs::read_dir(dir)?.collect::<Result<_, _>>()?;
+    entries.sort_by_key(|e| e.path());
+    for e in entries {
+        let p = e.path();
+        if p.is_dir() {
+            walk(&p, files)?;
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            files.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Lint every `.rs` file under `root` (recursively, deterministic
+/// order).
+pub fn scan_dir(root: &Path) -> io::Result<Vec<Violation>> {
+    let mut files = Vec::new();
+    walk(root, &mut files)?;
+    let mut out = Vec::new();
+    for f in files {
+        let src = fs::read_to_string(&f)?;
+        let display = f.strip_prefix(root).unwrap_or(&f).display().to_string();
+        out.extend(lint_source(&display, &src));
+    }
+    Ok(out)
+}
+
+/// CLI driver: print violations `file:line: message`, return the
+/// process exit code (0 clean, 1 violations, 2 I/O trouble).
+pub fn run(root: &Path) -> i32 {
+    match scan_dir(root) {
+        Ok(violations) if violations.is_empty() => {
+            println!("lint-atomics: clean ({})", root.display());
+            0
+        }
+        Ok(violations) => {
+            for v in &violations {
+                eprintln!("{}:{}: {}", v.file, v.line, v.message);
+            }
+            eprintln!("lint-atomics: {} violation(s)", violations.len());
+            1
+        }
+        Err(e) => {
+            eprintln!("lint-atomics: cannot scan {}: {e}", root.display());
+            2
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn annotated_atomic_passes() {
+        let src = "fn f(a: &AtomicUsize) {\n    a.store(1, Ordering::Release); // order: publish\n}\n";
+        assert!(lint_source("x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn comment_block_above_counts() {
+        let src = "fn f(a: &AtomicUsize) {\n    // order: publish the flag before parking;\n    // the consumer swaps it with AcqRel.\n    a.store(1, Ordering::Release);\n}\n";
+        assert!(lint_source("x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn bare_atomic_fails() {
+        let src = "fn f(a: &AtomicUsize) {\n    a.store(1, Ordering::Release);\n}\n";
+        let v = lint_source("x.rs", src);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].line, 2);
+        assert!(v[0].message.contains("order:"));
+    }
+
+    #[test]
+    fn non_atomic_homonyms_ignored() {
+        let src = "fn f(v: &mut Vec<u32>) {\n    v.swap(0, 1);\n    let _ = map.load(key);\n}\n";
+        assert!(lint_source("x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn unsafe_requires_safety_comment() {
+        let bad = "fn f() {\n    unsafe { core() }\n}\n";
+        let v = lint_source("x.rs", bad);
+        assert_eq!(v.len(), 1);
+        assert!(v[0].message.contains("SAFETY"));
+        let good = "fn f() {\n    // SAFETY: core() has no preconditions here.\n    unsafe { core() }\n}\n";
+        assert!(lint_source("x.rs", good).is_empty());
+    }
+
+    #[test]
+    fn unsafe_token_is_word_bounded() {
+        let src = "#![forbid(unsafe_code)]\nfn f() { let my_unsafe_flag = 1; }\n";
+        assert!(lint_source("x.rs", src).is_empty());
+        assert!(has_unsafe_token("unsafe fn g()"));
+        assert!(has_unsafe_token("let x = unsafe { 1 };"));
+        assert!(!has_unsafe_token("unsafety"));
+    }
+
+    #[test]
+    fn trailing_test_module_is_exempt() {
+        let src = "fn f(a: &AtomicUsize) {\n    a.store(1, Ordering::Release); // order: publish\n}\n\n#[cfg(test)]\nmod tests {\n    fn t(a: &AtomicUsize) {\n        a.store(1, Ordering::Relaxed);\n        unsafe { poke() }\n    }\n}\n";
+        assert!(lint_source("x.rs", src).is_empty());
+    }
+}

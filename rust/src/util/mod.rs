@@ -10,6 +10,7 @@ pub mod cli;
 pub mod error;
 pub mod histogram;
 pub mod json;
+pub mod lint;
 pub mod proptest_lite;
 pub mod rng;
 pub mod stats;

@@ -1,6 +1,43 @@
 //! Concurrency primitives the offline build cannot take from
 //! `crossbeam-utils`: a cache-line-padded cell used by every shared
-//! per-thread counter so the hot paths never false-share.
+//! per-thread counter so the hot paths never false-share — plus the
+//! [`shim`] aliases that swap the scheduler core's atomics for the
+//! model checker's instrumented types in test/check builds.
+
+/// Checker-aware synchronization aliases. Protocol modules
+/// (`sched::deque`, `sched::assist`, …) import their atomics, locks,
+/// and spin backoff from here instead of `std::sync`: in production
+/// builds these ARE the std types (plain re-exports — zero cost, no
+/// behavioral change), while under `cfg(test)` or `--features check`
+/// they are `crate::check`'s shims, which behave exactly like the std
+/// types until a model-checker exploration is active on the current
+/// thread (then every operation becomes an enumerated schedule
+/// point). This is what lets `check::models` run the *real* protocol
+/// code — clamp, gate, rollback and all — under exhaustive
+/// interleaving search without a parallel copy of the logic.
+pub mod shim {
+    #[cfg(any(test, feature = "check"))]
+    pub use crate::check::atomic::{AtomicBool, AtomicU64, AtomicUsize};
+    #[cfg(any(test, feature = "check"))]
+    pub use crate::check::sync::{backoff, Condvar, Mutex, MutexGuard};
+
+    #[cfg(not(any(test, feature = "check")))]
+    pub use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize};
+    #[cfg(not(any(test, feature = "check")))]
+    pub use std::sync::{Condvar, Mutex, MutexGuard};
+
+    /// Spin/yield backoff ladder (production build: the checker is
+    /// compiled out, so this is the plain ladder the scheduler always
+    /// used).
+    #[cfg(not(any(test, feature = "check")))]
+    pub fn backoff(step: usize) {
+        if step < 64 {
+            std::hint::spin_loop();
+        } else {
+            std::thread::yield_now();
+        }
+    }
+}
 
 /// Pads and aligns `T` to 128 bytes (two 64-byte lines — covers the
 /// adjacent-line prefetcher on x86 and the 128-byte lines on some ARM

@@ -542,6 +542,9 @@ fn distance_rank() {
     out.set("topology_cores", Json::num(topo.cores() as f64));
     out.set("topology_tiers", Json::num(topo.tier_count() as f64));
     out.set("topology_override", Json::Bool(topology_overridden()));
+    // The calibrated (or ICH_EDF_TICK-pinned) EDF distance-penalty
+    // scale every pool claim in this process weighted SLIT hops by.
+    out.set("edf_tick_scale", Json::num(ich::sched::topology::edf_tick_scale()));
     let dist: Vec<Json> = topo
         .distance_matrix()
         .iter()

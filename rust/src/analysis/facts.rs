@@ -1,0 +1,487 @@
+//! Per-function facts (lock acquisitions, calls, blocking sites,
+//! claim-loop contract markers) plus the crate-wide call-graph index
+//! the rules propagate over. All scans run on [`super::lex`]-cleaned
+//! code, so literals and comments can't fake a site.
+
+use std::collections::HashMap;
+
+use super::lex::{clean_lines, is_word, CleanLine};
+use super::parse::{parse_fns, FnItem};
+
+/// A resolved-later call site: `qual::name(...)` or bare `name(...)`.
+pub struct Call {
+    pub qual: Option<String>,
+    pub name: String,
+    pub line: usize,
+}
+
+/// Everything a rule needs to know about one function body.
+#[derive(Default)]
+pub struct Facts {
+    /// (lock identity, line, bound-to-a-guard).
+    pub acquires: Vec<(String, usize, bool)>,
+    pub calls: Vec<Call>,
+    /// (what, line) — sites matching a known blocking pattern.
+    pub blocking: Vec<(&'static str, usize)>,
+    pub has_preempt: bool,
+    pub has_run_assistable: bool,
+    pub has_note_assist: bool,
+    pub has_chunk_acct: bool,
+}
+
+/// Identifier ending right before byte `end` (exclusive), walking
+/// back over `[A-Za-z0-9_.]` and trimming to a valid chain.
+fn chain_before(code: &str, end: usize) -> Option<&str> {
+    let bytes = code.as_bytes();
+    let mut s = end;
+    while s > 0 {
+        let c = bytes[s - 1] as char;
+        if is_word(c) || c == '.' {
+            s -= 1;
+        } else {
+            break;
+        }
+    }
+    while s < end && !(bytes[s] as char).is_ascii_alphabetic() && bytes[s] != b'_' {
+        s += 1; // chain must start with a letter or `_`
+    }
+    if s < end {
+        Some(&code[s..end])
+    } else {
+        None
+    }
+}
+
+/// Final path segment of a lock chain: `self.shared.queue` -> `queue`.
+pub fn lock_id(chain: &str) -> String {
+    chain.rsplit('.').next().unwrap_or(chain).to_string()
+}
+
+/// `let [mut] <g> = <expr>.lock()[.unwrap()|.expect(..)];` — a guard
+/// bound for the rest of the enclosing block. Returns the binding.
+pub fn guard_binding(code: &str) -> Option<String> {
+    let t = code.trim();
+    let rest = t.strip_prefix("let ")?;
+    let rest = rest.trim_start();
+    let rest = rest.strip_prefix("mut ").unwrap_or(rest).trim_start();
+    let bytes = rest.as_bytes();
+    let mut k = 0;
+    while k < bytes.len() && is_word(bytes[k] as char) {
+        k += 1;
+    }
+    if k == 0 {
+        return None;
+    }
+    let name = &rest[..k];
+    let tail = rest[k..].trim_start();
+    let tail = tail.strip_prefix('=')?;
+    if tail.contains(';') && !tail.trim_end().ends_with(';') {
+        return None;
+    }
+    let mid = tail.trim().strip_suffix(';')?.trim_end();
+    let p = mid.find(".lock()")?;
+    let after = &mid[p + 7..];
+    let whole = after.is_empty()
+        || after == ".unwrap()"
+        || (after.starts_with(".expect(") && after.ends_with(')') && !after[8..after.len() - 1].contains(')'));
+    if whole {
+        Some(name.to_string())
+    } else {
+        None
+    }
+}
+
+/// `match <expr>.lock()` / `if let .. = <expr>.lock()` — a guard
+/// scoped to the match/if body opened on this line.
+pub fn match_guard(code: &str) -> bool {
+    if !code.contains(".lock()") {
+        return false;
+    }
+    has_token(code, "match") || code.contains("if let ")
+}
+
+/// Word-boundary token search.
+pub fn has_token(code: &str, tok: &str) -> bool {
+    let bytes = code.as_bytes();
+    let mut from = 0usize;
+    while let Some(p) = code[from..].find(tok).map(|p| p + from) {
+        from = p + tok.len();
+        let pre_ok = p == 0 || !is_word(bytes[p - 1] as char);
+        let post = p + tok.len();
+        let post_ok = post >= bytes.len() || !is_word(bytes[post] as char);
+        if pre_ok && post_ok {
+            return true;
+        }
+    }
+    false
+}
+
+/// All `<pat>` occurrences whose preceding char is not a word char
+/// (so `unpark(` never matches `park(`).
+fn bounded_hits(code: &str, pat: &str) -> usize {
+    let bytes = code.as_bytes();
+    let mut from = 0usize;
+    let mut hits = 0usize;
+    while let Some(p) = code[from..].find(pat).map(|p| p + from) {
+        from = p + pat.len();
+        if p == 0 || !is_word(bytes[p - 1] as char) {
+            hits += 1;
+        }
+    }
+    hits
+}
+
+/// Blocking patterns rule 2 hunts for. `.lock(` is matched separately
+/// through the acquisition scan so it shares the guard bookkeeping.
+const BLOCKING_METHODS: [(&str, &str); 6] = [
+    (".wait(", "Condvar::wait"),
+    (".wait_timeout(", "Condvar::wait_timeout"),
+    (".wait_while(", "Condvar::wait_while"),
+    (".join()", "join()"),
+    (".recv(", "channel recv"),
+    (".recv_timeout(", "channel recv_timeout"),
+];
+const BLOCKING_FREE: [(&str, &str); 4] = [
+    ("park(", "thread::park"),
+    ("park_timeout(", "thread::park_timeout"),
+    ("sleep(", "sleep"),
+    ("join_wait(", "join_wait"),
+];
+
+/// Extract facts for one fn body (signature line through close brace).
+pub fn extract_facts(lines: &[CleanLine], f: &FnItem) -> Facts {
+    let mut fx = Facts::default();
+    for i in f.start..=f.end {
+        let code = lines[i].code.as_str();
+        // lock acquisitions (also double as blocking sites)
+        let mut from = 0usize;
+        while let Some(p) = code[from..].find(".lock(").map(|p| p + from) {
+            from = p + 6;
+            if let Some(chain) = chain_before(code, p) {
+                let guarded = guard_binding(code).is_some() || match_guard(code);
+                fx.acquires.push((lock_id(chain), i, guarded));
+                fx.blocking.push(("Mutex::lock", i));
+            }
+        }
+        for (pat, label) in BLOCKING_METHODS {
+            let mut from = 0usize;
+            while let Some(p) = code[from..].find(pat).map(|p| p + from) {
+                from = p + pat.len();
+                fx.blocking.push((label, i));
+            }
+        }
+        for (pat, label) in BLOCKING_FREE {
+            for _ in 0..bounded_hits(code, pat) {
+                fx.blocking.push((label, i));
+            }
+        }
+        scan_calls(code, i, &mut fx.calls);
+        if code.contains("preempt_point(") {
+            fx.has_preempt = true;
+        }
+        if code.contains("run_assistable(") {
+            fx.has_run_assistable = true;
+        }
+        if code.contains("note_assist(") {
+            fx.has_note_assist = true;
+        }
+        for pat in ["add_chunk_at(", "add_bulk(", "add_assist_bulk(", "add_chunk("] {
+            if code.contains(pat) {
+                fx.has_chunk_acct = true;
+            }
+        }
+    }
+    fx
+}
+
+/// Rust keywords and binding forms that look like bare calls.
+fn is_keyword(s: &str) -> bool {
+    matches!(
+        s,
+        "as" | "async" | "await" | "box" | "break" | "const" | "continue" | "crate" | "dyn"
+            | "else" | "enum" | "extern" | "false" | "fn" | "for" | "if" | "impl" | "in"
+            | "let" | "loop" | "match" | "mod" | "move" | "mut" | "pub" | "ref" | "return"
+            | "static" | "struct" | "super" | "trait" | "true" | "type" | "union" | "use"
+            | "where" | "while"
+    )
+}
+
+/// Collect qualified (`Q::name(`) and bare (`name(`) call sites.
+fn scan_calls(code: &str, line: usize, out: &mut Vec<Call>) {
+    let bytes = code.as_bytes();
+    let n = bytes.len();
+    let mut i = 0usize;
+    while i < n {
+        let c = bytes[i] as char;
+        if !(c.is_ascii_alphabetic() || c == '_') {
+            i += 1;
+            continue;
+        }
+        let s = i;
+        while i < n && is_word(bytes[i] as char) {
+            i += 1;
+        }
+        let name = &code[s..i];
+        // skip whitespace between name and `(`
+        let mut j = i;
+        while j < n && bytes[j] == b' ' {
+            j += 1;
+        }
+        if j >= n || bytes[j] != b'(' {
+            continue;
+        }
+        // `name!(...)` is a macro, not a call
+        if i < n && bytes[i] == b'!' {
+            continue;
+        }
+        let prev = if s == 0 { ' ' } else { bytes[s - 1] as char };
+        if prev == '.' {
+            continue; // method call: pattern-matched, never traversed
+        }
+        if prev == ':' {
+            // qualified: walk back over `<Qual>::`
+            if s >= 2 && bytes[s - 2] == b':' {
+                if let Some(q) = chain_before(code, s - 2) {
+                    let qual = q.rsplit('.').next().unwrap_or(q);
+                    if !name.is_empty() && name.chars().next().unwrap().is_ascii_lowercase() || name.starts_with('_') {
+                        out.push(Call { qual: Some(qual.to_string()), name: name.to_string(), line });
+                    }
+                }
+            }
+            continue;
+        }
+        if is_word(prev) || prev == '\'' || prev == '"' {
+            continue;
+        }
+        if is_keyword(name) || name.chars().next().unwrap().is_ascii_uppercase() {
+            continue;
+        }
+        out.push(Call { qual: None, name: name.to_string(), line });
+    }
+}
+
+/// Allow-directive bookkeeping plus the parsed skeleton of one file.
+pub struct FileModel {
+    pub rel: String,
+    pub raw: Vec<String>,
+    pub lines: Vec<CleanLine>,
+    pub fns: Vec<FnItem>,
+    pub depth_start: Vec<usize>,
+    site_allow: HashMap<usize, Vec<String>>,
+    fn_allow: HashMap<usize, Vec<String>>,
+}
+
+/// Parse `analysis: allow(<rule>[, reason])` out of a comment.
+fn allow_rule(comment: &str) -> Option<String> {
+    let p = comment.find("analysis:")?;
+    let rest = comment[p + 9..].trim_start();
+    let rest = rest.strip_prefix("allow(")?;
+    let end = rest.find(|c| c == ',' || c == ')')?;
+    let rule = rest[..end].trim();
+    if rule.is_empty() {
+        None
+    } else {
+        Some(rule.to_string())
+    }
+}
+
+impl FileModel {
+    pub fn new(rel: &str, src: &str) -> Self {
+        let raw: Vec<String> = src.split('\n').map(|s| s.to_string()).collect();
+        let lines = clean_lines(src);
+        let (fns, depth_start) = parse_fns(&lines);
+        let mut fm = FileModel {
+            rel: rel.to_string(),
+            raw,
+            lines,
+            fns,
+            depth_start,
+            site_allow: HashMap::new(),
+            fn_allow: HashMap::new(),
+        };
+        fm.collect_allows();
+        fm
+    }
+
+    fn collect_allows(&mut self) {
+        let fn_starts: HashMap<usize, ()> = self.fns.iter().map(|f| (f.start, ())).collect();
+        for i in 0..self.lines.len() {
+            let rule = match allow_rule(&self.lines[i].comment) {
+                Some(r) => r,
+                None => continue,
+            };
+            if !self.lines[i].code.trim().is_empty() {
+                self.site_allow.entry(i).or_default().push(rule);
+                continue;
+            }
+            // Comment-only directive: applies to the next code line
+            // (skipping comments/attributes); if that line starts a fn,
+            // the allow is fn-wide and stops rule traversal into it.
+            let mut j = i + 1;
+            while j < self.lines.len() {
+                let cj = self.lines[j].code.trim();
+                if !cj.is_empty() && !cj.starts_with("#[") {
+                    break;
+                }
+                j += 1;
+            }
+            if j < self.lines.len() {
+                if fn_starts.contains_key(&j) {
+                    self.fn_allow.entry(j).or_default().push(rule);
+                } else {
+                    self.site_allow.entry(j).or_default().push(rule);
+                }
+            }
+        }
+    }
+
+    /// Is `rule` suppressed at `line` (same line or the line above),
+    /// or fn-wide for the fn starting at `fn_start`?
+    pub fn allowed(&self, rule: &str, line: usize, fn_start: Option<usize>) -> bool {
+        let hit = |l: usize| self.site_allow.get(&l).map_or(false, |v| v.iter().any(|r| r == rule));
+        if hit(line) || (line > 0 && hit(line - 1)) {
+            return true;
+        }
+        if let Some(s) = fn_start {
+            if self.fn_allow.get(&s).map_or(false, |v| v.iter().any(|r| r == rule)) {
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Fn-wide allow check only (used to prune call-graph traversal).
+    pub fn fn_allowed(&self, rule: &str, fn_start: usize) -> bool {
+        self.fn_allow.get(&fn_start).map_or(false, |v| v.iter().any(|r| r == rule))
+    }
+}
+
+/// The whole-crate view: files, flattened non-test fns, their facts,
+/// and the name-resolution indices.
+pub struct Crate {
+    pub files: Vec<FileModel>,
+    /// (file index, fn index within that file).
+    pub fns: Vec<(usize, usize)>,
+    pub facts: Vec<Facts>,
+    by_name_free: HashMap<String, Vec<usize>>,
+    by_impl: HashMap<(String, String), Vec<usize>>,
+    by_file_free: HashMap<(String, String), Vec<usize>>,
+}
+
+/// File stem of a path: `src/sched/ws.rs` -> `ws`.
+fn stem(rel: &str) -> String {
+    let base = rel.rsplit('/').next().unwrap_or(rel);
+    base.strip_suffix(".rs").unwrap_or(base).to_string()
+}
+
+impl Crate {
+    pub fn build(files: Vec<FileModel>) -> Self {
+        let mut c = Crate {
+            files,
+            fns: Vec::new(),
+            facts: Vec::new(),
+            by_name_free: HashMap::new(),
+            by_impl: HashMap::new(),
+            by_file_free: HashMap::new(),
+        };
+        for fi in 0..c.files.len() {
+            for gi in 0..c.files[fi].fns.len() {
+                if c.files[fi].fns[gi].is_test {
+                    continue;
+                }
+                let fx = extract_facts(&c.files[fi].lines, &c.files[fi].fns[gi]);
+                let id = c.fns.len();
+                c.fns.push((fi, gi));
+                c.facts.push(fx);
+                let name = c.files[fi].fns[gi].name.clone();
+                let impl_type = c.files[fi].fns[gi].impl_type.clone();
+                let file_stem = stem(&c.files[fi].rel);
+                match impl_type {
+                    Some(t) => c.by_impl.entry((t, name)).or_default().push(id),
+                    None => {
+                        c.by_name_free.entry(name.clone()).or_default().push(id);
+                        c.by_file_free.entry((file_stem, name)).or_default().push(id);
+                    }
+                }
+            }
+        }
+        c
+    }
+
+    pub fn file_of(&self, id: usize) -> &FileModel {
+        &self.files[self.fns[id].0]
+    }
+
+    pub fn item_of(&self, id: usize) -> &FnItem {
+        let (fi, gi) = self.fns[id];
+        &self.files[fi].fns[gi]
+    }
+
+    /// Resolve a call site to candidate fn ids. Bare names prefer
+    /// same-file free fns; `mod::name(` falls back to free fns in
+    /// `mod.rs`; `Type::name(` hits that impl's methods; `Self::name(`
+    /// uses the caller's impl type. Unresolvable calls return empty.
+    pub fn resolve(&self, caller: usize, call: &Call) -> Vec<usize> {
+        let fm = self.file_of(caller);
+        match &call.qual {
+            Some(q) => {
+                let q = if q == "Self" {
+                    match &self.item_of(caller).impl_type {
+                        Some(t) => t.clone(),
+                        None => return Vec::new(),
+                    }
+                } else {
+                    q.clone()
+                };
+                if let Some(v) = self.by_impl.get(&(q.clone(), call.name.clone())) {
+                    return v.clone();
+                }
+                self.by_file_free.get(&(q, call.name.clone())).cloned().unwrap_or_default()
+            }
+            None => {
+                let all = match self.by_name_free.get(&call.name) {
+                    Some(v) => v,
+                    None => return Vec::new(),
+                };
+                let same: Vec<usize> =
+                    all.iter().copied().filter(|&k| self.fns[k].0 == self.fns[caller].0).collect();
+                if same.is_empty() {
+                    all.clone()
+                } else {
+                    same
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn guard_vs_temporary() {
+        assert_eq!(guard_binding("        let mut q = self.shared.queue.lock().unwrap();"), Some("q".into()));
+        assert_eq!(guard_binding("        let real = mx.lock().expect(      );"), Some("real".into()));
+        assert_eq!(guard_binding("        let recs = self.records.lock().unwrap().clone();"), None);
+        assert_eq!(guard_binding("        *self.report.lock().unwrap() = info;"), None);
+    }
+
+    #[test]
+    fn call_scan_classifies() {
+        let mut out = Vec::new();
+        scan_calls("        claim(Some(tid)); policy::guided_chunk(n, p, 1); x.take(3); Foo::new()", 0, &mut out);
+        let names: Vec<(Option<&str>, &str)> =
+            out.iter().map(|c| (c.qual.as_deref(), c.name.as_str())).collect();
+        assert!(names.contains(&(None, "claim")));
+        assert!(names.contains(&(Some("policy"), "guided_chunk")));
+        assert!(!names.iter().any(|(_, n)| *n == "take" || *n == "new" || *n == "Some"));
+    }
+
+    #[test]
+    fn allow_directive_parses() {
+        assert_eq!(allow_rule(" analysis: allow(claim-blocking, reason text)"), Some("claim-blocking".into()));
+        assert_eq!(allow_rule(" analysis: allow(lock-order)"), Some("lock-order".into()));
+        assert_eq!(allow_rule(" nothing here"), None);
+    }
+}

@@ -1,0 +1,203 @@
+//! Line-oriented lexical cleaner for the static analyzer.
+//!
+//! Produces, for every source line, the *code* portion with string,
+//! byte-string, raw-string and char literals blanked out (replaced by
+//! spaces, so later pattern scans can't match inside literal text)
+//! and block comments erased, plus the text of any `//` line comment.
+//! State (open block comments, multi-line strings) carries across
+//! lines, so the caller feeds whole files in order.
+
+/// One cleaned source line.
+pub struct CleanLine {
+    /// Code with literals/comments blanked.
+    pub code: String,
+    /// Text after a `//` line comment, if any ("" otherwise).
+    pub comment: String,
+}
+
+#[derive(Clone, Copy)]
+enum StrState {
+    None,
+    /// Inside a normal (or byte) string literal.
+    Str,
+    /// Inside a raw string; payload is the `#` count of its fence.
+    Raw(usize),
+}
+
+/// True when `c` can be part of an identifier.
+pub fn is_word(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Clean a whole file. Always returns one entry per input line.
+pub fn clean_lines(src: &str) -> Vec<CleanLine> {
+    let mut out = Vec::new();
+    let mut block_depth = 0usize;
+    let mut sstate = StrState::None;
+    for line in src.split('\n') {
+        let ch: Vec<char> = line.chars().collect();
+        let n = ch.len();
+        let mut code = String::new();
+        let mut comment = String::new();
+        let mut i = 0usize;
+        while i < n {
+            if block_depth > 0 {
+                if ch[i] == '*' && i + 1 < n && ch[i + 1] == '/' {
+                    block_depth -= 1;
+                    code.push_str("  ");
+                    i += 2;
+                } else if ch[i] == '/' && i + 1 < n && ch[i + 1] == '*' {
+                    block_depth += 1;
+                    code.push_str("  ");
+                    i += 2;
+                } else {
+                    code.push(' ');
+                    i += 1;
+                }
+                continue;
+            }
+            if let StrState::Raw(h) = sstate {
+                if ch[i] == '"' && (1..=h).all(|k| i + k < n && ch[i + k] == '#') {
+                    sstate = StrState::None;
+                    for _ in 0..=h {
+                        code.push(' ');
+                    }
+                    i += 1 + h;
+                } else {
+                    code.push(' ');
+                    i += 1;
+                }
+                continue;
+            }
+            if let StrState::Str = sstate {
+                if ch[i] == '\\' {
+                    code.push_str("  ");
+                    i += 2;
+                } else if ch[i] == '"' {
+                    sstate = StrState::None;
+                    code.push(' ');
+                    i += 1;
+                } else {
+                    code.push(' ');
+                    i += 1;
+                }
+                continue;
+            }
+            let c = ch[i];
+            if c == '/' && i + 1 < n && ch[i + 1] == '/' {
+                comment = ch[i + 2..].iter().collect();
+                break;
+            }
+            if c == '/' && i + 1 < n && ch[i + 1] == '*' {
+                block_depth += 1;
+                code.push_str("  ");
+                i += 2;
+                continue;
+            }
+            // Raw/byte string prefixes (`r"`, `r#"`, `b"`, `br"`) —
+            // only when the prefix letter is not part of an identifier.
+            if (c == 'r' || c == 'b') && (i == 0 || !is_word(ch[i - 1])) {
+                let mut j = i;
+                if ch[j] == 'b' {
+                    j += 1;
+                }
+                if j < n && ch[j] == 'r' {
+                    j += 1;
+                    let mut h = 0usize;
+                    while j < n && ch[j] == '#' {
+                        j += 1;
+                        h += 1;
+                    }
+                    if j < n && ch[j] == '"' {
+                        sstate = StrState::Raw(h);
+                        for _ in i..=j {
+                            code.push(' ');
+                        }
+                        i = j + 1;
+                        continue;
+                    }
+                } else if j < n && ch[j] == '"' {
+                    sstate = StrState::Str;
+                    for _ in i..=j {
+                        code.push(' ');
+                    }
+                    i = j + 1;
+                    continue;
+                }
+                code.push(c);
+                i += 1;
+                continue;
+            }
+            if c == '"' {
+                sstate = StrState::Str;
+                code.push(' ');
+                i += 1;
+                continue;
+            }
+            if c == '\'' {
+                // Char literal vs lifetime.
+                if i + 1 < n && ch[i + 1] == '\\' {
+                    let mut j = i + 2;
+                    while j < n && ch[j] != '\'' {
+                        j += if ch[j] == '\\' { 2 } else { 1 };
+                    }
+                    let end = j.min(n.saturating_sub(1));
+                    for _ in i..=end {
+                        code.push(' ');
+                    }
+                    i = end + 1;
+                } else if i + 2 < n && ch[i + 2] == '\'' {
+                    code.push_str("   ");
+                    i += 3;
+                } else {
+                    // Lifetime marker: keep, it can't confuse scans.
+                    code.push(c);
+                    i += 1;
+                }
+                continue;
+            }
+            code.push(c);
+            i += 1;
+        }
+        out.push(CleanLine { code, comment });
+    }
+    out
+}
+
+/// Naive substring find over ASCII patterns, returning char index.
+pub fn find_from(hay: &str, pat: &str, from: usize) -> Option<usize> {
+    if from > hay.len() {
+        return None;
+    }
+    hay[from..].find(pat).map(|p| from + p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strings_and_comments_blank_out() {
+        let src = "let x = \"a.lock()\"; // order: hi\nlet y = 'c'; /* m.lock() */ z";
+        let v = clean_lines(src);
+        assert!(!v[0].code.contains("lock"));
+        assert_eq!(v[0].comment.trim(), "order: hi");
+        assert!(!v[1].code.contains("lock"));
+        assert!(v[1].code.contains('z'));
+    }
+
+    #[test]
+    fn raw_strings_and_lifetimes() {
+        let src = "let r = r#\"x.lock()\"#; fn f<'a>(v: &'a str) {}";
+        let v = clean_lines(src);
+        assert!(!v[0].code.contains("lock"));
+        assert!(v[0].code.contains("fn f<'a>"));
+    }
+
+    #[test]
+    fn block_comment_spans_lines() {
+        let v = clean_lines("a /* x\n.lock()\n*/ b");
+        assert!(v[1].code.trim().is_empty());
+        assert!(v[2].code.contains('b'));
+    }
+}

@@ -1,0 +1,285 @@
+//! `ich analyze` — whole-crate static concurrency-contract analyzer.
+//!
+//! A zero-dependency pipeline (this crate has no proc-macro or AST
+//! library, so the analyzer ships its own): [`lex`] blanks literals
+//! and comments, [`parse`] recovers `fn` items with `impl` types and
+//! brace depths, [`facts`] extracts per-function facts and builds the
+//! crate-wide call-graph index, and [`rules`] enforces four contract
+//! families over `src/sched/`, `src/check/` and `src/coordinator/`:
+//!
+//! - **lock-order** — held-lock sets propagate through the call graph
+//!   into a global acquisition-order graph; any cycle fails CI with
+//!   both witnessing paths.
+//! - **claim-blocking** — no `Mutex::lock`, `Condvar::wait`, `join()`,
+//!   `park`, `sleep` or channel `recv` may be transitively reachable
+//!   from an engine claim loop (any fn containing `preempt_point()`),
+//!   nor sit inside a deque-lock critical section.
+//! - **claim-contract** — every `run_assistable` caller must
+//!   structurally reach `preempt_point()`, assist-gate accounting
+//!   (`note_assist`) and a metrics-partition call (`add_chunk_at` /
+//!   `add_bulk` / `add_assist_bulk` / `add_chunk`).
+//! - **order-drift** — every `// order:` comment must carry a
+//!   `[edge-id]` registered in `sched/MEMORY_MODEL.md`, unknown IDs
+//!   fail, and registered edges with zero live sites fail (the doc
+//!   and the code cannot drift apart silently).
+//!
+//! A fifth rule, **lint-atomics**, folds the pre-existing
+//! [`crate::util::lint`] conventions in: `src/` is linted strictly
+//! (atomics need `// order:`, `unsafe` needs `// SAFETY:`), the
+//! `tests/` tree relaxed (`// SAFETY:` only — test code observes
+//! atomics, it doesn't build protocols).
+//!
+//! False positives are silenced in place, never globally:
+//!
+//! ```text
+//! // analysis: allow(<rule>[, reason])
+//! ```
+//!
+//! on (or directly above) the offending line suppresses that rule at
+//! that site; directly above a `fn` it suppresses the rule for the
+//! whole fn *and* stops call-graph traversal into it. The reason text
+//! is free-form (no `)` allowed) and shows up in `git grep` audits.
+
+pub mod facts;
+pub mod lex;
+pub mod parse;
+pub mod rules;
+
+use std::fs;
+use std::path::Path;
+
+use facts::{Crate, FileModel};
+
+/// One analyzer finding at `file:line`.
+#[derive(Debug)]
+pub struct Finding {
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+/// Library entry point (also what the fixture tests drive): analyze a
+/// set of `(relative-path, source)` pairs. The order-drift rule only
+/// runs when `registry_md` (the MEMORY_MODEL.md text) is provided;
+/// `md_rel` names it in findings.
+pub fn analyze_sources(sources: &[(String, String)], registry_md: Option<&str>, md_rel: &str) -> Vec<Finding> {
+    let files: Vec<FileModel> = sources.iter().map(|(rel, src)| FileModel::new(rel, src)).collect();
+    let c = Crate::build(files);
+    let mut out = Vec::new();
+    rules::lock_order(&c, &mut out);
+    rules::claim_blocking(&c, &mut out);
+    rules::claim_contract(&c, &mut out);
+    if let Some(md) = registry_md {
+        let registry = rules::parse_registry(md);
+        rules::order_drift(&c, &registry, md_rel, &mut out);
+    }
+    out.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    out
+}
+
+/// The directories (relative to the crate's `src/`) the concurrency
+/// rules cover: the scheduler core, its model checker, and the
+/// serving-layer coordinator.
+pub const SCOPE: &[&str] = &["sched", "check", "coordinator"];
+
+fn collect_rs(dir: &Path, rel_prefix: &str, out: &mut Vec<(String, String)>) -> std::io::Result<()> {
+    let mut entries: Vec<_> = fs::read_dir(dir)?.collect::<Result<_, _>>()?;
+    entries.sort_by_key(|e| e.as_ref().map(|e| e.path()).unwrap_or_default());
+    for e in entries {
+        let e = e?;
+        let p = e.path();
+        let name = e.file_name().to_string_lossy().to_string();
+        if p.is_dir() {
+            collect_rs(&p, &format!("{rel_prefix}{name}/"), out)?;
+        } else if name.ends_with(".rs") {
+            out.push((format!("{rel_prefix}{name}"), fs::read_to_string(&p)?));
+        }
+    }
+    Ok(())
+}
+
+/// CLI driver for `ich analyze`: run all five rule families over the
+/// crate rooted at `manifest_dir`. Prints findings `file:line: [rule]
+/// msg` and returns the process exit code (0 clean, 1 findings, 2
+/// I/O trouble).
+pub fn run(manifest_dir: &Path) -> i32 {
+    let src_dir = manifest_dir.join("src");
+    let mut sources: Vec<(String, String)> = Vec::new();
+    for scope in SCOPE {
+        let dir = src_dir.join(scope);
+        if !dir.is_dir() {
+            continue;
+        }
+        if let Err(e) = collect_rs(&dir, &format!("src/{scope}/"), &mut sources) {
+            eprintln!("analyze: cannot read {}: {e}", dir.display());
+            return 2;
+        }
+    }
+    let md_path = src_dir.join("sched").join("MEMORY_MODEL.md");
+    let registry_md = match fs::read_to_string(&md_path) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("analyze: cannot read {}: {e}", md_path.display());
+            return 2;
+        }
+    };
+    let mut findings = analyze_sources(&sources, Some(&registry_md), "src/sched/MEMORY_MODEL.md");
+
+    // Rule family 5: the atomics/unsafe comment lint, strict over
+    // src/, relaxed over tests/ (known-bad analyzer fixtures skipped).
+    let skip = ["analysis_fixtures"];
+    match crate::util::lint::scan_dir_with(&src_dir, true, &skip) {
+        Ok(vs) => findings.extend(vs.into_iter().map(|v| Finding {
+            file: format!("src/{}", v.file),
+            line: v.line,
+            rule: "lint-atomics",
+            msg: v.message,
+        })),
+        Err(e) => {
+            eprintln!("analyze: lint over {}: {e}", src_dir.display());
+            return 2;
+        }
+    }
+    let tests_dir = manifest_dir.join("tests");
+    if tests_dir.is_dir() {
+        match crate::util::lint::scan_dir_with(&tests_dir, false, &skip) {
+            Ok(vs) => findings.extend(vs.into_iter().map(|v| Finding {
+                file: format!("tests/{}", v.file),
+                line: v.line,
+                rule: "lint-atomics",
+                msg: v.message,
+            })),
+            Err(e) => {
+                eprintln!("analyze: lint over {}: {e}", tests_dir.display());
+                return 2;
+            }
+        }
+    }
+
+    if findings.is_empty() {
+        let n_files = sources.len();
+        println!("analyze: clean ({n_files} files, rules: lock-order claim-blocking claim-contract order-drift lint-atomics)");
+        0
+    } else {
+        for f in &findings {
+            eprintln!("{f}");
+        }
+        eprintln!("analyze: {} finding(s)", findings.len());
+        1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn src(files: &[(&str, &str)]) -> Vec<(String, String)> {
+        files.iter().map(|(a, b)| (a.to_string(), b.to_string())).collect()
+    }
+
+    #[test]
+    fn clean_input_has_no_findings() {
+        let files = src(&[(
+            "src/sched/a.rs",
+            "fn claim(shared: &S) {\n    preempt_point();\n    shared.n.fetch_add(1, Ordering::Relaxed); // order: [e.one] bump\n}\n",
+        )]);
+        let md = "| `e.one` | bump | test |\n";
+        let v = analyze_sources(&files, Some(md), "MM.md");
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn lock_order_cycle_is_reported_with_witnesses() {
+        let files = src(&[(
+            "src/sched/a.rs",
+            concat!(
+                "fn fwd(s: &S) {\n",
+                "    let g = s.alpha.lock().unwrap();\n",
+                "    take_beta(s);\n",
+                "}\n",
+                "fn take_beta(s: &S) {\n",
+                "    let h = s.beta.lock().unwrap();\n",
+                "    drop(h);\n",
+                "}\n",
+                "fn rev(s: &S) {\n",
+                "    let h = s.beta.lock().unwrap();\n",
+                "    let g = s.alpha.lock().unwrap();\n",
+                "}\n",
+            ),
+        )]);
+        let v = analyze_sources(&files, None, "");
+        let cyc: Vec<&Finding> = v.iter().filter(|f| f.rule == rules::RULE_LOCK_ORDER).collect();
+        assert_eq!(cyc.len(), 1, "{v:?}");
+        assert!(cyc[0].msg.contains("alpha") && cyc[0].msg.contains("beta"));
+        assert!(cyc[0].msg.contains("witnesses:"));
+    }
+
+    #[test]
+    fn blocking_reachable_from_claim_loop_is_reported() {
+        let files = src(&[(
+            "src/sched/a.rs",
+            concat!(
+                "fn claim(s: &S) {\n",
+                "    preempt_point();\n",
+                "    helper(s);\n",
+                "}\n",
+                "fn helper(s: &S) {\n",
+                "    std::thread::park();\n",
+                "}\n",
+            ),
+        )]);
+        let v = analyze_sources(&files, None, "");
+        assert!(
+            v.iter().any(|f| f.rule == rules::RULE_CLAIM_BLOCKING && f.msg.contains("park")),
+            "{v:?}"
+        );
+    }
+
+    #[test]
+    fn allow_directive_suppresses_a_site() {
+        let files = src(&[(
+            "src/sched/a.rs",
+            concat!(
+                "fn claim(s: &S) {\n",
+                "    preempt_point();\n",
+                "    // analysis: allow(claim-blocking, test fixture)\n",
+                "    std::thread::park();\n",
+                "}\n",
+            ),
+        )]);
+        let v = analyze_sources(&files, None, "");
+        assert!(v.iter().all(|f| f.rule != rules::RULE_CLAIM_BLOCKING), "{v:?}");
+    }
+
+    #[test]
+    fn claim_contract_missing_parts_reported() {
+        let files = src(&[(
+            "src/sched/eng.rs",
+            "fn run(s: &S) {\n    s.rt.run_assistable(&claim);\n}\nfn claim(s: &S) {\n    s.x(1);\n}\n",
+        )]);
+        let v = analyze_sources(&files, None, "");
+        let hit: Vec<&Finding> = v.iter().filter(|f| f.rule == rules::RULE_CLAIM_CONTRACT).collect();
+        assert_eq!(hit.len(), 1, "{v:?}");
+        assert!(hit[0].msg.contains("preempt_point"));
+        assert!(hit[0].msg.contains("note_assist"));
+    }
+
+    #[test]
+    fn order_drift_unknown_and_zero_site_ids() {
+        let files = src(&[(
+            "src/sched/a.rs",
+            "fn f(s: &S) {\n    s.n.store(1, Ordering::Release); // order: [e.ghost] publish\n}\n",
+        )]);
+        let md = "| `e.real` | documented but unused | test |\n";
+        let v = analyze_sources(&files, Some(md), "MM.md");
+        assert!(v.iter().any(|f| f.rule == rules::RULE_ORDER_DRIFT && f.msg.contains("e.ghost")), "{v:?}");
+        assert!(v.iter().any(|f| f.rule == rules::RULE_ORDER_DRIFT && f.msg.contains("e.real")), "{v:?}");
+    }
+}

@@ -1,0 +1,245 @@
+//! Item-level parser: function extraction with `impl` type and
+//! `mod tests` region tracking, plus per-line brace depth — the
+//! skeleton every rule hangs its per-function facts on.
+
+use super::lex::{is_word, CleanLine};
+
+/// One `fn` item with its body span (line indices, 0-based, inclusive).
+pub struct FnItem {
+    pub name: String,
+    /// Enclosing `impl` type, if any (`impl Foo` / `impl Tr for Foo`).
+    pub impl_type: Option<String>,
+    pub start: usize,
+    pub end: usize,
+    /// Inside a `mod tests` block — excluded from the concurrency rules.
+    pub is_test: bool,
+}
+
+impl FnItem {
+    /// `Type::name` or `name`, for diagnostics.
+    pub fn qual_name(&self) -> String {
+        match &self.impl_type {
+            Some(t) => format!("{}::{}", t, self.name),
+            None => self.name.clone(),
+        }
+    }
+}
+
+/// Leading identifier of `s` (longest `[A-Za-z_][A-Za-z0-9_]*` prefix).
+fn lead_ident(s: &str) -> Option<&str> {
+    let bytes = s.as_bytes();
+    if bytes.is_empty() || bytes[0].is_ascii_digit() {
+        return None;
+    }
+    let mut k = 0;
+    while k < bytes.len() && is_word(bytes[k] as char) {
+        k += 1;
+    }
+    if k == 0 {
+        None
+    } else {
+        Some(&s[..k])
+    }
+}
+
+/// Does the trimmed line start an `impl` item?
+fn is_impl_line(code: &str) -> bool {
+    let mut t = code.trim_start();
+    for prefix in ["pub ", "unsafe "] {
+        if let Some(rest) = t.strip_prefix(prefix) {
+            t = rest.trim_start();
+        }
+    }
+    t == "impl" || (t.starts_with("impl") && matches!(t.as_bytes().get(4), Some(&b' ') | Some(&b'<')))
+}
+
+/// Does the trimmed line open a `mod tests {` block?
+fn is_mod_tests(code: &str) -> bool {
+    let t = code.trim_start();
+    let t = t.strip_prefix("pub ").unwrap_or(t);
+    t.starts_with("mod tests") && t.contains('{')
+}
+
+/// Strip generic arguments and path prefix from a type spelling:
+/// `map::Wrapper<T>` -> `Wrapper`.
+fn strip_generics(s: &str) -> String {
+    let mut depth = 0usize;
+    let mut out = String::new();
+    for c in s.trim().chars() {
+        match c {
+            '<' => depth += 1,
+            '>' => depth = depth.saturating_sub(1),
+            _ if depth == 0 => out.push(c),
+            _ => {}
+        }
+    }
+    let out = out.trim();
+    match out.rfind("::") {
+        Some(p) => out[p + 2..].trim().to_string(),
+        None => out.to_string(),
+    }
+}
+
+/// Extract the implementing type name from an `impl ...` line.
+fn impl_type_of(code: &str) -> String {
+    let p = code.find("impl").unwrap_or(0);
+    let mut s = &code[p + 4..];
+    // Skip the impl's own generic parameter list.
+    let st = s.trim_start();
+    if st.starts_with('<') {
+        let mut depth = 0usize;
+        for (k, c) in s.char_indices() {
+            match c {
+                '<' => depth += 1,
+                '>' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        s = &s[k + 1..];
+                        break;
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    if let Some(p) = s.find(" for ") {
+        s = &s[p + 5..];
+    }
+    for stop in ["{", " where"] {
+        if let Some(p) = s.find(stop) {
+            s = &s[..p];
+        }
+    }
+    strip_generics(s)
+}
+
+/// Find `fn <name>` on a cleaned line; returns the name.
+fn fn_name_on(code: &str) -> Option<String> {
+    let bytes = code.as_bytes();
+    let mut from = 0usize;
+    while let Some(p) = code[from..].find("fn ").map(|p| p + from) {
+        from = p + 3;
+        if p > 0 && is_word(bytes[p - 1] as char) {
+            continue; // part of another identifier
+        }
+        let rest = code[p + 3..].trim_start();
+        if let Some(name) = lead_ident(rest) {
+            let tail = rest[name.len()..].trim_start();
+            if tail.starts_with('(') || tail.starts_with('<') {
+                return Some(name.to_string());
+            }
+        }
+    }
+    None
+}
+
+/// Parse every fn in a cleaned file. Returns the items plus each
+/// line's brace depth at line start.
+pub fn parse_fns(lines: &[CleanLine]) -> (Vec<FnItem>, Vec<usize>) {
+    let mut fns: Vec<FnItem> = Vec::new();
+    let mut depth_start = Vec::with_capacity(lines.len());
+    let mut depth = 0usize;
+    let mut impl_stack: Vec<(String, usize)> = Vec::new();
+    let mut test_stack: Vec<usize> = Vec::new();
+    let mut pending_impl: Option<String> = None;
+    // (name, impl_type, is_test, start_line)
+    let mut pending_fn: Option<(String, Option<String>, bool, usize)> = None;
+    // (index into fns, depth at body open)
+    let mut open_fns: Vec<(usize, usize)> = Vec::new();
+    for (i, line) in lines.iter().enumerate() {
+        depth_start.push(depth);
+        let code = line.code.as_str();
+        if is_impl_line(code) {
+            if code.contains('{') {
+                impl_stack.push((impl_type_of(code), depth));
+            } else {
+                pending_impl = Some(impl_type_of(code));
+            }
+        } else if pending_impl.is_some() && code.contains('{') {
+            impl_stack.push((pending_impl.take().unwrap(), depth));
+        }
+        if is_mod_tests(code) {
+            test_stack.push(depth);
+        }
+        if pending_fn.is_none() {
+            if let Some(name) = fn_name_on(code) {
+                let impl_type = impl_stack.last().map(|(t, _)| t.clone());
+                pending_fn = Some((name, impl_type, !test_stack.is_empty(), i));
+            }
+        }
+        for c in code.chars() {
+            if c == '{' {
+                if let Some((name, impl_type, is_test, start)) = pending_fn.take() {
+                    fns.push(FnItem { name, impl_type, start, end: i, is_test });
+                    open_fns.push((fns.len() - 1, depth));
+                }
+                depth += 1;
+            } else if c == '}' {
+                depth = depth.saturating_sub(1);
+                while let Some(&(fi, d)) = open_fns.last() {
+                    if depth == d {
+                        fns[fi].end = i;
+                        open_fns.pop();
+                    } else {
+                        break;
+                    }
+                }
+                while let Some(&(_, d)) = impl_stack.last() {
+                    if depth == d {
+                        impl_stack.pop();
+                    } else {
+                        break;
+                    }
+                }
+                while let Some(&d) = test_stack.last() {
+                    if depth == d {
+                        test_stack.pop();
+                    } else {
+                        break;
+                    }
+                }
+            }
+        }
+        if pending_fn.is_some() && code.contains(';') {
+            pending_fn = None; // bodyless trait-method declaration
+        }
+    }
+    let last = lines.len().saturating_sub(1);
+    for (fi, _) in open_fns {
+        fns[fi].end = last;
+    }
+    (fns, depth_start)
+}
+
+#[cfg(test)]
+mod parser_tests {
+    use super::super::lex::clean_lines;
+    use super::*;
+
+    #[test]
+    fn impl_and_free_fns() {
+        let src = "impl Foo {\n    pub fn a(&self) {\n    }\n}\nfn b() {\n}\n";
+        let (fns, _) = parse_fns(&clean_lines(src));
+        assert_eq!(fns.len(), 2);
+        assert_eq!(fns[0].qual_name(), "Foo::a");
+        assert_eq!((fns[0].start, fns[0].end), (1, 2));
+        assert_eq!(fns[1].qual_name(), "b");
+        assert!(!fns[0].is_test);
+    }
+
+    #[test]
+    fn trait_impl_and_tests_mod() {
+        let src = "impl fmt::Debug for Bar<T> {\n    fn fmt(&self) {}\n}\nmod tests {\n    fn t() {}\n}\n";
+        let (fns, _) = parse_fns(&clean_lines(src));
+        assert_eq!(fns[0].impl_type.as_deref(), Some("Bar"));
+        assert!(fns[1].is_test);
+    }
+
+    #[test]
+    fn bodyless_decl_is_skipped() {
+        let src = "trait T {\n    fn decl(&self);\n    fn has(&self) {}\n}\n";
+        let (fns, _) = parse_fns(&clean_lines(src));
+        assert_eq!(fns.len(), 1);
+        assert_eq!(fns[0].name, "has");
+    }
+}

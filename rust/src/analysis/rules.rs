@@ -1,0 +1,432 @@
+//! The four concurrency-contract rule families.
+//!
+//! 1. `lock-order` — propagate held-lock sets through the call graph,
+//!    build the global acquisition-order graph, fail on cycles (both
+//!    witnessing paths are printed).
+//! 2. `claim-blocking` — no blocking call (Mutex/Condvar/join/park/…)
+//!    may be reachable from an engine claim loop, nor sit inside a
+//!    deque-lock critical section.
+//! 3. `claim-contract` — every `run_assistable` caller must reach
+//!    `preempt_point()`, assist accounting (`note_assist`) and a
+//!    member/assist metrics-partition call.
+//! 4. `order-drift` — `// order:` comments and the MEMORY_MODEL.md
+//!    edge registry must stay bidirectionally live.
+
+use std::collections::{BTreeMap, HashMap, HashSet};
+
+use super::facts::Crate;
+use super::Finding;
+
+pub const RULE_LOCK_ORDER: &str = "lock-order";
+pub const RULE_CLAIM_BLOCKING: &str = "claim-blocking";
+pub const RULE_CLAIM_CONTRACT: &str = "claim-contract";
+pub const RULE_ORDER_DRIFT: &str = "order-drift";
+
+/// Marker every annotated atomic site carries.
+const ORDER_MARK: &str = "// order: ";
+
+fn start_of(c: &Crate, id: usize) -> usize {
+    c.item_of(id).start
+}
+
+/// Rule 1: lock-order consistency.
+pub fn lock_order(c: &Crate, out: &mut Vec<Finding>) {
+    // Fix-point of "locks this fn may (transitively) acquire".
+    let n = c.facts.len();
+    let mut may: Vec<HashSet<String>> = vec![HashSet::new(); n];
+    let mut skip = vec![false; n];
+    for id in 0..n {
+        let fm = c.file_of(id);
+        skip[id] = fm.fn_allowed(RULE_LOCK_ORDER, start_of(c, id));
+        if skip[id] {
+            continue;
+        }
+        for (lid, line, _) in &c.facts[id].acquires {
+            if !fm.allowed(RULE_LOCK_ORDER, *line, Some(start_of(c, id))) {
+                may[id].insert(lid.clone());
+            }
+        }
+    }
+    loop {
+        let mut changed = false;
+        for id in 0..n {
+            if skip[id] {
+                continue;
+            }
+            let mut add: Vec<String> = Vec::new();
+            for call in &c.facts[id].calls {
+                for tgt in c.resolve(id, call) {
+                    if skip[tgt] {
+                        continue;
+                    }
+                    for l in &may[tgt] {
+                        if !may[id].contains(l) {
+                            add.push(l.clone());
+                        }
+                    }
+                }
+            }
+            for l in add {
+                if may[id].insert(l) {
+                    changed = true;
+                }
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    // Acquisition-order edges with witnesses.
+    let mut edges: BTreeMap<(String, String), String> = BTreeMap::new();
+    for id in 0..n {
+        if skip[id] {
+            continue;
+        }
+        let fm = c.file_of(id);
+        let item = c.item_of(id);
+        // (lock id, min depth the guard survives at, binding, line)
+        let mut held: Vec<(String, usize, Option<String>, usize)> = Vec::new();
+        let mut acq_by_line: HashMap<usize, Vec<(String, bool)>> = HashMap::new();
+        for (lid, line, guarded) in &c.facts[id].acquires {
+            acq_by_line.entry(*line).or_default().push((lid.clone(), *guarded));
+        }
+        let mut calls_by_line: HashMap<usize, Vec<usize>> = HashMap::new();
+        for call in &c.facts[id].calls {
+            let mut tgts = c.resolve(id, call);
+            tgts.retain(|t| !skip[*t]);
+            calls_by_line.entry(call.line).or_default().extend(tgts);
+        }
+        for i in item.start..=item.end {
+            let d = fm.depth_start[i];
+            held.retain(|h| d >= h.1);
+            let code = fm.lines[i].code.as_str();
+            if let Some(p) = code.find("drop(") {
+                let inner: String = code[p + 5..]
+                    .chars()
+                    .take_while(|ch| *ch != ')')
+                    .collect::<String>()
+                    .trim()
+                    .to_string();
+                held.retain(|h| h.2.as_deref() != Some(inner.as_str()));
+            }
+            let site_allowed = fm.allowed(RULE_LOCK_ORDER, i, Some(item.start));
+            if !site_allowed {
+                if let Some(acqs) = acq_by_line.get(&i) {
+                    for (lid, _) in acqs {
+                        for h in &held {
+                            if &h.0 != lid {
+                                edges.entry((h.0.clone(), lid.clone())).or_insert_with(|| {
+                                    format!(
+                                        "{}:{} in `{}` (holds `{}` since line {})",
+                                        fm.rel,
+                                        i + 1,
+                                        item.qual_name(),
+                                        h.0,
+                                        h.3 + 1
+                                    )
+                                });
+                            }
+                        }
+                    }
+                }
+                if let Some(tgts) = calls_by_line.get(&i) {
+                    for &tgt in tgts {
+                        for lid in &may[tgt] {
+                            for h in &held {
+                                if &h.0 != lid {
+                                    edges.entry((h.0.clone(), lid.clone())).or_insert_with(|| {
+                                        format!(
+                                            "{}:{} in `{}` via `{}` (holds `{}` since line {})",
+                                            fm.rel,
+                                            i + 1,
+                                            item.qual_name(),
+                                            c.item_of(tgt).qual_name(),
+                                            h.0,
+                                            h.3 + 1
+                                        )
+                                    });
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            // New guards opened on this line.
+            if let Some(binding) = super::facts::guard_binding(code) {
+                if let Some(acqs) = acq_by_line.get(&i) {
+                    if let Some((lid, _)) = acqs.first() {
+                        held.push((lid.clone(), fm.depth_start[i], Some(binding), i));
+                    }
+                }
+            } else if super::facts::match_guard(code) {
+                if let Some(acqs) = acq_by_line.get(&i) {
+                    if let Some((lid, _)) = acqs.first() {
+                        held.push((lid.clone(), fm.depth_start[i] + 1, None, i));
+                    }
+                }
+            }
+        }
+    }
+    // Cycle search over the lock graph.
+    let mut graph: BTreeMap<&str, Vec<&str>> = BTreeMap::new();
+    for (a, b) in edges.keys() {
+        graph.entry(a.as_str()).or_default().push(b.as_str());
+    }
+    if let Some(cyc) = find_cycle(&graph) {
+        let path = cyc.join(" -> ");
+        let wit: Vec<String> = cyc
+            .windows(2)
+            .map(|w| edges[&(w[0].to_string(), w[1].to_string())].clone())
+            .collect();
+        out.push(Finding {
+            file: "(crate)".to_string(),
+            line: 0,
+            rule: RULE_LOCK_ORDER,
+            msg: format!("lock-order cycle {path}; witnesses: {}", wit.join("; ")),
+        });
+    }
+}
+
+fn find_cycle(graph: &BTreeMap<&str, Vec<&str>>) -> Option<Vec<String>> {
+    // 0 = white, 1 = on stack, 2 = done
+    let mut state: HashMap<&str, u8> = HashMap::new();
+    for &root in graph.keys() {
+        if state.get(root).copied().unwrap_or(0) != 0 {
+            continue;
+        }
+        let mut stack: Vec<&str> = Vec::new();
+        if let Some(cyc) = dfs(root, graph, &mut state, &mut stack) {
+            return Some(cyc);
+        }
+    }
+    None
+}
+
+fn dfs<'a>(
+    u: &'a str,
+    graph: &BTreeMap<&'a str, Vec<&'a str>>,
+    state: &mut HashMap<&'a str, u8>,
+    stack: &mut Vec<&'a str>,
+) -> Option<Vec<String>> {
+    state.insert(u, 1);
+    stack.push(u);
+    if let Some(vs) = graph.get(u) {
+        for &v in vs {
+            match state.get(v).copied().unwrap_or(0) {
+                1 => {
+                    let k = stack.iter().position(|x| *x == v).unwrap_or(0);
+                    let mut cyc: Vec<String> = stack[k..].iter().map(|s| s.to_string()).collect();
+                    cyc.push(v.to_string());
+                    return Some(cyc);
+                }
+                0 => {
+                    if let Some(cyc) = dfs(v, graph, state, stack) {
+                        return Some(cyc);
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    stack.pop();
+    state.insert(u, 2);
+    None
+}
+
+/// Call-graph closure from `roots`, pruned at fn-level allows.
+fn reachable(c: &Crate, roots: &[usize], rule: &str) -> Vec<usize> {
+    let mut seen: HashSet<usize> = HashSet::new();
+    let mut work: Vec<usize> = roots.to_vec();
+    while let Some(id) = work.pop() {
+        if seen.contains(&id) {
+            continue;
+        }
+        if c.file_of(id).fn_allowed(rule, start_of(c, id)) {
+            continue;
+        }
+        seen.insert(id);
+        for call in &c.facts[id].calls {
+            for tgt in c.resolve(id, call) {
+                if !seen.contains(&tgt) {
+                    work.push(tgt);
+                }
+            }
+        }
+    }
+    let mut v: Vec<usize> = seen.into_iter().collect();
+    v.sort_unstable();
+    v
+}
+
+/// Rule 2: no blocking inside claim loops or deque-lock sections.
+pub fn claim_blocking(c: &Crate, out: &mut Vec<Finding>) {
+    let roots: Vec<usize> = (0..c.facts.len()).filter(|&id| c.facts[id].has_preempt).collect();
+    for id in reachable(c, &roots, RULE_CLAIM_BLOCKING) {
+        let fm = c.file_of(id);
+        let item = c.item_of(id);
+        for (label, line) in &c.facts[id].blocking {
+            if fm.allowed(RULE_CLAIM_BLOCKING, *line, Some(item.start)) {
+                continue;
+            }
+            out.push(Finding {
+                file: fm.rel.clone(),
+                line: line + 1,
+                rule: RULE_CLAIM_BLOCKING,
+                msg: format!("blocking call ({label}) reachable from a claim loop, in `{}`", item.qual_name()),
+            });
+        }
+    }
+    // Sub-rule: nothing blocking while a deque lock guard is live.
+    for id in 0..c.facts.len() {
+        let fm = c.file_of(id);
+        let item = c.item_of(id);
+        for (lid, gline, guarded) in &c.facts[id].acquires {
+            if !guarded || lid != "lock" {
+                continue;
+            }
+            let d0 = fm.depth_start[*gline];
+            for (label, line) in &c.facts[id].blocking {
+                if line <= gline || fm.depth_start[*line] < d0 {
+                    continue;
+                }
+                if fm.allowed(RULE_CLAIM_BLOCKING, *line, Some(item.start)) {
+                    continue;
+                }
+                out.push(Finding {
+                    file: fm.rel.clone(),
+                    line: line + 1,
+                    rule: RULE_CLAIM_BLOCKING,
+                    msg: format!(
+                        "blocking call ({label}) while the deque lock (line {}) is held, in `{}`",
+                        gline + 1,
+                        item.qual_name()
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// Rule 3: the structural claim-loop contract.
+pub fn claim_contract(c: &Crate, out: &mut Vec<Finding>) {
+    for id in 0..c.facts.len() {
+        if !c.facts[id].has_run_assistable {
+            continue;
+        }
+        let fm = c.file_of(id);
+        let item = c.item_of(id);
+        if item.name == "run_assistable" {
+            continue; // the runtime's own definition site
+        }
+        if fm.allowed(RULE_CLAIM_CONTRACT, item.start, Some(item.start)) {
+            continue;
+        }
+        let seen = reachable(c, &[id], RULE_CLAIM_CONTRACT);
+        let has_p = seen.iter().any(|&t| c.facts[t].has_preempt);
+        let has_n = seen.iter().any(|&t| c.facts[t].has_note_assist);
+        let has_c = seen.iter().any(|&t| c.facts[t].has_chunk_acct);
+        let mut missing: Vec<&str> = Vec::new();
+        if !has_p {
+            missing.push("preempt_point()");
+        }
+        if !has_n {
+            missing.push("note_assist() assist accounting");
+        }
+        if !has_c {
+            missing.push("metrics partition (add_chunk_at/add_bulk/add_assist_bulk)");
+        }
+        if !missing.is_empty() {
+            out.push(Finding {
+                file: fm.rel.clone(),
+                line: item.start + 1,
+                rule: RULE_CLAIM_CONTRACT,
+                msg: format!("claim loop `{}` missing: {}", item.qual_name(), missing.join(", ")),
+            });
+        }
+    }
+}
+
+/// Parse the edge-ID registry table out of MEMORY_MODEL.md: rows of
+/// the form `| `edge.id` | … |`. Returns id -> 1-based line.
+pub fn parse_registry(md: &str) -> BTreeMap<String, usize> {
+    let mut ids = BTreeMap::new();
+    for (i, line) in md.split('\n').enumerate() {
+        let t = line.trim_start();
+        let Some(rest) = t.strip_prefix('|') else { continue };
+        let cell = rest.trim_start();
+        let Some(body) = cell.strip_prefix('`') else { continue };
+        let Some(end) = body.find('`') else { continue };
+        let id = &body[..end];
+        if id == "edge-id" || id.is_empty() {
+            continue;
+        }
+        if id.chars().all(|ch| ch.is_ascii_lowercase() || ch.is_ascii_digit() || ch == '.' || ch == '-' || ch == '_') {
+            ids.entry(id.to_string()).or_insert(i + 1);
+        }
+    }
+    ids
+}
+
+/// Rule 4: MEMORY_MODEL drift, both directions.
+pub fn order_drift(c: &Crate, registry: &BTreeMap<String, usize>, md_rel: &str, out: &mut Vec<Finding>) {
+    let mut used: HashMap<&str, usize> = HashMap::new();
+    for fm in &c.files {
+        for (i, raw) in fm.raw.iter().enumerate() {
+            let Some(idx) = raw.find(ORDER_MARK) else { continue };
+            // Skip doc comments (`/// order:`) and quoted mentions.
+            if idx > 0 {
+                let prev = raw.as_bytes()[idx - 1];
+                if prev == b'/' || prev == b'`' {
+                    continue;
+                }
+            }
+            let text = &raw[idx + ORDER_MARK.len()..];
+            let Some(body) = text.strip_prefix('[') else {
+                if !fm.allowed(RULE_ORDER_DRIFT, i, None) {
+                    out.push(Finding {
+                        file: fm.rel.clone(),
+                        line: i + 1,
+                        rule: RULE_ORDER_DRIFT,
+                        msg: "order comment lacks a `[edge-id]` registry reference".to_string(),
+                    });
+                }
+                continue;
+            };
+            let Some(end) = body.find(']') else {
+                out.push(Finding {
+                    file: fm.rel.clone(),
+                    line: i + 1,
+                    rule: RULE_ORDER_DRIFT,
+                    msg: "unterminated `[edge-id]` in order comment".to_string(),
+                });
+                continue;
+            };
+            let id = &body[..end];
+            match registry.get_key_value(id) {
+                Some((k, _)) => {
+                    *used.entry(k.as_str()).or_insert(0) += 1;
+                }
+                None => {
+                    if !fm.allowed(RULE_ORDER_DRIFT, i, None) {
+                        out.push(Finding {
+                            file: fm.rel.clone(),
+                            line: i + 1,
+                            rule: RULE_ORDER_DRIFT,
+                            msg: format!("order comment names unknown edge id `{id}`"),
+                        });
+                    }
+                }
+            }
+        }
+    }
+    for (id, line) in registry {
+        if used.get(id.as_str()).copied().unwrap_or(0) == 0 {
+            out.push(Finding {
+                file: md_rel.to_string(),
+                line: *line,
+                rule: RULE_ORDER_DRIFT,
+                msg: format!("documented edge `{id}` has zero live `// order:` sites"),
+            });
+        }
+    }
+}

@@ -41,7 +41,7 @@ impl Cell {
             ExecHandle::with_view(st, tid, |st, view| {
                 let cands = st.mem.candidates(lid, view, ord == Ordering::SeqCst, forced);
                 let idx = if cands.len() > 1 { st.path.decide(cands.len()) } else { 0 };
-                let (val, ts, latest) = st.mem.load(lid, cands[idx], ord, view); // order: model-memory op; `ord` feeds the view logic, not the hardware
+                let (val, ts, latest) = st.mem.load(lid, cands[idx], ord, view); // order: [check.model-op] model-memory op; `ord` feeds the view logic, not the hardware
                 st.push_event(tid, Ev::Load { tid, loc: lid, ord, val, ts, stale: !latest });
                 if !latest {
                     ExecHandle::note_stale(st, tid);
@@ -56,7 +56,7 @@ impl Cell {
             let lid = st.ensure_loc(&self.loc, init);
             ExecHandle::clear_last_load(st, tid);
             ExecHandle::with_view(st, tid, |st, view| {
-                let ts = st.mem.store(lid, val, ord, view); // order: model-memory op; `ord` feeds the view logic, not the hardware
+                let ts = st.mem.store(lid, val, ord, view); // order: [check.model-op] model-memory op; `ord` feeds the view logic, not the hardware
                 st.push_event(tid, Ev::Store { tid, loc: lid, ord, val, ts });
             });
         })
@@ -147,7 +147,7 @@ macro_rules! shim_atomic {
             }
 
             fn init(&self) -> u64 {
-                // order: the real atomic is the initial-value carrier
+                // order: [check.shim-pass] the real atomic is the initial-value carrier
                 // under a model (never raced: models register before
                 // any concurrent step); full-strength everywhere else.
                 self.real.load(Ordering::SeqCst) as u64
@@ -155,9 +155,9 @@ macro_rules! shim_atomic {
 
             pub fn load(&self, ord: Ordering) -> $prim {
                 match ctx() {
-                    Ctx::None => self.real.load(ord), // order: caller's ordering — pass-through outside a checker run
+                    Ctx::None => self.real.load(ord), // order: [check.shim-pass] caller's ordering — pass-through outside a checker run
                     Ctx::Controller(h) => {
-                        if h.phase.load(Ordering::Relaxed) == PH_INVARIANT { // order: Relaxed — phase is serialized by the controller lock
+                        if h.phase.load(Ordering::Relaxed) == PH_INVARIANT { // order: [check.phase] Relaxed — phase is serialized by the controller lock
                             // Peek mode: whole-state assertions read
                             // the newest value with no side effects.
                             h.immediate_op(|st| {
@@ -169,7 +169,7 @@ macro_rules! shim_atomic {
                             self.cell.immediate(&h, init, |st, lid| {
                                 ExecHandle::with_view(st, CONTROLLER, |st, view| {
                                     let idx = st.mem.locs[lid].msgs.len() - 1;
-                                    st.mem.load(lid, idx, ord, view).0 // order: model-memory op; `ord` feeds the view logic, not the hardware
+                                    st.mem.load(lid, idx, ord, view).0 // order: [check.model-op] model-memory op; `ord` feeds the view logic, not the hardware
                                 })
                             }) as $prim
                         }
@@ -180,16 +180,16 @@ macro_rules! shim_atomic {
 
             pub fn store(&self, val: $prim, ord: Ordering) {
                 match ctx() {
-                    Ctx::None => self.real.store(val, ord), // order: caller's ordering — pass-through outside a checker run
+                    Ctx::None => self.real.store(val, ord), // order: [check.shim-pass] caller's ordering — pass-through outside a checker run
                     Ctx::Controller(h) => {
                         assert!(
-                            h.phase.load(Ordering::Relaxed) != PH_INVARIANT, // order: Relaxed — phase is serialized by the controller lock
+                            h.phase.load(Ordering::Relaxed) != PH_INVARIANT, // order: [check.phase] Relaxed — phase is serialized by the controller lock
                             "invariant closures must not write shim atomics"
                         );
                         let init = self.init();
                         self.cell.immediate(&h, init, |st, lid| {
                             ExecHandle::with_view(st, CONTROLLER, |st, view| {
-                                st.mem.store(lid, val as u64, ord, view); // order: model-memory op; `ord` feeds the view logic, not the hardware
+                                st.mem.store(lid, val as u64, ord, view); // order: [check.model-op] model-memory op; `ord` feeds the view logic, not the hardware
                             })
                         })
                     }
@@ -198,23 +198,23 @@ macro_rules! shim_atomic {
             }
 
             pub fn swap(&self, val: $prim, ord: Ordering) -> $prim {
-                self.rmw("swap", ord, move |_| val, |r| r.swap(val, ord)) // order: caller's ordering — pass-through outside a checker run
+                self.rmw("swap", ord, move |_| val, |r| r.swap(val, ord)) // order: [check.shim-pass] caller's ordering — pass-through outside a checker run
             }
 
             pub fn fetch_add(&self, val: $prim, ord: Ordering) -> $prim {
-                self.rmw("fetch_add", ord, move |o| o.wrapping_add(val), |r| r.fetch_add(val, ord)) // order: caller's ordering — pass-through outside a checker run
+                self.rmw("fetch_add", ord, move |o| o.wrapping_add(val), |r| r.fetch_add(val, ord)) // order: [check.shim-pass] caller's ordering — pass-through outside a checker run
             }
 
             pub fn fetch_sub(&self, val: $prim, ord: Ordering) -> $prim {
-                self.rmw("fetch_sub", ord, move |o| o.wrapping_sub(val), |r| r.fetch_sub(val, ord)) // order: caller's ordering — pass-through outside a checker run
+                self.rmw("fetch_sub", ord, move |o| o.wrapping_sub(val), |r| r.fetch_sub(val, ord)) // order: [check.shim-pass] caller's ordering — pass-through outside a checker run
             }
 
             pub fn fetch_or(&self, val: $prim, ord: Ordering) -> $prim {
-                self.rmw("fetch_or", ord, move |o| o | val, |r| r.fetch_or(val, ord)) // order: caller's ordering — pass-through outside a checker run
+                self.rmw("fetch_or", ord, move |o| o | val, |r| r.fetch_or(val, ord)) // order: [check.shim-pass] caller's ordering — pass-through outside a checker run
             }
 
             pub fn fetch_and(&self, val: $prim, ord: Ordering) -> $prim {
-                self.rmw("fetch_and", ord, move |o| o & val, |r| r.fetch_and(val, ord)) // order: caller's ordering — pass-through outside a checker run
+                self.rmw("fetch_and", ord, move |o| o & val, |r| r.fetch_and(val, ord)) // order: [check.shim-pass] caller's ordering — pass-through outside a checker run
             }
 
             pub fn compare_exchange(
@@ -228,7 +228,7 @@ macro_rules! shim_atomic {
                     Ctx::None => self.real.compare_exchange(current, new, success, failure),
                     Ctx::Controller(h) => {
                         assert!(
-                            h.phase.load(Ordering::Relaxed) != PH_INVARIANT, // order: Relaxed — phase is serialized by the controller lock
+                            h.phase.load(Ordering::Relaxed) != PH_INVARIANT, // order: [check.phase] Relaxed — phase is serialized by the controller lock
                             "invariant closures must not write shim atomics"
                         );
                         let init = self.init();
@@ -276,7 +276,7 @@ macro_rules! shim_atomic {
                     Ctx::None => real(&self.real),
                     Ctx::Controller(h) => {
                         assert!(
-                            h.phase.load(Ordering::Relaxed) != PH_INVARIANT, // order: Relaxed — phase is serialized by the controller lock
+                            h.phase.load(Ordering::Relaxed) != PH_INVARIANT, // order: [check.phase] Relaxed — phase is serialized by the controller lock
                             "invariant closures must not write shim atomics"
                         );
                         let init = self.init();
@@ -293,7 +293,7 @@ macro_rules! shim_atomic {
 
         impl std::fmt::Debug for $name {
             fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-                f.debug_tuple(stringify!($name)).field(&self.load(Ordering::SeqCst)).finish() // order: SeqCst debug snapshot
+                f.debug_tuple(stringify!($name)).field(&self.load(Ordering::SeqCst)).finish() // order: [check.model-op] SeqCst debug snapshot
             }
         }
 
@@ -321,15 +321,15 @@ impl AtomicBool {
     }
 
     fn init(&self) -> u64 {
-        // order: initial-value carrier only; see the integer shims.
+        // order: [check.shim-pass] initial-value carrier only; see the integer shims.
         self.real.load(Ordering::SeqCst) as u64
     }
 
     pub fn load(&self, ord: Ordering) -> bool {
         match ctx() {
-            Ctx::None => self.real.load(ord), // order: caller's ordering — pass-through outside a checker run
+            Ctx::None => self.real.load(ord), // order: [check.shim-pass] caller's ordering — pass-through outside a checker run
             Ctx::Controller(h) => {
-                if h.phase.load(Ordering::Relaxed) == PH_INVARIANT { // order: Relaxed — phase is serialized by the controller lock
+                if h.phase.load(Ordering::Relaxed) == PH_INVARIANT { // order: [check.phase] Relaxed — phase is serialized by the controller lock
                     h.immediate_op(|st| {
                         let lid = st.ensure_loc(&self.cell.loc, self.init());
                         st.mem.peek_latest(lid)
@@ -339,7 +339,7 @@ impl AtomicBool {
                     self.cell.immediate(&h, init, |st, lid| {
                         ExecHandle::with_view(st, CONTROLLER, |st, view| {
                             let idx = st.mem.locs[lid].msgs.len() - 1;
-                            st.mem.load(lid, idx, ord, view).0 // order: model-memory op; `ord` feeds the view logic, not the hardware
+                            st.mem.load(lid, idx, ord, view).0 // order: [check.model-op] model-memory op; `ord` feeds the view logic, not the hardware
                         })
                     }) != 0
                 }
@@ -350,16 +350,16 @@ impl AtomicBool {
 
     pub fn store(&self, val: bool, ord: Ordering) {
         match ctx() {
-            Ctx::None => self.real.store(val, ord), // order: caller's ordering — pass-through outside a checker run
+            Ctx::None => self.real.store(val, ord), // order: [check.shim-pass] caller's ordering — pass-through outside a checker run
             Ctx::Controller(h) => {
                 assert!(
-                    h.phase.load(Ordering::Relaxed) != PH_INVARIANT, // order: Relaxed — phase is serialized by the controller lock
+                    h.phase.load(Ordering::Relaxed) != PH_INVARIANT, // order: [check.phase] Relaxed — phase is serialized by the controller lock
                     "invariant closures must not write shim atomics"
                 );
                 let init = self.init();
                 self.cell.immediate(&h, init, |st, lid| {
                     ExecHandle::with_view(st, CONTROLLER, |st, view| {
-                        st.mem.store(lid, val as u64, ord, view); // order: model-memory op; `ord` feeds the view logic, not the hardware
+                        st.mem.store(lid, val as u64, ord, view); // order: [check.model-op] model-memory op; `ord` feeds the view logic, not the hardware
                     })
                 })
             }
@@ -369,10 +369,10 @@ impl AtomicBool {
 
     pub fn swap(&self, val: bool, ord: Ordering) -> bool {
         match ctx() {
-            Ctx::None => self.real.swap(val, ord), // order: caller's ordering — pass-through outside a checker run
+            Ctx::None => self.real.swap(val, ord), // order: [check.shim-pass] caller's ordering — pass-through outside a checker run
             Ctx::Controller(h) => {
                 assert!(
-                    h.phase.load(Ordering::Relaxed) != PH_INVARIANT, // order: Relaxed — phase is serialized by the controller lock
+                    h.phase.load(Ordering::Relaxed) != PH_INVARIANT, // order: [check.phase] Relaxed — phase is serialized by the controller lock
                     "invariant closures must not write shim atomics"
                 );
                 let init = self.init();
@@ -408,7 +408,7 @@ impl AtomicBool {
                     Ctx::None => unreachable!(),
                 };
                 assert!(
-                    h.phase.load(Ordering::Relaxed) != PH_INVARIANT, // order: Relaxed — phase is serialized by the controller lock
+                    h.phase.load(Ordering::Relaxed) != PH_INVARIANT, // order: [check.phase] Relaxed — phase is serialized by the controller lock
                     "invariant closures must not write shim atomics"
                 );
                 let init = self.init();
@@ -441,7 +441,7 @@ impl AtomicBool {
 
 impl std::fmt::Debug for AtomicBool {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        f.debug_tuple("AtomicBool").field(&self.load(Ordering::SeqCst)).finish() // order: SeqCst debug snapshot
+        f.debug_tuple("AtomicBool").field(&self.load(Ordering::SeqCst)).finish() // order: [check.model-op] SeqCst debug snapshot
     }
 }
 

@@ -37,7 +37,7 @@ use super::{CheckOpts, Scenario};
 
 /// Process-wide count of live explorations: the shims' fast path —
 /// zero means every shim op goes straight to the real primitive.
-// order: a plain monotone gate checked before a thread-local lookup;
+// order: [check.exec-lock] a plain monotone gate checked before a thread-local lookup;
 // no data is published through it.
 pub(crate) static ACTIVE_EXECS: AtomicUsize = AtomicUsize::new(0);
 
@@ -61,7 +61,7 @@ pub(crate) enum Ctx {
 }
 
 pub(crate) fn ctx() -> Ctx {
-    // order: fast-path gate only (see ACTIVE_EXECS); the thread-local
+    // order: [check.exec-lock] fast-path gate only (see ACTIVE_EXECS); the thread-local
     // is the authority.
     if ACTIVE_EXECS.load(Ordering::Relaxed) == 0 {
         return Ctx::None;
@@ -195,10 +195,10 @@ impl Ev {
         match *self {
             Ev::Load { tid, loc, ord, val, ts, stale } => {
                 let s = if stale { " (stale)" } else { "" };
-                format!("T{tid} a{loc}.load({}) -> {val} @t{ts}{s}", ord_name(ord)) // order: event-log rendering, not an atomic op
+                format!("T{tid} a{loc}.load({}) -> {val} @t{ts}{s}", ord_name(ord)) // order: [check.exec-lock] event-log rendering, not an atomic op
             }
             Ev::Store { tid, loc, ord, val, ts } => {
-                format!("T{tid} a{loc}.store({}) = {val} @t{ts}", ord_name(ord)) // order: event-log rendering, not an atomic op
+                format!("T{tid} a{loc}.store({}) = {val} @t{ts}", ord_name(ord)) // order: [check.exec-lock] event-log rendering, not an atomic op
             }
             Ev::Rmw { tid, loc, ord, op, old, new, ts } => {
                 format!("T{tid} a{loc}.{op}({}) {old} -> {new} @t{ts}", ord_name(ord))
@@ -400,7 +400,7 @@ impl ExecState {
     /// deterministic under replay, keeping ids, logs, and state hashes
     /// replay-stable.
     pub(crate) fn ensure_loc(&mut self, cell: &AtomicUsize, init: u64) -> usize {
-        // order: the cell is only ever touched under the execution
+        // order: [check.exec-lock] the cell is only ever touched under the execution
         // lock (executions are serialized); atomicity just lets the
         // shim struct stay `Sync` without interior-mutability UB.
         let v = cell.load(Ordering::Relaxed);
@@ -408,7 +408,7 @@ impl ExecState {
             return v - 1;
         }
         let id = self.mem.register(init);
-        cell.store(id + 1, Ordering::Relaxed); // order: Relaxed — registration runs under the controller lock
+        cell.store(id + 1, Ordering::Relaxed); // order: [check.phase] Relaxed — registration runs under the controller lock
         id
     }
 
@@ -550,7 +550,7 @@ pub(crate) struct ExecHandle {
     m: Mutex<ExecState>,
     cv: Condvar,
     /// Phase mirror so shims dispatch without the state lock.
-    // order: written only under the state lock; readers only need the
+    // order: [check.exec-lock] written only under the state lock; readers only need the
     // value, not any associated data.
     pub(crate) phase: AtomicU8,
 }
@@ -755,7 +755,7 @@ fn run_execution(
     let Scenario { threads, invariant, finale } = scenario;
     let n = threads.len();
     handle.m.lock().unwrap().reset(n);
-    handle.phase.store(PH_RUN, Ordering::Relaxed); // order: Relaxed — phase is serialized by the controller lock
+    handle.phase.store(PH_RUN, Ordering::Relaxed); // order: [check.phase] Relaxed — phase is serialized by the controller lock
     let mut budget_left = budget;
     let mut seen = seen;
 
@@ -811,10 +811,10 @@ fn run_execution(
         // Whole-state invariant between steps (release the state lock
         // so the invariant's shim reads can re-take it in peek mode).
         if let Some(inv) = &invariant {
-            handle.phase.store(PH_INVARIANT, Ordering::Relaxed); // order: Relaxed — phase is serialized by the controller lock
+            handle.phase.store(PH_INVARIANT, Ordering::Relaxed); // order: [check.phase] Relaxed — phase is serialized by the controller lock
             drop(st);
             let r = catch_unwind(AssertUnwindSafe(|| inv()));
-            handle.phase.store(PH_RUN, Ordering::Relaxed); // order: Relaxed — phase is serialized by the controller lock
+            handle.phase.store(PH_RUN, Ordering::Relaxed); // order: [check.phase] Relaxed — phase is serialized by the controller lock
             if let Err(p) = r {
                 break fail(handle, format!("invariant violated: {}", panic_message(&p)));
             }
@@ -824,7 +824,7 @@ fn run_execution(
         let mut cands: Vec<usize> = (0..st.threads.len()).filter(|&i| st.runnable(i)).collect();
         if cands.is_empty() {
             if st.threads.iter().all(|t| t.status == Status::Finished) {
-                handle.phase.store(PH_FINALE, Ordering::Relaxed); // order: Relaxed — phase is serialized by the controller lock
+                handle.phase.store(PH_FINALE, Ordering::Relaxed); // order: [check.phase] Relaxed — phase is serialized by the controller lock
                 drop(st);
                 if let Some(fin) = finale {
                     if let Err(p) = catch_unwind(AssertUnwindSafe(fin)) {
@@ -913,7 +913,7 @@ struct ControllerGuard {
 
 impl ControllerGuard {
     fn new(handle: &Arc<ExecHandle>) -> ControllerGuard {
-        ACTIVE_EXECS.fetch_add(1, Ordering::Relaxed); // order: Relaxed liveness counter
+        ACTIVE_EXECS.fetch_add(1, Ordering::Relaxed); // order: [check.exec-lock] Relaxed liveness counter
         EXEC.with(|e| *e.borrow_mut() = Some((Arc::clone(handle), CONTROLLER)));
         ControllerGuard { handle: Arc::clone(handle) }
     }
@@ -923,7 +923,7 @@ impl Drop for ControllerGuard {
     fn drop(&mut self) {
         let _ = &self.handle;
         EXEC.with(|e| *e.borrow_mut() = None);
-        ACTIVE_EXECS.fetch_sub(1, Ordering::Relaxed); // order: Relaxed liveness counter
+        ACTIVE_EXECS.fetch_sub(1, Ordering::Relaxed); // order: [check.exec-lock] Relaxed liveness counter
     }
 }
 
@@ -951,7 +951,7 @@ pub(crate) fn explore_impl(opts: &CheckOpts, mut setup: impl FnMut() -> Scenario
             if schedules >= opts.max_schedules {
                 return ExploreResult { schedules, pruned, complete: false, failure: None };
             }
-            handle.phase.store(PH_SETUP, Ordering::Relaxed); // order: Relaxed — phase is serialized by the controller lock
+            handle.phase.store(PH_SETUP, Ordering::Relaxed); // order: [check.phase] Relaxed — phase is serialized by the controller lock
             let scenario = {
                 // Setup runs with shims in immediate mode: locations
                 // register with their initial values, single-threaded.
@@ -1002,7 +1002,7 @@ pub(crate) fn replay_impl(
 ) -> (String, Option<String>) {
     let handle = ExecHandle::new();
     let _guard = ControllerGuard::new(&handle);
-    handle.phase.store(PH_SETUP, Ordering::Relaxed); // order: Relaxed — phase is serialized by the controller lock
+    handle.phase.store(PH_SETUP, Ordering::Relaxed); // order: [check.phase] Relaxed — phase is serialized by the controller lock
     {
         handle.m.lock().unwrap().reset(0);
     }

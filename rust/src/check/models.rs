@@ -134,49 +134,49 @@ impl MutDeque {
     /// Mirror of `RangeDeque::take_impl` (fast path, conflict slow
     /// path, drained rollback), minus the injected mutation.
     pub fn take(&self, chunk: usize) -> Option<(usize, usize)> {
-        let b = self.begin.load(self.ord); // order: `self.ord` — the mutation knob under test (SeqCst when faithful)
-        let e0 = self.end.load(self.ord); // order: `self.ord` — the mutation knob under test
+        let b = self.begin.load(self.ord); // order: [check.knob] `self.ord` — the mutation knob under test (SeqCst when faithful)
+        let e0 = self.end.load(self.ord); // order: [check.knob] `self.ord` — the mutation knob under test
         if b >= e0 {
             return None;
         }
         let nb = if self.clamp { (b + chunk).min(e0) } else { b + chunk };
-        self.begin.store(nb, self.ord); // order: `self.ord` — the mutation knob under test
-        let e = self.end.load(self.ord); // order: `self.ord` — the mutation knob under test
+        self.begin.store(nb, self.ord); // order: [check.knob] `self.ord` — the mutation knob under test
+        let e = self.end.load(self.ord); // order: [check.knob] `self.ord` — the mutation knob under test
         if nb <= e {
             return Some((b, nb));
         }
         let _g = self.lock.lock().unwrap();
-        let e = self.end.load(self.ord); // order: `self.ord` — re-read under the lock
+        let e = self.end.load(self.ord); // order: [check.knob] `self.ord` — re-read under the lock
         if b >= e {
-            self.begin.store(b, self.ord); // order: `self.ord` — drained rollback
+            self.begin.store(b, self.ord); // order: [check.knob] `self.ord` — drained rollback
             return None;
         }
         let take = chunk.min(e - b);
-        self.begin.store(b + take, self.ord); // order: `self.ord` — clamped claim under the lock
+        self.begin.store(b + take, self.ord); // order: [check.knob] `self.ord` — clamped claim under the lock
         Some((b, b + take))
     }
 
     /// Mirror of `RangeDeque::steal_half` (locked cut + re-check).
     pub fn steal_half(&self) -> Option<(usize, usize)> {
         let _g = self.lock.lock().unwrap();
-        let b = self.begin.load(self.ord); // order: `self.ord` — the mutation knob under test
-        let e = self.end.load(self.ord); // order: `self.ord` — the mutation knob under test
+        let b = self.begin.load(self.ord); // order: [check.knob] `self.ord` — the mutation knob under test
+        let e = self.end.load(self.ord); // order: [check.knob] `self.ord` — the mutation knob under test
         if e <= b {
             return None;
         }
         let half = (e - b).div_ceil(2);
         let ne = e - half;
-        self.end.store(ne, self.ord); // order: `self.ord` — the steal cut
-        let b2 = self.begin.load(self.ord); // order: `self.ord` — re-check against the owner
+        self.end.store(ne, self.ord); // order: [check.knob] `self.ord` — the steal cut
+        let b2 = self.begin.load(self.ord); // order: [check.knob] `self.ord` — re-check against the owner
         if ne < b2 {
-            self.end.store(e, self.ord); // order: `self.ord` — cut rollback
+            self.end.store(e, self.ord); // order: [check.knob] `self.ord` — cut rollback
             return None;
         }
         Some((ne, e))
     }
 
     pub fn raw(&self) -> (usize, usize) {
-        (self.begin.load(SeqCst), self.end.load(SeqCst)) // order: SeqCst snapshot for invariants/finale
+        (self.begin.load(SeqCst), self.end.load(SeqCst)) // order: [check.finale] SeqCst snapshot for invariants/finale
     }
 }
 
@@ -250,7 +250,7 @@ pub fn dispatch_mask(mask_inside_lock: bool) -> Scenario {
                 let _ = g.push(item, class, None);
                 let m = g.class_mask() as usize;
                 if mask_inside_lock {
-                    // order: mirror published under the queue lock, so
+                    // order: [dispatch.mask-mirror] mirror published under the queue lock, so
                     // it is coherent with the content it describes
                     // (runtime.rs `enqueue`); Relaxed suffices here.
                     mask.store(m, Relaxed);
@@ -259,7 +259,7 @@ pub fn dispatch_mask(mask_inside_lock: bool) -> Scenario {
                     // Mutant: publish after unlock — the mirror races
                     // the next lock holder's recompute.
                     drop(g);
-                    mask.store(m, Relaxed); // order: Relaxed mirror — this is the mutant arm (published after unlock)
+                    mask.store(m, Relaxed); // order: [check.mutant] Relaxed mirror — this is the mutant arm (published after unlock)
                 }
             }
         };
@@ -275,7 +275,7 @@ pub fn dispatch_mask(mask_inside_lock: bool) -> Scenario {
                     if claimed.with(|c| c.len()) >= 2 {
                         break;
                     }
-                    if mask.load(Relaxed) == 0 { // order: Relaxed mask peek; the lock re-validates (runtime.rs preempt_point)
+                    if mask.load(Relaxed) == 0 { // order: [dispatch.mask-mirror] Relaxed mask peek; the lock re-validates (runtime.rs preempt_point)
                         sync::backoff(step);
                         step += 1;
                         continue;
@@ -283,7 +283,7 @@ pub fn dispatch_mask(mask_inside_lock: bool) -> Scenario {
                     let mut g = q.lock().unwrap();
                     let popped = g.pop_best();
                     let m = g.class_mask() as usize;
-                    // order: claimant re-publishes the mirror under the
+                    // order: [dispatch.mask-mirror] claimant re-publishes the mirror under the
                     // same lock (runtime.rs claim paths).
                     mask.store(m, Relaxed);
                     drop(g);
@@ -298,7 +298,7 @@ pub fn dispatch_mask(mask_inside_lock: bool) -> Scenario {
             c.sort_unstable();
             let items: Vec<u32> = c.iter().map(|&(i, _)| i).collect();
             assert_eq!(items, vec![1, 2], "each push claimed exactly once, got {c:?}");
-            assert_eq!(fin_mask.load(SeqCst), 0, "class-mask mirror out of sync with the drained queue"); // order: SeqCst finale readback (threads joined)
+            assert_eq!(fin_mask.load(SeqCst), 0, "class-mask mirror out of sync with the drained queue"); // order: [check.finale] SeqCst finale readback (threads joined)
         })
 }
 
@@ -333,15 +333,15 @@ pub fn parked_wake(recheck: bool, swap_wake: bool) -> Scenario {
                 }
                 // publish→wake edge: the flag must be visible before
                 // the worker commits to parking…
-                parked.store(true, Release); // order: publish before the queue re-check
+                parked.store(true, Release); // order: [runtime.parked-publish] publish before the queue re-check
                 if recheck && !queue.lock().unwrap().is_empty() {
                     // …and the re-check closes the window between the
                     // empty pop and the publish.
-                    parked.store(false, Relaxed); // order: same-thread retract, no ordering needed
+                    parked.store(false, Relaxed); // order: [runtime.parked-wake] same-thread retract, no ordering needed
                     continue;
                 }
                 sync::park();
-                parked.store(false, Release); // order: wake consumed; next episode starts clean
+                parked.store(false, Release); // order: [runtime.parked-wake] wake consumed; next episode starts clean
             }
         })
         .thread({
@@ -349,16 +349,16 @@ pub fn parked_wake(recheck: bool, swap_wake: bool) -> Scenario {
             move || {
                 queue.lock().unwrap().push(7);
                 let was_parked = if swap_wake {
-                    // order: one RMW — reads the true flag even when
+                    // order: [runtime.parked-wake] one RMW — reads the true flag even when
                     // the worker's publish has not been acquired
                     // (runtime.rs wake path).
                     parked.swap(false, AcqRel)
                 } else {
                     // Mutant: load+store pair — the load may read a
                     // stale `false` and skip the wake.
-                    let p = parked.load(Acquire); // order: Acquire load — half of the mutant's broken load+store pair
+                    let p = parked.load(Acquire); // order: [check.mutant] Acquire load — half of the mutant's broken load+store pair
                     if p {
-                        parked.store(false, Relaxed); // order: Relaxed store — the other half of the mutant pair
+                        parked.store(false, Relaxed); // order: [check.mutant] Relaxed store — the other half of the mutant pair
                     }
                     p
                 };
@@ -399,12 +399,12 @@ impl Assistable for ModelTarget {
 
     fn try_join(&self) -> Option<usize> {
         // Mirror of `LoopAssist::try_join`'s bounded CAS ladder.
-        let mut s = self.slots.load(Acquire); // order: mirror of LoopAssist
+        let mut s = self.slots.load(Acquire); // order: [assist.slot-claim] mirror of LoopAssist
         loop {
             if s >= self.max {
                 return None;
             }
-            match self.slots.compare_exchange_weak(s, s + 1, AcqRel, Relaxed) { // order: AcqRel slot CAS, mirroring LoopAssist::try_join
+            match self.slots.compare_exchange_weak(s, s + 1, AcqRel, Relaxed) { // order: [assist.slot-claim] AcqRel slot CAS, mirroring LoopAssist::try_join
                 Ok(_) => return Some(s),
                 Err(cur) => s = cur,
             }
@@ -412,7 +412,7 @@ impl Assistable for ModelTarget {
     }
 
     fn assist(&self, _slot: usize) {
-        let _ = self.claims.fetch_add(1, Relaxed); // order: published by the gate's leave(Release)
+        let _ = self.claims.fetch_add(1, Relaxed); // order: [assist.gate-leave] published by the gate's leave(Release)
     }
 }
 
@@ -443,7 +443,7 @@ fn publisher_body(drain: impl FnOnce(), target: &ModelTarget, torn: &Ghost<bool>
     drain();
     torn.with(|t| *t = true);
     // join→close edge: post-drain, joiner engine writes are visible.
-    let claims = target.claims.load(Relaxed) as usize; // order: the drain already synchronized
+    let claims = target.claims.load(Relaxed) as usize; // order: [assist.gate-close] the drain already synchronized
     let grants = joined.get();
     assert_eq!(
         claims, grants,
@@ -460,7 +460,7 @@ pub fn assist_gate() -> Scenario {
     let target = ModelTarget::new(1);
     // SAFETY: `close_and_drain` runs (publisher thread) before anyone
     // tears the target down, and the Arcs outlive the scenario.
-    let rec = unsafe { ActivityRecord::new(&*target, LatencyClass::Batch, None) };
+    let rec = unsafe { ActivityRecord::new(&*target, LatencyClass::Batch, LatencyClass::Batch.rank(), None) };
     let torn = Ghost::new(false);
     let joined = Ghost::new(0usize);
     let mut s = Scenario::new();
@@ -498,15 +498,15 @@ impl MutGate {
 
     pub fn try_enter(&self) -> bool {
         if !self.guard_closed {
-            let _ = self.gate.fetch_add(1, AcqRel); // order: blind AcqRel increment — the guard-removed mutant arm
+            let _ = self.gate.fetch_add(1, AcqRel); // order: [check.mutant] blind AcqRel increment — the guard-removed mutant arm
             return true;
         }
-        let mut g = self.gate.load(Acquire); // order: Acquire seed read, mirroring ActivityRecord::try_enter
+        let mut g = self.gate.load(Acquire); // order: [assist.gate-enter] Acquire seed read, mirroring ActivityRecord::try_enter
         loop {
             if g & MUT_CLOSED != 0 {
                 return false;
             }
-            match self.gate.compare_exchange_weak(g, g + 1, AcqRel, Acquire) { // order: AcqRel enter CAS, mirroring ActivityRecord::try_enter
+            match self.gate.compare_exchange_weak(g, g + 1, AcqRel, Acquire) { // order: [assist.gate-enter] AcqRel enter CAS, mirroring ActivityRecord::try_enter
                 Ok(_) => return true,
                 Err(cur) => g = cur,
             }
@@ -514,13 +514,13 @@ impl MutGate {
     }
 
     pub fn leave(&self) {
-        let _ = self.gate.fetch_sub(1, self.leave_ord); // order: `leave_ord` — the mutation knob on the leave edge
+        let _ = self.gate.fetch_sub(1, self.leave_ord); // order: [check.knob] `leave_ord` — the mutation knob on the leave edge
     }
 
     pub fn close_and_drain(&self) {
-        let _ = self.gate.fetch_or(MUT_CLOSED, AcqRel); // order: AcqRel close, mirroring close_and_drain
+        let _ = self.gate.fetch_or(MUT_CLOSED, AcqRel); // order: [assist.gate-close] AcqRel close, mirroring close_and_drain
         let mut step = 0usize;
-        while self.gate.load(self.drain_ord) != MUT_CLOSED { // order: `drain_ord` — the mutation knob on the drain edge
+        while self.gate.load(self.drain_ord) != MUT_CLOSED { // order: [check.knob] `drain_ord` — the mutation knob on the drain edge
             sync::backoff(step);
             step = step.saturating_add(1);
         }
@@ -575,37 +575,37 @@ pub fn mu_merge(register: bool) -> Scenario {
         .thread({
             let remaining = remaining.clone();
             move || {
-                let _ = remaining.fetch_sub(4, SeqCst); // order: RemainingGuard batch (member 0)
+                let _ = remaining.fetch_sub(4, SeqCst); // order: [ws.term-gate] RemainingGuard batch (member 0)
             }
         })
         .thread({
             let remaining = remaining.clone();
             move || {
-                let _ = remaining.fetch_sub(2, SeqCst); // order: RemainingGuard batch (member 1)
+                let _ = remaining.fetch_sub(2, SeqCst); // order: [ws.term-gate] RemainingGuard batch (member 1)
             }
         })
         .thread({
             let (remaining, participants) = (remaining.clone(), participants.clone());
             move || {
                 if register {
-                    // order: divisor entry is an RMW — never lost, no
+                    // order: [ws.mu-merge] divisor entry is an RMW — never lost, no
                     // ordering needed (ws::Shared::register_joiner).
                     let _ = participants.fetch_add(1, Relaxed);
                 }
-                let _ = remaining.fetch_sub(6, SeqCst); // order: joiner's own sample batch
+                let _ = remaining.fetch_sub(6, SeqCst); // order: [ws.mu-merge] joiner's own sample batch
             }
         })
         .invariant(move || {
             let (remaining, participants) = &inv;
-            let r = remaining.load(SeqCst); // order: SeqCst invariant peek
-            let q = participants.load(SeqCst); // order: SeqCst invariant peek
+            let r = remaining.load(SeqCst); // order: [check.finale] SeqCst invariant peek
+            let q = participants.load(SeqCst); // order: [check.finale] SeqCst invariant peek
             assert!(r <= TOTAL, "remaining grew past the total");
             assert!((BASE_P..=BASE_P + 1).contains(&q), "participants left [base_p, base_p+1]: {q}");
         })
         .finale(move || {
             let (remaining, participants) = &fin;
-            let done = TOTAL - remaining.load(SeqCst); // order: SeqCst finale readback (threads joined)
-            let q = participants.load(SeqCst); // order: SeqCst finale readback (threads joined)
+            let done = TOTAL - remaining.load(SeqCst); // order: [check.finale] SeqCst finale readback (threads joined)
+            let q = participants.load(SeqCst); // order: [check.finale] SeqCst finale readback (threads joined)
             assert_eq!(done, TOTAL, "all samples must land");
             let mu = done as f64 / q as f64;
             assert!((mu - 4.0).abs() < 1e-12, "merged μ must count the joiner in the divisor: got {mu}, want 4");

@@ -51,11 +51,11 @@ impl<T> Mutex<T> {
             }
             Ctx::Controller(h) => {
                 assert!(
-                    h.phase.load(std::sync::atomic::Ordering::Relaxed) != PH_INVARIANT, // order: Relaxed — the controller is the only phase writer
+                    h.phase.load(std::sync::atomic::Ordering::Relaxed) != PH_INVARIANT, // order: [check.phase] Relaxed — the controller is the only phase writer
                     "invariant closures must not take shim locks"
                 );
                 assert!(
-                    h.phase.load(std::sync::atomic::Ordering::Relaxed) != PH_RUN, // order: Relaxed — the controller is the only phase writer
+                    h.phase.load(std::sync::atomic::Ordering::Relaxed) != PH_RUN, // order: [check.phase] Relaxed — the controller is the only phase writer
                     "checker bug: controller locking during the run phase"
                 );
                 // Setup/finale are single-threaded: take the real lock

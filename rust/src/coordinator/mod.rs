@@ -16,6 +16,15 @@
 //! submitted behind a backlog of `Background` jobs starts (and
 //! usually finishes) before them, preempting running background
 //! chunks at chunk granularity (see `sched::dispatch`).
+//!
+//! Assist recruitment follows the same *effective* priority: a job's
+//! activity record is published from inside its dispatched claim with
+//! the rank the dispatcher actually selected it at, so when
+//! anti-starvation promotion lifts a starving `Background` job to the
+//! front, idle workers scanning the assist board also rank it like
+//! `Interactive` work — the promotion re-ranks its assist targets,
+//! not just its queue position (see `sched::assist::AssistBoard::scan`
+//! and the staged test in `tests/dispatch_conformance.rs`).
 
 use std::ops::Range;
 use std::sync::Arc;

@@ -24,7 +24,11 @@
 //!   Rust hot path; Python never runs at request time.
 //! - [`harness`] — experiment drivers regenerating every table and
 //!   figure of the paper's evaluation.
+//! - [`analysis`] — the in-house static concurrency-contract analyzer
+//!   behind `ich analyze` (lock order, claim-loop contracts,
+//!   MEMORY_MODEL drift); a tier-1 CI gate.
 
+pub mod analysis;
 pub mod apps;
 #[cfg(any(test, feature = "check"))]
 pub mod check;

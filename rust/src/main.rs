@@ -13,8 +13,14 @@
 //!   overlap  --threads <p> --jobs <k> --n <iters>: serve k independent
 //!            loops sequentially vs overlapped (async epochs) on the
 //!            persistent pool and report both wall times
+//!   analyze  whole-crate static concurrency-contract analyzer (tier-1
+//!            CI gate): lock-order cycles, blocking calls reachable
+//!            from claim loops, the structural claim-loop contract,
+//!            MEMORY_MODEL edge-ID drift, and the atomics/unsafe
+//!            comment lint (strict over src/, SAFETY-only over tests/)
 //!   lint-atomics  scan src/ for atomic ops lacking `// order:` comments
-//!            and `unsafe` lacking `// SAFETY:` comments (CI gate)
+//!            and `unsafe` lacking `// SAFETY:` comments (subsumed by
+//!            `analyze`; kept for targeted --dir scans)
 //!   list     apps, policies, figures
 //!   version
 
@@ -92,6 +98,15 @@ fn main() {
         "ablation" | "ablations" => println!("{}", harness::run_named("ablations").unwrap()),
         "sweep" => cmd_sweep(&args),
         "overlap" => cmd_overlap(&args),
+        "analyze" => {
+            // `--dir` points at an alternative crate root (a checkout-
+            // relative path in CI); the default is this crate itself.
+            let root = args
+                .get("dir")
+                .map(std::path::PathBuf::from)
+                .unwrap_or_else(|| std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")));
+            std::process::exit(ich::analysis::run(&root));
+        }
         "lint-atomics" => {
             // `--dir` overrides the default (this crate's own src/),
             // so CI can point the lint at a checkout-relative path.
@@ -104,7 +119,13 @@ fn main() {
         "list" => cmd_list(),
         "version" => println!("ich 0.1.0 (paper: Booth & Lane 2020, iCh)"),
         _ => {
-            println!("usage: ich <run|figure|table|summary|ablation|sweep|overlap|lint-atomics|list|version> [flags]");
+            println!("usage: ich <run|figure|table|summary|ablation|sweep|overlap|analyze|lint-atomics|list|version> [flags]");
+            println!("  ich analyze  static concurrency-contract gate over src/sched, src/check,");
+            println!("        src/coordinator: lock-order cycles, blocking in claim loops, the");
+            println!("        claim-loop contract (preempt_point + note_assist + chunk accounting),");
+            println!("        MEMORY_MODEL edge-ID drift, and the atomics/unsafe comment lint.");
+            println!("        Silence one site with `// analysis: allow(<rule>, reason)` on or above");
+            println!("        the line; above a fn header the allow covers the whole fn.");
             println!("  e.g.: ich run --app bfs-scale-free --sched ich,0.33 --threads 28");
             println!("        ich run --app spmv --sched guided,1 --threads 4 --real");
             println!("        ich run --app spmv --sched ich --threads 4 --real --steal uniform");
@@ -119,6 +140,9 @@ fn main() {
             println!("        join in-flight loops and blocking submitters run chunks of their own epoch");
             println!("  ICH_TOPOLOGY  core->node map override: NxM | per-core list, with an optional");
             println!("        @-suffixed node-distance matrix (rows ';'-separated): 2x14@10,21;21,10");
+            println!("  ICH_EDF_TICK  pin the EDF distance-penalty tick scale (default: one-shot");
+            println!("        measured cross-socket calibration at pool startup on multi-socket");
+            println!("        hosts; single-socket hosts stay at the neutral 1.0; clamped to 0.25-4)");
         }
     }
 }

@@ -129,12 +129,12 @@ impl Assistable for LoopAssist<'_> {
     }
 
     fn try_join(&self) -> Option<usize> {
-        let mut s = self.next.load(Relaxed); // order: Relaxed seed read; the CAS below is the claim
+        let mut s = self.next.load(Relaxed); // order: [assist.gate-enter] Relaxed seed read; the CAS below is the claim
         loop {
             if s >= self.max {
                 return None;
             }
-            match self.next.compare_exchange_weak(s, s + 1, AcqRel, Relaxed) { // order: AcqRel slot CAS — winner sees prior slot setup; failure retries
+            match self.next.compare_exchange_weak(s, s + 1, AcqRel, Relaxed) { // order: [assist.slot-claim] AcqRel slot CAS — winner sees prior slot setup; failure retries
                 Ok(_) => return Some(s),
                 Err(cur) => s = cur,
             }
@@ -156,8 +156,14 @@ pub struct ActivityRecord {
     /// Joiner count (low bits) | CLOSED (top bit). See the module
     /// docs' join/finish-race argument.
     gate: AtomicUsize,
-    /// Dispatch class of the publishing epoch (recruitment order).
+    /// Dispatch class of the publishing epoch.
     class: LatencyClass,
+    /// *Effective* recruitment rank: `class.rank()` normally, but 0
+    /// when anti-starvation promotion dispatched the publishing epoch
+    /// (the publisher captures its claim's effective rank) — a
+    /// promoted Background loop recruits like the Interactive work the
+    /// promotion made it. Advisory: staleness only reorders scans.
+    eff_rank: AtomicUsize,
     /// Submission-origin node (distance-tier recruitment order).
     origin: Option<usize>,
     /// The engine state, lifetime-erased. Dereferenced only between a
@@ -188,25 +194,44 @@ impl ActivityRecord {
     pub(crate) unsafe fn new( // SAFETY: contract in the `# Safety` section above
         target: &(dyn Assistable + '_),
         class: LatencyClass,
+        eff_rank: u8,
         origin: Option<usize>,
     ) -> Arc<ActivityRecord> {
         // A fat reference and a fat raw pointer share layout; only the
         // lifetime is being erased (same trick as `runtime::erase`).
         let target =
             std::mem::transmute::<&(dyn Assistable + '_), *const (dyn Assistable + 'static)>(target);
-        Arc::new(ActivityRecord { gate: AtomicUsize::new(0), class, origin, target, panic: Mutex::new(None) })
+        Arc::new(ActivityRecord {
+            gate: AtomicUsize::new(0),
+            class,
+            eff_rank: AtomicUsize::new(eff_rank as usize),
+            origin,
+            target,
+            panic: Mutex::new(None),
+        })
+    }
+
+    /// Submitted dispatch class of the published loop.
+    pub(crate) fn class(&self) -> LatencyClass {
+        self.class
+    }
+
+    /// Effective recruitment rank (0 = recruits first). Equal to the
+    /// submitted class's rank unless promotion dispatched the epoch.
+    pub(crate) fn effective_rank(&self) -> u8 {
+        self.eff_rank.load(Relaxed) as u8 // order: [assist.eff-rank] Relaxed advisory rank; staleness only reorders scans
     }
 
     /// Enter the joiner gate; fails iff the record is CLOSED (the
     /// lost finish race — back out touching nothing). `pub(crate)` so
     /// the checker models drive the real gate directly.
     pub(crate) fn try_enter(&self) -> bool {
-        let mut g = self.gate.load(Acquire); // order: Acquire seed read; pairs with close's AcqRel fetch_or
+        let mut g = self.gate.load(Acquire); // order: [assist.gate-enter] Acquire seed read; pairs with close's AcqRel fetch_or
         loop {
             if g & CLOSED != 0 {
                 return false;
             }
-            match self.gate.compare_exchange_weak(g, g + 1, AcqRel, Acquire) { // order: AcqRel enter CAS; failure re-reads with Acquire for the CLOSED bit
+            match self.gate.compare_exchange_weak(g, g + 1, AcqRel, Acquire) { // order: [assist.gate-enter] AcqRel enter CAS; failure re-reads with Acquire for the CLOSED bit
                 Ok(_) => return true,
                 Err(cur) => g = cur,
             }
@@ -214,16 +239,16 @@ impl ActivityRecord {
     }
 
     pub(crate) fn leave(&self) {
-        self.gate.fetch_sub(1, Release); // order: Release — publishes joiner engine writes to the drain loop
+        self.gate.fetch_sub(1, Release); // order: [assist.gate-leave] Release — publishes joiner engine writes to the drain loop
     }
 
     /// Publisher side: refuse new joiners, then wait until every
     /// in-flight joiner has left the engine frame. After this returns
     /// the `target` pointee may be torn down.
     pub(crate) fn close_and_drain(&self) {
-        self.gate.fetch_or(CLOSED, AcqRel); // order: AcqRel — closes the gate and joins prior enter/leave edges
+        self.gate.fetch_or(CLOSED, AcqRel); // order: [assist.gate-close] AcqRel — closes the gate and joins prior enter/leave edges
         let mut step = 0usize;
-        while self.gate.load(Acquire) != CLOSED { // order: Acquire drain spin; pairs with leave's Release (MEMORY_MODEL.md)
+        while self.gate.load(Acquire) != CLOSED { // order: [assist.gate-close] Acquire drain spin; pairs with leave's Release (MEMORY_MODEL.md)
             // Checker-aware backoff: under a model this is the
             // fairness point that lets the drain wait be explored
             // finitely (and a stuck drain be reported as a deadlock).
@@ -254,30 +279,34 @@ impl AssistBoard {
 
     /// Nothing published? (One relaxed load; the assist-off fast path.)
     pub fn is_idle(&self) -> bool {
-        self.live.load(Relaxed) == 0 // order: Relaxed peek; the gate CAS re-validates before any join
+        self.live.load(Relaxed) == 0 // order: [assist.gate-enter] Relaxed peek; the gate CAS re-validates before any join
     }
 
     pub(crate) fn publish(&self, rec: Arc<ActivityRecord>) {
         self.records.lock().unwrap().push(rec);
-        self.live.fetch_add(1, Release); // order: Release — record visible in the lock before the count says so
+        self.live.fetch_add(1, Release); // order: [assist.board-live] Release — record visible in the lock before the count says so
     }
 
     pub(crate) fn retire(&self, rec: &Arc<ActivityRecord>) {
         self.records.lock().unwrap().retain(|r| !Arc::ptr_eq(r, rec));
-        self.live.fetch_sub(1, Release); // order: Release retire; the close/drain already quiesced joiners
+        self.live.fetch_sub(1, Release); // order: [assist.gate-close] Release retire; the close/drain already quiesced joiners
     }
 
     /// One idle-worker scan: snapshot the board, order candidates by
-    /// (class rank, distance tier from `my_node`) — Interactive loops
-    /// recruit first, near-origin loops before far ones — and join the
-    /// first that admits us. Returns whether any assist work ran.
+    /// (*effective* class rank, distance tier from `my_node`) —
+    /// Interactive loops recruit first, near-origin loops before far
+    /// ones — and join the first that admits us. The effective rank is
+    /// the dispatch rank the epoch actually ran at, so a Background
+    /// loop that anti-starvation promotion pushed to the front of the
+    /// queue also recruits assists ahead of unpromoted Batch work.
+    /// Returns whether any assist work ran.
     pub(crate) fn scan(&self, my_node: Option<usize>) -> bool {
         let mut recs = self.records.lock().unwrap().clone();
         if recs.is_empty() {
             return false;
         }
         let topo = Topology::detect();
-        recs.sort_by_key(|r| (r.class.rank(), VictimSelector::assist_tier(topo, my_node, r.origin)));
+        recs.sort_by_key(|r| (r.effective_rank(), VictimSelector::assist_tier(topo, my_node, r.origin)));
         for rec in recs {
             if !rec.try_enter() {
                 continue;
@@ -317,6 +346,18 @@ impl AssistBoard {
         }
         false
     }
+
+    /// Snapshot of `(submitted class, effective rank)` per published
+    /// record, in board order. Test/introspection hook for staging the
+    /// promotion → re-rank interaction without racing a live scan.
+    pub(crate) fn effective_classes(&self) -> Vec<(LatencyClass, u8)> {
+        self.records
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|r| (r.class(), r.effective_rank()))
+            .collect()
+    }
 }
 
 #[cfg(test)]
@@ -343,7 +384,7 @@ mod tests {
         };
         let has = || true;
         let target = LoopAssist::new(2, 4, &has, &bump);
-        let rec = unsafe { ActivityRecord::new(&target, LatencyClass::Batch, None) };
+        let rec = unsafe { ActivityRecord::new(&target, LatencyClass::Batch, LatencyClass::Batch.rank(), None) };
         assert!(rec.try_enter());
         rec.leave();
         rec.close_and_drain();
@@ -375,7 +416,7 @@ mod tests {
         };
         let has = || ran.load(SeqCst) == 0;
         let target = LoopAssist::new(1, 8, &has, &run);
-        let rec = unsafe { ActivityRecord::new(&target, LatencyClass::Interactive, None) };
+        let rec = unsafe { ActivityRecord::new(&target, LatencyClass::Interactive, LatencyClass::Interactive.rank(), None) };
         board.publish(Arc::clone(&rec));
         assert!(!board.is_idle());
         assert!(board.scan(None), "scan must join the published loop");
@@ -383,6 +424,41 @@ mod tests {
         assert!(!board.scan(None), "drained loop admits no more work");
         rec.close_and_drain();
         board.retire(&rec);
+        assert!(board.is_idle());
+    }
+
+    #[test]
+    fn promoted_background_outranks_batch_in_scan() {
+        let board = AssistBoard::new();
+        let batch_ran = AtomicU64::new(0);
+        let batch_run = |_tid: usize| {
+            batch_ran.fetch_add(1, SeqCst);
+        };
+        let promoted_ran = AtomicU64::new(0);
+        let promoted_run = |_tid: usize| {
+            promoted_ran.fetch_add(1, SeqCst);
+        };
+        let has = || true;
+        let batch_target = LoopAssist::new(1, 8, &has, &batch_run);
+        let promoted_target = LoopAssist::new(1, 8, &has, &promoted_run);
+        // Board order deliberately favours the Batch record; only the
+        // effective-rank sort can put the promoted loop first.
+        let batch =
+            unsafe { ActivityRecord::new(&batch_target, LatencyClass::Batch, LatencyClass::Batch.rank(), None) };
+        let promoted = unsafe { ActivityRecord::new(&promoted_target, LatencyClass::Background, 0, None) };
+        board.publish(Arc::clone(&batch));
+        board.publish(Arc::clone(&promoted));
+        assert_eq!(
+            board.effective_classes(),
+            vec![(LatencyClass::Batch, LatencyClass::Batch.rank()), (LatencyClass::Background, 0)]
+        );
+        assert!(board.scan(None), "scan must join a published loop");
+        assert_eq!(promoted_ran.load(SeqCst), 1, "promoted Background must recruit first");
+        assert_eq!(batch_ran.load(SeqCst), 0, "unpromoted Batch waits its turn");
+        for rec in [&promoted, &batch] {
+            rec.close_and_drain();
+            board.retire(rec);
+        }
         assert!(board.is_idle());
     }
 }

@@ -45,7 +45,7 @@ pub fn run_binlpt(
     run_assistable(
         exec,
         p,
-        &|| claimed.iter().any(|c| !c.load(SeqCst)), // order: SeqCst has-work probe over the claim flags
+        &|| claimed.iter().any(|c| !c.load(SeqCst)), // order: [binlpt.claim] SeqCst has-work probe over the claim flags
         &|tid| {
             // Phase 1: our own LPT-assigned chunks.
             for &ci in &assign[tid] {
@@ -68,7 +68,7 @@ pub fn run_binlpt(
 
 #[inline]
 fn claim(claimed: &[AtomicBool], ci: usize) -> bool {
-    !claimed[ci].swap(true, SeqCst) // order: SeqCst swap; exactly one winner per chunk
+    !claimed[ci].swap(true, SeqCst) // order: [binlpt.claim] SeqCst swap; exactly one winner per chunk
 }
 
 #[cfg(test)]

@@ -45,7 +45,7 @@ pub fn run_dynamic(
     let claim = |wid: Option<usize>| loop {
         // Chunk boundary: yield to a higher-class epoch, if pending.
         preempt_point();
-        let b = next.fetch_add(chunk, SeqCst); // order: SeqCst ticket on the shared counter (sole synchronizer)
+        let b = next.fetch_add(chunk, SeqCst); // order: [central.ticket] SeqCst ticket on the shared counter (sole synchronizer)
         if b >= n {
             return;
         }
@@ -56,7 +56,7 @@ pub fn run_dynamic(
     run_assistable(
         exec,
         p,
-        &|| next.load(SeqCst) < n, // order: SeqCst has-work probe
+        &|| next.load(SeqCst) < n, // order: [central.ticket] SeqCst has-work probe
         &|tid| claim(Some(tid)),
         &|_tid| {
             sink.note_assist();
@@ -83,13 +83,13 @@ pub fn run_guided(
     let claim = |wid: Option<usize>| loop {
         // Chunk boundary: yield to a higher-class epoch, if pending.
         preempt_point();
-        let mut b = next.load(SeqCst); // order: SeqCst read feeding the CAS ladder below
+        let mut b = next.load(SeqCst); // order: [central.ticket] SeqCst read feeding the CAS ladder below
         let e = loop {
             if b >= n {
                 return;
             }
             let c = policy::guided_chunk(n - b, p, min_chunk);
-            match next.compare_exchange_weak(b, b + c, SeqCst, SeqCst) { // order: SeqCst CAS on the shared counter (sole synchronizer)
+            match next.compare_exchange_weak(b, b + c, SeqCst, SeqCst) { // order: [central.ticket] SeqCst CAS on the shared counter (sole synchronizer)
                 Ok(_) => break b + c,
                 Err(cur) => b = cur,
             }
@@ -100,7 +100,7 @@ pub fn run_guided(
     run_assistable(
         exec,
         p,
-        &|| next.load(SeqCst) < n, // order: SeqCst has-work probe
+        &|| next.load(SeqCst) < n, // order: [central.ticket] SeqCst has-work probe
         &|tid| claim(Some(tid)),
         &|_tid| {
             sink.note_assist();
@@ -122,7 +122,7 @@ pub fn run_chunk_list(
     let claim = |wid: Option<usize>| loop {
         // Chunk boundary: yield to a higher-class epoch, if pending.
         preempt_point();
-        let i = next.fetch_add(1, SeqCst); // order: SeqCst ticket on the shared counter (sole synchronizer)
+        let i = next.fetch_add(1, SeqCst); // order: [central.ticket] SeqCst ticket on the shared counter (sole synchronizer)
         let Some(&(a, b)) = chunks.get(i) else { return };
         body(a..b);
         sink.add_chunk_at(wid, (b - a) as u64);
@@ -130,7 +130,7 @@ pub fn run_chunk_list(
     run_assistable(
         exec,
         p,
-        &|| next.load(SeqCst) < chunks.len(), // order: SeqCst has-work probe
+        &|| next.load(SeqCst) < chunks.len(), // order: [central.ticket] SeqCst has-work probe
         &|tid| claim(Some(tid)),
         &|_tid| {
             sink.note_assist();

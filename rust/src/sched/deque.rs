@@ -53,8 +53,8 @@ impl RangeDeque {
     /// steal-victim probing; exactness is not required).
     #[inline]
     pub fn remaining(&self) -> usize {
-        let e = self.end.load(SeqCst); // order: SeqCst paired reads; lock-free progress probe
-        let b = self.begin.load(SeqCst); // order: SeqCst paired reads; lock-free progress probe
+        let e = self.end.load(SeqCst); // order: [deque.probe] SeqCst paired reads; lock-free progress probe
+        let b = self.begin.load(SeqCst); // order: [deque.probe] SeqCst paired reads; lock-free progress probe
         e.saturating_sub(b)
     }
 
@@ -74,8 +74,8 @@ impl RangeDeque {
     #[inline]
     fn take_impl(&self, chunk: usize, mid_claim: impl FnOnce()) -> Option<Range<usize>> {
         debug_assert!(chunk > 0);
-        let b = self.begin.load(SeqCst); // order: SeqCst — owner fast path and thief cut form one total order
-        let e0 = self.end.load(SeqCst); // order: SeqCst — bounds the THE clamp below
+        let b = self.begin.load(SeqCst); // order: [deque.claim-publish] SeqCst — owner fast path and thief cut form one total order
+        let e0 = self.end.load(SeqCst); // order: [deque.cut-clamp] SeqCst — bounds the THE clamp below
         if b >= e0 {
             return None; // already drained; no store, no lock
         }
@@ -85,9 +85,9 @@ impl RangeDeque {
         // made concurrent thieves observe an empty non-empty deque
         // (module docs).
         let nb = b.saturating_add(chunk).min(e0);
-        self.begin.store(nb, SeqCst); // order: SeqCst optimistic claim (THE clamp: nb never passes max end)
+        self.begin.store(nb, SeqCst); // order: [deque.claim-publish] SeqCst optimistic claim (THE clamp: nb never passes max end)
         mid_claim();
-        let e = self.end.load(SeqCst); // order: SeqCst conflict re-check against a concurrent steal cut
+        let e = self.end.load(SeqCst); // order: [deque.cut-clamp] SeqCst conflict re-check against a concurrent steal cut
         if nb <= e {
             return Some(b..nb); // fast path: no conflict
         }
@@ -96,14 +96,14 @@ impl RangeDeque {
         // path; whatever is left of [b, e) is ours (`e − b < chunk`
         // here, so the owner takes the whole remainder).
         let _g = self.lock.lock().unwrap();
-        let e = self.end.load(SeqCst); // order: SeqCst re-read under the lock (thief quiesced)
+        let e = self.end.load(SeqCst); // order: [deque.cut-clamp] SeqCst re-read under the lock (thief quiesced)
         if b >= e {
             // Nothing left; undo the optimistic claim.
-            self.begin.store(b, SeqCst); // order: SeqCst rollback of the optimistic claim
+            self.begin.store(b, SeqCst); // order: [deque.claim-publish] SeqCst rollback of the optimistic claim
             return None;
         }
         let take = chunk.min(e - b);
-        self.begin.store(b + take, SeqCst); // order: SeqCst clamped claim under the lock
+        self.begin.store(b + take, SeqCst); // order: [deque.cut-clamp] SeqCst clamped claim under the lock
         Some(b..b + take)
     }
 
@@ -120,19 +120,19 @@ impl RangeDeque {
     /// `policy::clamp_chunk_to_stolen`).
     pub fn steal_half_with_len(&self) -> Option<(Range<usize>, usize)> {
         let _g = self.lock.lock().unwrap();
-        let b = self.begin.load(SeqCst); // order: SeqCst read under the lock; races only the owner fast path
-        let e = self.end.load(SeqCst); // order: SeqCst read under the lock; races only the owner fast path
+        let b = self.begin.load(SeqCst); // order: [deque.claim-publish] SeqCst read under the lock; races only the owner fast path
+        let e = self.end.load(SeqCst); // order: [deque.claim-publish] SeqCst read under the lock; races only the owner fast path
         if e <= b {
             return None; // line 2: nothing to steal
         }
         let half = (e - b).div_ceil(2); // line 4: half, at least 1
         let ne = e - half;
-        self.end.store(ne, SeqCst); // line 11 // order: SeqCst cut; owner's in-flight take re-checks end after this
+        self.end.store(ne, SeqCst); // line 11 // order: [deque.cut-clamp] SeqCst cut; owner's in-flight take re-checks end after this
         // Re-check against the owner's (possibly concurrent) progress.
-        let b2 = self.begin.load(SeqCst); // order: SeqCst re-check against the owner's optimistic claim
+        let b2 = self.begin.load(SeqCst); // order: [deque.claim-publish] SeqCst re-check against the owner's optimistic claim
         if ne < b2 {
             // lines 12–16: abort — roll the end pointer back.
-            self.end.store(e, SeqCst); // order: SeqCst rollback of the cut
+            self.end.store(e, SeqCst); // order: [deque.cut-clamp] SeqCst rollback of the cut
             return None;
         }
         Some((ne..e, e - b))
@@ -150,12 +150,12 @@ impl RangeDeque {
     /// exists.
     pub fn reset(&self, r: Range<usize>) {
         let _g = self.lock.lock().unwrap();
-        debug_assert!(self.end.load(SeqCst) <= self.begin.load(SeqCst), "reset requires a drained queue"); // order: SeqCst drained-queue check under the lock
+        debug_assert!(self.end.load(SeqCst) <= self.begin.load(SeqCst), "reset requires a drained queue"); // order: [deque.cut-clamp] SeqCst drained-queue check under the lock
         // Order matters for lock-free readers of `remaining`: shrink
         // first (end ≤ begin keeps it observably empty), then publish.
-        self.end.store(r.start, SeqCst); // order: SeqCst shrink-then-publish (comment above)
-        self.begin.store(r.start, SeqCst); // order: SeqCst shrink-then-publish (comment above)
-        self.end.store(r.end, SeqCst); // order: SeqCst shrink-then-publish (comment above)
+        self.end.store(r.start, SeqCst); // order: [deque.cut-clamp] SeqCst shrink-then-publish (comment above)
+        self.begin.store(r.start, SeqCst); // order: [deque.cut-clamp] SeqCst shrink-then-publish (comment above)
+        self.end.store(r.end, SeqCst); // order: [deque.cut-clamp] SeqCst shrink-then-publish (comment above)
     }
 
     /// Raw `(begin, end)` snapshot for the invariant tests and the
@@ -163,7 +163,7 @@ impl RangeDeque {
     /// (`check::models::deque`).
     #[cfg(any(test, feature = "check"))]
     pub(crate) fn raw(&self) -> (usize, usize) {
-        (self.begin.load(SeqCst), self.end.load(SeqCst)) // order: SeqCst snapshot for the checker's invariants
+        (self.begin.load(SeqCst), self.end.load(SeqCst)) // order: [deque.probe] SeqCst snapshot for the checker's invariants
     }
 }
 

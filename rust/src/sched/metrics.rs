@@ -81,7 +81,7 @@ impl MetricsSink {
     /// Record one late joiner entering the loop (work assisting).
     #[inline]
     pub fn note_assist(&self) {
-        self.assists.fetch_add(1, Relaxed); // order: Relaxed stat counter; readers tolerate drift
+        self.assists.fetch_add(1, Relaxed); // order: [stat.relaxed] Relaxed stat counter; readers tolerate drift
     }
 
     /// Bulk-accumulate an assisting joiner's chunks/iterations (the
@@ -89,8 +89,8 @@ impl MetricsSink {
     /// at exit too).
     #[inline]
     pub fn add_assist_bulk(&self, chunks: u64, iters: u64) {
-        self.assist_chunks.fetch_add(chunks, Relaxed); // order: Relaxed stat counter; readers tolerate drift
-        self.assist_iters.fetch_add(iters, Relaxed); // order: Relaxed stat counter; readers tolerate drift
+        self.assist_chunks.fetch_add(chunks, Relaxed); // order: [stat.relaxed] Relaxed stat counter; readers tolerate drift
+        self.assist_iters.fetch_add(iters, Relaxed); // order: [stat.relaxed] Relaxed stat counter; readers tolerate drift
     }
 
     /// Record one chunk for member tids (`Some`, into `per_thread`) or
@@ -108,8 +108,8 @@ impl MetricsSink {
     #[inline]
     pub fn add_chunk(&self, tid: usize, iters: u64) {
         let c = &self.per_thread[tid];
-        c.chunks.fetch_add(1, Relaxed); // order: Relaxed stat counter; readers tolerate drift
-        c.iters.fetch_add(iters, Relaxed); // order: Relaxed stat counter; readers tolerate drift
+        c.chunks.fetch_add(1, Relaxed); // order: [stat.relaxed] Relaxed stat counter; readers tolerate drift
+        c.iters.fetch_add(iters, Relaxed); // order: [stat.relaxed] Relaxed stat counter; readers tolerate drift
     }
 
     /// Bulk-accumulate a worker's locally-counted chunks/iterations
@@ -117,15 +117,15 @@ impl MetricsSink {
     #[inline]
     pub fn add_bulk(&self, tid: usize, chunks: u64, iters: u64) {
         let c = &self.per_thread[tid];
-        c.chunks.fetch_add(chunks, Relaxed); // order: Relaxed stat counter; readers tolerate drift
-        c.iters.fetch_add(iters, Relaxed); // order: Relaxed stat counter; readers tolerate drift
+        c.chunks.fetch_add(chunks, Relaxed); // order: [stat.relaxed] Relaxed stat counter; readers tolerate drift
+        c.iters.fetch_add(iters, Relaxed); // order: [stat.relaxed] Relaxed stat counter; readers tolerate drift
     }
 
     /// Record one spin→yield backoff transition on a failed-steal
     /// streak (cold path by construction).
     #[inline]
     pub fn add_backoff(&self, tid: usize) {
-        self.per_thread[tid].backoffs.fetch_add(1, Relaxed); // order: Relaxed stat counter; readers tolerate drift
+        self.per_thread[tid].backoffs.fetch_add(1, Relaxed); // order: [stat.relaxed] Relaxed stat counter; readers tolerate drift
     }
 
     /// Record a steal attempt of unknown locality (classified as
@@ -144,11 +144,11 @@ impl MetricsSink {
     pub fn add_steal_at(&self, tid: usize, ok: bool, local: bool, tier: Option<usize>) {
         let c = &self.per_thread[tid];
         if ok {
-            c.steals_ok.fetch_add(1, Relaxed); // order: Relaxed stat counter; readers tolerate drift
+            c.steals_ok.fetch_add(1, Relaxed); // order: [stat.relaxed] Relaxed stat counter; readers tolerate drift
             if local {
-                c.steals_local.fetch_add(1, Relaxed); // order: Relaxed stat counter; readers tolerate drift
+                c.steals_local.fetch_add(1, Relaxed); // order: [stat.relaxed] Relaxed stat counter; readers tolerate drift
             } else {
-                c.steals_remote.fetch_add(1, Relaxed); // order: Relaxed stat counter; readers tolerate drift
+                c.steals_remote.fetch_add(1, Relaxed); // order: [stat.relaxed] Relaxed stat counter; readers tolerate drift
             }
             let slots = &c.steals_tier;
             if !slots.is_empty() {
@@ -159,40 +159,40 @@ impl MetricsSink {
                     Some(t) if slots.len() >= 2 => t.min(slots.len() - 2),
                     _ => slots.len() - 1,
                 };
-                slots[i].fetch_add(1, Relaxed); // order: Relaxed stat counter; readers tolerate drift
+                slots[i].fetch_add(1, Relaxed); // order: [stat.relaxed] Relaxed stat counter; readers tolerate drift
             }
         } else {
-            c.steals_failed.fetch_add(1, Relaxed); // order: Relaxed stat counter; readers tolerate drift
+            c.steals_failed.fetch_add(1, Relaxed); // order: [stat.relaxed] Relaxed stat counter; readers tolerate drift
         }
     }
 
     pub fn collect(&self, elapsed: std::time::Duration) -> RunMetrics {
-        let iters: Vec<u64> = self.per_thread.iter().map(|c| c.iters.load(Relaxed)).collect(); // order: Relaxed stat snapshot
+        let iters: Vec<u64> = self.per_thread.iter().map(|c| c.iters.load(Relaxed)).collect(); // order: [stat.relaxed] Relaxed stat snapshot
         let tiers = self.per_thread.first().map_or(0, |c| c.steals_tier.len());
         let mut steals_by_tier = vec![0u64; tiers];
         for c in &self.per_thread {
             for (acc, slot) in steals_by_tier.iter_mut().zip(&c.steals_tier) {
-                *acc += slot.load(Relaxed); // order: Relaxed stat snapshot
+                *acc += slot.load(Relaxed); // order: [stat.relaxed] Relaxed stat snapshot
             }
         }
-        let assist_chunks = self.assist_chunks.load(Relaxed); // order: Relaxed stat snapshot
-        let assist_iters = self.assist_iters.load(Relaxed); // order: Relaxed stat snapshot
+        let assist_chunks = self.assist_chunks.load(Relaxed); // order: [stat.relaxed] Relaxed stat snapshot
+        let assist_iters = self.assist_iters.load(Relaxed); // order: [stat.relaxed] Relaxed stat snapshot
         RunMetrics {
             threads: self.per_thread.len(),
             elapsed_s: elapsed.as_secs_f64(),
             // Totals cover members *and* assisting joiners: member
             // claims + assists partition the executed chunks.
-            total_chunks: self.per_thread.iter().map(|c| c.chunks.load(Relaxed)).sum::<u64>() + assist_chunks, // order: Relaxed stat snapshot
+            total_chunks: self.per_thread.iter().map(|c| c.chunks.load(Relaxed)).sum::<u64>() + assist_chunks, // order: [stat.relaxed] Relaxed stat snapshot
             total_iters: iters.iter().sum::<u64>() + assist_iters,
-            assists: self.assists.load(Relaxed), // order: Relaxed stat snapshot
+            assists: self.assists.load(Relaxed), // order: [stat.relaxed] Relaxed stat snapshot
             assist_chunks,
             assist_iters,
-            steals_ok: self.per_thread.iter().map(|c| c.steals_ok.load(Relaxed)).sum(), // order: Relaxed stat snapshot
-            steals_local: self.per_thread.iter().map(|c| c.steals_local.load(Relaxed)).sum(), // order: Relaxed stat snapshot
-            steals_remote: self.per_thread.iter().map(|c| c.steals_remote.load(Relaxed)).sum(), // order: Relaxed stat snapshot
+            steals_ok: self.per_thread.iter().map(|c| c.steals_ok.load(Relaxed)).sum(), // order: [stat.relaxed] Relaxed stat snapshot
+            steals_local: self.per_thread.iter().map(|c| c.steals_local.load(Relaxed)).sum(), // order: [stat.relaxed] Relaxed stat snapshot
+            steals_remote: self.per_thread.iter().map(|c| c.steals_remote.load(Relaxed)).sum(), // order: [stat.relaxed] Relaxed stat snapshot
             steals_by_tier,
-            steals_failed: self.per_thread.iter().map(|c| c.steals_failed.load(Relaxed)).sum(), // order: Relaxed stat snapshot
-            backoffs: self.per_thread.iter().map(|c| c.backoffs.load(Relaxed)).sum(), // order: Relaxed stat snapshot
+            steals_failed: self.per_thread.iter().map(|c| c.steals_failed.load(Relaxed)).sum(), // order: [stat.relaxed] Relaxed stat snapshot
+            backoffs: self.per_thread.iter().map(|c| c.backoffs.load(Relaxed)).sum(), // order: [stat.relaxed] Relaxed stat snapshot
             iters_per_thread: iters,
             // Dispatch fields are filled in by the submission layer
             // (`parallel_for` / `LoopJoin::join`) after collection —
@@ -247,6 +247,10 @@ pub struct RunMetrics {
     /// Times the epoch was bypassed by later, higher-class arrivals
     /// (bounded by `sched::dispatch::PROMOTE_K`).
     pub dispatch_skips: u64,
+    /// EDF distance-penalty tick scale in effect during the run
+    /// (`sched::topology::edf_tick_scale`; 1.0 = neutral SLIT weight,
+    /// 0.0 only for hand-built sinks that never saw the dispatcher).
+    pub edf_tick_scale: f64,
 }
 
 impl RunMetrics {

@@ -413,6 +413,7 @@ pub fn parallel_for(n: usize, policy: &Policy, opts: &ForOpts, body: &(dyn Fn(Ra
     };
     let mut m = sink.collect(start.elapsed());
     m.class = opts.class;
+    m.edf_tick_scale = topology::edf_tick_scale();
     if let Some(d) = dispatch {
         m.queue_wait_s = d.queue_wait_s;
         m.promoted = d.promoted;
@@ -448,6 +449,7 @@ impl LoopJoin {
         let dispatch = self.handle.join_with_dispatch();
         let mut m = self.sink.collect(self.start.elapsed());
         m.class = self.class;
+        m.edf_tick_scale = topology::edf_tick_scale();
         if let Some(d) = dispatch {
             m.queue_wait_s = d.queue_wait_s;
             m.promoted = d.promoted;

@@ -36,9 +36,9 @@ pub fn run_awf(n: usize, p: usize, exec: &dyn Executor, body: &(dyn Fn(Range<usi
         // any measurement exists.
         let w = match wid {
             Some(tid) => {
-                let my_rate = done[tid].load(SeqCst) as f64 / busy[tid].load(SeqCst) as f64; // order: SeqCst reads of the cross-thread rate counters
+                let my_rate = done[tid].load(SeqCst) as f64 / busy[tid].load(SeqCst) as f64; // order: [awf.rate] SeqCst reads of the cross-thread rate counters
                 let mean_rate = {
-                    let s: f64 = (0..p).map(|j| done[j].load(SeqCst) as f64 / busy[j].load(SeqCst) as f64).sum(); // order: SeqCst reads of the cross-thread rate counters
+                    let s: f64 = (0..p).map(|j| done[j].load(SeqCst) as f64 / busy[j].load(SeqCst) as f64).sum(); // order: [awf.rate] SeqCst reads of the cross-thread rate counters
                     s / p as f64
                 };
                 if mean_rate > 0.0 && my_rate > 0.0 { (my_rate / mean_rate).clamp(0.25, 4.0) } else { 1.0 }
@@ -46,14 +46,14 @@ pub fn run_awf(n: usize, p: usize, exec: &dyn Executor, body: &(dyn Fn(Range<usi
             None => 1.0,
         };
 
-        let mut b = next.load(SeqCst); // order: SeqCst read feeding the CAS ladder below
+        let mut b = next.load(SeqCst); // order: [awf.ticket] SeqCst read feeding the CAS ladder below
         let e = loop {
             if b >= n {
                 return;
             }
             let base = policy::guided_chunk(n - b, 2 * p, 1); // remaining/(2p)
             let c = ((base as f64 * w) as usize).max(1).min(n - b);
-            match next.compare_exchange_weak(b, b + c, SeqCst, SeqCst) { // order: SeqCst CAS on the shared counter (sole synchronizer)
+            match next.compare_exchange_weak(b, b + c, SeqCst, SeqCst) { // order: [awf.ticket] SeqCst CAS on the shared counter (sole synchronizer)
                 Ok(_) => break b + c,
                 Err(cur) => b = cur,
             }
@@ -62,15 +62,15 @@ pub fn run_awf(n: usize, p: usize, exec: &dyn Executor, body: &(dyn Fn(Range<usi
         body(b..e);
         let dt = t0.elapsed().as_nanos() as u64;
         if let Some(tid) = wid {
-            done[tid].fetch_add((e - b) as u64, SeqCst); // order: SeqCst rate-sample publish (peers read both counters)
-            busy[tid].fetch_add(dt.max(1), SeqCst); // order: SeqCst rate-sample publish (peers read both counters)
+            done[tid].fetch_add((e - b) as u64, SeqCst); // order: [awf.rate] SeqCst rate-sample publish (peers read both counters)
+            busy[tid].fetch_add(dt.max(1), SeqCst); // order: [awf.rate] SeqCst rate-sample publish (peers read both counters)
         }
         sink.add_chunk_at(wid, (e - b) as u64);
     };
     run_assistable(
         exec,
         p,
-        &|| next.load(SeqCst) < n, // order: SeqCst has-work probe
+        &|| next.load(SeqCst) < n, // order: [awf.ticket] SeqCst has-work probe
         &|tid| claim(Some(tid)),
         &|_tid| {
             sink.note_assist();

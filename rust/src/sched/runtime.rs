@@ -190,8 +190,16 @@
 //! deterministic model over the *real* types in
 //! `crate::check::models` (run under `cargo test`, replayable via
 //! `ICH_CHECK_REPLAY=<model>:<seed>`). The in-code `// order:`
-//! comments at every atomic site name the edge the site belongs to;
-//! `ich lint-atomics` keeps them present.
+//! comments at every atomic site name a stable edge ID from that
+//! appendix's registry. `ich analyze` (tier-1 CI; see
+//! [`crate::analysis`]) keeps the whole contract honest statically:
+//! it checks the order comments are present and reference live
+//! registry edges, that lock acquisition order is acyclic across the
+//! crate's call graph, that nothing reachable from a claim loop (a
+//! `preempt_point` caller) blocks, and that every `run_assistable`
+//! region wires up preemption, assist accounting, and metrics
+//! partitioning. Site- or fn-level waivers use
+//! `// analysis: allow(<rule>, <reason>)`.
 
 use std::any::Any;
 use std::cell::{Cell, RefCell, UnsafeCell};
@@ -436,10 +444,19 @@ impl AssistCtx {
     }
 
     /// Publish `target` on the pool's assist board and wake idle
-    /// workers per the submission's class steering: `Interactive`
-    /// recruits every possible assistant, `Batch` nudges one, and
-    /// `Background` wakes nobody — it only *donates* already-awake
-    /// idle workers that happen to scan past it.
+    /// workers per the submission's *effective* class steering: rank 0
+    /// (Interactive, or any class anti-starvation promotion dispatched
+    /// at the front) recruits every possible assistant, rank 1 (Batch)
+    /// nudges one, and rank 2 (Background) wakes nobody — it only
+    /// *donates* already-awake idle workers that happen to scan past
+    /// it.
+    ///
+    /// The effective rank is captured at publish time: async drivers
+    /// run *inside* their dispatched claim, so the innermost
+    /// [`PreemptFrame`] of this pool carries the rank the dispatcher
+    /// actually ran the epoch at — 0 when promotion reclassified it.
+    /// Blocking submitters publish on the submitting thread (no frame)
+    /// and fall back to the submitted class's own rank.
     ///
     /// # Safety
     ///
@@ -448,9 +465,10 @@ impl AssistCtx {
     /// declare `target` before the scope binding and call
     /// [`AssistScope::finish`] after the engine's region returns.
     pub unsafe fn publish(&self, target: &(dyn Assistable + '_)) -> AssistScope { // SAFETY: contract in the `# Safety` section above
-        let rec = ActivityRecord::new(target, self.class, self.origin);
+        let eff = current_claim_rank(&self.shared).unwrap_or_else(|| self.class.rank());
+        let rec = ActivityRecord::new(target, self.class, eff, self.origin);
         self.shared.board.publish(Arc::clone(&rec));
-        let wake = match self.class.rank() {
+        let wake = match eff {
             0 => self.extra,
             1 => 1,
             _ => 0,
@@ -458,6 +476,17 @@ impl AssistCtx {
         wake_parked(&self.shared, wake);
         AssistScope { shared: Arc::clone(&self.shared), rec, done: false }
     }
+}
+
+/// Effective dispatch rank of the claim this thread is currently
+/// executing *for the given pool*, if any: the innermost
+/// [`PreemptFrame`] whose shared state is `shared` carries the rank
+/// the dispatcher ran the epoch at (0 for promoted epochs). `None`
+/// off-claim — e.g. a blocking submitter publishing pre-dispatch.
+fn current_claim_rank(shared: &Arc<PoolShared>) -> Option<u8> {
+    PREEMPT_ON.with(|frames| {
+        frames.borrow().iter().rev().find(|f| Arc::ptr_eq(&f.shared, shared)).map(|f| f.rank)
+    })
 }
 
 /// Publisher-side guard of one activity record: closing it (by
@@ -537,7 +566,7 @@ fn wake_parked(shared: &PoolShared, n: usize) {
         if need == 0 {
             break;
         }
-        if shared.parked[i].swap(false, AcqRel) { // order: AcqRel swap — one RMW reads the parked publish, never stale (parked_wake model)
+        if shared.parked[i].swap(false, AcqRel) { // order: [runtime.parked-wake] AcqRel swap — one RMW reads the parked publish, never stale (parked_wake model)
             t.unpark();
             need -= 1;
         }
@@ -645,16 +674,16 @@ impl Epoch {
     fn dispatch_info(&self) -> DispatchInfo {
         DispatchInfo {
             class: self.class,
-            queue_wait_s: self.dispatched_ns.load(Acquire) as f64 * 1e-9, // order: Acquire — pairs with the dispatch path's Release stores
-            promoted: self.promoted.load(Acquire), // order: Acquire — pairs with the dispatch path's Release stores
-            skips: self.skips.load(Acquire), // order: Acquire — pairs with the dispatch path's Release stores
+            queue_wait_s: self.dispatched_ns.load(Acquire) as f64 * 1e-9, // order: [runtime.metrics-merge] Acquire — pairs with the dispatch path's Release stores
+            promoted: self.promoted.load(Acquire), // order: [runtime.metrics-merge] Acquire — pairs with the dispatch path's Release stores
+            skips: self.skips.load(Acquire), // order: [runtime.metrics-merge] Acquire — pairs with the dispatch path's Release stores
             origin: self.origin,
         }
     }
 
     /// Record one finished assignment; the last one wakes the joiner.
     fn finish_one(&self) {
-        if self.pending.fetch_sub(1, AcqRel) == 1 { // order: AcqRel — the last decrement publishes chunk writes to the joiner
+        if self.pending.fetch_sub(1, AcqRel) == 1 { // order: [runtime.epoch-pending] AcqRel — the last decrement publishes chunk writes to the joiner
             if let Some(t) = self.waiter.lock().unwrap().take() {
                 t.unpark();
             }
@@ -691,7 +720,7 @@ fn execute(epoch: &Epoch, claim: usize) {
 fn join_wait(epoch: &Epoch) {
     let mut step = 0u32;
     loop {
-        if epoch.pending.load(Acquire) == 0 { // order: Acquire — joins the workers' AcqRel pending decrements
+        if epoch.pending.load(Acquire) == 0 { // order: [runtime.epoch-pending] Acquire — joins the workers' AcqRel pending decrements
             return;
         }
         if step < WAIT_SPINS + WAIT_YIELDS {
@@ -699,7 +728,7 @@ fn join_wait(epoch: &Epoch) {
             step += 1;
         } else {
             *epoch.waiter.lock().unwrap() = Some(thread::current());
-            if epoch.pending.load(Acquire) == 0 { // order: Acquire — joins the workers' AcqRel pending decrements
+            if epoch.pending.load(Acquire) == 0 { // order: [runtime.epoch-pending] Acquire — joins the workers' AcqRel pending decrements
                 // Completed between the check and the registration;
                 // deregister (best effort — finish_one may have taken
                 // it already) and go.
@@ -749,7 +778,7 @@ impl LoopHandle {
     pub fn is_finished(&self) -> bool {
         match &self.inner {
             HandleInner::Done(_) => true,
-            HandleInner::Epoch(e, _) => e.pending.load(Acquire) == 0, // order: Acquire — joins the workers' AcqRel pending decrements
+            HandleInner::Epoch(e, _) => e.pending.load(Acquire) == 0, // order: [runtime.epoch-pending] Acquire — joins the workers' AcqRel pending decrements
             HandleInner::Thread(j) => j.is_finished(),
         }
     }
@@ -916,7 +945,7 @@ pub fn preempt_point() {
             if f.yields >= super::dispatch::PROMOTE_K {
                 return None;
             }
-            if mask_has_higher(f.shared.class_mask.load(Relaxed), f.rank) { // order: Relaxed peek; the queue lock re-validates (dispatch_mask model)
+            if mask_has_higher(f.shared.class_mask.load(Relaxed), f.rank) { // order: [dispatch.mask-mirror] Relaxed peek; the queue lock re-validates (dispatch_mask model)
                 Some((Arc::clone(&f.shared), f.rank))
             } else {
                 None
@@ -993,13 +1022,17 @@ fn claim_next(shared: &PoolShared) -> Option<(Arc<Epoch>, usize, u8)> {
 /// Selection is made from the *claiming thread's* vantage: its NUMA
 /// node (known for pinned pool workers) weights the within-class EDF
 /// key by [`Topology::edf_distance_penalty`] against each epoch's
-/// submission origin, so near-deadline epochs are claimed by workers
-/// that won't pay cross-socket traffic for them. Unpinned claimants
-/// (and origin-less epochs) see the exact PR 4 ordering.
+/// submission origin — scaled by the pool-startup-calibrated
+/// [`topology::edf_tick_scale`] so one SLIT hop is worth what it
+/// *measures* on this host — and near-deadline epochs are claimed by
+/// workers that won't pay cross-socket traffic for them. Unpinned
+/// claimants (and origin-less epochs) see the exact PR 4 ordering.
+// analysis: allow(claim-blocking, the dispatch-queue critical section is the preemption mechanism itself; only selection happens under the lock, never a body)
 fn claim_next_above(shared: &PoolShared, below_rank: u8) -> Option<(Arc<Epoch>, usize, u8)> {
     let topo = Topology::detect();
     let me = topology::current_node();
-    let excess = |w: usize, o: usize| topo.edf_distance_penalty(w, o);
+    let tick = topology::edf_tick_scale_millis();
+    let excess = |w: usize, o: usize| topology::scaled_edf_penalty(topo.edf_distance_penalty(w, o), tick);
     let mut q = shared.queue.lock().unwrap();
     let out = loop {
         let Some(idx) = q.best_index_from(me, &excess) else { break None };
@@ -1008,9 +1041,9 @@ fn claim_next_above(shared: &PoolShared, below_rank: u8) -> Option<(Arc<Epoch>, 
             break None;
         }
         let epoch = Arc::clone(q.item(idx));
-        let c = epoch.next_claim.load(Relaxed); // order: Relaxed — next_claim is guarded by the queue lock
+        let c = epoch.next_claim.load(Relaxed); // order: [runtime.tid-claim] Relaxed — next_claim is guarded by the queue lock
         if c < epoch.claims {
-            epoch.next_claim.store(c + 1, Relaxed); // order: Relaxed — next_claim is guarded by the queue lock
+            epoch.next_claim.store(c + 1, Relaxed); // order: [runtime.tid-claim] Relaxed — next_claim is guarded by the queue lock
             if c + 1 == epoch.claims {
                 let (_, info) = q.remove_at(idx);
                 note_removed(shared, &epoch, &info);
@@ -1025,7 +1058,7 @@ fn claim_next_above(shared: &PoolShared, below_rank: u8) -> Option<(Arc<Epoch>, 
         let (_, info) = q.remove_at(idx);
         note_removed(shared, &epoch, &info);
     };
-    shared.class_mask.store(q.class_mask(), Relaxed); // order: Relaxed mirror published under the queue lock (dispatch_mask model)
+    shared.class_mask.store(q.class_mask(), Relaxed); // order: [dispatch.mask-mirror] Relaxed mirror published under the queue lock (dispatch_mask model)
     out
 }
 
@@ -1037,9 +1070,9 @@ fn claim_next_above(shared: &PoolShared, below_rank: u8) -> Option<(Arc<Epoch>, 
 fn claim_own(shared: &PoolShared, epoch: &Arc<Epoch>) -> Option<usize> {
     let mut q = shared.queue.lock().unwrap();
     let out = (0..q.len()).find(|&i| Arc::ptr_eq(q.item(i), epoch)).map(|idx| {
-        let c = epoch.next_claim.load(Relaxed); // order: Relaxed — next_claim is guarded by the queue lock
+        let c = epoch.next_claim.load(Relaxed); // order: [runtime.tid-claim] Relaxed — next_claim is guarded by the queue lock
         debug_assert!(c < epoch.claims, "exhausted epoch cannot stay queued");
-        epoch.next_claim.store(c + 1, Relaxed); // order: Relaxed — next_claim is guarded by the queue lock
+        epoch.next_claim.store(c + 1, Relaxed); // order: [runtime.tid-claim] Relaxed — next_claim is guarded by the queue lock
         if c + 1 == epoch.claims {
             let (_, info) = q.remove_at(idx);
             note_removed(shared, epoch, &info);
@@ -1049,7 +1082,7 @@ fn claim_own(shared: &PoolShared, epoch: &Arc<Epoch>) -> Option<usize> {
         }
         c
     });
-    shared.class_mask.store(q.class_mask(), Relaxed); // order: Relaxed mirror published under the queue lock (dispatch_mask model)
+    shared.class_mask.store(q.class_mask(), Relaxed); // order: [dispatch.mask-mirror] Relaxed mirror published under the queue lock (dispatch_mask model)
     out
 }
 
@@ -1063,7 +1096,7 @@ fn claim_own(shared: &PoolShared, epoch: &Arc<Epoch>) -> Option<usize> {
 fn self_assist(shared: &Arc<PoolShared>, epoch: &Arc<Epoch>) {
     let id = Arc::as_ptr(shared) as usize;
     MID_EPOCH_ON.with(|s| s.borrow_mut().push(id));
-    while epoch.pending.load(Acquire) != 0 { // order: Acquire — joins the workers' AcqRel pending decrements
+    while epoch.pending.load(Acquire) != 0 { // order: [runtime.epoch-pending] Acquire — joins the workers' AcqRel pending decrements
         // `execute` never unwinds (body panics are caught and stashed
         // on the epoch), so the pop below always runs.
         match claim_own(shared, epoch) {
@@ -1079,19 +1112,19 @@ fn self_assist(shared: &Arc<PoolShared>, epoch: &Arc<Epoch>) {
 /// Record an epoch's first claim hand-out: its queue wait, per class.
 fn note_first_dispatch(shared: &PoolShared, epoch: &Epoch) {
     let wait_ns = (epoch.enqueued_at.elapsed().as_nanos() as u64).max(1);
-    epoch.dispatched_ns.store(wait_ns, Release); // order: Release — pairs with the metrics Acquire loads
+    epoch.dispatched_ns.store(wait_ns, Release); // order: [runtime.metrics-merge] Release — pairs with the metrics Acquire loads
     let agg = &shared.stats[epoch.class.rank() as usize];
-    agg.dispatched.fetch_add(1, Relaxed); // order: Relaxed stat counter; readers tolerate drift
-    agg.queue_wait_ns.fetch_add(wait_ns, Relaxed); // order: Relaxed stat counter; readers tolerate drift
-    agg.queue_wait_ns_max.fetch_max(wait_ns, Relaxed); // order: Relaxed stat counter; readers tolerate drift
+    agg.dispatched.fetch_add(1, Relaxed); // order: [stat.relaxed] Relaxed stat counter; readers tolerate drift
+    agg.queue_wait_ns.fetch_add(wait_ns, Relaxed); // order: [stat.relaxed] Relaxed stat counter; readers tolerate drift
+    agg.queue_wait_ns_max.fetch_max(wait_ns, Relaxed); // order: [stat.relaxed] Relaxed stat counter; readers tolerate drift
 }
 
 /// Record the queue's removal verdict (bypass count / promotion).
 fn note_removed(shared: &PoolShared, epoch: &Epoch, info: &PopInfo) {
-    epoch.skips.store(info.skips, Release); // order: Release — pairs with the metrics Acquire loads
+    epoch.skips.store(info.skips, Release); // order: [runtime.metrics-merge] Release — pairs with the metrics Acquire loads
     if info.promoted {
-        epoch.promoted.store(true, Release); // order: Release — pairs with the metrics Acquire loads
-        shared.stats[epoch.class.rank() as usize].promotions.fetch_add(1, Relaxed); // order: Relaxed stat counter; readers tolerate drift
+        epoch.promoted.store(true, Release); // order: [runtime.metrics-merge] Release — pairs with the metrics Acquire loads
+        shared.stats[epoch.class.rank() as usize].promotions.fetch_add(1, Relaxed); // order: [stat.relaxed] Relaxed stat counter; readers tolerate drift
     }
 }
 
@@ -1120,7 +1153,7 @@ fn worker_loop(shared: Arc<PoolShared>, idx: usize, cpu: Option<usize>) {
         }
         // Drain-then-exit: shutdown is honored only once the queue is
         // empty, so epochs enqueued before `drop` still run.
-        if shared.shutdown.load(Acquire) { // order: Acquire — joins the shutdown Release store
+        if shared.shutdown.load(Acquire) { // order: [runtime.shutdown] Acquire — joins the shutdown Release store
             return;
         }
         if step < WAIT_SPINS + WAIT_YIELDS {
@@ -1129,19 +1162,19 @@ fn worker_loop(shared: Arc<PoolShared>, idx: usize, cpu: Option<usize>) {
         } else {
             // Publish "parked" BEFORE the final re-check (see
             // `PoolShared::parked` for the no-lost-wakeup argument).
-            shared.parked[idx].store(true, Release); // order: Release publish before the queue re-check (parked_wake model)
+            shared.parked[idx].store(true, Release); // order: [runtime.parked-publish] Release publish before the queue re-check (parked_wake model)
             if let Some((epoch, claim, rank)) = claim_next(&shared) {
-                shared.parked[idx].store(false, Release); // order: Release retract; the flag episode is over
+                shared.parked[idx].store(false, Release); // order: [runtime.parked-wake] Release retract; the flag episode is over
                 step = 0;
                 execute_claim(&shared, &epoch, claim, rank);
                 continue;
             }
-            if shared.shutdown.load(Acquire) { // order: Acquire — joins the shutdown Release store
-                shared.parked[idx].store(false, Release); // order: Release retract on shutdown
+            if shared.shutdown.load(Acquire) { // order: [runtime.shutdown] Acquire — joins the shutdown Release store
+                shared.parked[idx].store(false, Release); // order: [runtime.parked-wake] Release retract on shutdown
                 return;
             }
             thread::park();
-            shared.parked[idx].store(false, Release); // order: Release — wake consumed; next episode starts clean
+            shared.parked[idx].store(false, Release); // order: [runtime.parked-wake] Release — wake consumed; next episode starts clean
         }
     }
 }
@@ -1173,6 +1206,11 @@ impl Runtime {
     /// the submitting thread; pinning is skipped when the pool would
     /// oversubscribe the machine.
     pub fn with_pinning(workers: usize, pin: bool) -> Runtime {
+        // One-shot probe (per process): weight EDF distance penalties
+        // by the host's *measured* cross-socket latency rather than
+        // the firmware SLIT alone. No-op on single-socket hosts and
+        // under `ICH_EDF_TICK`.
+        topology::calibrate_edf_tick_scale();
         let ncpus = num_cpus();
         let do_pin = pin && ncpus > workers;
         let shared = Arc::new(PoolShared {
@@ -1259,13 +1297,24 @@ impl Runtime {
             let a = &self.shared.stats[i];
             ClassStats {
                 class: LatencyClass::from_rank(i as u8),
-                submitted: a.submitted.load(Relaxed), // order: Relaxed stat snapshot
-                dispatched: a.dispatched.load(Relaxed), // order: Relaxed stat snapshot
-                promotions: a.promotions.load(Relaxed), // order: Relaxed stat snapshot
-                queue_wait_s_total: a.queue_wait_ns.load(Relaxed) as f64 * 1e-9, // order: Relaxed stat snapshot
-                queue_wait_s_max: a.queue_wait_ns_max.load(Relaxed) as f64 * 1e-9, // order: Relaxed stat snapshot
+                submitted: a.submitted.load(Relaxed), // order: [stat.relaxed] Relaxed stat snapshot
+                dispatched: a.dispatched.load(Relaxed), // order: [stat.relaxed] Relaxed stat snapshot
+                promotions: a.promotions.load(Relaxed), // order: [stat.relaxed] Relaxed stat snapshot
+                queue_wait_s_total: a.queue_wait_ns.load(Relaxed) as f64 * 1e-9, // order: [stat.relaxed] Relaxed stat snapshot
+                queue_wait_s_max: a.queue_wait_ns_max.load(Relaxed) as f64 * 1e-9, // order: [stat.relaxed] Relaxed stat snapshot
             }
         })
+    }
+
+    /// Snapshot of `(submitted class, effective recruitment rank)` per
+    /// record currently published on this pool's assist board, in
+    /// publish order. The effective rank diverges from
+    /// `class.rank()` exactly when anti-starvation promotion
+    /// dispatched the publishing epoch (the board's scan order keys on
+    /// it) — exposed so tests and embedders can observe the
+    /// promotion → assist re-rank interaction directly.
+    pub fn assist_effective_classes(&self) -> Vec<(LatencyClass, u8)> {
+        self.shared.board.effective_classes()
     }
 
     /// Is the calling thread one of this pool's workers?
@@ -1289,9 +1338,9 @@ impl Runtime {
         {
             let mut q = self.shared.queue.lock().unwrap();
             q.push_from(Arc::clone(epoch), epoch.class, epoch.deadline, epoch.origin);
-            self.shared.class_mask.store(q.class_mask(), Relaxed); // order: Relaxed mirror published under the queue lock (dispatch_mask model)
+            self.shared.class_mask.store(q.class_mask(), Relaxed); // order: [dispatch.mask-mirror] Relaxed mirror published under the queue lock (dispatch_mask model)
         }
-        self.shared.stats[epoch.class.rank() as usize].submitted.fetch_add(1, Relaxed); // order: Relaxed stat counter; readers tolerate drift
+        self.shared.stats[epoch.class.rank() as usize].submitted.fetch_add(1, Relaxed); // order: [stat.relaxed] Relaxed stat counter; readers tolerate drift
         let mut need = epoch.claims;
         for (i, w) in self.workers.iter().enumerate() {
             if need == 0 {
@@ -1299,7 +1348,7 @@ impl Runtime {
             }
             // swap-claim the worker so concurrent submitters wake
             // *distinct* workers instead of stacking tokens on one.
-            if self.shared.parked[i].swap(false, AcqRel) { // order: AcqRel swap — one RMW reads the parked publish, never stale (parked_wake model)
+            if self.shared.parked[i].swap(false, AcqRel) { // order: [runtime.parked-wake] AcqRel swap — one RMW reads the parked publish, never stale (parked_wake model)
                 w.thread.unpark();
                 need -= 1;
             }
@@ -1583,18 +1632,18 @@ impl Relay {
 
     /// Mark the relay closed if the driver never published a region.
     fn close(&self) {
-        let _ = self.state.compare_exchange(RELAY_PENDING, RELAY_CLOSED, Release, Relaxed); // order: Release close; losers see CLOSED with their Acquire state load
+        let _ = self.state.compare_exchange(RELAY_PENDING, RELAY_CLOSED, Release, Relaxed); // order: [runtime.epoch-gate] Release close; losers see CLOSED with their Acquire state load
     }
 
     /// Claim the next unrun engine tid, if any.
     fn take_tid(&self) -> Option<usize> {
-        let limit = self.sub_p.load(Relaxed); // order: Relaxed — sub_p is set before the READY Release gate
-        let mut t = self.next.load(Relaxed); // order: Relaxed seed read; the CAS below is the claim
+        let limit = self.sub_p.load(Relaxed); // order: [runtime.epoch-gate] Relaxed — sub_p is set before the READY Release gate
+        let mut t = self.next.load(Relaxed); // order: [runtime.tid-claim] Relaxed seed read; the CAS below is the claim
         loop {
             if t >= limit {
                 return None;
             }
-            match self.next.compare_exchange_weak(t, t + 1, AcqRel, Relaxed) { // order: AcqRel tid CAS; exactly one runner per tid
+            match self.next.compare_exchange_weak(t, t + 1, AcqRel, Relaxed) { // order: [runtime.tid-claim] AcqRel tid CAS; exactly one runner per tid
                 Ok(_) => return Some(t),
                 Err(cur) => t = cur,
             }
@@ -1616,7 +1665,7 @@ impl Relay {
                 *slot = Some(payload);
             }
         }
-        self.pending.fetch_sub(1, AcqRel); // order: AcqRel — publishes this tid's work to the driver's drain
+        self.pending.fetch_sub(1, AcqRel); // order: [runtime.epoch-pending] AcqRel — publishes this tid's work to the driver's drain
     }
 
     /// A participant claim: wait for the driver to publish (or close),
@@ -1624,7 +1673,7 @@ impl Relay {
     fn participate(&self) {
         let mut step = 0u32;
         loop {
-            match self.state.load(Acquire) { // order: Acquire — joins the READY/CLOSED Release stores
+            match self.state.load(Acquire) { // order: [runtime.epoch-gate] Acquire — joins the READY/CLOSED Release stores
                 RELAY_CLOSED => return,
                 RELAY_READY => break,
                 _ => {
@@ -1671,7 +1720,7 @@ impl Executor for RelayExec {
             }
             return;
         }
-        if r.state.load(Relaxed) != RELAY_PENDING { // order: Relaxed fast-path peek; only this driver writes READY
+        if r.state.load(Relaxed) != RELAY_PENDING { // order: [runtime.epoch-gate] Relaxed fast-path peek; only this driver writes READY
             // A second parallel region in one epoch (no engine does
             // this today): correctness over amortization.
             scoped_run(p, false, f);
@@ -1683,9 +1732,9 @@ impl Executor for RelayExec {
         unsafe {
             *r.cell.get() = Some(erase(f));
         }
-        r.sub_p.store(p, Relaxed); // order: Relaxed — gated by the READY Release store below
-        r.pending.store(p - 1, Relaxed); // order: Relaxed — gated by the READY Release store below
-        r.state.store(RELAY_READY, Release); // order: Release — opens the gate; participants Acquire it
+        r.sub_p.store(p, Relaxed); // order: [runtime.epoch-gate] Relaxed — gated by the READY Release store below
+        r.pending.store(p - 1, Relaxed); // order: [runtime.epoch-gate] Relaxed — gated by the READY Release store below
+        r.state.store(RELAY_READY, Release); // order: [runtime.epoch-gate] Release — opens the gate; participants Acquire it
         // Engine tid 0 is ours; then help with unclaimed tids instead
         // of parking — participants may be queued behind busy workers
         // (or not exist at all on a 1-worker pool).
@@ -1695,7 +1744,7 @@ impl Executor for RelayExec {
             if let Some(t) = r.take_tid() {
                 step = 0;
                 r.run_tid(t);
-            } else if r.pending.load(Acquire) == 0 { // order: Acquire — joins the participants' AcqRel decrements
+            } else if r.pending.load(Acquire) == 0 { // order: [runtime.epoch-pending] Acquire — joins the participants' AcqRel decrements
                 break;
             } else if step < WAIT_SPINS {
                 std::hint::spin_loop();
@@ -1716,7 +1765,7 @@ impl Executor for RelayExec {
 
 impl Drop for Runtime {
     fn drop(&mut self) {
-        self.shared.shutdown.store(true, Release); // order: Release shutdown; workers join with Acquire
+        self.shared.shutdown.store(true, Release); // order: [runtime.shutdown] Release shutdown; workers join with Acquire
         for w in &self.workers {
             w.thread.unpark();
         }

@@ -52,7 +52,9 @@
 
 use std::sync::OnceLock;
 
-use super::pool::{num_cpus, pinned_core};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::pool::{num_cpus, pin_to_cpu, pinned_core};
 use crate::util::rng::Rng;
 
 /// SLIT convention: distance of a node to itself.
@@ -348,6 +350,178 @@ impl Topology {
     pub fn edf_distance_penalty(&self, worker_node: usize, origin: usize) -> u64 {
         self.distance(worker_node, origin).saturating_sub(self.distance(origin, origin))
     }
+}
+
+// --------------------------------------------------------------------
+// EDF tick scale: calibrating SLIT hops against *measured* latency
+// --------------------------------------------------------------------
+
+/// Process-wide multiplier the dispatch claim path applies on top of
+/// [`Topology::edf_distance_penalty`], stored ×1000 fixed-point
+/// (1000 = the neutral 1.0). The raw penalty stays the SLIT excess —
+/// tests and the simulator depend on those exact numbers — while this
+/// scale folds in what a cross-socket steal *actually costs* on the
+/// host, as measured once at pool startup by
+/// [`calibrate_edf_tick_scale`] (or pinned via `ICH_EDF_TICK`).
+static EDF_TICK_MILLIS: AtomicU64 = AtomicU64::new(1000);
+
+/// Clamp floor for the installed tick scale: a quarter SLIT weight.
+pub const EDF_TICK_MIN: f64 = 0.25;
+/// Clamp ceiling for the installed tick scale: 4× SLIT weight.
+pub const EDF_TICK_MAX: f64 = 4.0;
+
+/// Clamp a proposed scale into `[EDF_TICK_MIN, EDF_TICK_MAX]`;
+/// non-finite proposals (a degenerate probe) fall back to neutral.
+fn clamp_edf_tick(scale: f64) -> f64 {
+    if !scale.is_finite() {
+        return 1.0;
+    }
+    scale.clamp(EDF_TICK_MIN, EDF_TICK_MAX)
+}
+
+/// The EDF tick scale currently in effect (1.0 = neutral).
+pub fn edf_tick_scale() -> f64 {
+    edf_tick_scale_millis() as f64 / 1000.0
+}
+
+/// Fixed-point (×1000) form of [`edf_tick_scale`], for integer claim
+/// paths.
+pub fn edf_tick_scale_millis() -> u64 {
+    EDF_TICK_MILLIS.load(Ordering::Relaxed) // order: [topo.edf-tick] Relaxed — an advisory scale; claims may race an install
+}
+
+/// Install a new process-wide tick scale (clamped); returns what was
+/// actually installed.
+pub fn install_edf_tick_scale(scale: f64) -> f64 {
+    let clamped = clamp_edf_tick(scale);
+    EDF_TICK_MILLIS.store((clamped * 1000.0).round() as u64, Ordering::Relaxed); // order: [topo.edf-tick] Relaxed — advisory scale, no ordering with claims
+    clamped
+}
+
+/// Apply a fixed-point tick scale to a raw SLIT-excess penalty.
+#[inline]
+pub fn scaled_edf_penalty(raw: u64, tick_millis: u64) -> u64 {
+    raw * tick_millis / 1000
+}
+
+/// Spin until the probe turn token reaches `want`. Returns false on
+/// the `u64::MAX` poison (the partner thread never spawned). Yields
+/// periodically so an oversubscribed (or mis-pinned) host makes
+/// progress instead of burning whole scheduler quanta.
+fn wait_turn(turn: &AtomicU64, want: u64) -> bool {
+    let mut spins = 0u32;
+    loop {
+        // order: [topo.tick-probe] Acquire pairs with the partner's Release hand-off
+        let v = turn.load(Ordering::Acquire);
+        if v == want {
+            return true;
+        }
+        if v == u64::MAX {
+            return false;
+        }
+        spins = spins.wrapping_add(1);
+        if spins % 1024 == 0 {
+            std::thread::yield_now();
+        } else {
+            std::hint::spin_loop();
+        }
+    }
+}
+
+/// One cache-line ping-pong pass between threads pinned to `core_a`
+/// and `core_b`: the measured per-round-trip latency in nanoseconds.
+/// `None` if probe threads could not be spawned.
+fn pingpong_ns(core_a: usize, core_b: usize) -> Option<u64> {
+    use std::sync::Arc;
+    const WARMUP: u64 = 512;
+    const ROUNDS: u64 = 4096;
+    let turn = Arc::new(AtomicU64::new(0));
+    let t_b = Arc::clone(&turn);
+    let responder = std::thread::Builder::new()
+        .name("ich-tick-probe-b".into())
+        .spawn(move || {
+            pin_to_cpu(core_b);
+            for k in 0..(WARMUP + ROUNDS) {
+                if !wait_turn(&t_b, 2 * k + 1) {
+                    return;
+                }
+                t_b.store(2 * k + 2, Ordering::Release); // order: [topo.tick-probe] hand the turn back
+            }
+        })
+        .ok()?;
+    let t_a = Arc::clone(&turn);
+    let pinger = match std::thread::Builder::new().name("ich-tick-probe-a".into()).spawn(move || {
+        pin_to_cpu(core_a);
+        let mut t0 = std::time::Instant::now();
+        for k in 0..(WARMUP + ROUNDS) {
+            if k == WARMUP {
+                t0 = std::time::Instant::now();
+            }
+            t_a.store(2 * k + 1, Ordering::Release); // order: [topo.tick-probe] hand the turn over
+            if !wait_turn(&t_a, 2 * k + 2) {
+                return 0;
+            }
+        }
+        t0.elapsed().as_nanos() as u64
+    }) {
+        Ok(h) => h,
+        Err(_) => {
+            turn.store(u64::MAX, Ordering::Release); // order: [topo.tick-probe] poison: unblock the responder
+            let _ = responder.join();
+            return None;
+        }
+    };
+    let ns = pinger.join().ok()?;
+    responder.join().ok()?;
+    Some((ns / ROUNDS).max(1))
+}
+
+/// One-shot (per process) EDF tick-scale calibration, run at pool
+/// startup. Order of precedence:
+///
+/// 1. `ICH_EDF_TICK=<scale>` pins the scale outright (still clamped).
+/// 2. Single-socket hosts keep the neutral 1.0 — distance penalties
+///    are never paid there, so there is nothing to calibrate.
+/// 3. Multi-socket hosts run two short cache-line ping-pong probes
+///    (same-node pair, then node 0 ↔ the farthest node) and install
+///    `measured-latency-ratio / SLIT-ratio`: >1.0 when cross-socket
+///    traffic is more expensive than the firmware SLIT admits, <1.0
+///    when the interconnect beats its spec sheet.
+///
+/// Returns the scale in effect afterwards. Subsequent calls are
+/// no-ops (they return the installed scale), so racing pool
+/// constructions calibrate once.
+pub fn calibrate_edf_tick_scale() -> f64 {
+    static ONCE: std::sync::Once = std::sync::Once::new();
+    ONCE.call_once(|| {
+        if let Ok(v) = std::env::var("ICH_EDF_TICK") {
+            if let Ok(s) = v.trim().parse::<f64>() {
+                install_edf_tick_scale(s);
+                return;
+            }
+        }
+        if !host_is_multi_node() {
+            return;
+        }
+        let Some(t) = Topology::from_sysfs() else { return };
+        let near: Vec<usize> = (0..t.cores()).filter(|&c| t.node_of(c) == 0).collect();
+        let far_node = match (1..t.nodes()).max_by_key(|&nd| t.distance(0, nd)) {
+            Some(nd) => nd,
+            None => return,
+        };
+        let far: Vec<usize> = (0..t.cores()).filter(|&c| t.node_of(c) == far_node).collect();
+        if near.len() < 2 || far.is_empty() {
+            return;
+        }
+        let Some(local_ns) = pingpong_ns(near[0], near[1]) else { return };
+        let Some(remote_ns) = pingpong_ns(near[0], far[0]) else { return };
+        let measured = remote_ns as f64 / local_ns as f64;
+        let slit = t.distance(0, far_node) as f64 / t.distance(0, 0).max(1) as f64;
+        if slit > 1.0 {
+            install_edf_tick_scale(measured / slit);
+        }
+    });
+    edf_tick_scale()
 }
 
 /// Parse one sysfs `node*/distance` row: whitespace-separated
@@ -791,6 +965,41 @@ mod tests {
         assert_eq!(t.edf_distance_penalty(0, 0), 0, "same-node claims are neutral");
         assert_eq!(t.edf_distance_penalty(1, 0), 15);
         assert_eq!(t.edf_distance_penalty(0, 1), 15);
+    }
+
+    #[test]
+    fn edf_tick_clamp_and_scaling_math() {
+        assert_eq!(clamp_edf_tick(f64::NAN), 1.0, "degenerate probe falls back to neutral");
+        assert_eq!(clamp_edf_tick(f64::INFINITY), 1.0);
+        assert_eq!(clamp_edf_tick(100.0), EDF_TICK_MAX);
+        assert_eq!(clamp_edf_tick(0.0), EDF_TICK_MIN);
+        assert_eq!(clamp_edf_tick(1.5), 1.5);
+        assert_eq!(scaled_edf_penalty(15, 1000), 15, "neutral scale is the raw SLIT excess");
+        assert_eq!(scaled_edf_penalty(15, 2000), 30);
+        assert_eq!(scaled_edf_penalty(11, 250), 2, "floor division at the clamp floor");
+        assert_eq!(scaled_edf_penalty(0, 4000), 0, "same-node claims stay neutral at any scale");
+    }
+
+    #[test]
+    fn edf_tick_install_round_trips() {
+        let installed = install_edf_tick_scale(2.0);
+        assert_eq!(installed, 2.0);
+        assert_eq!(edf_tick_scale_millis(), 2000);
+        // Restore the process-wide neutral scale immediately: other
+        // tests in this binary read it through the claim path.
+        assert_eq!(install_edf_tick_scale(1.0), 1.0);
+        assert_eq!(edf_tick_scale(), 1.0);
+    }
+
+    #[test]
+    fn tick_probe_round_trip_on_this_host() {
+        // The probe itself must function on any host (pinning may
+        // no-op); only its *installation* is gated on multi-node.
+        if num_cpus() < 2 {
+            return; // one-core host: nothing to ping-pong across
+        }
+        let ns = pingpong_ns(0, 1).expect("probe threads spawn");
+        assert!(ns >= 1);
     }
 
     #[test]

@@ -101,13 +101,13 @@ enum StealBias {
 /// path) would hand thieves a lossy victim state to merge against.
 #[inline]
 fn publish_f64(slot: &AtomicU64, v: f64) {
-    slot.store(v.to_bits(), Relaxed); // order: Relaxed — advisory k/d sample; staleness only skews the estimate
+    slot.store(v.to_bits(), Relaxed); // order: [ws.advisory] Relaxed — advisory k/d sample; staleness only skews the estimate
 }
 
 /// Read a state field published by [`publish_f64`].
 #[inline]
 fn read_f64(slot: &AtomicU64) -> f64 {
-    f64::from_bits(slot.load(Relaxed)) // order: Relaxed — advisory k/d sample read
+    f64::from_bits(slot.load(Relaxed)) // order: [ws.advisory] Relaxed — advisory k/d sample read
 }
 
 /// Decrements the shared termination counter on drop — including
@@ -119,7 +119,7 @@ struct RemainingGuard<'a> {
 
 impl Drop for RemainingGuard<'_> {
     fn drop(&mut self) {
-        self.remaining.fetch_sub(self.len, SeqCst); // order: SeqCst — progress counter doubles as the termination gate
+        self.remaining.fetch_sub(self.len, SeqCst); // order: [ws.term-gate] SeqCst — progress counter doubles as the termination gate
     }
 }
 
@@ -191,8 +191,8 @@ impl Shared {
     /// A joiner entered: widen the victim range to cover its deque and
     /// fold it into the μ divisor.
     fn register_joiner(&self, tid: usize) {
-        self.participants.fetch_add(1, Relaxed); // order: Relaxed RMW — divisor entry is never lost, no payload to publish
-        self.live.fetch_max(tid + 1, Relaxed); // order: Relaxed fetch_max; victim scans tolerate a late widen
+        self.participants.fetch_add(1, Relaxed); // order: [ws.mu-merge] Relaxed RMW — divisor entry is never lost, no payload to publish
+        self.live.fetch_max(tid + 1, Relaxed); // order: [ws.advisory] Relaxed fetch_max; victim scans tolerate a late widen
     }
 
     /// Running mean completed iterations per thread, μ = (n −
@@ -208,8 +208,8 @@ impl Shared {
     /// merge effects) still feed `classify` as before.
     #[inline]
     fn mu(&self) -> f64 {
-        let done = self.total - self.remaining.load(Relaxed).min(self.total); // order: Relaxed — μ is an estimate; the SeqCst guard bounds done
-        let q = self.participants.load(Relaxed); // order: Relaxed divisor read (monotonic, RMW-updated)
+        let done = self.total - self.remaining.load(Relaxed).min(self.total); // order: [ws.mu-merge] Relaxed — μ is an estimate; the SeqCst guard bounds done
+        let q = self.participants.load(Relaxed); // order: [ws.mu-merge] Relaxed divisor read (monotonic, RMW-updated)
         if q == self.base_p {
             // No joiners (the only state with assist off): exact
             // pre-assist float expression.
@@ -302,7 +302,7 @@ fn run_engine(
     run_assistable(
         exec,
         p,
-        &|| shared.remaining.load(SeqCst) != 0, // order: SeqCst termination gate (pairs with RemainingGuard)
+        &|| shared.remaining.load(SeqCst) != 0, // order: [ws.term-gate] SeqCst termination gate (pairs with RemainingGuard)
         &move |tid| {
             worker(tid, p, seed, shared, chunk_policy, body, sink);
         },
@@ -316,7 +316,7 @@ fn run_engine(
         },
     );
 
-    debug_assert_eq!(shared.remaining.load(SeqCst), 0, "all iterations must execute"); // order: SeqCst post-join check
+    debug_assert_eq!(shared.remaining.load(SeqCst), 0, "all iterations must execute"); // order: [ws.term-gate] SeqCst post-join check
 }
 
 fn worker(
@@ -334,7 +334,7 @@ fn worker(
     // land on workers dynamically, so the map must come from the
     // worker itself) and set up the two-tier victim selector.
     let my_node = topology::current_node();
-    shared.nodes[tid].store(my_node.unwrap_or(usize::MAX), Relaxed); // order: Relaxed — node hint; a stale read only skews victim bias
+    shared.nodes[tid].store(my_node.unwrap_or(usize::MAX), Relaxed); // order: [ws.advisory] Relaxed — node hint; a stale read only skews victim bias
     let mut selector = VictimSelector::new();
     // Steal counters live in the sink's `0..p` member slots and are
     // only ever reported as sums, so an assist joiner (tid ≥ p) folds
@@ -388,7 +388,7 @@ fn worker(
         }
 
         // ---- Local queue empty: steal (§3.3) -------------------------
-        if shared.remaining.load(SeqCst) == 0 { // order: SeqCst termination gate (pairs with RemainingGuard)
+        if shared.remaining.load(SeqCst) == 0 { // order: [ws.term-gate] SeqCst termination gate (pairs with RemainingGuard)
             if tid < p {
                 sink.add_bulk(tid, local_chunks, local_iters);
             } else {
@@ -409,9 +409,9 @@ fn worker(
         // Victim-selection width: members plus every joiner that has
         // registered so far. With assist off this is always exactly p,
         // so the victim draws consume the byte-identical RNG stream.
-        let w = shared.live.load(Relaxed).max(tid + 1); // order: Relaxed — live-width hint for victim draws
+        let w = shared.live.load(Relaxed).max(tid + 1); // order: [ws.advisory] Relaxed — live-width hint for victim draws
         let node_of = |t: usize| {
-            let x = shared.nodes[t].load(Relaxed); // order: Relaxed — node hint; a stale read only skews victim bias
+            let x = shared.nodes[t].load(Relaxed); // order: [ws.advisory] Relaxed — node hint; a stale read only skews victim bias
             (x != usize::MAX).then_some(x)
         };
         let (victim, was_local) = match chunk_policy {

@@ -1,0 +1,26 @@
+//! Known-bad fixture for the `claim-blocking` rule: a claim loop
+//! (marked by `preempt_point()`) transitively reaches a `Condvar::wait`
+//! through a helper, and a second fn blocks while holding the deque
+//! lock. Never compiled — fed to the analyzer as text by
+//! `tests/analysis_gate.rs`.
+
+fn claim_worker(shared: &Shared) {
+    loop {
+        preempt_point();
+        if let Some(range) = shared.deque.try_claim() {
+            run(range);
+        } else {
+            wait_for_work(shared); // blocking: must be flagged
+        }
+    }
+}
+
+fn wait_for_work(shared: &Shared) {
+    let guard = shared.state.lock().unwrap();
+    let _unused = shared.cv.wait(guard).unwrap();
+}
+
+fn drain_under_deque_lock(shared: &Shared) {
+    let _g = shared.lock.lock().unwrap();
+    std::thread::park(); // blocking while the deque lock is held
+}

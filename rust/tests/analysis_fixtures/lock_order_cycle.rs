@@ -1,0 +1,30 @@
+//! Known-bad fixture for the `lock-order` rule: two paths acquire the
+//! same pair of mutexes in opposite orders, one of them through a
+//! free-fn call (the analyzer must propagate may-acquire sets through
+//! the call graph to see it). Never compiled — fed to the analyzer as
+//! text by `tests/analysis_gate.rs`.
+
+struct Board {
+    ledger: std::sync::Mutex<u32>,
+    journal: std::sync::Mutex<u32>,
+}
+
+/// Path one: `ledger` then (via `append_journal`) `journal`.
+fn settle(b: &Board) {
+    let g = b.ledger.lock().unwrap();
+    append_journal(b);
+    drop(g);
+}
+
+fn append_journal(b: &Board) {
+    let j = b.journal.lock().unwrap();
+    drop(j);
+}
+
+/// Path two: `journal` then `ledger` — closes the cycle.
+fn audit(b: &Board) {
+    let j = b.journal.lock().unwrap();
+    let g = b.ledger.lock().unwrap();
+    drop(g);
+    drop(j);
+}

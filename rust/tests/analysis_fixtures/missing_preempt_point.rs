@@ -1,0 +1,17 @@
+//! Known-bad fixture for the `claim-contract` rule: an engine drives
+//! `run_assistable` with a claim closure that never calls
+//! `preempt_point()`, does no `note_assist` accounting and no
+//! metrics-partition call — all three contract legs missing. Never
+//! compiled — fed to the analyzer as text by `tests/analysis_gate.rs`.
+
+fn run_engine(shared: &Shared, rt: &Runtime) {
+    rt.run_assistable(shared, |tid| {
+        naked_claim(shared, tid);
+    });
+}
+
+fn naked_claim(shared: &Shared, tid: usize) {
+    while let Some(range) = shared.counter.try_next() {
+        shared.body.execute(tid, range);
+    }
+}

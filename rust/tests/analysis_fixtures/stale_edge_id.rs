@@ -1,0 +1,13 @@
+//! Known-bad fixture for the `order-drift` rule: one order comment
+//! lacks any `[edge-id]`, one names an id missing from the registry.
+//! Never compiled — fed to the analyzer as text by
+//! `tests/analysis_gate.rs` together with a registry that also lists
+//! an edge with zero live sites.
+
+fn publish(flag: &std::sync::atomic::AtomicBool) {
+    flag.store(true, Ordering::Release); // order: publish without an id
+}
+
+fn claim(seq: &std::sync::atomic::AtomicU64) -> u64 {
+    seq.fetch_add(1, Ordering::AcqRel) // order: [fixture.ghost-edge] not in the registry
+}

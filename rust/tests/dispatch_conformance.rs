@@ -490,3 +490,107 @@ fn interactive_job_bypasses_queued_background_backlog() {
         }
     }
 }
+
+// ---------------------------------------------------------------------------
+// 5. Promotion re-ranks assist recruitment (effective class on the board)
+// ---------------------------------------------------------------------------
+
+/// Park all `p` claims of one gate epoch on `p` distinct workers; the
+/// queue can then be loaded deterministically before `release` opens.
+fn hold_workers(rt: &Runtime, p: usize) -> (ich::sched::LoopHandle, Arc<Gate>) {
+    let entered = Arc::new(AtomicUsize::new(0));
+    let release = Gate::new();
+    let (e2, r2) = (Arc::clone(&entered), Arc::clone(&release));
+    let handle = rt.submit_arc_with(
+        p,
+        Arc::new(move |_tid| {
+            e2.fetch_add(1, SeqCst);
+            r2.wait();
+        }),
+        SubmitOpts { assist: false, ..Default::default() },
+    );
+    while entered.load(SeqCst) < p {
+        std::thread::yield_now();
+    }
+    (handle, release)
+}
+
+/// Stage a Background assist loop on a held 2-worker pool, queue
+/// `bypasses` Interactive epochs behind it, release, and return the
+/// board snapshot taken while the loop's first chunk is parked inside
+/// its gate — i.e. the `(class, effective rank)` the loop *published*
+/// at — plus the loop's final metrics.
+fn staged_background_publish(bypasses: u64) -> (Vec<(LatencyClass, u8)>, ich::sched::RunMetrics) {
+    let rt = Runtime::with_pinning(2, false);
+    let (gate, release) = hold_workers(&rt, 2);
+    let inside = Gate::new();
+    let bg_release = Gate::new();
+    let (i2, br2) = (Arc::clone(&inside), Arc::clone(&bg_release));
+    let bg_opts = ForOpts {
+        threads: 1,
+        pin: false,
+        class: LatencyClass::Background,
+        assist: true,
+        ..Default::default()
+    };
+    let bg = parallel_for_async_on(
+        &rt,
+        1,
+        &Policy::Dynamic { chunk: 1 },
+        &bg_opts,
+        Arc::new(move |_r: std::ops::Range<usize>| {
+            i2.open();
+            br2.wait();
+        }),
+    );
+    // Each Interactive dispatch bypasses the queued Background entry
+    // once; the PROMOTE_K-th bypass promotes it to effective rank 0.
+    let hot: Vec<_> = (0..bypasses)
+        .map(|_| {
+            rt.submit_arc_with(
+                1,
+                Arc::new(|_tid| {}),
+                SubmitOpts { class: LatencyClass::Interactive, assist: false, ..Default::default() },
+            )
+        })
+        .collect();
+    release.open();
+    gate.join();
+    inside.wait();
+    // The record is published from *inside* the dispatched claim, so
+    // the snapshot carries the rank the dispatcher actually ran it at.
+    let board = rt.assist_effective_classes();
+    bg_release.open();
+    for h in hot {
+        h.join();
+    }
+    let bm = bg.join();
+    assert!(rt.assist_effective_classes().is_empty(), "finished loop must retire its record");
+    (board, bm)
+}
+
+#[test]
+fn promoted_background_loop_publishes_at_effective_rank_zero() {
+    let (board, bm) = staged_background_publish(PROMOTE_K);
+    assert_eq!(
+        board,
+        vec![(LatencyClass::Background, 0)],
+        "a promotion-dispatched Background loop must recruit assists at effective rank 0"
+    );
+    assert!(bm.promoted, "PROMOTE_K bypasses must promote the Background epoch");
+    assert_eq!(bm.dispatch_skips, PROMOTE_K);
+}
+
+#[test]
+fn unpromoted_background_loop_keeps_its_own_rank_on_the_board() {
+    // Negative control: one bypass short of promotion — the record
+    // must carry Background's own rank, not 0.
+    let (board, bm) = staged_background_publish(PROMOTE_K - 1);
+    assert_eq!(
+        board,
+        vec![(LatencyClass::Background, LatencyClass::Background.rank())],
+        "an unpromoted Background loop publishes at its submitted rank"
+    );
+    assert!(!bm.promoted, "{} bypasses must not promote", PROMOTE_K - 1);
+    assert_eq!(bm.dispatch_skips, PROMOTE_K - 1);
+}

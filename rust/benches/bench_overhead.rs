@@ -13,7 +13,9 @@
 //! (recorded to `BENCH_priority.json`), and work assisting on a
 //! straggler-heavy loop — idle pool workers joining the in-flight
 //! epoch vs pool-WS-only and the scoped-spawn fallback (recorded to
-//! `BENCH_assist.json`).
+//! `BENCH_assist.json`), and sustained multi-tenant serving through
+//! the fair-share admission front end (recorded to
+//! `BENCH_serving.json`).
 //! These are the §Perf numbers for the hot path.
 
 mod bench_common;
@@ -635,6 +637,59 @@ fn assist_straggler() {
     save_json("BENCH_assist.json", &out);
 }
 
+/// The fair-share tentpole measurement: a sustained open-loop Poisson
+/// mix of tenants and classes served through the `sched::fair`
+/// admission front end (real clock, measured charges), via the shared
+/// `harness::serving` machinery the `ich serve` command uses. Emits
+/// `BENCH_serving.json` with per-tenant p50/p99 queue waits, shed
+/// counts, and Jain's fairness index (raw and weight-normalized) —
+/// the §Perf numbers for the admission path.
+fn serving_sustained() {
+    println!("\n== serving_sustained: multi-tenant fair-share admission under open-loop load ==");
+    let mut tenants: Vec<ich::sched::TenantSpec> =
+        ["gold", "silver", "bulk"].iter().map(|n| ich::sched::TenantSpec::new(n)).collect();
+    tenants[0].weight = 4;
+    tenants[1].weight = 2;
+    tenants[2].weight = 1;
+    for t in &mut tenants {
+        t.depth = 128;
+    }
+    let p = ich::harness::serving::ServeParams {
+        tenants,
+        jobs: 300,
+        arrival_rate: 3_000.0,
+        n: 20_000,
+        threads: 2,
+        workers: 2,
+        inflight: 1,
+        seed: 42,
+        virtual_clock: false,
+        cost_ns: 200_000,
+        out: "BENCH_serving.json".to_string(),
+    };
+    let t0 = Instant::now();
+    let r = ich::harness::serving::run_serving(&p);
+    for t in &r.tenants {
+        println!(
+            "    -> {} (w={}): {}/{} served, {} shed, wait p50 {} / p99 {}",
+            t.name,
+            t.weight,
+            t.completed,
+            t.submitted,
+            t.shed_throttled + t.shed_full,
+            fmt_s(t.wait_p50_ns as f64 / 1e9),
+            fmt_s(t.wait_p99_ns as f64 / 1e9)
+        );
+    }
+    println!(
+        "    == jain raw {:.4} / weighted {:.4} in {} ==",
+        r.jain_raw,
+        r.jain_weighted,
+        fmt_s(t0.elapsed().as_secs_f64())
+    );
+    save_json("BENCH_serving.json", &ich::harness::serving::report_json(&p, &r));
+}
+
 fn multithread_smoke() {
     println!("\n== multi-thread correctness overhead (oversubscribed on this host) ==");
     let n = 1_000_000usize;
@@ -672,5 +727,6 @@ fn main() {
     distance_rank();
     dispatch_latency();
     assist_straggler();
+    serving_sustained();
     multithread_smoke();
 }

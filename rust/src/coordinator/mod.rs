@@ -31,7 +31,8 @@ use std::sync::Arc;
 
 use crate::sched::runtime::Runtime;
 use crate::sched::{
-    parallel_for_async, parallel_for_async_on, ExecMode, ForOpts, LatencyClass, LoopJoin, Policy, RunMetrics,
+    parallel_for_async, parallel_for_async_on, ExecMode, FairJob, FairShare, FairTicket, ForOpts, LatencyClass,
+    LoopJoin, Policy, RejectReason, RunMetrics,
 };
 
 /// One independent loop to serve.
@@ -50,6 +51,12 @@ pub struct LoopJob {
     pub class: LatencyClass,
     /// Virtual-tick deadline for EDF ordering within the class.
     pub deadline: Option<u64>,
+    /// Tenant index for fair-share admission / attribution
+    /// (`sched::fair`; `None` = untenanted).
+    pub tenant: Option<u32>,
+    /// Declared cost for the fair front end's deterministic charge
+    /// mode (`sched::fair::ChargeMode::Declared`).
+    pub cost_ns: u64,
     body: Arc<dyn Fn(Range<usize>) + Send + Sync>,
 }
 
@@ -63,6 +70,8 @@ impl LoopJob {
             seed: 0x1C4,
             class: LatencyClass::process_default(),
             deadline: None,
+            tenant: None,
+            cost_ns: 1_000,
             body,
         }
     }
@@ -86,6 +95,16 @@ impl LoopJob {
         self.deadline = Some(deadline);
         self
     }
+
+    pub fn with_tenant(mut self, tenant: u32) -> LoopJob {
+        self.tenant = Some(tenant);
+        self
+    }
+
+    pub fn with_cost_ns(mut self, cost_ns: u64) -> LoopJob {
+        self.cost_ns = cost_ns.max(1);
+        self
+    }
 }
 
 /// A submitted loop: join to get its metrics back.
@@ -106,6 +125,18 @@ impl InFlight {
     }
 }
 
+/// One accepted submission: a direct pool handle or a fair-front-end
+/// ticket ([`Coordinator::submit_admitted`]).
+pub enum Submission {
+    /// Submitted straight to the pool (no fair front end / no tenant).
+    Direct(InFlight),
+    /// Routed through fair-share admission; join the ticket.
+    Fair { name: String, ticket: FairTicket },
+    /// Shed by admission control — explicit backpressure signal for
+    /// the caller to surface (retry-after, 429, …).
+    Rejected { name: String, tenant: u32, reason: RejectReason },
+}
+
 /// Serving-layer façade over the async submission path.
 pub struct Coordinator {
     /// Scheduler width per loop.
@@ -113,12 +144,14 @@ pub struct Coordinator {
     mode: ExecMode,
     /// Explicit pool to serve from (`None` = the shared global pool).
     pool: Option<Arc<Runtime>>,
+    /// Fair-share admission front end for tenant-tagged jobs.
+    fair: Option<Arc<FairShare>>,
 }
 
 impl Coordinator {
     /// Coordinator submitting `threads`-wide loops to the shared pool.
     pub fn new(threads: usize) -> Coordinator {
-        Coordinator { threads, mode: ExecMode::Pool, pool: None }
+        Coordinator { threads, mode: ExecMode::Pool, pool: None, fair: None }
     }
 
     /// Measurement baseline: detached per-call thread teams instead of
@@ -136,6 +169,13 @@ impl Coordinator {
         self
     }
 
+    /// Route tenant-tagged jobs through a fair-share admission front
+    /// end (`sched::fair`); see [`Coordinator::submit_admitted`].
+    pub fn with_fair(mut self, fair: Arc<FairShare>) -> Coordinator {
+        self.fair = Some(fair);
+        self
+    }
+
     /// Submit one loop; returns immediately.
     pub fn submit(&self, job: LoopJob) -> InFlight {
         let opts = ForOpts {
@@ -146,6 +186,7 @@ impl Coordinator {
             mode: self.mode,
             class: job.class,
             deadline: job.deadline,
+            tenant: job.tenant,
             ..Default::default()
         };
         let join = match &self.pool {
@@ -153,6 +194,33 @@ impl Coordinator {
             None => parallel_for_async(job.n, &job.policy, &opts, Arc::clone(&job.body)),
         };
         InFlight { name: job.name, join }
+    }
+
+    /// Submit one loop through fair-share admission when a front end
+    /// is configured and the job carries a tenant; untenanted jobs
+    /// (or coordinators without a front end) fall through to
+    /// [`Coordinator::submit`]. Unlike `submit`, this can *reject*:
+    /// shed jobs come back as [`Submission::Rejected`] instead of
+    /// entering the pool.
+    pub fn submit_admitted(&self, job: LoopJob) -> Submission {
+        let (Some(fair), Some(tenant)) = (self.fair.as_ref(), job.tenant) else {
+            return Submission::Direct(self.submit(job));
+        };
+        let fj = FairJob {
+            n: job.n,
+            threads: self.threads,
+            policy: job.policy.clone(),
+            weights: job.weights.clone(),
+            seed: job.seed,
+            class: job.class,
+            deadline: job.deadline,
+            cost_ns: job.cost_ns,
+            body: Arc::clone(&job.body),
+        };
+        match fair.submit(tenant as usize, fj) {
+            Ok(ticket) => Submission::Fair { name: job.name, ticket },
+            Err(reason) => Submission::Rejected { name: job.name, tenant, reason },
+        }
     }
 
     /// Submit every job up front — so they overlap on the pool — then
@@ -234,6 +302,40 @@ mod tests {
         for h in hits.iter() {
             assert_eq!(h.load(SeqCst), 1);
         }
+    }
+
+    #[test]
+    fn fair_front_end_admits_rejects_and_attributes() {
+        use crate::sched::{FairShare, TenantSpec};
+        let n = 200;
+        let hits: Arc<Vec<AtomicU64>> = Arc::new((0..n).map(|_| AtomicU64::new(0)).collect());
+        let rt = Arc::new(crate::sched::Runtime::with_pinning(1, false));
+        let mut specs = vec![TenantSpec::new("a"), TenantSpec::new("b")];
+        specs[1].depth = 1; // Background cap = 1: second submit sheds
+        let fair = Arc::new(FairShare::new_virtual(Arc::clone(&rt), &specs));
+        let coord = Coordinator::new(1).with_pool(rt).with_fair(fair);
+
+        let fair_job = counting_job("fair", n, &hits).with_tenant(1).with_cost_ns(1_000);
+        let Submission::Fair { name, ticket } = coord.submit_admitted(fair_job) else {
+            panic!("tenant-tagged job must route through the fair front end");
+        };
+        assert_eq!(name, "fair");
+        let shed = counting_job("shed", n, &hits).with_class(LatencyClass::Background).with_tenant(1);
+        let Submission::Rejected { tenant: 1, .. } = coord.submit_admitted(shed) else {
+            panic!("over-depth Background submit must be shed");
+        };
+        let m = ticket.join();
+        assert_eq!(m.total_iters, n as u64);
+        assert_eq!(m.tenant, Some(1), "tenant id must flow through the fair release into RunMetrics");
+
+        // Untenanted jobs fall through to the direct path.
+        let direct: Arc<Vec<AtomicU64>> = Arc::new((0..n).map(|_| AtomicU64::new(0)).collect());
+        let Submission::Direct(inflight) = coord.submit_admitted(counting_job("plain", n, &direct)) else {
+            panic!("untenanted job must bypass admission");
+        };
+        let (_, dm) = inflight.join();
+        assert_eq!(dm.total_iters, n as u64);
+        assert_eq!(dm.tenant, None);
     }
 
     #[test]

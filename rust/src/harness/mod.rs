@@ -4,6 +4,7 @@
 
 pub mod figures;
 pub mod sensitivity;
+pub mod serving;
 pub mod speedup;
 
 /// Dispatch a figure/table by name; None if unknown.

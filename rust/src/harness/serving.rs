@@ -1,0 +1,381 @@
+//! Sustained-load serving harness for the multi-tenant fair-share
+//! front end (`sched::fair`), behind `ich serve` and the
+//! `serving_sustained` arm of `bench_overhead`.
+//!
+//! Open-loop Poisson arrivals over a mix of tenants and dispatch
+//! classes are served through a [`FairShare`] and reported as
+//! per-tenant admission counters, p50/p99 queue waits, and Jain's
+//! fairness index over served work (raw and weight-normalized). Two
+//! clock modes:
+//!
+//! - **real** (default for `ich serve`): arrivals are paced by wall
+//!   clock and completions charge measured execution time — the
+//!   perf-measurement mode.
+//! - **virtual** (`--virtual`; the CI smoke arm): the whole serve runs
+//!   on the deterministic virtual clock with declared costs — zero
+//!   sleeps, identical output for identical seeds on any machine.
+//!
+//! The emitted JSON (`BENCH_serving.json` by default) carries a
+//! `topology_override` flag so numbers produced under a synthetic
+//! `ICH_TOPOLOGY` can never masquerade as testbed data.
+
+use std::ops::Range;
+use std::sync::Arc;
+
+use crate::sched::fair::{FairJob, FairShare, TenantSpec};
+use crate::sched::runtime::Runtime;
+use crate::sched::{LatencyClass, Policy};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// One sustained-load serving run.
+#[derive(Clone, Debug)]
+pub struct ServeParams {
+    pub tenants: Vec<TenantSpec>,
+    /// Total submissions across all tenants.
+    pub jobs: usize,
+    /// Open-loop Poisson arrival rate, submissions/s across tenants.
+    pub arrival_rate: f64,
+    /// Iterations per served loop.
+    pub n: usize,
+    /// Team size per served loop.
+    pub threads: usize,
+    /// Pool worker count.
+    pub workers: usize,
+    /// Fair front-end release window.
+    pub inflight: usize,
+    pub seed: u64,
+    /// Deterministic virtual-clock mode (declared costs, zero sleeps).
+    pub virtual_clock: bool,
+    /// Declared per-job cost (virtual-mode charge + service time).
+    pub cost_ns: u64,
+    /// Report path.
+    pub out: String,
+}
+
+impl Default for ServeParams {
+    fn default() -> ServeParams {
+        ServeParams {
+            tenants: vec![TenantSpec::new("t0"), TenantSpec::new("t1")],
+            jobs: 400,
+            arrival_rate: 2_000.0,
+            n: 4_096,
+            threads: 1,
+            workers: 2,
+            inflight: 1,
+            seed: 42,
+            virtual_clock: false,
+            cost_ns: 1_000_000,
+            out: "BENCH_serving.json".to_string(),
+        }
+    }
+}
+
+/// Parse serving flags: `--tenants <count | spec,spec,...>` (specs as
+/// in [`TenantSpec::parse`]), `--weight w0,w1,...`, `--rate r`
+/// (tokens/s, all tenants), `--burst b`, `--depth d`, `--jobs`,
+/// `--arrivals` (submissions/s), `--n`, `--threads`, `--workers`,
+/// `--inflight`, `--seed`, `--cost-ns`, `--virtual`, `--out`.
+pub fn params_from_args(args: &Args) -> Result<ServeParams, String> {
+    let mut p = ServeParams::default();
+    if let Some(t) = args.get("tenants") {
+        p.tenants = match t.parse::<usize>() {
+            Ok(k) if k >= 1 => (0..k).map(|i| TenantSpec::new(&format!("t{i}"))).collect(),
+            Ok(_) => return Err("--tenants: need at least 1".to_string()),
+            Err(_) => TenantSpec::parse_list(t)?,
+        };
+        if p.tenants.is_empty() {
+            return Err("--tenants: empty list".to_string());
+        }
+    }
+    if let Some(w) = args.get("weight") {
+        let ws: Vec<u64> = w
+            .split(',')
+            .map(|x| x.trim().parse::<u64>().map_err(|e| format!("--weight: '{x}': {e}")))
+            .collect::<Result<_, _>>()?;
+        if ws.len() != p.tenants.len() {
+            return Err(format!("--weight: {} values for {} tenants", ws.len(), p.tenants.len()));
+        }
+        for (t, w) in p.tenants.iter_mut().zip(ws) {
+            t.weight = w.max(1);
+        }
+    }
+    if let Some(r) = args.get("rate") {
+        let r: f64 = r.parse().map_err(|e| format!("--rate: {e}"))?;
+        for t in &mut p.tenants {
+            t.rate = r;
+        }
+    }
+    if let Some(b) = args.get("burst") {
+        let b: f64 = b.parse().map_err(|e| format!("--burst: {e}"))?;
+        for t in &mut p.tenants {
+            t.burst = b;
+        }
+    }
+    if let Some(d) = args.get("depth") {
+        let d: usize = d.parse().map_err(|e| format!("--depth: {e}"))?;
+        for t in &mut p.tenants {
+            t.depth = d;
+        }
+    }
+    p.jobs = args.get_usize("jobs", p.jobs);
+    p.arrival_rate = args.get_f64("arrivals", p.arrival_rate);
+    if !(p.arrival_rate.is_finite() && p.arrival_rate > 0.0) {
+        return Err("--arrivals: need a positive rate".to_string());
+    }
+    p.n = args.get_usize("n", p.n);
+    p.threads = args.get_usize("threads", p.threads);
+    p.workers = args.get_usize("workers", p.workers);
+    p.inflight = args.get_usize("inflight", p.inflight);
+    p.seed = args.get_u64("seed", p.seed);
+    p.cost_ns = args.get_u64("cost-ns", p.cost_ns).max(1);
+    p.virtual_clock = args.get_bool("virtual");
+    p.out = args.get_or("out", &p.out).to_string();
+    Ok(p)
+}
+
+/// Per-tenant serving outcome.
+#[derive(Clone, Debug)]
+pub struct TenantReport {
+    pub name: String,
+    pub weight: u64,
+    pub submitted: u64,
+    pub admitted: u64,
+    pub queued: u64,
+    pub shed_throttled: u64,
+    pub shed_full: u64,
+    pub completed: u64,
+    /// Total charged execution time.
+    pub work_ns: u64,
+    /// Submission → release queue waits (fair front end, serving
+    /// clock).
+    pub wait_p50_ns: u64,
+    pub wait_p99_ns: u64,
+}
+
+/// Whole-run serving outcome.
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    pub tenants: Vec<TenantReport>,
+    /// Jain's index over per-tenant served work (1.0 = equal).
+    pub jain_raw: f64,
+    /// Jain's index over served work / weight (1.0 = weight-fair).
+    pub jain_weighted: f64,
+    /// Wall time of the whole serve.
+    pub elapsed_s: f64,
+    /// Final serving-clock value.
+    pub clock_ns: u64,
+}
+
+/// Jain's fairness index `(Σx)² / (n·Σx²)`; 1.0 for empty/zero input.
+pub fn jain_index(xs: &[f64]) -> f64 {
+    let n = xs.len() as f64;
+    let (s, s2) = xs.iter().fold((0.0, 0.0), |(s, s2), x| (s + x, s2 + x * x));
+    if n == 0.0 || s2 == 0.0 {
+        1.0
+    } else {
+        s * s / (n * s2)
+    }
+}
+
+/// Nearest-rank percentile over a sorted slice (0 when empty).
+fn percentile_ns(sorted: &[u64], p: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let idx = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// Serve `p.jobs` open-loop Poisson arrivals through a fresh pool +
+/// fair front end and collect the per-tenant report. Tenants are drawn
+/// uniformly per arrival; classes cycle Interactive/Batch/Background
+/// via the seeded RNG, so the mix is identical for identical seeds.
+pub fn run_serving(p: &ServeParams) -> ServeReport {
+    assert!(!p.tenants.is_empty(), "run_serving: no tenants");
+    let rt = Arc::new(Runtime::with_pinning(p.workers.max(1), false));
+    let fair = if p.virtual_clock {
+        Arc::new(FairShare::new_virtual(rt, &p.tenants).with_inflight(p.inflight))
+    } else {
+        Arc::new(FairShare::new(rt, &p.tenants).with_inflight(p.inflight))
+    };
+    let mut rng = Rng::new(p.seed);
+    let body: Arc<dyn Fn(Range<usize>) + Send + Sync> = Arc::new(|r: Range<usize>| {
+        std::hint::black_box(r.len());
+    });
+    let t0 = std::time::Instant::now();
+    let mut at_s = 0.0f64;
+    for _ in 0..p.jobs {
+        at_s += rng.exponential(1.0 / p.arrival_rate);
+        let tenant = rng.below(p.tenants.len());
+        let class = LatencyClass::from_rank(rng.below(3) as u8);
+        let at_ns = (at_s * 1e9) as u64;
+        if p.virtual_clock {
+            fair.set_virtual_now(at_ns);
+        } else {
+            // Open-loop pacing: wait out the inter-arrival gap (the
+            // next arrival never waits for service to finish).
+            let gap = at_ns.saturating_sub(t0.elapsed().as_nanos() as u64);
+            if gap > 0 {
+                std::thread::sleep(std::time::Duration::from_nanos(gap));
+            }
+        }
+        let job = FairJob::new(p.n, Arc::clone(&body))
+            .with_threads(p.threads)
+            .with_policy(Policy::Dynamic { chunk: 64 })
+            .with_class(class)
+            .with_cost_ns(p.cost_ns);
+        // Tickets are dropped, not joined: shed outcomes are already
+        // counted in the tenant stats, and `drain` below serves the
+        // backlog while this thread keeps submitting on schedule.
+        let _ = fair.submit(tenant, job);
+    }
+    fair.drain();
+    let elapsed_s = t0.elapsed().as_secs_f64();
+    let clock_ns = fair.now_ns();
+    let mut tenants = Vec::with_capacity(p.tenants.len());
+    for (i, spec) in p.tenants.iter().enumerate() {
+        let s = fair.tenant_stats(i);
+        let mut waits = fair.waits_ns(i);
+        waits.sort_unstable();
+        tenants.push(TenantReport {
+            name: spec.name.clone(),
+            weight: spec.weight,
+            submitted: s.submitted,
+            admitted: s.admitted,
+            queued: s.queued,
+            shed_throttled: s.shed_throttled,
+            shed_full: s.shed_full,
+            completed: s.completed,
+            work_ns: s.work_ns,
+            wait_p50_ns: percentile_ns(&waits, 50.0),
+            wait_p99_ns: percentile_ns(&waits, 99.0),
+        });
+    }
+    let raw: Vec<f64> = tenants.iter().map(|t| t.work_ns as f64).collect();
+    let weighted: Vec<f64> = tenants.iter().map(|t| t.work_ns as f64 / t.weight.max(1) as f64).collect();
+    ServeReport { tenants, jain_raw: jain_index(&raw), jain_weighted: jain_index(&weighted), elapsed_s, clock_ns }
+}
+
+/// Render the report as the `BENCH_serving.json` document. The
+/// `topology_override` flag records whether the process ran under an
+/// `ICH_TOPOLOGY` override.
+pub fn report_json(p: &ServeParams, r: &ServeReport) -> Json {
+    let mut out = Json::obj();
+    out.set("bench", Json::str("serving_sustained"));
+    out.set("topology_override", Json::Bool(std::env::var_os("ICH_TOPOLOGY").is_some()));
+    out.set("virtual_clock", Json::Bool(p.virtual_clock));
+    out.set("jobs", Json::num(p.jobs as f64));
+    out.set("arrival_rate_per_s", Json::num(p.arrival_rate));
+    out.set("n", Json::num(p.n as f64));
+    out.set("threads", Json::num(p.threads as f64));
+    out.set("pool_workers", Json::num(p.workers as f64));
+    out.set("inflight", Json::num(p.inflight as f64));
+    out.set("seed", Json::num(p.seed as f64));
+    out.set("cost_ns", Json::num(p.cost_ns as f64));
+    out.set("elapsed_s", Json::num(r.elapsed_s));
+    out.set("clock_ns", Json::num(r.clock_ns as f64));
+    out.set("jain_raw", Json::num(r.jain_raw));
+    out.set("jain_weighted", Json::num(r.jain_weighted));
+    let mut arr = Vec::with_capacity(r.tenants.len());
+    for t in &r.tenants {
+        let mut e = Json::obj();
+        e.set("tenant", Json::str(&t.name));
+        e.set("weight", Json::num(t.weight as f64));
+        e.set("submitted", Json::num(t.submitted as f64));
+        e.set("admitted", Json::num(t.admitted as f64));
+        e.set("queued", Json::num(t.queued as f64));
+        e.set("shed_throttled", Json::num(t.shed_throttled as f64));
+        e.set("shed_full", Json::num(t.shed_full as f64));
+        e.set("completed", Json::num(t.completed as f64));
+        e.set("work_ns", Json::num(t.work_ns as f64));
+        e.set("wait_p50_ns", Json::num(t.wait_p50_ns as f64));
+        e.set("wait_p99_ns", Json::num(t.wait_p99_ns as f64));
+        arr.push(e);
+    }
+    out.set("tenants", Json::arr(arr));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jain_index_basics() {
+        assert_eq!(jain_index(&[]), 1.0);
+        assert_eq!(jain_index(&[0.0, 0.0]), 1.0);
+        assert!((jain_index(&[5.0, 5.0, 5.0]) - 1.0).abs() < 1e-12);
+        // One tenant hogging everything: 1/n.
+        assert!((jain_index(&[9.0, 0.0, 0.0]) - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn params_parse_round_trip() {
+        let raw = [
+            "--tenants", "a:w=4:rate=100,b", "--jobs", "50", "--arrivals", "500", "--virtual", "--seed", "7",
+            "--inflight", "2", "--out", "x.json",
+        ];
+        let args = Args::parse(raw.iter().map(|s| s.to_string()), &["virtual"]);
+        let p = params_from_args(&args).unwrap();
+        assert_eq!(p.tenants.len(), 2);
+        assert_eq!(p.tenants[0].weight, 4);
+        assert_eq!(p.tenants[0].rate, 100.0);
+        assert_eq!(p.tenants[1].weight, 1);
+        assert_eq!((p.jobs, p.inflight, p.seed), (50, 2, 7));
+        assert!(p.virtual_clock);
+        assert_eq!(p.out, "x.json");
+
+        // Standalone --weight / --rate flags apply across the tenant
+        // list built by a bare `--tenants <count>`.
+        let raw = ["--tenants", "3", "--weight", "4,2,1", "--rate", "2500"];
+        let args = Args::parse(raw.iter().map(|s| s.to_string()), &["virtual"]);
+        let p = params_from_args(&args).unwrap();
+        assert_eq!(p.tenants.iter().map(|t| t.weight).collect::<Vec<_>>(), vec![4, 2, 1]);
+        assert!(p.tenants.iter().all(|t| t.rate == 2500.0));
+    }
+
+    #[test]
+    fn params_reject_bad_input() {
+        let bad = |raw: &[&str]| {
+            let args = Args::parse(raw.iter().map(|s| s.to_string()), &["virtual"]);
+            params_from_args(&args).is_err()
+        };
+        assert!(bad(&["--tenants", "0"]));
+        assert!(bad(&["--tenants", "a:nope=1"]));
+        assert!(bad(&["--tenants", "2", "--weight", "1,2,3"]));
+        assert!(bad(&["--arrivals", "0"]));
+    }
+
+    #[test]
+    fn virtual_serve_is_deterministic_and_fair() {
+        // Deep queues: the whole backlog fits (the submit loop stays
+        // ahead of the single drain driver), so nothing is shed and
+        // every admission outcome is pinned by the seed alone.
+        let mut a = TenantSpec::new("a");
+        let mut b = TenantSpec::new("b");
+        a.depth = 1024;
+        b.depth = 1024;
+        let p = ServeParams {
+            tenants: vec![a, b],
+            jobs: 120,
+            arrival_rate: 5_000.0,
+            n: 64,
+            workers: 1,
+            virtual_clock: true,
+            cost_ns: 1_000_000,
+            ..ServeParams::default()
+        };
+        let r1 = run_serving(&p);
+        let r2 = run_serving(&p);
+        let served: Vec<u64> = r1.tenants.iter().map(|t| t.completed).collect();
+        assert_eq!(served, r2.tenants.iter().map(|t| t.completed).collect::<Vec<_>>());
+        assert_eq!(r1.clock_ns, r2.clock_ns, "virtual serve must be replayable");
+        assert_eq!(served.iter().sum::<u64>(), 120, "unthrottled serve completes every job");
+        assert!(r1.jain_raw > 0.9, "equal-weight saturating serve must be fair, jain {}", r1.jain_raw);
+        let j = report_json(&p, &r1).to_string();
+        assert!(j.contains("\"topology_override\""));
+        assert!(j.contains("\"jain_raw\""));
+    }
+}

@@ -13,6 +13,12 @@
 //!   overlap  --threads <p> --jobs <k> --n <iters>: serve k independent
 //!            loops sequentially vs overlapped (async epochs) on the
 //!            persistent pool and report both wall times
+//!   serve    --tenants <k|spec,...> --rate <r> --weight <w0,w1,...>
+//!            [--virtual]: sustained multi-tenant serving through the
+//!            fair-share admission front end — open-loop Poisson
+//!            arrivals over mixed tenants/classes, per-tenant p50/p99
+//!            queue waits, shed counts, and Jain's fairness index,
+//!            recorded to BENCH_serving.json
 //!   analyze  whole-crate static concurrency-contract analyzer (tier-1
 //!            CI gate): lock-order cycles, blocking calls reachable
 //!            from claim loops, the structural claim-loop contract,
@@ -33,7 +39,7 @@ use ich::util::cli::Args;
 use ich::util::table::{f2, Table};
 
 fn main() {
-    let args = Args::from_env(&["real", "verbose"]);
+    let args = Args::from_env(&["real", "verbose", "virtual"]);
     // `--steal uniform|topo|ranked` sets the process-wide steal-victim
     // default (every `ForOpts::default()` in apps/harness picks it
     // up); `ICH_STEAL` is the env equivalent. `ranked` needs a
@@ -98,6 +104,7 @@ fn main() {
         "ablation" | "ablations" => println!("{}", harness::run_named("ablations").unwrap()),
         "sweep" => cmd_sweep(&args),
         "overlap" => cmd_overlap(&args),
+        "serve" => cmd_serve(&args),
         "analyze" => {
             // `--dir` points at an alternative crate root (a checkout-
             // relative path in CI); the default is this crate itself.
@@ -119,7 +126,7 @@ fn main() {
         "list" => cmd_list(),
         "version" => println!("ich 0.1.0 (paper: Booth & Lane 2020, iCh)"),
         _ => {
-            println!("usage: ich <run|figure|table|summary|ablation|sweep|overlap|analyze|lint-atomics|list|version> [flags]");
+            println!("usage: ich <run|figure|table|summary|ablation|sweep|overlap|serve|analyze|lint-atomics|list|version> [flags]");
             println!("  ich analyze  static concurrency-contract gate over src/sched, src/check,");
             println!("        src/coordinator: lock-order cycles, blocking in claim loops, the");
             println!("        claim-loop contract (preempt_point + note_assist + chunk accounting),");
@@ -131,6 +138,14 @@ fn main() {
             println!("        ich run --app spmv --sched ich --threads 4 --real --steal uniform");
             println!("        ich overlap --threads 2 --jobs 4 --n 2000000");
             println!("        ich overlap --threads 2 --jobs 8 --class background");
+            println!("        ich serve --tenants 3 --weight 4,2,1 --jobs 300 --arrivals 3000");
+            println!("        ich serve --tenants 'gold:w=4:rate=500,bulk:depth=16' --virtual --seed 7");
+            println!("  ich serve flags: --tenants <count|name[:w=][:rate=][:burst=][:depth=],...>");
+            println!("        --rate/--burst/--depth (applied to every tenant), --weight w0,w1,...,");
+            println!("        --jobs, --arrivals (Poisson submissions/s), --n, --threads, --workers,");
+            println!("        --inflight (fair release window), --seed, --cost-ns, --out <path>,");
+            println!("        --virtual (deterministic virtual clock + declared costs: zero sleeps,");
+            println!("        identical output for identical seeds — the CI smoke mode)");
             println!("        ich figure fig4");
             println!("        ICH_TOPOLOGY='2x14@10,21;21,10' ich run --app spmv --sched ich --real --steal ranked");
             println!("  --steal uniform|topo|ranked  steal-victim policy (default: topo; env ICH_STEAL);");
@@ -297,6 +312,59 @@ fn cmd_overlap(args: &Args) {
         LatencyClass::process_default().name(),
         sequential_s / overlapped_s
     );
+}
+
+/// Sustained multi-tenant serving through the fair-share admission
+/// front end (`sched::fair`): open-loop Poisson arrivals over mixed
+/// tenants and classes, per-tenant p50/p99 queue waits, shed counts,
+/// and Jain's fairness index, recorded to `BENCH_serving.json`.
+fn cmd_serve(args: &Args) {
+    let p = match harness::serving::params_from_args(args) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("serve: {e}");
+            std::process::exit(2);
+        }
+    };
+    let specs: Vec<String> = p.tenants.iter().map(|t| t.spec_string()).collect();
+    println!(
+        "serve: {} jobs at {}/s over {} tenants ({} clock, inflight {})",
+        p.jobs,
+        p.arrival_rate,
+        p.tenants.len(),
+        if p.virtual_clock { "virtual" } else { "real" },
+        p.inflight
+    );
+    for s in &specs {
+        println!("  tenant {s}");
+    }
+    let r = harness::serving::run_serving(&p);
+    let mut t = Table::new(["tenant", "w", "submitted", "completed", "queued", "shed", "wait p50", "wait p99"]);
+    for tr in &r.tenants {
+        t.row([
+            tr.name.clone(),
+            tr.weight.to_string(),
+            tr.submitted.to_string(),
+            tr.completed.to_string(),
+            tr.queued.to_string(),
+            format!("{}+{}", tr.shed_throttled, tr.shed_full),
+            format!("{:.3}ms", tr.wait_p50_ns as f64 / 1e6),
+            format!("{:.3}ms", tr.wait_p99_ns as f64 / 1e6),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "jain raw={:.4} weighted={:.4} elapsed={:.3}s clock={:.3}s",
+        r.jain_raw,
+        r.jain_weighted,
+        r.elapsed_s,
+        r.clock_ns as f64 / 1e9
+    );
+    let json = harness::serving::report_json(&p, &r);
+    match json.save(&p.out) {
+        Ok(()) => println!("wrote {}", p.out),
+        Err(e) => eprintln!("could not write {}: {e}", p.out),
+    }
 }
 
 fn cmd_list() {

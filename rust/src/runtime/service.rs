@@ -3,8 +3,19 @@
 //! talk to it through a cloneable, `Send` handle. This is the same
 //! shape a production serving stack uses — a device-owning executor
 //! fed by a pool of request-handling threads.
+//!
+//! Handles carry an optional **tenant id** ([`KernelHandle::for_tenant`])
+//! so requests arriving from the fair-share front end (`sched::fair`)
+//! stay attributed end-to-end: the executor counts served requests
+//! per tenant ([`KernelService::served`]), mirroring the per-tenant
+//! accounting the scheduler keeps in `FairTenantStats`. The `try_*`
+//! variants surface executor backpressure (a full request channel) as
+//! an explicit error instead of blocking, so admission-control callers
+//! can shed instead of stalling a pool worker.
 
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::collections::BTreeMap;
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
 
 use crate::util::error::{anyhow, Result};
 
@@ -12,22 +23,62 @@ use super::kernels::Kernels;
 use crate::sparse::CsrMatrix;
 
 enum Req {
-    Spmv { values: Vec<f32>, cols: Vec<i32>, rows: usize, x: Vec<f32>, reply: SyncSender<Result<Vec<f32>>> },
-    Kmeans { points: Vec<f32>, d: usize, centroids: Vec<f32>, k: usize, reply: SyncSender<Result<Vec<u32>>> },
-    Lavamd { home: Vec<[f32; 4]>, neigh: Vec<[f32; 4]>, reply: SyncSender<Result<Vec<f32>>> },
+    Spmv {
+        values: Vec<f32>,
+        cols: Vec<i32>,
+        rows: usize,
+        x: Vec<f32>,
+        tenant: Option<u32>,
+        reply: SyncSender<Result<Vec<f32>>>,
+    },
+    Kmeans {
+        points: Vec<f32>,
+        d: usize,
+        centroids: Vec<f32>,
+        k: usize,
+        tenant: Option<u32>,
+        reply: SyncSender<Result<Vec<u32>>>,
+    },
+    Lavamd { home: Vec<[f32; 4]>, neigh: Vec<[f32; 4]>, tenant: Option<u32>, reply: SyncSender<Result<Vec<f32>>> },
     Shutdown,
 }
 
-/// Cloneable, Send handle to the executor thread.
+/// Per-tenant served-request counters, updated by the executor thread
+/// as it processes requests. Untenanted requests count under `None`.
+#[derive(Default)]
+pub struct ServiceStats {
+    served: Mutex<BTreeMap<Option<u32>, u64>>,
+}
+
+impl ServiceStats {
+    fn bump(&self, tenant: Option<u32>) {
+        *self.served.lock().unwrap().entry(tenant).or_insert(0) += 1;
+    }
+
+    /// Requests served for `tenant` (`None` = untenanted traffic).
+    pub fn served(&self, tenant: Option<u32>) -> u64 {
+        self.served.lock().unwrap().get(&tenant).copied().unwrap_or(0)
+    }
+
+    pub fn served_total(&self) -> u64 {
+        self.served.lock().unwrap().values().sum()
+    }
+}
+
+/// Cloneable, Send handle to the executor thread. Clones share the
+/// request channel and stats; `for_tenant` tags a clone's requests.
 #[derive(Clone)]
 pub struct KernelHandle {
     tx: SyncSender<Req>,
+    tenant: Option<u32>,
+    stats: Arc<ServiceStats>,
 }
 
 /// The executor thread + its handle; dropping `KernelService` shuts
 /// the thread down.
 pub struct KernelService {
     handle: KernelHandle,
+    stats: Arc<ServiceStats>,
     join: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -42,12 +93,20 @@ impl KernelService {
             return None;
         }
         let (tx, rx) = sync_channel::<Req>(64);
-        let join = std::thread::spawn(move || executor(rx));
-        Some(KernelService { handle: KernelHandle { tx }, join: Some(join) })
+        let stats = Arc::new(ServiceStats::default());
+        let estats = Arc::clone(&stats);
+        let join = std::thread::spawn(move || executor(rx, &estats));
+        let handle = KernelHandle { tx, tenant: None, stats: Arc::clone(&stats) };
+        Some(KernelService { handle, stats, join: Some(join) })
     }
 
     pub fn handle(&self) -> KernelHandle {
         self.handle.clone()
+    }
+
+    /// Executor-side served count for `tenant` (`None` = untenanted).
+    pub fn served(&self, tenant: Option<u32>) -> u64 {
+        self.stats.served(tenant)
     }
 }
 
@@ -60,18 +119,21 @@ impl Drop for KernelService {
     }
 }
 
-fn executor(rx: Receiver<Req>) {
+fn executor(rx: Receiver<Req>, stats: &ServiceStats) {
     let Some(mut kernels) = Kernels::open_default() else { return };
     while let Ok(req) = rx.recv() {
         match req {
-            Req::Spmv { values, cols, rows, x, reply } => {
+            Req::Spmv { values, cols, rows, x, tenant, reply } => {
+                stats.bump(tenant);
                 let _ = reply.send(run_spmv(&mut kernels, &values, &cols, rows, &x));
             }
-            Req::Kmeans { points, d, centroids, k, reply } => {
+            Req::Kmeans { points, d, centroids, k, tenant, reply } => {
+                stats.bump(tenant);
                 let r = kernels.kmeans_assign(&points, d, &centroids, k, 0..points.len() / d);
                 let _ = reply.send(r);
             }
-            Req::Lavamd { home, neigh, reply } => {
+            Req::Lavamd { home, neigh, tenant, reply } => {
+                stats.bump(tenant);
                 let _ = reply.send(kernels.lavamd_force(&home, &neigh));
             }
             Req::Shutdown => return,
@@ -95,9 +157,44 @@ fn run_spmv(kernels: &mut Kernels, values: &[f32], cols: &[i32], rows: usize, x:
     kernels.spmv_rows(&a, x, 0..rows)
 }
 
+/// Ship one request and await its reply; `block` = false uses
+/// `try_send` and reports a full executor channel as backpressure.
+fn dispatch<T>(tx: &SyncSender<Req>, req: Req, rx: Receiver<Result<T>>, block: bool) -> Result<T> {
+    if block {
+        tx.send(req).map_err(|_| anyhow!("kernel service down"))?;
+    } else {
+        tx.try_send(req).map_err(|e| match e {
+            TrySendError::Full(_) => anyhow!("kernel service saturated (backpressure)"),
+            TrySendError::Disconnected(_) => anyhow!("kernel service down"),
+        })?;
+    }
+    rx.recv().map_err(|_| anyhow!("kernel service died"))?
+}
+
 impl KernelHandle {
-    /// SpMV of a row range, shipped as packed ELL rows.
-    pub fn spmv_rows(&self, a: &CsrMatrix, x: &[f32], rows: std::ops::Range<usize>) -> Result<Vec<f32>> {
+    /// Tag this handle's requests with a fair-share tenant id; the
+    /// executor attributes served counts to it.
+    pub fn for_tenant(mut self, tenant: u32) -> KernelHandle {
+        self.tenant = Some(tenant);
+        self
+    }
+
+    pub fn tenant(&self) -> Option<u32> {
+        self.tenant
+    }
+
+    /// Shared executor-side stats (same across all clones).
+    pub fn stats(&self) -> Arc<ServiceStats> {
+        Arc::clone(&self.stats)
+    }
+
+    fn spmv_req(
+        &self,
+        a: &CsrMatrix,
+        x: &[f32],
+        rows: std::ops::Range<usize>,
+        reply: SyncSender<Result<Vec<f32>>>,
+    ) -> Req {
         let nrows = rows.len();
         let width = rows.clone().map(|r| a.row_nnz(r)).max().unwrap_or(1).max(1);
         let mut values = vec![0.0f32; nrows * width];
@@ -108,29 +205,38 @@ impl KernelHandle {
                 cols[ti * width + k] = c as i32;
             }
         }
+        Req::Spmv { values, cols, rows: nrows, x: x.to_vec(), tenant: self.tenant, reply }
+    }
+
+    /// SpMV of a row range, shipped as packed ELL rows.
+    pub fn spmv_rows(&self, a: &CsrMatrix, x: &[f32], rows: std::ops::Range<usize>) -> Result<Vec<f32>> {
         let (reply, rx) = sync_channel(1);
-        self.tx
-            .send(Req::Spmv { values, cols, rows: nrows, x: x.to_vec(), reply })
-            .map_err(|_| anyhow!("kernel service down"))?;
-        rx.recv().map_err(|_| anyhow!("kernel service died"))?
+        let req = self.spmv_req(a, x, rows, reply);
+        dispatch(&self.tx, req, rx, true)
+    }
+
+    /// Non-blocking admission: sheds with an explicit error when the
+    /// executor's request channel is full instead of stalling the
+    /// calling pool worker.
+    pub fn try_spmv_rows(&self, a: &CsrMatrix, x: &[f32], rows: std::ops::Range<usize>) -> Result<Vec<f32>> {
+        let (reply, rx) = sync_channel(1);
+        let req = self.spmv_req(a, x, rows, reply);
+        dispatch(&self.tx, req, rx, false)
     }
 
     /// K-Means assignment for a slice of points (flattened n×d).
     pub fn kmeans_assign(&self, points: &[f32], d: usize, centroids: &[f32], k: usize) -> Result<Vec<u32>> {
         let (reply, rx) = sync_channel(1);
-        self.tx
-            .send(Req::Kmeans { points: points.to_vec(), d, centroids: centroids.to_vec(), k, reply })
-            .map_err(|_| anyhow!("kernel service down"))?;
-        rx.recv().map_err(|_| anyhow!("kernel service died"))?
+        let req =
+            Req::Kmeans { points: points.to_vec(), d, centroids: centroids.to_vec(), k, tenant: self.tenant, reply };
+        dispatch(&self.tx, req, rx, true)
     }
 
     /// LavaMD force for one box.
     pub fn lavamd_force(&self, home: &[[f32; 4]], neigh: &[[f32; 4]]) -> Result<Vec<f32>> {
         let (reply, rx) = sync_channel(1);
-        self.tx
-            .send(Req::Lavamd { home: home.to_vec(), neigh: neigh.to_vec(), reply })
-            .map_err(|_| anyhow!("kernel service down"))?;
-        rx.recv().map_err(|_| anyhow!("kernel service died"))?
+        let req = Req::Lavamd { home: home.to_vec(), neigh: neigh.to_vec(), tenant: self.tenant, reply };
+        dispatch(&self.tx, req, rx, true)
     }
 }
 
@@ -138,6 +244,28 @@ impl KernelHandle {
 mod tests {
     use super::*;
     use crate::sparse::gen;
+
+    #[test]
+    fn stats_attribute_by_tenant() {
+        let s = ServiceStats::default();
+        s.bump(Some(3));
+        s.bump(Some(3));
+        s.bump(None);
+        assert_eq!(s.served(Some(3)), 2);
+        assert_eq!(s.served(None), 1);
+        assert_eq!(s.served(Some(7)), 0);
+        assert_eq!(s.served_total(), 3);
+    }
+
+    #[test]
+    fn handle_tenant_tagging_survives_clones() {
+        let (tx, _rx) = sync_channel::<Req>(1);
+        let h = KernelHandle { tx, tenant: None, stats: Arc::new(ServiceStats::default()) };
+        assert_eq!(h.tenant(), None);
+        let t4 = h.clone().for_tenant(4);
+        assert_eq!(t4.tenant(), Some(4));
+        assert_eq!(h.tenant(), None, "tagging a clone must not retag the original");
+    }
 
     #[test]
     fn service_roundtrip_from_worker_threads() {
@@ -153,7 +281,7 @@ mod tests {
         let h = svc.handle();
         std::thread::scope(|s| {
             for t in 0..2 {
-                let h = h.clone();
+                let h = h.clone().for_tenant(t as u32);
                 let (a, x, want) = (&a, &x, &want);
                 s.spawn(move || {
                     let lo = t * 256;
@@ -165,6 +293,9 @@ mod tests {
                 });
             }
         });
+        assert_eq!(svc.served(Some(0)), 1);
+        assert_eq!(svc.served(Some(1)), 1);
+        assert_eq!(svc.served(None), 0);
     }
 
     #[test]
@@ -173,10 +304,11 @@ mod tests {
             eprintln!("skipping: artifacts not built");
             return;
         };
-        let h = svc.handle();
+        let h = svc.handle().for_tenant(9);
         let points = vec![0.0f32, 0.0, 9.0, 9.0, 0.1, 0.1]; // 3 points, d=2
         let cents = vec![0.0f32, 0.0, 10.0, 10.0];
         let a = h.kmeans_assign(&points, 2, &cents, 2).unwrap();
         assert_eq!(a, vec![0, 1, 0]);
+        assert_eq!(svc.served(Some(9)), 1);
     }
 }

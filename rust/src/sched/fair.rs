@@ -1,0 +1,1059 @@
+//! Multi-tenant fair-share admission front end — the "millions of
+//! users" layer on top of the class/EDF dispatch queue.
+//!
+//! The pool's [`DispatchQueue`](super::DispatchQueue) orders epochs by
+//! *urgency* (class, deadline); it is deliberately blind to *who*
+//! submitted them, so one greedy client can monopolise the pool by
+//! submitting faster than everyone else. This module adds the missing
+//! production admission layer: per-tenant submission queues drained
+//! into the dispatch queue by a CFS-style virtual-runtime fair
+//! scheduler, with token-bucket admission control in front.
+//!
+//! # Fair pick (weighted virtual runtime)
+//!
+//! Each tenant accumulates *virtual runtime*: executed nanoseconds
+//! scaled by `WEIGHT_UNIT / weight`, so a weight-4 tenant's clock
+//! advances 4× slower per executed nanosecond than a weight-1
+//! tenant's. The scheduler always releases the head of the eligible
+//! tenant with the **minimum vruntime** (ties broken by tenant
+//! index). Invariants:
+//!
+//! - **Service proportionality.** With all tenants backlogged and
+//!   unthrottled, served work converges to the weight ratio (pinned
+//!   by `prop_fair_vruntime_ratio_tracks_weights`).
+//! - **New-tenant clamp.** A tenant activating after an idle spell
+//!   has its vruntime clamped up to the monotone floor `min_vrt`
+//!   (the smallest vruntime across active tenants, advanced at every
+//!   charge), so a late joiner gets at most one "free" pick instead
+//!   of replaying its entire idle history and starving incumbents.
+//! - **Charges are deferred.** vruntime is charged from the *actual*
+//!   chunk-execution time of the completed loop ([`RunMetrics`]), or
+//!   from the declared cost in deterministic mode — not from an
+//!   estimate at pick time. With a small release window this bounds
+//!   the fairness error to `inflight_cap` jobs.
+//!
+//! # Admission (token bucket + class-aware backpressure)
+//!
+//! Every tenant has a GCRA token bucket (`rate` tokens/s, `burst`
+//! cap). [`FairQueue::submit`] returns an explicit outcome:
+//!
+//! - `Ok(Admitted)` — a token was available; the entry is eligible
+//!   for fair pick immediately.
+//! - `Ok(Queued)` — throttled, but held in the tenant's bounded
+//!   queue; it becomes eligible when the bucket refills.
+//! - `Err(QueueFull)` — shed: the tenant's queue reached its
+//!   class-scaled depth cap. Caps shrink with class rank
+//!   (`depth >> rank`, min 1): as a tenant's backlog grows its
+//!   `Background` arrivals shed first, then `Batch`, and
+//!   `Interactive` last.
+//! - `Err(Throttled)` — shed: a throttled `Background` arrival is
+//!   never queued (it has no latency claim and retrying is cheap),
+//!   so under token pressure Background sheds before Batch/
+//!   Interactive even queue.
+//!
+//! Within one tenant's queue, entries order by (class rank, arrival),
+//! so a tenant's own Interactive work overtakes its queued Background
+//! work — "queue Background before Batch before Interactive".
+//!
+//! # Determinism
+//!
+//! All bucket and vruntime arithmetic is integer (GCRA theoretical
+//! arrival times, `u128` vruntime) and therefore *step-invariant*:
+//! outcomes depend only on the (clock, operation) sequence, never on
+//! how often state was refreshed in between. `sim::sim_fair_order`
+//! reimplements the same rules independently and must be kept in
+//! lockstep — the three-way runtime-vs-model-vs-sim differential in
+//! `tests/fairness_conformance.rs` pins both sides.
+//!
+//! [`FairShare`] wraps the queue around a pool [`Runtime`]: released
+//! jobs are submitted via `parallel_for_async_on` (so they ride the
+//! class/EDF dispatch queue with their tenant id attached), at most
+//! `inflight_cap` at a time, and completions charge vruntime and pump
+//! the next release. A virtual-clock mode (deterministic, zero-sleep)
+//! backs the conformance tests and the CI serving smoke arm.
+
+use std::collections::HashSet;
+use std::ops::Range;
+use std::sync::atomic::Ordering::{AcqRel, Acquire, Release};
+use std::sync::atomic::{AtomicBool, AtomicU64};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use super::runtime::Runtime;
+use super::{parallel_for_async_on, ExecMode, ForOpts, LatencyClass, Policy, RunMetrics};
+
+/// Fixed-point scale of one weight unit: a weight-`w` tenant's
+/// vruntime advances by `cost_ns * WEIGHT_UNIT / w` per charge.
+pub const WEIGHT_UNIT: u64 = 1024;
+
+// ---------------------------------------------------------------------------
+// Token bucket (GCRA)
+// ---------------------------------------------------------------------------
+
+/// Integer token bucket in GCRA (theoretical-arrival-time) form.
+///
+/// State is a single `tat_ns` timestamp instead of a fractional token
+/// level, which makes every query *step-invariant*: `available(now)`
+/// is a pure function of `(state, now)`, unaffected by how many times
+/// the bucket was observed in between. That property is what lets the
+/// simulator mirror admission decisions bit-for-bit.
+///
+/// A non-positive / non-finite `rate`, or a rate of ≥ 1 token/ns, is
+/// treated as *unthrottled* (`period_ns == 0`): takes always succeed.
+#[derive(Clone, Debug)]
+pub struct TokenBucket {
+    /// ns per token (`round(1e9 / rate)`, min 1); 0 = unthrottled.
+    period_ns: u64,
+    /// Burst tolerance: `(burst - 1) * period_ns`.
+    tau_ns: u64,
+    /// Theoretical arrival time of the next conforming take.
+    tat_ns: u64,
+}
+
+impl TokenBucket {
+    pub fn new(rate_per_s: f64, burst: f64) -> TokenBucket {
+        let period_ns = if !rate_per_s.is_finite() || rate_per_s <= 0.0 || rate_per_s >= 1e9 {
+            0
+        } else {
+            (1e9 / rate_per_s).round().max(1.0) as u64
+        };
+        let burst_tokens = if burst.is_finite() && burst >= 1.0 { burst.round() as u64 } else { 1 };
+        TokenBucket { period_ns, tau_ns: (burst_tokens - 1).saturating_mul(period_ns), tat_ns: 0 }
+    }
+
+    /// Bucket capacity in whole tokens (`u64::MAX` when unthrottled).
+    pub fn burst_tokens(&self) -> u64 {
+        if self.period_ns == 0 {
+            u64::MAX
+        } else {
+            self.tau_ns / self.period_ns + 1
+        }
+    }
+
+    /// Whole tokens available at `now_ns`. Non-decreasing in `now_ns`
+    /// between takes and saturating at [`TokenBucket::burst_tokens`].
+    pub fn available(&self, now_ns: u64) -> u64 {
+        if self.period_ns == 0 {
+            return u64::MAX;
+        }
+        let horizon = now_ns.saturating_add(self.tau_ns);
+        if horizon < self.tat_ns {
+            0
+        } else {
+            ((horizon - self.tat_ns) / self.period_ns + 1).min(self.burst_tokens())
+        }
+    }
+
+    /// Take one token at `now_ns` if conforming.
+    pub fn try_take(&mut self, now_ns: u64) -> bool {
+        if self.period_ns == 0 {
+            return true;
+        }
+        if now_ns.saturating_add(self.tau_ns) < self.tat_ns {
+            return false;
+        }
+        self.tat_ns = now_ns.max(self.tat_ns).saturating_add(self.period_ns);
+        true
+    }
+
+    /// ns from `now_ns` until one token is available (0 if already).
+    pub fn eta_ns(&self, now_ns: u64) -> u64 {
+        if self.available(now_ns) >= 1 {
+            0
+        } else {
+            // Unavailable ⇒ now + tau < tat, so this never underflows
+            // and is ≥ 1; at `now + eta` exactly one token conforms.
+            (self.tat_ns - self.tau_ns) - now_ns
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tenant specs
+// ---------------------------------------------------------------------------
+
+/// Static per-tenant configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TenantSpec {
+    /// Display / correlation name.
+    pub name: String,
+    /// CFS weight (≥ 1): share of the pool under contention.
+    pub weight: u64,
+    /// Token-bucket refill rate, submissions/s (≤ 0 = unthrottled).
+    pub rate: f64,
+    /// Token-bucket burst capacity, whole submissions (≥ 1).
+    pub burst: f64,
+    /// Queue-depth cap for `Interactive` arrivals; `Batch` caps at
+    /// `depth/2` and `Background` at `depth/4` (min 1 each).
+    pub depth: usize,
+}
+
+impl TenantSpec {
+    pub fn new(name: &str) -> TenantSpec {
+        TenantSpec { name: name.to_string(), weight: 1, rate: 0.0, burst: 8.0, depth: 64 }
+    }
+
+    /// Parse `name[:w=<weight>][:rate=<r>][:burst=<b>][:depth=<d>]`.
+    pub fn parse(s: &str) -> Result<TenantSpec, String> {
+        let mut parts = s.split(':');
+        let name = parts.next().unwrap_or("").trim();
+        if name.is_empty() {
+            return Err(format!("tenant spec '{s}': empty name"));
+        }
+        let mut spec = TenantSpec::new(name);
+        for p in parts {
+            let (k, v) = p.split_once('=').ok_or_else(|| format!("tenant spec '{s}': '{p}' is not key=value"))?;
+            match k {
+                "w" => spec.weight = v.parse::<u64>().map_err(|e| format!("tenant '{name}': w: {e}"))?.max(1),
+                "rate" => spec.rate = v.parse().map_err(|e| format!("tenant '{name}': rate: {e}"))?,
+                "burst" => spec.burst = v.parse().map_err(|e| format!("tenant '{name}': burst: {e}"))?,
+                "depth" => spec.depth = v.parse().map_err(|e| format!("tenant '{name}': depth: {e}"))?,
+                _ => return Err(format!("tenant spec '{s}': unknown key '{k}'")),
+            }
+        }
+        Ok(spec)
+    }
+
+    /// Comma-separated [`TenantSpec::parse`] list.
+    pub fn parse_list(s: &str) -> Result<Vec<TenantSpec>, String> {
+        s.split(',').filter(|p| !p.trim().is_empty()).map(TenantSpec::parse).collect()
+    }
+
+    /// Canonical spec string; `parse(spec_string())` round-trips.
+    pub fn spec_string(&self) -> String {
+        format!("{}:w={}:rate={}:burst={}:depth={}", self.name, self.weight, self.rate, self.burst, self.depth)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// FairQueue — the deterministic model
+// ---------------------------------------------------------------------------
+
+/// Outcome of an accepted submission.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admission {
+    /// A token was available; eligible for fair pick immediately.
+    Admitted,
+    /// Throttled: held in the tenant queue until the bucket refills.
+    Queued,
+}
+
+/// Why a submission was shed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RejectReason {
+    /// Throttled `Background` arrival (never queued under pressure).
+    Throttled,
+    /// The tenant's class-scaled queue-depth cap was reached.
+    QueueFull,
+}
+
+impl RejectReason {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RejectReason::Throttled => "throttled",
+            RejectReason::QueueFull => "queue-full",
+        }
+    }
+}
+
+/// Cumulative per-tenant admission counters.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FairTenantStats {
+    pub submitted: u64,
+    pub admitted: u64,
+    pub queued: u64,
+    pub shed_throttled: u64,
+    pub shed_full: u64,
+    pub completed: u64,
+    /// Total charged execution time.
+    pub work_ns: u64,
+}
+
+impl FairTenantStats {
+    pub fn shed(&self) -> u64 {
+        self.shed_throttled + self.shed_full
+    }
+}
+
+/// One released entry ([`FairQueue::pop`]).
+#[derive(Debug)]
+pub struct Released<T> {
+    pub item: T,
+    pub tenant: usize,
+    pub class: LatencyClass,
+    pub deadline: Option<u64>,
+    /// Submission → release on the queue's clock.
+    pub wait_ns: u64,
+}
+
+struct Entry<T> {
+    item: T,
+    class: LatencyClass,
+    deadline: Option<u64>,
+    seq: u64,
+    /// Token taken at submit; unpaid entries pay at pick.
+    prepaid: bool,
+    submit_ns: u64,
+}
+
+struct TenantState<T> {
+    spec: TenantSpec,
+    bucket: TokenBucket,
+    /// Ordered by (class rank, seq): the tenant's own Interactive
+    /// work overtakes its queued Background work.
+    queue: Vec<Entry<T>>,
+    vruntime: u128,
+    stats: FairTenantStats,
+}
+
+/// Deterministic multi-tenant fair scheduler: token-bucket admission
+/// in front of per-tenant queues drained by min-vruntime pick. Plain
+/// data structure (external locking), so tests can drive it directly
+/// as the model leg of the conformance differential.
+pub struct FairQueue<T> {
+    tenants: Vec<TenantState<T>>,
+    /// Monotone vruntime floor for new activations (see module docs).
+    min_vrt: u128,
+    next_seq: u64,
+}
+
+impl<T> FairQueue<T> {
+    pub fn new(specs: &[TenantSpec]) -> FairQueue<T> {
+        FairQueue {
+            tenants: specs
+                .iter()
+                .map(|s| TenantState {
+                    bucket: TokenBucket::new(s.rate, s.burst),
+                    spec: s.clone(),
+                    queue: Vec::new(),
+                    vruntime: 0,
+                    stats: FairTenantStats::default(),
+                })
+                .collect(),
+            min_vrt: 0,
+            next_seq: 0,
+        }
+    }
+
+    pub fn tenant_count(&self) -> usize {
+        self.tenants.len()
+    }
+
+    pub fn spec(&self, tenant: usize) -> &TenantSpec {
+        &self.tenants[tenant].spec
+    }
+
+    pub fn stats(&self, tenant: usize) -> FairTenantStats {
+        self.tenants[tenant].stats
+    }
+
+    pub fn vruntime(&self, tenant: usize) -> u128 {
+        self.tenants[tenant].vruntime
+    }
+
+    pub fn queue_len(&self, tenant: usize) -> usize {
+        self.tenants[tenant].queue.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.tenants.iter().map(|t| t.queue.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Class-scaled depth cap: `depth >> rank`, min 1.
+    fn depth_cap(depth: usize, class: LatencyClass) -> usize {
+        (depth >> class.rank()).max(1)
+    }
+
+    /// Admit, queue, or shed one submission at clock `now_ns`.
+    pub fn submit(
+        &mut self,
+        tenant: usize,
+        item: T,
+        class: LatencyClass,
+        deadline: Option<u64>,
+        now_ns: u64,
+    ) -> Result<Admission, RejectReason> {
+        let floor = self.min_vrt;
+        let st = &mut self.tenants[tenant];
+        st.stats.submitted += 1;
+        if st.queue.len() >= Self::depth_cap(st.spec.depth, class) {
+            st.stats.shed_full += 1;
+            return Err(RejectReason::QueueFull);
+        }
+        let prepaid = st.bucket.try_take(now_ns);
+        if !prepaid && class == LatencyClass::Background {
+            st.stats.shed_throttled += 1;
+            return Err(RejectReason::Throttled);
+        }
+        if st.queue.is_empty() {
+            // New-tenant clamp: activations join at the floor instead
+            // of replaying idle history against incumbents.
+            st.vruntime = st.vruntime.max(floor);
+        }
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        let rank = class.rank();
+        let pos = st.queue.iter().position(|e| e.class.rank() > rank).unwrap_or(st.queue.len());
+        st.queue.insert(pos, Entry { item, class, deadline, seq, prepaid, submit_ns: now_ns });
+        if prepaid {
+            st.stats.admitted += 1;
+            Ok(Admission::Admitted)
+        } else {
+            st.stats.queued += 1;
+            Ok(Admission::Queued)
+        }
+    }
+
+    /// Release the head of the eligible tenant with minimum vruntime
+    /// (ties → lower tenant index). A tenant is eligible when its
+    /// head entry is prepaid or its bucket can pay for it at `now_ns`.
+    pub fn pop(&mut self, now_ns: u64) -> Option<Released<T>> {
+        let mut best: Option<(usize, u128)> = None;
+        for (i, st) in self.tenants.iter().enumerate() {
+            let Some(head) = st.queue.first() else { continue };
+            if !head.prepaid && st.bucket.available(now_ns) < 1 {
+                continue;
+            }
+            if best.is_none_or(|(_, v)| st.vruntime < v) {
+                best = Some((i, st.vruntime));
+            }
+        }
+        let (t, _) = best?;
+        let st = &mut self.tenants[t];
+        let e = st.queue.remove(0);
+        if !e.prepaid {
+            let paid = st.bucket.try_take(now_ns);
+            debug_assert!(paid, "eligible unpaid head must be payable");
+        }
+        Some(Released {
+            item: e.item,
+            tenant: t,
+            class: e.class,
+            deadline: e.deadline,
+            wait_ns: now_ns.saturating_sub(e.submit_ns),
+        })
+    }
+
+    /// Charge `cost_ns` of executed time to `tenant` and advance the
+    /// monotone activation floor.
+    pub fn charge(&mut self, tenant: usize, cost_ns: u64) {
+        let st = &mut self.tenants[tenant];
+        st.vruntime = st.vruntime.saturating_add(cost_ns as u128 * WEIGHT_UNIT as u128 / st.spec.weight.max(1) as u128);
+        st.stats.completed += 1;
+        st.stats.work_ns = st.stats.work_ns.saturating_add(cost_ns);
+        let vrt = self.tenants[tenant].vruntime;
+        let active_min = self.tenants.iter().filter(|t| !t.queue.is_empty()).map(|t| t.vruntime).min().unwrap_or(vrt);
+        self.min_vrt = self.min_vrt.max(active_min);
+    }
+
+    /// ns until some queued head could become payable (`None` when no
+    /// entries are queued; 0 when one is already eligible). Always
+    /// finite for non-empty queues: unthrottled buckets report 0.
+    pub fn next_eligible_ns(&self, now_ns: u64) -> Option<u64> {
+        self.tenants
+            .iter()
+            .filter_map(|st| {
+                let head = st.queue.first()?;
+                Some(if head.prepaid { 0 } else { st.bucket.eta_ns(now_ns) })
+            })
+            .min()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// FairShare — the runtime front end
+// ---------------------------------------------------------------------------
+
+/// How completed jobs charge their tenant's vruntime.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChargeMode {
+    /// Actual execution time from [`RunMetrics`]
+    /// (`elapsed − queue wait`, min 1 ns).
+    Measured,
+    /// The job's declared [`FairJob::cost_ns`] — deterministic; used
+    /// with the virtual clock.
+    Declared,
+}
+
+/// One loop to serve through the fair front end.
+pub struct FairJob {
+    pub n: usize,
+    pub threads: usize,
+    pub policy: Policy,
+    pub weights: Option<Vec<f64>>,
+    pub seed: u64,
+    pub class: LatencyClass,
+    pub deadline: Option<u64>,
+    /// Declared cost for [`ChargeMode::Declared`] and the virtual
+    /// clock's serial-service model.
+    pub cost_ns: u64,
+    pub body: Arc<dyn Fn(Range<usize>) + Send + Sync>,
+}
+
+impl FairJob {
+    pub fn new(n: usize, body: Arc<dyn Fn(Range<usize>) + Send + Sync>) -> FairJob {
+        FairJob {
+            n,
+            threads: 1,
+            policy: Policy::Static,
+            weights: None,
+            seed: 0x1C4,
+            class: LatencyClass::process_default(),
+            deadline: None,
+            cost_ns: 1_000,
+            body,
+        }
+    }
+
+    pub fn with_threads(mut self, threads: usize) -> FairJob {
+        self.threads = threads;
+        self
+    }
+
+    pub fn with_policy(mut self, policy: Policy) -> FairJob {
+        self.policy = policy;
+        self
+    }
+
+    pub fn with_class(mut self, class: LatencyClass) -> FairJob {
+        self.class = class;
+        self
+    }
+
+    pub fn with_deadline(mut self, deadline: u64) -> FairJob {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    pub fn with_cost_ns(mut self, cost_ns: u64) -> FairJob {
+        self.cost_ns = cost_ns.max(1);
+        self
+    }
+}
+
+struct Pending {
+    id: u64,
+    job: FairJob,
+    shared: Arc<TicketShared>,
+}
+
+struct Inflight {
+    id: u64,
+    tenant: usize,
+    cost_ns: u64,
+    join: Option<super::LoopJoin>,
+}
+
+struct TicketShared {
+    /// Set (Release) when the job leaves the fair queue for the pool;
+    /// lock-free progress peek for submitters.
+    released: AtomicBool,
+}
+
+struct FairInner {
+    q: FairQueue<Pending>,
+    inflight: Vec<Inflight>,
+    inflight_cap: usize,
+    next_id: u64,
+    /// Bumped on every completed drive step; waiters sleep on it.
+    gen: u64,
+    results: std::collections::BTreeMap<u64, RunMetrics>,
+    /// Tickets dropped before completion: their results are discarded.
+    detached: HashSet<u64>,
+    /// Per-tenant submission → release waits (queue-clock ns).
+    waits_ns: Vec<Vec<u64>>,
+}
+
+/// A pool [`Runtime`] behind per-tenant fair-share admission.
+///
+/// `submit` returns a [`FairTicket`] (or an explicit rejection);
+/// joining a ticket *helps drive* the front end — it joins released
+/// loops, charges their tenants, and pumps further releases — so any
+/// join order is deadlock-free without a background pump thread.
+pub struct FairShare {
+    rt: Arc<Runtime>,
+    inner: Mutex<FairInner>,
+    progress: Condvar,
+    /// Virtual serving clock (ns); unused in real-clock mode.
+    vnow: AtomicU64,
+    /// `None` = virtual clock (deterministic); `Some` = real clock.
+    real_anchor: Option<Instant>,
+    charge_mode: ChargeMode,
+}
+
+impl FairShare {
+    /// Real-clock front end charging measured execution time.
+    pub fn new(rt: Arc<Runtime>, tenants: &[TenantSpec]) -> FairShare {
+        FairShare::build(rt, tenants, Some(Instant::now()), ChargeMode::Measured)
+    }
+
+    /// Deterministic front end: virtual clock, declared costs. The
+    /// clock only moves via [`FairShare::set_virtual_now`], charges
+    /// (serial-service model: `+= cost_ns`), and token-refill skips
+    /// while draining — never via wall time, so runs are replayable
+    /// and sleep-free.
+    pub fn new_virtual(rt: Arc<Runtime>, tenants: &[TenantSpec]) -> FairShare {
+        FairShare::build(rt, tenants, None, ChargeMode::Declared)
+    }
+
+    fn build(
+        rt: Arc<Runtime>,
+        tenants: &[TenantSpec],
+        real_anchor: Option<Instant>,
+        charge_mode: ChargeMode,
+    ) -> FairShare {
+        FairShare {
+            rt,
+            inner: Mutex::new(FairInner {
+                q: FairQueue::new(tenants),
+                inflight: Vec::new(),
+                inflight_cap: 1,
+                next_id: 0,
+                gen: 0,
+                results: std::collections::BTreeMap::new(),
+                detached: HashSet::new(),
+                waits_ns: vec![Vec::new(); tenants.len()],
+            }),
+            progress: Condvar::new(),
+            vnow: AtomicU64::new(0),
+            real_anchor,
+            charge_mode,
+        }
+    }
+
+    /// Cap on jobs released into the pool at once (≥ 1; default 1).
+    /// Larger windows overlap more loops but defer fairness charges.
+    pub fn with_inflight(self, cap: usize) -> FairShare {
+        self.inner.lock().unwrap().inflight_cap = cap.max(1);
+        self
+    }
+
+    pub fn tenant_count(&self) -> usize {
+        self.inner.lock().unwrap().q.tenant_count()
+    }
+
+    pub fn is_virtual(&self) -> bool {
+        self.real_anchor.is_none()
+    }
+
+    /// Current queue clock (ns since start / virtual origin).
+    pub fn now_ns(&self) -> u64 {
+        match &self.real_anchor {
+            Some(t0) => t0.elapsed().as_nanos() as u64,
+            None => self.vnow.load(Acquire), // order: [fair.vclock] Acquire — pairs with the AcqRel advances
+        }
+    }
+
+    /// Advance the virtual clock to at least `ns` (monotone).
+    pub fn set_virtual_now(&self, ns: u64) {
+        debug_assert!(self.is_virtual());
+        self.vnow.fetch_max(ns, AcqRel); // order: [fair.vclock] AcqRel — monotone clock advance published to readers
+    }
+
+    /// Submit one job for `tenant`; explicit shed outcome on `Err`.
+    /// Every submission attempt — shed or not — pumps the release
+    /// window at its arrival clock, so queued entries whose buckets
+    /// refilled by now are released here (the model and sim mirror
+    /// this pump-per-arrival rule exactly).
+    pub fn submit(self: &Arc<Self>, tenant: usize, job: FairJob) -> Result<FairTicket, RejectReason> {
+        let now = self.now_ns();
+        let mut g = self.inner.lock().unwrap();
+        assert!(tenant < g.q.tenant_count(), "unknown tenant {tenant}");
+        let id = g.next_id;
+        g.next_id += 1;
+        let shared = Arc::new(TicketShared { released: AtomicBool::new(false) });
+        let class = job.class;
+        let deadline = job.deadline;
+        let res = g.q.submit(tenant, Pending { id, job, shared: Arc::clone(&shared) }, class, deadline, now);
+        self.pump(&mut g);
+        g.gen += 1;
+        self.progress.notify_all();
+        let admission = res?;
+        Ok(FairTicket { id, tenant, admission, shared, fair: Arc::clone(self), joined: false })
+    }
+
+    /// Release eligible picks into the pool up to the inflight cap.
+    /// Called with the state lock held; the nested pool-queue lock
+    /// (`Runtime::enqueue`) is strictly inner and never blocks.
+    fn pump(&self, g: &mut FairInner) {
+        let now = self.now_ns();
+        while g.inflight.len() < g.inflight_cap {
+            let Some(rel) = g.q.pop(now) else { break };
+            let p = rel.item;
+            g.waits_ns[rel.tenant].push(rel.wait_ns);
+            p.shared.released.store(true, Release); // order: [fair.ticket-release] Release — publishes the release to lock-free ticket peeks
+            let opts = ForOpts {
+                threads: p.job.threads.max(1),
+                seed: p.job.seed,
+                weights: p.job.weights.as_deref(),
+                mode: ExecMode::Pool,
+                class: rel.class,
+                deadline: rel.deadline,
+                tenant: Some(rel.tenant as u32),
+                ..Default::default()
+            };
+            let join = parallel_for_async_on(&self.rt, p.job.n, &p.job.policy, &opts, Arc::clone(&p.job.body));
+            g.inflight.push(Inflight { id: p.id, tenant: rel.tenant, cost_ns: p.job.cost_ns, join: Some(join) });
+        }
+    }
+
+    /// Charge and record one completed job, then pump.
+    fn complete(&self, g: &mut FairInner, fin: Inflight, metrics: RunMetrics) {
+        let cost = match self.charge_mode {
+            ChargeMode::Declared => fin.cost_ns,
+            ChargeMode::Measured => ((metrics.elapsed_s - metrics.queue_wait_s).max(0.0) * 1e9) as u64,
+        }
+        .max(1);
+        g.q.charge(fin.tenant, cost);
+        if self.is_virtual() {
+            // Serial-service model: completing a job advances the
+            // virtual clock by its declared cost.
+            self.vnow.fetch_add(cost, AcqRel); // order: [fair.vclock] AcqRel — monotone clock advance published to readers
+        }
+        if !g.detached.remove(&fin.id) {
+            g.results.insert(fin.id, metrics);
+        }
+        self.pump(g);
+        g.gen += 1;
+    }
+
+    /// Drive releases/completions until `stop` holds. The caller's
+    /// thread does the joining (no pump thread); concurrent drivers
+    /// coordinate through the inflight list and the progress condvar.
+    fn drive_until<F: FnMut(&mut FairInner) -> bool>(&self, mut stop: F) {
+        loop {
+            let mut g = self.inner.lock().unwrap();
+            if stop(&mut g) {
+                return;
+            }
+            self.pump(&mut g);
+            if let Some(pos) = g.inflight.iter().position(|f| f.join.is_some()) {
+                let id = g.inflight[pos].id;
+                let join = g.inflight[pos].join.take().unwrap();
+                drop(g);
+                let metrics = join.join();
+                let mut g = self.inner.lock().unwrap();
+                let pos = g.inflight.iter().position(|f| f.id == id).expect("inflight entry vanished");
+                let fin = g.inflight.remove(pos);
+                self.complete(&mut g, fin, metrics);
+                drop(g);
+                self.progress.notify_all();
+                continue;
+            }
+            if g.inflight.is_empty() {
+                if g.q.is_empty() {
+                    panic!("FairShare::drive_until: nothing pending but the stop condition is unsatisfied");
+                }
+                // Everything queued is throttled: skip the clock to
+                // the next token (virtual) or wait it out (real).
+                let eta = g.q.next_eligible_ns(self.now_ns()).unwrap_or(1).max(1);
+                drop(g);
+                match &self.real_anchor {
+                    None => {
+                        let target = self.now_ns().saturating_add(eta);
+                        self.vnow.fetch_max(target, AcqRel); // order: [fair.vclock] AcqRel — monotone clock advance published to readers
+                    }
+                    Some(_) => std::thread::sleep(std::time::Duration::from_nanos(eta.min(1_000_000))),
+                }
+                continue;
+            }
+            // Every inflight join is owned by another driver; it will
+            // publish a result and bump `gen`.
+            let g0 = g.gen;
+            let _g = self.progress.wait_while(g, |g| g.gen == g0).unwrap();
+        }
+    }
+
+    /// Join every queued and released job (helper loop; zero-sleep in
+    /// virtual mode).
+    pub fn drain(&self) {
+        self.drive_until(|g| g.q.is_empty() && g.inflight.is_empty());
+    }
+
+    /// Cumulative admission counters for `tenant`.
+    pub fn tenant_stats(&self, tenant: usize) -> FairTenantStats {
+        self.inner.lock().unwrap().q.stats(tenant)
+    }
+
+    pub fn tenant_spec(&self, tenant: usize) -> TenantSpec {
+        self.inner.lock().unwrap().q.spec(tenant).clone()
+    }
+
+    pub fn vruntime(&self, tenant: usize) -> u128 {
+        self.inner.lock().unwrap().q.vruntime(tenant)
+    }
+
+    /// Recorded submission → release waits for `tenant` (queue-clock
+    /// ns, release order).
+    pub fn waits_ns(&self, tenant: usize) -> Vec<u64> {
+        self.inner.lock().unwrap().waits_ns[tenant].clone()
+    }
+}
+
+/// Handle to one admitted submission ([`FairShare::submit`]).
+pub struct FairTicket {
+    id: u64,
+    tenant: usize,
+    admission: Admission,
+    shared: Arc<TicketShared>,
+    fair: Arc<FairShare>,
+    joined: bool,
+}
+
+impl FairTicket {
+    /// `Admitted` (token paid) or `Queued` (throttled) at submit.
+    pub fn admission(&self) -> Admission {
+        self.admission
+    }
+
+    pub fn tenant(&self) -> usize {
+        self.tenant
+    }
+
+    /// Has the job been released into the pool? (Non-blocking.)
+    pub fn is_released(&self) -> bool {
+        self.shared.released.load(Acquire) // order: [fair.ticket-release] Acquire — pairs with the pump's Release store
+    }
+
+    /// Wait for the job, helping drive the front end; returns its
+    /// loop metrics (tenant id attached).
+    pub fn join(mut self) -> RunMetrics {
+        let id = self.id;
+        self.fair.drive_until(|g| g.results.contains_key(&id));
+        self.joined = true;
+        self.fair.inner.lock().unwrap().results.remove(&id).expect("result vanished after drive")
+    }
+}
+
+impl Drop for FairTicket {
+    fn drop(&mut self) {
+        if !self.joined {
+            let mut g = self.fair.inner.lock().unwrap();
+            if g.results.remove(&self.id).is_none() {
+                g.detached.insert(self.id);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering::SeqCst};
+
+    fn specs(n: usize) -> Vec<TenantSpec> {
+        (0..n).map(|i| TenantSpec::new(&format!("t{i}"))).collect()
+    }
+
+    #[test]
+    fn bucket_saturates_and_refills_monotonically() {
+        let mut b = TokenBucket::new(10.0, 4.0); // 1 token / 100ms
+        assert_eq!(b.burst_tokens(), 4);
+        assert_eq!(b.available(0), 4);
+        for _ in 0..4 {
+            assert!(b.try_take(0));
+        }
+        assert_eq!(b.available(0), 0);
+        assert!(!b.try_take(0));
+        let eta = b.eta_ns(0);
+        assert!(eta > 0);
+        assert_eq!(b.available(eta - 1), 0);
+        assert_eq!(b.available(eta), 1);
+        // Long idle saturates back at the burst cap.
+        assert_eq!(b.available(u64::MAX / 2), 4);
+    }
+
+    #[test]
+    fn unthrottled_bucket_always_pays() {
+        let mut b = TokenBucket::new(0.0, 1.0);
+        for _ in 0..1000 {
+            assert!(b.try_take(0));
+        }
+        assert_eq!(b.eta_ns(0), 0);
+    }
+
+    #[test]
+    fn tenant_spec_round_trips() {
+        let s = TenantSpec::parse("acme:w=4:rate=250:burst=16:depth=32").unwrap();
+        assert_eq!(s.weight, 4);
+        assert_eq!(TenantSpec::parse(&s.spec_string()).unwrap(), s);
+        let list = TenantSpec::parse_list("a,b:w=2,c:rate=5").unwrap();
+        assert_eq!(list.len(), 3);
+        assert_eq!(list[1].weight, 2);
+        assert!(TenantSpec::parse("x:nope=1").is_err());
+        assert!(TenantSpec::parse(":w=1").is_err());
+    }
+
+    #[test]
+    fn min_vruntime_pick_alternates_equal_weights() {
+        let mut q: FairQueue<usize> = FairQueue::new(&specs(2));
+        for i in 0..6 {
+            q.submit(i % 2, i, LatencyClass::Batch, None, 0).unwrap();
+        }
+        let mut order = Vec::new();
+        while let Some(r) = q.pop(0) {
+            order.push(r.tenant);
+            q.charge(r.tenant, 1_000);
+        }
+        assert_eq!(order, vec![0, 1, 0, 1, 0, 1]);
+    }
+
+    #[test]
+    fn weighted_tenant_gets_proportional_picks() {
+        let mut sp = specs(2);
+        sp[1].weight = 3;
+        let mut q: FairQueue<usize> = FairQueue::new(&sp);
+        let mut served = [0u64; 2];
+        for i in 0..400 {
+            // Keep both backlogged.
+            let _ = q.submit(i % 2, i, LatencyClass::Batch, None, 0);
+            let _ = q.submit((i + 1) % 2, i, LatencyClass::Batch, None, 0);
+            if let Some(r) = q.pop(0) {
+                served[r.tenant] += 1;
+                q.charge(r.tenant, 1_000);
+            }
+        }
+        let ratio = served[1] as f64 / served[0].max(1) as f64;
+        assert!((ratio - 3.0).abs() < 0.5, "served {served:?}, ratio {ratio}");
+    }
+
+    #[test]
+    fn late_joiner_is_clamped_not_favored() {
+        let mut q: FairQueue<usize> = FairQueue::new(&specs(2));
+        // Tenant 0 runs alone for a while, building vruntime.
+        for i in 0..50 {
+            q.submit(0, i, LatencyClass::Batch, None, 0).unwrap();
+            let r = q.pop(0).unwrap();
+            q.charge(r.tenant, 1_000_000);
+        }
+        // Tenant 1 activates late; without the clamp it would win the
+        // next ~50 picks in a row.
+        for i in 0..8 {
+            q.submit(0, i, LatencyClass::Batch, None, 0).unwrap();
+            q.submit(1, 100 + i, LatencyClass::Batch, None, 0).unwrap();
+        }
+        let mut wins1 = 0;
+        for _ in 0..4 {
+            let r = q.pop(0).unwrap();
+            if r.tenant == 1 {
+                wins1 += 1;
+            }
+            q.charge(r.tenant, 1_000_000);
+        }
+        assert!(wins1 <= 2, "late joiner monopolized {wins1}/4 picks");
+    }
+
+    #[test]
+    fn class_scaled_caps_shed_background_first() {
+        let mut sp = specs(1);
+        sp[0].depth = 8;
+        sp[0].rate = 0.0; // unthrottled: exercise the cap, not tokens
+        let mut q: FairQueue<usize> = FairQueue::new(&sp);
+        // Background cap = 8 >> 2 = 2.
+        assert!(q.submit(0, 0, LatencyClass::Background, None, 0).is_ok());
+        assert!(q.submit(0, 1, LatencyClass::Background, None, 0).is_ok());
+        assert_eq!(q.submit(0, 2, LatencyClass::Background, None, 0), Err(RejectReason::QueueFull));
+        // Batch still queues (cap 4), Interactive up to 8.
+        assert!(q.submit(0, 3, LatencyClass::Batch, None, 0).is_ok());
+        assert!(q.submit(0, 4, LatencyClass::Batch, None, 0).is_ok());
+        assert_eq!(q.submit(0, 5, LatencyClass::Batch, None, 0), Err(RejectReason::QueueFull));
+        for i in 0..4 {
+            assert!(q.submit(0, 6 + i, LatencyClass::Interactive, None, 0).is_ok());
+        }
+        assert_eq!(q.submit(0, 10, LatencyClass::Interactive, None, 0), Err(RejectReason::QueueFull));
+        assert_eq!(q.stats(0).shed(), 3);
+    }
+
+    #[test]
+    fn throttled_background_sheds_but_interactive_queues() {
+        let mut sp = specs(1);
+        sp[0].rate = 1.0;
+        sp[0].burst = 1.0;
+        let mut q: FairQueue<usize> = FairQueue::new(&sp);
+        assert_eq!(q.submit(0, 0, LatencyClass::Interactive, None, 0), Ok(Admission::Admitted));
+        assert_eq!(q.submit(0, 1, LatencyClass::Background, None, 0), Err(RejectReason::Throttled));
+        assert_eq!(q.submit(0, 2, LatencyClass::Interactive, None, 0), Ok(Admission::Queued));
+        // The queued entry is ineligible until the bucket refills.
+        assert!(q.pop(0).is_some()); // prepaid head
+        assert!(q.pop(0).is_none());
+        let eta = q.next_eligible_ns(0).unwrap();
+        assert!(eta > 0);
+        assert!(q.pop(eta).is_some());
+    }
+
+    #[test]
+    fn within_tenant_interactive_overtakes_background() {
+        let mut q: FairQueue<usize> = FairQueue::new(&specs(1));
+        q.submit(0, 0, LatencyClass::Background, None, 0).unwrap();
+        q.submit(0, 1, LatencyClass::Interactive, None, 0).unwrap();
+        assert_eq!(q.pop(0).unwrap().item, 1);
+        assert_eq!(q.pop(0).unwrap().item, 0);
+    }
+
+    #[test]
+    fn fair_share_serves_and_attributes_tenants() {
+        let rt = Arc::new(Runtime::with_pinning(2, false));
+        let fair = Arc::new(FairShare::new_virtual(rt, &specs(2)));
+        let hits = Arc::new(AtomicUsize::new(0));
+        let mut tickets = Vec::new();
+        for i in 0..6 {
+            let h = Arc::clone(&hits);
+            let body: Arc<dyn Fn(Range<usize>) + Send + Sync> = Arc::new(move |r: Range<usize>| {
+                h.fetch_add(r.len(), SeqCst);
+            });
+            let job = FairJob::new(32, body).with_cost_ns(1_000);
+            tickets.push(fair.submit(i % 2, job).unwrap());
+        }
+        let mut seen = [0u64; 2];
+        for t in tickets {
+            let tenant = t.tenant();
+            let m = t.join();
+            assert_eq!(m.total_iters, 32);
+            assert_eq!(m.tenant, Some(tenant as u32), "tenant id must reach RunMetrics");
+            seen[tenant] += 1;
+        }
+        assert_eq!(seen, [3, 3]);
+        assert_eq!(hits.load(SeqCst), 6 * 32);
+        assert_eq!(fair.tenant_stats(0).completed, 3);
+        assert_eq!(fair.tenant_stats(1).completed, 3);
+    }
+
+    #[test]
+    fn fair_share_drain_without_joining_tickets() {
+        let rt = Arc::new(Runtime::with_pinning(1, false));
+        let fair = Arc::new(FairShare::new_virtual(rt, &specs(1)));
+        for _ in 0..4 {
+            let t = fair.submit(0, FairJob::new(8, Arc::new(|_r: Range<usize>| {})).with_cost_ns(500)).unwrap();
+            assert!(t.admission() == Admission::Admitted || t.admission() == Admission::Queued);
+            drop(t);
+        }
+        fair.drain();
+        let s = fair.tenant_stats(0);
+        assert_eq!(s.completed, 4);
+        assert_eq!(fair.waits_ns(0).len(), 4);
+        // Dropped tickets must not leak results.
+        assert!(fair.inner.lock().unwrap().results.is_empty());
+        assert!(fair.inner.lock().unwrap().detached.is_empty());
+    }
+
+    #[test]
+    fn virtual_clock_skips_throttle_gaps_without_sleeping() {
+        let rt = Arc::new(Runtime::with_pinning(1, false));
+        let mut sp = specs(1);
+        sp[0].rate = 2.0; // 1 token / 500ms — intolerable with real sleeps
+        sp[0].burst = 1.0;
+        let fair = Arc::new(FairShare::new_virtual(rt, &sp));
+        for _ in 0..3 {
+            fair.submit(0, FairJob::new(4, Arc::new(|_r: Range<usize>| {})).with_cost_ns(100)).unwrap();
+        }
+        let t0 = Instant::now();
+        fair.drain();
+        assert_eq!(fair.tenant_stats(0).completed, 3);
+        assert!(fair.now_ns() >= 1_000_000_000, "clock must have skipped ~2 refill periods");
+        assert!(t0.elapsed().as_millis() < 500, "drain must not sleep out the throttle gaps");
+    }
+}

@@ -201,6 +201,8 @@ impl MetricsSink {
             queue_wait_s: 0.0,
             promoted: false,
             dispatch_skips: 0,
+            edf_tick_scale: 0.0,
+            tenant: None,
         }
     }
 }
@@ -251,6 +253,9 @@ pub struct RunMetrics {
     /// (`sched::topology::edf_tick_scale`; 1.0 = neutral SLIT weight,
     /// 0.0 only for hand-built sinks that never saw the dispatcher).
     pub edf_tick_scale: f64,
+    /// Tenant the run was submitted for (`sched::fair` front end or
+    /// `ForOpts::with_tenant`; `None` = untenanted traffic).
+    pub tenant: Option<u32>,
 }
 
 impl RunMetrics {

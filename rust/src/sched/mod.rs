@@ -72,6 +72,7 @@ pub mod binlpt;
 pub mod central;
 pub mod deque;
 pub mod dispatch;
+pub mod fair;
 pub mod metrics;
 pub mod policy;
 pub mod pool;
@@ -81,6 +82,10 @@ pub mod topology;
 pub mod ws;
 
 pub use dispatch::{DispatchQueue, LatencyClass, PopInfo, CLASSES, PROMOTE_K};
+pub use fair::{
+    Admission, ChargeMode, FairJob, FairQueue, FairShare, FairTenantStats, FairTicket, RejectReason, TenantSpec,
+    TokenBucket, WEIGHT_UNIT,
+};
 pub use metrics::{MetricsSink, RunMetrics};
 pub use runtime::{preempt_point, ClassStats, DispatchInfo, Executor, LoopHandle, Runtime, SpawnExec, SubmitOpts};
 pub use topology::{Topology, VictimPolicy};
@@ -254,6 +259,10 @@ pub struct ForOpts<'a> {
     /// `--assist` / `ICH_ASSIST` env, else off — the off-path is
     /// byte-identical to the pre-assist runtime).
     pub assist: bool,
+    /// Tenant index for multi-tenant attribution (see `sched::fair`);
+    /// rides the epoch into [`DispatchInfo`] and [`RunMetrics`].
+    /// `None` = untenanted traffic, byte-identical to before.
+    pub tenant: Option<u32>,
 }
 
 impl Default for ForOpts<'_> {
@@ -268,6 +277,7 @@ impl Default for ForOpts<'_> {
             class: LatencyClass::process_default(),
             deadline: None,
             assist: assist::process_default(),
+            tenant: None,
         }
     }
 }
@@ -312,6 +322,11 @@ impl<'a> ForOpts<'a> {
         self
     }
 
+    pub fn with_tenant(mut self, tenant: u32) -> Self {
+        self.tenant = Some(tenant);
+        self
+    }
+
     /// The [`SubmitOpts`] this run hands the pool. The submission
     /// origin is left to auto-detection (the submitting thread's
     /// pinned core, if any).
@@ -322,6 +337,7 @@ impl<'a> ForOpts<'a> {
             pin_fallback: self.pin,
             origin: None,
             assist: self.assist,
+            tenant: self.tenant,
         }
     }
 }
@@ -418,6 +434,7 @@ pub fn parallel_for(n: usize, policy: &Policy, opts: &ForOpts, body: &(dyn Fn(Ra
         m.queue_wait_s = d.queue_wait_s;
         m.promoted = d.promoted;
         m.dispatch_skips = d.skips;
+        m.tenant = d.tenant;
     }
     m
 }
@@ -454,6 +471,7 @@ impl LoopJoin {
             m.queue_wait_s = d.queue_wait_s;
             m.promoted = d.promoted;
             m.dispatch_skips = d.skips;
+            m.tenant = d.tenant;
         }
         m
     }

@@ -313,6 +313,11 @@ pub struct SubmitOpts {
     /// env, else off); with it off the pool is byte-identical to the
     /// pre-assist runtime.
     pub assist: bool,
+    /// Tenant index for multi-tenant attribution (`sched::fair`):
+    /// pure metadata riding the epoch into [`DispatchInfo`] — the
+    /// dispatcher itself stays tenant-blind (fair-share ordering
+    /// happens *before* the queue, in `fair::FairShare`).
+    pub tenant: Option<u32>,
 }
 
 impl Default for SubmitOpts {
@@ -323,6 +328,7 @@ impl Default for SubmitOpts {
             pin_fallback: false,
             origin: None,
             assist: assist::process_default(),
+            tenant: None,
         }
     }
 }
@@ -341,6 +347,8 @@ pub struct DispatchInfo {
     /// ([`SubmitOpts::origin`], else the submitting thread's node;
     /// `None` = unknown, weight neutral).
     pub origin: Option<usize>,
+    /// Tenant the epoch was submitted for ([`SubmitOpts::tenant`]).
+    pub tenant: Option<u32>,
 }
 
 /// Cumulative per-class dispatch counters of one pool
@@ -640,6 +648,8 @@ struct Epoch {
     /// Work assisting opted in ([`SubmitOpts::assist`]): the joiner
     /// side self-assists instead of spinning.
     assist: bool,
+    /// Tenant attribution tag ([`SubmitOpts::tenant`]).
+    tenant: Option<u32>,
 }
 
 // SAFETY: the only non-Send/Sync field is the `Task::Borrowed` raw
@@ -667,6 +677,7 @@ impl Epoch {
             skips: AtomicU64::new(0),
             promoted: AtomicBool::new(false),
             assist: opts.assist,
+            tenant: opts.tenant,
         })
     }
 
@@ -678,6 +689,7 @@ impl Epoch {
             promoted: self.promoted.load(Acquire), // order: [runtime.metrics-merge] Acquire — pairs with the dispatch path's Release stores
             skips: self.skips.load(Acquire), // order: [runtime.metrics-merge] Acquire — pairs with the dispatch path's Release stores
             origin: self.origin,
+            tenant: self.tenant,
         }
     }
 

@@ -14,7 +14,10 @@ pub mod policies;
 
 pub use engine::{Acquire, LoopSpec, SimCtx, SimResult, SimSched};
 pub use machine::MachineSpec;
-pub use policies::{make_assist_sim_policy, make_sim_policy, sim_dispatch_order, sim_dispatch_order_from, AssistSim, SimArrival};
+pub use policies::{
+    make_assist_sim_policy, make_sim_policy, sim_dispatch_order, sim_dispatch_order_from, sim_fair_order, AssistSim,
+    SimArrival, SimFairArrival, SimFairOutcome, SimTenantSpec,
+};
 
 use crate::sched::Policy;
 

@@ -672,6 +672,214 @@ pub fn sim_dispatch_order_from(
     order
 }
 
+// ---------------------------------------------------------------------------
+// Multi-tenant fair-share model (runtime admission front end)
+// ---------------------------------------------------------------------------
+
+/// Static tenant parameters for [`sim_fair_order`] — the sim-side
+/// mirror of `sched::fair::TenantSpec`, minus the display name.
+#[derive(Clone, Copy, Debug)]
+pub struct SimTenantSpec {
+    /// CFS weight (≥ 1).
+    pub weight: u64,
+    /// Token-bucket refill rate, submissions/s (≤ 0 = unthrottled).
+    pub rate: f64,
+    /// Token-bucket burst capacity, whole submissions (≥ 1).
+    pub burst: f64,
+    /// Queue-depth cap for `Interactive`; classes scale it down.
+    pub depth: usize,
+}
+
+/// One submission in a fair-share trace for [`sim_fair_order`].
+/// Traces must be sorted by `at_ns`; ties keep slice order, which is
+/// the submission order the runtime's front end sees.
+#[derive(Clone, Copy, Debug)]
+pub struct SimFairArrival {
+    pub tenant: usize,
+    pub class: crate::sched::LatencyClass,
+    /// Declared execution cost charged at completion (min 1 ns).
+    pub cost_ns: u64,
+    /// Submission time on the serving clock.
+    pub at_ns: u64,
+}
+
+/// Outcome of a simulated fair-share serve ([`sim_fair_order`]).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct SimFairOutcome {
+    /// Indices of the arrivals in release order.
+    pub order: Vec<usize>,
+    /// Submission → release wait of each release, parallel to `order`.
+    pub wait_ns: Vec<u64>,
+    /// Indices shed at submit (throttled Background or queue-full).
+    pub shed: Vec<usize>,
+}
+
+/// The simulator's *independent* model of the fair-share admission
+/// front end (`sched::fair`) under the deterministic serving
+/// convention pinned by `tests/fairness_conformance.rs`:
+///
+/// - **Submit phase** — arrivals in `at_ns` order: advance the clock
+///   to `at_ns`, admit/queue/shed by the fair rules (class-scaled
+///   depth cap first, then the token bucket; a throttled `Background`
+///   arrival sheds, anything else queues unpaid), then release at
+///   most one entry into the single inflight slot (min-vruntime pick,
+///   ties → lower tenant index).
+/// - **Drain phase** — serial-service loop: completing the inflight
+///   entry charges `cost_ns * 1024 / weight` to its tenant's
+///   vruntime and advances the clock by `cost_ns`; when everything
+///   queued is throttled, the clock skips to the next token refill
+///   (`max(eta, 1)`); each step then releases the next pick.
+///
+/// Admission arithmetic is GCRA (integer theoretical-arrival-time
+/// bucket: `period = round(1e9/rate)` ns, 0 = unthrottled; burst
+/// tolerance `(burst-1)·period`) and vruntime is saturating `u128`
+/// with a monotone activation floor (new activations clamp up to the
+/// smallest active vruntime, advanced at every charge).
+///
+/// This is a deliberate re-implementation (own bucket and pick code,
+/// O(n²) scans, nothing shared with `FairQueue`) so the conformance
+/// harness can differentially test the runtime and model against it.
+pub fn sim_fair_order(specs: &[SimTenantSpec], arrivals: &[SimFairArrival]) -> SimFairOutcome {
+    const UNIT: u128 = 1024; // sched::fair::WEIGHT_UNIT, restated on purpose
+    struct Tn {
+        /// GCRA: ns per token (0 = unthrottled), burst tolerance, and
+        /// the theoretical arrival time of the next conforming take.
+        period_ns: u64,
+        tau_ns: u64,
+        tat_ns: u64,
+        weight: u128,
+        depth: usize,
+        vrt: u128,
+        /// (arrival index, class rank, submit_ns, prepaid), ordered
+        /// by (rank, submission).
+        q: Vec<(usize, u8, u64, bool)>,
+    }
+    impl Tn {
+        fn has_token(&self, now: u64) -> bool {
+            self.period_ns == 0 || now.saturating_add(self.tau_ns) >= self.tat_ns
+        }
+        fn take(&mut self, now: u64) -> bool {
+            if self.period_ns == 0 {
+                return true;
+            }
+            if now.saturating_add(self.tau_ns) < self.tat_ns {
+                return false;
+            }
+            self.tat_ns = now.max(self.tat_ns).saturating_add(self.period_ns);
+            true
+        }
+        fn eta(&self, now: u64) -> u64 {
+            if self.has_token(now) {
+                0
+            } else {
+                (self.tat_ns - self.tau_ns) - now
+            }
+        }
+    }
+    /// Min-vruntime pick over eligible tenants (head prepaid or
+    /// payable now); ties break toward the lower tenant index.
+    fn pick(tn: &mut [Tn], now: u64) -> Option<(usize, usize, u64)> {
+        let mut best: Option<(usize, u128)> = None;
+        for (i, t) in tn.iter().enumerate() {
+            let Some(&(_, _, _, prepaid)) = t.q.first() else { continue };
+            if !prepaid && !t.has_token(now) {
+                continue;
+            }
+            if best.is_none_or(|(_, v)| t.vrt < v) {
+                best = Some((i, t.vrt));
+            }
+        }
+        let (ti, _) = best?;
+        let (idx, _, at, prepaid) = tn[ti].q.remove(0);
+        if !prepaid {
+            tn[ti].take(now);
+        }
+        Some((ti, idx, at))
+    }
+
+    let mut tn: Vec<Tn> = specs
+        .iter()
+        .map(|s| {
+            let period_ns = if !s.rate.is_finite() || s.rate <= 0.0 || s.rate >= 1e9 {
+                0
+            } else {
+                (1e9 / s.rate).round().max(1.0) as u64
+            };
+            let burst = if s.burst.is_finite() && s.burst >= 1.0 { s.burst.round() as u64 } else { 1 };
+            Tn {
+                period_ns,
+                tau_ns: (burst - 1).saturating_mul(period_ns),
+                tat_ns: 0,
+                weight: s.weight.max(1) as u128,
+                depth: s.depth,
+                vrt: 0,
+                q: Vec::new(),
+            }
+        })
+        .collect();
+    let mut out = SimFairOutcome::default();
+    let mut min_vrt: u128 = 0;
+    let mut clock: u64 = 0;
+    // The single inflight slot: (arrival index, tenant, charge cost).
+    let mut inflight: Option<(usize, usize, u64)> = None;
+
+    // Submit phase.
+    for (i, a) in arrivals.iter().enumerate() {
+        clock = clock.max(a.at_ns);
+        let rank = a.class.rank();
+        let t = &mut tn[a.tenant];
+        if t.q.len() >= (t.depth >> rank).max(1) {
+            out.shed.push(i);
+        } else {
+            let prepaid = t.take(clock);
+            if !prepaid && a.class == crate::sched::LatencyClass::Background {
+                out.shed.push(i);
+            } else {
+                if t.q.is_empty() {
+                    // Activation clamp up to the monotone floor.
+                    t.vrt = t.vrt.max(min_vrt);
+                }
+                let pos = t.q.iter().position(|e| e.1 > rank).unwrap_or(t.q.len());
+                t.q.insert(pos, (i, rank, clock, prepaid));
+            }
+        }
+        if inflight.is_none() {
+            if let Some((ti, idx, at)) = pick(&mut tn, clock) {
+                out.order.push(idx);
+                out.wait_ns.push(clock.saturating_sub(at));
+                inflight = Some((idx, ti, arrivals[idx].cost_ns.max(1)));
+            }
+        }
+    }
+
+    // Drain phase (serial-service model).
+    loop {
+        if let Some((_, ti, cost)) = inflight.take() {
+            tn[ti].vrt = tn[ti].vrt.saturating_add(cost as u128 * UNIT / tn[ti].weight);
+            let active = tn.iter().filter(|t| !t.q.is_empty()).map(|t| t.vrt).min().unwrap_or(tn[ti].vrt);
+            min_vrt = min_vrt.max(active);
+            clock = clock.saturating_add(cost);
+        } else if tn.iter().any(|t| !t.q.is_empty()) {
+            // Everything queued is throttled: skip to the next token.
+            let eta = tn
+                .iter()
+                .filter_map(|t| t.q.first().map(|e| if e.3 { 0 } else { t.eta(clock) }))
+                .min()
+                .unwrap_or(1)
+                .max(1);
+            clock = clock.saturating_add(eta);
+        } else {
+            break;
+        }
+        if let Some((ti, idx, at)) = pick(&mut tn, clock) {
+            out.order.push(idx);
+            out.wait_ns.push(clock.saturating_sub(at));
+            inflight = Some((idx, ti, arrivals[idx].cost_ns.max(1)));
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

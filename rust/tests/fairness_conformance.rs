@@ -1,0 +1,292 @@
+//! Fairness-conformance harness for the multi-tenant fair-share
+//! admission front end (`sched::fair`).
+//!
+//! Everything here is **deterministic and sleep-free**: the runtime
+//! legs use [`FairShare::new_virtual`] (virtual serving clock, declared
+//! costs, token-refill gaps skipped instead of slept) and the staged
+//! regression parks the pool worker behind a condvar gate while its
+//! trace is enqueued — dispatch_conformance.rs style. The harness
+//! proves three properties:
+//!
+//! 1. **Three-way differential agreement**: on ≥ 200 seeded random
+//!    multi-tenant traces, the real runtime front end
+//!    ([`FairShare`]), the deterministic model ([`FairQueue`] driven
+//!    directly), and the simulator's independent re-implementation
+//!    ([`sim_fair_order`]) produce identical release orders, shed
+//!    sets, and per-release queue waits.
+//! 2. **No starvation**: a Background tenant flooding 8× an
+//!    Interactive tenant's volume cannot push the Interactive
+//!    tenant's p99 queue wait past a small bound, and the flooding
+//!    tenant itself still completes all of its admitted work.
+//! 3. **Weight fairness**: equal-weight tenants saturating the front
+//!    end split served work with a Jain index ≈ 1.0 (the paper-style
+//!    acceptance bar is ≥ 0.9).
+//!
+//! The drive convention shared by all three legs (pinned here, and
+//! documented on `sim_fair_order`): submit phase — per arrival,
+//! advance the clock to `at_ns`, submit, then release at most one
+//! entry into the single inflight slot; drain phase — complete the
+//! inflight entry (charge vruntime, clock += cost), or skip the clock
+//! to the next token refill when everything queued is throttled, then
+//! release the next pick.
+
+use ich::sched::runtime::Runtime;
+use ich::sched::{FairJob, FairQueue, FairShare, LatencyClass, TenantSpec};
+use ich::sim::{sim_fair_order, SimFairArrival, SimTenantSpec};
+use ich::util::rng::Rng;
+use std::ops::Range;
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Reusable one-shot gate: `wait` blocks until `open` (condvar, no
+/// wall-clock sleeps anywhere).
+struct Gate {
+    m: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl Gate {
+    fn new() -> Arc<Gate> {
+        Arc::new(Gate { m: Mutex::new(false), cv: Condvar::new() })
+    }
+
+    fn open(&self) {
+        *self.m.lock().unwrap() = true;
+        self.cv.notify_all();
+    }
+
+    fn wait(&self) {
+        let mut open = self.m.lock().unwrap();
+        while !*open {
+            open = self.cv.wait(open).unwrap();
+        }
+    }
+}
+
+/// One scripted submission. Traces are sorted by `at_ns`.
+#[derive(Clone, Copy, Debug)]
+struct Arrival {
+    tenant: usize,
+    class: LatencyClass,
+    cost_ns: u64,
+    at_ns: u64,
+}
+
+/// Release at most one entry into the model's single inflight slot.
+fn model_pump(
+    q: &mut FairQueue<usize>,
+    inflight: &mut Option<(usize, u64)>,
+    clock: u64,
+    costs: &[u64],
+    order: &mut Vec<usize>,
+    waits: &mut Vec<u64>,
+) {
+    if inflight.is_none() {
+        if let Some(r) = q.pop(clock) {
+            order.push(r.item);
+            waits.push(r.wait_ns);
+            *inflight = Some((r.tenant, costs[r.item].max(1)));
+        }
+    }
+}
+
+/// Model leg: drive `FairQueue` directly under the shared convention.
+/// Returns (release order, waits parallel to it, shed indices).
+fn model_fair_order(specs: &[TenantSpec], arrivals: &[Arrival]) -> (Vec<usize>, Vec<u64>, Vec<usize>) {
+    let costs: Vec<u64> = arrivals.iter().map(|a| a.cost_ns).collect();
+    let mut q: FairQueue<usize> = FairQueue::new(specs);
+    let mut clock = 0u64;
+    let mut inflight: Option<(usize, u64)> = None;
+    let (mut order, mut waits, mut shed) = (Vec::new(), Vec::new(), Vec::new());
+    for (i, a) in arrivals.iter().enumerate() {
+        clock = clock.max(a.at_ns);
+        if q.submit(a.tenant, i, a.class, None, clock).is_err() {
+            shed.push(i);
+        }
+        model_pump(&mut q, &mut inflight, clock, &costs, &mut order, &mut waits);
+    }
+    loop {
+        if let Some((t, c)) = inflight.take() {
+            q.charge(t, c);
+            clock = clock.saturating_add(c);
+        } else if !q.is_empty() {
+            clock = clock.saturating_add(q.next_eligible_ns(clock).unwrap_or(1).max(1));
+        } else {
+            break;
+        }
+        model_pump(&mut q, &mut inflight, clock, &costs, &mut order, &mut waits);
+    }
+    (order, waits, shed)
+}
+
+/// Runtime leg: serve the same trace through a virtual-clock
+/// `FairShare` on a 1-worker pool (inflight window 1). Release order
+/// is observed through body side effects — the window admits one job
+/// at a time and drain joins it before pumping the next, so bodies
+/// start in exact release order. Returns (release order, per-tenant
+/// waits in release order, shed indices).
+fn runtime_fair_order(
+    rt: &Arc<Runtime>,
+    specs: &[TenantSpec],
+    arrivals: &[Arrival],
+) -> (Vec<usize>, Vec<Vec<u64>>, Vec<usize>) {
+    let fair = Arc::new(FairShare::new_virtual(Arc::clone(rt), specs));
+    let order: Arc<Mutex<Vec<usize>>> = Arc::new(Mutex::new(Vec::new()));
+    let mut shed = Vec::new();
+    let mut tickets = Vec::new();
+    for (i, a) in arrivals.iter().enumerate() {
+        fair.set_virtual_now(a.at_ns);
+        let o = Arc::clone(&order);
+        let job = FairJob::new(1, Arc::new(move |_r: Range<usize>| o.lock().unwrap().push(i)))
+            .with_class(a.class)
+            .with_cost_ns(a.cost_ns);
+        match fair.submit(a.tenant, job) {
+            Ok(t) => tickets.push(t),
+            Err(_) => shed.push(i),
+        }
+    }
+    fair.drain();
+    drop(tickets);
+    let waits = (0..specs.len()).map(|t| fair.waits_ns(t)).collect();
+    let out = order.lock().unwrap().clone();
+    (out, waits, shed)
+}
+
+// ---------------------------------------------------------------------------
+// 1. Three-way differential: runtime vs model vs sim
+// ---------------------------------------------------------------------------
+
+#[test]
+fn runtime_model_and_sim_agree_on_random_multi_tenant_traces() {
+    let rt = Arc::new(Runtime::with_pinning(1, false));
+    let mut rng = Rng::new(0xFA1C);
+    for case in 0..220 {
+        let nt = 1 + rng.below(4);
+        let mut specs = Vec::with_capacity(nt);
+        let mut sim_specs = Vec::with_capacity(nt);
+        for t in 0..nt {
+            let mut s = TenantSpec::new(&format!("t{t}"));
+            s.weight = 1 + rng.below(8) as u64;
+            // Mix unthrottled tenants with tight buckets whose refill
+            // period (~0.2–2 ms) is on the arrival-gap scale, so
+            // Queued admissions and eta clock-skips actually happen.
+            s.rate = if rng.below(3) == 0 { 0.0 } else { 500.0 + rng.below(4500) as f64 };
+            s.burst = 1.0 + rng.below(4) as f64;
+            s.depth = 1 + rng.below(12);
+            sim_specs.push(SimTenantSpec { weight: s.weight, rate: s.rate, burst: s.burst, depth: s.depth });
+            specs.push(s);
+        }
+        let mut at = 0u64;
+        let arrivals: Vec<Arrival> = (0..4 + rng.below(12))
+            .map(|_| {
+                at += rng.below(2_000_000) as u64;
+                Arrival {
+                    tenant: rng.below(nt),
+                    class: LatencyClass::from_rank(rng.below(3) as u8),
+                    cost_ns: 1 + rng.below(1_000_000) as u64,
+                    at_ns: at,
+                }
+            })
+            .collect();
+
+        let (m_order, m_waits, m_shed) = model_fair_order(&specs, &arrivals);
+        assert_eq!(m_order.len() + m_shed.len(), arrivals.len(), "case {case}: model must account for every arrival");
+
+        let sim_arrivals: Vec<SimFairArrival> = arrivals
+            .iter()
+            .map(|a| SimFairArrival { tenant: a.tenant, class: a.class, cost_ns: a.cost_ns, at_ns: a.at_ns })
+            .collect();
+        let sim = sim_fair_order(&sim_specs, &sim_arrivals);
+        assert_eq!(sim.order, m_order, "case {case}: sim vs model release order");
+        assert_eq!(sim.wait_ns, m_waits, "case {case}: sim vs model queue waits");
+        assert_eq!(sim.shed, m_shed, "case {case}: sim vs model shed set");
+
+        let (r_order, r_waits, r_shed) = runtime_fair_order(&rt, &specs, &arrivals);
+        assert_eq!(r_order, m_order, "case {case}: runtime vs model release order");
+        assert_eq!(r_shed, m_shed, "case {case}: runtime vs model shed set");
+        let mut grouped: Vec<Vec<u64>> = vec![Vec::new(); nt];
+        for (k, &idx) in m_order.iter().enumerate() {
+            grouped[arrivals[idx].tenant].push(m_waits[k]);
+        }
+        assert_eq!(r_waits, grouped, "case {case}: runtime vs model per-tenant queue waits");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 2. No starvation under a Background flood (condvar-staged)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn background_flood_does_not_starve_interactive_tenant() {
+    const COST: u64 = 1_000_000;
+    const FLOOD: u64 = 40; // 8× the interactive tenant's 5 jobs
+    let rt = Arc::new(Runtime::with_pinning(1, false));
+    let mut specs = vec![TenantSpec::new("flood"), TenantSpec::new("inter")];
+    specs[0].depth = 256; // Background cap 64 ≥ the whole flood
+    let fair = Arc::new(FairShare::new_virtual(Arc::clone(&rt), &specs));
+
+    // Stage deterministically: the first flood job is released
+    // immediately and parks the single pool worker inside a gate
+    // epoch, so the entire trace below queues in the fair layer while
+    // the serving clock sits at 0 (virtual clock, zero sleeps).
+    let started = Gate::new();
+    let release = Gate::new();
+    let (s2, r2) = (Arc::clone(&started), Arc::clone(&release));
+    let park: Arc<dyn Fn(Range<usize>) + Send + Sync> = Arc::new(move |_r: Range<usize>| {
+        s2.open();
+        r2.wait();
+    });
+    let hold = FairJob::new(1, park).with_class(LatencyClass::Background).with_cost_ns(COST);
+    let _holder = fair.submit(0, hold).unwrap();
+    started.wait();
+
+    let noop: Arc<dyn Fn(Range<usize>) + Send + Sync> = Arc::new(|_r: Range<usize>| {});
+    for _ in 0..FLOOD {
+        let job = FairJob::new(1, Arc::clone(&noop)).with_class(LatencyClass::Background).with_cost_ns(COST);
+        fair.submit(0, job).unwrap();
+    }
+    for _ in 0..5 {
+        let job = FairJob::new(1, Arc::clone(&noop)).with_class(LatencyClass::Interactive).with_cost_ns(COST);
+        fair.submit(1, job).unwrap();
+    }
+
+    release.open();
+    fair.drain();
+
+    assert_eq!(fair.tenant_stats(0).completed, FLOOD + 1, "flooding tenant must still make full progress");
+    assert_eq!(fair.tenant_stats(1).completed, 5);
+    let mut iw = fair.waits_ns(1);
+    iw.sort_unstable();
+    let p99 = iw[(0.99 * (iw.len() - 1) as f64).round() as usize];
+    // Equal weights ⇒ min-vruntime alternates the tenants while both
+    // are backlogged: the interactive trickle is served every other
+    // slot and its tail wait stays ~2× its own volume, independent of
+    // the flood's 8× volume.
+    assert!(p99 <= 12 * COST, "interactive p99 wait {p99}ns blew up under the flood");
+    let flood_max = fair.waits_ns(0).into_iter().max().unwrap();
+    assert!(flood_max > p99, "the flood's tail ({flood_max}ns) must absorb the queueing, not the interactive tenant");
+}
+
+// ---------------------------------------------------------------------------
+// 3. Equal-weight saturation is weight-fair (Jain ≥ 0.9)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn equal_weight_saturating_tenants_split_work_evenly() {
+    let rt = Arc::new(Runtime::with_pinning(1, false));
+    let mut specs: Vec<TenantSpec> = (0..3).map(|i| TenantSpec::new(&format!("t{i}"))).collect();
+    for s in &mut specs {
+        s.depth = 256;
+    }
+    let fair = Arc::new(FairShare::new_virtual(Arc::clone(&rt), &specs));
+    let noop: Arc<dyn Fn(Range<usize>) + Send + Sync> = Arc::new(|_r: Range<usize>| {});
+    for k in 0..180 {
+        let job = FairJob::new(1, Arc::clone(&noop)).with_class(LatencyClass::Batch).with_cost_ns(1_000_000);
+        fair.submit(k % 3, job).unwrap();
+    }
+    fair.drain();
+    let work: Vec<f64> = (0..3).map(|t| fair.tenant_stats(t).work_ns as f64).collect();
+    let jain = ich::harness::serving::jain_index(&work);
+    assert!(jain >= 0.9, "Jain index {jain:.4} for equal-weight saturating tenants (work {work:?})");
+    // Deterministic virtual serve of a symmetric trace: exactly even.
+    assert!((jain - 1.0).abs() < 1e-9, "symmetric trace must split exactly evenly, got {work:?}");
+}

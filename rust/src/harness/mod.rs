@@ -3,6 +3,7 @@
 //! the simulated testbed, plus the ablation sweeps.
 
 pub mod figures;
+pub mod regret;
 pub mod sensitivity;
 pub mod serving;
 pub mod speedup;

@@ -1,0 +1,240 @@
+//! Regret harness for `Policy::Auto` (`ich regret`).
+//!
+//! Measures the acceptance property of the online selector: over
+//! repeated episodes of each evaluation app, on each simulated
+//! machine model, `Auto`'s post-exploration mean time must land
+//! within [`CONVERGENCE_BOUND`] of the best *fixed* engine's mean
+//! over the same episode seeds. Emits `BENCH_auto.json` with the
+//! per-(app, machine) regret curves and chosen-arm histograms.
+//!
+//! Methodology:
+//!
+//! - One persistent [`AutoSim`] per (app, machine) replays the app
+//!   for `episodes` episodes (episode `e` simulates with seed
+//!   `seed + e`), modeling a long-running process re-dispatching its
+//!   loops; selector state carries across episodes exactly as the
+//!   runtime's per-pool table carries across `parallel_for` calls.
+//! - Every fixed arm runs the same episodes; `best_fixed` is the arm
+//!   with the lowest full-run mean.
+//! - The first `episodes / 2` episodes are the exploration window;
+//!   convergence compares post-window means only, over identical
+//!   seeds. Auto can land *below* 1.0: it selects per loop site,
+//!   while a fixed arm is one engine for the whole app.
+//! - The harness selector runs `min_plays = 1` (the runtime default
+//!   of 2 doubles every cold rotation): the bound targets the
+//!   converged regime, which a CI-sized episode budget must reach.
+//!   The exploration floor stays at the process default, so its
+//!   steady-state overhead is included in the measured means.
+
+use crate::apps::make_app;
+use crate::sched::auto::{self, AutoConfig};
+use crate::sim::machine::default_distance;
+use crate::sim::{simulate_app, AutoSim, LoopSpec, MachineSpec};
+use crate::util::json::Json;
+
+/// Post-window mean must be within this factor of the best fixed
+/// arm's (the ISSUE's 10% bound).
+pub const CONVERGENCE_BOUND: f64 = 1.10;
+
+/// The five-app evaluation suite (one representative per workload
+/// family: skewed synth, power-law BFS, K-Means, LavaMD, SpMV).
+pub const REGRET_APPS: &[&str] = &["synth-exp-dec", "bfs-scale-free", "kmeans", "lavamd", "spmv"];
+
+pub struct RegretParams {
+    /// Episodes per (app, machine); the first half is the
+    /// exploration window.
+    pub episodes: usize,
+    /// Base seed: episode `e` simulates with `seed + e`, and seeds
+    /// the selector's exploration hash.
+    pub seed: u64,
+    /// Output JSON path.
+    pub out: String,
+}
+
+impl Default for RegretParams {
+    fn default() -> RegretParams {
+        RegretParams { episodes: 40, seed: 7, out: "results/BENCH_auto.json".into() }
+    }
+}
+
+/// The machine models the bound is checked on: the paper's 2×14
+/// Haswell testbed and a single-socket desktop-class box (different
+/// steal/NUMA economics, so the best fixed engine can differ).
+fn machines() -> Vec<(&'static str, MachineSpec, usize)> {
+    let desktop = MachineSpec {
+        sockets: 1,
+        cores_per_socket: 8,
+        distance: default_distance(1),
+        ..MachineSpec::default()
+    };
+    vec![("2x14-haswell", MachineSpec::default(), 14), ("1x8-desktop", desktop, 8)]
+}
+
+struct AppOutcome {
+    app: String,
+    machine: &'static str,
+    threads: usize,
+    best_arm: String,
+    best_fixed_post_mean: f64,
+    auto_post_mean: f64,
+    ratio: f64,
+    converged: bool,
+    /// Per-episode `auto_time / best_arm_time` at identical seeds.
+    regret_curve: Vec<f64>,
+    /// Loop dispatches resolved to each arm, across all episodes.
+    arm_histogram: Vec<u64>,
+}
+
+fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() { 0.0 } else { xs.iter().sum::<f64>() / xs.len() as f64 }
+}
+
+fn measure(
+    name: &str,
+    machine: &'static str,
+    spec: &MachineSpec,
+    p: usize,
+    loops: &[LoopSpec],
+    prm: &RegretParams,
+) -> AppOutcome {
+    let arms = auto::arms();
+    let episodes = prm.episodes.max(2);
+    let window = episodes / 2;
+
+    // Every fixed arm over the same episode seeds.
+    let fixed: Vec<Vec<f64>> = arms
+        .iter()
+        .map(|arm| {
+            (0..episodes).map(|e| simulate_app(spec, p, loops, arm, prm.seed.wrapping_add(e as u64)).time).collect()
+        })
+        .collect();
+    let best = (0..arms.len())
+        .min_by(|&a, &b| mean(&fixed[a]).partial_cmp(&mean(&fixed[b])).unwrap())
+        .unwrap();
+
+    // One persistent selector across all episodes.
+    let cfg = AutoConfig { seed: prm.seed, min_plays: 1, ..AutoConfig::process_default() };
+    let mut auto_sim = AutoSim::new(cfg);
+    let auto_times: Vec<f64> =
+        (0..episodes).map(|e| auto_sim.run_app(spec, p, loops, prm.seed.wrapping_add(e as u64)).time).collect();
+
+    let mut hist = vec![0u64; arms.len()];
+    for &a in &auto_sim.chosen {
+        hist[a] += 1;
+    }
+    let best_fixed_post_mean = mean(&fixed[best][window..]);
+    let auto_post_mean = mean(&auto_times[window..]);
+    let ratio = if best_fixed_post_mean > 0.0 { auto_post_mean / best_fixed_post_mean } else { 1.0 };
+    AppOutcome {
+        app: name.to_string(),
+        machine,
+        threads: p,
+        best_arm: arms[best].name(),
+        best_fixed_post_mean,
+        auto_post_mean,
+        ratio,
+        converged: ratio <= CONVERGENCE_BOUND,
+        regret_curve: auto_times.iter().zip(&fixed[best]).map(|(a, f)| if *f > 0.0 { a / f } else { 1.0 }).collect(),
+        arm_histogram: hist,
+    }
+}
+
+/// Run the full suite and write `BENCH_auto.json`; the returned
+/// transcript summarizes one line per (app, machine).
+pub fn run(prm: &RegretParams) -> String {
+    let arms = auto::arms();
+    let episodes = prm.episodes.max(2);
+    let window = episodes / 2;
+    let mut outcomes = Vec::new();
+    for name in REGRET_APPS {
+        let app = make_app(name, prm.seed).unwrap_or_else(|| panic!("unknown app {name}"));
+        let loops = app.sim_loops();
+        for (mname, spec, p) in machines() {
+            outcomes.push(measure(name, mname, &spec, p, &loops, prm));
+        }
+    }
+    let converged_all = outcomes.iter().all(|o| o.converged);
+
+    let mut out = Json::obj();
+    out.set("bench", Json::str("policy_auto_regret"));
+    out.set("seed", Json::num(prm.seed as f64));
+    out.set("episodes", Json::num(episodes as f64));
+    out.set("explore_window", Json::num(window as f64));
+    out.set("bound", Json::num(CONVERGENCE_BOUND));
+    out.set("arms", Json::arr(arms.iter().map(|a| Json::str(&a.name()))));
+    let mut rows = Vec::new();
+    for o in &outcomes {
+        let mut e = Json::obj();
+        e.set("app", Json::str(&o.app));
+        e.set("machine", Json::str(o.machine));
+        e.set("threads", Json::num(o.threads as f64));
+        e.set("best_arm", Json::str(&o.best_arm));
+        e.set("best_fixed_post_mean", Json::num(o.best_fixed_post_mean));
+        e.set("auto_post_mean", Json::num(o.auto_post_mean));
+        e.set("ratio", Json::num(o.ratio));
+        e.set("converged", Json::Bool(o.converged));
+        e.set("regret_curve", Json::nums(&o.regret_curve));
+        e.set("arm_histogram", Json::nums(&o.arm_histogram.iter().map(|&c| c as f64).collect::<Vec<_>>()));
+        rows.push(e);
+    }
+    out.set("apps", Json::arr(rows));
+    out.set("converged_all", Json::Bool(converged_all));
+    if let Err(e) = out.save(&prm.out) {
+        eprintln!("regret: could not write {}: {e}", prm.out);
+    }
+
+    let mut s = String::new();
+    s.push_str(&format!(
+        "policy_auto_regret: {} episodes (window {}), bound {:.2}, arms [{}]\n",
+        episodes,
+        window,
+        CONVERGENCE_BOUND,
+        arms.iter().map(|a| a.name()).collect::<Vec<_>>().join(", ")
+    ));
+    for o in &outcomes {
+        s.push_str(&format!(
+            "  {:<16} {:<12} p={:<3} best_fixed={:<14} ratio={:.3} {}\n",
+            o.app,
+            o.machine,
+            o.threads,
+            o.best_arm,
+            o.ratio,
+            if o.converged { "converged" } else { "NOT CONVERGED" }
+        ));
+    }
+    s.push_str(&format!("  converged_all: {converged_all} -> {}\n", prm.out));
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn auto_converges_on_one_cell() {
+        // One (app, machine) cell of the full suite as a fast test;
+        // the CI `policy-auto` job runs `ich regret` over everything.
+        let app = make_app("synth-exp-dec", 7).unwrap();
+        let loops = app.sim_loops();
+        let prm = RegretParams { episodes: 30, seed: 7, out: String::new() };
+        let (mname, spec, p) = machines().remove(0);
+        let o = measure("synth-exp-dec", mname, &spec, p, &loops, &prm);
+        assert_eq!(o.regret_curve.len(), 30);
+        assert_eq!(o_total(&o), loops.len() * 30, "one histogram count per loop dispatch");
+        assert!(o.converged, "ratio {:.3} exceeds {CONVERGENCE_BOUND}", o.ratio);
+    }
+
+    fn o_total(o: &AppOutcome) -> usize {
+        o.arm_histogram.iter().sum::<u64>() as usize
+    }
+
+    #[test]
+    fn histogram_counts_every_dispatch() {
+        let app = make_app("kmeans", 3).unwrap();
+        let loops = app.sim_loops();
+        let prm = RegretParams { episodes: 6, seed: 3, out: String::new() };
+        let (mname, spec, p) = machines().remove(1);
+        let o = measure("kmeans", mname, &spec, p, &loops, &prm);
+        assert_eq!(o_total(&o), loops.len() * 6, "one histogram count per loop dispatch");
+    }
+}

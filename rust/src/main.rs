@@ -10,6 +10,10 @@
 //!   summary  §6.1 "insight" table (iCh rank + gap per app)
 //!   ablation iCh design-choice ablations
 //!   sweep    --app <name>: every family × Table-2 params × threads
+//!   regret   --episodes <e> --seed <s> --out <path>: Policy::Auto
+//!            regret harness — repeated episodes per (app, machine),
+//!            post-exploration mean vs the best fixed engine, written
+//!            to BENCH_auto.json
 //!   overlap  --threads <p> --jobs <k> --n <iters>: serve k independent
 //!            loops sequentially vs overlapped (async epochs) on the
 //!            persistent pool and report both wall times
@@ -87,6 +91,21 @@ fn main() {
             }
         }
     }
+    // `--policy <spec>` sets the process-wide scheduling-policy
+    // default (`ICH_POLICY` is the env equivalent). `--policy auto`
+    // turns on the online per-loop-site selector; `ICH_AUTO_SEED` /
+    // `ICH_AUTO_EXPLORE` tune its exploration hash and floor.
+    if let Some(s) = args.get("policy") {
+        match Policy::parse(s) {
+            Some(p) => {
+                let _ = Policy::set_process_default(p);
+            }
+            None => {
+                eprintln!("unknown policy '{s}' (try: auto | ich,0.33 | stealing,64 | guided,1 | static | ...)");
+                std::process::exit(2);
+            }
+        }
+    }
     let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
     match cmd {
         "run" => cmd_run(&args),
@@ -103,6 +122,7 @@ fn main() {
         "summary" => println!("{}", harness::run_named("summary").unwrap()),
         "ablation" | "ablations" => println!("{}", harness::run_named("ablations").unwrap()),
         "sweep" => cmd_sweep(&args),
+        "regret" => cmd_regret(&args),
         "overlap" => cmd_overlap(&args),
         "serve" => cmd_serve(&args),
         "analyze" => {
@@ -126,7 +146,7 @@ fn main() {
         "list" => cmd_list(),
         "version" => println!("ich 0.1.0 (paper: Booth & Lane 2020, iCh)"),
         _ => {
-            println!("usage: ich <run|figure|table|summary|ablation|sweep|overlap|serve|analyze|lint-atomics|list|version> [flags]");
+            println!("usage: ich <run|figure|table|summary|ablation|sweep|regret|overlap|serve|analyze|lint-atomics|list|version> [flags]");
             println!("  ich analyze  static concurrency-contract gate over src/sched, src/check,");
             println!("        src/coordinator: lock-order cycles, blocking in claim loops, the");
             println!("        claim-loop contract (preempt_point + note_assist + chunk accounting),");
@@ -150,6 +170,16 @@ fn main() {
             println!("        ICH_TOPOLOGY='2x14@10,21;21,10' ich run --app spmv --sched ich --real --steal ranked");
             println!("  --steal uniform|topo|ranked  steal-victim policy (default: topo; env ICH_STEAL);");
             println!("        ranked draws victims with probability decaying per NUMA-distance tier");
+            println!("  --policy <spec>  process-wide scheduling-policy default (env ICH_POLICY);");
+            println!("        `auto` picks an engine per loop site online: a seeded deterministic");
+            println!("        bandit keyed on (callsite, workload-feature bucket), e.g.");
+            println!("        ich run --app spmv --policy auto --real");
+            println!("  ICH_AUTO_SEED  exploration-hash seed for --policy auto (deterministic:");
+            println!("        same seed + same observations => same choices)");
+            println!("  ICH_AUTO_EXPLORE  exploration floor for --policy auto: one forced");
+            println!("        exploration pick every N choices (default 32)");
+            println!("  ich regret  Policy::Auto regret harness: --episodes (default 40), --seed,");
+            println!("        --out (default results/BENCH_auto.json); converged_all must be true");
             println!("  --class interactive|batch|background  dispatch class (default: batch; env ICH_CLASS)");
             println!("  --assist on|off  work assisting (default: off; env ICH_ASSIST): idle pool workers");
             println!("        join in-flight loops and blocking submitters run chunks of their own epoch");
@@ -164,7 +194,10 @@ fn main() {
 
 fn cmd_run(args: &Args) {
     let app_name = args.get_or("app", "synth-exp-dec");
-    let sched = args.get_or("sched", "ich,0.33");
+    // No --sched: honor the process default (--policy / ICH_POLICY),
+    // which is `ich` with the paper's parameters when unset.
+    let default_sched = Policy::process_default().name();
+    let sched = args.get_or("sched", &default_sched);
     let threads = args.get_usize("threads", 28);
     let seed = args.get_u64("seed", harness::figures::SEED);
     let Some(app) = apps::make_app(app_name, seed) else {
@@ -232,6 +265,20 @@ fn cmd_sweep(args: &Args) {
         }
     }
     println!("# sweep: {} (simulated)\n{}", app.name(), t.render());
+}
+
+/// Regret harness for `Policy::Auto`: repeated episodes of each
+/// evaluation app on each simulated machine model, checking that the
+/// online selector's post-exploration mean lands within the
+/// convergence bound of the best fixed engine's. Writes
+/// `BENCH_auto.json` (the CI `policy-auto` job greps it).
+fn cmd_regret(args: &Args) {
+    let prm = harness::regret::RegretParams {
+        episodes: args.get_usize("episodes", 40),
+        seed: args.get_u64("seed", 7),
+        out: args.get_or("out", "results/BENCH_auto.json").to_string(),
+    };
+    print!("{}", harness::regret::run(&prm));
 }
 
 /// Serve `--jobs` independent copies of a skewed synthetic loop, once

@@ -1,0 +1,391 @@
+//! The engine registry — loop-scheduling engines as first-class,
+//! uniformly-invokable values.
+//!
+//! Before this module, `run_policy` dispatched through a hard-coded
+//! `match`: adding an engine meant editing the coordinator, and
+//! nothing could *enumerate* the engines — which the `Policy::Auto`
+//! selector (`sched::auto`) needs, since its arms are literally
+//! "every engine we could have chosen instead". Here each engine is a
+//! unit struct implementing [`Engine`]; [`REGISTRY`] holds one
+//! instance per policy family, [`for_family`] looks one up by the
+//! same family string `Policy::family()` reports, and [`run_fixed`]
+//! is the single dispatch point every entry path
+//! (`parallel_for`, `parallel_for_async*`, and the selector's chosen
+//! arm) funnels through.
+//!
+//! The contract every engine honors identically:
+//!
+//! - `body` is called with disjoint ranges covering `0..req.n`
+//!   exactly once, and has returned for all of them when `run`
+//!   returns;
+//! - metrics land in the caller's [`MetricsSink`] (the uniform
+//!   post-run `RunMetrics` hand-back happens in the coordinator via
+//!   `sink.collect`, identically for every engine);
+//! - engines take scheduling inputs only from [`LoopReq`] — the
+//!   executor never smuggles policy state.
+//!
+//! Engines stay registered by *family* (e.g. `dynamic`), with the
+//! tunables still carried by the [`Policy`] value (e.g. the chunk
+//! size), so the registry is closed over families while every
+//! parameterization remains expressible.
+
+use super::metrics::MetricsSink;
+use super::runtime::Executor;
+use super::topology::VictimPolicy;
+use super::{binlpt, central, related, ws, Policy};
+use std::ops::Range;
+
+/// Everything an engine may consult about the submitted loop.
+#[derive(Clone, Copy, Debug)]
+pub struct LoopReq<'a> {
+    /// Trip count; `body` covers `0..n` exactly once.
+    pub n: usize,
+    /// Worker threads the executor will run.
+    pub p: usize,
+    /// Optional per-iteration weight estimates (`len == n` when
+    /// present; only workload-aware engines consult them).
+    pub weights: Option<&'a [f64]>,
+    /// Seed for randomized decisions (victim selection).
+    pub seed: u64,
+    /// Steal-victim policy of the work-stealing engines.
+    pub victim: VictimPolicy,
+}
+
+/// One loop-scheduling engine, invokable uniformly.
+pub trait Engine: Sync {
+    /// Family string, identical to [`Policy::family`] of the policies
+    /// this engine executes.
+    fn family(&self) -> &'static str;
+
+    /// Run the loop to completion on `exec`. `policy` carries the
+    /// tunables and must belong to this engine's family.
+    fn run(
+        &self,
+        policy: &Policy,
+        req: &LoopReq<'_>,
+        exec: &dyn Executor,
+        body: &(dyn Fn(Range<usize>) + Sync),
+        sink: &MetricsSink,
+    );
+}
+
+#[cold]
+fn wrong_family(engine: &'static str, policy: &Policy) -> ! {
+    panic!("engine `{engine}` invoked with policy `{}` of family `{}`", policy.name(), policy.family());
+}
+
+/// Even block partition, no runtime scheduling.
+pub struct StaticEngine;
+impl Engine for StaticEngine {
+    fn family(&self) -> &'static str {
+        "static"
+    }
+    fn run(
+        &self,
+        policy: &Policy,
+        req: &LoopReq<'_>,
+        exec: &dyn Executor,
+        body: &(dyn Fn(Range<usize>) + Sync),
+        sink: &MetricsSink,
+    ) {
+        match policy {
+            Policy::Static => central::run_static(req.n, req.p, exec, body, sink),
+            other => wrong_family(self.family(), other),
+        }
+    }
+}
+
+/// OpenMP `schedule(dynamic, chunk)` on the central queue.
+pub struct DynamicEngine;
+impl Engine for DynamicEngine {
+    fn family(&self) -> &'static str {
+        "dynamic"
+    }
+    fn run(
+        &self,
+        policy: &Policy,
+        req: &LoopReq<'_>,
+        exec: &dyn Executor,
+        body: &(dyn Fn(Range<usize>) + Sync),
+        sink: &MetricsSink,
+    ) {
+        match policy {
+            Policy::Dynamic { chunk } => central::run_dynamic(req.n, req.p, exec, *chunk, body, sink),
+            other => wrong_family(self.family(), other),
+        }
+    }
+}
+
+/// OpenMP `schedule(guided, chunk)` on the central queue.
+pub struct GuidedEngine;
+impl Engine for GuidedEngine {
+    fn family(&self) -> &'static str {
+        "guided"
+    }
+    fn run(
+        &self,
+        policy: &Policy,
+        req: &LoopReq<'_>,
+        exec: &dyn Executor,
+        body: &(dyn Fn(Range<usize>) + Sync),
+        sink: &MetricsSink,
+    ) {
+        match policy {
+            Policy::Guided { chunk } => central::run_guided(req.n, req.p, exec, *chunk, body, sink),
+            other => wrong_family(self.family(), other),
+        }
+    }
+}
+
+/// OpenMP `taskloop num_tasks(t)`.
+pub struct TaskloopEngine;
+impl Engine for TaskloopEngine {
+    fn family(&self) -> &'static str {
+        "taskloop"
+    }
+    fn run(
+        &self,
+        policy: &Policy,
+        req: &LoopReq<'_>,
+        exec: &dyn Executor,
+        body: &(dyn Fn(Range<usize>) + Sync),
+        sink: &MetricsSink,
+    ) {
+        match policy {
+            Policy::Taskloop { num_tasks } => central::run_taskloop(req.n, req.p, exec, *num_tasks, body, sink),
+            other => wrong_family(self.family(), other),
+        }
+    }
+}
+
+/// Factoring Self-Scheduling with batch factor `alpha`.
+pub struct FactoringEngine;
+impl Engine for FactoringEngine {
+    fn family(&self) -> &'static str {
+        "factoring"
+    }
+    fn run(
+        &self,
+        policy: &Policy,
+        req: &LoopReq<'_>,
+        exec: &dyn Executor,
+        body: &(dyn Fn(Range<usize>) + Sync),
+        sink: &MetricsSink,
+    ) {
+        match policy {
+            Policy::Factoring { alpha } => central::run_factoring(req.n, req.p, exec, *alpha, body, sink),
+            other => wrong_family(self.family(), other),
+        }
+    }
+}
+
+/// BinLPT workload-aware partitioning (uniform-weight fallback when
+/// the caller supplied no estimates).
+pub struct BinlptEngine;
+impl Engine for BinlptEngine {
+    fn family(&self) -> &'static str {
+        "binlpt"
+    }
+    fn run(
+        &self,
+        policy: &Policy,
+        req: &LoopReq<'_>,
+        exec: &dyn Executor,
+        body: &(dyn Fn(Range<usize>) + Sync),
+        sink: &MetricsSink,
+    ) {
+        match policy {
+            Policy::Binlpt { max_chunks } => {
+                let uniform;
+                let w = match req.weights {
+                    Some(w) => {
+                        assert_eq!(w.len(), req.n, "weights length must equal n");
+                        w
+                    }
+                    None => {
+                        // Workload-unaware fallback: uniform estimates.
+                        uniform = vec![1.0; req.n];
+                        &uniform
+                    }
+                };
+                binlpt::run_binlpt(w, req.p, exec, *max_chunks, body, sink)
+            }
+            other => wrong_family(self.family(), other),
+        }
+    }
+}
+
+/// Fixed-chunk THE work-stealing (the paper's base algorithm).
+pub struct StealingEngine;
+impl Engine for StealingEngine {
+    fn family(&self) -> &'static str {
+        "stealing"
+    }
+    fn run(
+        &self,
+        policy: &Policy,
+        req: &LoopReq<'_>,
+        exec: &dyn Executor,
+        body: &(dyn Fn(Range<usize>) + Sync),
+        sink: &MetricsSink,
+    ) {
+        match policy {
+            Policy::Stealing { chunk } => {
+                ws::run_stealing(req.n, req.p, exec, *chunk, req.seed, req.victim, body, sink)
+            }
+            other => wrong_family(self.family(), other),
+        }
+    }
+}
+
+/// iCh — the paper's adaptive-chunk work-stealing.
+pub struct IchEngine;
+impl Engine for IchEngine {
+    fn family(&self) -> &'static str {
+        "ich"
+    }
+    fn run(
+        &self,
+        policy: &Policy,
+        req: &LoopReq<'_>,
+        exec: &dyn Executor,
+        body: &(dyn Fn(Range<usize>) + Sync),
+        sink: &MetricsSink,
+    ) {
+        match policy {
+            Policy::Ich(prm) => ws::run_ich(req.n, req.p, exec, *prm, req.seed, req.victim, body, sink),
+            other => wrong_family(self.family(), other),
+        }
+    }
+}
+
+/// Adaptive Weighted Factoring (related work).
+pub struct AwfEngine;
+impl Engine for AwfEngine {
+    fn family(&self) -> &'static str {
+        "awf"
+    }
+    fn run(
+        &self,
+        policy: &Policy,
+        req: &LoopReq<'_>,
+        exec: &dyn Executor,
+        body: &(dyn Fn(Range<usize>) + Sync),
+        sink: &MetricsSink,
+    ) {
+        match policy {
+            Policy::Awf => related::run_awf(req.n, req.p, exec, body, sink),
+            other => wrong_family(self.family(), other),
+        }
+    }
+}
+
+/// History-aware static partition (HSS-lite, related work).
+pub struct HssEngine;
+impl Engine for HssEngine {
+    fn family(&self) -> &'static str {
+        "hss"
+    }
+    fn run(
+        &self,
+        policy: &Policy,
+        req: &LoopReq<'_>,
+        exec: &dyn Executor,
+        body: &(dyn Fn(Range<usize>) + Sync),
+        sink: &MetricsSink,
+    ) {
+        match policy {
+            Policy::Hss => related::run_hss(req.n, req.p, exec, req.weights, body, sink),
+            other => wrong_family(self.family(), other),
+        }
+    }
+}
+
+/// Every registered engine, one per policy family. `Policy::Auto` is
+/// deliberately absent: it is a *selector over* these engines, not an
+/// engine (the coordinator resolves it to an arm before reaching
+/// [`run_fixed`]).
+pub static REGISTRY: [&(dyn Engine); 10] = [
+    &StaticEngine,
+    &DynamicEngine,
+    &GuidedEngine,
+    &TaskloopEngine,
+    &FactoringEngine,
+    &BinlptEngine,
+    &StealingEngine,
+    &IchEngine,
+    &AwfEngine,
+    &HssEngine,
+];
+
+/// Look an engine up by family string.
+pub fn for_family(family: &str) -> Option<&'static dyn Engine> {
+    REGISTRY.iter().copied().find(|e| e.family() == family)
+}
+
+/// Dispatch one loop to the engine of `policy`'s family — the single
+/// point every entry path funnels through.
+pub fn run_fixed(
+    policy: &Policy,
+    req: &LoopReq<'_>,
+    exec: &dyn Executor,
+    body: &(dyn Fn(Range<usize>) + Sync),
+    sink: &MetricsSink,
+) {
+    let engine = for_family(policy.family())
+        .unwrap_or_else(|| panic!("no engine registered for policy family `{}`", policy.family()));
+    engine.run(policy, req, exec, body, sink)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::InlineExec;
+
+    #[test]
+    fn registry_covers_every_fixed_family_once() {
+        let mut fams: Vec<&str> = REGISTRY.iter().map(|e| e.family()).collect();
+        fams.sort_unstable();
+        let mut dedup = fams.clone();
+        dedup.dedup();
+        assert_eq!(fams, dedup, "duplicate engine family");
+        for p in Policy::representatives() {
+            if matches!(p, Policy::Auto) {
+                assert!(for_family(p.family()).is_none(), "auto must not be a registered engine");
+            } else {
+                let e = for_family(p.family()).expect("every fixed policy family has an engine");
+                assert_eq!(e.family(), p.family());
+            }
+        }
+    }
+
+    #[test]
+    fn run_fixed_covers_exactly_once() {
+        use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+        let n = 257;
+        for p in Policy::representatives() {
+            if matches!(p, Policy::Auto) {
+                continue; // resolved by the coordinator, not the registry
+            }
+            let hits = AtomicU64::new(0);
+            let sink = MetricsSink::new(1);
+            let w: Vec<f64> = (0..n).map(|i| 1.0 + (i % 7) as f64).collect();
+            let req = LoopReq { n, p: 1, weights: Some(&w), seed: 42, victim: VictimPolicy::Uniform };
+            run_fixed(&p, &req, &InlineExec, &|r| {
+                for i in r {
+                    hits.fetch_add(i as u64 + 1, Relaxed); // order: [stat.relaxed] test counter
+                }
+            }, &sink);
+            let want = (1..=n as u64).sum::<u64>();
+            assert_eq!(hits.load(Relaxed), want, "policy {}", p.name()); // order: [stat.relaxed] test counter
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "invoked with policy")]
+    fn family_mismatch_panics() {
+        let sink = MetricsSink::new(1);
+        let req = LoopReq { n: 8, p: 1, weights: None, seed: 0, victim: VictimPolicy::Uniform };
+        StaticEngine.run(&Policy::Awf, &req, &InlineExec, &|_r| {}, &sink);
+    }
+}

@@ -31,6 +31,16 @@
 //!   from the declared cost in deterministic mode — not from an
 //!   estimate at pick time. With a small release window this bounds
 //!   the fairness error to `inflight_cap` jobs.
+//! - **Provisional charging (opt-in).** With `inflight_cap > 1` the
+//!   deferred rule lets one tenant win every pick of an open window
+//!   (its clock hasn't moved yet). [`FairShare::with_provisional_charging`]
+//!   charges the *declared* cost at pick time
+//!   ([`FairQueue::charge_at_pick`]) and reconciles against the
+//!   actual cost at completion ([`FairQueue::charge_reconcile`]), so
+//!   picks within one window already alternate by weight. The
+//!   (pick, reconcile) pair leaves vruntime exactly where one
+//!   deferred charge would — off (the default) is byte-identical to
+//!   the deferred-only scheduler.
 //!
 //! # Admission (token bucket + class-aware backpressure)
 //!
@@ -85,6 +95,13 @@ use super::{parallel_for_async_on, ExecMode, ForOpts, LatencyClass, Policy, RunM
 /// Fixed-point scale of one weight unit: a weight-`w` tenant's
 /// vruntime advances by `cost_ns * WEIGHT_UNIT / w` per charge.
 pub const WEIGHT_UNIT: u64 = 1024;
+
+/// Weighted vruntime advance for `cost_ns` executed at `weight`.
+/// Every charge path (deferred, pick-time provisional, reconcile)
+/// goes through this one expression so estimates cancel exactly.
+fn vdelta(cost_ns: u64, weight: u64) -> u128 {
+    cost_ns as u128 * WEIGHT_UNIT as u128 / weight.max(1) as u128
+}
 
 // ---------------------------------------------------------------------------
 // Token bucket (GCRA)
@@ -442,9 +459,38 @@ impl<T> FairQueue<T> {
     /// monotone activation floor.
     pub fn charge(&mut self, tenant: usize, cost_ns: u64) {
         let st = &mut self.tenants[tenant];
-        st.vruntime = st.vruntime.saturating_add(cost_ns as u128 * WEIGHT_UNIT as u128 / st.spec.weight.max(1) as u128);
+        st.vruntime = st.vruntime.saturating_add(vdelta(cost_ns, st.spec.weight));
         st.stats.completed += 1;
         st.stats.work_ns = st.stats.work_ns.saturating_add(cost_ns);
+        self.advance_floor(tenant);
+    }
+
+    /// Provisionally charge an *estimated* `est_ns` at pick time, so
+    /// the next pick within an open release window already sees this
+    /// tenant's clock advanced. Pair with
+    /// [`FairQueue::charge_reconcile`] at completion; the pair nets
+    /// out to exactly one [`FairQueue::charge`] of the actual cost.
+    /// No completion is counted and the floor does not move here.
+    pub fn charge_at_pick(&mut self, tenant: usize, est_ns: u64) {
+        let st = &mut self.tenants[tenant];
+        st.vruntime = st.vruntime.saturating_add(vdelta(est_ns, st.spec.weight));
+    }
+
+    /// Replace a pick-time provisional charge of `est_ns` with the
+    /// actual `actual_ns`: back out the estimate, charge the actual
+    /// cost, and count the completion.
+    pub fn charge_reconcile(&mut self, tenant: usize, est_ns: u64, actual_ns: u64) {
+        let st = &mut self.tenants[tenant];
+        st.vruntime =
+            st.vruntime.saturating_sub(vdelta(est_ns, st.spec.weight)).saturating_add(vdelta(actual_ns, st.spec.weight));
+        st.stats.completed += 1;
+        st.stats.work_ns = st.stats.work_ns.saturating_add(actual_ns);
+        self.advance_floor(tenant);
+    }
+
+    /// Advance the monotone activation floor after a completed charge
+    /// to `tenant` (see the new-tenant clamp in the module docs).
+    fn advance_floor(&mut self, tenant: usize) {
         let vrt = self.tenants[tenant].vruntime;
         let active_min = self.tenants.iter().filter(|t| !t.queue.is_empty()).map(|t| t.vruntime).min().unwrap_or(vrt);
         self.min_vrt = self.min_vrt.max(active_min);
@@ -545,6 +591,9 @@ struct Inflight {
     id: u64,
     tenant: usize,
     cost_ns: u64,
+    /// `Some(declared cost)` when a provisional charge was taken at
+    /// pick time and must be reconciled at completion.
+    est_ns: Option<u64>,
     join: Option<super::LoopJoin>,
 }
 
@@ -583,6 +632,9 @@ pub struct FairShare {
     /// `None` = virtual clock (deterministic); `Some` = real clock.
     real_anchor: Option<Instant>,
     charge_mode: ChargeMode,
+    /// Charge the declared cost at pick time and reconcile at
+    /// completion (see the module docs); default off.
+    provisional: bool,
 }
 
 impl FairShare {
@@ -622,6 +674,7 @@ impl FairShare {
             vnow: AtomicU64::new(0),
             real_anchor,
             charge_mode,
+            provisional: false,
         }
     }
 
@@ -629,6 +682,16 @@ impl FairShare {
     /// Larger windows overlap more loops but defer fairness charges.
     pub fn with_inflight(self, cap: usize) -> FairShare {
         self.inner.lock().unwrap().inflight_cap = cap.max(1);
+        self
+    }
+
+    /// Charge each job's declared cost to its tenant at pick time and
+    /// reconcile against the actual cost at completion, so picks
+    /// within one `inflight_cap > 1` window already alternate by
+    /// weight instead of all going to the lowest-vruntime tenant.
+    /// Off (the default) keeps charges fully deferred.
+    pub fn with_provisional_charging(mut self, on: bool) -> FairShare {
+        self.provisional = on;
         self
     }
 
@@ -697,7 +760,11 @@ impl FairShare {
                 ..Default::default()
             };
             let join = parallel_for_async_on(&self.rt, p.job.n, &p.job.policy, &opts, Arc::clone(&p.job.body));
-            g.inflight.push(Inflight { id: p.id, tenant: rel.tenant, cost_ns: p.job.cost_ns, join: Some(join) });
+            let est_ns = self.provisional.then_some(p.job.cost_ns);
+            if let Some(est) = est_ns {
+                g.q.charge_at_pick(rel.tenant, est);
+            }
+            g.inflight.push(Inflight { id: p.id, tenant: rel.tenant, cost_ns: p.job.cost_ns, est_ns, join: Some(join) });
         }
     }
 
@@ -708,7 +775,10 @@ impl FairShare {
             ChargeMode::Measured => ((metrics.elapsed_s - metrics.queue_wait_s).max(0.0) * 1e9) as u64,
         }
         .max(1);
-        g.q.charge(fin.tenant, cost);
+        match fin.est_ns {
+            Some(est) => g.q.charge_reconcile(fin.tenant, est, cost),
+            None => g.q.charge(fin.tenant, cost),
+        }
         if self.is_virtual() {
             // Serial-service model: completing a job advances the
             // virtual clock by its declared cost.

@@ -1,0 +1,231 @@
+//! Workload-feature extraction for the online policy selector
+//! (`sched::auto`).
+//!
+//! `RunMetrics` already measures everything the selection papers
+//! (PAPERS.md: 2507.20312, 1909.03947) use to predict the best
+//! schedule — imbalance, steal/assist traffic, queue wait, problem
+//! shape — but until now those numbers fed nothing. This module
+//! distills them into two small, cheap artifacts:
+//!
+//! - a **loop-site identity key** ([`SiteKey`]): the submitting
+//!   callsite hashed together with a log₂ bucket of the trip count,
+//!   so "the SpMV row loop at 8k rows" is one stable learning unit
+//!   across calls while "the same loop at 8M rows" learns separately;
+//! - a **feature bucket** ([`FeatureVec::bucket`]): a coarse
+//!   quantization of the previous run's behavior at the site
+//!   (imbalance regime, steal pressure, remote-steal share, grain),
+//!   which refines the bandit key — the selector keeps independent
+//!   arm statistics per (site, bucket), because e.g. a loop that
+//!   turns imbalanced on skewed inputs genuinely has a different
+//!   best engine than the same loop on uniform inputs.
+//!
+//! Everything here is pure arithmetic shared bit-for-bit by the
+//! threaded runtime and the simulator's `AutoSim`, so the two
+//! selectors cannot drift (`tests/auto_selector.rs` differentials).
+
+use super::metrics::RunMetrics;
+use crate::sim::SimResult;
+
+/// Stable identity of one loop site: callsite ⊕ trip-count bucket,
+/// mixed so it is never 0 (0 is the selector table's empty-slot tag).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct SiteKey(pub u64);
+
+/// splitmix64 finalizer — the avalanche mix shared by every hash here.
+#[inline]
+pub fn mix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Hash a `#[track_caller]` location into a callsite id. File + line
+/// identify the loop in source; column disambiguates same-line calls.
+pub fn callsite_hash(loc: &std::panic::Location<'_>) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64; // FNV-1a offset basis
+    for b in loc.file().as_bytes() {
+        h = (h ^ *b as u64).wrapping_mul(0x1000_0000_01b3);
+    }
+    h = (h ^ loc.line() as u64).wrapping_mul(0x1000_0000_01b3);
+    h = (h ^ loc.column() as u64).wrapping_mul(0x1000_0000_01b3);
+    mix64(h)
+}
+
+/// log₂ bucket of the trip count: loops an order of magnitude apart
+/// learn separately, ±2× variations share statistics.
+#[inline]
+pub fn n_bucket(n: usize) -> u32 {
+    (usize::BITS - n.max(1).leading_zeros()) - 1
+}
+
+/// The selector's learning key for one (callsite, n) pair.
+pub fn site_key(callsite: u64, n: usize) -> SiteKey {
+    let k = mix64(callsite ^ (0x5157_u64 << 48) ^ n_bucket(n) as u64);
+    SiteKey(if k == 0 { 1 } else { k })
+}
+
+/// Cheap workload-feature vector distilled from one run's metrics.
+/// All fields are dimensionless ratios, so real-time and virtual-time
+/// runs produce comparable vectors.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct FeatureVec {
+    /// max/mean executed-iteration imbalance across threads (≥ 1.0).
+    pub imbalance: f64,
+    /// Successful steals per dispatched chunk (work-stealing traffic).
+    pub steal_frac: f64,
+    /// Remote share of successful steals (1 − local fraction).
+    pub remote_frac: f64,
+    /// Assisting-joiner share of executed chunks.
+    pub assist_frac: f64,
+    /// Queue wait as a share of total elapsed (dispatch pressure).
+    pub queue_wait_frac: f64,
+    /// log₂(n / p): the per-thread grain the engines amortize over.
+    pub log_grain: f64,
+}
+
+impl FeatureVec {
+    /// Extract from a completed run. `n`/`p` come from the request
+    /// (metrics report executed totals, which equal `n` on success).
+    pub fn extract(m: &RunMetrics, n: usize, p: usize) -> FeatureVec {
+        let chunks = m.total_chunks.max(1) as f64;
+        FeatureVec {
+            imbalance: m.imbalance(),
+            steal_frac: m.steals_ok as f64 / chunks,
+            remote_frac: if m.steals_ok == 0 { 0.0 } else { 1.0 - m.local_steal_fraction() },
+            assist_frac: m.assist_chunks as f64 / chunks,
+            queue_wait_frac: if m.elapsed_s <= 0.0 { 0.0 } else { (m.queue_wait_s / m.elapsed_s).clamp(0.0, 1.0) },
+            log_grain: ((n.max(1) as f64) / (p.max(1) as f64)).max(1.0).log2(),
+        }
+    }
+
+    /// Extract from a simulated loop — the same ratios over the
+    /// simulator's counters, so `AutoSim` buckets exactly like the
+    /// runtime would on equivalent behavior.
+    pub fn extract_sim(r: &SimResult, n: usize, p: usize) -> FeatureVec {
+        let total: u64 = r.iters_per_thread.iter().sum();
+        let max = r.iters_per_thread.iter().copied().max().unwrap_or(0);
+        let mean = total as f64 / p.max(1) as f64;
+        let chunks = r.chunks.max(1) as f64;
+        FeatureVec {
+            imbalance: if mean <= 0.0 { 1.0 } else { max as f64 / mean },
+            steal_frac: r.steals_ok as f64 / chunks,
+            remote_frac: if r.steals_ok == 0 { 0.0 } else { 1.0 - r.steals_local as f64 / r.steals_ok as f64 },
+            assist_frac: 0.0,
+            queue_wait_frac: 0.0,
+            log_grain: ((n.max(1) as f64) / (p.max(1) as f64)).max(1.0).log2(),
+        }
+    }
+
+    /// Quantize into a small discrete bucket id (< [`N_BUCKETS`]):
+    /// 2 bits of imbalance regime × steal-pressure bit × remote bit ×
+    /// fine-grain bit. Coarse on purpose — each bucket is a separate
+    /// bandit that must be fed by real runs, so the space has to stay
+    /// small enough to actually converge.
+    pub fn bucket(&self) -> u8 {
+        let imb = match self.imbalance {
+            x if x < 1.05 => 0u8, // balanced
+            x if x < 1.25 => 1,   // mild skew
+            x if x < 2.0 => 2,    // skewed
+            _ => 3,               // pathological
+        };
+        let stealing = u8::from(self.steal_frac > 0.05);
+        let remote = u8::from(self.remote_frac > 0.25);
+        let fine = u8::from(self.log_grain < 8.0);
+        (imb << 3) | (stealing << 2) | (remote << 1) | fine
+    }
+}
+
+/// Number of distinct feature buckets ([`FeatureVec::bucket`] < this).
+pub const N_BUCKETS: usize = 32;
+
+/// Bucket used before any observation exists at a site.
+pub const COLD_BUCKET: u8 = 0;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn n_buckets_are_log2() {
+        assert_eq!(n_bucket(1), 0);
+        assert_eq!(n_bucket(2), 1);
+        assert_eq!(n_bucket(3), 1);
+        assert_eq!(n_bucket(1024), 10);
+        assert_eq!(n_bucket(1025), 10);
+        assert_eq!(n_bucket(0), 0); // clamped, not underflowed
+    }
+
+    #[test]
+    fn site_key_stable_and_bucketed() {
+        let c = callsite_hash(std::panic::Location::caller());
+        assert_eq!(site_key(c, 1000), site_key(c, 1500)); // same 2^10 bucket
+        assert_ne!(site_key(c, 1000), site_key(c, 100_000));
+        assert_ne!(site_key(c, 1000).0, 0);
+        // Distinct callsites separate even at equal n.
+        assert_ne!(site_key(c, 64), site_key(mix64(c), 64));
+    }
+
+    #[test]
+    fn callsites_differ_by_line() {
+        let a = callsite_hash(std::panic::Location::caller());
+        let b = callsite_hash(std::panic::Location::caller());
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn extract_ratios() {
+        let m = RunMetrics {
+            threads: 4,
+            elapsed_s: 2.0,
+            queue_wait_s: 0.5,
+            total_chunks: 100,
+            total_iters: 4000,
+            steals_ok: 20,
+            steals_local: 15,
+            steals_remote: 5,
+            assist_chunks: 10,
+            iters_per_thread: vec![1500, 1000, 1000, 500],
+            ..Default::default()
+        };
+        let f = FeatureVec::extract(&m, 4000, 4);
+        assert!((f.imbalance - 1.5).abs() < 1e-12);
+        assert!((f.steal_frac - 0.2).abs() < 1e-12);
+        assert!((f.remote_frac - 0.25).abs() < 1e-12);
+        assert!((f.assist_frac - 0.1).abs() < 1e-12);
+        assert!((f.queue_wait_frac - 0.25).abs() < 1e-12);
+        assert!((f.log_grain - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bucket_bounds_and_regimes() {
+        let mut f = FeatureVec { imbalance: 1.0, log_grain: 12.0, ..Default::default() };
+        assert_eq!(f.bucket(), 0);
+        f.imbalance = 3.0;
+        f.steal_frac = 0.5;
+        f.remote_frac = 0.5;
+        f.log_grain = 4.0;
+        assert_eq!(f.bucket(), 0b11111);
+        assert!((f.bucket() as usize) < N_BUCKETS);
+        // Regime boundaries are half-open.
+        f.imbalance = 1.05;
+        assert_eq!(f.bucket() >> 3, 1);
+    }
+
+    #[test]
+    fn sim_extraction_matches_runtime_shape() {
+        let r = SimResult {
+            time: 10.0,
+            chunks: 50,
+            steals_ok: 10,
+            steals_local: 5,
+            steals_fail: 3,
+            iters_per_thread: vec![300, 100],
+        };
+        let f = FeatureVec::extract_sim(&r, 400, 2);
+        assert!((f.imbalance - 1.5).abs() < 1e-12);
+        assert!((f.steal_frac - 0.2).abs() < 1e-12);
+        assert!((f.remote_frac - 0.5).abs() < 1e-12);
+        assert_eq!(f.assist_frac, 0.0);
+    }
+}

@@ -60,6 +60,9 @@ pub struct MetricsSink {
     pub assist_chunks: AtomicU64,
     /// Iterations executed by assisting joiners.
     pub assist_iters: AtomicU64,
+    /// Arm the `Policy::Auto` selector resolved this run to, encoded
+    /// `index + 1` (0 = fixed-policy run, no selection happened).
+    pub auto_arm: AtomicU64,
 }
 
 impl MetricsSink {
@@ -75,7 +78,15 @@ impl MetricsSink {
             assists: AtomicU64::new(0),
             assist_chunks: AtomicU64::new(0),
             assist_iters: AtomicU64::new(0),
+            auto_arm: AtomicU64::new(0),
         }
+    }
+
+    /// Record which arm the `Policy::Auto` selector chose (called by
+    /// the coordinator before the engine runs).
+    #[inline]
+    pub fn set_auto_arm(&self, arm: usize) {
+        self.auto_arm.store(arm as u64 + 1, Relaxed); // order: [stat.relaxed] Relaxed stat counter; readers tolerate drift
     }
 
     /// Record one late joiner entering the loop (work assisting).
@@ -203,6 +214,10 @@ impl MetricsSink {
             dispatch_skips: 0,
             edf_tick_scale: 0.0,
             tenant: None,
+            auto_arm: match self.auto_arm.load(Relaxed) { // order: [stat.relaxed] Relaxed stat snapshot
+                0 => None,
+                a => Some((a - 1) as u32),
+            },
         }
     }
 }
@@ -256,6 +271,9 @@ pub struct RunMetrics {
     /// Tenant the run was submitted for (`sched::fair` front end or
     /// `ForOpts::with_tenant`; `None` = untenanted traffic).
     pub tenant: Option<u32>,
+    /// Index into `sched::auto::arms()` of the engine the
+    /// `Policy::Auto` selector ran (`None` = fixed-policy run).
+    pub auto_arm: Option<u32>,
 }
 
 impl RunMetrics {

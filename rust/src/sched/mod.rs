@@ -68,11 +68,14 @@
 //! win under saturating Background load.
 
 pub mod assist;
+pub mod auto;
 pub mod binlpt;
 pub mod central;
 pub mod deque;
 pub mod dispatch;
+pub mod engine;
 pub mod fair;
+pub mod features;
 pub mod metrics;
 pub mod policy;
 pub mod pool;
@@ -82,6 +85,7 @@ pub mod topology;
 pub mod ws;
 
 pub use dispatch::{DispatchQueue, LatencyClass, PopInfo, CLASSES, PROMOTE_K};
+pub use engine::{Engine, LoopReq};
 pub use fair::{
     Admission, ChargeMode, FairJob, FairQueue, FairShare, FairTenantStats, FairTicket, RejectReason, TenantSpec,
     TokenBucket, WEIGHT_UNIT,
@@ -117,6 +121,12 @@ pub enum Policy {
     Awf,
     /// History-aware static partition (HSS-lite, related work, §4).
     Hss,
+    /// Online per-loop-site engine selection (`sched::auto`): a
+    /// seeded deterministic bandit over [`auto::arms`] that learns
+    /// the best fixed engine per (callsite, trip-count bucket,
+    /// feature bucket) from observed run costs. Knobs:
+    /// `ICH_AUTO_SEED`, `ICH_AUTO_EXPLORE`.
+    Auto,
 }
 
 impl Policy {
@@ -133,6 +143,7 @@ impl Policy {
             Policy::Ich(p) => format!("ich,{}", p.eps),
             Policy::Awf => "awf".into(),
             Policy::Hss => "hss".into(),
+            Policy::Auto => "auto".into(),
         }
     }
 
@@ -149,6 +160,7 @@ impl Policy {
             Policy::Ich(_) => "ich",
             Policy::Awf => "awf",
             Policy::Hss => "hss",
+            Policy::Auto => "auto",
         }
     }
 
@@ -175,6 +187,7 @@ impl Policy {
             "ich" => Policy::Ich(IchParams::with_eps(num(arg, 0.33)?)),
             "awf" => Policy::Awf,
             "hss" => Policy::Hss,
+            "auto" => Policy::Auto,
             _ => return None,
         })
     }
@@ -199,8 +212,36 @@ impl Policy {
             Policy::Ich(IchParams::default()),
             Policy::Awf,
             Policy::Hss,
+            Policy::Auto,
         ]
     }
+
+    /// Process-wide default policy: CLI `--policy` / `ICH_POLICY`
+    /// env, else the paper's `ich,0.33`. Resolved once; embedders and
+    /// CLI paths that want "whatever the process was told to run"
+    /// read this instead of hard-coding a family.
+    pub fn process_default() -> Policy {
+        policy_default_cell()
+            .get_or_init(|| {
+                std::env::var("ICH_POLICY")
+                    .ok()
+                    .and_then(|s| Policy::parse(s.trim()))
+                    .unwrap_or(Policy::Ich(IchParams::default()))
+            })
+            .clone()
+    }
+
+    /// Install the process default before first use (the CLI's
+    /// `--policy` flag). First caller wins; returns whether this call
+    /// set it.
+    pub fn set_process_default(p: Policy) -> bool {
+        policy_default_cell().set(p).is_ok()
+    }
+}
+
+fn policy_default_cell() -> &'static std::sync::OnceLock<Policy> {
+    static DEFAULT: std::sync::OnceLock<Policy> = std::sync::OnceLock::new();
+    &DEFAULT
 }
 
 /// How `parallel_for` obtains its worker threads.
@@ -263,6 +304,14 @@ pub struct ForOpts<'a> {
     /// rides the epoch into [`DispatchInfo`] and [`RunMetrics`].
     /// `None` = untenanted traffic, byte-identical to before.
     pub tenant: Option<u32>,
+    /// Loop-site identity override for the [`Policy::Auto`] selector.
+    /// `None` (default) derives the site from the submitting callsite
+    /// (`#[track_caller]`) plus a log₂ trip-count bucket — right for
+    /// loops written in source. Embedders that funnel many distinct
+    /// loops through one shared submission point (a job queue, the
+    /// fair front end) can install stable per-loop ids here so the
+    /// selector learns them separately.
+    pub site: Option<u64>,
 }
 
 impl Default for ForOpts<'_> {
@@ -278,6 +327,7 @@ impl Default for ForOpts<'_> {
             deadline: None,
             assist: assist::process_default(),
             tenant: None,
+            site: None,
         }
     }
 }
@@ -327,6 +377,11 @@ impl<'a> ForOpts<'a> {
         self
     }
 
+    pub fn with_site(mut self, site: u64) -> Self {
+        self.site = Some(site);
+        self
+    }
+
     /// The [`SubmitOpts`] this run hands the pool. The submission
     /// origin is left to auto-detection (the submitting thread's
     /// pinned core, if any).
@@ -347,7 +402,7 @@ impl<'a> ForOpts<'a> {
 /// `scoped_run(1, true, …)` — no affinity changes. (A default-opts
 /// `threads == 1` run used to route through the scoped spawner and
 /// permanently pin the *calling* thread to core 0.)
-struct InlineExec;
+pub(crate) struct InlineExec;
 
 impl Executor for InlineExec {
     fn run(&self, p: usize, f: &(dyn Fn(usize) + Sync)) {
@@ -357,8 +412,12 @@ impl Executor for InlineExec {
     }
 }
 
-/// Dispatch one parallel region to its engine. Shared by the blocking
-/// and async entry points so the two cannot drift.
+/// Dispatch one parallel region through the engine registry
+/// (`sched::engine`). Shared by the blocking and async entry points
+/// so the two cannot drift. Fixed policies go straight to their
+/// engine; [`Policy::Auto`] asks the selector (`sched::auto`) for an
+/// arm, runs it, and feeds the observed cost and workload features
+/// back so the next dispatch at this loop site chooses better.
 #[allow(clippy::too_many_arguments)]
 fn run_policy(
     n: usize,
@@ -367,42 +426,46 @@ fn run_policy(
     weights: Option<&[f64]>,
     seed: u64,
     victim: VictimPolicy,
+    callsite: u64,
+    auto_tbl: &auto::AutoTable,
     exec: &dyn Executor,
     body: &(dyn Fn(Range<usize>) + Sync),
     sink: &MetricsSink,
 ) {
-    match policy {
-        Policy::Static => central::run_static(n, p, exec, body, sink),
-        Policy::Dynamic { chunk } => central::run_dynamic(n, p, exec, *chunk, body, sink),
-        Policy::Guided { chunk } => central::run_guided(n, p, exec, *chunk, body, sink),
-        Policy::Taskloop { num_tasks } => central::run_taskloop(n, p, exec, *num_tasks, body, sink),
-        Policy::Factoring { alpha } => central::run_factoring(n, p, exec, *alpha, body, sink),
-        Policy::Binlpt { max_chunks } => {
-            let uniform;
-            let w = match weights {
-                Some(w) => {
-                    assert_eq!(w.len(), n, "weights length must equal n");
-                    w
-                }
-                None => {
-                    // Workload-unaware fallback: uniform estimates.
-                    uniform = vec![1.0; n];
-                    &uniform
-                }
-            };
-            binlpt::run_binlpt(w, p, exec, *max_chunks, body, sink)
-        }
-        Policy::Stealing { chunk } => ws::run_stealing(n, p, exec, *chunk, seed, victim, body, sink),
-        Policy::Ich(prm) => ws::run_ich(n, p, exec, *prm, seed, victim, body, sink),
-        Policy::Awf => related::run_awf(n, p, exec, body, sink),
-        Policy::Hss => related::run_hss(n, p, exec, weights, body, sink),
+    let req = engine::LoopReq { n, p, weights, seed, victim };
+    if matches!(policy, Policy::Auto) {
+        let arms = auto::arms();
+        let cfg = auto::AutoConfig::process_default();
+        let cold = auto::cold_hint(arms, n, p, weights.is_some());
+        let site = features::site_key(callsite, n);
+        let choice = auto_tbl.choose(site, &cfg, arms.len(), cold);
+        sink.set_auto_arm(choice.arm);
+        let t0 = std::time::Instant::now();
+        engine::run_fixed(&arms[choice.arm], &req, exec, body, sink);
+        let elapsed = t0.elapsed();
+        // Per-iteration cost in ns — the argmin is scale-free, but
+        // per-iteration normalization keeps one site's statistics
+        // comparable across its ±2× trip-count bucket.
+        let per_iter = elapsed.as_secs_f64() * 1e9 / n.max(1) as f64;
+        auto_tbl.observe(&choice, auto::quantize(per_iter));
+        let feats = features::FeatureVec::extract(&sink.collect(elapsed), n, p);
+        auto_tbl.note_bucket(site, feats.bucket());
+        return;
     }
+    engine::run_fixed(policy, &req, exec, body, sink)
 }
 
 /// Schedule `n` iterations over the configured threads; `body`
 /// receives disjoint iteration ranges covering `0..n` exactly once.
 /// Returns timing + scheduling metrics.
+///
+/// `#[track_caller]`: the invoking source location identifies the
+/// loop site for the [`Policy::Auto`] selector (override with
+/// [`ForOpts::with_site`]).
+#[track_caller]
 pub fn parallel_for(n: usize, policy: &Policy, opts: &ForOpts, body: &(dyn Fn(Range<usize>) + Sync)) -> RunMetrics {
+    let loc = std::panic::Location::caller();
+    let callsite = opts.site.unwrap_or_else(|| features::callsite_hash(loc));
     let p = opts.threads.max(1);
     let sink = MetricsSink::new(p);
     // `start` is taken only once the executor exists, so the first
@@ -412,19 +475,23 @@ pub fn parallel_for(n: usize, policy: &Policy, opts: &ForOpts, body: &(dyn Fn(Ra
     let dispatch = if p == 1 {
         // p == 1 runs inline in every mode; don't spawn the global
         // pool — or touch the caller's affinity — for callers that
-        // never fan out.
+        // never fan out. Selector state lives in the process table
+        // (no pool exists to own one).
+        let tbl = auto::process_table();
         start = std::time::Instant::now();
-        run_policy(n, policy, p, opts.weights, opts.seed, opts.victim, &InlineExec, body, &sink);
+        run_policy(n, policy, p, opts.weights, opts.seed, opts.victim, callsite, tbl, &InlineExec, body, &sink);
         None
     } else if opts.mode == ExecMode::Spawn {
         let spawn = SpawnExec::new(opts.pin);
+        let tbl = auto::process_table();
         start = std::time::Instant::now();
-        run_policy(n, policy, p, opts.weights, opts.seed, opts.victim, &spawn, body, &sink);
+        run_policy(n, policy, p, opts.weights, opts.seed, opts.victim, callsite, tbl, &spawn, body, &sink);
         None
     } else {
-        let pool = Runtime::global().executor_with(opts.submit_opts());
+        let rt = Runtime::global();
+        let pool = rt.executor_with(opts.submit_opts());
         start = std::time::Instant::now();
-        run_policy(n, policy, p, opts.weights, opts.seed, opts.victim, &pool, body, &sink);
+        run_policy(n, policy, p, opts.weights, opts.seed, opts.victim, callsite, rt.auto_table(), &pool, body, &sink);
         pool.take_report()
     };
     let mut m = sink.collect(start.elapsed());
@@ -486,6 +553,7 @@ impl LoopJoin {
 /// The body must be shareable and `'static` (`Arc`) because the
 /// submitter's frame no longer bounds the epoch's lifetime; `weights`
 /// are copied out of `opts` for the same reason.
+#[track_caller]
 pub fn parallel_for_async(
     n: usize,
     policy: &Policy,
@@ -498,6 +566,7 @@ pub fn parallel_for_async(
 /// [`parallel_for_async`] against an explicit pool — embedders and
 /// tests can target private [`Runtime`]s. `opts.mode == Spawn` runs
 /// the whole loop on a detached per-call thread team instead.
+#[track_caller]
 pub fn parallel_for_async_on(
     rt: &Runtime,
     n: usize,
@@ -505,6 +574,8 @@ pub fn parallel_for_async_on(
     opts: &ForOpts,
     body: Arc<dyn Fn(Range<usize>) + Send + Sync>,
 ) -> LoopJoin {
+    let loc = std::panic::Location::caller();
+    let callsite = opts.site.unwrap_or_else(|| features::callsite_hash(loc));
     let p = opts.threads.max(1);
     let sink = Arc::new(MetricsSink::new(p));
     let policy = policy.clone();
@@ -512,10 +583,17 @@ pub fn parallel_for_async_on(
     let seed = opts.seed;
     let victim = opts.victim;
     let sink2 = Arc::clone(&sink);
+    // The driver outlives this frame, so it carries a shared handle
+    // to the selector table of the pool it will run on (detached
+    // Spawn teams learn into the process table).
+    let auto_tbl: Arc<auto::AutoTable> = match opts.mode {
+        ExecMode::Pool => rt.auto_table_shared(),
+        ExecMode::Spawn => auto::process_table_shared(),
+    };
     let start = std::time::Instant::now();
     let driver: Box<dyn FnOnce(&dyn Executor) + Send> = Box::new(move |exec: &dyn Executor| {
         let b = |r: Range<usize>| body(r);
-        run_policy(n, &policy, p, weights.as_deref(), seed, victim, exec, &b, &sink2);
+        run_policy(n, &policy, p, weights.as_deref(), seed, victim, callsite, &auto_tbl, exec, &b, &sink2);
     });
     let handle = match opts.mode {
         ExecMode::Pool => rt.submit_driver_with(p, driver, opts.submit_opts()),
@@ -527,6 +605,7 @@ pub fn parallel_for_async_on(
 }
 
 /// Convenience: per-iteration body.
+#[track_caller]
 pub fn parallel_for_each(n: usize, policy: &Policy, opts: &ForOpts, f: &(dyn Fn(usize) + Sync)) -> RunMetrics {
     parallel_for(n, policy, opts, &|r: Range<usize>| {
         for i in r {
@@ -699,8 +778,9 @@ mod tests {
         let mut uniq = fams.clone();
         uniq.sort_unstable();
         uniq.dedup();
-        assert_eq!(fams.len(), 10);
-        assert_eq!(uniq.len(), 10, "duplicate family in representatives: {fams:?}");
+        assert_eq!(fams.len(), 11);
+        assert_eq!(uniq.len(), 11, "duplicate family in representatives: {fams:?}");
+        assert!(fams.contains(&"auto"));
     }
 
     #[test]

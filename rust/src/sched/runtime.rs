@@ -211,6 +211,7 @@ use std::thread::{self, Thread};
 use std::time::Instant;
 
 use super::assist::{self, ActivityRecord, AssistBoard, Assistable};
+use super::auto;
 use super::dispatch::{mask_has_higher, DispatchQueue, LatencyClass, PopInfo};
 use super::pool::{num_cpus, pin_to_cpu, pinned_core, scoped_run, scoped_run_pin_workers};
 use super::topology::{self, Topology};
@@ -1204,6 +1205,11 @@ pub struct Runtime {
     /// which case its own `pinned_core` thread-local (what the
     /// engines consult) stays `None`.
     cores: Vec<Option<usize>>,
+    /// `Policy::Auto` selector statistics, persisted across every
+    /// loop dispatched on this pool (`sched::auto`). Per-runtime so
+    /// private test pools learn in isolation; runs that never touch a
+    /// pool use `auto::process_table` instead.
+    auto: Arc<auto::AutoTable>,
 }
 
 impl Runtime {
@@ -1248,7 +1254,7 @@ impl Runtime {
             ws.push(Worker { thread, join: Some(join) });
         }
         let _ = shared.handles.set(ws.iter().map(|w| w.thread.clone()).collect());
-        Runtime { shared, workers: ws, cores }
+        Runtime { shared, workers: ws, cores, auto: Arc::new(auto::AutoTable::new()) }
     }
 
     /// The process-wide pool: `num_cpus − 1` workers (the submitter is
@@ -1261,6 +1267,17 @@ impl Runtime {
     /// Pool size (excluding the submitting thread).
     pub fn workers(&self) -> usize {
         self.workers.len()
+    }
+
+    /// This pool's `Policy::Auto` selector table.
+    pub fn auto_table(&self) -> &auto::AutoTable {
+        &self.auto
+    }
+
+    /// Shared handle to the selector table for drivers that outlive
+    /// the caller's frame (`parallel_for_async*`).
+    pub fn auto_table_shared(&self) -> Arc<auto::AutoTable> {
+        Arc::clone(&self.auto)
     }
 
     /// Spawn-time core pinning of each pool worker (`None` =

@@ -16,7 +16,7 @@ pub use engine::{Acquire, LoopSpec, SimCtx, SimResult, SimSched};
 pub use machine::MachineSpec;
 pub use policies::{
     make_assist_sim_policy, make_sim_policy, sim_dispatch_order, sim_dispatch_order_from, sim_fair_order, AssistSim,
-    SimArrival, SimFairArrival, SimFairOutcome, SimTenantSpec,
+    AutoSim, SimArrival, SimFairArrival, SimFairOutcome, SimTenantSpec,
 };
 
 use crate::sched::Policy;
@@ -31,6 +31,14 @@ pub fn simulate_app(
     policy: &Policy,
     seed: u64,
 ) -> SimResult {
+    if matches!(policy, Policy::Auto) {
+        // Selector state persists across the app's loops (a repeated
+        // inner loop converges within one app run). For learning that
+        // persists across *episodes* — the regret harness — hold an
+        // [`AutoSim`] and call `run_app` on it repeatedly.
+        let mut auto_sim = AutoSim::new(crate::sched::auto::AutoConfig::default());
+        return auto_sim.run_app(spec, p, loops, seed);
+    }
     let mut total = SimResult::default();
     for (li, ls) in loops.iter().enumerate() {
         let mut pol = make_sim_policy(policy, &ls.weights, p);

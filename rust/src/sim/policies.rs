@@ -3,16 +3,25 @@
 //! algorithm as the threaded runtime — only the execution substrate
 //! (virtual clock + cost model vs. real atomics) differs.
 
-use super::engine::{Acquire, SimCtx, SimSched};
+use super::engine::{simulate_loop, Acquire, LoopSpec, SimCtx, SimResult, SimSched};
+use super::machine::MachineSpec;
 use crate::sched::policy::{self, IchState};
 use crate::sched::topology::{self, VictimPolicy, VictimSelector};
 use crate::sched::ws::{IchParams, StealMerge};
-use crate::sched::Policy;
+use crate::sched::{auto, features, Policy};
 
 /// Build the sim-side policy object for one loop.
 pub fn make_sim_policy(policy: &Policy, weights: &[f64], p: usize) -> Box<dyn SimSched> {
     let n = weights.len();
     match policy {
+        // One-shot fallback: a single fresh loop has no history to
+        // learn from, so `auto` resolves to its cold-start arm (the
+        // arms never contain `Auto`, so this recurses exactly once).
+        // Learning across loops and episodes lives in [`AutoSim`].
+        Policy::Auto => {
+            let arms = auto::arms();
+            make_sim_policy(&arms[auto::cold_hint(arms, n, p.max(1), true)], weights, p)
+        }
         Policy::Static => Box::new(ChunkListSim::local(policy::static_blocks(n, p), p)),
         Policy::Dynamic { chunk } => Box::new(CentralSim::dynamic(n, *chunk)),
         Policy::Guided { chunk } => Box::new(CentralSim::guided(n, *chunk)),
@@ -39,6 +48,12 @@ pub fn make_sim_policy(policy: &Policy, weights: &[f64], p: usize) -> Box<dyn Si
 /// `hss`) give joiners nothing — exactly like the real engines.
 pub fn make_assist_sim_policy(policy: &Policy, weights: &[f64], p: usize, arrive: &[f64]) -> Box<dyn SimSched> {
     let n = weights.len();
+    if matches!(policy, Policy::Auto) {
+        // Same one-shot cold-start resolution as `make_sim_policy`.
+        let arms = auto::arms();
+        let arm = arms[auto::cold_hint(arms, n, p.max(1), true)].clone();
+        return make_assist_sim_policy(&arm, weights, p, arrive);
+    }
     let slots = p + arrive.len();
     let inner: Box<dyn SimSched> = match policy {
         Policy::Static => Box::new(ChunkListSim::local(policy::static_blocks(n, p), slots)),
@@ -54,8 +69,66 @@ pub fn make_assist_sim_policy(policy: &Policy, weights: &[f64], p: usize, arrive
         Policy::Ich(prm) => Box::new(WsSim::adaptive(n, p, *prm).padded(slots)),
         Policy::Awf => Box::new(AwfSim::new(n, slots)),
         Policy::Hss => Box::new(ChunkListSim::local(crate::sched::related::weighted_blocks(weights, p), slots)),
+        Policy::Auto => unreachable!("resolved to a fixed arm above"),
     };
     Box::new(AssistSim::new(inner, p, arrive.to_vec()))
+}
+
+/// Episode-persistent `Policy::Auto` in the simulator: the sim-side
+/// mirror of the runtime coordinator's selector branch. Same arms
+/// ([`auto::arms`]), same pick arithmetic ([`auto::pick`] via
+/// [`auto::AutoCore`]), same per-iteration cost normalization and
+/// feature bucketing — only the cost unit differs (virtual time vs
+/// nanoseconds; the selector is scale-free, so behavior matches).
+/// Hold one `AutoSim` across repeated [`AutoSim::run_app`] calls to
+/// model a long-running process re-dispatching its loops: that is
+/// exactly what the regret harness (`harness::regret`) measures.
+pub struct AutoSim {
+    cfg: auto::AutoConfig,
+    core: auto::AutoCore,
+    /// Arm chosen at each loop dispatch, in order — the differential
+    /// tests and the harness's arm histogram read this log.
+    pub chosen: Vec<usize>,
+}
+
+impl AutoSim {
+    pub fn new(cfg: auto::AutoConfig) -> AutoSim {
+        AutoSim { cfg, core: auto::AutoCore::new(), chosen: Vec::new() }
+    }
+
+    /// Read-only view of the selector state.
+    pub fn core(&self) -> &auto::AutoCore {
+        &self.core
+    }
+
+    /// The loop-site key the simulator assigns the `li`-th loop of an
+    /// app: the loop index stands in for the runtime's callsite hash
+    /// (the li-th source loop is the same loop every episode), and
+    /// the trip count buckets exactly like the runtime's key.
+    pub fn sim_site(li: usize, n: usize) -> features::SiteKey {
+        features::site_key(features::mix64(0x5EED_A070 ^ li as u64), n.max(1))
+    }
+
+    /// Simulate one episode (one full app run) under `Policy::Auto`,
+    /// persisting selector state across loops and episodes.
+    pub fn run_app(&mut self, spec: &MachineSpec, p: usize, loops: &[LoopSpec], seed: u64) -> SimResult {
+        let arms = auto::arms();
+        let mut total = SimResult::default();
+        for (li, ls) in loops.iter().enumerate() {
+            let n = ls.weights.len();
+            let site = AutoSim::sim_site(li, n);
+            let cold = auto::cold_hint(arms, n, p.max(1), true);
+            let choice = self.core.choose(site, &self.cfg, arms.len(), cold);
+            self.chosen.push(choice.arm);
+            let mut pol = make_sim_policy(&arms[choice.arm], &ls.weights, p);
+            let r = simulate_loop(spec, p, ls, seed.wrapping_add(li as u64), pol.as_mut());
+            let per_iter = r.time / n.max(1) as f64;
+            self.core.observe(&choice, auto::quantize(per_iter));
+            self.core.note_bucket(site, features::FeatureVec::extract_sim(&r, n, p).bucket());
+            total.absorb(&r);
+        }
+        total
+    }
 }
 
 /// Work-assist wrapper: gates joiner tids (`>= base_p`) behind their
